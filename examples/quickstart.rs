@@ -1,0 +1,90 @@
+//! Quickstart: build a 16×16 SCATTER PTC, run one noisy MVM on the rust
+//! digital twin, compare against the ideal result, report the power, and —
+//! if `make artifacts` has run — execute the same computation through the
+//! AOT-compiled artifact via PJRT to prove the two layers agree.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use scatter::config::AcceleratorConfig;
+use scatter::ptc::crossbar::{ColumnMode, ForwardOptions, PtcSimulator};
+use scatter::thermal::{coupling::ArrayGeometry, CouplingModel, GammaModel};
+use scatter::util::{nmae, snr_db, XorShiftRng};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = AcceleratorConfig::default();
+    println!("SCATTER quickstart — one 16x16 PTC at l_s={} l_g={}", cfg.l_s, cfg.l_g);
+
+    // a random weight block and activation vector
+    let mut rng = XorShiftRng::new(42);
+    let mut w = vec![0.0; 256];
+    rng.fill_uniform(&mut w, -1.0, 1.0);
+    let mut x = vec![0.0; 16];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    // half the input columns pruned, light-redistributed
+    let col_mask: Vec<bool> = (0..16).map(|j| j % 2 == 0).collect();
+
+    let sim = PtcSimulator::from_config(&cfg);
+    let golden = sim.forward_ideal(&w, &x, Some(&col_mask), None);
+
+    let opts = ForwardOptions {
+        thermal: true,
+        pd_noise: true,
+        phase_noise: true,
+        col_mask: Some(&col_mask),
+        col_mode: ColumnMode::InputGatingLr,
+        ..Default::default()
+    };
+    let y = sim.forward(&w, &x, &opts, &mut XorShiftRng::new(cfg.noise_seed));
+    println!(
+        "  rust twin  : N-MAE = {:.4}  SNR = {:.1} dB",
+        nmae(&y, &golden),
+        snr_db(&y, &golden)
+    );
+
+    // per-block hold power
+    let gamma = GammaModel::paper();
+    let mzi =
+        scatter::devices::Mzi::new(scatter::devices::MziSpec::low_power(), cfg.l_s, &gamma);
+    let p_wgt: f64 = (0..16)
+        .flat_map(|i| (0..16).map(move |j| (i, j)))
+        .filter(|&(_, j)| col_mask[j])
+        .map(|(i, j)| mzi.power_for_weight_mw(w[i * 16 + j]))
+        .sum();
+    let p_rerouter = scatter::sparsity::mask_power_mw(&col_mask, 16, &mzi);
+    println!("  block power: weights {:.2} mW + rerouter {:.2} mW", p_wgt, p_rerouter);
+
+    // worst-case coupling of this geometry
+    let coupling = CouplingModel::new(ArrayGeometry::from_config(&cfg), &gamma);
+    println!("  worst-case inter-MZI coupling: {:.4}", coupling.worst_case_coupling());
+
+    // and the AOT path, if artifacts exist
+    let mut rt = scatter::runtime::ArtifactRuntime::new("artifacts")?;
+    if rt.has_artifact("ptc16_ideal") {
+        let wf: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let rm = vec![1.0f32; 16];
+        let cm: Vec<f32> = col_mask.iter().map(|&m| m as u8 as f32).collect();
+        // batch of 32 identical inputs (artifact signature is fixed)
+        let mut xb = vec![0f32; 32 * 16];
+        for b in 0..32 {
+            for j in 0..16 {
+                xb[b * 16 + j] = x[j] as f32;
+            }
+        }
+        let out = rt.run_f32(
+            "ptc16_ideal",
+            &[(&wf, &[16, 16]), (&rm, &[16]), (&cm, &[16]), (&xb, &[32, 16])],
+        )?;
+        let y_art: Vec<f64> = out[..16].iter().map(|&v| v as f64).collect();
+        println!(
+            "  AOT artifact (PJRT {}): ideal-path N-MAE vs rust golden = {:.2e}",
+            rt.platform(),
+            nmae(&y_art, &golden)
+        );
+    } else {
+        println!("  (run `make artifacts` to exercise the AOT/PJRT path)");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

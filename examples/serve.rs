@@ -1,0 +1,58 @@
+//! Batched inference service over the photonic digital twin.
+//!
+//! Spawns the coordinator's dynamic-batching server with the CNN-3 model
+//! on the full SCATTER configuration, submits a stream of requests from
+//! the synthetic FashionMNIST-shaped dataset, and reports per-request
+//! latency percentiles, throughput, accuracy, and accelerator energy.
+//!
+//! ```bash
+//! cargo run --release --example serve -- [n_requests]
+//! ```
+
+use scatter::bench::common::{BenchCtx, Workload};
+use scatter::config::AcceleratorConfig;
+use scatter::coordinator::{EngineOptions, InferenceServer, ServerConfig};
+use std::time::Duration;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let ctx = BenchCtx::new(n);
+    let cfg = AcceleratorConfig::default();
+    let (model, ds, masks) = ctx.deployment(Workload::Cnn3, &cfg, 0.3);
+
+    println!("spawning SCATTER inference server: CNN-3, s=0.3, IG+OG+LR, {n} requests");
+    let server = InferenceServer::spawn(
+        model,
+        cfg,
+        EngineOptions::NOISY,
+        masks,
+        ServerConfig { max_batch: 8, batch_timeout: Duration::from_millis(4) },
+    );
+
+    let mut pending = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let (img, label) = ds.sample(0xBEEF, i);
+        labels.push(label);
+        pending.push(server.submit(img));
+    }
+    let mut correct = 0usize;
+    for (rx, label) in pending.into_iter().zip(labels) {
+        let reply = rx.recv().expect("server reply");
+        if reply.class == label {
+            correct += 1;
+        }
+    }
+    let report = server.shutdown();
+    println!("served {} requests in {} batches", report.requests, report.batches);
+    println!("  accuracy   : {:.1} %", 100.0 * correct as f64 / n as f64);
+    println!(
+        "  latency    : mean {:.1} us  p50 {} us  p99 {} us",
+        report.mean_latency_us, report.p50_us, report.p99_us
+    );
+    println!("  throughput : {:.1} req/s", report.throughput_rps);
+    println!(
+        "  accelerator: {:.3} mJ total, P_avg {:.2} W",
+        report.energy_mj, report.p_avg_w
+    );
+}

@@ -1,0 +1,81 @@
+"""AOT pipeline: lower the L1/L2 jax functions to HLO **text** artifacts
+for the rust PJRT runtime.
+
+Run from ``python/``:  ``python -m compile.aot --out ../artifacts``
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` —
+jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Artifacts:
+* ``ptc16_noisy.hlo.txt`` — the full noisy 16×16 PTC block forward
+  (Pallas kernel, interpret-lowered: crosstalk + IG+LR + OG + PD noise),
+  batch 32. Inputs: w(16,16), Γ⁺(256,256), Γ⁻(256,256), row_mask(16),
+  col_mask(16), x(32,16), noise(32,16) — all f32. Output: y(32,16).
+* ``ptc16_ideal.hlo.txt`` — masked exact MVM, same signature minus Γ/noise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import photonic_mvm as pmvm
+from .kernels import ref
+
+K = 16
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def ptc16_noisy(w, g_pos, g_neg, row_mask, col_mask, x, noise):
+    y = pmvm.photonic_mvm(w, x, g_pos, g_neg, row_mask, col_mask, noise,
+                          mode=ref.INPUT_GATING_LR, thermal=True,
+                          output_gating=True, block_b=BATCH)
+    return (y,)
+
+
+def ptc16_ideal(w, row_mask, col_mask, x):
+    return (ref.ideal_mvm(w, x, row_mask, col_mask),)
+
+
+def lower_artifacts():
+    f32 = jnp.float32
+    n = K * K
+    spec = jax.ShapeDtypeStruct
+    noisy = jax.jit(ptc16_noisy).lower(
+        spec((K, K), f32), spec((n, n), f32), spec((n, n), f32),
+        spec((K,), f32), spec((K,), f32), spec((BATCH, K), f32),
+        spec((BATCH, K), f32))
+    ideal = jax.jit(ptc16_ideal).lower(
+        spec((K, K), f32), spec((K,), f32), spec((K,), f32),
+        spec((BATCH, K), f32))
+    return {"ptc16_noisy": to_hlo_text(noisy), "ptc16_ideal": to_hlo_text(ideal)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name, text in lower_artifacts().items():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

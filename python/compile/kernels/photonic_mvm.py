@@ -1,0 +1,105 @@
+"""Layer-1 Pallas kernel: the noisy photonic crossbar MVM.
+
+The compute hot-spot of the SCATTER deployment path: given programmed
+weights, the thermal coupling matrices, structured masks, and presampled
+PD-noise draws, produce the analog output the chip would produce
+(Eqs. 1, 8–14). Lowered with ``interpret=True`` — real-TPU pallas emits a
+Mosaic custom-call the CPU PJRT plugin cannot run (see DESIGN.md
+§Hardware-Adaptation for the TPU mapping rationale: a 16×16 PTC block is
+MXU-tile-shaped, the crosstalk perturbation is a (k1k2)×(k1k2) matmul, and
+BlockSpec tiles the batch so Γ stays resident in VMEM across grid steps).
+
+Checked against ``ref.photonic_mvm_ref`` by ``python/tests/test_kernel.py``
+(hypothesis sweeps shapes, masks, and modes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(w_ref, gpos_ref, gneg_ref, rmask_ref, cmask_ref, x_ref, noise_ref,
+            y_ref, *, mode: int, thermal: bool, output_gating: bool):
+    """One grid step: a batch-block of inputs through one PTC block."""
+    w = w_ref[...]              # (k1, k2)
+    row_mask = rmask_ref[...]   # (k1,)
+    col_mask = cmask_ref[...]   # (k2,)
+    x = x_ref[...]              # (Bblk, k2)
+    noise = noise_ref[...]      # (Bblk, k1)
+    k1, k2 = w.shape
+
+    # steps 1-3: phases -> crosstalk -> realized weights
+    active = row_mask[:, None] * col_mask[None, :]
+    phi = -jnp.arcsin(jnp.clip(w, -1.0, 1.0)) * active
+    if thermal:
+        phi_flat = phi.T.reshape(-1)
+        pos = jnp.maximum(phi_flat, 0.0)
+        neg = jnp.maximum(-phi_flat, 0.0)
+        # the MXU-shaped hot op: (n,n) @ (n,) coupling perturbation
+        phi_t = phi_flat + gpos_ref[...] @ pos + gneg_ref[...] @ neg
+        w_t = -jnp.sin(phi_t.reshape(k2, k1).T)
+    else:
+        w_t = -jnp.sin(phi)
+
+    # step 4: input intensities
+    xx = jnp.maximum(x, 0.0)
+    if mode == ref.PRUNE_ONLY:
+        u = xx
+        lr_gain = jnp.asarray(1.0, dtype=x.dtype)
+    elif mode == ref.INPUT_GATING:
+        u = xx * col_mask + (1.0 - col_mask) * ref.LEAKAGE_FLOOR
+        lr_gain = jnp.asarray(1.0, dtype=x.dtype)
+    else:  # IG + LR
+        k2_active = jnp.sum(col_mask)
+        boost = jnp.where(k2_active > 0, k2 / jnp.maximum(k2_active, 1.0), 0.0)
+        u = xx * col_mask * boost
+        lr_gain = (k2_active / k2).astype(x.dtype)
+
+    # step 5: accumulate photocurrent + PD noise, TIA gain, OG
+    y = u @ w_t.T
+    y = y + noise * (ref.PD_NOISE_STD * jnp.sqrt(jnp.asarray(k2, dtype=x.dtype)))
+    y = y * lr_gain
+    if output_gating:
+        y = y * row_mask[None, :]
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "thermal", "output_gating",
+                                             "block_b"))
+def photonic_mvm(w, x, g_pos, g_neg, row_mask, col_mask, noise,
+                 mode: int = ref.INPUT_GATING_LR, thermal: bool = True,
+                 output_gating: bool = True, block_b: int = 32):
+    """Pallas noisy photonic MVM.
+
+    w: (k1, k2); x: (B, k2); noise: (B, k1); masks float {0,1}.
+    Returns y: (B, k1). B must be a multiple of ``block_b`` (pad upstream).
+    """
+    k1, k2 = w.shape
+    b = x.shape[0]
+    assert b % block_b == 0, f"batch {b} must be a multiple of {block_b}"
+    n = k1 * k2
+    grid = (b // block_b,)
+    kernel = functools.partial(_kernel, mode=mode, thermal=thermal,
+                               output_gating=output_gating)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k1, k2), lambda i: (0, 0)),     # weights resident
+            pl.BlockSpec((n, n), lambda i: (0, 0)),        # Γ⁺ resident
+            pl.BlockSpec((n, n), lambda i: (0, 0)),        # Γ⁻ resident
+            pl.BlockSpec((k1,), lambda i: (0,)),
+            pl.BlockSpec((k2,), lambda i: (0,)),
+            pl.BlockSpec((block_b, k2), lambda i: (i, 0)),  # stream batch
+            pl.BlockSpec((block_b, k1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, k1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k1), x.dtype),
+        interpret=True,
+    )(w, g_pos, g_neg, row_mask, col_mask, x, noise)

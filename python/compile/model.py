@@ -1,0 +1,96 @@
+"""Layer-2 JAX model: the paper's CNN-3 (C64K3-C64K3-Pool5-FC10) with
+structured row-column masks and quantization-aware forward.
+
+Two forward paths share the same parameters:
+
+* ``forward`` — the differentiable training path (masked + fake-quantized
+  weights, exact conv math; the paper trains without noise injection);
+* ``deploy_block_mvm`` — the deployment-fidelity path for one PTC block,
+  calling the L1 Pallas kernel (crosstalk + gating + LR + PD noise). This
+  is what ``aot.py`` lowers for the rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .kernels import photonic_mvm as pmvm
+from .kernels import ref as kref
+
+
+def init_cnn3(key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def conv_init(k, shape):
+        fan_in = np.prod(shape[1:])
+        return jax.random.normal(k, shape) * np.sqrt(2.0 / fan_in)
+
+    return {
+        "conv1": {"w": conv_init(k1, (64, 1, 3, 3)), "b": jnp.zeros(64)},
+        "conv2": {"w": conv_init(k2, (64, 64, 3, 3)), "b": jnp.zeros(64)},
+        "fc": {"w": conv_init(k3, (10, 64 * 5 * 5)), "b": jnp.zeros(10)},
+    }
+
+
+def _apply_mask(w2d, mask):
+    """mask = dict(row=(Co,), col=(Cin·K²,)) float {0,1} vectors."""
+    if mask is None:
+        return w2d
+    return w2d * mask["row"][:, None] * mask["col"][None, :]
+
+
+def forward(params, x, masks=None, b_w: int = 8, b_in: int = 6):
+    """Training/eval forward. x: (B, 1, 28, 28). Returns logits (B, 10).
+
+    ``masks``: {layer: {"row": (out,), "col": (in,)}} float masks over the
+    *unfolded* (out, in) weight matrices, matching the rust chunk layout.
+    """
+    masks = masks or {}
+
+    def conv(name, x, stride=1):
+        w = params[name]["w"]
+        co, ci, kh, kw = w.shape
+        w2d = quant.fake_quant_weight(w.reshape(co, -1), b_w)
+        w2d = _apply_mask(w2d, masks.get(name))
+        wq = w2d.reshape(co, ci, kh, kw)
+        y = jax.lax.conv_general_dilated(
+            x, wq, window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        return y + params[name]["b"][None, :, None, None]
+
+    x = quant.fake_quant_act(x, b_in)
+    x = jax.nn.relu(conv("conv1", x))
+    x = quant.fake_quant_act(x, b_in)
+    x = jax.nn.relu(conv("conv2", x))
+    x = quant.fake_quant_act(x, b_in)
+    # Pool5: 28 -> 5 via 5x5 average pooling with stride 5 (floor)
+    x = jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, 1, 5, 5), (1, 1, 5, 5),
+                              "VALID") / 25.0
+    x = x.reshape(x.shape[0], -1)
+    w2d = quant.fake_quant_weight(params["fc"]["w"], b_w)
+    w2d = _apply_mask(w2d, masks.get("fc"))
+    return x @ w2d.T + params["fc"]["b"]
+
+
+def deploy_block_mvm(w_block, x_batch, g_pos, g_neg, row_mask, col_mask,
+                     noise, mode=kref.INPUT_GATING_LR, thermal=True,
+                     output_gating=True):
+    """Deployment-fidelity PTC-block MVM via the Pallas kernel."""
+    return pmvm.photonic_mvm(w_block, x_batch, g_pos, g_neg, row_mask,
+                             col_mask, noise, mode=mode, thermal=thermal,
+                             output_gating=output_gating)
+
+
+def loss_fn(params, x, y, masks=None):
+    logits = forward(params, x, masks)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll
+
+
+def accuracy(params, x, y, masks=None):
+    logits = forward(params, x, masks)
+    return jnp.mean(jnp.argmax(logits, axis=1) == y)

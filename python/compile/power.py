@@ -1,0 +1,47 @@
+"""Power metric for sparsity masks — python mirror of the rust
+``sparsity::power_opt`` (only what Alg. 1 needs at training time).
+
+The power of a column mask is the hold power of the 1×k2 rerouter splitter
+tree it programs: a node splitting up:lo active leaves needs phase
+``Δφ = 2·arccos(√(up/(up+lo))) − π/2`` at cost ``|Δφ|/π · Pπ / (1−γ(l_s))``.
+Balanced masks are cheapest — identical to the rust implementation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .thermal import gamma
+
+LP_P_PI_MW = 15.02
+
+
+def mzi_power_mw(delta_phi: float, l_s: float = 9.0) -> float:
+    g = float(gamma(l_s))
+    return abs(delta_phi) / np.pi * LP_P_PI_MW / (1.0 - g)
+
+
+def rerouter_power_mw(col_mask: np.ndarray, l_s: float = 9.0) -> float:
+    """Hold power of the splitter tree for one k2-wide segment mask."""
+    counts = np.asarray(col_mask, dtype=np.int64)
+    assert counts.size and (counts.size & (counts.size - 1)) == 0, \
+        "segment width must be a power of two"
+    total = 0.0
+    while counts.size > 1:
+        up, lo = counts[0::2], counts[1::2]
+        tot = up + lo
+        with np.errstate(divide="ignore", invalid="ignore"):
+            frac = np.where(tot > 0, up / np.maximum(tot, 1), 0.5)
+        phi = 2.0 * np.arccos(np.sqrt(frac)) - np.pi / 2.0
+        phi = np.where(tot > 0, phi, 0.0)
+        total += float(np.sum(np.abs(phi))) / np.pi * LP_P_PI_MW / (1.0 - float(gamma(l_s)))
+        counts = tot
+    return total
+
+
+def mask_power_mw(col_mask: np.ndarray, k2: int, l_s: float = 9.0) -> float:
+    """Sum of per-segment rerouter powers for a full chunk column mask."""
+    col_mask = np.asarray(col_mask)
+    assert col_mask.size % k2 == 0
+    return sum(rerouter_power_mw(col_mask[s:s + k2], l_s)
+               for s in range(0, col_mask.size, k2))

@@ -1,0 +1,29 @@
+"""Quantization for the L2 model (§4.1): LSQ-style fake-quant with a
+straight-through estimator — b_w-bit symmetric signed per-tensor weights,
+b_in-bit unsigned activations."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ste_round(x):
+    """round() with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant_weight(w, bits: int = 8):
+    """Symmetric signed per-tensor fake quantization."""
+    levels = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12) / levels
+    q = jnp.clip(_ste_round(w / scale), -levels, levels)
+    return q * scale
+
+
+def fake_quant_act(x, bits: int = 6):
+    """Unsigned fake quantization over the observed dynamic range."""
+    levels = 2.0 ** bits - 1.0
+    hi = jnp.maximum(jnp.max(x), 1e-12)
+    q = jnp.clip(_ste_round(x / hi * levels), 0.0, levels)
+    return q / levels * hi

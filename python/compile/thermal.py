@@ -1,0 +1,66 @@
+"""Thermal crosstalk model — python mirror of ``rust/src/thermal``.
+
+Implements Eq. 10's γ(d) piecewise fit with the paper's published
+coefficients and the Eq. 8–9 phase-sign-dependent coupling matrices for a
+``rows × cols`` MZI array. The constants are identical to the rust side;
+``python/tests/test_parity.py`` pins a set of golden values shared by both
+implementations.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Eq. 10, published fit (R^2 = 0.999 / 0.998).
+POLY = np.array([1.0, -1.76e-1, 9.9e-3, -8.30e-6, -1.56e-5, 3.55e-7])
+EXP_A0 = 0.217
+EXP_A1 = 0.127
+BREAK_UM = 23.0
+
+
+def gamma(d):
+    """γ(d) for center distance d in µm (vectorized), clamped to [0, 1]."""
+    d = np.maximum(np.asarray(d, dtype=np.float64), 0.0)
+    poly = sum(POLY[i] * d**i for i in range(6))
+    expo = EXP_A0 * np.exp(-EXP_A1 * d)
+    out = np.where(d < BREAK_UM, poly, expo)
+    return np.clip(out, 0.0, 1.0)
+
+
+def coupling_matrices(rows: int, cols: int, l_v: float, l_h: float, l_s: float,
+                      cutoff: float = 1e-6):
+    """Eq. 9 coupling matrices (Δγ⁺, Δγ⁻) for a rows×cols array.
+
+    Physical row = input index j (pitch ``l_v``), physical column = output
+    index i (pitch ``l_h``); flat node index m = j·cols... note: matches the
+    rust CouplingModel layout with ``rows`` = k2 and ``cols`` = k1 and flat
+    index m = row·cols + col.
+
+    Returns (g_pos, g_neg), each (n, n) with n = rows·cols, row-major
+    [victim, aggressor], diagonal zero.
+    """
+    n = rows * cols
+    ri, ci = np.divmod(np.arange(n), cols)
+    dy = (ri[None, :] - ri[:, None]) * l_v          # aggressor minus victim
+    dx = (ci[None, :] - ci[:, None]) * l_h
+    # aggressor positive: heater on upper arm
+    d_up_pos = np.hypot(dy, dx)
+    d_lo_pos = np.hypot(dy, dx + l_s)
+    # aggressor negative: heater on lower arm
+    d_up_neg = np.hypot(dy, dx - l_s)
+    d_lo_neg = d_up_pos
+    g_pos = gamma(d_up_pos) - gamma(d_lo_pos)
+    g_neg = gamma(d_up_neg) - gamma(d_lo_neg)
+    np.fill_diagonal(g_pos, 0.0)
+    np.fill_diagonal(g_neg, 0.0)
+    g_pos[np.abs(g_pos) < cutoff] = 0.0
+    g_neg[np.abs(g_neg) < cutoff] = 0.0
+    return g_pos.astype(np.float32), g_neg.astype(np.float32)
+
+
+def perturb_phases(phases, g_pos, g_neg):
+    """Eq. 8: Δφ̃ = Δφ + G⁺·max(Δφ,0) + G⁻·max(−Δφ,0). numpy reference."""
+    phases = np.asarray(phases, dtype=np.float64)
+    pos = np.maximum(phases, 0.0)
+    neg = np.maximum(-phases, 0.0)
+    return phases + g_pos.astype(np.float64) @ pos + g_neg.astype(np.float64) @ neg

@@ -1,0 +1,73 @@
+"""Algorithm-1 machinery tests (init patterns, power metric, prune/grow)."""
+
+import numpy as np
+
+from compile import dst, power
+
+
+def test_interleaved_examples_match_paper():
+    m = dst.interleaved_row_mask(8, 0.75)
+    assert "".join("1" if v else "0" for v in m) == "11111010"
+    m = dst.interleaved_row_mask(8, 0.5)
+    assert "".join("1" if v else "0" for v in m) == "10101010"
+
+
+def test_rerouter_power_matches_rust_semantics():
+    # dense mask: every node at the free even split -> zero power
+    assert power.rerouter_power_mw(np.ones(16, dtype=bool)) < 1e-12
+    # clustered 4-of-8 steers once at the root (pi/2) — cheaper than
+    # interleaved which full-swings all four leaf nodes
+    clustered = np.array([1, 1, 1, 1, 0, 0, 0, 0], dtype=bool)
+    inter = np.array([1, 0, 1, 0, 1, 0, 1, 0], dtype=bool)
+    pc = power.rerouter_power_mw(clustered)
+    pi_ = power.rerouter_power_mw(inter)
+    assert pc < pi_
+    assert abs(pi_ / pc - 4.0) < 1e-9
+
+
+def test_best_segment_mask_cardinality_and_optimality():
+    for n in [0, 3, 8, 16]:
+        m = dst.best_segment_mask(16, n)
+        assert int(m.sum()) == min(n, 16)
+    # exhaustive check at k2=8, 3 active
+    best = dst.best_segment_mask(8, 3, cap=10**6)
+    pb = power.rerouter_power_mw(best)
+    import itertools
+    for idx in itertools.combinations(range(8), 3):
+        m = np.zeros(8, dtype=bool)
+        m[list(idx)] = True
+        assert power.rerouter_power_mw(m) >= pb - 1e-12
+
+
+def test_cosine_schedule():
+    assert dst.cosine_death_rate(0.5, 0, 100) == 0.5
+    assert abs(dst.cosine_death_rate(0.5, 50, 100) - 0.25) < 1e-12
+    assert dst.cosine_death_rate(0.5, 100, 100) == 0.0
+
+
+def test_init_masks_density():
+    masks = dst.init_masks({"conv2": (64, 576)}, 0.3)
+    m = masks["conv2"]
+    assert m["p"] == 1 and m["q"] == 9
+    row_density = m["row"].mean()
+    col_density = m["cols"][0].mean()
+    assert abs(row_density - 0.5) < 0.02
+    assert abs(col_density - 0.6) < 0.05
+    assert abs(row_density * col_density - 0.3) < 0.05
+
+
+def test_prune_grow_keeps_structure():
+    shapes = {"conv2": (64, 576)}
+    masks = dst.init_masks(shapes, 0.4)
+    rng = np.random.default_rng(0)
+    params = {"conv2": {"w": rng.normal(size=(64, 64, 3, 3))}}
+    grads = {"conv2": {"w": rng.normal(size=(64, 64, 3, 3))}}
+    row_before = masks["conv2"]["row"].copy()
+    dst.prune_grow(masks, shapes, params, grads, alpha=0.3, density=0.4)
+    m = masks["conv2"]
+    assert np.array_equal(m["row"], row_before), "row mask is frozen"
+    for col in m["cols"]:
+        assert col.dtype == bool and col.shape == (64,)
+    # density stays in a sane band
+    dens = m["row"].mean() * np.mean([c.mean() for c in m["cols"]])
+    assert 0.2 < dens < 0.6, dens

@@ -1,0 +1,149 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, masks, and column modes; fixed tests pin the
+physics (Eq.-14 noise scaling, leakage elimination, OG exactness).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import thermal
+from compile.kernels import photonic_mvm as pmvm
+from compile.kernels import ref
+
+
+def make_coupling(k1, k2, l_h=20.0):
+    return thermal.coupling_matrices(k2, k1, 120.0, l_h, 9.0)
+
+
+def random_problem(rng, k1, k2, batch):
+    w = rng.uniform(-1, 1, (k1, k2)).astype(np.float32)
+    x = rng.uniform(0, 1, (batch, k2)).astype(np.float32)
+    noise = rng.normal(size=(batch, k1)).astype(np.float32)
+    return w, x, noise
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([4, 8, 16]),
+    mode=st.sampled_from([ref.PRUNE_ONLY, ref.INPUT_GATING, ref.INPUT_GATING_LR]),
+    thermal_on=st.booleans(),
+    og=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_matches_ref(k, mode, thermal_on, og, seed):
+    rng = np.random.default_rng(seed)
+    gp, gn = make_coupling(k, k)
+    w, x, noise = random_problem(rng, k, k, 32)
+    rm = (rng.uniform(size=k) > 0.3).astype(np.float32)
+    cm = (rng.uniform(size=k) > 0.3).astype(np.float32)
+    args = (jnp.array(w), jnp.array(x), jnp.array(gp), jnp.array(gn),
+            jnp.array(rm), jnp.array(cm), jnp.array(noise))
+    y_ref = ref.photonic_mvm_ref(args[0], args[1], args[2], args[3], args[4],
+                                 args[5], args[6], mode=mode,
+                                 thermal=thermal_on, output_gating=og)
+    y_pal = pmvm.photonic_mvm(args[0], args[1], args[2], args[3], args[4],
+                              args[5], args[6], mode=mode, thermal=thermal_on,
+                              output_gating=og)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_noiseless_dense_matches_exact_mvm():
+    rng = np.random.default_rng(0)
+    k = 16
+    gp, gn = make_coupling(k, k)
+    w, x, _ = random_problem(rng, k, k, 32)
+    ones = np.ones(k, np.float32)
+    zeros = np.zeros((32, k), np.float32)
+    y = ref.photonic_mvm_ref(jnp.array(w), jnp.array(x), jnp.array(gp),
+                             jnp.array(gn), jnp.array(ones), jnp.array(ones),
+                             jnp.array(zeros), mode=ref.PRUNE_ONLY,
+                             thermal=False, output_gating=False)
+    np.testing.assert_allclose(np.asarray(y), x @ w.T, rtol=1e-5, atol=1e-5)
+
+
+def test_lr_eliminates_leakage_and_scales_noise():
+    """Eq. 14: LR output = masked ideal + (k2'/k2)·noise exactly (no TV)."""
+    rng = np.random.default_rng(1)
+    k = 16
+    gp, gn = make_coupling(k, k)
+    w, x, noise = random_problem(rng, k, k, 32)
+    ones = np.ones(k, np.float32)
+    cm = (np.arange(k) % 2 == 0).astype(np.float32)  # half active
+    y = ref.photonic_mvm_ref(jnp.array(w), jnp.array(x), jnp.array(gp),
+                             jnp.array(gn), jnp.array(ones), jnp.array(cm),
+                             jnp.array(noise), mode=ref.INPUT_GATING_LR,
+                             thermal=False, output_gating=False)
+    ideal = np.asarray(ref.ideal_mvm(jnp.array(w), jnp.array(x),
+                                     jnp.array(ones), jnp.array(cm)))
+    expected = ideal + 0.5 * noise * (0.01 * np.sqrt(k))
+    np.testing.assert_allclose(np.asarray(y), expected, rtol=1e-4, atol=1e-5)
+
+
+def test_ig_leakage_bounded_by_er_floor():
+    rng = np.random.default_rng(2)
+    k = 8
+    gp, gn = make_coupling(k, k)
+    w, x, _ = random_problem(rng, k, k, 32)
+    zeros = np.zeros((32, k), np.float32)
+    ones = np.ones(k, np.float32)
+    cm = np.zeros(k, np.float32)  # everything pruned
+    y = ref.photonic_mvm_ref(jnp.array(w), jnp.array(x), jnp.array(gp),
+                             jnp.array(gn), jnp.array(ones), jnp.array(cm),
+                             jnp.array(zeros), mode=ref.INPUT_GATING,
+                             thermal=True, output_gating=False)
+    # leakage only: bounded by k2 * ER_floor * max|δw|; with φ=0 targets
+    # δw is tiny, so outputs must be near zero
+    assert float(np.max(np.abs(np.asarray(y)))) < 0.05
+
+
+def test_output_gating_exact_zero():
+    rng = np.random.default_rng(3)
+    k = 8
+    gp, gn = make_coupling(k, k)
+    w, x, noise = random_problem(rng, k, k, 32)
+    rm = (np.arange(k) % 2 == 0).astype(np.float32)
+    ones = np.ones(k, np.float32)
+    y = np.asarray(ref.photonic_mvm_ref(
+        jnp.array(w), jnp.array(x), jnp.array(gp), jnp.array(gn),
+        jnp.array(rm), jnp.array(ones), jnp.array(noise),
+        mode=ref.PRUNE_ONLY, thermal=True, output_gating=True))
+    assert np.all(y[:, 1::2] == 0.0)
+    assert np.all(y[:, 0::2] != 0.0)
+
+
+def test_crosstalk_worse_at_tighter_pitch():
+    rng = np.random.default_rng(4)
+    k = 16
+    w, x, _ = random_problem(rng, k, k, 32)
+    zeros = np.zeros((32, k), np.float32)
+    ones = np.ones(k, np.float32)
+    errs = []
+    for lh in (16.0, 40.0):
+        gp, gn = make_coupling(k, k, l_h=lh)
+        y = np.asarray(ref.photonic_mvm_ref(
+            jnp.array(w), jnp.array(x), jnp.array(gp), jnp.array(gn),
+            jnp.array(ones), jnp.array(ones), jnp.array(zeros),
+            mode=ref.PRUNE_ONLY, thermal=True, output_gating=False))
+        errs.append(np.mean(np.abs(y - x @ w.T)))
+    assert errs[0] > 2.0 * errs[1], errs
+
+
+@pytest.mark.parametrize("batch", [32, 64, 128])
+def test_batch_blocking(batch):
+    rng = np.random.default_rng(5)
+    k = 8
+    gp, gn = make_coupling(k, k)
+    w, x, noise = random_problem(rng, k, k, batch)
+    ones = np.ones(k, np.float32)
+    y_ref = ref.photonic_mvm_ref(jnp.array(w), jnp.array(x), jnp.array(gp),
+                                 jnp.array(gn), jnp.array(ones),
+                                 jnp.array(ones), jnp.array(noise))
+    y_pal = pmvm.photonic_mvm(jnp.array(w), jnp.array(x), jnp.array(gp),
+                              jnp.array(gn), jnp.array(ones), jnp.array(ones),
+                              jnp.array(noise))
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)

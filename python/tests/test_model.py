@@ -1,0 +1,80 @@
+"""L2 model tests: shapes, masking, quantization, and the deploy path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datasets, model, quant, thermal
+from compile.kernels import ref
+
+
+def test_cnn3_forward_shape():
+    params = model.init_cnn3(jax.random.PRNGKey(0))
+    x = jnp.zeros((4, 1, 28, 28))
+    logits = model.forward(params, x)
+    assert logits.shape == (4, 10)
+
+
+def test_mask_zeroes_contributions():
+    params = model.init_cnn3(jax.random.PRNGKey(1))
+    x = jnp.array(np.random.default_rng(0).uniform(0, 1, (2, 1, 28, 28)),
+                  dtype=jnp.float32)
+    # conv2 fully masked -> logits equal to a model with conv2 weights = 0
+    masks = {"conv2": {"row": jnp.zeros(64), "col": jnp.ones(64 * 9)}}
+    y_masked = model.forward(params, x, masks)
+    params0 = dict(params)
+    params0["conv2"] = {"w": params["conv2"]["w"] * 0.0, "b": params["conv2"]["b"]}
+    y_zero = model.forward(params0, x)
+    np.testing.assert_allclose(np.asarray(y_masked), np.asarray(y_zero),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantizers_bounded_error():
+    rng = np.random.default_rng(2)
+    w = jnp.array(rng.uniform(-2, 2, (64, 64)), dtype=jnp.float32)
+    wq = quant.fake_quant_weight(w, 8)
+    scale = float(jnp.max(jnp.abs(w))) / 127.0
+    assert float(jnp.max(jnp.abs(wq - w))) <= scale / 2 + 1e-6
+    x = jnp.array(rng.uniform(0, 3, (128,)), dtype=jnp.float32)
+    xq = quant.fake_quant_act(x, 6)
+    assert float(jnp.max(jnp.abs(xq - x))) <= float(jnp.max(x)) / 63.0 + 1e-6
+
+
+def test_quant_gradients_flow():
+    w = jnp.array([[0.5, -0.3], [0.2, 0.9]])
+    g = jax.grad(lambda w: jnp.sum(quant.fake_quant_weight(w, 8) ** 2))(w)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_training_reduces_loss():
+    ds = datasets.fmnist_like()
+    rng = np.random.default_rng(3)
+    params = model.init_cnn3(jax.random.PRNGKey(3))
+    loss_grad = jax.jit(jax.value_and_grad(model.loss_fn))
+    x, y = ds.batch(rng, 64)
+    l0, _ = loss_grad(params, jnp.array(x), jnp.array(y))
+    lr = 2e-3
+    for _ in range(30):
+        x, y = ds.batch(rng, 64)
+        _, grads = loss_grad(params, jnp.array(x), jnp.array(y))
+        params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    x, y = ds.batch(rng, 256)
+    l1, _ = loss_grad(params, jnp.array(x), jnp.array(y))
+    assert float(l1) < float(l0), (float(l0), float(l1))
+
+
+def test_deploy_block_runs():
+    gp, gn = thermal.coupling_matrices(16, 16, 120.0, 16.0, 9.0)
+    rng = np.random.default_rng(4)
+    w = jnp.array(rng.uniform(-1, 1, (16, 16)), dtype=jnp.float32)
+    x = jnp.array(rng.uniform(0, 1, (32, 16)), dtype=jnp.float32)
+    noise = jnp.array(rng.normal(size=(32, 16)), dtype=jnp.float32)
+    cm = jnp.array((np.arange(16) % 2 == 0).astype(np.float32))
+    rm = jnp.ones(16)
+    y = model.deploy_block_mvm(w, x, jnp.array(gp), jnp.array(gn), rm, cm, noise)
+    assert y.shape == (32, 16)
+    # LR recovers the masked ideal within noise + crosstalk tolerance
+    ideal = np.asarray(ref.ideal_mvm(w, x, rm, cm))
+    err = np.mean(np.abs(np.asarray(y) - ideal)) / (np.mean(np.abs(ideal)) + 1e-9)
+    assert err < 0.2, err

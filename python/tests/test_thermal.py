@@ -1,0 +1,47 @@
+"""Thermal-model parity: these golden values are pinned on BOTH sides —
+rust (`thermal::gamma::tests`, `thermal::coupling::tests`) and here — so
+the L1 kernel and the L3 coordinator share one physics."""
+
+import numpy as np
+
+from compile import thermal
+
+
+def test_gamma_golden_values():
+    assert abs(thermal.gamma(0.0) - 1.0) < 1e-12
+    assert abs(thermal.gamma(9.0) - 0.13046) < 1e-3
+    assert abs(thermal.gamma(5.0) - 0.35781) < 1e-3
+    e30 = 0.217 * np.exp(-0.127 * 30.0)
+    assert abs(thermal.gamma(30.0) - e30) < 1e-12
+
+
+def test_gamma_monotone_and_clamped():
+    d = np.linspace(0.5, 22.0, 44)
+    g = thermal.gamma(d)
+    assert np.all(np.diff(g) <= 1e-9)
+    assert np.all((g >= 0) & (g <= 1))
+    assert thermal.gamma(120.0) < 1e-6
+
+
+def test_coupling_matrix_matches_rust_single_aggressor():
+    # rust test `single_aggressor_perturbs_horizontal_neighbor`: 1x2 row,
+    # l_h = 20, l_s = 9 -> victim 0 sees γ(20) − γ(29) from positive
+    # aggressor at column 1, γ(11) − γ(20) from a negative one.
+    gp, gn = thermal.coupling_matrices(1, 2, 120.0, 20.0, 9.0)
+    expect_pos = thermal.gamma(20.0) - thermal.gamma(29.0)
+    expect_neg = thermal.gamma(11.0) - thermal.gamma(20.0)
+    assert abs(gp[0, 1] - expect_pos) < 1e-6
+    assert abs(gn[0, 1] - expect_neg) < 1e-6
+    assert gp[0, 0] == 0.0 and gn[1, 1] == 0.0
+
+
+def test_perturbation_zero_for_zero_phases():
+    gp, gn = thermal.coupling_matrices(4, 4, 120.0, 20.0, 9.0)
+    out = thermal.perturb_phases(np.zeros(16), gp, gn)
+    assert np.all(out == 0.0)
+
+
+def test_vertical_neighbors_negligible():
+    gp, gn = thermal.coupling_matrices(2, 1, 120.0, 20.0, 9.0)
+    out = thermal.perturb_phases(np.array([0.0, 1.5]), gp, gn)
+    assert abs(out[0]) < 1e-4

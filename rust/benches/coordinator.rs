@@ -1,0 +1,71 @@
+//! Coordinator / end-to-end benchmarks: engine matmul throughput, whole
+//! CNN-3 inference latency on the digital twin, and the AOT artifact
+//! execution path (when artifacts exist).
+
+use scatter::bench::timing::{bench, time_once};
+use scatter::config::AcceleratorConfig;
+use scatter::coordinator::{EngineOptions, PhotonicEngine};
+use scatter::data::{DatasetSpec, SyntheticDataset};
+use scatter::nn::MatmulEngine;
+use scatter::util::XorShiftRng;
+use std::time::Duration;
+
+fn main() {
+    let cfg = AcceleratorConfig::default();
+
+    // engine matmul: one 64x64 chunk, 64 activation columns per call
+    let mut engine = PhotonicEngine::new(cfg.clone(), EngineOptions::NOISY);
+    let mut rng = XorShiftRng::new(3);
+    let mut w = vec![0.0; 64 * 64];
+    rng.fill_uniform(&mut w, -0.5, 0.5);
+    let mut x = vec![0.0; 64 * 64];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    // prime the programming cache
+    let _ = engine.matmul("bench", &w, &x, 64, 64, 64);
+    bench("engine_matmul_64x64x64 (cached prog)", Duration::from_secs(1), || {
+        std::hint::black_box(engine.matmul("bench", &w, &x, 64, 64, 64));
+    });
+
+    // whole-model inference
+    let ds = SyntheticDataset::new(DatasetSpec::fmnist_like());
+    let model = scatter::nn::models::cnn3();
+    let mut engine = PhotonicEngine::new(cfg, EngineOptions::NOISY);
+    let (img, _) = ds.sample(0, 0);
+    let _ = model.forward(img.clone(), &mut engine); // program cache warmup
+    bench("cnn3_inference_noisy_twin", Duration::from_secs(3), || {
+        std::hint::black_box(model.forward(img.clone(), &mut engine));
+    });
+
+    // AOT artifact execution, if built
+    if let Ok(mut rt) = scatter::runtime::ArtifactRuntime::new("artifacts") {
+        if rt.has_artifact("ptc16_noisy") {
+            time_once("pjrt_compile_ptc16_noisy", || {
+                rt.load("ptc16_noisy").expect("compile artifact");
+            });
+            let w = vec![0.1f32; 256];
+            let g = vec![0.0f32; 256 * 256];
+            let m1 = vec![1.0f32; 16];
+            let x = vec![0.5f32; 32 * 16];
+            let nz = vec![0.0f32; 32 * 16];
+            bench("pjrt_execute_ptc16_noisy_b32", Duration::from_secs(2), || {
+                std::hint::black_box(
+                    rt.run_f32(
+                        "ptc16_noisy",
+                        &[
+                            (&w, &[16, 16]),
+                            (&g, &[256, 256]),
+                            (&g, &[256, 256]),
+                            (&m1, &[16]),
+                            (&m1, &[16]),
+                            (&x, &[32, 16]),
+                            (&nz, &[32, 16]),
+                        ],
+                    )
+                    .expect("execute artifact"),
+                );
+            });
+        } else {
+            println!("(artifacts not built; skipping PJRT benches — run `make artifacts`)");
+        }
+    }
+}

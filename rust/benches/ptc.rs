@@ -1,0 +1,61 @@
+//! Micro-benchmarks for the PTC hot path: coupling-matrix construction,
+//! phase perturbation, programming, and the streamed mat-vec (the L3
+//! per-cycle cost). §Perf in EXPERIMENTS.md tracks these.
+
+use scatter::bench::timing::bench;
+use scatter::devices::DeviceLibrary;
+use scatter::ptc::crossbar::{ColumnMode, ForwardOptions, PtcSimulator};
+use scatter::thermal::{coupling::ArrayGeometry, CouplingModel, GammaModel};
+use scatter::util::XorShiftRng;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let gamma = GammaModel::paper();
+    let geom = ArrayGeometry { rows: 16, cols: 16, l_v: 120.0, l_h: 16.0, l_s: 9.0 };
+
+    bench("coupling_matrix_build_16x16", budget, || {
+        std::hint::black_box(CouplingModel::new(geom, &gamma));
+    });
+
+    let cm = CouplingModel::new(geom, &gamma);
+    let mut rng = XorShiftRng::new(1);
+    let mut phases = vec![0.0; 256];
+    rng.fill_uniform(&mut phases, -1.0, 1.0);
+    let mut out = vec![0.0; 256];
+    bench("perturb_phases_256", budget, || {
+        cm.perturb_phases(std::hint::black_box(&phases), &mut out);
+        std::hint::black_box(&out);
+    });
+
+    let sim = PtcSimulator::new(geom, &gamma, DeviceLibrary::default());
+    let mut w = vec![0.0; 256];
+    rng.fill_uniform(&mut w, -1.0, 1.0);
+    let mut x = vec![0.0; 16];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    let col_mask: Vec<bool> = (0..16).map(|j| j % 2 == 0).collect();
+    let opts = ForwardOptions {
+        thermal: true,
+        pd_noise: true,
+        phase_noise: true,
+        col_mask: Some(&col_mask),
+        col_mode: ColumnMode::InputGatingLr,
+        ..Default::default()
+    };
+
+    bench("full_forward_16x16 (program+run)", budget, || {
+        std::hint::black_box(sim.forward(&w, &x, &opts, &mut rng));
+    });
+
+    let mut prog = sim.program(&w, &opts, &mut rng);
+    let mut y = vec![0.0; 16];
+    bench("programmed_run_16x16 (per cycle)", budget, || {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        prog.run_into(std::hint::black_box(&x), &mut y, &mut rng);
+        std::hint::black_box(&y);
+    });
+
+    bench("program_16x16 (per weight update)", budget, || {
+        std::hint::black_box(sim.program(&w, &opts, &mut rng));
+    });
+}

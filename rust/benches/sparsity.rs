@@ -1,0 +1,33 @@
+//! Sparsity-machinery benchmarks: rerouter programming, mask power
+//! metric, power-optimal combination search (the Alg.-1 inner loops).
+
+use scatter::bench::timing::bench;
+use scatter::devices::{Mzi, MziSpec};
+use scatter::rerouter::RerouterTree;
+use scatter::sparsity::{best_segment_mask, init_layer_mask, mask_power_mw};
+use scatter::thermal::GammaModel;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let gamma = GammaModel::paper();
+    let mzi = Mzi::new(MziSpec::low_power(), 9.0, &gamma);
+    let mask16: Vec<bool> = (0..16).map(|j| j % 3 != 0).collect();
+
+    bench("rerouter_program_16", budget, || {
+        std::hint::black_box(RerouterTree::program(std::hint::black_box(&mask16)));
+    });
+
+    let mask64: Vec<bool> = (0..64).map(|j| j % 3 != 0).collect();
+    bench("mask_power_64cols", budget, || {
+        std::hint::black_box(mask_power_mw(std::hint::black_box(&mask64), 16, &mzi));
+    });
+
+    bench("best_segment_mask_16c8_capped", Duration::from_secs(1), || {
+        std::hint::black_box(best_segment_mask(16, 8, &mzi, 2_000));
+    });
+
+    bench("init_layer_mask_64x576_s0.3", Duration::from_secs(1), || {
+        std::hint::black_box(init_layer_mask(1, 9, 64, 64, 16, 0.3, &mzi));
+    });
+}

@@ -1,0 +1,32 @@
+//! End-to-end table/figure regeneration benchmark: times each paper
+//! harness at a reduced sample budget and prints its table. `cargo bench`
+//! therefore both exercises and times the full reproduction suite.
+//! (Full-budget runs: `cargo run --release -- bench all`.)
+
+use scatter::bench::{self, timing::time_once, BenchCtx};
+
+fn main() {
+    let ctx = BenchCtx::new(20); // reduced budget for bench cadence
+    let t = time_once("fig4_thermal_characterization", || bench::fig4::run(&ctx));
+    println!("{t}");
+    let t = time_once("fig5_column_mode_nmae", || bench::fig5::run(&ctx));
+    println!("{t}");
+    let t = time_once("fig8_eodac_design_points", || bench::fig8::run(&ctx));
+    println!("{t}");
+    let t = time_once("fig9a_row_patterns", || bench::fig9::run_a(&ctx));
+    println!("{t}");
+    let t = time_once("fig9b_ig_lr_sweep", || bench::fig9::run_b(&ctx));
+    println!("{t}");
+    let t = time_once("table1_device_spacing", || bench::table1::run(&ctx));
+    println!("{t}");
+    let t = time_once("fig6_design_space", || bench::fig6::run(&ctx));
+    println!("{t}");
+    let t = time_once("table2_sharing_factors", || bench::table2::run(&ctx));
+    println!("{t}");
+    let t = time_once("fig10_waterfall", || bench::fig10::run(&ctx));
+    println!("{t}");
+    let t = time_once("table3_main_results_cnn3", || {
+        bench::table3::run_models(&ctx, &[bench::common::Workload::Cnn3])
+    });
+    println!("{t}");
+}

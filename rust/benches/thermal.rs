@@ -1,0 +1,40 @@
+//! Thermal substrate benchmarks: γ(d) evaluation, coupling matrices at
+//! several array sizes, and the 2-D heat solve (the Lumerical substitute).
+
+use scatter::bench::timing::{bench, time_once};
+use scatter::thermal::heatsim::{solve, HeatSimConfig};
+use scatter::thermal::{coupling::ArrayGeometry, CouplingModel, GammaModel};
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let gamma = GammaModel::paper();
+
+    bench("gamma_eval_poly_branch", budget, || {
+        std::hint::black_box(gamma.eval(std::hint::black_box(9.0)));
+    });
+    bench("gamma_eval_exp_branch", budget, || {
+        std::hint::black_box(gamma.eval(std::hint::black_box(30.0)));
+    });
+
+    for (rows, cols) in [(8usize, 8usize), (16, 16), (32, 32)] {
+        let geom = ArrayGeometry {
+            rows,
+            cols,
+            l_v: 120.0,
+            l_h: 16.0,
+            l_s: 9.0,
+        };
+        bench(&format!("coupling_build_{rows}x{cols}"), budget, || {
+            std::hint::black_box(CouplingModel::new(geom, &gamma));
+        });
+    }
+
+    time_once("heatsim_solve_default_grid", || {
+        std::hint::black_box(solve(&HeatSimConfig::default()));
+    });
+    let fast = HeatSimConfig { dx_um: 1.0, max_iters: 4000, ..Default::default() };
+    time_once("heatsim_solve_coarse_grid", || {
+        std::hint::black_box(solve(&fast));
+    });
+}

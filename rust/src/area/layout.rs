@@ -1,0 +1,66 @@
+//! Rerouter layout area (Fig. 5 note: "a folded rerouter layout is
+//! designed to save area").
+//!
+//! The 1×k2 tunable rerouter is a binary tree of k2−1 MZI power splitters.
+//! A straight tree layout occupies `depth` columns of device length, with
+//! up to k2/2 devices stacked per column. The folded layout serpentines
+//! consecutive tree levels into a fixed-height strip so the footprint is
+//! ~(k2−1) node areas plus a routing overhead factor, independent of tree
+//! depth — roughly 2× tighter than the straight tree for k2 = 16.
+
+use crate::devices::MziSpec;
+
+/// Routing/bend overhead multiplier for the folded serpentine.
+const FOLD_ROUTING_OVERHEAD: f64 = 1.25;
+/// Vertical pitch between folded splitter rows (µm).
+const FOLD_ROW_PITCH_UM: f64 = 20.0;
+
+/// Straight (unfolded) binary-tree layout area in mm².
+pub fn tree_rerouter_mm2(k2: usize, spec: &MziSpec, l_s: f64) -> f64 {
+    if k2 <= 1 {
+        return 0.0;
+    }
+    let depth = (k2 as f64).log2().ceil();
+    let width_um = depth * spec.length_um;
+    let height_um = (k2 as f64 / 2.0) * (spec.width_um(l_s) + FOLD_ROW_PITCH_UM);
+    width_um * height_um * 1e-6
+}
+
+/// Folded serpentine layout area in mm² (the shipped design).
+pub fn folded_rerouter_mm2(k2: usize, spec: &MziSpec, l_s: f64) -> f64 {
+    if k2 <= 1 {
+        return 0.0;
+    }
+    let n_nodes = (k2 - 1) as f64;
+    let node_mm2 = spec.width_um(l_s) * spec.length_um * 1e-6;
+    n_nodes * node_mm2 * FOLD_ROUTING_OVERHEAD
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folded_beats_tree() {
+        let spec = MziSpec::low_power();
+        let folded = folded_rerouter_mm2(16, &spec, 9.0);
+        let tree = tree_rerouter_mm2(16, &spec, 9.0);
+        assert!(folded < tree, "folded {folded} should beat tree {tree}");
+        assert!(folded > 0.0);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let spec = MziSpec::low_power();
+        assert_eq!(folded_rerouter_mm2(1, &spec, 9.0), 0.0);
+        assert_eq!(tree_rerouter_mm2(1, &spec, 9.0), 0.0);
+    }
+
+    #[test]
+    fn scales_linearly_with_ports() {
+        let spec = MziSpec::low_power();
+        let a16 = folded_rerouter_mm2(16, &spec, 9.0);
+        let a32 = folded_rerouter_mm2(32, &spec, 9.0);
+        assert!((a32 / a16 - 31.0 / 15.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,6 @@
+//! Chip-area modeling (§3.2.2, Eqs. 5–7) and the folded rerouter layout.
+
+pub mod layout;
+pub mod model;
+
+pub use model::{AreaBreakdown, AreaModel};

@@ -1,0 +1,175 @@
+//! Analytic chip-area model (Eqs. 5–7).
+//!
+//! ```text
+//!   A_node    = (l_s + w_PS) × (l_Y + l_PS + l_DC)                  (Eq. 5)
+//!   A_PTC,wgt = ((k2−1)·l_v + len) × ((k1−1)·l_h + width)           (Eq. 6)
+//!   A         = RC·(A_PTC + k2·A_MMI + 2k1k2·A_PD)
+//!             + RC/r·(k2·A_DAC + k2·A_MZM + A_rerouter)
+//!             + RC/c·(k1·A_ADC + k1·A_TIA)                          (Eq. 7)
+//! ```
+//!
+//! Calibration note: with the default `DeviceLibrary` (A_DAC = 0.011 mm²)
+//! the eoDAC upgrade adds (RC/r)·k2·A_DAC = 0.704 mm², exactly the delta
+//! the paper quotes under Table 3.
+
+use crate::config::{AcceleratorConfig, DacKind};
+use crate::devices::{DeviceLibrary, MziSpec};
+
+/// Itemized area numbers, all in mm².
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AreaBreakdown {
+    pub weight_array_mm2: f64,
+    pub mmi_mm2: f64,
+    pub pd_mm2: f64,
+    pub dac_mm2: f64,
+    pub mzm_mm2: f64,
+    pub rerouter_mm2: f64,
+    pub adc_mm2: f64,
+    pub tia_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_mm2(&self) -> f64 {
+        self.weight_array_mm2
+            + self.mmi_mm2
+            + self.pd_mm2
+            + self.dac_mm2
+            + self.mzm_mm2
+            + self.rerouter_mm2
+            + self.adc_mm2
+            + self.tia_mm2
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    pub cfg: AcceleratorConfig,
+    pub lib: DeviceLibrary,
+}
+
+impl AreaModel {
+    pub fn new(cfg: AcceleratorConfig, lib: DeviceLibrary) -> Self {
+        Self { cfg, lib }
+    }
+
+    pub fn with_defaults(cfg: AcceleratorConfig) -> Self {
+        Self::new(cfg, DeviceLibrary::default())
+    }
+
+    /// Eq. 5: single crossbar-node footprint in mm².
+    pub fn node_mm2(&self) -> f64 {
+        let spec = MziSpec::from_kind(self.cfg.mzi);
+        spec.width_um(self.cfg.l_s) * spec.length_um * 1e-6
+    }
+
+    /// Eq. 6: the k1×k2 weight-MZI array footprint of one PTC in mm².
+    pub fn ptc_weight_array_mm2(&self) -> f64 {
+        let c = &self.cfg;
+        let spec = MziSpec::from_kind(c.mzi);
+        let height_um = (c.k2 as f64 - 1.0) * c.l_v + spec.length_um;
+        let width_um = (c.k1 as f64 - 1.0) * c.l_h() + spec.width_um(c.l_s);
+        height_um * width_um * 1e-6
+    }
+
+    /// Eq. 7: full-chip breakdown.
+    pub fn breakdown(&self) -> AreaBreakdown {
+        let c = &self.cfg;
+        let rc = c.n_cores() as f64;
+        let per_r = rc / c.share_r as f64;
+        let per_c = rc / c.share_c as f64;
+        let dac_factor = match c.dac {
+            DacKind::Edac => 1.0,
+            DacKind::Eodac { segments, .. } => segments as f64,
+        };
+        AreaBreakdown {
+            weight_array_mm2: rc * self.ptc_weight_array_mm2(),
+            mmi_mm2: rc * c.k2 as f64 * self.lib.area_mmi_mm2,
+            pd_mm2: rc * 2.0 * (c.k1 * c.k2) as f64 * self.lib.area_pd_mm2,
+            dac_mm2: per_r * c.k2 as f64 * self.lib.area_dac_mm2 * dac_factor,
+            mzm_mm2: per_r * c.k2 as f64 * self.lib.area_mzm_mm2,
+            rerouter_mm2: per_r
+                * super::layout::folded_rerouter_mm2(c.k2, &MziSpec::low_power(), c.l_s),
+            adc_mm2: per_c * c.k1 as f64 * self.lib.area_adc_mm2,
+            tia_mm2: per_c * c.k1 as f64 * self.lib.area_tia_mm2,
+        }
+    }
+
+    pub fn total_mm2(&self) -> f64 {
+        self.breakdown().total_mm2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MziKind;
+
+    #[test]
+    fn node_area_matches_paper_numbers() {
+        // LP node: (9 + 6) µm × 115 µm = 1725 µm² = 0.001725 mm²
+        let cfg = AcceleratorConfig { l_s: 9.0, mzi: MziKind::LowPower, ..Default::default() };
+        let a = AreaModel::with_defaults(cfg);
+        assert!((a.node_mm2() - 0.001725).abs() < 1e-9);
+        // Foundry node: 156.25 × 550 µm²
+        let cfg = AcceleratorConfig::foundry_baseline();
+        let a = AreaModel::with_defaults(cfg);
+        assert!((a.node_mm2() - 156.25 * 550.0 * 1e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ptc_array_area_eq6() {
+        // l_s=9, l_g=5 -> l_h=20; height = 15*120+115 = 1915, width = 15*20+15 = 315
+        let cfg = AcceleratorConfig { l_s: 9.0, l_g: 5.0, ..Default::default() };
+        let a = AreaModel::with_defaults(cfg);
+        assert!((a.ptc_weight_array_mm2() - 1915.0 * 315.0 * 1e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lg_shrink_delta_matches_table3() {
+        // Table 3: l_g 5→1 µm saves ~1.83 mm² on the 16-core chip.
+        let mk = |l_g: f64| {
+            AreaModel::with_defaults(AcceleratorConfig { l_g, ..Default::default() })
+                .total_mm2()
+        };
+        let delta = mk(5.0) - mk(1.0);
+        assert!((delta - 1.838).abs() < 0.01, "delta={delta}");
+    }
+
+    #[test]
+    fn eodac_adds_paper_quoted_area() {
+        let base = AcceleratorConfig { dac: DacKind::Edac, ..Default::default() };
+        let eo = AcceleratorConfig { dac: DacKind::optimal_eodac(), ..Default::default() };
+        let d = AreaModel::with_defaults(eo).total_mm2()
+            - AreaModel::with_defaults(base).total_mm2();
+        assert!((d - 0.704).abs() < 1e-9, "eoDAC area delta = {d}");
+    }
+
+    #[test]
+    fn total_area_near_table3_operating_points() {
+        // Table 3 (eoDAC): l_g=1 → 12.37 mm², l_g=3 → 13.44, l_g=5 → 14.20.
+        for (l_g, want) in [(1.0, 12.37), (3.0, 13.44), (5.0, 14.20)] {
+            let cfg = AcceleratorConfig { l_g, ..Default::default() };
+            let got = AreaModel::with_defaults(cfg).total_mm2();
+            let err = (got - want).abs() / want;
+            assert!(err < 0.10, "l_g={l_g}: {got:.2} vs paper {want} ({:.1}%)", err * 100.0);
+        }
+    }
+
+    #[test]
+    fn sharing_shrinks_converter_area() {
+        let dedicated = AcceleratorConfig { share_r: 1, share_c: 1, ..Default::default() };
+        let shared = AcceleratorConfig::default(); // r=c=4
+        let bd_d = AreaModel::with_defaults(dedicated).breakdown();
+        let bd_s = AreaModel::with_defaults(shared).breakdown();
+        assert!((bd_d.dac_mm2 / bd_s.dac_mm2 - 4.0).abs() < 1e-9);
+        assert!((bd_d.adc_mm2 / bd_s.adc_mm2 - 4.0).abs() < 1e-9);
+        assert_eq!(bd_d.weight_array_mm2, bd_s.weight_array_mm2);
+    }
+
+    #[test]
+    fn foundry_orders_of_magnitude_larger() {
+        let f = AreaModel::with_defaults(AcceleratorConfig::foundry_baseline()).total_mm2();
+        let s = AreaModel::with_defaults(AcceleratorConfig::default()).total_mm2();
+        assert!(f / s > 20.0, "foundry/scatter = {}", f / s);
+    }
+}

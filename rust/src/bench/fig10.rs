@@ -1,0 +1,166 @@
+//! Fig. 10 — the progressive power-area optimization waterfall:
+//! baseline (dense, foundry MZI, dedicated converters, l_g = 20 µm) down
+//! to full SCATTER (LP-MZI, l_g = 1 µm, shared converters, co-sparsity,
+//! IG+OG+LR, eoDAC). The paper's headline: 511× area and 12.4× power vs
+//! the foundry dense baseline.
+
+use super::common::{BenchCtx, Workload};
+use crate::area::AreaModel;
+use crate::coordinator::EngineOptions;
+use crate::power::energy::pap;
+use crate::util::Table;
+
+pub fn run(ctx: &BenchCtx) -> Table {
+    let mut table = Table::new("Fig. 10 — progressive power-area optimization").header(&[
+        "step", "P_avg (W)", "A (mm^2)", "PAP", "P vs base", "A vs base", "description",
+    ]);
+    let n = (ctx.eval_budget(Workload::Cnn3) / 4).max(5);
+
+    let mut base: Option<(f64, f64)> = None;
+    for step in crate::config::fig10_steps() {
+        let (model, ds, _opt_masks) =
+            ctx.deployment(Workload::Cnn3, &step.config, step.density);
+        let masks = if step.density < 1.0 {
+            if step.power_opt_masks {
+                // §3.3.5 power-aware selection: per segment, keep the
+                // columns whose weights cost the least MZI hold power
+                // (plus the min-rerouter-power tie-break)
+                weight_power_masks(&model, &step.config, step.density)
+            } else {
+                // magnitude-only masks: same cardinality, evenly spread
+                // (no power awareness) to expose the step-5 delta
+                naive_masks(ctx, &model, &step.config, step.density)
+            }
+        } else {
+            Default::default()
+        };
+        let (_, engine) = ctx.accuracy(
+            &model,
+            &ds,
+            &step.config,
+            EngineOptions::NOISY,
+            masks,
+            n,
+        );
+        let p_avg = engine.p_avg_w();
+        let area = AreaModel::with_defaults(step.config.clone()).total_mm2();
+        let (pb, ab) = *base.get_or_insert((p_avg, area));
+        table.row(vec![
+            step.label.to_string(),
+            format!("{p_avg:.2}"),
+            format!("{area:.2}"),
+            format!("{:.1}", pap(p_avg, area)),
+            format!("{:.1}x", pb / p_avg),
+            format!("{:.0}x", ab / area),
+            step.description.to_string(),
+        ]);
+    }
+    table
+}
+
+/// §3.3.5 power-aware column selection using the *actual weights*: per
+/// segment, keep the columns with the smallest Σ|arcsin w| (weight-MZI
+/// hold power), which is what the DST power metric minimizes once the
+/// rerouter term ties.
+fn weight_power_masks(
+    model: &crate::nn::Model,
+    cfg: &crate::AcceleratorConfig,
+    density: f64,
+) -> std::collections::BTreeMap<String, crate::sparsity::LayerMask> {
+    use crate::sparsity::{ChunkMask, LayerMask};
+    let mut weights: std::collections::BTreeMap<String, Vec<f64>> = Default::default();
+    let mut m = model.clone();
+    m.visit_weights_mut(|name, w, _| {
+        weights.insert(name.to_string(), w.clone());
+    });
+    let mut masks = std::collections::BTreeMap::new();
+    let (rows, cols) = cfg.chunk_shape();
+    let layers = model.matmul_layers();
+    let n = layers.len();
+    let s_r = density.max(0.5);
+    let s_c = (density / s_r).min(1.0);
+    let per_seg = (s_c * cfg.k2 as f64).round() as usize;
+    for (idx, (name, out_dim, in_dim)) in layers.into_iter().enumerate() {
+        if idx == 0 || idx == n - 1 {
+            continue;
+        }
+        let w = &weights[&name];
+        let w_max = w.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
+        let p = out_dim.div_ceil(rows);
+        let q = in_dim.div_ceil(cols);
+        let row = crate::sparsity::interleaved_row_mask(rows, s_r);
+        let mut chunks = Vec::with_capacity(p * q);
+        for pi in 0..p {
+            for qi in 0..q {
+                // per-column hold-power cost within this chunk
+                let mut col = vec![false; cols];
+                for seg in 0..cols / cfg.k2 {
+                    let mut costs: Vec<(f64, usize)> = (0..cfg.k2)
+                        .map(|j| {
+                            let gj = qi * cols + seg * cfg.k2 + j;
+                            let mut cost = 0.0;
+                            if gj < in_dim {
+                                for (i, &r) in row.iter().enumerate() {
+                                    let gi = pi * rows + i;
+                                    if r && gi < out_dim {
+                                        cost += (w[gi * in_dim + gj] / w_max)
+                                            .clamp(-1.0, 1.0)
+                                            .asin()
+                                            .abs();
+                                    }
+                                }
+                            }
+                            (cost, j)
+                        })
+                        .collect();
+                    costs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    for &(_, j) in costs.iter().take(per_seg) {
+                        col[seg * cfg.k2 + j] = true;
+                    }
+                }
+                chunks.push(ChunkMask::new(row.clone(), col));
+            }
+        }
+        masks.insert(name, LayerMask { p, q, chunks });
+    }
+    masks
+}
+
+/// Masks with the target density but *evenly spread* (non-power-optimized)
+/// column patterns — the strawman that step 5's power-aware selection
+/// improves on.
+fn naive_masks(
+    _ctx: &BenchCtx,
+    model: &crate::nn::Model,
+    cfg: &crate::AcceleratorConfig,
+    density: f64,
+) -> std::collections::BTreeMap<String, crate::sparsity::LayerMask> {
+    use crate::sparsity::{ChunkMask, LayerMask};
+    let mut masks = std::collections::BTreeMap::new();
+    let (rows, cols) = cfg.chunk_shape();
+    let layers = model.matmul_layers();
+    let n = layers.len();
+    let s_r = density.max(0.5);
+    let s_c = (density / s_r).min(1.0);
+    for (idx, (name, out_dim, in_dim)) in layers.into_iter().enumerate() {
+        if idx == 0 || idx == n - 1 {
+            continue;
+        }
+        let p = out_dim.div_ceil(rows);
+        let q = in_dim.div_ceil(cols);
+        let row = crate::sparsity::interleaved_row_mask(rows, s_r);
+        // evenly-spread columns: magnitude-style selection with no power
+        // awareness — every pair-level splitter must full-swing steer,
+        // the rerouter-power worst case that step 5 eliminates
+        let per_seg = (s_c * cfg.k2 as f64).round() as usize;
+        let col: Vec<bool> = (0..cols)
+            .map(|j| {
+                let s = j % cfg.k2;
+                s * per_seg / cfg.k2 != (s + 1) * per_seg / cfg.k2
+            })
+            .collect();
+        let chunk = ChunkMask::new(row, col);
+        masks.insert(name, LayerMask { p, q, chunks: vec![chunk; p * q] });
+    }
+    masks
+}

@@ -1,0 +1,93 @@
+//! Fig. 4 — thermal characterization:
+//! (b) γ(d) from the heat-solver pipeline vs the paper's published fit;
+//! (c) MZI power P(|Δφ|, l_s);
+//! (d) N-MAE on phases/weights vs MZI pitch l_h;
+//! (e) area / power / worst-case crosstalk vs spacing.
+
+use super::common::BenchCtx;
+use crate::area::AreaModel;
+use crate::config::AcceleratorConfig;
+use crate::devices::{Mzi, MziSpec};
+use crate::thermal::heatsim::{characterize, HeatSimConfig};
+use crate::thermal::{coupling::ArrayGeometry, CouplingModel, GammaModel};
+use crate::util::{nmae, Table, XorShiftRng};
+
+pub fn run(_ctx: &BenchCtx) -> Table {
+    let mut table = Table::new("Fig. 4 — thermal crosstalk characterization").header(&[
+        "series", "x", "value", "note",
+    ]);
+
+    // (b) γ(d): paper fit and our heat-solver refit
+    let paper = GammaModel::paper();
+    let (_samples, refit) = characterize(&HeatSimConfig::default(), 23.0);
+    for d in [1.0f64, 3.0, 5.0, 9.0, 15.0, 23.0, 30.0, 40.0] {
+        table.row(vec![
+            "gamma(d) paper".into(),
+            format!("{d:.0}"),
+            format!("{:.4}", paper.eval(d)),
+            "Eq. 10 published fit".into(),
+        ]);
+        table.row(vec![
+            "gamma(d) heatsim".into(),
+            format!("{d:.0}"),
+            format!("{:.4}", refit.eval(d)),
+            "2-D FEM substitute refit".into(),
+        ]);
+    }
+
+    // (c) MZI power vs arm spacing at |Δφ| = π/2
+    for ls in [5.0f64, 7.0, 9.0, 11.0, 15.0, 20.0] {
+        let mzi = Mzi::new(MziSpec::low_power(), ls, &paper);
+        table.row(vec![
+            "P_MZI(pi/2, l_s) mW".into(),
+            format!("{ls:.0}"),
+            format!("{:.3}", mzi.power_mw(std::f64::consts::FRAC_PI_2)),
+            "intra-MZI penalty 1/(1-gamma)".into(),
+        ]);
+    }
+
+    // (d) N-MAE on realized weights vs pitch l_h for a 16x16 array
+    let mut rng = XorShiftRng::new(42);
+    let mut w = vec![0.0; 256];
+    rng.fill_uniform(&mut w, -1.0, 1.0);
+    for lh in [16.0f64, 20.0, 25.0, 30.0, 40.0] {
+        let geom = ArrayGeometry { rows: 16, cols: 16, l_v: 120.0, l_h: lh, l_s: 9.0 };
+        let cm = CouplingModel::new(geom, &paper);
+        // program the phases, perturb, read back weights
+        let mut phases = vec![0.0; 256];
+        for j in 0..16 {
+            for i in 0..16 {
+                phases[j * 16 + i] = Mzi::phase_from_weight(w[i * 16 + j]);
+            }
+        }
+        let pert = cm.perturbed(&phases);
+        // map back: w̃[i][j] = -sin(φ̃[j*16+i])
+        let mut w_tilde = vec![0.0; 256];
+        for j in 0..16 {
+            for i in 0..16 {
+                w_tilde[i * 16 + j] = Mzi::weight_from_phase(pert[j * 16 + i]);
+            }
+        }
+        table.row(vec![
+            "weight N-MAE vs l_h".into(),
+            format!("{lh:.0}"),
+            format!("{:.4}", nmae(&w_tilde, &w)),
+            "16x16 array, l_s=9".into(),
+        ]);
+    }
+
+    // (e) area/power/crosstalk vs l_g for the full accelerator
+    for lg in [1.0f64, 3.0, 5.0, 10.0, 20.0] {
+        let cfg = AcceleratorConfig { l_g: lg, ..Default::default() };
+        let area = AreaModel::with_defaults(cfg.clone()).total_mm2();
+        let geom = ArrayGeometry::from_config(&cfg);
+        let worst = CouplingModel::new(geom, &paper).worst_case_coupling();
+        table.row(vec![
+            "area mm^2 / worst gamma".into(),
+            format!("{lg:.0}"),
+            format!("{area:.2} / {worst:.4}"),
+            "Eq. 7 area, Eq. 8 coupling".into(),
+        ]);
+    }
+    table
+}

@@ -1,0 +1,51 @@
+//! Fig. 6 — power-area-accuracy design space of a 16×16 PTC across arm
+//! spacing l_s and MZI gap l_g; dense network under variations.
+
+use super::common::{BenchCtx, Workload};
+use crate::area::AreaModel;
+use crate::config::{AcceleratorConfig, DacKind, SparsitySupport};
+use crate::coordinator::EngineOptions;
+use crate::devices::{Mzi, MziSpec};
+use crate::thermal::GammaModel;
+use crate::util::Table;
+
+pub fn run(ctx: &BenchCtx) -> Table {
+    let mut table = Table::new("Fig. 6 — 16x16 PTC power/area/accuracy vs (l_s, l_g)")
+        .header(&["l_s", "l_g", "array area (mm^2)", "MZI power (mW avg)", "Acc w/ TV (%)"]);
+
+    let gamma = GammaModel::paper();
+    let (model, ds) = ctx.fitted(Workload::Cnn3);
+    let n = (ctx.eval_budget(Workload::Cnn3) / 2).max(10);
+    for &ls in &[7.0, 9.0, 11.0] {
+        for &lg in &[1.0, 5.0, 10.0] {
+            let cfg = AcceleratorConfig {
+                l_s: ls,
+                l_g: lg,
+                share_r: 1,
+                share_c: 1,
+                dac: DacKind::Edac,
+                features: SparsitySupport::NONE,
+                ..Default::default()
+            };
+            let area = AreaModel::with_defaults(cfg.clone()).ptc_weight_array_mm2();
+            let mzi = Mzi::new(MziSpec::low_power(), ls, &gamma);
+            let p_avg = mzi.mean_power_uniform_mw();
+            let (acc, _) = ctx.accuracy(
+                &model,
+                &ds,
+                &cfg,
+                EngineOptions::NOISY,
+                Default::default(),
+                n,
+            );
+            table.row(vec![
+                format!("{ls:.0}"),
+                format!("{lg:.0}"),
+                format!("{area:.4}"),
+                format!("{p_avg:.3}"),
+                format!("{:.1}", acc * 100.0),
+            ]);
+        }
+    }
+    table
+}

@@ -1,0 +1,37 @@
+//! Fig. 8 — hybrid eoDAC design points: DAC power, IO pads, area factor,
+//! and SNR headroom for each partitioning of a 6-bit conversion.
+//! The paper's optimum is two 3-bit segments (8:1), 2.3× power saving.
+
+use super::common::BenchCtx;
+use crate::devices::{Dac, EoDac};
+use crate::util::Table;
+
+pub fn run(_ctx: &BenchCtx) -> Table {
+    let mut table = Table::new("Fig. 8 — eoDAC partitioning of a 6-bit @ 5 GHz conversion")
+        .header(&[
+            "config", "DAC power (mW)", "saving vs eDAC", "IO pads", "area factor",
+            "SNR gain (dB)",
+        ]);
+    let p0 = crate::devices::DeviceLibrary::default().edac_p0_pj;
+    let mono = Dac::new(6, 5.0, p0);
+    table.row(vec![
+        "1 x 6-bit eDAC".into(),
+        format!("{:.2}", mono.power_mw()),
+        "1.00x".into(),
+        "1".into(),
+        "1.0x".into(),
+        "0.0".into(),
+    ]);
+    for (segments, bits) in [(2u8, 3u8), (3, 2), (6, 1)] {
+        let eo = EoDac::new(segments, bits, 5.0, p0);
+        table.row(vec![
+            format!("{segments} x {bits}-bit eoDAC"),
+            format!("{:.2}", eo.power_mw()),
+            format!("{:.2}x", eo.power_saving_vs_edac()),
+            eo.io_pads().to_string(),
+            format!("{:.1}x", eo.area_factor()),
+            format!("{:.1}", eo.snr_gain_db()),
+        ]);
+    }
+    table
+}

@@ -1,0 +1,36 @@
+//! Benchmark harness: one module per paper table/figure (§4).
+//!
+//! Every harness prints the same rows/series the paper reports, through
+//! `util::Table`, and returns the table so tests can assert on trends.
+//! Absolute numbers depend on the simulated substrate; the *shape* (who
+//! wins, by what factor, where crossovers fall) is the reproduction target
+//! and is what the assertions in `rust/tests/reproduction.rs` pin down.
+
+pub mod common;
+pub mod timing;
+
+pub mod fig10;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use common::BenchCtx;
+
+/// Run every harness in paper order.
+pub fn run_all(ctx: &BenchCtx) {
+    println!("{}", fig4::run(ctx));
+    println!("{}", fig5::run(ctx));
+    println!("{}", table1::run(ctx));
+    println!("{}", fig6::run(ctx));
+    println!("{}", table2::run(ctx));
+    println!("{}", fig8::run(ctx));
+    println!("{}", fig9::run_a(ctx));
+    println!("{}", fig9::run_b(ctx));
+    println!("{}", fig10::run(ctx));
+    println!("{}", table3::run(ctx));
+}

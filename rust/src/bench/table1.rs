@@ -1,0 +1,46 @@
+//! Table 1: optimal device spacing on a dense network (s = 1).
+//!
+//! Sweep l_s ∈ {7..11} µm at l_g = 5 µm; report accuracy under crosstalk
+//! and noises, average power, area, and power-area product. The paper's
+//! winner is l_s = 9 µm (minimum PAP at <1 % accuracy drop).
+
+use super::common::{BenchCtx, Workload};
+use crate::area::AreaModel;
+use crate::config::{AcceleratorConfig, DacKind, SparsitySupport};
+use crate::coordinator::EngineOptions;
+use crate::power::energy::pap;
+use crate::util::Table;
+
+pub fn run(ctx: &BenchCtx) -> Table {
+    let mut table = Table::new(
+        "Table 1 — optimal device spacing, dense CNN (l_g = 5 um, s = 1)",
+    )
+    .header(&["l_s (um)", "l_g (um)", "Acc (%)", "P_avg (W)", "A (mm^2)", "PAP"]);
+
+    let (model, ds) = ctx.fitted(Workload::Cnn3);
+    for ls in [7.0, 8.0, 9.0, 10.0, 11.0] {
+        let cfg = AcceleratorConfig {
+            share_r: 1,
+            share_c: 1,
+            l_s: ls,
+            l_g: 5.0,
+            dac: DacKind::Edac,
+            features: SparsitySupport::NONE,
+            ..Default::default()
+        };
+        let n = ctx.eval_budget(Workload::Cnn3);
+        let (acc, engine) =
+            ctx.accuracy(&model, &ds, &cfg, EngineOptions::NOISY, Default::default(), n);
+        let p_avg = engine.p_avg_w();
+        let area = AreaModel::with_defaults(cfg).total_mm2();
+        table.row(vec![
+            format!("{ls:.0}"),
+            "5".into(),
+            format!("{:.2}", acc * 100.0),
+            format!("{p_avg:.2}"),
+            format!("{area:.2}"),
+            format!("{:.1}", pap(p_avg, area)),
+        ]);
+    }
+    table
+}

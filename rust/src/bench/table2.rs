@@ -1,0 +1,37 @@
+//! Table 2: architecture sharing factor (r, c) × sparsity — average power
+//! and accuracy on CNN-FMNIST. The paper's winner is r = c = 4.
+
+use super::common::{BenchCtx, Workload};
+use crate::config::{AcceleratorConfig, DacKind, SparsitySupport};
+use crate::coordinator::EngineOptions;
+use crate::util::Table;
+
+pub fn run(ctx: &BenchCtx) -> Table {
+    let mut table = Table::new("Table 2 — sharing factor (r, c) x sparsity, CNN-FMNIST*")
+        .header(&[
+            "r", "c", "P@s=0.8 (W)", "Acc@0.8 (%)", "P@s=0.6 (W)", "Acc@0.6 (%)",
+            "P@s=0.4 (W)", "Acc@0.4 (%)",
+        ]);
+
+    let n = ctx.eval_budget(Workload::Cnn3);
+    for share in [1usize, 2, 4] {
+        let mut cells = vec![share.to_string(), share.to_string()];
+        for density in [0.8, 0.6, 0.4] {
+            let cfg = AcceleratorConfig {
+                share_r: share,
+                share_c: share,
+                l_g: 5.0,
+                dac: DacKind::Edac,
+                features: SparsitySupport::FULL,
+                ..Default::default()
+            };
+            let (model, ds, masks) = ctx.deployment(Workload::Cnn3, &cfg, density);
+            let (acc, engine) =
+                ctx.accuracy(&model, &ds, &cfg, EngineOptions::NOISY, masks, n);
+            cells.push(format!("{:.2}", engine.p_avg_w()));
+            cells.push(format!("{:.2}", acc * 100.0));
+        }
+        table.row(cells);
+    }
+    table
+}

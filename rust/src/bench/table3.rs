@@ -1,0 +1,104 @@
+//! Table 3 — main results: dense PTC vs SCATTER across l_g ∈ {1, 3, 5} µm,
+//! ideal accuracy / accuracy with thermal variation (TV) / accuracy with
+//! IG+OG+LR recovery, plus single-image inference energy.
+//!
+//! CNN uses s = 0.3; VGG8/ResNet18 use s = 0.4 (paper's settings).
+
+use super::common::{table3_config, BenchCtx, Workload};
+use crate::area::AreaModel;
+use crate::config::{AcceleratorConfig, SparsitySupport};
+use crate::coordinator::EngineOptions;
+use crate::util::Table;
+
+pub fn run(ctx: &BenchCtx) -> Table {
+    run_models(ctx, &[Workload::Cnn3, Workload::Vgg8, Workload::Resnet18])
+}
+
+pub fn run_models(ctx: &BenchCtx, workloads: &[Workload]) -> Table {
+    let mut table = Table::new("Table 3 — main results (dense vs SCATTER)").header(&[
+        "model",
+        "setting",
+        "Ideal Acc",
+        "TV@lg=1",
+        "TV@lg=3",
+        "TV@lg=5",
+        "+IG+OG+LR@lg=1",
+        "+IG+OG+LR@lg=3",
+        "+IG+OG+LR@lg=5",
+        "E (mJ/img)",
+    ]);
+    // area header rows (config-level, model independent)
+    for l_g in [1.0, 3.0, 5.0] {
+        let cfg = AcceleratorConfig { l_g, ..Default::default() };
+        let area = AreaModel::with_defaults(cfg).total_mm2();
+        table.row(vec![
+            "(chip)".into(),
+            format!("l_g={l_g:.0}um"),
+            format!("Area={area:.2} mm^2"),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+        ]);
+    }
+
+    for &wl in workloads {
+        let n = ctx.eval_budget(wl);
+        let density = match wl {
+            Workload::Cnn3 => 0.3,
+            _ => 0.4,
+        };
+
+        for (setting, dens) in [("DensePTC", 1.0f64), ("SCATTER", density)] {
+            // deployment: DST-style masked backbone + re-fit readout
+            let cfg0 = table3_config(5.0, SparsitySupport::NONE);
+            let (model, ds, masks0) = ctx.deployment(wl, &cfg0, dens);
+            let (acc_ideal, _) =
+                ctx.accuracy(&model, &ds, &cfg0, EngineOptions::IDEAL, masks0.clone(), n);
+
+            let mut row = vec![
+                wl.label().to_string(),
+                setting.to_string(),
+                format!("{:.2}", acc_ideal * 100.0),
+            ];
+
+            // accuracy w/ TV (no gating/LR)
+            for l_g in [1.0, 3.0, 5.0] {
+                let cfg = table3_config(l_g, SparsitySupport::NONE);
+                let (acc, _) =
+                    ctx.accuracy(&model, &ds, &cfg, EngineOptions::NOISY, masks0.clone(), n);
+                row.push(format!("{:.2}", acc * 100.0));
+            }
+            // recovered accuracy with IG+OG+LR (SCATTER only; dense has no
+            // pruned paths to gate, mark as n/a)
+            let mut energy_mj = 0.0;
+            for l_g in [1.0, 3.0, 5.0] {
+                if dens >= 1.0 {
+                    row.push("-".into());
+                    // still capture dense energy at l_g=1
+                    if l_g == 1.0 {
+                        let cfg = table3_config(l_g, SparsitySupport::NONE);
+                        let (_, engine) = ctx.accuracy(
+                            &model, &ds, &cfg, EngineOptions::NOISY, Default::default(), 1,
+                        );
+                        energy_mj = engine.energy_report().energy_mj;
+                    }
+                    continue;
+                }
+                let cfg = table3_config(l_g, SparsitySupport::FULL);
+                let (acc, engine) =
+                    ctx.accuracy(&model, &ds, &cfg, EngineOptions::NOISY, masks0.clone(), n);
+                row.push(format!("{:.2}", acc * 100.0));
+                if l_g == 1.0 {
+                    energy_mj = engine.energy_report().energy_mj / n.max(1) as f64;
+                }
+            }
+            row.push(format!("{energy_mj:.3}"));
+            table.row(row);
+        }
+    }
+    table
+}

@@ -1,0 +1,105 @@
+//! Hand-rolled micro-benchmark harness (criterion is unavailable in the
+//! offline toolchain). Warms up, runs timed batches until a target wall
+//! budget, and reports mean/median/p95 per-iteration times.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        fn fmt(ns: f64) -> String {
+            if ns < 1e3 {
+                format!("{ns:.0} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} us", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.2} s", ns / 1e9)
+            }
+        }
+        format!(
+            "{:<44} {:>10}/iter  (median {}, p95 {}, n={})",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.median_ns),
+            fmt(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark a closure: warm up ~10% of the budget, then sample batches.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration: find an iteration count per sample batch
+    let cal_start = Instant::now();
+    let mut cal_iters = 0u64;
+    while cal_start.elapsed() < budget.mul_f64(0.1).max(Duration::from_millis(5)) {
+        f();
+        cal_iters += 1;
+    }
+    let per_iter = cal_start.elapsed().as_nanos() as f64 / cal_iters.max(1) as f64;
+    let batch = ((5e6 / per_iter).ceil() as u64).clamp(1, 10_000); // ~5 ms batches
+
+    let mut samples = Vec::new();
+    let mut total_iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < budget {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+        total_iters += batch;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+    let median = samples.get(samples.len() / 2).copied().unwrap_or(mean);
+    let p95 = samples
+        .get((samples.len() as f64 * 0.95) as usize)
+        .or(samples.last())
+        .copied()
+        .unwrap_or(mean);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        mean_ns: mean,
+        median_ns: median,
+        p95_ns: p95,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Time a one-shot (non-repeatable) operation.
+pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("{:<44} {:>10.2?} (one-shot)", name, t0.elapsed());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut x = 0u64;
+        let r = bench("noop-ish", Duration::from_millis(30), || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(r.iters > 100);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.median_ns * 0.5);
+    }
+}

@@ -1,0 +1,413 @@
+//! Accelerator configuration: architecture dims, device spacings, device
+//! library selection, converter resolutions, and clock.
+//!
+//! All of the paper's design-space axes (Table 1, Table 2, Figs. 6, 8, 10)
+//! are fields here, and the progressive Fig.-10 optimization steps are
+//! provided as named presets.
+
+mod presets;
+
+pub use presets::{fig10_steps, Fig10Step};
+
+use crate::Error;
+
+/// Which MZI power-splitter device the weight array uses (§3.3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MziKind {
+    /// Foundry-provided switch: Pπ = 30 mW, 550 µm × 156.25 µm.
+    Foundry,
+    /// The paper's optimized low-power MZI: Pπ = 15.02 mW, 115 µm × (l_s + 6) µm.
+    LowPower,
+}
+
+/// Input-modulation DAC style (§3.3.4, Fig. 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DacKind {
+    /// Single full-resolution electronic DAC.
+    Edac,
+    /// Hybrid electronic-optic DAC: `segments` sub-DACs of `bits_per_seg`
+    /// bits each driving non-uniform MZM segments (optimal: 2 × 3-bit, 8:1).
+    Eodac { segments: u8, bits_per_seg: u8 },
+}
+
+impl DacKind {
+    /// The paper's optimal eoDAC: two 3-bit eDACs + two-segment MZM (8:1).
+    pub fn optimal_eodac() -> Self {
+        DacKind::Eodac { segments: 2, bits_per_seg: 3 }
+    }
+}
+
+/// Gating / light-redistribution feature flags (§3.3.2, §3.3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparsitySupport {
+    /// Input gating: power-gate DACs/MZMs on pruned columns.
+    pub input_gating: bool,
+    /// Output gating: power-gate TIA/ADC on pruned rows.
+    pub output_gating: bool,
+    /// In-situ light redistribution via the tunable rerouter.
+    pub light_redistribution: bool,
+}
+
+impl SparsitySupport {
+    pub const NONE: Self =
+        Self { input_gating: false, output_gating: false, light_redistribution: false };
+    pub const IG: Self =
+        Self { input_gating: true, output_gating: false, light_redistribution: false };
+    pub const IG_OG: Self =
+        Self { input_gating: true, output_gating: true, light_redistribution: false };
+    /// Full SCATTER: IG + OG + LR.
+    pub const FULL: Self =
+        Self { input_gating: true, output_gating: true, light_redistribution: true };
+}
+
+/// Full accelerator configuration. Field names follow the paper's symbols.
+#[derive(Debug, Clone)]
+pub struct AcceleratorConfig {
+    /// Number of tiles (paper: R = 4).
+    pub tiles_r: usize,
+    /// PTCs per tile (paper: C = 4).
+    pub cores_c: usize,
+    /// PTC columns = output dim per core (paper: k1 = 16).
+    pub k1: usize,
+    /// PTC rows = input dim per core (paper: k2 = 16).
+    pub k2: usize,
+    /// Input-modulation sharing factor across tiles (paper: r).
+    pub share_r: usize,
+    /// Readout sharing factor within a tile (paper: c).
+    pub share_c: usize,
+    /// Clock frequency in GHz (paper: f = 5).
+    pub freq_ghz: f64,
+    /// Input/activation DAC resolution in bits (paper: b_in = 6).
+    pub b_in: u8,
+    /// Weight DAC resolution in bits (paper: b_w = 8; low-speed, off-chip).
+    pub b_w: u8,
+    /// Readout ADC resolution in bits (paper: b_o = 8).
+    pub b_o: u8,
+    /// MZI arm (phase-shifter) spacing l_s in µm (optimal: 9).
+    pub l_s: f64,
+    /// Horizontal gap between adjacent MZIs l_g in µm (dense-optimal: 5).
+    pub l_g: f64,
+    /// Vertical MZI pitch l_v in µm (layout constant: 120 for LP-MZI).
+    pub l_v: f64,
+    /// Weight-array MZI device.
+    pub mzi: MziKind,
+    /// Input DAC architecture.
+    pub dac: DacKind,
+    /// Gating/LR features enabled on this build.
+    pub features: SparsitySupport,
+    /// RNG seed for hardware noise draws.
+    pub noise_seed: u64,
+}
+
+impl Default for AcceleratorConfig {
+    /// The paper's final SCATTER configuration (§4.1 + Fig. 10 step 7):
+    /// R=C=4, k1=k2=16, r=c=4, 5 GHz, LP-MZI at l_s=9/l_g=1, eoDAC, full
+    /// gating + light redistribution.
+    fn default() -> Self {
+        Self {
+            tiles_r: 4,
+            cores_c: 4,
+            k1: 16,
+            k2: 16,
+            share_r: 4,
+            share_c: 4,
+            freq_ghz: 5.0,
+            b_in: 6,
+            b_w: 8,
+            b_o: 8,
+            l_s: 9.0,
+            l_g: 1.0,
+            l_v: 120.0,
+            mzi: MziKind::LowPower,
+            dac: DacKind::optimal_eodac(),
+            features: SparsitySupport::FULL,
+            noise_seed: 0x5CA77E2,
+        }
+    }
+}
+
+impl AcceleratorConfig {
+    /// The dense baseline of Table 1 / Fig. 10 step ③: LP-MZI, optimal
+    /// dense spacing (l_s=9, l_g=5), shared converters, no sparsity HW.
+    pub fn dense_optimal() -> Self {
+        Self {
+            l_g: 5.0,
+            dac: DacKind::Edac,
+            features: SparsitySupport::NONE,
+            ..Self::default()
+        }
+    }
+
+    /// The conservative foundry dense baseline of Fig. 10 step ⓪:
+    /// Foundry-MZI, l_g = 20 µm, dedicated converters (r = c = 1).
+    pub fn foundry_baseline() -> Self {
+        Self {
+            share_r: 1,
+            share_c: 1,
+            l_s: 50.0,
+            l_g: 20.0,
+            l_v: 570.0,
+            mzi: MziKind::Foundry,
+            dac: DacKind::Edac,
+            features: SparsitySupport::NONE,
+            ..Self::default()
+        }
+    }
+
+    /// Horizontal MZI pitch l_h = l_g + node width (µm). Eq. 6 uses
+    /// `(k1-1)·l_h + l_s + w_PS`, i.e. pitch = gap + device width.
+    pub fn l_h(&self) -> f64 {
+        self.l_g + self.node_width()
+    }
+
+    /// Physical node (MZI) width in µm: l_s + w_PS for the LP device,
+    /// the fixed foundry width otherwise.
+    pub fn node_width(&self) -> f64 {
+        match self.mzi {
+            MziKind::LowPower => self.l_s + crate::devices::mzi::LP_PS_WIDTH_UM,
+            MziKind::Foundry => crate::devices::mzi::FOUNDRY_WIDTH_UM,
+        }
+    }
+
+    /// Physical node length (along light propagation) in µm:
+    /// l_Y + l_PS + l_DC = 115 for the LP device; 550 for foundry.
+    pub fn node_length(&self) -> f64 {
+        match self.mzi {
+            MziKind::LowPower => crate::devices::mzi::LP_LENGTH_UM,
+            MziKind::Foundry => crate::devices::mzi::FOUNDRY_LENGTH_UM,
+        }
+    }
+
+    /// Total number of PTCs.
+    pub fn n_cores(&self) -> usize {
+        self.tiles_r * self.cores_c
+    }
+
+    /// Weight-chunk shape handled per cycle: rows = r·k1, cols = c·k2
+    /// (§3.3.5: pruning granularity is length-r·k1 columns / length-c·k2 rows).
+    pub fn chunk_shape(&self) -> (usize, usize) {
+        (self.share_r * self.k1, self.share_c * self.k2)
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.tiles_r == 0 || self.cores_c == 0 || self.k1 == 0 || self.k2 == 0 {
+            return Err(Error::Config("architecture dims must be nonzero".into()));
+        }
+        if self.share_r == 0 || self.share_r > self.tiles_r {
+            return Err(Error::Config(format!(
+                "input sharing factor r={} must be in 1..=R={}",
+                self.share_r, self.tiles_r
+            )));
+        }
+        if self.share_c == 0 || self.share_c > self.cores_c {
+            return Err(Error::Config(format!(
+                "readout sharing factor c={} must be in 1..=C={}",
+                self.share_c, self.cores_c
+            )));
+        }
+        if self.l_s <= 0.0 || self.l_g < 0.0 || self.l_v <= 0.0 {
+            return Err(Error::Config("spacings must be positive".into()));
+        }
+        if self.freq_ghz <= 0.0 {
+            return Err(Error::Config("clock frequency must be positive".into()));
+        }
+        if self.b_in == 0 || self.b_w == 0 || self.b_o == 0 {
+            return Err(Error::Config("bit widths must be nonzero".into()));
+        }
+        if let DacKind::Eodac { segments, bits_per_seg } = self.dac {
+            if segments == 0 || bits_per_seg == 0 {
+                return Err(Error::Config("eoDAC segments/bits must be nonzero".into()));
+            }
+            if segments as u32 * bits_per_seg as u32 != self.b_in as u32 {
+                return Err(Error::Config(format!(
+                    "eoDAC segments({segments}) x bits({bits_per_seg}) must equal b_in({})",
+                    self.b_in
+                )));
+            }
+        }
+        if self.features.light_redistribution && !self.features.input_gating {
+            return Err(Error::Config(
+                "light redistribution requires input gating (rerouter steals gated ports)".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Serialize to JSON (hand-rolled; the offline build has no serde).
+    pub fn to_json(&self) -> String {
+        use crate::util::Json;
+        let dac = match self.dac {
+            DacKind::Edac => Json::obj(vec![("kind", Json::Str("edac".into()))]),
+            DacKind::Eodac { segments, bits_per_seg } => Json::obj(vec![
+                ("kind", Json::Str("eodac".into())),
+                ("segments", Json::Num(segments as f64)),
+                ("bits_per_seg", Json::Num(bits_per_seg as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("tiles_r", Json::Num(self.tiles_r as f64)),
+            ("cores_c", Json::Num(self.cores_c as f64)),
+            ("k1", Json::Num(self.k1 as f64)),
+            ("k2", Json::Num(self.k2 as f64)),
+            ("share_r", Json::Num(self.share_r as f64)),
+            ("share_c", Json::Num(self.share_c as f64)),
+            ("freq_ghz", Json::Num(self.freq_ghz)),
+            ("b_in", Json::Num(self.b_in as f64)),
+            ("b_w", Json::Num(self.b_w as f64)),
+            ("b_o", Json::Num(self.b_o as f64)),
+            ("l_s", Json::Num(self.l_s)),
+            ("l_g", Json::Num(self.l_g)),
+            ("l_v", Json::Num(self.l_v)),
+            (
+                "mzi",
+                Json::Str(
+                    match self.mzi {
+                        MziKind::Foundry => "foundry",
+                        MziKind::LowPower => "low_power",
+                    }
+                    .into(),
+                ),
+            ),
+            ("dac", dac),
+            ("input_gating", Json::Bool(self.features.input_gating)),
+            ("output_gating", Json::Bool(self.features.output_gating)),
+            ("light_redistribution", Json::Bool(self.features.light_redistribution)),
+            ("noise_seed", Json::Num(self.noise_seed as f64)),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(s: &str) -> crate::Result<Self> {
+        use crate::util::Json;
+        let v = Json::parse(s).map_err(Error::Serde)?;
+        let num = |k: &str, d: f64| v.get(k).and_then(Json::as_f64).unwrap_or(d);
+        let def = Self::default();
+        let dac = match v.get("dac") {
+            Some(d) => match d.get("kind").and_then(Json::as_str) {
+                Some("edac") => DacKind::Edac,
+                Some("eodac") => DacKind::Eodac {
+                    segments: d.get("segments").and_then(Json::as_f64).unwrap_or(2.0) as u8,
+                    bits_per_seg: d.get("bits_per_seg").and_then(Json::as_f64).unwrap_or(3.0)
+                        as u8,
+                },
+                _ => return Err(Error::Serde("unknown dac kind".into())),
+            },
+            None => def.dac,
+        };
+        let mzi = match v.get("mzi").and_then(Json::as_str) {
+            Some("foundry") => MziKind::Foundry,
+            Some("low_power") | None => MziKind::LowPower,
+            Some(other) => return Err(Error::Serde(format!("unknown mzi kind '{other}'"))),
+        };
+        let flag = |k: &str, d: bool| v.get(k).and_then(Json::as_bool).unwrap_or(d);
+        let cfg = Self {
+            tiles_r: num("tiles_r", def.tiles_r as f64) as usize,
+            cores_c: num("cores_c", def.cores_c as f64) as usize,
+            k1: num("k1", def.k1 as f64) as usize,
+            k2: num("k2", def.k2 as f64) as usize,
+            share_r: num("share_r", def.share_r as f64) as usize,
+            share_c: num("share_c", def.share_c as f64) as usize,
+            freq_ghz: num("freq_ghz", def.freq_ghz),
+            b_in: num("b_in", def.b_in as f64) as u8,
+            b_w: num("b_w", def.b_w as f64) as u8,
+            b_o: num("b_o", def.b_o as f64) as u8,
+            l_s: num("l_s", def.l_s),
+            l_g: num("l_g", def.l_g),
+            l_v: num("l_v", def.l_v),
+            mzi,
+            dac,
+            features: SparsitySupport {
+                input_gating: flag("input_gating", def.features.input_gating),
+                output_gating: flag("output_gating", def.features.output_gating),
+                light_redistribution: flag(
+                    "light_redistribution",
+                    def.features.light_redistribution,
+                ),
+            },
+            noise_seed: num("noise_seed", def.noise_seed as f64) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        AcceleratorConfig::default().validate().unwrap();
+        AcceleratorConfig::dense_optimal().validate().unwrap();
+        AcceleratorConfig::foundry_baseline().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in [
+            AcceleratorConfig::default(),
+            AcceleratorConfig::dense_optimal(),
+            AcceleratorConfig::foundry_baseline(),
+        ] {
+            let s = cfg.to_json();
+            let back = AcceleratorConfig::from_json(&s).unwrap();
+            assert_eq!(back.k1, cfg.k1);
+            assert_eq!(back.l_s, cfg.l_s);
+            assert_eq!(back.dac, cfg.dac);
+            assert_eq!(back.mzi, cfg.mzi);
+            assert_eq!(back.features, cfg.features);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_sharing() {
+        let cfg = AcceleratorConfig { share_r: 8, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = AcceleratorConfig { share_c: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_eodac_partition() {
+        let cfg = AcceleratorConfig {
+            dac: DacKind::Eodac { segments: 2, bits_per_seg: 4 },
+            b_in: 6,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_lr_without_ig() {
+        let cfg = AcceleratorConfig {
+            features: SparsitySupport {
+                input_gating: false,
+                output_gating: true,
+                light_redistribution: true,
+            },
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn pitch_includes_gap_and_width() {
+        let cfg = AcceleratorConfig { l_s: 9.0, l_g: 5.0, ..Default::default() };
+        assert!((cfg.l_h() - 20.0).abs() < 1e-12); // 5 + 9 + 6
+    }
+
+    #[test]
+    fn chunk_shape_matches_sharing() {
+        let cfg = AcceleratorConfig::default();
+        assert_eq!(cfg.chunk_shape(), (64, 64));
+    }
+}

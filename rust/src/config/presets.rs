@@ -1,0 +1,149 @@
+//! Named configuration presets for the Fig.-10 progressive optimization
+//! waterfall (§4.2.4). Each step changes exactly one design axis relative
+//! to the previous step, so the harness can attribute power/area deltas.
+
+use super::{AcceleratorConfig, DacKind, SparsitySupport};
+
+/// One step of the Fig.-10 waterfall: a label, the config, and the model
+/// sparsity deployed on it (1.0 = dense).
+#[derive(Debug, Clone)]
+pub struct Fig10Step {
+    pub label: &'static str,
+    pub description: &'static str,
+    pub config: AcceleratorConfig,
+    /// Fraction of nonzero weights (paper's `s`; 1.0 = dense).
+    pub density: f64,
+    /// Whether the deployed masks are power-optimized (step 5+).
+    pub power_opt_masks: bool,
+}
+
+/// The seven progressive steps of Fig. 10 plus the step-0 baseline.
+pub fn fig10_steps() -> Vec<Fig10Step> {
+    let base = AcceleratorConfig::foundry_baseline();
+
+    // Step 1: swap Foundry-MZI -> LP-MZI, keeping conservative spacing
+    // (l_s = 15 um: negligible intra-MZI coupling; l_g = 20 um).
+    let mut s1 = AcceleratorConfig::foundry_baseline();
+    s1.mzi = super::MziKind::LowPower;
+    s1.l_s = 15.0;
+    s1.l_v = 120.0;
+
+    // Step 2: optimal dense device spacing l_s = 9 (small intra-MZI power
+    // penalty, Fig. 4(c)), l_g = 5 (23% area saving).
+    let mut s2 = s1.clone();
+    s2.l_s = 9.0;
+    s2.l_g = 5.0;
+
+    // Step 3: architectural sharing r = c = 4.
+    let mut s3 = s2.clone();
+    s3.share_r = 4;
+    s3.share_c = 4;
+
+    // Step 4: s = 0.3 row-column co-sparsity + output gating lets
+    // l_g shrink to 1 µm.
+    let mut s4 = s3.clone();
+    s4.l_g = 1.0;
+    s4.features = SparsitySupport { input_gating: false, output_gating: true, ..SparsitySupport::NONE };
+
+    // Step 5: power-aware pruning/growth (power-optimized column masks).
+    let s5 = s4.clone();
+
+    // Step 6: input/output gating + light redistribution.
+    let mut s6 = s5.clone();
+    s6.features = SparsitySupport::FULL;
+
+    // Step 7: hybrid eoDAC (2 x 3-bit, two-segment MZM).
+    let mut s7 = s6.clone();
+    s7.dac = DacKind::optimal_eodac();
+
+    vec![
+        Fig10Step {
+            label: "0:baseline",
+            description: "dense, Foundry-MZI, l_g=20um, dedicated converters (r=c=1)",
+            config: base,
+            density: 1.0,
+            power_opt_masks: false,
+        },
+        Fig10Step {
+            label: "1:LP-MZI",
+            description: "swap foundry MZI for compact low-power LP-MZI",
+            config: s1,
+            density: 1.0,
+            power_opt_masks: false,
+        },
+        Fig10Step {
+            label: "2:spacing",
+            description: "optimal dense spacing l_s=9um, l_g=5um",
+            config: s2,
+            density: 1.0,
+            power_opt_masks: false,
+        },
+        Fig10Step {
+            label: "3:sharing",
+            description: "share input modulation and readout, r=c=4",
+            config: s3,
+            density: 1.0,
+            power_opt_masks: false,
+        },
+        Fig10Step {
+            label: "4:sparsity",
+            description: "s=0.3 row-column co-sparsity + OG, shrink l_g to 1um",
+            config: s4,
+            density: 0.3,
+            power_opt_masks: false,
+        },
+        Fig10Step {
+            label: "5:power-opt",
+            description: "power-aware pruning/growth selects low-power column masks",
+            config: s5,
+            density: 0.3,
+            power_opt_masks: true,
+        },
+        Fig10Step {
+            label: "6:IG+OG+LR",
+            description: "input/output gating + in-situ light redistribution",
+            config: s6,
+            density: 0.3,
+            power_opt_masks: true,
+        },
+        Fig10Step {
+            label: "7:eoDAC",
+            description: "hybrid 2x3-bit eoDAC replaces 6-bit eDAC",
+            config: s7,
+            density: 0.3,
+            power_opt_masks: true,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_steps_all_valid() {
+        let steps = fig10_steps();
+        assert_eq!(steps.len(), 8);
+        for s in &steps {
+            s.config.validate().unwrap_or_else(|e| panic!("{}: {e}", s.label));
+        }
+    }
+
+    #[test]
+    fn steps_change_one_axis_at_a_time() {
+        let steps = fig10_steps();
+        // step1 changes device only
+        assert_eq!(steps[1].config.l_g, steps[0].config.l_g);
+        assert_ne!(steps[1].config.mzi, steps[0].config.mzi);
+        // step2 changes l_g only
+        assert_eq!(steps[2].config.mzi, steps[1].config.mzi);
+        assert!(steps[2].config.l_g < steps[1].config.l_g);
+        // step3 changes sharing
+        assert_eq!(steps[3].config.share_r, 4);
+        // step4 enables sparsity + shrinks l_g
+        assert!(steps[4].density < 1.0);
+        assert_eq!(steps[4].config.l_g, 1.0);
+        // step7 swaps the DAC
+        assert_eq!(steps[7].config.dac, DacKind::optimal_eodac());
+    }
+}

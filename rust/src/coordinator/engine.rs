@@ -1,0 +1,490 @@
+//! [`PhotonicEngine`] — the photonic digital-twin matmul backend.
+//!
+//! For each model matmul it: pads the weight matrix to the chunk grid,
+//! applies the layer's structured mask, quantizes (b_w symmetric weights,
+//! b_in unsigned activations), *programs* each chunk's PTCs once
+//! (crosstalk-perturbed realized weights, gating, rerouter trees), then
+//! streams activation columns through the programmed arrays while
+//! accounting per-chunk power × cycles into the energy ledger (Eq. §4.1).
+
+use crate::config::AcceleratorConfig;
+use crate::coordinator::scheduler::Scheduler;
+use crate::devices::{DeviceLibrary, Mzi, MziSpec};
+use crate::nn::MatmulEngine;
+use crate::power::{EnergyAccumulator, EnergyReport, PowerModel};
+use crate::ptc::crossbar::{ColumnMode, ForwardOptions, ProgrammedPtc, PtcSimulator};
+use crate::quant::{SymmetricQuant, UnsignedQuant};
+use crate::sparsity::{mask_power_mw, ChunkMask, LayerMask};
+use crate::thermal::GammaModel;
+use std::collections::BTreeMap;
+
+/// Noise/feature switches for a deployment run.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Inject thermal crosstalk ("w/ TV" columns of Table 3).
+    pub thermal: bool,
+    /// Inject PD photocurrent noise.
+    pub pd_noise: bool,
+    /// Inject static phase-programming noise.
+    pub phase_noise: bool,
+    /// Quantize weights/activations (b_w / b_in from the config).
+    pub quantize: bool,
+}
+
+impl EngineOptions {
+    /// Everything off: the twin reduces to an exact (quantized) matmul.
+    pub const IDEAL: Self =
+        Self { thermal: false, pd_noise: false, phase_noise: false, quantize: true };
+    /// Full non-ideality stack ("w/ TV").
+    pub const NOISY: Self =
+        Self { thermal: true, pd_noise: true, phase_noise: true, quantize: true };
+}
+
+struct ProgrammedChunk {
+    /// r·c programmed PTC blocks, row-major over the (r, c) grid.
+    blocks: Vec<ProgrammedPtc>,
+    /// Per-slot hold power of this chunk (mW).
+    power: crate::power::PowerBreakdown,
+    row_mask: Vec<bool>,
+    /// Per-row PD-noise std for the whole chunk: σ·√(c·k2)·lr_gain —
+    /// drawn once per (row, column) instead of once per block row, which
+    /// is statistically identical (sum of independent gaussians) and 4×
+    /// cheaper at r = c = 4 (EXPERIMENTS.md §Perf).
+    noise_std: f64,
+}
+
+struct ProgrammedLayer {
+    out_dim: usize,
+    in_dim: usize,
+    p: usize,
+    q: usize,
+    chunks: Vec<ProgrammedChunk>,
+    w_scale: f64,
+    n_waves: usize,
+    /// 2 for protected layers (non-adjacent mapping halves occupancy).
+    cycle_factor: u64,
+}
+
+/// The engine. One instance per deployment run; keeps programmed layers
+/// cached so repeated inferences (batches) only pay programming once.
+pub struct PhotonicEngine {
+    pub cfg: AcceleratorConfig,
+    pub opts: EngineOptions,
+    sim: PtcSimulator,
+    power: PowerModel,
+    scheduler: Scheduler,
+    rerouter_mzi: Mzi,
+    masks: BTreeMap<String, LayerMask>,
+    /// Layers deployed with the paper's §4.1 protection: weights mapped to
+    /// non-adjacent MZI columns, eliminating inter-MZI crosstalk at the
+    /// cost of 2x cycles (half physical occupancy).
+    protected: std::collections::BTreeSet<String>,
+    programmed: BTreeMap<String, ProgrammedLayer>,
+    energy: EnergyAccumulator,
+    rng: crate::util::XorShiftRng,
+}
+
+impl PhotonicEngine {
+    pub fn new(cfg: AcceleratorConfig, opts: EngineOptions) -> Self {
+        let gamma = GammaModel::paper();
+        let lib = DeviceLibrary::default();
+        let sim = PtcSimulator::from_config(&cfg);
+        let power = PowerModel::new(cfg.clone(), lib, &gamma);
+        let scheduler = Scheduler::new(cfg.clone());
+        let rerouter_mzi = Mzi::new(MziSpec::low_power(), cfg.l_s, &gamma);
+        let rng = crate::util::XorShiftRng::new(cfg.noise_seed);
+        Self {
+            cfg,
+            opts,
+            sim,
+            power,
+            scheduler,
+            rerouter_mzi,
+            masks: BTreeMap::new(),
+            protected: Default::default(),
+            programmed: BTreeMap::new(),
+            energy: EnergyAccumulator::new(),
+            rng,
+        }
+    }
+
+    /// Install per-layer sparsity masks (from `nn::loader` or
+    /// `sparsity::init`). Clears the programming cache.
+    pub fn set_masks(&mut self, masks: BTreeMap<String, LayerMask>) {
+        self.masks = masks;
+        self.programmed.clear();
+    }
+
+    pub fn masks(&self) -> &BTreeMap<String, LayerMask> {
+        &self.masks
+    }
+
+    /// Mark layers for non-adjacent-column deployment (§4.1: "we protect
+    /// the last linear layer by mapping the weights to non-adjacent
+    /// columns of MZIs to eliminate crosstalk"). Clears the cache.
+    pub fn set_protected(&mut self, layers: std::collections::BTreeSet<String>) {
+        self.protected = layers;
+        self.programmed.clear();
+    }
+
+    /// Energy/power ledger for everything executed so far.
+    pub fn energy_report(&self) -> EnergyReport {
+        self.energy.report(self.cfg.freq_ghz)
+    }
+
+    pub fn reset_energy(&mut self) {
+        self.energy = EnergyAccumulator::new();
+    }
+
+    /// Average accelerator power over the executed workload, in W. The
+    /// ledger records every chunk's power for its cycles while wall time
+    /// counts each wave once, so energy/wall-time is already the average
+    /// *concurrent* power across occupied slots.
+    pub fn p_avg_w(&self) -> f64 {
+        self.energy_report().p_avg_w
+    }
+
+    fn column_mode(&self) -> ColumnMode {
+        let f = self.cfg.features;
+        if f.light_redistribution {
+            ColumnMode::InputGatingLr
+        } else if f.input_gating {
+            ColumnMode::InputGating
+        } else {
+            ColumnMode::PruneOnly
+        }
+    }
+
+    fn program_layer(&mut self, layer: &str, w: &[f64], out_dim: usize, in_dim: usize) {
+        let protected = self.protected.contains(layer);
+        let sched = self.scheduler.schedule(out_dim, in_dim);
+        let (rows, cols) = (sched.chunk_rows, sched.chunk_cols);
+        let (k1, k2) = (self.cfg.k1, self.cfg.k2);
+        let (r, c) = (self.cfg.share_r, self.cfg.share_c);
+
+        // per-tensor symmetric quantization + normalization to [-1, 1]
+        let quant = SymmetricQuant::calibrate(self.cfg.b_w, w);
+        let w_max = w.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
+
+        let layer_mask = self.masks.get(layer).cloned();
+        let mut chunks = Vec::with_capacity(sched.p * sched.q);
+        let dense_chunk = ChunkMask::dense(rows, cols);
+
+        for pi in 0..sched.p {
+            for qi in 0..sched.q {
+                let mask = layer_mask
+                    .as_ref()
+                    .map(|lm| lm.chunk(pi, qi).clone())
+                    .unwrap_or_else(|| dense_chunk.clone());
+                assert_eq!(mask.rows, rows, "layer {layer}: mask rows");
+                assert_eq!(mask.cols, cols, "layer {layer}: mask cols");
+
+                // gather + normalize + quantize + mask the chunk
+                let mut wc = vec![0.0f64; rows * cols];
+                for i in 0..rows {
+                    let gi = pi * rows + i;
+                    if gi >= out_dim {
+                        break;
+                    }
+                    for j in 0..cols {
+                        let gj = qi * cols + j;
+                        if gj >= in_dim {
+                            break;
+                        }
+                        let mut v = w[gi * in_dim + gj];
+                        if self.opts.quantize {
+                            v = quant.quantize(v);
+                        }
+                        wc[i * cols + j] = v / w_max;
+                    }
+                }
+                mask.apply(&mut wc);
+
+                // program the r×c PTC blocks
+                let mut blocks = Vec::with_capacity(r * c);
+                let mut chunk_phases = vec![0.0f64; rows * cols];
+                for a in 0..r {
+                    let rm = &mask.row[a * k1..(a + 1) * k1];
+                    for b in 0..c {
+                        let cm = &mask.col[b * k2..(b + 1) * k2];
+                        let mut wb = vec![0.0f64; k1 * k2];
+                        for i in 0..k1 {
+                            let src = (a * k1 + i) * cols + b * k2;
+                            wb[i * k2..(i + 1) * k2].copy_from_slice(&wc[src..src + k2]);
+                        }
+                        let fo = ForwardOptions {
+                            thermal: self.opts.thermal && !protected,
+                            // noise is hoisted to the chunk level (below)
+                            pd_noise: false,
+                            phase_noise: self.opts.phase_noise,
+                            col_mask: Some(cm),
+                            row_mask: Some(rm),
+                            col_mode: self.column_mode(),
+                            output_gating: self.cfg.features.output_gating,
+                        };
+                        let prog = self.sim.program(&wb, &fo, &mut self.rng);
+                        // lift |phases| into chunk layout for the power model
+                        for i in 0..k1 {
+                            for j in 0..k2 {
+                                chunk_phases[(a * k1 + i) * cols + b * k2 + j] =
+                                    prog.phase_abs[i * k2 + j];
+                            }
+                        }
+                        blocks.push(prog);
+                    }
+                }
+
+                // per-slot hold power incl. rerouter trees
+                let rerouter_mw = mask_power_mw(&mask.col, k2, &self.rerouter_mzi);
+                let power =
+                    self.power.chunk(&chunk_phases, &mask.col, &mask.row, rerouter_mw);
+                // chunk-level PD noise: c·k2 nodes per row, LR-rescaled
+                let lr_gain = if self.cfg.features.light_redistribution {
+                    let active = mask.col.iter().filter(|&&m| m).count();
+                    active as f64 / mask.col.len() as f64
+                } else {
+                    1.0
+                };
+                let noise_std = if self.opts.pd_noise {
+                    self.sim.lib.pd_noise_std * ((c * k2) as f64).sqrt() * lr_gain
+                } else {
+                    0.0
+                };
+                chunks.push(ProgrammedChunk {
+                    blocks,
+                    power,
+                    row_mask: mask.row.clone(),
+                    noise_std,
+                });
+            }
+        }
+        self.programmed.insert(
+            layer.to_string(),
+            ProgrammedLayer {
+                out_dim,
+                in_dim,
+                p: sched.p,
+                q: sched.q,
+                chunks,
+                w_scale: w_max,
+                n_waves: sched.n_waves(),
+                cycle_factor: if protected { 2 } else { 1 },
+            },
+        );
+    }
+}
+
+impl MatmulEngine for PhotonicEngine {
+    fn matmul(
+        &mut self,
+        layer: &str,
+        w: &[f64],
+        x: &[f64],
+        out_dim: usize,
+        in_dim: usize,
+        n_cols: usize,
+    ) -> Vec<f64> {
+        assert_eq!(w.len(), out_dim * in_dim);
+        assert_eq!(x.len(), in_dim * n_cols);
+        let stale = match self.programmed.get(layer) {
+            Some(pl) => pl.out_dim != out_dim || pl.in_dim != in_dim,
+            None => true,
+        };
+        if stale {
+            self.program_layer(layer, w, out_dim, in_dim);
+        }
+
+        // activation normalization + quantization (per call)
+        let x_max = x.iter().fold(0.0f64, |m, &v| m.max(v)).max(1e-12);
+        let aq = UnsignedQuant { bits: self.cfg.b_in, max: 1.0 };
+        let (rows, cols) = self.cfg.chunk_shape();
+        let (k1, k2) = (self.cfg.k1, self.cfg.k2);
+        let (r, c) = (self.cfg.share_r, self.cfg.share_c);
+
+        let pl = self.programmed.get_mut(layer).unwrap();
+        let scale = pl.w_scale * x_max;
+        let mut y = vec![0.0f64; out_dim * n_cols];
+        let mut xseg = vec![0.0f64; k2];
+        let mut yblock = vec![0.0f64; k1];
+
+        for col in 0..n_cols {
+            for qi in 0..pl.q {
+                for pi in 0..pl.p {
+                    let chunk = &mut pl.chunks[pi * pl.q + qi];
+                    for b in 0..c {
+                        // gather + normalize + quantize this input segment
+                        for j in 0..k2 {
+                            let gj = qi * cols + b * k2 + j;
+                            let v = if gj < in_dim { x[gj * n_cols + col] } else { 0.0 };
+                            let v = (v / x_max).clamp(0.0, 1.0);
+                            xseg[j] =
+                                if self.opts.quantize { aq.quantize(v) } else { v };
+                        }
+                        for a in 0..r {
+                            let blk = &mut chunk.blocks[a * c + b];
+                            yblock.iter_mut().for_each(|v| *v = 0.0);
+                            blk.run_into(&xseg, &mut yblock, &mut self.rng);
+                            for i in 0..k1 {
+                                let gi = pi * rows + a * k1 + i;
+                                if gi < out_dim {
+                                    y[gi * n_cols + col] += yblock[i] * scale;
+                                }
+                            }
+                        }
+                    }
+                    // hoisted PD noise: one draw per active chunk row
+                    if chunk.noise_std > 0.0 {
+                        let og = self.cfg.features.output_gating;
+                        for i in 0..rows {
+                            if og && !chunk.row_mask[i] {
+                                continue;
+                            }
+                            let gi = pi * rows + i;
+                            if gi < out_dim {
+                                y[gi * n_cols + col] +=
+                                    self.rng.gaussian_std(chunk.noise_std) * scale;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // energy ledger: every chunk holds power for n_cols cycles
+        // (x2 for protected layers: non-adjacent mapping halves occupancy)
+        for chunk in &pl.chunks {
+            self.energy.record(layer, &chunk.power, pl.cycle_factor * n_cols as u64);
+        }
+        self.energy.advance_wall(pl.cycle_factor * (pl.n_waves * n_cols) as u64);
+        let _ = &pl.chunks[0].row_mask; // row gating already applied in blocks
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{ExactEngine, MatmulEngine};
+    use crate::util::{nmae, XorShiftRng};
+
+    fn small_cfg(features: crate::config::SparsitySupport) -> AcceleratorConfig {
+        AcceleratorConfig {
+            features,
+            l_g: 5.0,
+            dac: crate::config::DacKind::Edac,
+            ..Default::default()
+        }
+    }
+
+    fn problem(out: usize, inp: usize, n_cols: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = XorShiftRng::new(seed);
+        let mut w = vec![0.0; out * inp];
+        rng.fill_uniform(&mut w, -0.5, 0.5);
+        let mut x = vec![0.0; inp * n_cols];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        (w, x)
+    }
+
+    #[test]
+    fn ideal_engine_matches_exact_within_quantization() {
+        let cfg = small_cfg(crate::config::SparsitySupport::NONE);
+        let mut eng = PhotonicEngine::new(cfg, EngineOptions::IDEAL);
+        let (w, x) = problem(64, 64, 4, 1);
+        let y = eng.matmul("l", &w, &x, 64, 64, 4);
+        let y_exact = ExactEngine.matmul("l", &w, &x, 64, 64, 4);
+        let e = nmae(&y, &y_exact);
+        assert!(e < 0.02, "quantization-only error should be small: {e}");
+    }
+
+    #[test]
+    fn padded_shapes_work() {
+        let cfg = small_cfg(crate::config::SparsitySupport::NONE);
+        let mut eng = PhotonicEngine::new(cfg, EngineOptions::IDEAL);
+        let (w, x) = problem(70, 90, 3, 2);
+        let y = eng.matmul("l", &w, &x, 70, 90, 3);
+        let y_exact = ExactEngine.matmul("l", &w, &x, 70, 90, 3);
+        assert_eq!(y.len(), 210);
+        assert!(nmae(&y, &y_exact) < 0.03);
+    }
+
+    #[test]
+    fn thermal_noise_hurts_and_scatter_recovers() {
+        let (w, x) = problem(64, 64, 8, 3);
+        let y_exact = ExactEngine.matmul("l", &w, &x, 64, 64, 8);
+        // dense + thermal variation at tight pitch: big error
+        let cfg = AcceleratorConfig {
+            l_g: 1.0,
+            features: crate::config::SparsitySupport::NONE,
+            dac: crate::config::DacKind::Edac,
+            ..Default::default()
+        };
+        let mut noisy = PhotonicEngine::new(cfg.clone(), EngineOptions::NOISY);
+        let e_dense = nmae(&noisy.matmul("l", &w, &x, 64, 64, 8), &y_exact);
+
+        // sparse masks + full SCATTER features: error drops
+        let scfg = AcceleratorConfig {
+            features: crate::config::SparsitySupport::FULL,
+            ..cfg
+        };
+        let mut scatter = PhotonicEngine::new(scfg, EngineOptions::NOISY);
+        let gamma = GammaModel::paper();
+        let mzi = Mzi::new(MziSpec::low_power(), 9.0, &gamma);
+        let (mask, _, _) = crate::sparsity::init_layer_mask(1, 1, 64, 64, 16, 0.5, &mzi);
+        let mut masks = BTreeMap::new();
+        masks.insert("l".to_string(), mask.clone());
+        scatter.set_masks(masks);
+        // golden = exact matmul under the same mask
+        let mut wm = w.clone();
+        // apply mask to weights for the golden
+        let chunk = mask.chunk(0, 0);
+        for i in 0..64 {
+            for j in 0..64 {
+                if !chunk.element(i, j) {
+                    wm[i * 64 + j] = 0.0;
+                }
+            }
+        }
+        let y_masked = ExactEngine.matmul("l", &wm, &x, 64, 64, 8);
+        let e_scatter = nmae(&scatter.matmul("l", &w, &x, 64, 64, 8), &y_masked);
+        assert!(
+            e_scatter < e_dense * 0.5,
+            "SCATTER {e_scatter} should beat dense-under-TV {e_dense}"
+        );
+    }
+
+    #[test]
+    fn energy_ledger_accumulates() {
+        let cfg = small_cfg(crate::config::SparsitySupport::NONE);
+        let mut eng = PhotonicEngine::new(cfg, EngineOptions::IDEAL);
+        let (w, x) = problem(64, 64, 10, 4);
+        let _ = eng.matmul("l", &w, &x, 64, 64, 10);
+        let rep = eng.energy_report();
+        assert!(rep.energy_mj > 0.0);
+        assert_eq!(rep.cycles, 10, "1 chunk, 1 wave, 10 cols");
+        assert!(eng.p_avg_w() > 0.0);
+        // a second call doubles energy (programming is cached)
+        let _ = eng.matmul("l", &w, &x, 64, 64, 10);
+        let rep2 = eng.energy_report();
+        assert!((rep2.energy_mj / rep.energy_mj - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gating_reduces_recorded_power() {
+        let (w, x) = problem(64, 64, 4, 5);
+        let gamma = GammaModel::paper();
+        let mzi = Mzi::new(MziSpec::low_power(), 9.0, &gamma);
+        let (mask, _, _) = crate::sparsity::init_layer_mask(1, 1, 64, 64, 16, 0.3, &mzi);
+        let run = |features| {
+            let cfg = small_cfg(features);
+            let mut eng = PhotonicEngine::new(cfg, EngineOptions::IDEAL);
+            let mut masks = BTreeMap::new();
+            masks.insert("l".to_string(), mask.clone());
+            eng.set_masks(masks);
+            let _ = eng.matmul("l", &w, &x, 64, 64, 4);
+            eng.p_avg_w()
+        };
+        let p_none = run(crate::config::SparsitySupport::NONE);
+        let p_full = run(crate::config::SparsitySupport::FULL);
+        assert!(p_full < p_none * 0.9, "gating saves power: {p_full} vs {p_none}");
+    }
+}

@@ -1,0 +1,75 @@
+//! Latency / throughput metrics for the inference service.
+
+use std::time::Duration;
+
+/// Records request latencies and computes percentiles.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    /// Percentile in microseconds (nearest-rank).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize - 1;
+        v[rank.min(v.len() - 1)]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.samples_us.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut r = LatencyRecorder::new();
+        for us in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            r.record(Duration::from_micros(us));
+        }
+        assert_eq!(r.percentile_us(50.0), 50);
+        assert_eq!(r.percentile_us(90.0), 90);
+        assert_eq!(r.percentile_us(99.0), 100);
+        assert_eq!(r.max_us(), 100);
+        assert!((r.mean_us() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder_zeroes() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.percentile_us(99.0), 0);
+        assert_eq!(r.mean_us(), 0.0);
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,22 @@
+//! Layer-3 coordinator: maps im2col'd weight chunks onto the multi-core
+//! accelerator, programs gating + rerouters per chunk, streams activations,
+//! accounts energy, and serves batched inference requests.
+//!
+//! * [`scheduler`] — chunk partitioning and tile/core slot assignment;
+//! * [`engine`] — [`PhotonicEngine`]: the `nn::MatmulEngine` backend that
+//!   executes every model matmul on the photonic digital twin with
+//!   quantization, masks, noise and per-chunk energy accounting;
+//! * [`server`] — a threaded batched-inference service (the offline build
+//!   has no tokio; std::thread + mpsc provide the same dynamic-batching
+//!   architecture);
+//! * [`metrics`] — latency/throughput/energy reporting.
+
+pub mod engine;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use engine::{EngineOptions, PhotonicEngine};
+pub use metrics::LatencyRecorder;
+pub use scheduler::{ChunkAssignment, LayerSchedule, Scheduler};
+pub use server::{InferenceServer, ServerConfig, ServerReport};

@@ -1,0 +1,165 @@
+//! Chunk partitioning and slot scheduling (§3.2, Fig. 2).
+//!
+//! A layer's `out_dim × in_dim` weight matrix is zero-padded to a p×q grid
+//! of `rk1 × ck2` chunks. The accelerator holds `R·C/(r·c)` chunk *slots*
+//! at a time; executing one chunk against one input vector costs one cycle
+//! regardless of its sparsity (the paper's fixed-cycle clarification), so
+//! a layer with `n_cols` activation vectors takes
+//! `ceil(p·q / slots) · n_cols` wall cycles.
+
+use crate::AcceleratorConfig;
+
+/// Where one chunk lands: the slot index and its (tile, core) rectangle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkAssignment {
+    pub pi: usize,
+    pub qi: usize,
+    /// Slot index in 0..slots.
+    pub slot: usize,
+    /// Wave index: chunks with the same wave execute concurrently.
+    pub wave: usize,
+}
+
+/// Static schedule for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerSchedule {
+    pub out_dim: usize,
+    pub in_dim: usize,
+    /// Chunk-grid dims.
+    pub p: usize,
+    pub q: usize,
+    /// Chunk dims.
+    pub chunk_rows: usize,
+    pub chunk_cols: usize,
+    pub assignments: Vec<ChunkAssignment>,
+    pub slots: usize,
+}
+
+impl LayerSchedule {
+    pub fn n_waves(&self) -> usize {
+        self.assignments.iter().map(|a| a.wave + 1).max().unwrap_or(0)
+    }
+
+    /// Wall cycles to stream `n_cols` activation vectors through the layer.
+    pub fn wall_cycles(&self, n_cols: usize) -> u64 {
+        (self.n_waves() * n_cols) as u64
+    }
+
+    /// Per-chunk cycles for the same workload (for Eq.-style E_tot sums).
+    pub fn chunk_cycles(&self, n_cols: usize) -> u64 {
+        n_cols as u64
+    }
+}
+
+/// The chunk scheduler bound to an accelerator configuration.
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    pub cfg: AcceleratorConfig,
+}
+
+impl Scheduler {
+    pub fn new(cfg: AcceleratorConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Number of simultaneous chunk slots.
+    pub fn slots(&self) -> usize {
+        self.cfg.n_cores() / (self.cfg.share_r * self.cfg.share_c)
+    }
+
+    /// Build the schedule for a matmul of shape `out_dim × in_dim`.
+    pub fn schedule(&self, out_dim: usize, in_dim: usize) -> LayerSchedule {
+        let (rows, cols) = self.cfg.chunk_shape();
+        let p = out_dim.div_ceil(rows);
+        let q = in_dim.div_ceil(cols);
+        let slots = self.slots().max(1);
+        let mut assignments = Vec::with_capacity(p * q);
+        for pi in 0..p {
+            for qi in 0..q {
+                let linear = pi * q + qi;
+                assignments.push(ChunkAssignment {
+                    pi,
+                    qi,
+                    slot: linear % slots,
+                    wave: linear / slots,
+                });
+            }
+        }
+        LayerSchedule {
+            out_dim,
+            in_dim,
+            p,
+            q,
+            chunk_rows: rows,
+            chunk_cols: cols,
+            assignments,
+            slots,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AcceleratorConfig {
+        AcceleratorConfig::default() // R=C=4, r=c=4, 16x16 -> 1 slot of 64x64
+    }
+
+    #[test]
+    fn slot_count() {
+        let s = Scheduler::new(cfg());
+        assert_eq!(s.slots(), 1);
+        let s = Scheduler::new(AcceleratorConfig {
+            share_r: 1,
+            share_c: 1,
+            ..AcceleratorConfig::default()
+        });
+        assert_eq!(s.slots(), 16);
+    }
+
+    #[test]
+    fn chunk_grid_covers_matrix() {
+        let s = Scheduler::new(cfg());
+        let sched = s.schedule(100, 130); // chunks are 64x64
+        assert_eq!((sched.p, sched.q), (2, 3));
+        assert_eq!(sched.assignments.len(), 6);
+        assert!(sched.p * sched.chunk_rows >= 100);
+        assert!(sched.q * sched.chunk_cols >= 130);
+    }
+
+    #[test]
+    fn waves_respect_slot_capacity() {
+        let s = Scheduler::new(AcceleratorConfig {
+            share_r: 2,
+            share_c: 2,
+            ..AcceleratorConfig::default()
+        }); // 16 cores / 4 = 4 slots, chunks are 32x32
+        let sched = s.schedule(64, 96); // p=2, q=3 -> 6 chunks, 4 slots
+        assert_eq!(sched.n_waves(), 2);
+        // no wave uses a slot twice
+        for w in 0..sched.n_waves() {
+            let mut used = vec![false; sched.slots];
+            for a in sched.assignments.iter().filter(|a| a.wave == w) {
+                assert!(!used[a.slot], "slot reuse within a wave");
+                used[a.slot] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn wall_cycles_scale_with_waves_and_cols() {
+        let s = Scheduler::new(cfg());
+        let sched = s.schedule(128, 64); // p=2,q=1, 1 slot -> 2 waves
+        assert_eq!(sched.wall_cycles(100), 200);
+        assert_eq!(sched.chunk_cycles(100), 100);
+    }
+
+    #[test]
+    fn exact_fit_no_padding_waste() {
+        let s = Scheduler::new(cfg());
+        let sched = s.schedule(64, 64);
+        assert_eq!((sched.p, sched.q), (1, 1));
+        assert_eq!(sched.n_waves(), 1);
+    }
+}

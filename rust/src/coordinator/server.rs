@@ -1,0 +1,191 @@
+//! Threaded batched-inference service over the photonic twin.
+//!
+//! Architecture (vLLM-router-like, scaled to this accelerator): clients
+//! submit images over an mpsc channel; the worker thread owns the
+//! [`PhotonicEngine`] + model, collects requests into dynamic batches
+//! (up to `max_batch` or `batch_timeout`), executes them, and replies on
+//! per-request channels. The offline toolchain has no tokio, so the event
+//! loop is std::thread + mpsc — same batching semantics, simpler runtime.
+
+use crate::coordinator::engine::{EngineOptions, PhotonicEngine};
+use crate::coordinator::metrics::LatencyRecorder;
+use crate::nn::{Model, Tensor};
+use crate::AcceleratorConfig;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, batch_timeout: Duration::from_millis(2) }
+    }
+}
+
+struct Request {
+    image: Tensor,
+    submitted: Instant,
+    reply: Sender<Reply>,
+}
+
+/// One served prediction.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub class: usize,
+    pub logits: Vec<f64>,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+/// Aggregate report at shutdown.
+#[derive(Debug, Clone)]
+pub struct ServerReport {
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_latency_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub throughput_rps: f64,
+    pub energy_mj: f64,
+    pub p_avg_w: f64,
+}
+
+/// Handle to a running inference server.
+pub struct InferenceServer {
+    tx: Sender<Request>,
+    worker: Option<JoinHandle<ServerReport>>,
+}
+
+impl InferenceServer {
+    /// Spawn the worker thread owning the engine + model.
+    pub fn spawn(
+        model: Model,
+        cfg: AcceleratorConfig,
+        opts: EngineOptions,
+        masks: std::collections::BTreeMap<String, crate::sparsity::LayerMask>,
+        server_cfg: ServerConfig,
+    ) -> Self {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
+        let worker = std::thread::spawn(move || {
+            let mut engine = PhotonicEngine::new(cfg, opts);
+            engine.set_masks(masks);
+            // §4.1: deploy the final linear layer on non-adjacent MZI
+            // columns (crosstalk-protected readout)
+            if let Some((last, _, _)) = model.matmul_layers().last() {
+                engine.set_protected([last.clone()].into_iter().collect());
+            }
+            let mut latencies = LatencyRecorder::new();
+            let mut batches = 0usize;
+            let started = Instant::now();
+            let mut served = 0usize;
+            loop {
+                // block for the first request (or shutdown)
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                };
+                // dynamic batching: drain until max_batch or timeout
+                let mut batch = vec![first];
+                let deadline = Instant::now() + server_cfg.batch_timeout;
+                while batch.len() < server_cfg.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => batch.push(r),
+                        Err(_) => break,
+                    }
+                }
+                let bsz = batch.len();
+                batches += 1;
+                for req in batch {
+                    let logits = model.forward(req.image, &mut engine);
+                    let class = logits.argmax();
+                    let latency = req.submitted.elapsed();
+                    latencies.record(latency);
+                    served += 1;
+                    let _ = req.reply.send(Reply {
+                        class,
+                        logits: logits.data,
+                        latency,
+                        batch_size: bsz,
+                    });
+                }
+            }
+            let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+            let rep = engine.energy_report();
+            ServerReport {
+                requests: served,
+                batches,
+                mean_latency_us: latencies.mean_us(),
+                p50_us: latencies.percentile_us(50.0),
+                p99_us: latencies.percentile_us(99.0),
+                throughput_rps: served as f64 / elapsed,
+                energy_mj: rep.energy_mj,
+                p_avg_w: engine.p_avg_w(),
+            }
+        });
+        Self { tx, worker: Some(worker) }
+    }
+
+    /// Submit an image; returns a receiver for the reply.
+    pub fn submit(&self, image: Tensor) -> Receiver<Reply> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request { image, submitted: Instant::now(), reply: reply_tx };
+        self.tx.send(req).expect("server worker alive");
+        reply_rx
+    }
+
+    /// Shut down and collect the report.
+    pub fn shutdown(mut self) -> ServerReport {
+        drop(self.tx);
+        self.worker.take().unwrap().join().expect("worker panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SparsitySupport;
+
+    #[test]
+    fn serves_batches_and_reports() {
+        let model = crate::nn::models::cnn3();
+        let cfg = AcceleratorConfig {
+            features: SparsitySupport::NONE,
+            dac: crate::config::DacKind::Edac,
+            l_g: 5.0,
+            ..Default::default()
+        };
+        let server = InferenceServer::spawn(
+            model,
+            cfg,
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig { max_batch: 4, batch_timeout: Duration::from_millis(1) },
+        );
+        let ds = crate::data::SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let (img, _) = ds.sample(0, i);
+            rxs.push(server.submit(img));
+        }
+        for rx in rxs {
+            let reply = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
+            assert_eq!(reply.logits.len(), 10);
+            assert!(reply.class < 10);
+            assert!(reply.batch_size >= 1);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.requests, 6);
+        assert!(report.batches >= 1 && report.batches <= 6);
+        assert!(report.energy_mj > 0.0);
+        assert!(report.p99_us >= report.p50_us);
+    }
+}

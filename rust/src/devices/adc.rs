@@ -1,0 +1,55 @@
+//! Readout ADC model (§3.2.1, Eq. 4): `P_ADC(b_o, f) = P0_ADC · b_o · f` —
+//! linear in both output resolution and sampling frequency.
+
+
+#[derive(Debug, Clone, Copy)]
+pub struct Adc {
+    pub bits: u8,
+    pub freq_ghz: f64,
+    /// P0 coefficient in pJ/bit (see `DeviceLibrary::adc_p0_pj`).
+    pub p0_pj: f64,
+}
+
+impl Adc {
+    pub fn new(bits: u8, freq_ghz: f64, p0_pj: f64) -> Self {
+        Self { bits, freq_ghz, p0_pj }
+    }
+
+    /// Power in mW: P0[pJ/bit] · b · f[GHz].
+    pub fn power_mw(&self) -> f64 {
+        self.p0_pj * self.bits as f64 * self.freq_ghz
+    }
+
+    /// Quantize a value in [-1, 1] to the signed ADC grid.
+    pub fn quantize(&self, x: f64) -> f64 {
+        let half = (1u64 << (self.bits - 1)) as f64 - 1.0;
+        (x.clamp(-1.0, 1.0) * half).round() / half
+    }
+
+    pub fn lsb(&self) -> f64 {
+        1.0 / ((1u64 << (self.bits - 1)) as f64 - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_linear_in_bits_and_freq() {
+        let a = Adc::new(8, 5.0, 0.3);
+        assert!((a.power_mw() - 12.0).abs() < 1e-12);
+        assert!((Adc::new(4, 5.0, 0.3).power_mw() - 6.0).abs() < 1e-12);
+        assert!((Adc::new(8, 2.5, 0.3).power_mw() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantize_signed_range() {
+        let a = Adc::new(8, 5.0, 0.3);
+        assert_eq!(a.quantize(2.0), 1.0);
+        assert_eq!(a.quantize(-2.0), -1.0);
+        assert_eq!(a.quantize(0.0), 0.0);
+        let q = a.quantize(0.3);
+        assert!((q - 0.3).abs() <= a.lsb() / 2.0 + 1e-12);
+    }
+}

@@ -1,0 +1,43 @@
+//! Passive 1×k even MMI splitter (§3.3.1): broadcasts the modulated input
+//! to the k1 crossbar columns. The rerouter (crate::rerouter) replaces the
+//! *input-side* splitter tree; this MMI stays on the broadcast side.
+
+
+#[derive(Debug, Clone, Copy)]
+pub struct MmiSplitter {
+    pub fanout: usize,
+    /// Excess insertion loss in dB (beyond the ideal 1/k split).
+    pub excess_loss_db: f64,
+}
+
+impl MmiSplitter {
+    pub fn new(fanout: usize) -> Self {
+        Self { fanout, excess_loss_db: 0.1 }
+    }
+
+    /// Per-port transmission: (1/k) · 10^(−loss/10).
+    pub fn per_port_transmission(&self) -> f64 {
+        (1.0 / self.fanout as f64) * 10f64.powf(-self.excess_loss_db / 10.0)
+    }
+
+    /// Split an input power evenly to all ports.
+    pub fn split(&self, p_in: f64) -> Vec<f64> {
+        vec![p_in * self.per_port_transmission(); self.fanout]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split_conserves_power_up_to_loss() {
+        let m = MmiSplitter::new(16);
+        let out = m.split(1.0);
+        assert_eq!(out.len(), 16);
+        let total: f64 = out.iter().sum();
+        assert!(total <= 1.0);
+        assert!(total > 0.95); // 0.1 dB excess loss
+        assert!((out[0] - out[15]).abs() < 1e-15);
+    }
+}

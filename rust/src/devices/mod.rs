@@ -1,0 +1,112 @@
+//! Device library: parameterized models for every photonic / electronic
+//! component in the SCATTER datapath (§3.2, §3.3.1, §3.3.4).
+//!
+//! Power model constants are calibrated so that the analytic models of
+//! `crate::power` land on the paper's reported operating points (Table 1:
+//! ~20.6 W dense LP r=c=1; Table 2; Fig. 10 waterfall). Each constant is
+//! documented with its role; all are overridable through [`DeviceLibrary`].
+
+pub mod adc;
+pub mod dac;
+pub mod mmi;
+pub mod mzi;
+pub mod mzm;
+pub mod photodetector;
+pub mod tia;
+
+pub use adc::Adc;
+pub use dac::{Dac, EoDac};
+pub use mmi::MmiSplitter;
+pub use mzi::{Mzi, MziSpec};
+pub use mzm::Mzm;
+pub use photodetector::Photodetector;
+pub use tia::Tia;
+
+
+/// All per-device constants in one place so configurations and tests can
+/// override them coherently. Units: mW, pJ, µm, mm².
+#[derive(Debug, Clone)]
+pub struct DeviceLibrary {
+    /// MZM static bias power (mW). Eq. 2 `P_mod,static`.
+    pub mzm_static_mw: f64,
+    /// MZM dynamic modulation energy (pJ per full-range symbol). Eq. 2 `E_mod`.
+    pub mzm_energy_pj: f64,
+    /// eDAC power coefficient `P0_eDAC` (pJ): P = P0 · 2^b/(b+1) · f.
+    pub edac_p0_pj: f64,
+    /// ADC power coefficient `P0_ADC` (pJ/bit): P = P0 · b · f.
+    pub adc_p0_pj: f64,
+    /// TIA static power (mW).
+    pub tia_mw: f64,
+    /// Photodetector bias power (mW) per PD.
+    pub pd_mw: f64,
+    /// PD relative photocurrent noise std (paper §3.3.2: δn_PD = 0.01).
+    pub pd_noise_std: f64,
+    /// Static phase-bias deviation std (rad) on *unpowered* MZIs: the
+    /// fabricated φ_b ≠ π/2 exactly, so a powered-off weight MZI holds a
+    /// residual weight δw ≈ −sin(δφ_bias) — the Eq.-12 leakage source
+    /// (driven MZIs are programmed closed-loop and don't see it).
+    pub bias_deviation_std: f64,
+    /// MZI extinction ratio in dB (limits IG leakage; typical 25 dB).
+    pub extinction_ratio_db: f64,
+    /// Random phase-noise std on programmed MZI phases (rad).
+    pub phase_noise_std: f64,
+    /// Areas (mm²) of the electronic/photonic periphery.
+    pub area_dac_mm2: f64,
+    pub area_adc_mm2: f64,
+    pub area_tia_mm2: f64,
+    pub area_mzm_mm2: f64,
+    pub area_pd_mm2: f64,
+    /// 1×k1 MMI splitter area per input port (mm²).
+    pub area_mmi_mm2: f64,
+}
+
+impl Default for DeviceLibrary {
+    fn default() -> Self {
+        Self {
+            // ~1 mW static + 50 fJ/bit dynamic MZM (silicon-photonic MZM
+            // class used by [29]).
+            mzm_static_mw: 1.0,
+            mzm_energy_pj: 0.05,
+            // 6-bit @ 5 GHz -> P0 · (64/7) · 5 = 32 mW with P0 = 0.7 pJ.
+            edac_p0_pj: 0.7,
+            // 8-bit @ 5 GHz -> 0.3 · 8 · 5 = 12 mW.
+            adc_p0_pj: 0.3,
+            tia_mw: 1.0,
+            pd_mw: 0.05,
+            pd_noise_std: 0.01,
+            bias_deviation_std: 0.03,
+            extinction_ratio_db: 25.0,
+            phase_noise_std: 0.005,
+            area_dac_mm2: 0.011,
+            area_adc_mm2: 0.002,
+            area_tia_mm2: 0.0005,
+            area_mzm_mm2: 0.024,
+            area_pd_mm2: 1.0e-4,
+            area_mmi_mm2: 0.002,
+        }
+    }
+}
+
+impl DeviceLibrary {
+    /// Linear extinction ratio (power ratio max/min transmission).
+    pub fn extinction_ratio_linear(&self) -> f64 {
+        10f64.powf(self.extinction_ratio_db / 10.0)
+    }
+
+    /// Residual transmission of a "fully off" modulator (1/ER).
+    pub fn leakage_floor(&self) -> f64 {
+        1.0 / self.extinction_ratio_linear()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extinction_ratio_25db() {
+        let lib = DeviceLibrary::default();
+        assert!((lib.extinction_ratio_linear() - 316.2278).abs() < 1e-3);
+        assert!((lib.leakage_floor() - 0.0031623).abs() < 1e-6);
+    }
+}

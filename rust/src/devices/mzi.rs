@@ -1,0 +1,238 @@
+//! Thermo-optic MZI power splitter: the full-range multiplication engine
+//! of the SCATTER crossbar node (§3.3.1, Eq. 1) and the workhorse of the
+//! in-situ light rerouter.
+//!
+//! Transfer function (Eq. 1, with default bias φ_b = π/2):
+//!
+//! ```text
+//!   W(Δφ) = 2 cos²((Δφ + φ_b)/2) − 1 = cos(Δφ + π/2) = −sin(Δφ)
+//! ```
+//!
+//! so Δφ ∈ [−π/2, π/2] spans the full weight range W ∈ [−1, 1] and the
+//! inverse mapping is Δφ = −arcsin(W).
+//!
+//! The *electrical* power to realize Δφ depends on the arm spacing l_s:
+//! heating the active arm also heats the passive arm (intra-MZI crosstalk
+//! coefficient γ(l_s)), shrinking the net phase difference and costing a
+//! power penalty of 1/(1 − γ(l_s)) (§3.3.1, Fig. 4(c)).
+
+use crate::thermal::gamma::GammaModel;
+use std::f64::consts::{FRAC_PI_2, PI};
+
+/// LP-MZI phase-shifter width w_PS (µm).
+pub const LP_PS_WIDTH_UM: f64 = 6.0;
+/// LP-MZI node length l_Y + l_PS + l_DC (µm).
+pub const LP_LENGTH_UM: f64 = 115.0;
+/// Foundry MZI footprint (µm).
+pub const FOUNDRY_WIDTH_UM: f64 = 156.25;
+pub const FOUNDRY_LENGTH_UM: f64 = 550.0;
+/// Pπ of the optimized low-power MZI (mW) — §4.1.
+pub const LP_P_PI_MW: f64 = 15.02;
+/// Pπ of the foundry MZI switch (mW) — §3.3.1.
+pub const FOUNDRY_P_PI_MW: f64 = 30.0;
+
+/// Static spec of an MZI device variant.
+#[derive(Debug, Clone, Copy)]
+pub struct MziSpec {
+    /// Power for a π phase shift with *ideal isolation* (mW).
+    pub p_pi_mw: f64,
+    /// Device length along propagation (µm).
+    pub length_um: f64,
+    /// Phase-shifter width (µm); node width = l_s + width for LP.
+    pub ps_width_um: f64,
+    /// Fixed device width, if the layout is not l_s-parameterized
+    /// (foundry block). `None` -> width = l_s + ps_width_um.
+    pub fixed_width_um: Option<f64>,
+}
+
+impl MziSpec {
+    pub fn low_power() -> Self {
+        Self {
+            p_pi_mw: LP_P_PI_MW,
+            length_um: LP_LENGTH_UM,
+            ps_width_um: LP_PS_WIDTH_UM,
+            fixed_width_um: None,
+        }
+    }
+
+    pub fn foundry() -> Self {
+        Self {
+            p_pi_mw: FOUNDRY_P_PI_MW,
+            length_um: FOUNDRY_LENGTH_UM,
+            ps_width_um: LP_PS_WIDTH_UM,
+            fixed_width_um: Some(FOUNDRY_WIDTH_UM),
+        }
+    }
+
+    pub fn from_kind(kind: crate::config::MziKind) -> Self {
+        match kind {
+            crate::config::MziKind::LowPower => Self::low_power(),
+            crate::config::MziKind::Foundry => Self::foundry(),
+        }
+    }
+
+    /// Node width for a given arm spacing (µm).
+    pub fn width_um(&self, l_s: f64) -> f64 {
+        self.fixed_width_um.unwrap_or(l_s + self.ps_width_um)
+    }
+}
+
+/// An MZI configured at a given arm spacing, with the γ model supplying the
+/// intra-MZI thermal coupling.
+#[derive(Debug, Clone)]
+pub struct Mzi {
+    pub spec: MziSpec,
+    /// Arm (heater) spacing l_s (µm).
+    pub l_s: f64,
+    /// Intra-MZI coupling γ(l_s) — fraction of the heater phase leaking
+    /// into the passive arm.
+    gamma_ls: f64,
+}
+
+impl Mzi {
+    pub fn new(spec: MziSpec, l_s: f64, gamma: &GammaModel) -> Self {
+        let g = gamma.eval(l_s).clamp(0.0, 0.999);
+        Self { spec, l_s, gamma_ls: g }
+    }
+
+    /// Intra-MZI coupling coefficient γ(l_s).
+    pub fn intra_coupling(&self) -> f64 {
+        self.gamma_ls
+    }
+
+    /// Ideal transfer: weight realized by arm phase difference Δφ (Eq. 1).
+    #[inline]
+    pub fn weight_from_phase(delta_phi: f64) -> f64 {
+        -delta_phi.sin()
+    }
+
+    /// Inverse transfer: phase needed for weight w ∈ [−1, 1].
+    #[inline]
+    pub fn phase_from_weight(w: f64) -> f64 {
+        -w.clamp(-1.0, 1.0).asin()
+    }
+
+    /// Power splitter ratio: fraction of input power routed to the bar
+    /// port for phase Δφ, `t = cos²((Δφ + π/2)/2)` ∈ [0, 1].
+    #[inline]
+    pub fn split_ratio(delta_phi: f64) -> f64 {
+        let half = (delta_phi + FRAC_PI_2) / 2.0;
+        half.cos().powi(2)
+    }
+
+    /// Phase for a target bar-port split ratio t ∈ [0, 1]
+    /// (inverse of [`Self::split_ratio`]): Δφ = 2·arccos(√t) − π/2.
+    #[inline]
+    pub fn phase_for_split(t: f64) -> f64 {
+        2.0 * t.clamp(0.0, 1.0).sqrt().acos() - FRAC_PI_2
+    }
+
+    /// Electrical power (mW) to hold phase difference |Δφ|, including the
+    /// intra-MZI penalty: P = (|Δφ|/π)·Pπ / (1 − γ(l_s)).
+    ///
+    /// This is the paper's simulated `P(|Δφ|, l_s)` surface (Fig. 4(c)):
+    /// monotonically decreasing in l_s, linear in |Δφ|.
+    #[inline]
+    pub fn power_mw(&self, delta_phi: f64) -> f64 {
+        (delta_phi.abs() / PI) * self.spec.p_pi_mw / (1.0 - self.gamma_ls)
+    }
+
+    /// Power to realize weight `w`, going through the inverse transfer.
+    #[inline]
+    pub fn power_for_weight_mw(&self, w: f64) -> f64 {
+        self.power_mw(Self::phase_from_weight(w))
+    }
+
+    /// Mean power over a uniform weight distribution w ~ U[−1, 1]:
+    /// E[|arcsin w|] = π/2 − 1, useful for closed-form power estimates.
+    pub fn mean_power_uniform_mw(&self) -> f64 {
+        ((FRAC_PI_2 - 1.0) / PI) * self.spec.p_pi_mw / (1.0 - self.gamma_ls)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thermal::gamma::GammaModel;
+
+    fn lp(l_s: f64) -> Mzi {
+        Mzi::new(MziSpec::low_power(), l_s, &GammaModel::paper())
+    }
+
+    #[test]
+    fn transfer_endpoints() {
+        assert!((Mzi::weight_from_phase(-FRAC_PI_2) - 1.0).abs() < 1e-12);
+        assert!((Mzi::weight_from_phase(0.0)).abs() < 1e-12);
+        assert!((Mzi::weight_from_phase(FRAC_PI_2) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_matches_eq1_form() {
+        // W = 2cos²((Δφ+π/2)/2) − 1 must equal −sin(Δφ)
+        for i in 0..100 {
+            let phi = -FRAC_PI_2 + (i as f64) * (PI / 99.0);
+            let eq1 = 2.0 * ((phi + FRAC_PI_2) / 2.0).cos().powi(2) - 1.0;
+            assert!((eq1 - Mzi::weight_from_phase(phi)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        for i in 0..41 {
+            let w = -1.0 + i as f64 * 0.05;
+            let phi = Mzi::phase_from_weight(w);
+            assert!(phi.abs() <= FRAC_PI_2 + 1e-12);
+            assert!((Mzi::weight_from_phase(phi) - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn split_ratio_roundtrip() {
+        for i in 0..=20 {
+            let t = i as f64 / 20.0;
+            let phi = Mzi::phase_for_split(t);
+            assert!((Mzi::split_ratio(phi) - t).abs() < 1e-12, "t={t}");
+        }
+    }
+
+    #[test]
+    fn power_increases_with_phase_decreases_with_spacing() {
+        let m9 = lp(9.0);
+        let m11 = lp(11.0);
+        assert!(m9.power_mw(0.5) > 0.0);
+        assert!(m9.power_mw(1.0) > m9.power_mw(0.5));
+        // larger arm spacing -> smaller intra coupling -> less power (Fig 4c)
+        assert!(m11.power_mw(1.0) < m9.power_mw(1.0));
+        // symmetric in sign
+        assert_eq!(m9.power_mw(-0.7), m9.power_mw(0.7));
+    }
+
+    #[test]
+    fn pi_power_close_to_p_pi_at_large_spacing() {
+        let m = lp(60.0);
+        // at huge spacing the penalty vanishes
+        assert!((m.power_mw(PI) - LP_P_PI_MW).abs() / LP_P_PI_MW < 0.02);
+    }
+
+    #[test]
+    fn foundry_is_bigger_and_hungrier() {
+        let f = MziSpec::foundry();
+        let l = MziSpec::low_power();
+        assert!(f.p_pi_mw > l.p_pi_mw);
+        assert!(f.length_um > l.length_um);
+        assert!(f.width_um(9.0) > l.width_um(9.0));
+    }
+
+    #[test]
+    fn mean_uniform_power_matches_monte_carlo() {
+        let m = lp(9.0);
+        let mut rng = crate::util::XorShiftRng::new(11);
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += m.power_for_weight_mw(rng.uniform_in(-1.0, 1.0));
+        }
+        let mc = acc / n as f64;
+        assert!((mc - m.mean_power_uniform_mw()).abs() / mc < 0.01);
+    }
+}

@@ -1,0 +1,60 @@
+//! High-speed Mach-Zehnder modulator (MZM) for input encoding (§3.2.1).
+//!
+//! Power: `P_mod = P_mod,static + E_mod · f` (Eq. 2). When input gating is
+//! active on a pruned port the supply is cut, but light still leaks through
+//! at the extinction-ratio floor (the §3.3.2 leakage term that light
+//! redistribution eliminates).
+
+
+#[derive(Debug, Clone, Copy)]
+pub struct Mzm {
+    /// Static bias power (mW).
+    pub static_mw: f64,
+    /// Dynamic modulation energy (pJ per symbol).
+    pub energy_pj: f64,
+    /// Clock in GHz.
+    pub freq_ghz: f64,
+    /// Extinction-ratio leakage floor (fraction of light passing when off).
+    pub leakage_floor: f64,
+}
+
+impl Mzm {
+    pub fn new(static_mw: f64, energy_pj: f64, freq_ghz: f64, leakage_floor: f64) -> Self {
+        Self { static_mw, energy_pj, freq_ghz, leakage_floor }
+    }
+
+    /// Active modulation power in mW (Eq. 2): static + E·f.
+    pub fn power_mw(&self) -> f64 {
+        self.static_mw + self.energy_pj * self.freq_ghz
+    }
+
+    /// Transmission for a target intensity x ∈ [0, 1]: the device cannot
+    /// go below the extinction floor.
+    pub fn transmission(&self, x: f64) -> f64 {
+        x.clamp(0.0, 1.0).max(self.leakage_floor)
+    }
+
+    /// Transmission when the driver is power-gated: the floor.
+    pub fn gated_transmission(&self) -> f64 {
+        self.leakage_floor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_eq2() {
+        let m = Mzm::new(1.0, 0.05, 5.0, 0.003);
+        assert!((m.power_mw() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn leakage_floor_enforced() {
+        let m = Mzm::new(1.0, 0.05, 5.0, 0.003);
+        assert_eq!(m.transmission(0.0), 0.003);
+        assert_eq!(m.transmission(0.5), 0.5);
+        assert_eq!(m.gated_transmission(), 0.003);
+    }
+}

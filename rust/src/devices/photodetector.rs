@@ -1,0 +1,65 @@
+//! Balanced photodetector (BPD) pair at each crossbar node (§3.3.1) and
+//! the photocurrent-noise model of Eq. 11 (`δn_PD`, std 0.01).
+
+use crate::util::XorShiftRng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Photodetector {
+    /// Bias power per PD (mW).
+    pub bias_mw: f64,
+    /// Relative photocurrent noise std (paper: 0.01).
+    pub noise_std: f64,
+    /// Responsivity (A/W) — normalized to 1 in the unitless signal chain.
+    pub responsivity: f64,
+}
+
+impl Photodetector {
+    pub fn new(bias_mw: f64, noise_std: f64) -> Self {
+        Self { bias_mw, noise_std, responsivity: 1.0 }
+    }
+
+    /// Differential detection of the two splitter outputs: photocurrent
+    /// `i = R · (P1 − P2)`, plus one noise draw (Eq. 11's δn_PD).
+    pub fn detect_differential(&self, p1: f64, p2: f64, rng: &mut XorShiftRng) -> f64 {
+        self.responsivity * (p1 - p2) + rng.gaussian_std(self.noise_std)
+    }
+
+    /// Noise-free differential detection.
+    pub fn detect_ideal(&self, p1: f64, p2: f64) -> f64 {
+        self.responsivity * (p1 - p2)
+    }
+
+    /// Power of the balanced pair (2 PDs).
+    pub fn pair_power_mw(&self) -> f64 {
+        2.0 * self.bias_mw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_detection_is_difference() {
+        let pd = Photodetector::new(0.05, 0.01);
+        assert!((pd.detect_ideal(0.8, 0.3) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_detection_statistics() {
+        let pd = Photodetector::new(0.05, 0.01);
+        let mut rng = XorShiftRng::new(5);
+        let n = 50_000;
+        let mut acc = 0.0;
+        let mut acc2 = 0.0;
+        for _ in 0..n {
+            let v = pd.detect_differential(0.6, 0.1, &mut rng) - 0.5;
+            acc += v;
+            acc2 += v * v;
+        }
+        let mean = acc / n as f64;
+        let std = (acc2 / n as f64 - mean * mean).sqrt();
+        assert!(mean.abs() < 2e-4);
+        assert!((std - 0.01).abs() < 5e-4);
+    }
+}

@@ -1,0 +1,49 @@
+//! Transimpedance amplifier (TIA) in the readout chain (§3.2.1, Eq. 4).
+//!
+//! Under light redistribution the TIA gain is reduced by k2'/k2 to restore
+//! the nominal output range (§3.3.2, Eq. 14).
+
+
+#[derive(Debug, Clone, Copy)]
+pub struct Tia {
+    /// Static power (mW).
+    pub power_mw: f64,
+    /// Current gain (unitless in the normalized signal chain).
+    pub gain: f64,
+}
+
+impl Tia {
+    pub fn new(power_mw: f64) -> Self {
+        Self { power_mw, gain: 1.0 }
+    }
+
+    /// Gain rescaled for light redistribution: k2'/k2 (Eq. 14).
+    pub fn with_lr_gain(self, k2_active: usize, k2: usize) -> Self {
+        assert!(k2_active <= k2 && k2 > 0);
+        Self { gain: self.gain * k2_active as f64 / k2 as f64, ..self }
+    }
+
+    /// Amplify a photocurrent into the ADC input range.
+    #[inline]
+    pub fn amplify(&self, i: f64) -> f64 {
+        self.gain * i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_gain_rescale() {
+        let t = Tia::new(1.0).with_lr_gain(12, 16);
+        assert!((t.gain - 0.75).abs() < 1e-12);
+        assert!((t.amplify(2.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lr_gain_rejects_overactive() {
+        let _ = Tia::new(1.0).with_lr_gain(17, 16);
+    }
+}

@@ -1,0 +1,67 @@
+//! # SCATTER — algorithm-circuit co-sparse photonic accelerator
+//!
+//! Rust implementation of the SCATTER accelerator (Yin et al., 2024):
+//! a multi-core incoherent photonic tensor-core (PTC) architecture with
+//! in-situ light redistribution (LR), input gating (IG), output TIA/ADC
+//! gating (OG), a hybrid electronic-optic DAC, and power/crosstalk-aware
+//! structured sparsity.
+//!
+//! This crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — a Pallas kernel (`python/compile/kernels/photonic_mvm.py`)
+//!   models the noisy photonic crossbar MVM and is AOT-lowered to HLO.
+//! * **L2** — a JAX model (`python/compile/model.py`) expresses the CNNs
+//!   as blocked PTC matmuls; `python/compile/dst.py` runs Algorithm 1
+//!   (power/crosstalk-aware dynamic sparse training) at build time.
+//! * **L3** — this crate: the accelerator digital twin (device, thermal,
+//!   power, area models), the cycle-level multi-core scheduler, gating and
+//!   rerouter control, the power-aware mask optimizer, a tokio-based
+//!   batched inference service, and the benchmark harness that regenerates
+//!   every table and figure in the paper's evaluation.
+//!
+//! Python never runs on the request path: the `runtime` module loads the
+//! AOT artifacts (HLO text) via the PJRT C API (`xla` crate) and executes
+//! them natively; the pure-rust `ptc` simulator provides the fast sweep
+//! path and is cross-validated against the artifacts.
+//!
+//! ## Units
+//!
+//! Lengths are **µm**, powers **mW**, areas **mm²**, frequencies **GHz**,
+//! energies per-op **pJ**, total energies **mJ**, phases **radians**.
+
+pub mod area;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod devices;
+pub mod nn;
+pub mod power;
+pub mod ptc;
+pub mod quant;
+pub mod rerouter;
+pub mod runtime;
+pub mod sparsity;
+pub mod thermal;
+pub mod util;
+
+pub use config::AcceleratorConfig;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("configuration error: {0}")]
+    Config(String),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("serialization error: {0}")]
+    Serde(String),
+    #[error("runtime (PJRT/XLA) error: {0}")]
+    Runtime(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

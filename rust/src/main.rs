@@ -1,0 +1,131 @@
+//! SCATTER command-line interface.
+//!
+//! ```text
+//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|all>
+//!         [--samples N] [--models cnn3,vgg8,resnet18]
+//! scatter config [--preset default|dense|foundry] [--out FILE]
+//! scatter gamma  [--heatsim]
+//! scatter info
+//! ```
+//!
+//! (Hand-rolled parsing: the offline toolchain has no clap.)
+
+use scatter::bench::{self, BenchCtx};
+use scatter::config::AcceleratorConfig;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "bench" => cmd_bench(&args[1..]),
+        "config" => cmd_config(&args[1..]),
+        "gamma" => cmd_gamma(&args[1..]),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: scatter <bench|config|gamma|info> [...]\n\
+                 \n\
+                 bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|all>\n\
+                 \x20      [--samples N] [--models cnn3,vgg8,resnet18]\n\
+                 config [--preset default|dense|foundry] [--out FILE]\n\
+                 gamma  [--heatsim]\n\
+                 info"
+            );
+            std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(String::as_str)
+}
+
+fn cmd_bench(args: &[String]) {
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let samples: usize =
+        flag_value(args, "--samples").and_then(|s| s.parse().ok()).unwrap_or(100);
+    let ctx = BenchCtx::new(samples);
+    match which {
+        "table1" => println!("{}", bench::table1::run(&ctx)),
+        "table2" => println!("{}", bench::table2::run(&ctx)),
+        "table3" => {
+            let models = flag_value(args, "--models").unwrap_or("cnn3,vgg8,resnet18");
+            let workloads: Vec<_> = models
+                .split(',')
+                .filter_map(|m| match m.trim() {
+                    "cnn3" => Some(bench::common::Workload::Cnn3),
+                    "vgg8" => Some(bench::common::Workload::Vgg8),
+                    "resnet18" => Some(bench::common::Workload::Resnet18),
+                    _ => None,
+                })
+                .collect();
+            println!("{}", bench::table3::run_models(&ctx, &workloads));
+        }
+        "fig4" => println!("{}", bench::fig4::run(&ctx)),
+        "fig5" => println!("{}", bench::fig5::run(&ctx)),
+        "fig6" => println!("{}", bench::fig6::run(&ctx)),
+        "fig8" => println!("{}", bench::fig8::run(&ctx)),
+        "fig9" => {
+            println!("{}", bench::fig9::run_a(&ctx));
+            println!("{}", bench::fig9::run_b(&ctx));
+        }
+        "fig10" => println!("{}", bench::fig10::run(&ctx)),
+        "all" => bench::run_all(&ctx),
+        other => {
+            eprintln!("unknown bench target '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_config(args: &[String]) {
+    let cfg = match flag_value(args, "--preset").unwrap_or("default") {
+        "dense" => AcceleratorConfig::dense_optimal(),
+        "foundry" => AcceleratorConfig::foundry_baseline(),
+        _ => AcceleratorConfig::default(),
+    };
+    let json = cfg.to_json();
+    match flag_value(args, "--out") {
+        Some(path) => {
+            std::fs::write(path, &json).expect("write config");
+            eprintln!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+}
+
+fn cmd_gamma(args: &[String]) {
+    use scatter::thermal::GammaModel;
+    if args.iter().any(|a| a == "--heatsim") {
+        let (samples, model) = scatter::thermal::heatsim::characterize(
+            &scatter::thermal::heatsim::HeatSimConfig::default(),
+            23.0,
+        );
+        println!("# heat-solver gamma(d) samples and piecewise refit");
+        println!("# d_um  gamma_sample  gamma_fit");
+        for (d, g) in samples {
+            println!("{d:6.1}  {g:.6}  {:.6}", model.eval(d));
+        }
+    } else {
+        let g = GammaModel::paper();
+        println!("# paper Eq.-10 gamma(d)");
+        for (d, v) in g.sample(60.0, 1.0) {
+            println!("{d:6.1}  {v:.6}");
+        }
+    }
+}
+
+fn cmd_info() {
+    let cfg = AcceleratorConfig::default();
+    let area = scatter::area::AreaModel::with_defaults(cfg.clone());
+    let power = scatter::power::PowerModel::with_defaults(cfg.clone());
+    println!("SCATTER digital twin");
+    println!("  default config: R={} C={} k1={} k2={} r={} c={} f={} GHz",
+        cfg.tiles_r, cfg.cores_c, cfg.k1, cfg.k2, cfg.share_r, cfg.share_c, cfg.freq_ghz);
+    println!("  chip area     : {:.2} mm^2", area.total_mm2());
+    println!("  dense power   : {:.2} W (closed form)", power.dense(None).total_w());
+    match scatter::runtime::ArtifactRuntime::new("artifacts") {
+        Ok(rt) => println!("  PJRT platform : {}", rt.platform()),
+        Err(e) => println!("  PJRT platform : unavailable ({e})"),
+    }
+}

@@ -1,0 +1,135 @@
+//! im2col lowering of 2-D convolution (§3.3.5: the unfolded weight matrix
+//! is what gets partitioned into rk1×ck2 chunks and mapped onto PTCs).
+
+use super::tensor::Tensor;
+
+/// Unfold a CHW input into the patch matrix for a k×k convolution with
+/// given stride and zero padding.
+///
+/// Returns (patches, out_h, out_w) where `patches` is row-major
+/// `(C·k·k) × (out_h·out_w)`: one column per output pixel.
+pub fn im2col(
+    input: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<f64>, usize, usize) {
+    assert_eq!(input.ndim(), 3, "im2col expects CHW");
+    let (c, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+    assert!(h + 2 * pad >= k && w + 2 * pad >= k, "kernel larger than padded input");
+    let out_h = (h + 2 * pad - k) / stride + 1;
+    let out_w = (w + 2 * pad - k) / stride + 1;
+    let n_cols = out_h * out_w;
+    let n_rows = c * k * k;
+    let mut patches = vec![0.0f64; n_rows * n_cols];
+    for ci in 0..c {
+        for ki in 0..k {
+            for kj in 0..k {
+                let row = (ci * k + ki) * k + kj;
+                let dst = &mut patches[row * n_cols..(row + 1) * n_cols];
+                let mut col = 0usize;
+                for oy in 0..out_h {
+                    let iy = oy * stride + ki;
+                    for ox in 0..out_w {
+                        let ix = ox * stride + kj;
+                        // account for padding offset
+                        let v = if iy >= pad && ix >= pad && iy - pad < h && ix - pad < w {
+                            input.at3(ci, iy - pad, ix - pad)
+                        } else {
+                            0.0
+                        };
+                        dst[col] = v;
+                        col += 1;
+                    }
+                }
+            }
+        }
+    }
+    (patches, out_h, out_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1_kernel() {
+        let t = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let (p, oh, ow) = im2col(&t, 1, 1, 0);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(p, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn same_conv_shape() {
+        let t = Tensor::zeros(&[3, 8, 8]);
+        let (p, oh, ow) = im2col(&t, 3, 1, 1);
+        assert_eq!((oh, ow), (8, 8));
+        assert_eq!(p.len(), 3 * 9 * 64);
+    }
+
+    #[test]
+    fn stride_two_downsamples() {
+        let t = Tensor::zeros(&[1, 8, 8]);
+        let (_, oh, ow) = im2col(&t, 3, 2, 1);
+        assert_eq!((oh, ow), (4, 4));
+    }
+
+    #[test]
+    fn known_3x3_patch_values() {
+        // 1 channel 3x3 input, 3x3 kernel, no pad -> single column = input
+        let t = Tensor::from_vec(&[1, 3, 3], (1..=9).map(|x| x as f64).collect());
+        let (p, oh, ow) = im2col(&t, 3, 1, 0);
+        assert_eq!((oh, ow), (1, 1));
+        assert_eq!(p, (1..=9).map(|x| x as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn padding_zeros_at_border() {
+        let t = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let (p, oh, ow) = im2col(&t, 3, 1, 1);
+        assert_eq!((oh, ow), (2, 2));
+        // row 0 = kernel position (0,0): for output (0,0) that's input(-1,-1) = 0
+        assert_eq!(p[0], 0.0);
+        // center kernel position (1,1), output (0,0) -> input (0,0) = 1
+        let row_center = (0 * 3 + 1) * 3 + 1;
+        assert_eq!(p[row_center * 4], 1.0);
+    }
+
+    #[test]
+    fn conv_via_im2col_matches_direct() {
+        // direct 2d conv vs im2col + dot product
+        let mut rng = crate::util::XorShiftRng::new(5);
+        let mut data = vec![0.0; 2 * 5 * 5];
+        rng.fill_uniform(&mut data, -1.0, 1.0);
+        let input = Tensor::from_vec(&[2, 5, 5], data);
+        let mut kern = vec![0.0; 2 * 3 * 3];
+        rng.fill_uniform(&mut kern, -1.0, 1.0);
+        let (p, oh, ow) = im2col(&input, 3, 1, 1);
+        // im2col result for output channel 0
+        let n_cols = oh * ow;
+        let mut y = vec![0.0; n_cols];
+        for r in 0..kern.len() {
+            for col in 0..n_cols {
+                y[col] += kern[r] * p[r * n_cols + col];
+            }
+        }
+        // direct convolution at a few positions
+        for (oy, ox) in [(0usize, 0usize), (2, 3), (4, 4)] {
+            let mut acc = 0.0;
+            for ci in 0..2 {
+                for ki in 0..3 {
+                    for kj in 0..3 {
+                        let iy = oy as isize + ki as isize - 1;
+                        let ix = ox as isize + kj as isize - 1;
+                        if iy >= 0 && ix >= 0 && iy < 5 && ix < 5 {
+                            acc += kern[(ci * 3 + ki) * 3 + kj]
+                                * input.at3(ci, iy as usize, ix as usize);
+                        }
+                    }
+                }
+            }
+            assert!((y[oy * ow + ox] - acc).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Inference layers and the model container.
+//!
+//! Every matmul-bearing layer (conv, linear) funnels through the
+//! [`MatmulEngine`](super::MatmulEngine), so the same model definition runs
+//! exactly (reference) or photonically (digital twin with masks, noise and
+//! energy accounting).
+
+use super::im2col::im2col;
+use super::tensor::Tensor;
+use super::MatmulEngine;
+
+/// A layer of the inference graph.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// 2-D convolution; weight row-major `out_c × (in_c·k·k)`.
+    Conv2d {
+        name: String,
+        out_c: usize,
+        in_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        weight: Vec<f64>,
+        bias: Vec<f64>,
+    },
+    /// Fully connected; weight `out × in`.
+    Linear { name: String, out_dim: usize, in_dim: usize, weight: Vec<f64>, bias: Vec<f64> },
+    /// Folded batch-norm: y = scale·x + shift, per channel.
+    BatchNorm { scale: Vec<f64>, shift: Vec<f64> },
+    Relu,
+    /// Average pool k×k, stride k.
+    AvgPool { k: usize },
+    /// Max pool k×k, stride k.
+    MaxPool { k: usize },
+    /// Residual block: body layers + optional projection shortcut,
+    /// output = relu(body(x) + shortcut(x)).
+    Residual { body: Vec<Layer>, shortcut: Vec<Layer> },
+    Flatten,
+}
+
+impl Layer {
+    /// Matmul-bearing layers expose (name, weight, fan-out, fan-in).
+    pub fn matmul_shape(&self) -> Option<(&str, usize, usize)> {
+        match self {
+            Layer::Conv2d { name, out_c, in_c, k, .. } => Some((name, *out_c, in_c * k * k)),
+            Layer::Linear { name, out_dim, in_dim, .. } => Some((name, *out_dim, *in_dim)),
+            _ => None,
+        }
+    }
+
+    pub fn forward(&self, x: Tensor, engine: &mut dyn MatmulEngine) -> Tensor {
+        match self {
+            Layer::Conv2d { name, out_c, in_c, k, stride, pad, weight, bias } => {
+                assert_eq!(x.shape[0], *in_c, "conv {name}: channel mismatch");
+                let (patches, oh, ow) = im2col(&x, *k, *stride, *pad);
+                let in_dim = in_c * k * k;
+                let n_cols = oh * ow;
+                let mut y = engine.matmul(name, weight, &patches, *out_c, in_dim, n_cols);
+                for (o, b) in bias.iter().enumerate() {
+                    for v in &mut y[o * n_cols..(o + 1) * n_cols] {
+                        *v += b;
+                    }
+                }
+                Tensor::from_vec(&[*out_c, oh, ow], y)
+            }
+            Layer::Linear { name, out_dim, in_dim, weight, bias } => {
+                let n = x.numel();
+                let x = if x.ndim() > 1 { x.reshape(&[n]) } else { x };
+                assert_eq!(x.numel(), *in_dim, "linear {name}: input dim");
+                let mut y = engine.matmul(name, weight, &x.data, *out_dim, *in_dim, 1);
+                for (o, b) in bias.iter().enumerate() {
+                    y[o] += b;
+                }
+                Tensor::from_vec(&[*out_dim], y)
+            }
+            Layer::BatchNorm { scale, shift } => {
+                let c = x.shape[0];
+                assert_eq!(scale.len(), c);
+                let hw = x.numel() / c;
+                let mut out = x;
+                for ci in 0..c {
+                    for v in &mut out.data[ci * hw..(ci + 1) * hw] {
+                        *v = *v * scale[ci] + shift[ci];
+                    }
+                }
+                out
+            }
+            Layer::Relu => x.map(|v| v.max(0.0)),
+            Layer::AvgPool { k } => pool(x, *k, true),
+            Layer::MaxPool { k } => pool(x, *k, false),
+            Layer::Residual { body, shortcut } => {
+                let mut main = x.clone();
+                for l in body {
+                    main = l.forward(main, engine);
+                }
+                let mut skip = x;
+                for l in shortcut {
+                    skip = l.forward(skip, engine);
+                }
+                main.add(&skip).map(|v| v.max(0.0))
+            }
+            Layer::Flatten => {
+                let n = x.numel();
+                x.reshape(&[n])
+            }
+        }
+    }
+}
+
+fn pool(x: Tensor, k: usize, avg: bool) -> Tensor {
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (oh, ow) = (h / k, w / k);
+    assert!(oh > 0 && ow > 0, "pool window larger than input");
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = if avg { 0.0 } else { f64::NEG_INFINITY };
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let v = x.at3(ci, oy * k + dy, ox * k + dx);
+                        if avg {
+                            acc += v;
+                        } else if v > acc {
+                            acc = v;
+                        }
+                    }
+                }
+                if avg {
+                    acc /= (k * k) as f64;
+                }
+                out.set3(ci, oy, ox, acc);
+            }
+        }
+    }
+    out
+}
+
+/// A sequential model with a name and input shape.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    pub fn forward(&self, x: Tensor, engine: &mut dyn MatmulEngine) -> Tensor {
+        assert_eq!(x.shape, self.input_shape, "model {} input shape", self.name);
+        let mut cur = x;
+        for l in &self.layers {
+            cur = l.forward(cur, engine);
+        }
+        cur
+    }
+
+    /// Predicted class.
+    pub fn predict(&self, x: Tensor, engine: &mut dyn MatmulEngine) -> usize {
+        self.forward(x, engine).argmax()
+    }
+
+    /// All matmul layers, flattened through residual blocks:
+    /// (name, out_dim, in_dim).
+    pub fn matmul_layers(&self) -> Vec<(String, usize, usize)> {
+        fn walk(layers: &[Layer], out: &mut Vec<(String, usize, usize)>) {
+            for l in layers {
+                if let Some((n, o, i)) = l.matmul_shape() {
+                    out.push((n.to_string(), o, i));
+                }
+                if let Layer::Residual { body, shortcut } = l {
+                    walk(body, out);
+                    walk(shortcut, out);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.layers, &mut out);
+        out
+    }
+
+    /// Visit every matmul layer's weights mutably (for loading / masking).
+    pub fn visit_weights_mut(&mut self, mut f: impl FnMut(&str, &mut Vec<f64>, &mut Vec<f64>)) {
+        fn walk(
+            layers: &mut [Layer],
+            f: &mut impl FnMut(&str, &mut Vec<f64>, &mut Vec<f64>),
+        ) {
+            for l in layers.iter_mut() {
+                match l {
+                    Layer::Conv2d { name, weight, bias, .. }
+                    | Layer::Linear { name, weight, bias, .. } => {
+                        let n = name.clone();
+                        f(&n, weight, bias);
+                    }
+                    Layer::Residual { body, shortcut } => {
+                        walk(body, f);
+                        walk(shortcut, f);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        walk(&mut self.layers, &mut f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ExactEngine;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weight passes through
+        let l = Layer::Conv2d {
+            name: "c".into(),
+            out_c: 1,
+            in_c: 1,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            weight: vec![1.0],
+            bias: vec![0.0],
+        };
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, -2.0, 3.0, 4.0]);
+        let y = l.forward(x.clone(), &mut ExactEngine);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let y = Layer::Relu.forward(
+            Tensor::from_vec(&[1, 1, 2], vec![-1.0, 2.0]),
+            &mut ExactEngine,
+        );
+        assert_eq!(y.data, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn avgpool_and_maxpool() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let a = Layer::AvgPool { k: 2 }.forward(x.clone(), &mut ExactEngine);
+        assert_eq!(a.data, vec![2.5]);
+        let m = Layer::MaxPool { k: 2 }.forward(x, &mut ExactEngine);
+        assert_eq!(m.data, vec![4.0]);
+    }
+
+    #[test]
+    fn linear_with_bias() {
+        let l = Layer::Linear {
+            name: "fc".into(),
+            out_dim: 2,
+            in_dim: 2,
+            weight: vec![1.0, 0.0, 0.0, 1.0],
+            bias: vec![0.5, -0.5],
+        };
+        let y = l.forward(Tensor::from_vec(&[2], vec![1.0, 2.0]), &mut ExactEngine);
+        assert_eq!(y.data, vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn residual_identity_shortcut() {
+        // body = 0-weight conv -> relu(0 + x) = relu(x)
+        let body = vec![Layer::Conv2d {
+            name: "rb".into(),
+            out_c: 1,
+            in_c: 1,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            weight: vec![0.0],
+            bias: vec![0.0],
+        }];
+        let l = Layer::Residual { body, shortcut: vec![] };
+        let x = Tensor::from_vec(&[1, 1, 2], vec![-3.0, 5.0]);
+        let y = l.forward(x, &mut ExactEngine);
+        assert_eq!(y.data, vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn batchnorm_per_channel() {
+        let l = Layer::BatchNorm { scale: vec![2.0, 0.5], shift: vec![1.0, 0.0] };
+        let x = Tensor::from_vec(&[2, 1, 2], vec![1.0, 2.0, 4.0, 8.0]);
+        let y = l.forward(x, &mut ExactEngine);
+        assert_eq!(y.data, vec![3.0, 5.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn model_matmul_layer_listing() {
+        let m = crate::nn::models::cnn3();
+        let names: Vec<String> = m.matmul_layers().iter().map(|(n, _, _)| n.clone()).collect();
+        assert_eq!(names, vec!["conv1", "conv2", "fc"]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Load python-trained weight/mask bundles.
+//!
+//! `python/compile/dst.py` exports, per model, a directory containing
+//! `weights.json` — `{layer: {"w": [...], "b": [...]}}` — and
+//! `masks.json` — `{layer: {"p":..,"q":..,"chunks":[{"row":[..],"col":[..]},..]}}`.
+//! JSON keeps the bundle human-inspectable; sizes here are small (<50 MB).
+
+use crate::nn::Model;
+use crate::sparsity::LayerMask;
+use crate::util::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed weight bundle.
+#[derive(Debug, Default)]
+pub struct WeightBundle {
+    pub weights: BTreeMap<String, (Vec<f64>, Vec<f64>)>,
+}
+
+impl WeightBundle {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(Error::Serde)?;
+        let obj = match v {
+            Json::Obj(m) => m,
+            _ => return Err(Error::Serde("weights.json must be an object".into())),
+        };
+        let mut weights = BTreeMap::new();
+        for (name, entry) in obj {
+            let w = entry
+                .get("w")
+                .and_then(Json::f64_vec)
+                .ok_or_else(|| Error::Serde(format!("layer {name}: missing 'w'")))?;
+            let b = entry.get("b").and_then(Json::f64_vec).unwrap_or_default();
+            weights.insert(name, (w, b));
+        }
+        Ok(Self { weights })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Install into a model; layers missing from the bundle keep their
+    /// random init. Returns the number of layers loaded.
+    pub fn install(&self, model: &mut Model) -> usize {
+        let mut n = 0;
+        model.visit_weights_mut(|name, w, b| {
+            if let Some((nw, nb)) = self.weights.get(name) {
+                assert_eq!(nw.len(), w.len(), "layer {name}: weight size mismatch");
+                w.copy_from_slice(nw);
+                if !nb.is_empty() {
+                    assert_eq!(nb.len(), b.len(), "layer {name}: bias size mismatch");
+                    b.copy_from_slice(nb);
+                }
+                n += 1;
+            }
+        });
+        n
+    }
+}
+
+/// Parse a masks.json bundle into per-layer masks.
+pub fn parse_masks(text: &str) -> Result<BTreeMap<String, LayerMask>> {
+    let v = Json::parse(text).map_err(Error::Serde)?;
+    let obj = match v {
+        Json::Obj(m) => m,
+        _ => return Err(Error::Serde("masks.json must be an object".into())),
+    };
+    let mut out = BTreeMap::new();
+    for (name, entry) in obj {
+        out.insert(name, LayerMask::from_json(&entry)?);
+    }
+    Ok(out)
+}
+
+pub fn load_masks(path: &Path) -> Result<BTreeMap<String, LayerMask>> {
+    parse_masks(&std::fs::read_to_string(path)?)
+}
+
+/// Write a masks bundle (used by the rust-side DST refinement and tests).
+pub fn masks_to_json(masks: &BTreeMap<String, LayerMask>) -> String {
+    let obj: BTreeMap<String, Json> =
+        masks.iter().map(|(k, v)| (k.clone(), v.to_json())).collect();
+    Json::Obj(obj).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::ChunkMask;
+
+    #[test]
+    fn parse_and_install_weights() {
+        let mut model = crate::nn::models::cnn3();
+        let shapes = model.matmul_layers();
+        let (name, o, i) = shapes[0].clone();
+        let text = format!(
+            "{{\"{name}\": {{\"w\": [{}], \"b\": [{}]}}}}",
+            vec!["0.5"; o * i].join(","),
+            vec!["0.1"; o].join(","),
+        );
+        let bundle = WeightBundle::parse(&text).unwrap();
+        assert_eq!(bundle.install(&mut model), 1);
+        model.visit_weights_mut(|n, w, b| {
+            if n == name {
+                assert!(w.iter().all(|&x| x == 0.5));
+                assert!(b.iter().all(|&x| x == 0.1));
+            }
+        });
+    }
+
+    #[test]
+    fn masks_roundtrip() {
+        let mut masks = BTreeMap::new();
+        masks.insert(
+            "conv1".to_string(),
+            LayerMask {
+                p: 1,
+                q: 2,
+                chunks: vec![
+                    ChunkMask::new(vec![true, false], vec![true, true]),
+                    ChunkMask::new(vec![false, true], vec![false, true]),
+                ],
+            },
+        );
+        let s = masks_to_json(&masks);
+        let back = parse_masks(&s).unwrap();
+        assert_eq!(back["conv1"].chunks, masks["conv1"].chunks);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(WeightBundle::parse("[1,2]").is_err());
+        assert!(parse_masks("{\"l\": {\"p\":1,\"q\":1}}").is_err());
+    }
+}

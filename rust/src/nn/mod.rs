@@ -1,0 +1,94 @@
+//! Minimal inference-grade neural-network substrate.
+//!
+//! The paper evaluates CNN-3 (FashionMNIST), VGG-8 (CIFAR-10) and
+//! ResNet-18 (CIFAR-100). Training happens at build time in JAX
+//! (`python/compile/dst.py`); this module executes the *deployed* models
+//! — conv lowered through im2col into chunked matmuls — against a
+//! pluggable [`MatmulEngine`], which is either the exact CPU reference or
+//! the photonic digital twin (`coordinator::PhotonicEngine`).
+
+pub mod fit;
+pub mod im2col;
+pub mod layers;
+pub mod loader;
+pub mod models;
+pub mod tensor;
+
+pub use fit::fit_prototype_readout;
+pub use im2col::im2col;
+pub use layers::{Layer, Model};
+pub use models::{cnn3, resnet18, vgg8};
+pub use tensor::Tensor;
+
+/// A matrix-multiplication backend: computes `Y = W · X` where W is
+/// `out_dim × in_dim` (row-major) and X is `in_dim × n_cols` (row-major).
+///
+/// `layer` names the layer for energy accounting; photonic engines apply
+/// that layer's sparsity mask and non-idealities.
+pub trait MatmulEngine {
+    fn matmul(
+        &mut self,
+        layer: &str,
+        w: &[f64],
+        x: &[f64],
+        out_dim: usize,
+        in_dim: usize,
+        n_cols: usize,
+    ) -> Vec<f64>;
+}
+
+/// Exact f64 reference engine.
+#[derive(Debug, Default, Clone)]
+pub struct ExactEngine;
+
+impl MatmulEngine for ExactEngine {
+    fn matmul(
+        &mut self,
+        _layer: &str,
+        w: &[f64],
+        x: &[f64],
+        out_dim: usize,
+        in_dim: usize,
+        n_cols: usize,
+    ) -> Vec<f64> {
+        assert_eq!(w.len(), out_dim * in_dim);
+        assert_eq!(x.len(), in_dim * n_cols);
+        let mut y = vec![0.0; out_dim * n_cols];
+        for o in 0..out_dim {
+            let wrow = &w[o * in_dim..(o + 1) * in_dim];
+            for (i, &wv) in wrow.iter().enumerate() {
+                if wv == 0.0 {
+                    continue;
+                }
+                let xrow = &x[i * n_cols..(i + 1) * n_cols];
+                let yrow = &mut y[o * n_cols..(o + 1) * n_cols];
+                for (yv, &xv) in yrow.iter_mut().zip(xrow) {
+                    *yv += wv * xv;
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_engine_small() {
+        let mut e = ExactEngine;
+        // W = [[1,2],[3,4]], X = [[1],[1]]
+        let y = e.matmul("t", &[1.0, 2.0, 3.0, 4.0], &[1.0, 1.0], 2, 2, 1);
+        assert_eq!(y, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn exact_engine_multi_col() {
+        let mut e = ExactEngine;
+        // W = [[1,0],[0,1]], X = 2x3
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let y = e.matmul("t", &[1.0, 0.0, 0.0, 1.0], &x, 2, 2, 3);
+        assert_eq!(y, x);
+    }
+}

@@ -1,0 +1,192 @@
+//! The paper's model zoo (§4.1):
+//!
+//! * CNN-3 "C64K3-C64K3-Pool5-FC10" on 1×28×28 (FashionMNIST-shaped);
+//! * VGG-8 on 3×32×32 (CIFAR-10-shaped, 10 classes);
+//! * ResNet-18 on 3×32×32 (CIFAR-100-shaped, 100 classes).
+//!
+//! Weights are deterministic Kaiming-style random at construction and are
+//! replaced by trained parameters via `loader::load_weights` when a
+//! python-trained bundle is available.
+
+use super::layers::{Layer, Model};
+use crate::util::XorShiftRng;
+
+fn kaiming(rng: &mut XorShiftRng, fan_in: usize, n: usize) -> Vec<f64> {
+    let std = (2.0 / fan_in as f64).sqrt();
+    (0..n).map(|_| rng.gaussian_std(std)).collect()
+}
+
+fn conv(
+    rng: &mut XorShiftRng,
+    name: &str,
+    in_c: usize,
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Layer {
+    let fan_in = in_c * k * k;
+    Layer::Conv2d {
+        name: name.into(),
+        out_c,
+        in_c,
+        k,
+        stride,
+        pad,
+        weight: kaiming(rng, fan_in, out_c * fan_in),
+        bias: vec![0.0; out_c],
+    }
+}
+
+fn linear(rng: &mut XorShiftRng, name: &str, in_dim: usize, out_dim: usize) -> Layer {
+    Layer::Linear {
+        name: name.into(),
+        out_dim,
+        in_dim,
+        weight: kaiming(rng, in_dim, out_dim * in_dim),
+        bias: vec![0.0; out_dim],
+    }
+}
+
+/// CNN-3: C64K3 — C64K3 — Pool5 — FC10 on 1×28×28.
+pub fn cnn3() -> Model {
+    let mut rng = XorShiftRng::new(0xC3);
+    // stride-2 convs keep the FC small while preserving the paper's shape
+    let layers = vec![
+        conv(&mut rng, "conv1", 1, 64, 3, 1, 1),
+        Layer::Relu,
+        conv(&mut rng, "conv2", 64, 64, 3, 1, 1),
+        Layer::Relu,
+        Layer::AvgPool { k: 5 }, // 28 -> 5 (floor), paper's Pool5
+        Layer::Flatten,
+        linear(&mut rng, "fc", 64 * 5 * 5, 10),
+    ];
+    Model { name: "cnn3-fmnist".into(), input_shape: vec![1, 28, 28], layers }
+}
+
+/// VGG-8: 6 conv + 2 FC on 3×32×32, 10 classes.
+pub fn vgg8() -> Model {
+    let mut rng = XorShiftRng::new(0x1108);
+    let layers = vec![
+        conv(&mut rng, "conv1", 3, 64, 3, 1, 1),
+        Layer::Relu,
+        conv(&mut rng, "conv2", 64, 64, 3, 1, 1),
+        Layer::Relu,
+        Layer::MaxPool { k: 2 }, // 16
+        conv(&mut rng, "conv3", 64, 128, 3, 1, 1),
+        Layer::Relu,
+        conv(&mut rng, "conv4", 128, 128, 3, 1, 1),
+        Layer::Relu,
+        Layer::MaxPool { k: 2 }, // 8
+        conv(&mut rng, "conv5", 128, 256, 3, 1, 1),
+        Layer::Relu,
+        conv(&mut rng, "conv6", 256, 256, 3, 1, 1),
+        Layer::Relu,
+        Layer::MaxPool { k: 2 }, // 4
+        Layer::AvgPool { k: 4 }, // global -> 1x1
+        Layer::Flatten,
+        linear(&mut rng, "fc1", 256, 128),
+        Layer::Relu,
+        linear(&mut rng, "fc2", 128, 10),
+    ];
+    Model { name: "vgg8-cifar10".into(), input_shape: vec![3, 32, 32], layers }
+}
+
+fn basic_block(
+    rng: &mut XorShiftRng,
+    name: &str,
+    in_c: usize,
+    out_c: usize,
+    stride: usize,
+) -> Layer {
+    let body = vec![
+        conv(rng, &format!("{name}.conv1"), in_c, out_c, 3, stride, 1),
+        Layer::Relu,
+        conv(rng, &format!("{name}.conv2"), out_c, out_c, 3, 1, 1),
+    ];
+    let shortcut = if stride != 1 || in_c != out_c {
+        vec![conv(rng, &format!("{name}.down"), in_c, out_c, 1, stride, 0)]
+    } else {
+        vec![]
+    };
+    Layer::Residual { body, shortcut }
+}
+
+/// ResNet-18 (CIFAR variant): conv3x3-64 stem, 4 stages × 2 BasicBlocks
+/// (64/128/256/512), global average pool, FC-100.
+pub fn resnet18() -> Model {
+    let mut rng = XorShiftRng::new(0x2E18);
+    let mut layers = vec![conv(&mut rng, "stem", 3, 64, 3, 1, 1), Layer::Relu];
+    let stages = [(64usize, 64usize, 1usize), (64, 128, 2), (128, 256, 2), (256, 512, 2)];
+    for (si, &(in_c, out_c, stride)) in stages.iter().enumerate() {
+        layers.push(basic_block(&mut rng, &format!("s{si}b0"), in_c, out_c, stride));
+        layers.push(basic_block(&mut rng, &format!("s{si}b1"), out_c, out_c, 1));
+    }
+    layers.push(Layer::AvgPool { k: 4 }); // 32/2/2/2 = 4 -> 1x1
+    layers.push(Layer::Flatten);
+    layers.push(linear(&mut rng, "fc", 512, 100));
+    Model { name: "resnet18-cifar100".into(), input_shape: vec![3, 32, 32], layers }
+}
+
+/// Look a model up by name.
+pub fn by_name(name: &str) -> Option<Model> {
+    match name {
+        "cnn3" | "cnn3-fmnist" => Some(cnn3()),
+        "vgg8" | "vgg8-cifar10" => Some(vgg8()),
+        "resnet18" | "resnet18-cifar100" => Some(resnet18()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{ExactEngine, Tensor};
+
+    #[test]
+    fn cnn3_forward_shape() {
+        let m = cnn3();
+        let y = m.forward(Tensor::zeros(&[1, 28, 28]), &mut ExactEngine);
+        assert_eq!(y.shape, vec![10]);
+    }
+
+    #[test]
+    fn vgg8_forward_shape() {
+        let m = vgg8();
+        let y = m.forward(Tensor::zeros(&[3, 32, 32]), &mut ExactEngine);
+        assert_eq!(y.shape, vec![10]);
+    }
+
+    #[test]
+    fn resnet18_forward_shape() {
+        let m = resnet18();
+        let y = m.forward(Tensor::zeros(&[3, 32, 32]), &mut ExactEngine);
+        assert_eq!(y.shape, vec![100]);
+    }
+
+    #[test]
+    fn resnet18_has_20_matmul_layers() {
+        // stem + 16 block convs + 3 downsamples + fc = 21
+        let m = resnet18();
+        assert_eq!(m.matmul_layers().len(), 21);
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        let a = cnn3();
+        let b = cnn3();
+        let (wa, wb) = match (&a.layers[0], &b.layers[0]) {
+            (Layer::Conv2d { weight: wa, .. }, Layer::Conv2d { weight: wb, .. }) => (wa, wb),
+            _ => panic!(),
+        };
+        assert_eq!(wa, wb);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("cnn3").is_some());
+        assert!(by_name("vgg8").is_some());
+        assert!(by_name("resnet18").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,112 @@
+//! A tiny row-major f64 tensor — just enough for CNN inference.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape in place (must preserve element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// CHW accessor for 3-D tensors.
+    #[inline]
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> f64 {
+        debug_assert_eq!(self.ndim(), 3);
+        let (_, hh, ww) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(c * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, c: usize, h: usize, w: usize, v: f64) {
+        let (_, hh, ww) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(c * hh + h) * ww + w] = v;
+    }
+
+    pub fn map(mut self, f: impl Fn(f64) -> f64) -> Self {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+        self
+    }
+
+    /// Elementwise add (shapes must match) — used for residual connections.
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape, "residual shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set3(1, 2, 3, 5.0);
+        assert_eq!(t.at3(1, 2, 3), 5.0);
+        assert_eq!(t.numel(), 24);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).reshape(&[4]);
+        assert_eq!(t.shape, vec![4]);
+        assert_eq!(t.data[3], 4.0);
+    }
+
+    #[test]
+    fn residual_add() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![0.5, 0.5]);
+        assert_eq!(a.add(&b).data, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        let t = Tensor::from_vec(&[4], vec![0.1, 3.0, -1.0, 2.0]);
+        assert_eq!(t.argmax(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Energy accounting over a model's execution (§4.1 evaluation metrics):
+//!
+//! ```text
+//!   E_tot = Σ_l Σ_i Σ_j  P^l_{i,j} · Cyc^l_{i,j} / f
+//!   P_avg = E_tot / (Cyc_tot / f)
+//! ```
+//!
+//! A row-column sparse chunk takes the *same* 1 cycle as a dense chunk
+//! (the paper's clarification), so PAP = P_avg · Area is equivalent to
+//! TOPS/W/mm² ranking at fixed speed.
+
+use super::model::PowerBreakdown;
+
+#[derive(Debug, Clone, Default)]
+pub struct EnergyAccumulator {
+    total_cycle_mw: f64,
+    total_cycles: u64,
+    /// Wall-clock cycles: chunk waves overlap across slots, so wall time
+    /// is shorter than the per-chunk cycle sum. 0 ⇒ fall back to the sum.
+    wall_cycles: u64,
+    per_layer: Vec<(String, f64, u64)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    /// Total energy in mJ.
+    pub energy_mj: f64,
+    /// Average power in W.
+    pub p_avg_w: f64,
+    /// Total cycles.
+    pub cycles: u64,
+    /// Wall time in ms at the configured clock.
+    pub time_ms: f64,
+    /// Per-layer (name, energy mJ, cycles).
+    pub per_layer: Vec<(String, f64, u64)>,
+}
+
+impl EnergyAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `cycles` cycles of execution at the given power draw.
+    pub fn record(&mut self, layer: &str, power: &PowerBreakdown, cycles: u64) {
+        let mw_cycles = power.total_mw() * cycles as f64;
+        self.total_cycle_mw += mw_cycles;
+        self.total_cycles += cycles;
+        match self.per_layer.iter_mut().find(|(n, _, _)| n == layer) {
+            Some(entry) => {
+                entry.1 += mw_cycles;
+                entry.2 += cycles;
+            }
+            None => self.per_layer.push((layer.to_string(), mw_cycles, cycles)),
+        }
+    }
+
+    /// Record wall-clock progress (e.g. `LayerSchedule::wall_cycles`).
+    pub fn advance_wall(&mut self, cycles: u64) {
+        self.wall_cycles += cycles;
+    }
+
+    /// Finalize at clock `freq_ghz`.
+    pub fn report(&self, freq_ghz: f64) -> EnergyReport {
+        // mW · cycles / (GHz) = mW · ns = pJ;  pJ → mJ is 1e-9.
+        let to_mj = |mw_cycles: f64| mw_cycles / freq_ghz * 1e-9;
+        let energy_mj = to_mj(self.total_cycle_mw);
+        let clock_cycles = if self.wall_cycles > 0 { self.wall_cycles } else { self.total_cycles };
+        let time_ms = clock_cycles as f64 / freq_ghz * 1e-6;
+        let p_avg_w = if clock_cycles == 0 {
+            0.0
+        } else {
+            // mJ / ms = W
+            energy_mj / time_ms
+        };
+        EnergyReport {
+            energy_mj,
+            p_avg_w,
+            cycles: clock_cycles,
+            time_ms,
+            per_layer: self
+                .per_layer
+                .iter()
+                .map(|(n, mwc, cyc)| (n.clone(), to_mj(*mwc), *cyc))
+                .collect(),
+        }
+    }
+}
+
+/// Power-area product (W·mm²) — the paper's scalar design objective.
+pub fn pap(p_avg_w: f64, area_mm2: f64) -> f64 {
+    p_avg_w * area_mm2
+}
+
+/// Area-energy efficiency in TOPS/W/mm² for a (k1,k2) MAC array running at
+/// `freq_ghz` with `n_cores` cores: ops/cycle = 2·k1·k2·cores.
+pub fn tops_per_w_mm2(
+    k1: usize,
+    k2: usize,
+    n_cores: usize,
+    freq_ghz: f64,
+    p_avg_w: f64,
+    area_mm2: f64,
+) -> f64 {
+    let ops_per_s = 2.0 * (k1 * k2 * n_cores) as f64 * freq_ghz * 1e9;
+    ops_per_s / 1e12 / p_avg_w / area_mm2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bd(mw: f64) -> PowerBreakdown {
+        PowerBreakdown { weight_mzi_mw: mw, ..Default::default() }
+    }
+
+    #[test]
+    fn constant_power_average() {
+        let mut acc = EnergyAccumulator::new();
+        acc.record("l1", &bd(2000.0), 100);
+        acc.record("l2", &bd(2000.0), 300);
+        let r = acc.report(5.0);
+        assert!((r.p_avg_w - 2.0).abs() < 1e-12, "P_avg = 2 W");
+        assert_eq!(r.cycles, 400);
+        // E = 2 W * 400 cycles / 5 GHz = 2 * 80 ns = 160 nJ = 1.6e-4 mJ
+        assert!((r.energy_mj - 1.6e-4).abs() < 1e-12);
+        assert_eq!(r.per_layer.len(), 2);
+    }
+
+    #[test]
+    fn weighted_average_power() {
+        let mut acc = EnergyAccumulator::new();
+        acc.record("a", &bd(1000.0), 100); // 1 W for 100 cyc
+        acc.record("b", &bd(3000.0), 300); // 3 W for 300 cyc
+        let r = acc.report(1.0);
+        assert!((r.p_avg_w - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layer_aggregation() {
+        let mut acc = EnergyAccumulator::new();
+        acc.record("conv1", &bd(1000.0), 10);
+        acc.record("conv1", &bd(1000.0), 10);
+        let r = acc.report(5.0);
+        assert_eq!(r.per_layer.len(), 1);
+        assert_eq!(r.per_layer[0].2, 20);
+    }
+
+    #[test]
+    fn tops_metric_sane() {
+        // 16 cores of 16x16 at 5 GHz = 2*256*16*5e9 = 40.96 TOPS
+        let t = tops_per_w_mm2(16, 16, 16, 5.0, 10.0, 20.0);
+        assert!((t - 40.96 / 10.0 / 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_report_is_zero() {
+        let r = EnergyAccumulator::new().report(5.0);
+        assert_eq!(r.p_avg_w, 0.0);
+        assert_eq!(r.energy_mj, 0.0);
+    }
+}

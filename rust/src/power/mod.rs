@@ -1,0 +1,8 @@
+//! On-chip power modeling (§3.2.1, Eqs. 2–4) with sparsity-aware gating
+//! (§3.3.2–3.3.3) and energy accounting (§4.1 metrics).
+
+pub mod energy;
+pub mod model;
+
+pub use energy::{EnergyAccumulator, EnergyReport};
+pub use model::{PowerBreakdown, PowerModel};

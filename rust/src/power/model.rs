@@ -1,0 +1,317 @@
+//! The analytic on-chip power model (Eqs. 2–4):
+//!
+//! ```text
+//!   P_in  = (R·C·k2 / r) · (P_mod + P_eDAC(b_in, f))            (Eq. 2)
+//!   P_wgt = R·C·k1·k2 · (P_MZI + 2·P_PD)                        (Eq. 3)
+//!   P_out = (R·C·k1 / c) · (P_TIA + P_ADC(b_o, f))              (Eq. 4)
+//! ```
+//!
+//! Sparsity changes each term through gating:
+//! * **IG** removes DAC+MZM power on pruned weight-chunk columns;
+//! * weight-MZI power is computed from the *actual deployed phases*
+//!   (pruned MZIs hold Δφ = 0 and cost nothing);
+//! * **OG** removes TIA+ADC power on pruned weight-chunk rows;
+//! * **LR** adds the rerouter's splitter-tree hold power (computed by
+//!   `crate::rerouter` from the column mask).
+//!
+//! Off-chip laser and low-speed weight DACs are excluded (paper note).
+
+use crate::config::{AcceleratorConfig, DacKind};
+use crate::devices::{Adc, Dac, DeviceLibrary, EoDac, Mzi, MziSpec, Mzm, Tia};
+use crate::thermal::gamma::GammaModel;
+
+/// Itemized power numbers, all in mW.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PowerBreakdown {
+    pub input_dac_mw: f64,
+    pub input_mod_mw: f64,
+    pub weight_mzi_mw: f64,
+    pub weight_pd_mw: f64,
+    pub readout_tia_mw: f64,
+    pub readout_adc_mw: f64,
+    pub rerouter_mw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn input_mw(&self) -> f64 {
+        self.input_dac_mw + self.input_mod_mw
+    }
+    pub fn weight_mw(&self) -> f64 {
+        self.weight_mzi_mw + self.weight_pd_mw
+    }
+    pub fn readout_mw(&self) -> f64 {
+        self.readout_tia_mw + self.readout_adc_mw
+    }
+    pub fn total_mw(&self) -> f64 {
+        self.input_mw() + self.weight_mw() + self.readout_mw() + self.rerouter_mw
+    }
+    pub fn total_w(&self) -> f64 {
+        self.total_mw() / 1e3
+    }
+
+    pub fn add(&mut self, other: &PowerBreakdown) {
+        self.input_dac_mw += other.input_dac_mw;
+        self.input_mod_mw += other.input_mod_mw;
+        self.weight_mzi_mw += other.weight_mzi_mw;
+        self.weight_pd_mw += other.weight_pd_mw;
+        self.readout_tia_mw += other.readout_tia_mw;
+        self.readout_adc_mw += other.readout_adc_mw;
+        self.rerouter_mw += other.rerouter_mw;
+    }
+
+    pub fn scaled(&self, f: f64) -> PowerBreakdown {
+        PowerBreakdown {
+            input_dac_mw: self.input_dac_mw * f,
+            input_mod_mw: self.input_mod_mw * f,
+            weight_mzi_mw: self.weight_mzi_mw * f,
+            weight_pd_mw: self.weight_pd_mw * f,
+            readout_tia_mw: self.readout_tia_mw * f,
+            readout_adc_mw: self.readout_adc_mw * f,
+            rerouter_mw: self.rerouter_mw * f,
+        }
+    }
+}
+
+/// Power model bound to a configuration + device library.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub cfg: AcceleratorConfig,
+    pub lib: DeviceLibrary,
+    mzi: Mzi,
+}
+
+impl PowerModel {
+    pub fn new(cfg: AcceleratorConfig, lib: DeviceLibrary, gamma: &GammaModel) -> Self {
+        let mzi = Mzi::new(MziSpec::from_kind(cfg.mzi), cfg.l_s, gamma);
+        Self { cfg, lib, mzi }
+    }
+
+    pub fn with_defaults(cfg: AcceleratorConfig) -> Self {
+        Self::new(cfg, DeviceLibrary::default(), &GammaModel::paper())
+    }
+
+    /// The weight-array MZI device this model uses.
+    pub fn mzi(&self) -> &Mzi {
+        &self.mzi
+    }
+
+    /// Per-port input DAC power (mW) under the configured DAC kind.
+    pub fn dac_power_mw(&self) -> f64 {
+        match self.cfg.dac {
+            DacKind::Edac => Dac::new(self.cfg.b_in, self.cfg.freq_ghz, self.lib.edac_p0_pj)
+                .power_mw(),
+            DacKind::Eodac { segments, bits_per_seg } => {
+                EoDac::new(segments, bits_per_seg, self.cfg.freq_ghz, self.lib.edac_p0_pj)
+                    .power_mw()
+            }
+        }
+    }
+
+    /// Per-port modulator power (mW), Eq. 2.
+    pub fn mzm_power_mw(&self) -> f64 {
+        Mzm::new(
+            self.lib.mzm_static_mw,
+            self.lib.mzm_energy_pj,
+            self.cfg.freq_ghz,
+            self.lib.leakage_floor(),
+        )
+        .power_mw()
+    }
+
+    /// Per-channel readout power (mW), Eq. 4 inner term.
+    pub fn readout_channel_mw(&self) -> f64 {
+        Tia::new(self.lib.tia_mw).power_mw
+            + Adc::new(self.cfg.b_o, self.cfg.freq_ghz, self.lib.adc_p0_pj).power_mw()
+    }
+
+    /// Dense-case power with an *average* per-MZI phase magnitude
+    /// (closed-form; used by design-space sweeps where no concrete weights
+    /// exist yet). `mean_abs_phase` defaults to the uniform-weight value.
+    pub fn dense(&self, mean_abs_phase: Option<f64>) -> PowerBreakdown {
+        let c = &self.cfg;
+        let n_in = (c.n_cores() * c.k2) as f64 / c.share_r as f64;
+        let n_wgt = (c.n_cores() * c.k1 * c.k2) as f64;
+        let n_out = (c.n_cores() * c.k1) as f64 / c.share_c as f64;
+        let p_mzi = match mean_abs_phase {
+            Some(phi) => self.mzi.power_mw(phi),
+            None => self.mzi.mean_power_uniform_mw(),
+        };
+        PowerBreakdown {
+            input_dac_mw: n_in * self.dac_power_mw(),
+            input_mod_mw: n_in * self.mzm_power_mw(),
+            weight_mzi_mw: n_wgt * p_mzi,
+            weight_pd_mw: n_wgt * 2.0 * self.lib.pd_mw,
+            readout_tia_mw: n_out * Tia::new(self.lib.tia_mw).power_mw,
+            readout_adc_mw: n_out
+                * Adc::new(c.b_o, c.freq_ghz, self.lib.adc_p0_pj).power_mw(),
+            rerouter_mw: 0.0,
+        }
+    }
+
+    /// Power for one deployed weight chunk given the concrete phases and
+    /// structured masks.
+    ///
+    /// * `phases` — row-major `rk1 × ck2` programmed phase magnitudes (the
+    ///   chunk mapped across r·c PTCs); pruned entries must already be 0.
+    /// * `col_mask[ck2]` — weight-chunk *column* mask (input ports);
+    ///   `false` ⇒ pruned ⇒ DAC/MZM gated when IG is on.
+    /// * `row_mask[rk1]` — weight-chunk *row* mask (output channels);
+    ///   `false` ⇒ pruned ⇒ TIA/ADC gated when OG is on.
+    /// * `rerouter_mw` — hold power of the LR splitter trees for this mask
+    ///   (0 when LR is off), from `crate::rerouter`.
+    ///
+    /// Numbers are for **one chunk slot** (r·c PTCs + its shared input
+    /// module and readout bank). Whole-accelerator power at full occupancy
+    /// is the sum over the `R·C/(r·c)` slots (see `coordinator::engine`).
+    pub fn chunk(
+        &self,
+        phases: &[f64],
+        col_mask: &[bool],
+        row_mask: &[bool],
+        rerouter_mw: f64,
+    ) -> PowerBreakdown {
+        let c = &self.cfg;
+        let (rows, cols) = c.chunk_shape();
+        assert_eq!(phases.len(), rows * cols, "phase chunk shape mismatch");
+        assert_eq!(col_mask.len(), cols, "col mask len");
+        assert_eq!(row_mask.len(), rows, "row mask len");
+
+        // --- input side: one DAC+MZM per chunk column (shared across r) ---
+        let active_cols = if c.features.input_gating {
+            col_mask.iter().filter(|&&m| m).count() as f64
+        } else {
+            cols as f64
+        };
+        let p_in_port = self.dac_power_mw() + self.mzm_power_mw();
+
+        // --- weight array: actual per-MZI hold power -------------------
+        let mut p_mzi_total = 0.0;
+        for (ri, row) in phases.chunks(cols).enumerate() {
+            for (ci, &phi) in row.iter().enumerate() {
+                if !row_mask[ri] || !col_mask[ci] {
+                    continue; // power-gated weight MZI
+                }
+                p_mzi_total += self.mzi.power_mw(phi);
+            }
+        }
+        // PDs stay biased on active rows only when OG is enabled.
+        let active_rows = if c.features.output_gating {
+            row_mask.iter().filter(|&&m| m).count() as f64
+        } else {
+            rows as f64
+        };
+        let pd_count = active_rows * cols as f64;
+
+        PowerBreakdown {
+            input_dac_mw: active_cols * self.dac_power_mw(),
+            input_mod_mw: active_cols * (p_in_port - self.dac_power_mw()),
+            weight_mzi_mw: p_mzi_total,
+            weight_pd_mw: pd_count * 2.0 * self.lib.pd_mw,
+            readout_tia_mw: active_rows * Tia::new(self.lib.tia_mw).power_mw,
+            readout_adc_mw: active_rows
+                * Adc::new(c.b_o, c.freq_ghz, self.lib.adc_p0_pj).power_mw(),
+            rerouter_mw: if c.features.light_redistribution { rerouter_mw } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SparsitySupport;
+
+    fn model(features: SparsitySupport, share: usize) -> PowerModel {
+        let cfg = AcceleratorConfig {
+            features,
+            share_r: share,
+            share_c: share,
+            dac: DacKind::Edac,
+            l_g: 5.0,
+            ..Default::default()
+        };
+        PowerModel::with_defaults(cfg)
+    }
+
+    #[test]
+    fn dense_breakdown_matches_eq2_4_counts() {
+        let m = model(SparsitySupport::NONE, 1);
+        let p = m.dense(None);
+        // R*C*k2/r = 256 input ports
+        let dac = Dac::new(6, 5.0, m.lib.edac_p0_pj).power_mw();
+        assert!((p.input_dac_mw - 256.0 * dac).abs() < 1e-9);
+        // R*C*k1/c = 256 readout channels at 12 mW ADC each
+        assert!((p.readout_adc_mw - 256.0 * 12.0).abs() < 1e-6);
+        // 4096 weight MZIs
+        assert!(p.weight_mzi_mw > 0.0);
+        assert!(p.total_w() > 1.0 && p.total_w() < 100.0);
+    }
+
+    #[test]
+    fn sharing_divides_converter_power() {
+        let m1 = model(SparsitySupport::NONE, 1);
+        let m4 = model(SparsitySupport::NONE, 4);
+        let p1 = m1.dense(None);
+        let p4 = m4.dense(None);
+        assert!((p1.input_dac_mw / p4.input_dac_mw - 4.0).abs() < 1e-9);
+        assert!((p1.readout_adc_mw / p4.readout_adc_mw - 4.0).abs() < 1e-9);
+        // weight power unchanged
+        assert!((p1.weight_mzi_mw - p4.weight_mzi_mw).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunk_gating_saves_power() {
+        let m_full = model(SparsitySupport::FULL, 4);
+        let m_none = model(SparsitySupport::NONE, 4);
+        let (rows, cols) = m_full.cfg.chunk_shape();
+        // half the columns and half the rows pruned
+        let col_mask: Vec<bool> = (0..cols).map(|i| i % 2 == 0).collect();
+        let row_mask: Vec<bool> = (0..rows).map(|i| i % 2 == 0).collect();
+        let mut phases = vec![0.5; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                if !row_mask[r] || !col_mask[c] {
+                    phases[r * cols + c] = 0.0;
+                }
+            }
+        }
+        let p_gated = m_full.chunk(&phases, &col_mask, &row_mask, 0.0);
+        let p_ungated = m_none.chunk(&phases, &col_mask, &row_mask, 0.0);
+        // same MZI power (pruned phases are 0 either way)...
+        assert!((p_gated.weight_mzi_mw - p_ungated.weight_mzi_mw).abs() < 1e-9);
+        // ...but gated converters halve input and readout power
+        assert!((p_ungated.input_dac_mw / p_gated.input_dac_mw - 2.0).abs() < 1e-9);
+        assert!((p_ungated.readout_adc_mw / p_gated.readout_adc_mw - 2.0).abs() < 1e-9);
+        // and PD bias on gated rows is removed
+        assert!(p_gated.weight_pd_mw < p_ungated.weight_pd_mw);
+        assert!(p_gated.total_mw() < p_ungated.total_mw());
+    }
+
+    #[test]
+    fn eodac_cuts_input_dac_power_2p28x() {
+        let mut cfg = AcceleratorConfig { dac: DacKind::Edac, ..Default::default() };
+        cfg.features = SparsitySupport::NONE;
+        let p_e = PowerModel::with_defaults(cfg.clone()).dense(None);
+        cfg.dac = DacKind::optimal_eodac();
+        let p_eo = PowerModel::with_defaults(cfg).dense(None);
+        let ratio = p_e.input_dac_mw / p_eo.input_dac_mw;
+        assert!((ratio - 2.2857).abs() < 1e-3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn dense_chunk_times_slots_equals_dense_closed_form() {
+        // chunk() with all-true masks and uniform |phi| must reproduce the
+        // closed-form dense() at the same mean phase, scaled by the slot
+        // count (chunk() is per-slot).
+        let m = model(SparsitySupport::NONE, 4);
+        let (rows, cols) = m.cfg.chunk_shape();
+        let slots = (m.cfg.n_cores() / (m.cfg.share_r * m.cfg.share_c)) as f64;
+        let phi = 0.37;
+        let phases = vec![phi; rows * cols];
+        let p_chunk = m
+            .chunk(&phases, &vec![true; cols], &vec![true; rows], 0.0)
+            .scaled(slots);
+        let p_dense = m.dense(Some(phi));
+        assert!((p_chunk.total_mw() - p_dense.total_mw()).abs() < 1e-6);
+        assert!((p_chunk.weight_mzi_mw - p_dense.weight_mzi_mw).abs() < 1e-6);
+    }
+}

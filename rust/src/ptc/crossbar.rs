@@ -1,0 +1,663 @@
+//! Single-PTC noisy crossbar MVM (§3.1.1, §3.3.2).
+//!
+//! Physical layout: the k1×k2 weight matrix W (output × input) maps onto a
+//! grid of MZI nodes with physical row = input index j (vertical pitch
+//! l_v) and physical column = output index i (horizontal pitch l_h); flat
+//! node index m = j·k1 + i matches `thermal::CouplingModel`'s geometry.
+//!
+//! Signal chain per node: the input intensity u_j enters the node's 1×2
+//! MZI power splitter; balanced photodetection of the two outputs yields
+//! the full-range product `W_ij·u_j = −sin(Δφ̃_ij)·u_j` (Eq. 1); column
+//! photocurrents accumulate along each physical column (output i).
+
+use crate::devices::DeviceLibrary;
+use crate::thermal::{coupling::ArrayGeometry, CouplingModel, GammaModel};
+use crate::util::XorShiftRng;
+
+/// How pruned weight-chunk *columns* (input ports) are handled (Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ColumnMode {
+    /// Weight pruning only: even splitter, modulators stay on; pruned
+    /// paths leak `δw·x` into the output (Eq. 12).
+    #[default]
+    PruneOnly,
+    /// + input gating: DAC/MZM power-gated; residual light at the
+    /// extinction-ratio floor still leaks `δw·δx` (Eq. 13).
+    InputGating,
+    /// + in-situ light redistribution: the rerouter steers all power to
+    /// active ports (×k2/k2′) and the TIA gain is rescaled by k2′/k2;
+    /// leakage is eliminated and PD noise shrinks (Eq. 14).
+    InputGatingLr,
+}
+
+/// Per-call simulation options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ForwardOptions<'m> {
+    /// Apply inter-MZI thermal crosstalk (Eqs. 8–9).
+    pub thermal: bool,
+    /// Add PD photocurrent noise δn_PD (Eq. 11).
+    pub pd_noise: bool,
+    /// Add random phase noise on driven MZIs.
+    pub phase_noise: bool,
+    /// Column (input) sparsity mask, length k2; `None` = dense.
+    pub col_mask: Option<&'m [bool]>,
+    /// Row (output) sparsity mask, length k1; `None` = dense.
+    pub row_mask: Option<&'m [bool]>,
+    /// Column handling mode.
+    pub col_mode: ColumnMode,
+    /// Output TIA/ADC gating: pruned rows read back exact zero and their
+    /// MZIs/PDs are powered down (§3.3.3).
+    pub output_gating: bool,
+}
+
+/// The simulator for one k1×k2 PTC at a fixed geometry.
+#[derive(Debug, Clone)]
+pub struct PtcSimulator {
+    pub k1: usize,
+    pub k2: usize,
+    pub lib: DeviceLibrary,
+    coupling: CouplingModel,
+}
+
+impl PtcSimulator {
+    pub fn new(geom: ArrayGeometry, gamma: &GammaModel, lib: DeviceLibrary) -> Self {
+        Self { k1: geom.cols, k2: geom.rows, lib, coupling: CouplingModel::new(geom, gamma) }
+    }
+
+    pub fn from_config(cfg: &crate::AcceleratorConfig) -> Self {
+        Self::new(
+            ArrayGeometry::from_config(cfg),
+            &GammaModel::paper(),
+            DeviceLibrary::default(),
+        )
+    }
+
+    pub fn coupling(&self) -> &CouplingModel {
+        &self.coupling
+    }
+
+    /// Ideal MVM `y = W·x` (masked entries contribute exactly zero).
+    pub fn forward_ideal(
+        &self,
+        w: &[f64],
+        x: &[f64],
+        col_mask: Option<&[bool]>,
+        row_mask: Option<&[bool]>,
+    ) -> Vec<f64> {
+        self.check_shapes(w, x);
+        let mut y = vec![0.0; self.k1];
+        for i in 0..self.k1 {
+            if let Some(rm) = row_mask {
+                if !rm[i] {
+                    continue;
+                }
+            }
+            let mut acc = 0.0;
+            for j in 0..self.k2 {
+                if let Some(cm) = col_mask {
+                    if !cm[j] {
+                        continue;
+                    }
+                }
+                acc += w[i * self.k2 + j] * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Noisy MVM through the full photonic signal chain.
+    ///
+    /// * `w` — row-major k1×k2 weights in [−1, 1].
+    /// * `x` — length-k2 non-negative normalized inputs in [0, 1].
+    pub fn forward(
+        &self,
+        w: &[f64],
+        x: &[f64],
+        opts: &ForwardOptions,
+        rng: &mut XorShiftRng,
+    ) -> Vec<f64> {
+        self.check_shapes(w, x);
+        let (k1, k2) = (self.k1, self.k2);
+        let n = k1 * k2;
+        let full = vec![true; k1.max(k2)];
+        let col_mask = opts.col_mask.unwrap_or(&full[..k2]);
+        let row_mask = opts.row_mask.unwrap_or(&full[..k1]);
+        assert_eq!(col_mask.len(), k2, "col mask len");
+        assert_eq!(row_mask.len(), k1, "row mask len");
+
+        // 1. program target phases; pruned weights are power-gated — but a
+        //    powered-off MZI still holds its fabricated bias deviation
+        //    (φ_b ≠ π/2 exactly), the Eq.-12 δw leakage source.
+        let mut phases = vec![0.0f64; n];
+        for j in 0..k2 {
+            for i in 0..k1 {
+                let active = row_mask[i] && col_mask[j];
+                if active {
+                    let mut phi = crate::devices::Mzi::phase_from_weight(w[i * k2 + j]);
+                    if opts.phase_noise {
+                        phi += rng.gaussian_std(self.lib.phase_noise_std);
+                    }
+                    phases[j * k1 + i] = phi;
+                } else if opts.phase_noise {
+                    phases[j * k1 + i] = rng.gaussian_std(self.lib.bias_deviation_std);
+                }
+            }
+        }
+
+        // 2. thermal crosstalk perturbs every MZI, driven or not.
+        let phases = if opts.thermal { self.coupling.perturbed(&phases) } else { phases };
+
+        // 3. realized weights through the Eq.-1 transfer.
+        //    (collect once; the hot loop below reads them column-wise)
+        let mut w_real = vec![0.0f64; n];
+        for (m, &phi) in phases.iter().enumerate() {
+            w_real[m] = crate::devices::Mzi::weight_from_phase(phi);
+        }
+
+        // 4. per-port input intensities under the column mode.
+        let k2_active = col_mask.iter().filter(|&&m| m).count();
+        let leak = self.lib.leakage_floor();
+        let mut u = vec![0.0f64; k2];
+        let mut lr_gain = 1.0;
+        match opts.col_mode {
+            ColumnMode::PruneOnly => {
+                for j in 0..k2 {
+                    u[j] = x[j].max(0.0);
+                }
+            }
+            ColumnMode::InputGating => {
+                for j in 0..k2 {
+                    // gated modulators leak the ER floor of the CW carrier
+                    u[j] = if col_mask[j] { x[j].max(0.0) } else { leak };
+                }
+            }
+            ColumnMode::InputGatingLr => {
+                let boost = if k2_active == 0 { 0.0 } else { k2 as f64 / k2_active as f64 };
+                lr_gain = k2_active as f64 / k2 as f64; // TIA rescale (Eq. 14)
+                for j in 0..k2 {
+                    u[j] = if col_mask[j] { x[j].max(0.0) * boost } else { 0.0 };
+                }
+            }
+        }
+
+        // 5. photocurrent accumulation along each physical column, one PD
+        //    noise draw per node (Eq. 11), TIA gain, output gating.
+        let mut y = vec![0.0f64; k1];
+        for i in 0..k1 {
+            if opts.output_gating && !row_mask[i] {
+                // TIA/ADC powered down: exact zero, no noise (§3.3.3)
+                continue;
+            }
+            let mut acc = 0.0;
+            for j in 0..k2 {
+                acc += w_real[j * k1 + i] * u[j];
+                if opts.pd_noise {
+                    acc += rng.gaussian_std(self.lib.pd_noise_std);
+                }
+            }
+            y[i] = acc * lr_gain;
+        }
+        y
+    }
+
+    fn check_shapes(&self, w: &[f64], x: &[f64]) {
+        assert_eq!(w.len(), self.k1 * self.k2, "weight shape must be k1*k2");
+        assert_eq!(x.len(), self.k2, "input must be length k2");
+    }
+
+    /// Program the PTC once for a weight block + masks, precomputing the
+    /// crosstalk-perturbed realized weights. Streaming inputs through
+    /// [`ProgrammedPtc::run`] then costs one k1×k2 mat-vec per vector —
+    /// exactly the hardware's "program weights, stream activations" split.
+    ///
+    /// Phase noise is drawn once at programming time (it models static
+    /// driver/DAC error, not per-cycle noise).
+    pub fn program(
+        &self,
+        w: &[f64],
+        opts: &ForwardOptions,
+        rng: &mut XorShiftRng,
+    ) -> ProgrammedPtc {
+        let (k1, k2) = (self.k1, self.k2);
+        assert_eq!(w.len(), k1 * k2);
+        let full = vec![true; k1.max(k2)];
+        let col_mask = opts.col_mask.unwrap_or(&full[..k2]).to_vec();
+        let row_mask = opts.row_mask.unwrap_or(&full[..k1]).to_vec();
+
+        let mut phases = vec![0.0f64; k1 * k2];
+        for j in 0..k2 {
+            for i in 0..k1 {
+                if row_mask[i] && col_mask[j] {
+                    let mut phi = crate::devices::Mzi::phase_from_weight(w[i * k2 + j]);
+                    if opts.phase_noise {
+                        phi += rng.gaussian_std(self.lib.phase_noise_std);
+                    }
+                    phases[j * k1 + i] = phi;
+                } else if opts.phase_noise {
+                    // fabricated bias deviation on powered-off MZIs (δw)
+                    phases[j * k1 + i] = rng.gaussian_std(self.lib.bias_deviation_std);
+                }
+            }
+        }
+        let phases = if opts.thermal { self.coupling.perturbed(&phases) } else { phases };
+
+        // store realized weights row-major (k1×k2) for cache-friendly runs
+        let mut w_real = vec![0.0f64; k1 * k2];
+        let mut phase_abs = vec![0.0f64; k1 * k2];
+        for j in 0..k2 {
+            for i in 0..k1 {
+                w_real[i * k2 + j] = crate::devices::Mzi::weight_from_phase(phases[j * k1 + i]);
+                phase_abs[i * k2 + j] = phases[j * k1 + i].abs();
+            }
+        }
+
+        // per-port input scaling under the column mode
+        let k2_active = col_mask.iter().filter(|&&m| m).count();
+        let leak = self.lib.leakage_floor();
+        let (u_gain, u_floor, lr_gain) = match opts.col_mode {
+            ColumnMode::PruneOnly => (vec![1.0; k2], vec![0.0; k2], 1.0),
+            ColumnMode::InputGating => {
+                let g: Vec<f64> =
+                    col_mask.iter().map(|&m| if m { 1.0 } else { 0.0 }).collect();
+                let f: Vec<f64> =
+                    col_mask.iter().map(|&m| if m { 0.0 } else { leak }).collect();
+                (g, f, 1.0)
+            }
+            ColumnMode::InputGatingLr => {
+                let boost =
+                    if k2_active == 0 { 0.0 } else { k2 as f64 / k2_active as f64 };
+                let g: Vec<f64> =
+                    col_mask.iter().map(|&m| if m { boost } else { 0.0 }).collect();
+                (g, vec![0.0; k2], k2_active as f64 / k2 as f64)
+            }
+        };
+
+        ProgrammedPtc {
+            k1,
+            k2,
+            w_real,
+            phase_abs,
+            row_mask,
+            u_gain,
+            u_floor,
+            lr_gain,
+            output_gating: opts.output_gating,
+            pd_noise: opts.pd_noise,
+            pd_noise_std: self.lib.pd_noise_std,
+            scratch: vec![0.0; k2],
+        }
+    }
+}
+
+/// A PTC with weights programmed and non-idealities frozen; streams input
+/// vectors at one mat-vec each.
+#[derive(Debug, Clone)]
+pub struct ProgrammedPtc {
+    pub k1: usize,
+    pub k2: usize,
+    /// Realized (crosstalk-perturbed) weights, row-major k1×k2.
+    pub w_real: Vec<f64>,
+    /// |Δφ̃| per weight (row-major) — feeds the MZI hold-power model.
+    pub phase_abs: Vec<f64>,
+    row_mask: Vec<bool>,
+    u_gain: Vec<f64>,
+    u_floor: Vec<f64>,
+    lr_gain: f64,
+    output_gating: bool,
+    pd_noise: bool,
+    pd_noise_std: f64,
+    scratch: Vec<f64>,
+}
+
+impl ProgrammedPtc {
+    /// Run one input vector through the programmed crossbar, accumulating
+    /// into `y` (length k1). PD noise (if enabled) is drawn fresh per call
+    /// — it is per-cycle photocurrent noise.
+    pub fn run_into(&mut self, x: &[f64], y: &mut [f64], rng: &mut XorShiftRng) {
+        assert_eq!(x.len(), self.k2);
+        assert_eq!(y.len(), self.k1);
+        // effective port intensities
+        let mut u = std::mem::take(&mut self.scratch);
+        for j in 0..self.k2 {
+            u[j] = x[j].max(0.0) * self.u_gain[j] + self.u_floor[j];
+        }
+        let noise_std_row = self.pd_noise_std * (self.k2 as f64).sqrt();
+        for i in 0..self.k1 {
+            if self.output_gating && !self.row_mask[i] {
+                continue;
+            }
+            let wrow = &self.w_real[i * self.k2..(i + 1) * self.k2];
+            let mut acc = 0.0;
+            for j in 0..self.k2 {
+                acc += wrow[j] * u[j];
+            }
+            if self.pd_noise {
+                // sum of k2 iid gaussians == one gaussian at sqrt(k2)·σ
+                acc += rng.gaussian_std(noise_std_row);
+            }
+            y[i] += acc * self.lr_gain;
+        }
+        self.scratch = u;
+    }
+
+    pub fn run(&mut self, x: &[f64], rng: &mut XorShiftRng) -> Vec<f64> {
+        let mut y = vec![0.0; self.k1];
+        self.run_into(x, &mut y, rng);
+        y
+    }
+}
+
+#[cfg(test)]
+mod programmed_tests {
+    use super::*;
+    use crate::devices::DeviceLibrary;
+    use crate::thermal::{coupling::ArrayGeometry, GammaModel};
+    use crate::util::nmae;
+
+    fn sim() -> PtcSimulator {
+        let geom = ArrayGeometry { rows: 16, cols: 16, l_v: 120.0, l_h: 16.0, l_s: 9.0 };
+        PtcSimulator::new(geom, &GammaModel::paper(), DeviceLibrary::default())
+    }
+
+    #[test]
+    fn programmed_matches_forward_noiseless() {
+        let s = sim();
+        let mut rng = XorShiftRng::new(1);
+        let mut w = vec![0.0; 256];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let mut x = vec![0.0; 16];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let col_mask: Vec<bool> = (0..16).map(|j| j % 2 == 0).collect();
+        let row_mask: Vec<bool> = (0..16).map(|i| i % 4 != 3).collect();
+        for mode in [ColumnMode::PruneOnly, ColumnMode::InputGating, ColumnMode::InputGatingLr] {
+            let opts = ForwardOptions {
+                thermal: true,
+                col_mask: Some(&col_mask),
+                row_mask: Some(&row_mask),
+                col_mode: mode,
+                output_gating: true,
+                ..Default::default()
+            };
+            let y_fwd = s.forward(&w, &x, &opts, &mut XorShiftRng::new(0));
+            let mut prog = s.program(&w, &opts, &mut XorShiftRng::new(0));
+            let y_prog = prog.run(&x, &mut XorShiftRng::new(0));
+            assert!(nmae(&y_prog, &y_fwd) < 1e-12, "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn programmed_noise_statistics_match_forward() {
+        let s = sim();
+        let mut rng = XorShiftRng::new(2);
+        let mut w = vec![0.0; 256];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let mut x = vec![0.0; 16];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let opts = ForwardOptions { pd_noise: true, ..Default::default() };
+        let ideal = s.forward_ideal(&w, &x, None, None);
+        let mut prog = s.program(&w, &opts, &mut XorShiftRng::new(0));
+        let mut acc2 = 0.0;
+        let trials = 3000;
+        let mut nrng = XorShiftRng::new(3);
+        for _ in 0..trials {
+            let y = prog.run(&x, &mut nrng);
+            for i in 0..16 {
+                acc2 += (y[i] - ideal[i]).powi(2);
+            }
+        }
+        let std = (acc2 / (trials * 16) as f64).sqrt();
+        // sqrt(16)*0.01 = 0.04
+        assert!((std - 0.04).abs() < 0.002, "std={std}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{nmae, snr_db};
+
+    fn geom(k1: usize, k2: usize, l_g: f64) -> ArrayGeometry {
+        ArrayGeometry { rows: k2, cols: k1, l_v: 120.0, l_h: l_g + 15.0, l_s: 9.0 }
+    }
+
+    fn sim(k1: usize, k2: usize, l_g: f64) -> PtcSimulator {
+        PtcSimulator::new(geom(k1, k2, l_g), &GammaModel::paper(), DeviceLibrary::default())
+    }
+
+    fn rand_problem(k1: usize, k2: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = XorShiftRng::new(seed);
+        let mut w = vec![0.0; k1 * k2];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let mut x = vec![0.0; k2];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        (w, x)
+    }
+
+    #[test]
+    fn noiseless_matches_ideal() {
+        let s = sim(8, 8, 5.0);
+        let (w, x) = rand_problem(8, 8, 1);
+        let opts = ForwardOptions::default(); // everything off
+        let y = s.forward(&w, &x, &opts, &mut XorShiftRng::new(0));
+        let ideal = s.forward_ideal(&w, &x, None, None);
+        assert!(nmae(&y, &ideal) < 1e-12);
+    }
+
+    #[test]
+    fn thermal_crosstalk_degrades_and_tighter_pitch_is_worse() {
+        let (w, x) = rand_problem(16, 16, 2);
+        let opts = ForwardOptions { thermal: true, ..Default::default() };
+        let e_tight = {
+            let s = sim(16, 16, 1.0);
+            let y = s.forward(&w, &x, &opts, &mut XorShiftRng::new(0));
+            nmae(&y, &s.forward_ideal(&w, &x, None, None))
+        };
+        let e_loose = {
+            let s = sim(16, 16, 20.0);
+            let y = s.forward(&w, &x, &opts, &mut XorShiftRng::new(0));
+            nmae(&y, &s.forward_ideal(&w, &x, None, None))
+        };
+        assert!(e_tight > 0.0 && e_loose > 0.0);
+        assert!(e_tight > 2.0 * e_loose, "tight={e_tight} loose={e_loose}");
+    }
+
+    #[test]
+    fn pd_noise_statistics() {
+        let s = sim(4, 16, 5.0);
+        let (w, x) = rand_problem(4, 16, 3);
+        let ideal = s.forward_ideal(&w, &x, None, None);
+        let opts = ForwardOptions { pd_noise: true, ..Default::default() };
+        let mut rng = XorShiftRng::new(7);
+        // Var per output = k2 * 0.01^2 -> std = sqrt(16)*0.01 = 0.04
+        let trials = 4000;
+        let mut acc2 = 0.0;
+        for _ in 0..trials {
+            let y = s.forward(&w, &x, &opts, &mut rng);
+            for i in 0..4 {
+                let d = y[i] - ideal[i];
+                acc2 += d * d;
+            }
+        }
+        let std = (acc2 / (trials * 4) as f64).sqrt();
+        assert!((std - 0.04).abs() < 0.002, "std={std}");
+    }
+
+    #[test]
+    fn fig5_mode_ordering_prune_ig_lr() {
+        // Fig. 5 / Fig. 9(b): N-MAE(prune-only) > N-MAE(IG) > N-MAE(IG+LR).
+        let s = sim(16, 16, 3.0);
+        let (w, x) = rand_problem(16, 16, 4);
+        let col_mask: Vec<bool> = (0..16).map(|j| j % 2 == 0).collect(); // 50% cols
+        let golden = s.forward_ideal(&w, &x, Some(&col_mask), None);
+        let run = |mode: ColumnMode, seed: u64| {
+            let opts = ForwardOptions {
+                thermal: true,
+                pd_noise: true,
+                phase_noise: true,
+                col_mask: Some(&col_mask),
+                col_mode: mode,
+                ..Default::default()
+            };
+            let mut rng = XorShiftRng::new(seed);
+            let mut tot = 0.0;
+            for t in 0..50 {
+                let _ = t;
+                let y = s.forward(&w, &x, &opts, &mut rng);
+                tot += nmae(&y, &golden);
+            }
+            tot / 50.0
+        };
+        let e_prune = run(ColumnMode::PruneOnly, 10);
+        let e_ig = run(ColumnMode::InputGating, 10);
+        let e_lr = run(ColumnMode::InputGatingLr, 10);
+        assert!(e_prune > e_ig, "prune {e_prune} > IG {e_ig}");
+        assert!(e_ig > e_lr, "IG {e_ig} > LR {e_lr}");
+    }
+
+    #[test]
+    fn lr_noise_reduction_matches_eq14() {
+        // With ONLY PD noise (no crosstalk), LR at 25% active should cut
+        // noise std by k2'/k2 = 0.25 vs the dense case.
+        let s = sim(4, 16, 5.0);
+        let (w, x) = rand_problem(4, 16, 5);
+        let col_mask: Vec<bool> = (0..16).map(|j| j % 4 == 0).collect(); // 4 of 16
+        let golden = s.forward_ideal(&w, &x, Some(&col_mask), None);
+        let measure = |mode: ColumnMode| {
+            let opts = ForwardOptions {
+                pd_noise: true,
+                col_mask: Some(&col_mask),
+                col_mode: mode,
+                ..Default::default()
+            };
+            let mut rng = XorShiftRng::new(17);
+            let mut acc2 = 0.0;
+            let trials = 3000;
+            for _ in 0..trials {
+                let y = s.forward(&w, &x, &opts, &mut rng);
+                for i in 0..4 {
+                    let d = y[i] - golden[i];
+                    acc2 += d * d;
+                }
+            }
+            (acc2 / (trials * 4) as f64).sqrt()
+        };
+        // IG keeps full-amplitude noise (sqrt(16)*0.01 = 0.04) plus tiny leakage
+        let std_ig = measure(ColumnMode::InputGating);
+        let std_lr = measure(ColumnMode::InputGatingLr);
+        assert!((std_lr / std_ig - 0.25).abs() < 0.05, "ig={std_ig} lr={std_lr}");
+    }
+
+    #[test]
+    fn lr_snr_gain_about_12db_at_quarter_active() {
+        // 20·log10(4) ≈ 12 dB PD-noise SNR gain at k2'/k2 = 1/4.
+        let s = sim(8, 16, 5.0);
+        let (w, x) = rand_problem(8, 16, 6);
+        let col_mask: Vec<bool> = (0..16).map(|j| j % 4 == 0).collect();
+        let golden = s.forward_ideal(&w, &x, Some(&col_mask), None);
+        let collect = |mode: ColumnMode| {
+            let opts = ForwardOptions {
+                pd_noise: true,
+                col_mask: Some(&col_mask),
+                col_mode: mode,
+                ..Default::default()
+            };
+            let mut rng = XorShiftRng::new(23);
+            let mut ys = Vec::new();
+            let mut gs = Vec::new();
+            for _ in 0..500 {
+                ys.extend(s.forward(&w, &x, &opts, &mut rng));
+                gs.extend(golden.iter().copied());
+            }
+            snr_db(&ys, &gs)
+        };
+        let gain = collect(ColumnMode::InputGatingLr) - collect(ColumnMode::InputGating);
+        assert!((gain - 12.04).abs() < 1.5, "LR SNR gain {gain} dB");
+    }
+
+    #[test]
+    fn output_gating_zeroes_pruned_rows() {
+        let s = sim(8, 8, 3.0);
+        let (w, x) = rand_problem(8, 8, 8);
+        let row_mask: Vec<bool> = (0..8).map(|i| i % 2 == 0).collect();
+        let opts = ForwardOptions {
+            thermal: true,
+            pd_noise: true,
+            row_mask: Some(&row_mask),
+            output_gating: true,
+            ..Default::default()
+        };
+        let y = s.forward(&w, &x, &opts, &mut XorShiftRng::new(9));
+        for (i, &m) in row_mask.iter().enumerate() {
+            if !m {
+                assert_eq!(y[i], 0.0, "OG row {i} must be exactly zero");
+            } else {
+                assert_ne!(y[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn row_sparsity_without_og_leaks_garbage() {
+        // Fig. 9(a): pruned rows w/o OG still emit crosstalk+noise garbage.
+        let s = sim(8, 8, 1.0);
+        let (w, x) = rand_problem(8, 8, 11);
+        let row_mask: Vec<bool> = (0..8).map(|i| i % 2 == 0).collect();
+        let golden = s.forward_ideal(&w, &x, None, Some(&row_mask));
+        let mk = |og: bool, seed: u64| {
+            let opts = ForwardOptions {
+                thermal: true,
+                pd_noise: true,
+                row_mask: Some(&row_mask),
+                output_gating: og,
+                ..Default::default()
+            };
+            let mut rng = XorShiftRng::new(seed);
+            let mut tot = 0.0;
+            for _ in 0..50 {
+                tot += nmae(&s.forward(&w, &x, &opts, &mut rng), &golden);
+            }
+            tot / 50.0
+        };
+        let e_no_og = mk(false, 21);
+        let e_og = mk(true, 21);
+        assert!(e_no_og > e_og, "no-OG {e_no_og} must exceed OG {e_og}");
+    }
+
+    #[test]
+    fn interleaved_rows_beat_clustered_rows_under_og() {
+        // Fig. 9(a): interleaved 1s minimize crosstalk on surviving rows.
+        let s = sim(16, 8, 1.0);
+        let (w, x) = rand_problem(16, 8, 13);
+        let interleaved: Vec<bool> = (0..16).map(|i| i % 2 == 0).collect();
+        let clustered: Vec<bool> = (0..16).map(|i| i < 8).collect();
+        let run = |mask: &Vec<bool>| {
+            let golden = s.forward_ideal(&w, &x, None, Some(mask));
+            let opts = ForwardOptions {
+                thermal: true,
+                row_mask: Some(mask),
+                output_gating: true,
+                ..Default::default()
+            };
+            let y = s.forward(&w, &x, &opts, &mut XorShiftRng::new(0));
+            nmae(&y, &golden)
+        };
+        let e_inter = run(&interleaved);
+        let e_clust = run(&clustered);
+        assert!(e_inter < e_clust, "interleaved {e_inter} < clustered {e_clust}");
+    }
+
+    #[test]
+    fn all_columns_pruned_lr_outputs_noise_only_zero_signal() {
+        let s = sim(4, 8, 5.0);
+        let (w, x) = rand_problem(4, 8, 14);
+        let col_mask = vec![false; 8];
+        let opts = ForwardOptions {
+            col_mask: Some(&col_mask),
+            col_mode: ColumnMode::InputGatingLr,
+            ..Default::default()
+        };
+        let y = s.forward(&w, &x, &opts, &mut XorShiftRng::new(2));
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,15 @@
+//! Phase-agnostic incoherent photonic tensor core simulator (§3.1.1).
+//!
+//! * [`crossbar`] — single-PTC noisy MVM with the full non-ideality stack:
+//!   thermal crosstalk (Eqs. 8–9), driver phase noise, extinction-ratio
+//!   leakage, PD photocurrent noise (Eq. 11), and the three column-sparsity
+//!   operating modes of Fig. 5 (prune-only / IG / IG+LR) plus output gating.
+//! * [`sim`] — chunk-level execution: an `rk1 × ck2` weight chunk mapped
+//!   across r·c PTCs with analog partial-product accumulation across the
+//!   c cores of a tile (§3.3.3).
+
+pub mod crossbar;
+pub mod sim;
+
+pub use crossbar::{ColumnMode, ForwardOptions, PtcSimulator};
+pub use sim::ChunkSimulator;

@@ -1,0 +1,278 @@
+//! Chunk-level execution: one `rk1 × ck2` weight chunk mapped across an
+//! r×c grid of PTCs (§3.2, Fig. 2).
+//!
+//! * the c PTCs of a tile see disjoint k2-segments of the input and their
+//!   photocurrents sum in the analog domain into one shared TIA/ADC
+//!   (§3.3.3), so PD noise accumulates over all c·k2 nodes of a row;
+//! * the r tiles sharing an input-modulation module see the same inputs
+//!   but hold different k1-blocks of chunk rows;
+//! * each input module owns one 1×k2 rerouter per segment — the paper
+//!   assumes the same sparsity pattern for every k1×k2 block (§3.3.5), in
+//!   which case per-segment LR gains equal the shared-TIA rescale exactly.
+
+use super::crossbar::{ColumnMode, ForwardOptions, PtcSimulator};
+use crate::util::XorShiftRng;
+
+/// Chunk-level simulation options (masks are passed per call).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChunkOptions {
+    pub thermal: bool,
+    pub pd_noise: bool,
+    pub phase_noise: bool,
+    pub col_mode: ColumnMode,
+    pub output_gating: bool,
+}
+
+/// Simulates a full `rk1 × ck2` chunk on r·c PTC instances.
+#[derive(Debug, Clone)]
+pub struct ChunkSimulator {
+    pub ptc: PtcSimulator,
+    pub r: usize,
+    pub c: usize,
+}
+
+impl ChunkSimulator {
+    pub fn new(ptc: PtcSimulator, r: usize, c: usize) -> Self {
+        assert!(r > 0 && c > 0);
+        Self { ptc, r, c }
+    }
+
+    pub fn from_config(cfg: &crate::AcceleratorConfig) -> Self {
+        Self::new(PtcSimulator::from_config(cfg), cfg.share_r, cfg.share_c)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.r * self.ptc.k1
+    }
+
+    pub fn cols(&self) -> usize {
+        self.c * self.ptc.k2
+    }
+
+    /// Ideal chunk MVM with masks.
+    pub fn forward_ideal(
+        &self,
+        w: &[f64],
+        x: &[f64],
+        col_mask: Option<&[bool]>,
+        row_mask: Option<&[bool]>,
+    ) -> Vec<f64> {
+        let (rows, cols) = (self.rows(), self.cols());
+        assert_eq!(w.len(), rows * cols);
+        assert_eq!(x.len(), cols);
+        let mut y = vec![0.0; rows];
+        for i in 0..rows {
+            if let Some(rm) = row_mask {
+                if !rm[i] {
+                    continue;
+                }
+            }
+            let mut acc = 0.0;
+            for j in 0..cols {
+                if let Some(cm) = col_mask {
+                    if !cm[j] {
+                        continue;
+                    }
+                }
+                acc += w[i * cols + j] * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Noisy chunk MVM: block-decompose, run each PTC through the full
+    /// signal chain, and accumulate analog partial products per tile.
+    pub fn forward(
+        &self,
+        w: &[f64],
+        x: &[f64],
+        opts: &ChunkOptions,
+        col_mask: Option<&[bool]>,
+        row_mask: Option<&[bool]>,
+        rng: &mut XorShiftRng,
+    ) -> Vec<f64> {
+        let (k1, k2) = (self.ptc.k1, self.ptc.k2);
+        let (rows, cols) = (self.rows(), self.cols());
+        assert_eq!(w.len(), rows * cols, "chunk weight shape");
+        assert_eq!(x.len(), cols, "chunk input len");
+        if let Some(cm) = col_mask {
+            assert_eq!(cm.len(), cols);
+        }
+        if let Some(rm) = row_mask {
+            assert_eq!(rm.len(), rows);
+        }
+
+        let mut y = vec![0.0f64; rows];
+        let mut w_block = vec![0.0f64; k1 * k2];
+        for a in 0..self.r {
+            // row-block mask segment
+            let rm_seg: Option<Vec<bool>> =
+                row_mask.map(|rm| rm[a * k1..(a + 1) * k1].to_vec());
+            for b in 0..self.c {
+                let cm_seg: Option<Vec<bool>> =
+                    col_mask.map(|cm| cm[b * k2..(b + 1) * k2].to_vec());
+                // gather the k1×k2 block (a,b)
+                for i in 0..k1 {
+                    let src = (a * k1 + i) * cols + b * k2;
+                    w_block[i * k2..(i + 1) * k2].copy_from_slice(&w[src..src + k2]);
+                }
+                let fwd_opts = ForwardOptions {
+                    thermal: opts.thermal,
+                    pd_noise: opts.pd_noise,
+                    phase_noise: opts.phase_noise,
+                    col_mask: cm_seg.as_deref(),
+                    row_mask: rm_seg.as_deref(),
+                    col_mode: opts.col_mode,
+                    output_gating: opts.output_gating,
+                };
+                let yb = self.ptc.forward(&w_block, &x[b * k2..(b + 1) * k2], &fwd_opts, rng);
+                for i in 0..k1 {
+                    y[a * k1 + i] += yb[i];
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thermal::{coupling::ArrayGeometry, GammaModel};
+    use crate::util::nmae;
+
+    fn chunk_sim(r: usize, c: usize) -> ChunkSimulator {
+        let geom = ArrayGeometry { rows: 8, cols: 8, l_v: 120.0, l_h: 20.0, l_s: 9.0 };
+        let ptc = PtcSimulator::new(
+            geom,
+            &GammaModel::paper(),
+            crate::devices::DeviceLibrary::default(),
+        );
+        ChunkSimulator::new(ptc, r, c)
+    }
+
+    fn problem(rows: usize, cols: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = XorShiftRng::new(seed);
+        let mut w = vec![0.0; rows * cols];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let mut x = vec![0.0; cols];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        (w, x)
+    }
+
+    #[test]
+    fn noiseless_chunk_matches_ideal() {
+        let s = chunk_sim(2, 2);
+        let (w, x) = problem(16, 16, 1);
+        let y = s.forward(
+            &w,
+            &x,
+            &ChunkOptions::default(),
+            None,
+            None,
+            &mut XorShiftRng::new(0),
+        );
+        let ideal = s.forward_ideal(&w, &x, None, None);
+        assert!(nmae(&y, &ideal) < 1e-12);
+    }
+
+    #[test]
+    fn chunk_equals_blockwise_sum() {
+        // With 1x1 sharing the chunk sim must equal the bare PTC.
+        let s = chunk_sim(1, 1);
+        let (w, x) = problem(8, 8, 2);
+        let y_chunk = s.forward(
+            &w,
+            &x,
+            &ChunkOptions { thermal: true, ..Default::default() },
+            None,
+            None,
+            &mut XorShiftRng::new(3),
+        );
+        let opts = ForwardOptions { thermal: true, ..Default::default() };
+        let y_ptc = s.ptc.forward(&w, &x, &opts, &mut XorShiftRng::new(3));
+        assert!(nmae(&y_chunk, &y_ptc) < 1e-12);
+    }
+
+    #[test]
+    fn masked_chunk_gating_and_lr() {
+        let s = chunk_sim(2, 2);
+        let (w, x) = problem(16, 16, 4);
+        // uniform per-block pattern (paper §3.3.5): same k2-segment mask
+        let seg: Vec<bool> = (0..8).map(|j| j % 2 == 0).collect();
+        let col_mask: Vec<bool> = seg.iter().chain(seg.iter()).copied().collect();
+        let row_seg: Vec<bool> = (0..8).map(|i| i % 2 == 0).collect();
+        let row_mask: Vec<bool> = row_seg.iter().chain(row_seg.iter()).copied().collect();
+        let golden = s.forward_ideal(&w, &x, Some(&col_mask), Some(&row_mask));
+        let opts = ChunkOptions {
+            thermal: true,
+            pd_noise: true,
+            col_mode: ColumnMode::InputGatingLr,
+            output_gating: true,
+            ..Default::default()
+        };
+        let mut rng = XorShiftRng::new(5);
+        let mut e = 0.0;
+        for _ in 0..20 {
+            e += nmae(&s.forward(&w, &x, &opts, Some(&col_mask), Some(&row_mask), &mut rng), &golden);
+        }
+        e /= 20.0;
+        assert!(e < 0.15, "full SCATTER chunk error should be small: {e}");
+        // prune-only for comparison
+        let opts_p = ChunkOptions {
+            thermal: true,
+            pd_noise: true,
+            col_mode: ColumnMode::PruneOnly,
+            output_gating: false,
+            ..Default::default()
+        };
+        let mut rng = XorShiftRng::new(5);
+        let mut ep = 0.0;
+        for _ in 0..20 {
+            ep += nmae(
+                &s.forward(&w, &x, &opts_p, Some(&col_mask), Some(&row_mask), &mut rng),
+                &golden,
+            );
+        }
+        ep /= 20.0;
+        assert!(ep > e, "prune-only {ep} worse than SCATTER {e}");
+    }
+
+    #[test]
+    fn pd_noise_accumulates_across_tile_cores() {
+        // variance per output row scales with c*k2 nodes
+        let s1 = chunk_sim(1, 1);
+        let s2 = chunk_sim(1, 2);
+        let (w1, x1) = problem(8, 8, 6);
+        let (w2, x2) = problem(8, 16, 6);
+        let measure = |s: &ChunkSimulator, w: &[f64], x: &[f64]| {
+            let ideal = s.forward_ideal(w, x, None, None);
+            let opts = ChunkOptions { pd_noise: true, ..Default::default() };
+            let mut rng = XorShiftRng::new(8);
+            let mut acc2 = 0.0;
+            let trials = 2000;
+            for _ in 0..trials {
+                let y = s.forward(w, x, &opts, None, None, &mut rng);
+                for i in 0..y.len() {
+                    acc2 += (y[i] - ideal[i]).powi(2);
+                }
+            }
+            (acc2 / (trials * s.rows()) as f64).sqrt()
+        };
+        let std1 = measure(&s1, &w1, &x1);
+        let std2 = measure(&s2, &w2, &x2);
+        assert!(
+            (std2 / std1 - 2f64.sqrt()).abs() < 0.1,
+            "doubling c doubles noise nodes: {std1} {std2}"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_chunk_shape_panics() {
+        let s = chunk_sim(2, 2);
+        let (w, x) = problem(8, 8, 9);
+        let _ = s.forward(&w, &x, &ChunkOptions::default(), None, None, &mut XorShiftRng::new(0));
+    }
+}

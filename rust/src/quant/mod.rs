@@ -1,0 +1,169 @@
+//! Quantization helpers (§4.1: b_w = 8-bit symmetric signed per-tensor
+//! weights, b_in = 6-bit activations) and the non-negative isomorphic input
+//! transform of §3.3.1 (inputs must ride on light intensity, which is
+//! positive-only).
+
+
+/// Symmetric signed per-tensor quantizer: x → round(x/Δ)·Δ with
+/// Δ = max|x| / (2^(b−1) − 1).
+#[derive(Debug, Clone, Copy)]
+pub struct SymmetricQuant {
+    pub bits: u8,
+    pub scale: f64,
+}
+
+impl SymmetricQuant {
+    /// Calibrate the scale from data.
+    pub fn calibrate(bits: u8, data: &[f64]) -> Self {
+        assert!(bits >= 2);
+        let max = data.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        let levels = ((1u64 << (bits - 1)) - 1) as f64;
+        Self { bits, scale: if max == 0.0 { 1.0 } else { max / levels } }
+    }
+
+    pub fn with_scale(bits: u8, scale: f64) -> Self {
+        Self { bits, scale }
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f64) -> f64 {
+        let levels = ((1u64 << (self.bits - 1)) - 1) as f64;
+        (x / self.scale).round().clamp(-levels, levels) * self.scale
+    }
+
+    pub fn quantize_slice(&self, xs: &mut [f64]) {
+        for x in xs.iter_mut() {
+            *x = self.quantize(*x);
+        }
+    }
+
+    /// Integer code for x.
+    pub fn code(&self, x: f64) -> i64 {
+        let levels = ((1u64 << (self.bits - 1)) - 1) as i64;
+        ((x / self.scale).round() as i64).clamp(-levels, levels)
+    }
+}
+
+/// Unsigned activation quantizer over [0, max]: the paper's 6-bit
+/// activations after the non-negative transform.
+#[derive(Debug, Clone, Copy)]
+pub struct UnsignedQuant {
+    pub bits: u8,
+    pub max: f64,
+}
+
+impl UnsignedQuant {
+    pub fn calibrate(bits: u8, data: &[f64]) -> Self {
+        let max = data.iter().fold(0.0f64, |m, &x| m.max(x));
+        Self { bits, max: if max == 0.0 { 1.0 } else { max } }
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f64) -> f64 {
+        let levels = ((1u64 << self.bits) - 1) as f64;
+        (x.clamp(0.0, self.max) / self.max * levels).round() / levels * self.max
+    }
+}
+
+/// Non-negative isomorphic transform (§3.3.1, [13]): shift a signed input
+/// vector to x′ = x + b with b = −min(x, 0) so the optical intensity is
+/// positive; the output is corrected by subtracting W·b (accumulated once
+/// per weight row as a digital bias).
+#[derive(Debug, Clone)]
+pub struct NonNegTransform {
+    pub bias: f64,
+}
+
+impl NonNegTransform {
+    pub fn from_data(x: &[f64]) -> Self {
+        let min = x.iter().fold(0.0f64, |m, &v| m.min(v));
+        Self { bias: -min }
+    }
+
+    /// Shifted, guaranteed non-negative input.
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        x.iter().map(|&v| v + self.bias).collect()
+    }
+
+    /// Correction to subtract from output i: bias · Σ_j w_ij.
+    pub fn output_correction(&self, weight_row_sum: f64) -> f64 {
+        self.bias * weight_row_sum
+    }
+}
+
+/// Normalize a weight matrix to the PTC's implementable range [−1, 1]
+/// (§3.3.1); returns the scale to re-apply at readout.
+pub fn normalize_weights(w: &mut [f64]) -> f64 {
+    let max = w.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+    if max == 0.0 {
+        return 1.0;
+    }
+    for x in w.iter_mut() {
+        *x /= max;
+    }
+    max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_roundtrip_error_bounded() {
+        let data: Vec<f64> = (0..100).map(|i| (i as f64 - 50.0) / 37.0).collect();
+        let q = SymmetricQuant::calibrate(8, &data);
+        for &x in &data {
+            assert!((q.quantize(x) - x).abs() <= q.scale / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn symmetric_preserves_zero_and_sign() {
+        let q = SymmetricQuant::with_scale(8, 0.01);
+        assert_eq!(q.quantize(0.0), 0.0);
+        assert!(q.quantize(0.5) > 0.0);
+        assert!(q.quantize(-0.5) < 0.0);
+        assert_eq!(q.quantize(0.5), -q.quantize(-0.5));
+    }
+
+    #[test]
+    fn code_range_8bit() {
+        let q = SymmetricQuant::with_scale(8, 1.0 / 127.0);
+        assert_eq!(q.code(1.0), 127);
+        assert_eq!(q.code(-1.0), -127);
+        assert_eq!(q.code(10.0), 127, "clamped");
+    }
+
+    #[test]
+    fn unsigned_levels_6bit() {
+        let q = UnsignedQuant { bits: 6, max: 1.0 };
+        let lsb = 1.0 / 63.0;
+        assert!((q.quantize(0.5) - 0.5).abs() <= lsb / 2.0 + 1e-12);
+        assert_eq!(q.quantize(-1.0), 0.0);
+        assert_eq!(q.quantize(2.0), 1.0);
+    }
+
+    #[test]
+    fn nonneg_transform_correctness() {
+        let x = vec![-0.5, 0.25, -1.0, 0.75];
+        let w = vec![0.3, -0.2, 0.9, 0.1];
+        let t = NonNegTransform::from_data(&x);
+        let xs = t.apply(&x);
+        assert!(xs.iter().all(|&v| v >= 0.0));
+        // y' - correction == y
+        let y: f64 = w.iter().zip(&x).map(|(a, b)| a * b).sum();
+        let y_shift: f64 = w.iter().zip(&xs).map(|(a, b)| a * b).sum();
+        let corrected = y_shift - t.output_correction(w.iter().sum());
+        assert!((corrected - y).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_weights_unit_range() {
+        let mut w = vec![0.5, -2.0, 1.0];
+        let s = normalize_weights(&mut w);
+        assert_eq!(s, 2.0);
+        assert_eq!(w, vec![0.25, -1.0, 0.5]);
+        let mut z = vec![0.0, 0.0];
+        assert_eq!(normalize_weights(&mut z), 1.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! In-situ tunable light rerouter (§3.3.2, Fig. 5 *Right*).
+//!
+//! A binary tree of cascaded MZI power splitters replaces the passive even
+//! splitter tree on the input side. Given a column sparsity mask, each
+//! tree node is programmed with the split ratio `up : lo` equal to the
+//! count of active leaves in its two subtrees, so *all* optical power is
+//! steered to active ports — pruned ports receive (ideally) zero light and
+//! active ports are boosted by k2/k2′ (Eq. 14).
+
+pub mod redistribution;
+pub mod tree;
+
+pub use redistribution::{lr_noise_factor, lr_snr_gain_db};
+pub use tree::{RerouterTree, TreeNode};

@@ -1,0 +1,44 @@
+//! Light-redistribution SNR math (Eq. 14).
+//!
+//! With k2′ of k2 ports active, LR boosts active-port intensity by k2/k2′
+//! and the TIA gain is scaled back by k2′/k2, so the PD-noise term shrinks
+//! by k2′/k2 while the signal is unchanged — an SNR gain of
+//! `20·log10(k2/k2′)` dB on the noise-amplitude scale (the paper quotes
+//! ~7 dB at 20 % column sparsity... k2′/k2 = 0.8 → 10·log10((1/0.8)²) ≈ 1.9 dB
+//! per noise-power; the 7 dB figure also banks the eliminated leakage —
+//! both effects are measured separately by `bench::fig9`).
+
+/// Residual PD-noise scale factor after LR: k2′/k2 (Eq. 14).
+pub fn lr_noise_factor(k2_active: usize, k2: usize) -> f64 {
+    assert!(k2 > 0 && k2_active <= k2);
+    k2_active as f64 / k2 as f64
+}
+
+/// SNR gain in dB from the PD-noise reduction alone.
+pub fn lr_snr_gain_db(k2_active: usize, k2: usize) -> f64 {
+    if k2_active == 0 {
+        return f64::INFINITY;
+    }
+    -20.0 * lr_noise_factor(k2_active, k2).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_no_gain() {
+        assert_eq!(lr_noise_factor(16, 16), 1.0);
+        assert_eq!(lr_snr_gain_db(16, 16), 0.0);
+    }
+
+    #[test]
+    fn half_active_6db() {
+        assert!((lr_snr_gain_db(8, 16) - 6.0206).abs() < 1e-3);
+    }
+
+    #[test]
+    fn noise_factor_linear() {
+        assert!((lr_noise_factor(4, 16) - 0.25).abs() < 1e-12);
+    }
+}

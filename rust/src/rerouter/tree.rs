@@ -1,0 +1,219 @@
+//! The cascaded-MZI splitter tree and its mask-dependent programming.
+//!
+//! Programming rule (§3.3.5 "How to Calculate Power Metric for a Mask?"):
+//! for a node whose subtrees contain `up` and `lo` active leaves, the split
+//! ratio is up:lo and the phase is `Δφ = 2·arccos(√(up/(up+lo))) − φ_b`
+//! (φ_b = π/2). If up+lo = 0 the node idles at Δφ = 0.
+
+use crate::devices::Mzi;
+use std::f64::consts::FRAC_PI_2;
+
+/// One programmed splitter node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TreeNode {
+    /// Tree level (0 = root).
+    pub level: usize,
+    /// Index within the level.
+    pub index: usize,
+    /// Active leaves in the upper / lower subtree.
+    pub up: usize,
+    pub lo: usize,
+    /// Programmed phase (rad).
+    pub phase: f64,
+}
+
+impl TreeNode {
+    /// Fraction of this node's input power sent to the upper branch.
+    pub fn up_fraction(&self) -> f64 {
+        if self.up + self.lo == 0 {
+            0.5 // idle even split
+        } else {
+            self.up as f64 / (self.up + self.lo) as f64
+        }
+    }
+}
+
+/// A programmed 1×k rerouter tree (k must be a power of two; the paper's
+/// k2 = 16).
+#[derive(Debug, Clone)]
+pub struct RerouterTree {
+    pub leaves: usize,
+    pub nodes: Vec<TreeNode>,
+}
+
+impl RerouterTree {
+    /// Program the tree for a column mask (`true` = active port).
+    pub fn program(mask: &[bool]) -> Self {
+        let k = mask.len();
+        assert!(k.is_power_of_two() && k >= 2, "rerouter needs power-of-two ports, got {k}");
+        let levels = k.trailing_zeros() as usize;
+        let mut nodes = Vec::with_capacity(k - 1);
+        // active-leaf counts per subtree, computed bottom-up
+        // count[l][i] = number of active leaves under node i at level l
+        let mut counts: Vec<usize> = mask.iter().map(|&m| m as usize).collect();
+        for level in (0..levels).rev() {
+            let n_nodes = 1usize << level;
+            let mut next = Vec::with_capacity(n_nodes);
+            for i in 0..n_nodes {
+                let up = counts[2 * i];
+                let lo = counts[2 * i + 1];
+                let total = up + lo;
+                let phase = if total == 0 {
+                    0.0
+                } else {
+                    2.0 * ((up as f64 / total as f64).sqrt()).acos() - FRAC_PI_2
+                };
+                nodes.push(TreeNode { level, index: i, up, lo, phase });
+                next.push(total);
+            }
+            counts = next;
+        }
+        // order root-first for readability
+        nodes.sort_by_key(|n| (n.level, n.index));
+        Self { leaves: k, nodes }
+    }
+
+    /// Per-leaf power fractions delivered by the programmed tree for a
+    /// unit input. Active leaves each get 1/k2′; pruned leaves get 0
+    /// (up to splitter ideality, modeled in `ptc::sim`).
+    pub fn leaf_powers(&self) -> Vec<f64> {
+        let mut powers = vec![1.0f64];
+        for level in 0..self.levels() {
+            let mut next = Vec::with_capacity(powers.len() * 2);
+            for (i, &p) in powers.iter().enumerate() {
+                let node = self.node(level, i);
+                let fu = node.up_fraction();
+                next.push(p * fu);
+                next.push(p * (1.0 - fu));
+            }
+            powers = next;
+        }
+        powers
+    }
+
+    /// Total electrical hold power (mW) of the programmed tree using the
+    /// rerouter MZI device at arm spacing l_s.
+    pub fn power_mw(&self, mzi: &Mzi) -> f64 {
+        self.nodes.iter().map(|n| mzi.power_mw(n.phase)).sum()
+    }
+
+    /// Number of active leaves (k2′).
+    pub fn active_leaves(&self) -> usize {
+        let root = &self.nodes[0];
+        root.up + root.lo
+    }
+
+    pub fn levels(&self) -> usize {
+        self.leaves.trailing_zeros() as usize
+    }
+
+    fn node(&self, level: usize, index: usize) -> &TreeNode {
+        // nodes are sorted (level, index); level l starts at 2^l - 1
+        &self.nodes[(1 << level) - 1 + index]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::MziSpec;
+    use crate::thermal::gamma::GammaModel;
+
+    fn mzi() -> Mzi {
+        Mzi::new(MziSpec::low_power(), 9.0, &GammaModel::paper())
+    }
+
+    #[test]
+    fn all_active_is_even_split() {
+        let t = RerouterTree::program(&[true; 8]);
+        let p = t.leaf_powers();
+        for &x in &p {
+            assert!((x - 0.125).abs() < 1e-12);
+        }
+        assert_eq!(t.active_leaves(), 8);
+        // even split = φ = 0 everywhere = zero hold power
+        assert!(t.power_mw(&mzi()) < 1e-12);
+    }
+
+    #[test]
+    fn paper_example_mask_10110010() {
+        // §3.3.5: m^c = 10110010 -> root ratio up:lo = 3:1
+        let mask = [true, false, true, true, false, false, true, false];
+        let t = RerouterTree::program(&mask);
+        let root = &t.nodes[0];
+        assert_eq!((root.up, root.lo), (3, 1));
+        let p = t.leaf_powers();
+        // all active leaves get 1/4 of the light, pruned get 0
+        for (i, &m) in mask.iter().enumerate() {
+            if m {
+                assert!((p[i] - 0.25).abs() < 1e-12, "leaf {i}: {}", p[i]);
+            } else {
+                assert!(p[i].abs() < 1e-12, "pruned leaf {i} gets {}", p[i]);
+            }
+        }
+        assert_eq!(t.active_leaves(), 4);
+    }
+
+    #[test]
+    fn power_conservation() {
+        let masks: [&[bool]; 3] = [
+            &[true, true, false, true, false, false, true, true],
+            &[true; 16],
+            &[false, true, false, false, true, false, false, false,
+              false, false, true, false, false, false, false, true],
+        ];
+        for mask in masks {
+            let t = RerouterTree::program(mask);
+            let total: f64 = t.leaf_powers().iter().sum();
+            assert!((total - 1.0).abs() < 1e-12, "light is conserved");
+        }
+    }
+
+    #[test]
+    fn boost_factor_is_k2_over_active() {
+        // 8 ports, 2 active -> each active port gets 1/2 = (1/8)·(8/2)
+        let mask = [false, false, true, false, false, false, false, true];
+        let t = RerouterTree::program(&mask);
+        let p = t.leaf_powers();
+        assert!((p[2] - 0.5).abs() < 1e-12);
+        assert!((p[7] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_pruned_idles() {
+        let t = RerouterTree::program(&[false; 8]);
+        assert_eq!(t.active_leaves(), 0);
+        for n in &t.nodes {
+            assert_eq!(n.phase, 0.0, "idle nodes at Δφ=0");
+        }
+    }
+
+    #[test]
+    fn phases_bounded_pm_half_pi() {
+        let mask = [true, false, false, false, true, true, true, false];
+        let t = RerouterTree::program(&mask);
+        for n in &t.nodes {
+            assert!(n.phase.abs() <= FRAC_PI_2 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn mask_power_ordering_clustered_cheaper() {
+        // The bias point phi_b = pi/2 is the even split, so steering costs
+        // power: an interleaved mask pays a full-swing leaf node per pair,
+        // while a clustered mask steers once at the root — 4x cheaper.
+        let interleaved = [true, false, true, false, true, false, true, false];
+        let clustered = [true, true, true, true, false, false, false, false];
+        let m = mzi();
+        let pi_ = RerouterTree::program(&interleaved).power_mw(&m);
+        let pc = RerouterTree::program(&clustered).power_mw(&m);
+        assert!(pc < pi_, "clustered {pc} < interleaved {pi_}");
+        assert!((pi_ / pc - 4.0).abs() < 1e-9, "ratio {}", pi_ / pc);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        let _ = RerouterTree::program(&[true; 6]);
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them natively.
+//!
+//! Python runs only at build time; this module is the request-path bridge.
+//! Interchange format is **HLO text**, not serialized protos — jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+
+pub use artifact::{ArtifactRuntime, CompiledArtifact};

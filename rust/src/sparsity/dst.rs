@@ -1,0 +1,259 @@
+//! Algorithm 1 — power/crosstalk-aware dynamic sparse training — mask
+//! update machinery (the gradient/weight statistics come from the caller,
+//! which is the JAX training loop at build time or the rust deployment
+//! refinement in `coordinator`).
+//!
+//! Per update (every ΔT steps while t < T_end):
+//! 1. death rate α ← (α0/2)(1 + cos(tπ/T_end));
+//! 2. **prune**: D = ⌈α·Σ(m^r ⊙ m^c)⌉ weights ⇒ n_c = D / (Σm^r / (p·q))
+//!    columns; candidates = smallest-ℓ2 active columns (n_c + Δm of them);
+//!    the C(n_c+Δm, n_c) combination with minimum power is pruned;
+//! 3. **grow**: restore the same number of columns, candidates by largest
+//!    gradient norm, again minimum-power combination.
+
+use super::mask::LayerMask;
+use super::power_opt::select_min_power_combination;
+use crate::devices::Mzi;
+
+/// Cosine-decayed death rate (Alg. 1 line 8).
+pub fn cosine_death_rate(alpha0: f64, t: usize, t_end: usize) -> f64 {
+    if t >= t_end {
+        return 0.0;
+    }
+    alpha0 / 2.0 * (1.0 + (t as f64 * std::f64::consts::PI / t_end as f64).cos())
+}
+
+/// DST controller state for one layer.
+#[derive(Debug, Clone)]
+pub struct DstState {
+    pub mask: LayerMask,
+    /// Target density s (fraction nonzero).
+    pub target_density: f64,
+    /// Initial death rate α0.
+    pub alpha0: f64,
+    /// Step at which prune/grow stops (80 % of training).
+    pub t_end: usize,
+    /// Selection margin Δm.
+    pub margin: usize,
+    /// Rerouter segment width k2.
+    pub k2: usize,
+    /// Combination-enumeration cap.
+    pub cap: usize,
+}
+
+impl DstState {
+    pub fn new(mask: LayerMask, target_density: f64, alpha0: f64, t_end: usize, k2: usize) -> Self {
+        Self { mask, target_density, alpha0, t_end, margin: 2, k2, cap: 10_000 }
+    }
+
+    /// Number of columns to prune this round for a chunk grid (Alg. 1
+    /// lines 9–10): the death count D spread over columns, where each
+    /// column holds Σm^r/(p·q) active weights.
+    fn columns_to_prune(&self, alpha: f64) -> usize {
+        let active = self.mask.active_elements() as f64;
+        let d = (alpha * active).ceil();
+        let pq = (self.mask.p * self.mask.q) as f64;
+        let rows_per_chunk: f64 = self
+            .mask
+            .chunks
+            .iter()
+            .map(|c| c.active_rows() as f64)
+            .sum::<f64>()
+            / pq;
+        if rows_per_chunk == 0.0 {
+            return 0;
+        }
+        // per-chunk column count, spread over all chunks
+        ((d / rows_per_chunk) / pq).round() as usize
+    }
+
+    /// One prune+grow round.
+    ///
+    /// * `col_l2[chunk][col]` — ℓ2 norms of each column's weights;
+    /// * `col_grad[chunk][col]` — gradient norms for the growth stage;
+    /// * `t` — current step.
+    ///
+    /// Returns the death rate used (0 ⇒ no-op round).
+    pub fn update(
+        &mut self,
+        col_l2: &[Vec<f64>],
+        col_grad: &[Vec<f64>],
+        t: usize,
+        mzi: &Mzi,
+    ) -> f64 {
+        if t >= self.t_end {
+            return 0.0;
+        }
+        let alpha = cosine_death_rate(self.alpha0, t, self.t_end);
+        let n_c = self.columns_to_prune(alpha);
+        if n_c == 0 {
+            return alpha;
+        }
+        assert_eq!(col_l2.len(), self.mask.chunks.len());
+        assert_eq!(col_grad.len(), self.mask.chunks.len());
+
+        for (ci, chunk) in self.mask.chunks.iter_mut().enumerate() {
+            // ---- prune stage ----
+            let mut active: Vec<usize> =
+                (0..chunk.cols).filter(|&j| chunk.col[j]).collect();
+            if active.len() <= n_c {
+                continue; // nothing sensible to prune
+            }
+            active.sort_by(|&a, &b| {
+                col_l2[ci][a].partial_cmp(&col_l2[ci][b]).unwrap()
+            });
+            let pool: Vec<usize> =
+                active.iter().copied().take((n_c + self.margin).min(active.len())).collect();
+            let to_prune = select_min_power_combination(
+                &chunk.col, &pool, n_c.min(pool.len()), false, self.k2, mzi, self.cap,
+            );
+            for &j in &to_prune {
+                chunk.col[j] = false;
+            }
+
+            // ---- grow stage ----
+            // restore enough columns to return to the target density
+            let rows = chunk.active_rows().max(1);
+            let target_active =
+                (self.target_density * (chunk.rows * chunk.cols) as f64).round() as usize;
+            let cur_active = chunk.active_elements();
+            let n_grow = if target_active > cur_active {
+                ((target_active - cur_active) as f64 / rows as f64).round() as usize
+            } else {
+                0
+            };
+            if n_grow == 0 {
+                continue;
+            }
+            let mut inactive: Vec<usize> =
+                (0..chunk.cols).filter(|&j| !chunk.col[j]).collect();
+            inactive.sort_by(|&a, &b| {
+                col_grad[ci][b].partial_cmp(&col_grad[ci][a]).unwrap()
+            });
+            let pool: Vec<usize> = inactive
+                .iter()
+                .copied()
+                .take((n_grow + self.margin).min(inactive.len()))
+                .collect();
+            let to_grow = select_min_power_combination(
+                &chunk.col, &pool, n_grow.min(pool.len()), true, self.k2, mzi, self.cap,
+            );
+            for &j in &to_grow {
+                chunk.col[j] = true;
+            }
+        }
+        alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::MziSpec;
+    use crate::sparsity::init::init_layer_mask;
+    use crate::thermal::GammaModel;
+    use crate::util::XorShiftRng;
+
+    fn mzi() -> Mzi {
+        Mzi::new(MziSpec::low_power(), 9.0, &GammaModel::paper())
+    }
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        assert!((cosine_death_rate(0.5, 0, 100) - 0.5).abs() < 1e-12);
+        let mid = cosine_death_rate(0.5, 50, 100);
+        assert!((mid - 0.25).abs() < 1e-12);
+        assert!(cosine_death_rate(0.5, 100, 100) == 0.0);
+        assert!(cosine_death_rate(0.5, 150, 100) == 0.0);
+    }
+
+    #[test]
+    fn schedule_monotone_decreasing() {
+        let mut prev = f64::INFINITY;
+        for t in (0..100).step_by(10) {
+            let a = cosine_death_rate(0.5, t, 100);
+            assert!(a <= prev);
+            prev = a;
+        }
+    }
+
+    fn stats(state: &DstState, seed: u64) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        let mut rng = XorShiftRng::new(seed);
+        let l2: Vec<Vec<f64>> = state
+            .mask
+            .chunks
+            .iter()
+            .map(|c| (0..c.cols).map(|_| rng.uniform()).collect())
+            .collect();
+        let grad: Vec<Vec<f64>> = state
+            .mask
+            .chunks
+            .iter()
+            .map(|c| (0..c.cols).map(|_| rng.uniform()).collect())
+            .collect();
+        (l2, grad)
+    }
+
+    #[test]
+    fn density_preserved_across_updates() {
+        let (mask, _, _) = init_layer_mask(2, 2, 16, 32, 16, 0.4, &mzi());
+        let d0 = mask.density();
+        let mut st = DstState::new(mask, 0.4, 0.5, 1000, 16);
+        for (i, t) in (0..1000).step_by(100).enumerate() {
+            let (l2, grad) = stats(&st, i as u64);
+            st.update(&l2, &grad, t, &mzi());
+            let d = st.mask.density();
+            assert!(
+                (d - d0).abs() < 0.15,
+                "density drifted at t={t}: {d} vs {d0}"
+            );
+        }
+    }
+
+    #[test]
+    fn masks_frozen_after_t_end() {
+        let (mask, _, _) = init_layer_mask(1, 1, 16, 32, 16, 0.4, &mzi());
+        let mut st = DstState::new(mask, 0.4, 0.5, 100, 16);
+        let before = st.mask.clone();
+        let (l2, grad) = stats(&st, 3);
+        let alpha = st.update(&l2, &grad, 100, &mzi());
+        assert_eq!(alpha, 0.0);
+        assert_eq!(st.mask.chunks[0], before.chunks[0]);
+    }
+
+    #[test]
+    fn prune_pool_is_smallest_l2() {
+        // init dense-ish, but target a LOWER density so the growth stage
+        // cannot fully restore what pruning removed.
+        let (mask, _, _) = init_layer_mask(1, 1, 16, 16, 16, 0.9, &mzi());
+        let mut st = DstState::new(mask, 0.5, 0.6, 100, 16);
+        // distinct norms: columns 12..15 have the largest l2 and never
+        // enter the candidate pool, so they must survive pruning.
+        let l2: Vec<Vec<f64>> = vec![(0..16).map(|j| (j + 1) as f64).collect()];
+        let grad = vec![vec![0.0; 16]];
+        st.update(&l2, &grad, 0, &mzi());
+        let col = &st.mask.chunks[0].col;
+        let pruned: Vec<usize> = (0..16).filter(|&j| !col[j]).collect();
+        assert!(!pruned.is_empty(), "net pruning must happen at target 0.5 < init 0.9");
+        assert!(
+            pruned.iter().all(|&j| j < 12),
+            "largest-l2 columns must survive: pruned={pruned:?}"
+        );
+        // density moved toward the target
+        assert!(st.mask.density() < 0.9);
+    }
+
+    #[test]
+    fn row_mask_untouched_by_updates() {
+        let (mask, _, _) = init_layer_mask(1, 2, 16, 32, 16, 0.3, &mzi());
+        let row0 = mask.chunks[0].row.clone();
+        let mut st = DstState::new(mask, 0.3, 0.5, 500, 16);
+        for t in (0..500).step_by(50) {
+            let (l2, grad) = stats(&st, t as u64);
+            st.update(&l2, &grad, t, &mzi());
+        }
+        for c in &st.mask.chunks {
+            assert_eq!(c.row, row0, "Alg. 1 fixes the row mask after init");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Crosstalk/power-minimized mask initialization (Alg. 1 lines 1–3).
+//!
+//! * Row density `s^r = max(s, 0.5)`: at most half the rows are pruned and
+//!   the zeros are interleaved (`1010…` at 50 %) so every surviving MZI has
+//!   a powered-off horizontal neighbor — the minimum-crosstalk pattern of
+//!   Fig. 9(a). The paper's worked example: s^r = 0.75, rk1 = 8 →
+//!   `11111010`.
+//! * Column density `s^c = s / s^r`, with the active set chosen per chunk
+//!   to minimize rerouter power (balanced subtree counts are cheapest).
+
+use super::mask::{ChunkMask, LayerMask};
+use super::power_opt::best_segment_mask;
+use crate::devices::Mzi;
+
+/// Interleaved row mask with `density` fraction of ones: zeros are placed
+/// from the tail at every other position (paper's worked example).
+pub fn interleaved_row_mask(n: usize, density: f64) -> Vec<bool> {
+    assert!((0.0..=1.0).contains(&density));
+    let n_zero = ((1.0 - density) * n as f64).round() as usize;
+    assert!(
+        n_zero <= n / 2,
+        "interleaved pattern supports at most 50% row pruning ({n_zero} zeros of {n})"
+    );
+    let mut mask = vec![true; n];
+    // zeros at n-1, n-3, n-5, ... keeps every zero isolated between ones
+    let mut pos = n as isize - 1;
+    for _ in 0..n_zero {
+        mask[pos as usize] = false;
+        pos -= 2;
+    }
+    mask
+}
+
+/// Initialize a layer mask for target density `s` on a p×q grid of
+/// `rows × cols` chunks whose rerouter segments are `k2` ports wide.
+///
+/// Returns the mask and the (s^r, s^c) split actually used.
+pub fn init_layer_mask(
+    p: usize,
+    q: usize,
+    rows: usize,
+    cols: usize,
+    k2: usize,
+    s: f64,
+    rerouter_mzi: &Mzi,
+) -> (LayerMask, f64, f64) {
+    assert!(cols % k2 == 0, "chunk cols must be a multiple of k2");
+    assert!((0.0..=1.0).contains(&s), "density in [0,1]");
+    let s_r = s.max(0.5);
+    let s_c = (s / s_r).min(1.0);
+
+    let row = interleaved_row_mask(rows, s_r);
+
+    // per-segment column pattern, identical across the chunk's c segments
+    // (paper: same pattern per k1×k2 block) and across chunks at init;
+    // power-aware DST will diversify them later.
+    let active_per_seg = (s_c * k2 as f64).round() as usize;
+    let seg = best_segment_mask(k2, active_per_seg, rerouter_mzi, 20_000);
+    let col: Vec<bool> = (0..cols).map(|j| seg[j % k2]).collect();
+
+    let chunk = ChunkMask::new(row, col);
+    let lm = LayerMask { p, q, chunks: vec![chunk; p * q] };
+    (lm, s_r, s_c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::MziSpec;
+    use crate::thermal::GammaModel;
+
+    fn mzi() -> Mzi {
+        Mzi::new(MziSpec::low_power(), 9.0, &GammaModel::paper())
+    }
+
+    #[test]
+    fn paper_worked_example_11111010() {
+        let m = interleaved_row_mask(8, 0.75);
+        let s: String = m.iter().map(|&b| if b { '1' } else { '0' }).collect();
+        assert_eq!(s, "11111010");
+    }
+
+    #[test]
+    fn half_density_is_1010() {
+        let m = interleaved_row_mask(8, 0.5);
+        let s: String = m.iter().map(|&b| if b { '1' } else { '0' }).collect();
+        assert_eq!(s, "10101010");
+    }
+
+    #[test]
+    fn full_density_all_ones() {
+        assert!(interleaved_row_mask(16, 1.0).iter().all(|&b| b));
+    }
+
+    #[test]
+    fn zeros_always_isolated() {
+        for n in [4usize, 8, 12, 16, 64] {
+            for d in [0.5, 0.6, 0.75, 0.9] {
+                let m = interleaved_row_mask(n, d);
+                for i in 0..n - 1 {
+                    assert!(
+                        m[i] || m[i + 1],
+                        "adjacent zeros at {i} for n={n} d={d}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_below_half_density() {
+        let _ = interleaved_row_mask(8, 0.3);
+    }
+
+    #[test]
+    fn init_splits_density_per_paper() {
+        // s = 0.3 -> s^r = 0.5, s^c = 0.6
+        let (lm, s_r, s_c) = init_layer_mask(2, 3, 64, 64, 16, 0.3, &mzi());
+        assert_eq!(s_r, 0.5);
+        assert!((s_c - 0.6).abs() < 1e-12);
+        // realized density ≈ s (rounding to integer counts)
+        assert!((lm.density() - 0.3).abs() < 0.05, "density={}", lm.density());
+        // high target density: all sparsity goes to rows
+        let (_, s_r, s_c) = init_layer_mask(1, 1, 64, 64, 16, 0.75, &mzi());
+        assert_eq!(s_r, 0.75);
+        assert!((s_c - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn init_mask_row_is_interleaved() {
+        let (lm, _, _) = init_layer_mask(1, 1, 8, 16, 16, 0.3, &mzi());
+        let row = &lm.chunk(0, 0).row;
+        let s: String = row.iter().map(|&b| if b { '1' } else { '0' }).collect();
+        assert_eq!(s, "10101010");
+    }
+
+    #[test]
+    fn init_segment_pattern_repeats_per_k2() {
+        let (lm, _, _) = init_layer_mask(1, 1, 64, 64, 16, 0.4, &mzi());
+        let col = &lm.chunk(0, 0).col;
+        for j in 0..16 {
+            for seg in 1..4 {
+                assert_eq!(col[j], col[seg * 16 + j], "pattern must repeat per segment");
+            }
+        }
+    }
+}

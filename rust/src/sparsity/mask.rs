@@ -1,0 +1,189 @@
+//! Mask containers for chunked structured sparsity.
+
+
+/// Row/column mask of one `rows × cols` weight chunk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkMask {
+    pub rows: usize,
+    pub cols: usize,
+    /// `true` = active row (output kept).
+    pub row: Vec<bool>,
+    /// `true` = active column (input kept).
+    pub col: Vec<bool>,
+}
+
+impl ChunkMask {
+    pub fn dense(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, row: vec![true; rows], col: vec![true; cols] }
+    }
+
+    pub fn new(row: Vec<bool>, col: Vec<bool>) -> Self {
+        Self { rows: row.len(), cols: col.len(), row, col }
+    }
+
+    pub fn active_rows(&self) -> usize {
+        self.row.iter().filter(|&&m| m).count()
+    }
+
+    pub fn active_cols(&self) -> usize {
+        self.col.iter().filter(|&&m| m).count()
+    }
+
+    /// Element (i, j) survives iff both its row and column are active.
+    #[inline]
+    pub fn element(&self, i: usize, j: usize) -> bool {
+        self.row[i] && self.col[j]
+    }
+
+    /// Number of surviving weights.
+    pub fn active_elements(&self) -> usize {
+        self.active_rows() * self.active_cols()
+    }
+
+    /// Density (fraction of nonzero weights) of this chunk.
+    pub fn density(&self) -> f64 {
+        self.active_elements() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Apply to a row-major weight chunk in place.
+    pub fn apply(&self, w: &mut [f64]) {
+        assert_eq!(w.len(), self.rows * self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if !self.element(i, j) {
+                    w[i * self.cols + j] = 0.0;
+                }
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("row", Json::arr_bool(&self.row)),
+            ("col", Json::arr_bool(&self.col)),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::Json) -> crate::Result<Self> {
+        let row = v
+            .get("row")
+            .and_then(crate::util::Json::bool_vec)
+            .ok_or_else(|| crate::Error::Serde("chunk mask missing 'row'".into()))?;
+        let col = v
+            .get("col")
+            .and_then(crate::util::Json::bool_vec)
+            .ok_or_else(|| crate::Error::Serde("chunk mask missing 'col'".into()))?;
+        Ok(Self::new(row, col))
+    }
+}
+
+/// All chunk masks of one layer (p×q grid, row-major).
+#[derive(Debug, Clone)]
+pub struct LayerMask {
+    pub p: usize,
+    pub q: usize,
+    pub chunks: Vec<ChunkMask>,
+}
+
+impl LayerMask {
+    pub fn dense(p: usize, q: usize, rows: usize, cols: usize) -> Self {
+        Self { p, q, chunks: vec![ChunkMask::dense(rows, cols); p * q] }
+    }
+
+    pub fn chunk(&self, pi: usize, qi: usize) -> &ChunkMask {
+        &self.chunks[pi * self.q + qi]
+    }
+
+    pub fn chunk_mut(&mut self, pi: usize, qi: usize) -> &mut ChunkMask {
+        &mut self.chunks[pi * self.q + qi]
+    }
+
+    /// Layer-wide density.
+    pub fn density(&self) -> f64 {
+        let total: usize = self.chunks.iter().map(|c| c.rows * c.cols).sum();
+        let act: usize = self.chunks.iter().map(|c| c.active_elements()).sum();
+        act as f64 / total.max(1) as f64
+    }
+
+    /// Total active (nonzero) weights — `Σ (m^r ⊙ m^c)` in Alg. 1.
+    pub fn active_elements(&self) -> usize {
+        self.chunks.iter().map(|c| c.active_elements()).sum()
+    }
+
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("p", Json::Num(self.p as f64)),
+            ("q", Json::Num(self.q as f64)),
+            ("chunks", Json::Arr(self.chunks.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::Json) -> crate::Result<Self> {
+        use crate::util::Json;
+        let p = v.get("p").and_then(Json::as_usize).unwrap_or(1);
+        let q = v.get("q").and_then(Json::as_usize).unwrap_or(1);
+        let chunks = v
+            .get("chunks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| crate::Error::Serde("layer mask missing 'chunks'".into()))?
+            .iter()
+            .map(ChunkMask::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        if chunks.len() != p * q {
+            return Err(crate::Error::Serde(format!(
+                "layer mask has {} chunks, expected {}",
+                chunks.len(),
+                p * q
+            )));
+        }
+        Ok(Self { p, q, chunks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_mask_everything_active() {
+        let m = ChunkMask::dense(4, 8);
+        assert_eq!(m.active_rows(), 4);
+        assert_eq!(m.active_cols(), 8);
+        assert_eq!(m.density(), 1.0);
+    }
+
+    #[test]
+    fn element_is_row_and_col() {
+        let m = ChunkMask::new(vec![true, false], vec![true, true, false]);
+        assert!(m.element(0, 0));
+        assert!(!m.element(1, 0));
+        assert!(!m.element(0, 2));
+        assert_eq!(m.active_elements(), 2);
+    }
+
+    #[test]
+    fn apply_zeroes_pruned() {
+        let m = ChunkMask::new(vec![true, false], vec![true, false]);
+        let mut w = vec![1.0, 2.0, 3.0, 4.0];
+        m.apply(&mut w);
+        assert_eq!(w, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn layer_density_mixed() {
+        let mut lm = LayerMask::dense(1, 2, 2, 2);
+        lm.chunk_mut(0, 1).row = vec![true, false];
+        assert!((lm.density() - 0.75).abs() < 1e-12);
+        assert_eq!(lm.active_elements(), 6);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = ChunkMask::new(vec![true, false, true], vec![false, true]);
+        let s = m.to_json().to_string();
+        let back = ChunkMask::from_json(&crate::util::Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+}

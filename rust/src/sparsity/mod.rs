@@ -1,0 +1,22 @@
+//! Structured row-column sparsity (§3.3.5).
+//!
+//! A layer's im2col'd weight matrix (C_o × C_i·K²) is padded and
+//! partitioned into a p×q grid of `rk1 × ck2` chunks. Each chunk carries:
+//!
+//! * a **row mask** over its rk1 rows (output channels) — pruned rows get
+//!   TIA/ADC output gating; the pattern is *interleaved* to maximize the
+//!   physical spacing of active MZIs (crosstalk suppression, Fig. 9(a));
+//!   the paper fixes one row pattern for all chunks of a layer;
+//! * a **column mask** over its ck2 columns (input ports) — pruned columns
+//!   get DAC/MZM input gating and the rerouter redistributes their light;
+//!   column patterns are chosen *per chunk* to minimize power.
+
+pub mod dst;
+pub mod init;
+pub mod mask;
+pub mod power_opt;
+
+pub use dst::{cosine_death_rate, DstState};
+pub use init::{init_layer_mask, interleaved_row_mask};
+pub use mask::{ChunkMask, LayerMask};
+pub use power_opt::{best_segment_mask, mask_power_mw, select_min_power_combination};

@@ -1,0 +1,240 @@
+//! Power-aware column-mask selection (§3.3.5 "How to Calculate Power
+//! Metric for a Mask?" + the prune/grow candidate selection).
+//!
+//! The power of a column mask is the hold power of the rerouter trees it
+//! programs (splitting-ratio-dependent, via `P(|Δφ|, l_s)`) plus the
+//! gated/ungated DAC+MZM cost of its active ports. Among masks with equal
+//! cardinality the DAC term is constant, so the *rerouter* power breaks
+//! ties. Since the φ_b = π/2 bias point is the *even* split, steering
+//! costs power proportional to the deviation — and fully steering light
+//! away from a subtree costs the π/2 maximum. The cheapest masks therefore
+//! **cluster** their active ports so that only a few high-level nodes
+//! steer and the rest idle at the free even split (and clustering columns
+//! is crosstalk-free: input ports are vertical neighbours at l_v = 120 µm).
+
+use crate::devices::Mzi;
+use crate::rerouter::RerouterTree;
+
+/// Power metric (mW) of a column mask: sum of per-k2-segment rerouter hold
+/// power. `k2` is the rerouter width; `mask.len()` must be a multiple.
+pub fn mask_power_mw(mask: &[bool], k2: usize, mzi: &Mzi) -> f64 {
+    assert!(mask.len() % k2 == 0, "mask must cover whole segments");
+    mask.chunks(k2).map(|seg| RerouterTree::program(seg).power_mw(mzi)).sum()
+}
+
+/// Exhaustively (up to `cap` combinations) find the minimum-power mask of
+/// `k2` ports with exactly `n_active` active. Deterministic: ties resolve
+/// to the lexicographically first combination.
+pub fn best_segment_mask(k2: usize, n_active: usize, mzi: &Mzi, cap: usize) -> Vec<bool> {
+    assert!(n_active <= k2);
+    if n_active == k2 {
+        return vec![true; k2];
+    }
+    if n_active == 0 {
+        return vec![false; k2];
+    }
+    let mut best: Option<(f64, Vec<bool>)> = None;
+    let mut count = 0usize;
+    let mut visit = |mask: &Vec<bool>| {
+        let p = mask_power_mw(mask, k2, mzi);
+        if best.as_ref().map_or(true, |(bp, _)| p < *bp - 1e-15) {
+            best = Some((p, mask.clone()));
+        }
+    };
+    // lexicographic k-combinations with a visit cap
+    let mut idx: Vec<usize> = (0..n_active).collect();
+    loop {
+        let mut mask = vec![false; k2];
+        for &i in &idx {
+            mask[i] = true;
+        }
+        visit(&mask);
+        count += 1;
+        if count >= cap {
+            break;
+        }
+        // advance combination
+        let mut i = n_active;
+        loop {
+            if i == 0 {
+                return best.unwrap().1;
+            }
+            i -= 1;
+            if idx[i] != i + k2 - n_active {
+                break;
+            }
+        }
+        idx[i] += 1;
+        for j in i + 1..n_active {
+            idx[j] = idx[j - 1] + 1;
+        }
+    }
+    best.unwrap().1
+}
+
+/// Alg. 1 prune/grow helper: among `candidates` (column indices), choose
+/// `n_select` whose *deactivation* (for pruning) or *activation* (growth)
+/// minimizes total mask power. Enumerates all C(|candidates|, n_select)
+/// combinations up to `cap`; the candidate pool is small (n_c + Δm).
+///
+/// `base_mask` is the current column mask; `activate` = true for growth.
+/// Returns the chosen candidate indices.
+pub fn select_min_power_combination(
+    base_mask: &[bool],
+    candidates: &[usize],
+    n_select: usize,
+    activate: bool,
+    k2: usize,
+    mzi: &Mzi,
+    cap: usize,
+) -> Vec<usize> {
+    assert!(n_select <= candidates.len());
+    if n_select == 0 {
+        return Vec::new();
+    }
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    let mut count = 0usize;
+    let mut idx: Vec<usize> = (0..n_select).collect();
+    loop {
+        let chosen: Vec<usize> = idx.iter().map(|&i| candidates[i]).collect();
+        let mut mask = base_mask.to_vec();
+        for &c in &chosen {
+            mask[c] = activate;
+        }
+        let p = mask_power_mw(&mask, k2, mzi);
+        if best.as_ref().map_or(true, |(bp, _)| p < *bp - 1e-15) {
+            best = Some((p, chosen));
+        }
+        count += 1;
+        if count >= cap {
+            break;
+        }
+        let n = candidates.len();
+        let mut i = n_select;
+        loop {
+            if i == 0 {
+                return best.unwrap().1;
+            }
+            i -= 1;
+            if idx[i] != i + n - n_select {
+                break;
+            }
+        }
+        idx[i] += 1;
+        for j in i + 1..n_select {
+            idx[j] = idx[j - 1] + 1;
+        }
+    }
+    best.unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::MziSpec;
+    use crate::thermal::GammaModel;
+
+    fn mzi() -> Mzi {
+        Mzi::new(MziSpec::low_power(), 9.0, &GammaModel::paper())
+    }
+
+    #[test]
+    fn dense_mask_costs_nothing() {
+        let m = mzi();
+        assert!(mask_power_mw(&[true; 16], 16, &m) < 1e-12);
+    }
+
+    #[test]
+    fn best_mask_is_clustered() {
+        let m = mzi();
+        // 8 ports, 4 active: the optimum packs the active ports into one
+        // subtree so only the root steers (one pi/2 node); every other
+        // node idles at the free even split.
+        let best = best_segment_mask(8, 4, &m, 100_000);
+        let p_best = mask_power_mw(&best, 8, &m);
+        let clustered: Vec<bool> = (0..8).map(|i| i < 4).collect();
+        let p_clustered = mask_power_mw(&clustered, 8, &m);
+        assert!((p_best - p_clustered).abs() < 1e-12, "{p_best} vs {p_clustered}");
+        // the interleaved mask pays a full-swing leaf per pair: 4x worse
+        let inter: Vec<bool> = (0..8).map(|i| i % 2 == 0).collect();
+        let p_inter = mask_power_mw(&inter, 8, &m);
+        assert!(p_inter > p_best * 3.0, "interleaved {p_inter} vs best {p_best}");
+    }
+
+    #[test]
+    fn best_mask_has_exact_cardinality() {
+        let m = mzi();
+        for n in 0..=8 {
+            let mask = best_segment_mask(8, n, &m, 1_000_000);
+            assert_eq!(mask.iter().filter(|&&b| b).count(), n);
+        }
+    }
+
+    #[test]
+    fn odd_counts_still_minimized() {
+        let m = mzi();
+        let best = best_segment_mask(8, 3, &m, 1_000_000);
+        let p_best = mask_power_mw(&best, 8, &m);
+        // exhaustive check: nothing beats it
+        for a in 0..8 {
+            for b in a + 1..8 {
+                for c in b + 1..8 {
+                    let mut mask = vec![false; 8];
+                    mask[a] = true;
+                    mask[b] = true;
+                    mask[c] = true;
+                    assert!(mask_power_mw(&mask, 8, &m) >= p_best - 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cap_respected_and_still_returns_valid() {
+        let m = mzi();
+        let mask = best_segment_mask(16, 8, &m, 10);
+        assert_eq!(mask.iter().filter(|&&b| b).count(), 8);
+    }
+
+    #[test]
+    fn select_prune_forms_cluster() {
+        let m = mzi();
+        // start dense on 8 ports; prune 4 of candidates {0..7}: the
+        // minimum-power survivor set occupies one root subtree.
+        let base = vec![true; 8];
+        let candidates: Vec<usize> = (0..8).collect();
+        let chosen = select_min_power_combination(&base, &candidates, 4, false, 8, &m, 1_000_000);
+        let mut mask = base.clone();
+        for &c in &chosen {
+            mask[c] = false;
+        }
+        let p = mask_power_mw(&mask, 8, &m);
+        let clustered: Vec<bool> = (0..8).map(|i| i < 4).collect();
+        assert!((p - mask_power_mw(&clustered, 8, &m)).abs() < 1e-12);
+        // the pruned set is one whole subtree
+        let survivors: Vec<usize> = (0..8).filter(|j| mask[*j]).collect();
+        assert!(
+            survivors.iter().all(|&j| j < 4) || survivors.iter().all(|&j| j >= 4),
+            "survivors should cluster: {survivors:?}"
+        );
+    }
+
+    #[test]
+    fn grow_joins_the_cluster() {
+        let m = mzi();
+        // 2 active in the left subtree; growing 2 more is cheapest when
+        // they complete that subtree (only the root steers).
+        let base = vec![true, true, false, false, false, false, false, false];
+        let candidates: Vec<usize> = (2..8).collect();
+        let chosen = select_min_power_combination(&base, &candidates, 2, true, 8, &m, 1_000_000);
+        let mut mask = base.clone();
+        for &c in &chosen {
+            mask[c] = true;
+        }
+        assert_eq!(chosen, vec![2, 3], "grow completes the left subtree");
+        let p = mask_power_mw(&mask, 8, &m);
+        // strictly cheaper than spreading into the right subtree
+        let spread = [true, true, false, false, true, true, false, false];
+        assert!(p < mask_power_mw(&spread, 8, &m));
+    }
+}

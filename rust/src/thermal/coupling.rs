@@ -1,0 +1,302 @@
+//! Array-level inter-MZI thermal coupling (Eqs. 8–9).
+//!
+//! A `k2 × k1` PTC lays its weight MZIs on a grid: physical row = input
+//! index j (vertical pitch `l_v`), physical column = output index i
+//! (horizontal pitch `l_h = l_g + node width`). Each MZI has two heater
+//! arms separated by `l_s`; which arm is driven depends on the *sign* of
+//! the programmed phase (upper for Δφ ≥ 0, lower for Δφ < 0), so the
+//! aggressor→victim distance — and therefore the differential coupling
+//! Δγ_ij = γ(d_ij^up) − γ(d_ij^lo) — is phase-sign dependent (Eq. 9).
+//!
+//! We precompute two dense coupling matrices (aggressor-positive and
+//! aggressor-negative) so the runtime perturbation is two mat-vecs:
+//!
+//! ```text
+//!   Δφ̃ = Δφ + G⁺ · max(Δφ, 0) + G⁻ · max(−Δφ, 0)
+//! ```
+
+use super::gamma::GammaModel;
+
+/// Physical geometry of one PTC's MZI array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrayGeometry {
+    /// Physical rows (input dim k2).
+    pub rows: usize,
+    /// Physical columns (output dim k1).
+    pub cols: usize,
+    /// Vertical pitch l_v (µm).
+    pub l_v: f64,
+    /// Horizontal pitch l_h (µm) — gap + node width.
+    pub l_h: f64,
+    /// Arm spacing l_s (µm).
+    pub l_s: f64,
+}
+
+impl ArrayGeometry {
+    pub fn from_config(cfg: &crate::AcceleratorConfig) -> Self {
+        Self { rows: cfg.k2, cols: cfg.k1, l_v: cfg.l_v, l_h: cfg.l_h(), l_s: cfg.l_s }
+    }
+
+    pub fn n(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// (row, col) of flat index m (row-major: m = row·cols + col).
+    #[inline]
+    pub fn rc(&self, m: usize) -> (isize, isize) {
+        ((m / self.cols) as isize, (m % self.cols) as isize)
+    }
+}
+
+/// Precomputed phase-sign-dependent coupling matrices for one geometry.
+///
+/// Coupling is *local* (γ decays exponentially; vertical neighbours at
+/// l_v = 120 µm are below the cutoff), so besides the dense matrices —
+/// kept for AOT export parity with the Pallas kernel — a CSR form stores
+/// only the ~10 % nonzero entries; `perturb_phases` walks the CSR and is
+/// ~8× faster than the dense mat-vec (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct CouplingModel {
+    pub geom: ArrayGeometry,
+    /// Δγ for positive-phase aggressors, row-major [victim][aggressor].
+    g_pos: Vec<f64>,
+    /// Δγ for negative-phase aggressors.
+    g_neg: Vec<f64>,
+    /// CSR over the union sparsity pattern: row offsets into `entries`.
+    row_ptr: Vec<usize>,
+    /// (aggressor index, Δγ⁺, Δγ⁻) nonzero entries.
+    entries: Vec<(u32, f64, f64)>,
+}
+
+impl CouplingModel {
+    /// Build the coupling matrices from Eq. 9 distances and the γ(d) model.
+    ///
+    /// Couplings below `cutoff` are truncated to exact zero, which keeps
+    /// the matrices numerically sparse for far-apart pairs (γ decays
+    /// exponentially; beyond ~60 µm contributions are < 1e-4).
+    pub fn new(geom: ArrayGeometry, gamma: &GammaModel) -> Self {
+        Self::with_cutoff(geom, gamma, 1e-6)
+    }
+
+    pub fn with_cutoff(geom: ArrayGeometry, gamma: &GammaModel, cutoff: f64) -> Self {
+        let n = geom.n();
+        let mut g_pos = vec![0.0f64; n * n];
+        let mut g_neg = vec![0.0f64; n * n];
+        for i in 0..n {
+            let (ri, ci) = geom.rc(i);
+            for j in 0..n {
+                if i == j {
+                    continue; // intra-MZI handled in the device power model
+                }
+                let (rj, cj) = geom.rc(j);
+                let dy = (rj - ri) as f64 * geom.l_v;
+                let dx = (cj - ci) as f64 * geom.l_h;
+                // Eq. 9, aggressor positive (upper arm heated):
+                //   d_up: indicator(Δφ_j < 0) = 0  -> dx
+                //   d_lo: indicator(Δφ_j ≥ 0) = 1  -> dx + l_s
+                let d_up_pos = (dy * dy + dx * dx).sqrt();
+                let d_lo_pos = {
+                    let h = dx + geom.l_s;
+                    (dy * dy + h * h).sqrt()
+                };
+                // aggressor negative (lower arm heated):
+                //   d_up: dx − l_s ; d_lo: dx
+                let d_up_neg = {
+                    let h = dx - geom.l_s;
+                    (dy * dy + h * h).sqrt()
+                };
+                let d_lo_neg = d_up_pos;
+                let gp = gamma.differential(d_up_pos, d_lo_pos);
+                let gn = gamma.differential(d_up_neg, d_lo_neg);
+                if gp.abs() >= cutoff {
+                    g_pos[i * n + j] = gp;
+                }
+                if gn.abs() >= cutoff {
+                    g_neg[i * n + j] = gn;
+                }
+            }
+        }
+        // CSR over the union pattern
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut entries = Vec::new();
+        row_ptr.push(0);
+        for i in 0..n {
+            for j in 0..n {
+                let (gp, gn) = (g_pos[i * n + j], g_neg[i * n + j]);
+                if gp != 0.0 || gn != 0.0 {
+                    entries.push((j as u32, gp, gn));
+                }
+            }
+            row_ptr.push(entries.len());
+        }
+        Self { geom, g_pos, g_neg, row_ptr, entries }
+    }
+
+    /// Coupling entries for a (victim, aggressor) pair.
+    pub fn entry(&self, victim: usize, aggressor: usize, aggressor_positive: bool) -> f64 {
+        let n = self.geom.n();
+        if aggressor_positive {
+            self.g_pos[victim * n + aggressor]
+        } else {
+            self.g_neg[victim * n + aggressor]
+        }
+    }
+
+    /// Apply Eq. 8: perturb a flat phase vector (row-major over the array)
+    /// into `out`. `phases.len() == out.len() == rows·cols`. Walks only
+    /// the CSR nonzeros.
+    pub fn perturb_phases(&self, phases: &[f64], out: &mut [f64]) {
+        let n = self.geom.n();
+        assert_eq!(phases.len(), n, "phase vector must match array size");
+        assert_eq!(out.len(), n);
+        for i in 0..n {
+            let mut acc = phases[i];
+            for &(j, gp, gn) in &self.entries[self.row_ptr[i]..self.row_ptr[i + 1]] {
+                let p = phases[j as usize];
+                // Δγ(sign_j)·|Δφ_j|: gp for positive aggressors, gn negative
+                if p >= 0.0 {
+                    acc += gp * p;
+                } else {
+                    acc -= gn * p;
+                }
+            }
+            out[i] = acc;
+        }
+    }
+
+    /// Fraction of nonzero coupling entries (diagnostics / perf notes).
+    pub fn nnz_fraction(&self) -> f64 {
+        let n = self.geom.n();
+        self.entries.len() as f64 / (n * n) as f64
+    }
+
+    /// Convenience: perturbed copy.
+    pub fn perturbed(&self, phases: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; phases.len()];
+        self.perturb_phases(phases, &mut out);
+        out
+    }
+
+    /// Worst-case total coupling magnitude seen by any victim — a scalar
+    /// "how bad is this geometry" indicator used by Fig. 4(e).
+    pub fn worst_case_coupling(&self) -> f64 {
+        let n = self.geom.n();
+        (0..n)
+            .map(|i| {
+                (0..n)
+                    .map(|j| self.g_pos[i * n + j].abs().max(self.g_neg[i * n + j].abs()))
+                    .sum::<f64>()
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Export the dense positive/negative matrices (row-major) — consumed
+    /// by the AOT path so the Pallas kernel sees the identical model.
+    pub fn matrices(&self) -> (&[f64], &[f64]) {
+        (&self.g_pos, &self.g_neg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thermal::gamma::GammaModel;
+
+    fn geom(rows: usize, cols: usize, l_h: f64) -> ArrayGeometry {
+        ArrayGeometry { rows, cols, l_v: 120.0, l_h, l_s: 9.0 }
+    }
+
+    #[test]
+    fn zero_phases_unperturbed() {
+        let m = CouplingModel::new(geom(4, 4, 20.0), &GammaModel::paper());
+        let phases = vec![0.0; 16];
+        let out = m.perturbed(&phases);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn self_coupling_excluded() {
+        let m = CouplingModel::new(geom(2, 2, 20.0), &GammaModel::paper());
+        for i in 0..4 {
+            assert_eq!(m.entry(i, i, true), 0.0);
+            assert_eq!(m.entry(i, i, false), 0.0);
+        }
+    }
+
+    #[test]
+    fn single_aggressor_perturbs_horizontal_neighbor() {
+        // one row, two MZIs side by side at l_h = 20 µm
+        let m = CouplingModel::new(geom(1, 2, 20.0), &GammaModel::paper());
+        let mut phases = vec![0.0, 1.0]; // aggressor at col 1, positive
+        let out = m.perturbed(&phases);
+        // victim 0 picks up γ(d_up) − γ(d_lo) with d_up = 20, d_lo = 29
+        let g = GammaModel::paper();
+        let expect = g.differential(20.0, 29.0) * 1.0;
+        assert!((out[0] - expect).abs() < 1e-12, "{} vs {expect}", out[0]);
+        assert!(out[0] > 0.0, "positive aggressor drags victim positive");
+        // negative aggressor: heated lower arm is *closer* to victim 0? it
+        // sits at dx − l_s = 11 µm from victim's upper arm, 20 from lower
+        phases = vec![0.0, -1.0];
+        let out = m.perturbed(&phases);
+        let expect = g.differential(11.0, 20.0) * 1.0;
+        assert!((out[0] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vertical_neighbors_negligible() {
+        // l_v = 120 µm: same-column (vertical) MZIs barely couple
+        let m = CouplingModel::new(geom(2, 1, 20.0), &GammaModel::paper());
+        let out = m.perturbed(&[0.0, 1.5]);
+        assert!(out[0].abs() < 1e-4, "vertical coupling should be tiny: {}", out[0]);
+    }
+
+    #[test]
+    fn closer_pitch_couples_more() {
+        let g = GammaModel::paper();
+        let near = CouplingModel::new(geom(1, 2, 16.0), &g);
+        let far = CouplingModel::new(geom(1, 2, 40.0), &g);
+        let pn = near.perturbed(&[0.0, 1.0])[0].abs();
+        let pf = far.perturbed(&[0.0, 1.0])[0].abs();
+        assert!(pn > pf, "near={pn} far={pf}");
+    }
+
+    #[test]
+    fn worst_case_monotone_in_pitch() {
+        let g = GammaModel::paper();
+        let w16 = CouplingModel::new(geom(4, 4, 16.0), &g).worst_case_coupling();
+        let w22 = CouplingModel::new(geom(4, 4, 22.0), &g).worst_case_coupling();
+        let w35 = CouplingModel::new(geom(4, 4, 35.0), &g).worst_case_coupling();
+        assert!(w16 > w22 && w22 > w35, "{w16} {w22} {w35}");
+    }
+
+    #[test]
+    fn interleaved_pattern_reduces_aggression() {
+        // Fig. 9(a): gating alternate physical columns (row-sparsity with
+        // interleaved 1s) should reduce perturbation on the active ones.
+        let g = GammaModel::paper();
+        let m = CouplingModel::new(geom(1, 8, 16.0), &g);
+        let dense: Vec<f64> = (0..8).map(|_| 0.8).collect();
+        let mut inter = dense.clone();
+        for j in (1..8).step_by(2) {
+            inter[j] = 0.0; // powered-off MZIs aggress nothing
+        }
+        let pd = m.perturbed(&dense);
+        let pi = m.perturbed(&inter);
+        let err_dense: f64 =
+            (0..8).step_by(2).map(|i| (pd[i] - dense[i]).abs()).sum();
+        let err_inter: f64 =
+            (0..8).step_by(2).map(|i| (pi[i] - inter[i]).abs()).sum();
+        assert!(
+            err_inter < err_dense * 0.7,
+            "interleaving should cut crosstalk: {err_inter} vs {err_dense}"
+        );
+    }
+
+    #[test]
+    fn matrices_shapes() {
+        let m = CouplingModel::new(geom(3, 5, 20.0), &GammaModel::paper());
+        let (p, n) = m.matrices();
+        assert_eq!(p.len(), 15 * 15);
+        assert_eq!(n.len(), 15 * 15);
+    }
+}

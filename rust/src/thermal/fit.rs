@@ -1,0 +1,140 @@
+//! Least-squares fitting used by the heat-solver characterization to
+//! re-derive the Eq.-10 piecewise γ(d) model (Fig. 4(b)).
+
+/// Fit an (N−1)-degree polynomial to samples via the normal equations,
+/// solved with partially-pivoted Gaussian elimination. Returns [c0..c_{N-1}]
+/// for c0 + c1·d + … .
+pub fn fit_polynomial<const N: usize>(samples: &[(f64, f64)]) -> [f64; N] {
+    assert!(samples.len() >= N, "need at least {N} samples");
+    // Build A^T A (N x N) and A^T y.
+    let mut ata = [[0.0f64; N]; N];
+    let mut aty = [0.0f64; N];
+    for &(x, y) in samples {
+        let mut powers = [0.0f64; N];
+        let mut p = 1.0;
+        for slot in powers.iter_mut() {
+            *slot = p;
+            p *= x;
+        }
+        for i in 0..N {
+            aty[i] += powers[i] * y;
+            for j in 0..N {
+                ata[i][j] += powers[i] * powers[j];
+            }
+        }
+    }
+    solve_linear::<N>(&mut ata, &mut aty);
+    aty
+}
+
+/// Fit y = a0 · exp(−a1 x) by linear regression on ln(y). Samples with
+/// non-positive y are skipped. Returns [a0, a1].
+pub fn fit_exponential(samples: &[(f64, f64)]) -> [f64; 2] {
+    let pts: Vec<(f64, f64)> =
+        samples.iter().filter(|(_, y)| *y > 0.0).map(|&(x, y)| (x, y.ln())).collect();
+    assert!(pts.len() >= 2, "need at least 2 positive samples");
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let intercept = (sy - slope * sx) / n;
+    [intercept.exp(), -slope]
+}
+
+/// R² goodness of fit of a model against samples.
+pub fn r_squared(samples: &[(f64, f64)], model: impl Fn(f64) -> f64) -> f64 {
+    let mean_y: f64 = samples.iter().map(|p| p.1).sum::<f64>() / samples.len() as f64;
+    let ss_tot: f64 = samples.iter().map(|p| (p.1 - mean_y).powi(2)).sum();
+    let ss_res: f64 = samples.iter().map(|p| (p.1 - model(p.0)).powi(2)).sum();
+    if ss_tot == 0.0 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// In-place Gaussian elimination with partial pivoting: solves A x = b,
+/// leaving x in `b`.
+fn solve_linear<const N: usize>(a: &mut [[f64; N]; N], b: &mut [f64; N]) {
+    for col in 0..N {
+        // pivot
+        let mut pivot = col;
+        for row in col + 1..N {
+            if a[row][col].abs() > a[pivot][col].abs() {
+                pivot = row;
+            }
+        }
+        if pivot != col {
+            a.swap(col, pivot);
+            b.swap(col, pivot);
+        }
+        let diag = a[col][col];
+        assert!(diag.abs() > 1e-300, "singular normal matrix");
+        for row in col + 1..N {
+            let f = a[row][col] / diag;
+            for k in col..N {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // back substitution
+    for col in (0..N).rev() {
+        let mut acc = b[col];
+        for k in col + 1..N {
+            acc -= a[col][k] * b[k];
+        }
+        b[col] = acc / a[col][col];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_quadratic() {
+        let samples: Vec<(f64, f64)> =
+            (0..20).map(|i| (i as f64, 2.0 + 3.0 * i as f64 + 0.5 * (i * i) as f64)).collect();
+        let c = fit_polynomial::<3>(&samples);
+        assert!((c[0] - 2.0).abs() < 1e-8);
+        assert!((c[1] - 3.0).abs() < 1e-8);
+        assert!((c[2] - 0.5).abs() < 1e-8);
+    }
+
+    #[test]
+    fn recovers_exact_exponential() {
+        let samples: Vec<(f64, f64)> =
+            (0..30).map(|i| (i as f64, 0.217 * (-0.127 * i as f64).exp())).collect();
+        let [a0, a1] = fit_exponential(&samples);
+        assert!((a0 - 0.217).abs() < 1e-10);
+        assert!((a1 - 0.127).abs() < 1e-10);
+    }
+
+    #[test]
+    fn r_squared_perfect_and_poor() {
+        let samples: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 2.0 * i as f64)).collect();
+        assert!((r_squared(&samples, |x| 2.0 * x) - 1.0).abs() < 1e-12);
+        assert!(r_squared(&samples, |_| 0.0) < 0.0); // worse than the mean
+    }
+
+    #[test]
+    fn refits_paper_gamma_with_high_fidelity() {
+        // Sample the paper's own model and re-fit; should recover it.
+        let g = crate::thermal::gamma::GammaModel::paper();
+        let near: Vec<(f64, f64)> =
+            (0..46).map(|i| (i as f64 * 0.5, g.eval(i as f64 * 0.5))).collect();
+        let c = fit_polynomial::<6>(&near);
+        let refit = crate::thermal::gamma::GammaModel::new(c, [0.217, 0.127], 23.0);
+        let r2 = r_squared(&near, |d| refit.eval(d));
+        assert!(r2 > 0.995, "R2={r2}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn polynomial_needs_enough_samples() {
+        let _ = fit_polynomial::<6>(&[(0.0, 1.0), (1.0, 2.0)]);
+    }
+}

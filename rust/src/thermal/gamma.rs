@@ -1,0 +1,132 @@
+//! The distance-dependent thermal-coupling coefficient γ(d) (Eq. 10):
+//!
+//! ```text
+//!   γ(d) = Σ_{i=0..5} p_i d^i          for d < 23 µm
+//!        = a0 · exp(−a1 · d)           for d ≥ 23 µm
+//! ```
+//!
+//! The paper's published fit (R² = 0.999 / 0.998) is the golden default;
+//! `GammaModel::from_samples` re-derives coefficients from heat-solver
+//! samples (see `thermal::fit`), reproducing the Fig. 4(b) pipeline.
+
+
+/// Paper Eq. 10 polynomial coefficients [p0..p5].
+pub const PAPER_POLY: [f64; 6] = [1.0, -1.76e-1, 9.9e-3, -8.30e-6, -1.56e-5, 3.55e-7];
+/// Paper Eq. 10 exponential coefficients [a0, a1].
+pub const PAPER_EXP: [f64; 2] = [0.217, 0.127];
+/// Breakpoint between the polynomial and exponential branches (µm).
+pub const PAPER_BREAK_UM: f64 = 23.0;
+
+#[derive(Debug, Clone)]
+pub struct GammaModel {
+    pub poly: [f64; 6],
+    pub exp: [f64; 2],
+    pub break_um: f64,
+}
+
+impl Default for GammaModel {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl GammaModel {
+    /// The paper's published Eq.-10 fit.
+    pub fn paper() -> Self {
+        Self { poly: PAPER_POLY, exp: PAPER_EXP, break_um: PAPER_BREAK_UM }
+    }
+
+    pub fn new(poly: [f64; 6], exp: [f64; 2], break_um: f64) -> Self {
+        Self { poly, exp, break_um }
+    }
+
+    /// Evaluate γ(d) for a center distance d in µm. Clamped to [0, 1]:
+    /// coupling is a passive fraction of the aggressor phase.
+    #[inline]
+    pub fn eval(&self, d: f64) -> f64 {
+        let d = d.max(0.0);
+        let v = if d < self.break_um {
+            // Horner evaluation of the 5th-order polynomial.
+            let p = &self.poly;
+            ((((p[5] * d + p[4]) * d + p[3]) * d + p[2]) * d + p[1]) * d + p[0]
+        } else {
+            self.exp[0] * (-self.exp[1] * d).exp()
+        };
+        v.clamp(0.0, 1.0)
+    }
+
+    /// Differential coupling Δγ between an aggressor heater and the two
+    /// arms of a victim MZI (Eq. 8): γ(d_up) − γ(d_lo).
+    #[inline]
+    pub fn differential(&self, d_up: f64, d_lo: f64) -> f64 {
+        self.eval(d_up) - self.eval(d_lo)
+    }
+
+    /// Sample the model on a distance grid (for table pre-computation and
+    /// the Fig. 4(b) output).
+    pub fn sample(&self, d_max: f64, step: f64) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut d = 0.0;
+        while d <= d_max {
+            out.push((d, self.eval(d)));
+            d += step;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values_of_paper_fit() {
+        let g = GammaModel::paper();
+        assert!((g.eval(0.0) - 1.0).abs() < 1e-12, "self-coupling is 1");
+        // hand-computed points of the published polynomial
+        assert!((g.eval(9.0) - 0.13046).abs() < 1e-3, "gamma(9)={}", g.eval(9.0));
+        assert!((g.eval(5.0) - 0.35781).abs() < 1e-3, "gamma(5)={}", g.eval(5.0));
+        // exponential branch
+        let e30 = 0.217 * (-0.127f64 * 30.0).exp();
+        assert!((g.eval(30.0) - e30).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_decreasing_on_physical_range() {
+        let g = GammaModel::paper();
+        let mut prev = g.eval(0.5);
+        let mut d = 1.0;
+        while d < 22.0 {
+            let v = g.eval(d);
+            assert!(v <= prev + 1e-9, "gamma must decay on (0,22): d={d} v={v} prev={prev}");
+            prev = v;
+            d += 0.5;
+        }
+        // and the exponential branch always decays
+        assert!(g.eval(25.0) > g.eval(40.0));
+    }
+
+    #[test]
+    fn clamped_to_unit_interval() {
+        let g = GammaModel::paper();
+        for i in 0..400 {
+            let v = g.eval(i as f64 * 0.25);
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn differential_sign() {
+        let g = GammaModel::paper();
+        // victim arm closer to aggressor couples more
+        assert!(g.differential(5.0, 10.0) > 0.0);
+        assert!(g.differential(10.0, 5.0) < 0.0);
+        assert_eq!(g.differential(7.0, 7.0), 0.0);
+    }
+
+    #[test]
+    fn far_field_negligible() {
+        let g = GammaModel::paper();
+        assert!(g.eval(120.0) < 1e-6, "vertical neighbors (l_v=120) decoupled");
+    }
+}

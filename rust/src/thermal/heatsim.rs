@@ -1,0 +1,216 @@
+//! 2-D steady-state heat solver — the in-repo substitute for the paper's
+//! Lumerical HEAT characterization (Fig. 4(a,b)).
+//!
+//! We model the chip cross-section perpendicular to the waveguides:
+//! a TiN micro-heater strip sits on the oxide surface, the silicon
+//! waveguide core lies `cladding_um` below, the silicon substrate at the
+//! bottom is an isothermal heat sink. The steady-state temperature field
+//! solves ∇·(κ∇T) = −q with successive over-relaxation (SOR); the induced
+//! phase shift of a waveguide at lateral offset `d` is proportional to the
+//! temperature at its core (thermo-optic effect, dn/dT ≈ 1.8e-4 /K for Si).
+//!
+//! The coupling coefficient is the *ratio* γ(d) = Δφ(d)/Δφ(0) =
+//! T(d)/T(0), which is exactly how the paper defines γ ("with the same
+//! spacing, γ ∝ Δφ_i/Δφ_j is constant ... only a function of spacing").
+
+use super::fit::{fit_exponential, fit_polynomial};
+use super::gamma::GammaModel;
+
+/// Material stack and grid parameters for the cross-section solve.
+#[derive(Debug, Clone)]
+pub struct HeatSimConfig {
+    /// Lateral half-width of the simulated domain (µm).
+    pub half_width_um: f64,
+    /// Domain depth from heater plane to substrate sink (µm).
+    pub depth_um: f64,
+    /// Grid pitch (µm).
+    pub dx_um: f64,
+    /// Heater strip width (µm).
+    pub heater_width_um: f64,
+    /// Oxide thickness between heater and waveguide core (µm).
+    pub cladding_um: f64,
+    /// Thermal conductivity of the oxide cladding (W/m/K).
+    pub k_oxide: f64,
+    /// Thermal conductivity of silicon (substrate/device layer).
+    pub k_silicon: f64,
+    /// SOR relaxation factor.
+    pub omega: f64,
+    /// Convergence threshold on max update.
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+}
+
+impl Default for HeatSimConfig {
+    fn default() -> Self {
+        Self {
+            half_width_um: 60.0,
+            depth_um: 12.0,
+            dx_um: 0.5,
+            heater_width_um: 2.0,
+            cladding_um: 2.0,
+            k_oxide: 1.4,
+            k_silicon: 140.0,
+            omega: 1.85,
+            tol: 1e-7,
+            max_iters: 20_000,
+        }
+    }
+}
+
+/// Result of one cross-section solve.
+#[derive(Debug, Clone)]
+pub struct HeatField {
+    pub nx: usize,
+    pub ny: usize,
+    pub dx_um: f64,
+    /// Temperature rise field, row-major [ny][nx], arbitrary units.
+    pub t: Vec<f64>,
+    cfg: HeatSimConfig,
+}
+
+impl HeatField {
+    /// Temperature at the waveguide plane, lateral offset `d` µm from the
+    /// heater center (linear interpolation).
+    pub fn waveguide_temp(&self, d: f64) -> f64 {
+        let y = (self.cfg.cladding_um / self.dx_um).round() as usize;
+        let y = y.min(self.ny - 1);
+        let xc = (self.nx / 2) as f64;
+        let xf = xc + d / self.dx_um;
+        let x0 = xf.floor().max(0.0) as usize;
+        let x1 = (x0 + 1).min(self.nx - 1);
+        let frac = (xf - x0 as f64).clamp(0.0, 1.0);
+        let row = &self.t[y * self.nx..(y + 1) * self.nx];
+        row[x0.min(self.nx - 1)] * (1.0 - frac) + row[x1] * frac
+    }
+}
+
+/// Solve the steady-state temperature field for a single heater at the
+/// center of the domain driven with unit power density.
+pub fn solve(cfg: &HeatSimConfig) -> HeatField {
+    let nx = (2.0 * cfg.half_width_um / cfg.dx_um).round() as usize + 1;
+    let ny = (cfg.depth_um / cfg.dx_um).round() as usize + 1;
+    let mut t = vec![0.0f64; nx * ny];
+    // conductivity map: oxide above the substrate interface, silicon below
+    let si_start = ((cfg.depth_um - 2.0) / cfg.dx_um).round() as usize; // 2 µm Si handle top
+    let kappa = |y: usize| -> f64 {
+        if y >= si_start {
+            cfg.k_silicon
+        } else {
+            cfg.k_oxide
+        }
+    };
+    // heater source cells: top row, centered strip
+    let hw_cells = (cfg.heater_width_um / cfg.dx_um / 2.0).round() as isize;
+    let xc = (nx / 2) as isize;
+    let q = 1.0; // unit volumetric source
+    let mut iter = 0;
+    loop {
+        let mut max_delta = 0.0f64;
+        for y in 0..ny {
+            for x in 0..nx {
+                // Dirichlet sink at the bottom boundary (substrate) and at
+                // the lateral edges (far-field); insulating (mirror) at top.
+                if y == ny - 1 || x == 0 || x == nx - 1 {
+                    continue; // stays 0
+                }
+                let idx = y * nx + x;
+                let k_here = kappa(y);
+                let up = if y == 0 { t[idx + nx] } else { t[idx - nx] }; // mirror at top
+                let down = t[idx + nx];
+                let left = t[idx - 1];
+                let right = t[idx + 1];
+                let mut src = 0.0;
+                if y == 0 && (x as isize - xc).abs() <= hw_cells {
+                    src = q * cfg.dx_um * cfg.dx_um / k_here;
+                }
+                let new = 0.25 * (up + down + left + right + src);
+                let relaxed = t[idx] + cfg.omega * (new - t[idx]);
+                let delta = (relaxed - t[idx]).abs();
+                if delta > max_delta {
+                    max_delta = delta;
+                }
+                t[idx] = relaxed;
+            }
+        }
+        iter += 1;
+        if max_delta < cfg.tol || iter >= cfg.max_iters {
+            break;
+        }
+    }
+    HeatField { nx, ny, dx_um: cfg.dx_um, t, cfg: cfg.clone() }
+}
+
+/// Run the full Fig.-4(b) pipeline: solve the field once, sample
+/// γ(d) = T(d)/T(0) on a distance grid, and fit the paper's piecewise
+/// model (poly below `break_um`, exponential above).
+pub fn characterize(cfg: &HeatSimConfig, break_um: f64) -> (Vec<(f64, f64)>, GammaModel) {
+    let field = solve(cfg);
+    let t0 = field.waveguide_temp(0.0);
+    let mut samples = Vec::new();
+    let mut d = 0.0;
+    while d <= cfg.half_width_um * 0.8 {
+        samples.push((d, (field.waveguide_temp(d) / t0).clamp(0.0, 1.0)));
+        d += 1.0;
+    }
+    let near: Vec<(f64, f64)> =
+        samples.iter().copied().filter(|(d, _)| *d < break_um).collect();
+    let far: Vec<(f64, f64)> =
+        samples.iter().copied().filter(|(d, g)| *d >= break_um && *g > 1e-12).collect();
+    let poly = fit_polynomial::<6>(&near);
+    let exp = fit_exponential(&far);
+    (samples, GammaModel::new(poly, exp, break_um))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> HeatSimConfig {
+        HeatSimConfig {
+            half_width_um: 40.0,
+            depth_um: 10.0,
+            dx_um: 1.0,
+            max_iters: 5_000,
+            tol: 1e-8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn field_peaks_under_heater_and_decays() {
+        let f = solve(&small_cfg());
+        let t0 = f.waveguide_temp(0.0);
+        assert!(t0 > 0.0);
+        let t5 = f.waveguide_temp(5.0);
+        let t15 = f.waveguide_temp(15.0);
+        let t30 = f.waveguide_temp(30.0);
+        assert!(t0 > t5 && t5 > t15 && t15 > t30, "{t0} {t5} {t15} {t30}");
+    }
+
+    #[test]
+    fn field_is_symmetric() {
+        let f = solve(&small_cfg());
+        for d in [3.0, 7.0, 12.0] {
+            let a = f.waveguide_temp(d);
+            let b = f.waveguide_temp(-d);
+            assert!((a - b).abs() < 1e-6 * a.max(1e-12), "asymmetry at {d}");
+        }
+    }
+
+    #[test]
+    fn characterization_yields_decaying_fit() {
+        let (samples, model) = characterize(&small_cfg(), 20.0);
+        assert!(samples.len() > 20);
+        // fitted model reproduces the samples reasonably (it's our own fit)
+        for (d, g) in samples.iter().filter(|(d, _)| *d > 1.0 && *d < 30.0) {
+            let m = model.eval(*d);
+            assert!((m - g).abs() < 0.08, "fit deviates at d={d}: {m} vs {g}");
+        }
+        // γ(0) ≈ 1 by construction
+        assert!((model.eval(0.0) - 1.0).abs() < 0.05);
+        // decays with distance like the paper's curve
+        assert!(model.eval(5.0) > model.eval(15.0));
+        assert!(model.eval(25.0) > model.eval(35.0));
+    }
+}

@@ -1,0 +1,22 @@
+//! Thermal crosstalk substrate (§3.2.3, Fig. 4).
+//!
+//! The paper characterizes heater-to-waveguide thermal coupling with
+//! Lumerical HEAT/MODE FEM simulations and reduces it to a distance-only
+//! coefficient γ(d) (Eq. 10). We rebuild that pipeline:
+//!
+//! * [`heatsim`] — a 2-D steady-state heat solver over the chip cross
+//!   section (the Lumerical substitute) producing γ-vs-distance samples;
+//! * [`fit`] — least-squares fitting of the paper's piecewise model
+//!   (5th-order polynomial below 23 µm, exponential above) to those samples;
+//! * [`gamma`] — the fitted γ(d) model, shipping the paper's published
+//!   coefficients as the golden default;
+//! * [`coupling`] — the array-level coupling matrices of Eqs. 8–9 with the
+//!   phase-sign-dependent aggressor/victim distances.
+
+pub mod coupling;
+pub mod fit;
+pub mod gamma;
+pub mod heatsim;
+
+pub use coupling::CouplingModel;
+pub use gamma::GammaModel;

@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic RNG, math helpers, table printing.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use rng::XorShiftRng;
+pub use stats::{mean, nmae, snr_db};
+pub use table::Table;

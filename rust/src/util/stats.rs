@@ -1,0 +1,89 @@
+//! Error metrics used throughout the paper's evaluation.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Normalized mean-absolute error (N-MAE), the paper's fidelity metric
+/// (Figs. 4(d), 5, 9): `mean(|a - b|) / mean(|b|)` with `b` the golden.
+pub fn nmae(noisy: &[f64], golden: &[f64]) -> f64 {
+    assert_eq!(noisy.len(), golden.len(), "nmae: length mismatch");
+    if noisy.is_empty() {
+        return 0.0;
+    }
+    let num: f64 = noisy.iter().zip(golden).map(|(a, b)| (a - b).abs()).sum();
+    let den: f64 = golden.iter().map(|b| b.abs()).sum();
+    if den == 0.0 {
+        // All-zero golden: report the raw mean absolute error instead.
+        num / noisy.len() as f64
+    } else {
+        num / den
+    }
+}
+
+/// Signal-to-noise ratio in dB between a golden signal and its noisy
+/// realization: `10 log10(sum(golden²) / sum((noisy-golden)²))`.
+pub fn snr_db(noisy: &[f64], golden: &[f64]) -> f64 {
+    assert_eq!(noisy.len(), golden.len(), "snr: length mismatch");
+    let sig: f64 = golden.iter().map(|x| x * x).sum();
+    let err: f64 = noisy.iter().zip(golden).map(|(a, b)| (a - b) * (a - b)).sum();
+    if err == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (sig / err).log10()
+    }
+}
+
+/// Relative root-mean-square error.
+pub fn rel_rmse(noisy: &[f64], golden: &[f64]) -> f64 {
+    assert_eq!(noisy.len(), golden.len());
+    let err: f64 = noisy.iter().zip(golden).map(|(a, b)| (a - b) * (a - b)).sum();
+    let sig: f64 = golden.iter().map(|x| x * x).sum();
+    if sig == 0.0 {
+        (err / noisy.len().max(1) as f64).sqrt()
+    } else {
+        (err / sig).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nmae_zero_for_identical() {
+        let a = [1.0, -2.0, 3.0];
+        assert_eq!(nmae(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn nmae_scales_with_error() {
+        let g = [1.0, 1.0, 1.0, 1.0];
+        let n = [1.1, 0.9, 1.1, 0.9];
+        assert!((nmae(&n, &g) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snr_known_value() {
+        let g = [1.0, 1.0];
+        let n = [1.1, 1.0];
+        // sig=2, err=0.01 -> 10*log10(200) ~ 23.0103
+        assert!((snr_db(&n, &g) - 23.0103).abs() < 1e-3);
+    }
+
+    #[test]
+    fn snr_infinite_for_identical() {
+        let g = [0.5, -0.25];
+        assert!(snr_db(&g, &g).is_infinite());
+    }
+
+    #[test]
+    fn mean_empty() {
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

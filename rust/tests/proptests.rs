@@ -1,0 +1,227 @@
+//! Hand-rolled property tests (the offline toolchain has no proptest):
+//! randomized invariants on the coordinator's routing/batching/state and
+//! the sparsity/rerouter substrates, driven by the deterministic
+//! `XorShiftRng`. Each property runs across many random cases; failures
+//! print the case seed for replay.
+
+use scatter::config::{AcceleratorConfig, DacKind, SparsitySupport};
+use scatter::coordinator::Scheduler;
+use scatter::devices::{Mzi, MziSpec};
+use scatter::rerouter::RerouterTree;
+use scatter::sparsity::{best_segment_mask, interleaved_row_mask, ChunkMask, LayerMask};
+use scatter::thermal::GammaModel;
+use scatter::util::XorShiftRng;
+
+const CASES: usize = 200;
+
+fn rand_cfg(rng: &mut XorShiftRng) -> AcceleratorConfig {
+    let shares = [1usize, 2, 4];
+    AcceleratorConfig {
+        share_r: shares[rng.index(3)],
+        share_c: shares[rng.index(3)],
+        l_g: [1.0, 3.0, 5.0, 20.0][rng.index(4)],
+        dac: if rng.uniform() < 0.5 { DacKind::Edac } else { DacKind::optimal_eodac() },
+        features: SparsitySupport::FULL,
+        ..Default::default()
+    }
+}
+
+/// Every chunk of every schedule is assigned exactly once, slots never
+/// collide within a wave, and wall cycles == waves × cols.
+#[test]
+fn prop_scheduler_covers_all_chunks_without_slot_collisions() {
+    let mut rng = XorShiftRng::new(0x5C4ED);
+    for case in 0..CASES {
+        let cfg = rand_cfg(&mut rng);
+        let sched = Scheduler::new(cfg.clone());
+        let out_dim = 1 + rng.index(400);
+        let in_dim = 1 + rng.index(800);
+        let ls = sched.schedule(out_dim, in_dim);
+        assert_eq!(ls.assignments.len(), ls.p * ls.q, "case {case}");
+        // coverage: each (pi, qi) exactly once
+        let mut seen = vec![false; ls.p * ls.q];
+        for a in &ls.assignments {
+            let idx = a.pi * ls.q + a.qi;
+            assert!(!seen[idx], "case {case}: duplicate chunk ({}, {})", a.pi, a.qi);
+            seen[idx] = true;
+            assert!(a.slot < ls.slots, "case {case}: slot out of range");
+        }
+        assert!(seen.iter().all(|&s| s), "case {case}: chunk not scheduled");
+        // no slot collision within a wave
+        for w in 0..ls.n_waves() {
+            let mut used = vec![false; ls.slots];
+            for a in ls.assignments.iter().filter(|a| a.wave == w) {
+                assert!(!used[a.slot], "case {case}: slot reuse in wave {w}");
+                used[a.slot] = true;
+            }
+        }
+        // padding covers the matrix
+        assert!(ls.p * ls.chunk_rows >= out_dim);
+        assert!(ls.q * ls.chunk_cols >= in_dim);
+        let n_cols = 1 + rng.index(100);
+        assert_eq!(ls.wall_cycles(n_cols), (ls.n_waves() * n_cols) as u64);
+    }
+}
+
+/// The rerouter conserves optical power and steers it only to active
+/// leaves, for arbitrary masks.
+#[test]
+fn prop_rerouter_conserves_and_targets_power() {
+    let mut rng = XorShiftRng::new(0x11E1);
+    for case in 0..CASES {
+        let k = [2usize, 4, 8, 16, 32][rng.index(5)];
+        let mask: Vec<bool> = (0..k).map(|_| rng.uniform() < 0.5).collect();
+        let tree = RerouterTree::program(&mask);
+        let powers = tree.leaf_powers();
+        let active = mask.iter().filter(|&&m| m).count();
+        let total: f64 = powers.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "case {case}: power not conserved");
+        if active > 0 {
+            for (j, (&p, &m)) in powers.iter().zip(&mask).enumerate() {
+                if m {
+                    assert!(
+                        (p - 1.0 / active as f64).abs() < 1e-9,
+                        "case {case}: leaf {j} power {p}"
+                    );
+                } else {
+                    assert!(p.abs() < 1e-12, "case {case}: pruned leaf {j} gets {p}");
+                }
+            }
+        }
+        assert_eq!(tree.active_leaves(), active);
+    }
+}
+
+/// best_segment_mask never loses to a random mask of equal cardinality.
+#[test]
+fn prop_power_opt_beats_random_masks() {
+    let mut rng = XorShiftRng::new(0xBEA7);
+    let mzi = Mzi::new(MziSpec::low_power(), 9.0, &GammaModel::paper());
+    for case in 0..50 {
+        let k = [8usize, 16][rng.index(2)];
+        let n_active = 1 + rng.index(k - 1);
+        let best = best_segment_mask(k, n_active, &mzi, 1_000_000);
+        let p_best = scatter::sparsity::mask_power_mw(&best, k, &mzi);
+        for _ in 0..20 {
+            let mut mask = vec![false; k];
+            let mut idx: Vec<usize> = (0..k).collect();
+            rng.shuffle(&mut idx);
+            for &i in idx.iter().take(n_active) {
+                mask[i] = true;
+            }
+            let p = scatter::sparsity::mask_power_mw(&mask, k, &mzi);
+            assert!(
+                p >= p_best - 1e-12,
+                "case {case}: random mask beat the optimum ({p} < {p_best})"
+            );
+        }
+    }
+}
+
+/// Interleaved row masks never place two zeros adjacently and hit the
+/// requested cardinality, for any density in [0.5, 1].
+#[test]
+fn prop_interleaved_rows_isolated_zeros() {
+    let mut rng = XorShiftRng::new(0x1A7E);
+    for _ in 0..CASES {
+        let n = 2 * (1 + rng.index(32));
+        let density = rng.uniform_in(0.5, 1.0);
+        let mask = interleaved_row_mask(n, density);
+        let expected_ones = n - ((1.0 - density) * n as f64).round() as usize;
+        assert_eq!(mask.iter().filter(|&&m| m).count(), expected_ones);
+        for i in 0..n - 1 {
+            assert!(mask[i] || mask[i + 1], "adjacent zeros at {i} (n={n})");
+        }
+    }
+}
+
+/// Mask JSON round-trips for arbitrary layer masks.
+#[test]
+fn prop_mask_json_roundtrip() {
+    let mut rng = XorShiftRng::new(0x70B1);
+    for case in 0..CASES {
+        let p = 1 + rng.index(3);
+        let q = 1 + rng.index(3);
+        let rows = 4 * (1 + rng.index(8));
+        let cols = 4 * (1 + rng.index(8));
+        let chunks: Vec<ChunkMask> = (0..p * q)
+            .map(|_| {
+                ChunkMask::new(
+                    (0..rows).map(|_| rng.uniform() < 0.7).collect(),
+                    (0..cols).map(|_| rng.uniform() < 0.7).collect(),
+                )
+            })
+            .collect();
+        let lm = LayerMask { p, q, chunks };
+        let json = lm.to_json().to_string();
+        let back = LayerMask::from_json(&scatter::util::Json::parse(&json).unwrap())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(back.chunks, lm.chunks, "case {case}");
+        assert_eq!(back.density(), lm.density());
+    }
+}
+
+/// Config JSON round-trips across random configurations.
+#[test]
+fn prop_config_json_roundtrip() {
+    let mut rng = XorShiftRng::new(0xC0F6);
+    for case in 0..CASES {
+        let cfg = rand_cfg(&mut rng);
+        let back = AcceleratorConfig::from_json(&cfg.to_json())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(back.share_r, cfg.share_r, "case {case}");
+        assert_eq!(back.share_c, cfg.share_c);
+        assert_eq!(back.l_g, cfg.l_g);
+        assert_eq!(back.dac, cfg.dac);
+        assert_eq!(back.features, cfg.features);
+    }
+}
+
+/// Programmed-PTC streaming equals the one-shot forward for random
+/// problems, masks, and modes (noise off: bitwise determinism).
+#[test]
+fn prop_programmed_equals_forward() {
+    use scatter::devices::DeviceLibrary;
+    use scatter::ptc::crossbar::{ColumnMode, ForwardOptions, PtcSimulator};
+    use scatter::thermal::coupling::ArrayGeometry;
+    let mut rng = XorShiftRng::new(0xF00D);
+    let gamma = GammaModel::paper();
+    for case in 0..60 {
+        let k = [4usize, 8, 16][rng.index(3)];
+        let geom = ArrayGeometry {
+            rows: k,
+            cols: k,
+            l_v: 120.0,
+            l_h: rng.uniform_in(16.0, 40.0),
+            l_s: rng.uniform_in(7.0, 11.0),
+        };
+        let sim = PtcSimulator::new(geom, &gamma, DeviceLibrary::default());
+        let mut w = vec![0.0; k * k];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let mut x = vec![0.0; k];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let col_mask: Vec<bool> = (0..k).map(|_| rng.uniform() < 0.6).collect();
+        let row_mask: Vec<bool> = (0..k).map(|_| rng.uniform() < 0.6).collect();
+        let mode = [ColumnMode::PruneOnly, ColumnMode::InputGating, ColumnMode::InputGatingLr]
+            [rng.index(3)];
+        let opts = ForwardOptions {
+            thermal: true,
+            col_mask: Some(&col_mask),
+            row_mask: Some(&row_mask),
+            col_mode: mode,
+            output_gating: rng.uniform() < 0.5,
+            ..Default::default()
+        };
+        let y_fwd = sim.forward(&w, &x, &opts, &mut XorShiftRng::new(0));
+        let mut prog = sim.program(&w, &opts, &mut XorShiftRng::new(0));
+        let y_prog = prog.run(&x, &mut XorShiftRng::new(0));
+        for i in 0..k {
+            assert!(
+                (y_fwd[i] - y_prog[i]).abs() < 1e-12,
+                "case {case}: output {i} differs ({} vs {})",
+                y_fwd[i],
+                y_prog[i]
+            );
+        }
+    }
+}

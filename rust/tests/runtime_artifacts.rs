@@ -1,0 +1,143 @@
+//! Cross-layer integration: the AOT artifacts (python/jax/pallas → HLO
+//! text) executed through the rust PJRT runtime must match both the jax
+//! oracle math and the rust digital-twin physics.
+//!
+//! These tests are skipped (with a notice) when `make artifacts` hasn't
+//! run — the rest of the suite stays self-contained.
+
+use scatter::runtime::ArtifactRuntime;
+use scatter::thermal::{coupling::ArrayGeometry, CouplingModel, GammaModel};
+use scatter::util::XorShiftRng;
+
+const K: usize = 16;
+const BATCH: usize = 32;
+
+fn runtime_or_skip() -> Option<ArtifactRuntime> {
+    let rt = ArtifactRuntime::new("artifacts").expect("PJRT client");
+    if rt.has_artifact("ptc16_noisy") && rt.has_artifact("ptc16_ideal") {
+        Some(rt)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn coupling_f32() -> (Vec<f32>, Vec<f32>) {
+    // identical geometry to the python AOT lowering: l_v=120, l_h=16, l_s=9
+    let geom = ArrayGeometry { rows: K, cols: K, l_v: 120.0, l_h: 16.0, l_s: 9.0 };
+    let cm = CouplingModel::new(geom, &GammaModel::paper());
+    let (p, n) = cm.matrices();
+    (p.iter().map(|&v| v as f32).collect(), n.iter().map(|&v| v as f32).collect())
+}
+
+#[test]
+fn ideal_artifact_matches_exact_mvm() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = XorShiftRng::new(1);
+    let mut w = vec![0f32; K * K];
+    for v in w.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0) as f32;
+    }
+    let rm: Vec<f32> = (0..K).map(|i| (i % 4 != 3) as u8 as f32).collect();
+    let cm: Vec<f32> = (0..K).map(|j| (j % 2 == 0) as u8 as f32).collect();
+    let mut x = vec![0f32; BATCH * K];
+    for v in x.iter_mut() {
+        *v = rng.uniform_in(0.0, 1.0) as f32;
+    }
+    let y = rt
+        .run_f32("ptc16_ideal", &[(&w, &[K, K]), (&rm, &[K]), (&cm, &[K]), (&x, &[BATCH, K])])
+        .expect("execute ideal artifact");
+    assert_eq!(y.len(), BATCH * K);
+    // compare to exact masked MVM
+    for b in 0..BATCH {
+        for i in 0..K {
+            let mut acc = 0f32;
+            for j in 0..K {
+                acc += w[i * K + j] * rm[i] * cm[j] * x[b * K + j];
+            }
+            let got = y[b * K + i];
+            assert!(
+                (got - acc).abs() < 1e-4,
+                "batch {b} out {i}: artifact {got} vs exact {acc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn noisy_artifact_matches_rust_twin_physics() {
+    // With zero noise draws, the artifact computes: crosstalk-perturbed
+    // weights + IG+LR + OG — exactly the rust ProgrammedPtc with
+    // phase_noise/pd_noise off. The coupling matrices come from the SAME
+    // Eq. 9/10 constants on both sides, so outputs must agree to f32.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (gp, gn) = coupling_f32();
+    let mut rng = XorShiftRng::new(2);
+    let mut w = vec![0f32; K * K];
+    for v in w.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0) as f32;
+    }
+    let rm: Vec<f32> = (0..K).map(|i| (i % 3 != 2) as u8 as f32).collect();
+    let cmask: Vec<f32> = (0..K).map(|j| (j % 2 == 0) as u8 as f32).collect();
+    let mut x = vec![0f32; BATCH * K];
+    for v in x.iter_mut() {
+        *v = rng.uniform_in(0.0, 1.0) as f32;
+    }
+    let noise = vec![0f32; BATCH * K];
+    let y = rt
+        .run_f32(
+            "ptc16_noisy",
+            &[
+                (&w, &[K, K]),
+                (&gp, &[K * K, K * K]),
+                (&gn, &[K * K, K * K]),
+                (&rm, &[K]),
+                (&cmask, &[K]),
+                (&x, &[BATCH, K]),
+                (&noise, &[BATCH, K]),
+            ],
+        )
+        .expect("execute noisy artifact");
+
+    // rust twin with identical geometry + masks, noise off
+    use scatter::devices::DeviceLibrary;
+    use scatter::ptc::crossbar::{ColumnMode, ForwardOptions, PtcSimulator};
+    let geom = ArrayGeometry { rows: K, cols: K, l_v: 120.0, l_h: 16.0, l_s: 9.0 };
+    let sim = PtcSimulator::new(geom, &GammaModel::paper(), DeviceLibrary::default());
+    let w64: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+    let rm_b: Vec<bool> = rm.iter().map(|&v| v > 0.5).collect();
+    let cm_b: Vec<bool> = cmask.iter().map(|&v| v > 0.5).collect();
+    let opts = ForwardOptions {
+        thermal: true,
+        col_mask: Some(&cm_b),
+        row_mask: Some(&rm_b),
+        col_mode: ColumnMode::InputGatingLr,
+        output_gating: true,
+        ..Default::default()
+    };
+    let mut max_err = 0f64;
+    for b in 0..BATCH {
+        let xb: Vec<f64> = (0..K).map(|j| x[b * K + j] as f64).collect();
+        let y_rust = sim.forward(&w64, &xb, &opts, &mut XorShiftRng::new(0));
+        for i in 0..K {
+            max_err = max_err.max((y[b * K + i] as f64 - y_rust[i]).abs());
+        }
+    }
+    assert!(
+        max_err < 5e-4,
+        "python-pallas artifact and rust twin diverge: max err {max_err}"
+    );
+    println!("artifact vs rust twin max abs err: {max_err:.2e}");
+}
+
+#[test]
+fn artifact_compile_is_cached() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let t0 = std::time::Instant::now();
+    rt.load("ptc16_ideal").unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    rt.load("ptc16_ideal").unwrap();
+    let second = t1.elapsed();
+    assert!(second < first / 2, "second load should hit the cache: {first:?} vs {second:?}");
+}
