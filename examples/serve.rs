@@ -20,13 +20,21 @@ fn main() {
     let cfg = AcceleratorConfig::default();
     let (model, ds, masks) = ctx.deployment(Workload::Cnn3, &cfg, 0.3);
 
-    println!("spawning SCATTER inference server: CNN-3, s=0.3, IG+OG+LR, {n} requests");
+    println!(
+        "spawning SCATTER inference server: CNN-3, s=0.3, IG+OG+LR, {n} requests, \
+         2 engine workers x 2 threads"
+    );
     let server = InferenceServer::spawn(
         model,
         cfg,
         EngineOptions::NOISY,
         masks,
-        ServerConfig { max_batch: 8, batch_timeout: Duration::from_millis(4) },
+        ServerConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(4),
+            workers: 2,
+            engine_threads: 2,
+        },
     );
 
     let mut pending = Vec::new();
@@ -44,7 +52,10 @@ fn main() {
         }
     }
     let report = server.shutdown();
-    println!("served {} requests in {} batches", report.requests, report.batches);
+    println!(
+        "served {} requests in {} batches across {} engine workers",
+        report.requests, report.batches, report.workers
+    );
     println!("  accuracy   : {:.1} %", 100.0 * correct as f64 / n as f64);
     println!(
         "  latency    : mean {:.1} us  p50 {} us  p99 {} us",

@@ -1,6 +1,7 @@
-//! Coordinator / end-to-end benchmarks: engine matmul throughput, whole
-//! CNN-3 inference latency on the digital twin, and the AOT artifact
-//! execution path (when artifacts exist).
+//! Coordinator / end-to-end benchmarks: engine matmul throughput (incl.
+//! the sparsity-compiled parallel sweep that refreshes
+//! `BENCH_engine.json`), whole CNN-3 inference latency on the digital
+//! twin, and the AOT artifact execution path (when artifacts exist).
 
 use scatter::bench::timing::{bench, time_once};
 use scatter::config::AcceleratorConfig;
@@ -25,6 +26,14 @@ fn main() {
     bench("engine_matmul_64x64x64 (cached prog)", Duration::from_secs(1), || {
         std::hint::black_box(engine.matmul("bench", &w, &x, 64, 64, 64));
     });
+
+    // sparsity-compiled execution sweep: 1/2/4/8 threads ×
+    // 0%/50%/87.5% structured column sparsity, reference path included;
+    // refreshes BENCH_engine.json at the repo root
+    println!(
+        "{}",
+        scatter::bench::engine::run(&[1, 2, 4, 8], Duration::from_millis(500))
+    );
 
     // whole-model inference
     let ds = SyntheticDataset::new(DatasetSpec::fmnist_like());

@@ -1,0 +1,186 @@
+//! End-to-end layer-matmul throughput bench for the sparsity-compiled
+//! parallel execution engine: sweeps worker-thread counts × structured
+//! column sparsity, times both the compiled path and the pre-compilation
+//! bool-mask reference path, and emits `BENCH_engine.json` at the repo
+//! root so the perf trajectory is tracked across PRs (EXPERIMENTS.md
+//! §Perf).
+
+use crate::bench::timing::bench;
+use crate::config::AcceleratorConfig;
+use crate::coordinator::{EngineOptions, PhotonicEngine};
+use crate::nn::MatmulEngine;
+use crate::sparsity::{ChunkMask, LayerMask};
+use crate::util::{Json, Table, XorShiftRng};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Bench problem: a 256×256 layer streaming 64 activation columns
+/// (4 chunks on the default 64×64 grid — enough to exercise multi-chunk
+/// accumulation and the work-item partitioner).
+const OUT: usize = 256;
+const IN: usize = 256;
+const N_COLS: usize = 64;
+
+/// The swept structured column sparsities (fraction of pruned columns).
+pub const SPARSITIES: [f64; 3] = [0.0, 0.5, 0.875];
+
+/// Structured column mask at `sparsity` pruned columns: within every
+/// k2-segment the first `k2·(1−s)` columns stay active (the paper's
+/// per-segment uniform pattern, §3.3.5), rows stay dense.
+fn column_mask(p: usize, q: usize, rows: usize, cols: usize, k2: usize, sparsity: f64) -> LayerMask {
+    let keep = ((k2 as f64 * (1.0 - sparsity)).round() as usize).clamp(0, k2);
+    let col: Vec<bool> = (0..cols).map(|j| j % k2 < keep).collect();
+    let chunk = ChunkMask::new(vec![true; rows], col);
+    LayerMask { p, q, chunks: vec![chunk; p * q] }
+}
+
+fn bench_engine(sparsity: f64, threads: usize, reference: bool, budget: Duration) -> f64 {
+    let cfg = AcceleratorConfig::default(); // FULL features: IG + OG + LR
+    let (rows, cols) = cfg.chunk_shape();
+    let k2 = cfg.k2;
+    let mut eng = PhotonicEngine::new(cfg, EngineOptions::NOISY);
+    eng.set_threads(threads);
+    if sparsity > 0.0 {
+        let mut masks = BTreeMap::new();
+        masks.insert(
+            "bench".to_string(),
+            column_mask(OUT.div_ceil(rows), IN.div_ceil(cols), rows, cols, k2, sparsity),
+        );
+        eng.set_masks(masks);
+    }
+    let mut rng = XorShiftRng::new(3);
+    let mut w = vec![0.0; OUT * IN];
+    rng.fill_uniform(&mut w, -0.5, 0.5);
+    let mut x = vec![0.0; IN * N_COLS];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    // prime the programming cache so only streaming is timed
+    let _ = eng.matmul("bench", &w, &x, OUT, IN, N_COLS);
+    let label = format!(
+        "layer_matmul {}x{}x{} {} s={:.3} t={}",
+        OUT,
+        IN,
+        N_COLS,
+        if reference { "ref " } else { "plan" },
+        sparsity,
+        threads
+    );
+    let r = bench(&label, budget, || {
+        if reference {
+            std::hint::black_box(eng.matmul_reference("bench", &w, &x, OUT, IN, N_COLS));
+        } else {
+            std::hint::black_box(eng.matmul("bench", &w, &x, OUT, IN, N_COLS));
+        }
+    });
+    r.mean_ns
+}
+
+/// `BENCH_engine.json` lands at the repo root whether the bench runs from
+/// the repo root (`scatter bench engine`) or from `rust/` (`cargo bench`).
+fn repo_root_file(name: &str) -> std::path::PathBuf {
+    if std::path::Path::new("ROADMAP.md").exists() {
+        name.into()
+    } else if std::path::Path::new("../ROADMAP.md").exists() {
+        std::path::Path::new("..").join(name)
+    } else {
+        name.into()
+    }
+}
+
+/// MAC/ns == GMAC/s for the fixed bench shape.
+fn gmacs(mean_ns: f64) -> f64 {
+    (OUT * IN * N_COLS) as f64 / mean_ns
+}
+
+fn record(results: &mut Vec<Json>, path: &str, t: usize, per_sparsity: &[(f64, f64)]) {
+    for &(s, mean_ns) in per_sparsity {
+        results.push(Json::obj(vec![
+            ("path", Json::Str(path.into())),
+            ("threads", Json::Num(t as f64)),
+            ("sparsity", Json::Num(s)),
+            ("mean_ns_per_call", Json::Num(mean_ns)),
+            ("gmacs", Json::Num(gmacs(mean_ns))),
+        ]));
+    }
+}
+
+fn table_row(path: &str, t: usize, per_sparsity: &[(f64, f64)]) -> Vec<String> {
+    let mut row = vec![path.to_string(), t.to_string()];
+    row.extend(per_sparsity.iter().map(|&(_, ns)| format!("{:.2}", gmacs(ns))));
+    row
+}
+
+/// Run the sweep, print the throughput table, write `BENCH_engine.json`,
+/// and return the rendered table.
+pub fn run(threads: &[usize], budget: Duration) -> String {
+    let mut table = Table::new(
+        "engine layer-matmul throughput (GMAC/s, noisy twin, IG+OG+LR column sparsity)",
+    )
+    .header(&["path", "threads", "s=0%", "s=50%", "s=87.5%"]);
+    let mut results = Vec::new();
+
+    // the seed path: single-thread scalar streaming with bool-mask
+    // branching (pruned work is still paid for)
+    let ref_cells: Vec<(f64, f64)> =
+        SPARSITIES.iter().map(|&s| (s, bench_engine(s, 1, true, budget))).collect();
+    record(&mut results, "reference", 1, &ref_cells);
+    table.row(table_row("reference", 1, &ref_cells));
+
+    let mut plan_4t_875 = None;
+    for &t in threads {
+        let cells: Vec<(f64, f64)> =
+            SPARSITIES.iter().map(|&s| (s, bench_engine(s, t, false, budget))).collect();
+        record(&mut results, "planned", t, &cells);
+        if t == 4 {
+            plan_4t_875 = cells.iter().find(|&&(s, _)| s > 0.8).map(|&(_, ns)| ns);
+        }
+        table.row(table_row("planned", t, &cells));
+    }
+
+    // headline acceptance ratio: planned @ 4 threads + 87.5% sparsity vs
+    // the reference single-thread path at the same sparsity and dense
+    let ref_875 = ref_cells.iter().find(|&&(s, _)| s > 0.8).map(|&(_, ns)| ns);
+    let ref_dense = ref_cells.first().map(|&(_, ns)| ns);
+    let mut extra = Vec::new();
+    if let (Some(plan_ns), Some(ref_ns), Some(dense_ns)) = (plan_4t_875, ref_875, ref_dense) {
+        extra.push(("speedup_4t_s875_vs_ref_s875", Json::Num(ref_ns / plan_ns)));
+        extra.push(("speedup_4t_s875_vs_ref_dense", Json::Num(dense_ns / plan_ns)));
+    }
+
+    let mut pairs = vec![
+        ("bench", Json::Str("engine_layer_matmul".into())),
+        (
+            "shape",
+            Json::obj(vec![
+                ("out", Json::Num(OUT as f64)),
+                ("in", Json::Num(IN as f64)),
+                ("n_cols", Json::Num(N_COLS as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(results)),
+    ];
+    pairs.extend(extra);
+    let json = Json::obj(pairs);
+
+    let path = repo_root_file("BENCH_engine.json");
+    match std::fs::write(&path, json.to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    table.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_mask_hits_target_sparsity() {
+        let lm = column_mask(2, 2, 64, 64, 16, 0.875);
+        for chunk in &lm.chunks {
+            assert_eq!(chunk.active_cols(), 8, "2 of 16 per segment × 4 segments");
+            assert_eq!(chunk.active_rows(), 64);
+        }
+        let dense = column_mask(1, 1, 64, 64, 16, 0.0);
+        assert_eq!(dense.chunks[0].active_cols(), 64);
+    }
+}

@@ -6,16 +6,29 @@
 //! (crosstalk-perturbed realized weights, gating, rerouter trees), then
 //! streams activation columns through the programmed arrays while
 //! accounting per-chunk power × cycles into the energy ledger (Eq. §4.1).
+//!
+//! Execution is **sparsity-compiled and parallel**: programming also
+//! compiles each chunk into an [`exec::ChunkPlan`](crate::exec::ChunkPlan)
+//! (active-index gather tables + gain-folded weight panels), and
+//! streaming partitions (chunk-row × column-block) work items across a
+//! scoped worker pool. Per-cycle PD noise comes from counter-based
+//! per-(chunk, column) RNG streams, so outputs are bit-identical for any
+//! [`PhotonicEngine::set_threads`] value (EXPERIMENTS.md §Perf). The
+//! pre-compilation scalar path survives as
+//! [`PhotonicEngine::matmul_reference`] — the equivalence oracle and
+//! bench baseline.
 
 use crate::config::AcceleratorConfig;
 use crate::coordinator::scheduler::Scheduler;
 use crate::devices::{DeviceLibrary, Mzi, MziSpec};
+use crate::exec::{parallel_map, ChunkPlan};
 use crate::nn::MatmulEngine;
 use crate::power::{EnergyAccumulator, EnergyReport, PowerModel};
 use crate::ptc::crossbar::{ColumnMode, ForwardOptions, ProgrammedPtc, PtcSimulator};
 use crate::quant::{SymmetricQuant, UnsignedQuant};
 use crate::sparsity::{mask_power_mw, ChunkMask, LayerMask};
 use crate::thermal::GammaModel;
+use crate::util::XorShiftRng;
 use std::collections::BTreeMap;
 
 /// Noise/feature switches for a deployment run.
@@ -51,6 +64,8 @@ struct ProgrammedChunk {
     /// is statistically identical (sum of independent gaussians) and 4×
     /// cheaper at r = c = 4 (EXPERIMENTS.md §Perf).
     noise_std: f64,
+    /// Sparsity-compiled execution plan over the programmed blocks.
+    plan: ChunkPlan,
 }
 
 struct ProgrammedLayer {
@@ -82,6 +97,11 @@ pub struct PhotonicEngine {
     programmed: BTreeMap<String, ProgrammedLayer>,
     energy: EnergyAccumulator,
     rng: crate::util::XorShiftRng,
+    /// Worker threads for the compiled execution path (1 = inline).
+    threads: usize,
+    /// Monotone per-matmul-call counter; part of every noise-stream id so
+    /// repeated calls draw independent noise while staying reproducible.
+    noise_epoch: u64,
 }
 
 impl PhotonicEngine {
@@ -105,7 +125,20 @@ impl PhotonicEngine {
             programmed: BTreeMap::new(),
             energy: EnergyAccumulator::new(),
             rng,
+            threads: 1,
+            noise_epoch: 0,
         }
+    }
+
+    /// Set the worker-thread count for the compiled execution path.
+    /// Outputs are bit-identical for every value (noise streams are
+    /// counter-based per (chunk, column), not per thread).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Install per-layer sparsity masks (from `nn::loader` or
@@ -250,11 +283,19 @@ impl PhotonicEngine {
                 } else {
                     0.0
                 };
+                // compile the sparsity-aware execution plan: active-index
+                // gather tables + gain-folded panels over the realized
+                // weights, clipped to the layer's true dims
+                let row_limit = rows.min(out_dim - pi * rows);
+                let col_limit = cols.min(in_dim - qi * cols);
+                let plan =
+                    ChunkPlan::from_blocks(&blocks, r, c, row_limit, col_limit, noise_std);
                 chunks.push(ProgrammedChunk {
                     blocks,
                     power,
                     row_mask: mask.row.clone(),
                     noise_std,
+                    plan,
                 });
             }
         }
@@ -272,10 +313,26 @@ impl PhotonicEngine {
             },
         );
     }
-}
 
-impl MatmulEngine for PhotonicEngine {
-    fn matmul(
+    /// Record the energy for streaming `n_cols` activation columns
+    /// through a programmed layer (shared by both execution paths).
+    fn record_layer_energy(energy: &mut EnergyAccumulator, layer: &str, pl: &ProgrammedLayer, n_cols: usize) {
+        // energy ledger: every chunk holds power for n_cols cycles
+        // (x2 for protected layers: non-adjacent mapping halves occupancy)
+        for chunk in &pl.chunks {
+            energy.record(layer, &chunk.power, pl.cycle_factor * n_cols as u64);
+        }
+        energy.advance_wall(pl.cycle_factor * (pl.n_waves * n_cols) as u64);
+    }
+
+    /// The pre-compilation execution path: streams every activation
+    /// column through every programmed PTC block with per-element
+    /// bool-mask branching, drawing noise from the engine's sequential
+    /// RNG. Kept as the equivalence oracle for the compiled planner
+    /// (`rust/tests/exec_engine.rs`) and as the bench baseline
+    /// (EXPERIMENTS.md §Perf); the `MatmulEngine` impl below is the
+    /// production path.
+    pub fn matmul_reference(
         &mut self,
         layer: &str,
         w: &[f64],
@@ -350,13 +407,127 @@ impl MatmulEngine for PhotonicEngine {
             }
         }
 
-        // energy ledger: every chunk holds power for n_cols cycles
-        // (x2 for protected layers: non-adjacent mapping halves occupancy)
-        for chunk in &pl.chunks {
-            self.energy.record(layer, &chunk.power, pl.cycle_factor * n_cols as u64);
-        }
-        self.energy.advance_wall(pl.cycle_factor * (pl.n_waves * n_cols) as u64);
+        Self::record_layer_energy(&mut self.energy, layer, pl, n_cols);
         let _ = &pl.chunks[0].row_mask; // row gating already applied in blocks
+        y
+    }
+}
+
+impl MatmulEngine for PhotonicEngine {
+    /// Sparsity-compiled parallel execution: (chunk-row × column-block)
+    /// work items fan out over the worker pool; each item gathers +
+    /// quantizes the active input segments of a whole column block once,
+    /// then sweeps all its columns through each chunk's gain-folded panel
+    /// (`ChunkPlan::accumulate`) before moving on — panel-contiguous
+    /// access instead of the reference path's column-major strides, and
+    /// zero work on pruned rows/columns.
+    fn matmul(
+        &mut self,
+        layer: &str,
+        w: &[f64],
+        x: &[f64],
+        out_dim: usize,
+        in_dim: usize,
+        n_cols: usize,
+    ) -> Vec<f64> {
+        assert_eq!(w.len(), out_dim * in_dim);
+        assert_eq!(x.len(), in_dim * n_cols);
+        if n_cols == 0 {
+            return Vec::new();
+        }
+        let stale = match self.programmed.get(layer) {
+            Some(pl) => pl.out_dim != out_dim || pl.in_dim != in_dim,
+            None => true,
+        };
+        if stale {
+            self.program_layer(layer, w, out_dim, in_dim);
+        }
+
+        // per-call context, copied out before borrowing the plan
+        let x_max = x.iter().fold(0.0f64, |m, &v| m.max(v)).max(1e-12);
+        let aq = UnsignedQuant { bits: self.cfg.b_in, max: 1.0 };
+        let quantize = self.opts.quantize;
+        let (rows, cols) = self.cfg.chunk_shape();
+        let seed = self.cfg.noise_seed;
+        let threads = self.threads;
+        let epoch = self.noise_epoch;
+        self.noise_epoch = self.noise_epoch.wrapping_add(1);
+
+        let pl = self.programmed.get(layer).unwrap();
+        let scale = pl.w_scale * x_max;
+        let (p, q) = (pl.p, pl.q);
+
+        // column blocking: panel-contiguous sweeps, sized so the pool has
+        // a few items per worker to load-balance (block size never
+        // affects results — accumulation order per (row, column) is
+        // fixed, and noise streams are per column)
+        let target_items = (threads * 4).max(p);
+        let blocks_per_p = target_items.div_ceil(p).max(1);
+        let block_cols = n_cols.div_ceil(blocks_per_p).clamp(1, 64);
+        let n_cblocks = n_cols.div_ceil(block_cols);
+        let n_items = p * n_cblocks;
+
+        let results: Vec<Vec<f64>> = parallel_map(threads, n_items, |item| {
+            let pi = item / n_cblocks;
+            let col0 = (item % n_cblocks) * block_cols;
+            let bcols = block_cols.min(n_cols - col0);
+            let mut buf = vec![0.0f64; rows * bcols];
+            let mut xq: Vec<f64> = Vec::new();
+            for qi in 0..q {
+                let chunk = &pl.chunks[pi * q + qi];
+                let plan = &chunk.plan;
+                // gather + normalize + quantize the active input
+                // segments for the whole column block at once
+                xq.clear();
+                xq.resize(plan.n_active_cols() * bcols, 0.0);
+                for (ci, &j) in plan.cols.iter().enumerate() {
+                    let gj = qi * cols + j as usize;
+                    let src = &x[gj * n_cols + col0..gj * n_cols + col0 + bcols];
+                    let dst = &mut xq[ci * bcols..(ci + 1) * bcols];
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        let v = (v / x_max).clamp(0.0, 1.0);
+                        *d = if quantize { aq.quantize(v) } else { v };
+                    }
+                }
+                plan.accumulate(&xq, bcols, &mut buf);
+                // hoisted PD noise, one draw per active chunk row from a
+                // counter-based per-(chunk, column) stream — bit-identical
+                // for any thread count or block partitioning
+                if plan.noise_std > 0.0 {
+                    let chunk_id = (pi * q + qi) as u64;
+                    for t in 0..bcols {
+                        let mut nrng = XorShiftRng::from_stream(
+                            seed,
+                            &[epoch, chunk_id, (col0 + t) as u64],
+                        );
+                        for &row in &plan.rows {
+                            buf[row as usize * bcols + t] +=
+                                nrng.gaussian_std(plan.noise_std);
+                        }
+                    }
+                }
+            }
+            buf
+        });
+
+        // scatter the disjoint (chunk-row × column-block) regions into y
+        let mut y = vec![0.0f64; out_dim * n_cols];
+        for (item, buf) in results.iter().enumerate() {
+            let pi = item / n_cblocks;
+            let col0 = (item % n_cblocks) * block_cols;
+            let bcols = block_cols.min(n_cols - col0);
+            let row_limit = rows.min(out_dim - pi * rows);
+            for i in 0..row_limit {
+                let gi = pi * rows + i;
+                let src = &buf[i * bcols..(i + 1) * bcols];
+                let dst = &mut y[gi * n_cols + col0..gi * n_cols + col0 + bcols];
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = v * scale;
+                }
+            }
+        }
+
+        Self::record_layer_energy(&mut self.energy, layer, pl, n_cols);
         y
     }
 }

@@ -46,6 +46,12 @@ impl LatencyRecorder {
     pub fn max_us(&self) -> u64 {
         self.samples_us.iter().copied().max().unwrap_or(0)
     }
+
+    /// Fold another recorder's samples in (used when merging per-worker
+    /// recorders into one server-wide report).
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
 }
 
 #[cfg(test)]

@@ -1,14 +1,19 @@
 //! Threaded batched-inference service over the photonic twin.
 //!
 //! Architecture (vLLM-router-like, scaled to this accelerator): clients
-//! submit images over an mpsc channel; the worker thread owns the
-//! [`PhotonicEngine`] + model, collects requests into dynamic batches
-//! (up to `max_batch` or `batch_timeout`), executes them, and replies on
-//! per-request channels. The offline toolchain has no tokio, so the event
-//! loop is std::thread + mpsc — same batching semantics, simpler runtime.
+//! submit images over an mpsc channel; a dispatcher thread collects
+//! requests into dynamic batches (up to `max_batch` or `batch_timeout`)
+//! and shards each batch across `workers` engine threads, each owning its
+//! own [`PhotonicEngine`] + model replica (mirroring N physical
+//! accelerator boards behind one router). Workers reply on per-request
+//! channels and keep their own latency/energy ledgers, merged into one
+//! [`ServerReport`] at shutdown. The offline toolchain has no tokio, so
+//! the event loop is std::thread + mpsc — same batching semantics,
+//! simpler runtime.
 
 use crate::coordinator::engine::{EngineOptions, PhotonicEngine};
 use crate::coordinator::metrics::LatencyRecorder;
+use crate::exec::partition_ranges;
 use crate::nn::{Model, Tensor};
 use crate::AcceleratorConfig;
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -19,11 +24,24 @@ use std::time::{Duration, Instant};
 pub struct ServerConfig {
     pub max_batch: usize,
     pub batch_timeout: Duration,
+    /// Engine worker threads the dispatcher shards batches across; each
+    /// owns a full engine + model replica. 1 reproduces the single-board
+    /// service exactly.
+    pub workers: usize,
+    /// Worker threads inside each engine's compiled execution path
+    /// ([`PhotonicEngine::set_threads`]). Keep `workers ×
+    /// engine_threads` at or below the host's cores.
+    pub engine_threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { max_batch: 8, batch_timeout: Duration::from_millis(2) }
+        Self {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+            workers: 1,
+            engine_threads: 1,
+        }
     }
 }
 
@@ -47,6 +65,7 @@ pub struct Reply {
 pub struct ServerReport {
     pub requests: usize,
     pub batches: usize,
+    pub workers: usize,
     pub mean_latency_us: f64,
     pub p50_us: u64,
     pub p99_us: u64,
@@ -55,14 +74,68 @@ pub struct ServerReport {
     pub p_avg_w: f64,
 }
 
+/// One engine worker's ledger, merged at shutdown.
+struct WorkerStats {
+    latencies: LatencyRecorder,
+    served: usize,
+    energy_mj: f64,
+    busy_ms: f64,
+}
+
+/// A shard of a dynamic batch, tagged with the full batch size (clients
+/// observe the batch they rode in, not the shard).
+struct Shard {
+    requests: Vec<Request>,
+    batch_size: usize,
+}
+
+fn spawn_engine_worker(
+    model: Model,
+    cfg: AcceleratorConfig,
+    opts: EngineOptions,
+    masks: std::collections::BTreeMap<String, crate::sparsity::LayerMask>,
+    engine_threads: usize,
+    rx: Receiver<Shard>,
+) -> JoinHandle<WorkerStats> {
+    std::thread::spawn(move || {
+        let mut engine = PhotonicEngine::new(cfg, opts);
+        engine.set_threads(engine_threads);
+        engine.set_masks(masks);
+        // §4.1: deploy the final linear layer on non-adjacent MZI
+        // columns (crosstalk-protected readout)
+        if let Some((last, _, _)) = model.matmul_layers().last() {
+            engine.set_protected([last.clone()].into_iter().collect());
+        }
+        let mut latencies = LatencyRecorder::new();
+        let mut served = 0usize;
+        while let Ok(shard) = rx.recv() {
+            for req in shard.requests {
+                let logits = model.forward(req.image, &mut engine);
+                let class = logits.argmax();
+                let latency = req.submitted.elapsed();
+                latencies.record(latency);
+                served += 1;
+                let _ = req.reply.send(Reply {
+                    class,
+                    logits: logits.data,
+                    latency,
+                    batch_size: shard.batch_size,
+                });
+            }
+        }
+        let rep = engine.energy_report();
+        WorkerStats { latencies, served, energy_mj: rep.energy_mj, busy_ms: rep.time_ms }
+    })
+}
+
 /// Handle to a running inference server.
 pub struct InferenceServer {
     tx: Sender<Request>,
-    worker: Option<JoinHandle<ServerReport>>,
+    dispatcher: Option<JoinHandle<ServerReport>>,
 }
 
 impl InferenceServer {
-    /// Spawn the worker thread owning the engine + model.
+    /// Spawn the dispatcher + engine worker threads.
     pub fn spawn(
         model: Model,
         cfg: AcceleratorConfig,
@@ -71,18 +144,25 @@ impl InferenceServer {
         server_cfg: ServerConfig,
     ) -> Self {
         let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
-        let worker = std::thread::spawn(move || {
-            let mut engine = PhotonicEngine::new(cfg, opts);
-            engine.set_masks(masks);
-            // §4.1: deploy the final linear layer on non-adjacent MZI
-            // columns (crosstalk-protected readout)
-            if let Some((last, _, _)) = model.matmul_layers().last() {
-                engine.set_protected([last.clone()].into_iter().collect());
+        let dispatcher = std::thread::spawn(move || {
+            let n_workers = server_cfg.workers.max(1);
+            let mut worker_txs = Vec::with_capacity(n_workers);
+            let mut handles = Vec::with_capacity(n_workers);
+            for _ in 0..n_workers {
+                let (wtx, wrx) = mpsc::channel::<Shard>();
+                handles.push(spawn_engine_worker(
+                    model.clone(),
+                    cfg.clone(),
+                    opts,
+                    masks.clone(),
+                    server_cfg.engine_threads.max(1),
+                    wrx,
+                ));
+                worker_txs.push(wtx);
             }
-            let mut latencies = LatencyRecorder::new();
+
             let mut batches = 0usize;
             let started = Instant::now();
-            let mut served = 0usize;
             loop {
                 // block for the first request (or shutdown)
                 let first = match rx.recv() {
@@ -102,50 +182,64 @@ impl InferenceServer {
                         Err(_) => break,
                     }
                 }
-                let bsz = batch.len();
+                let batch_size = batch.len();
                 batches += 1;
-                for req in batch {
-                    let logits = model.forward(req.image, &mut engine);
-                    let class = logits.argmax();
-                    let latency = req.submitted.elapsed();
-                    latencies.record(latency);
-                    served += 1;
-                    let _ = req.reply.send(Reply {
-                        class,
-                        logits: logits.data,
-                        latency,
-                        batch_size: bsz,
-                    });
+                // shard the batch across engine workers (contiguous
+                // near-equal splits; lone requests go to worker 0)
+                let ranges = partition_ranges(batch.len(), n_workers);
+                for (widx, range) in ranges.into_iter().enumerate().rev() {
+                    let requests: Vec<Request> = batch.drain(range).collect();
+                    if worker_txs[widx].send(Shard { requests, batch_size }).is_err() {
+                        // fail fast, like the pre-sharding single-worker
+                        // design: a dead worker must surface at submit(),
+                        // not silently drop requests until shutdown
+                        panic!("engine worker {widx} died (shard queue disconnected)");
+                    }
                 }
             }
+            // shutdown: close worker queues, join, merge ledgers
+            drop(worker_txs);
+            let mut latencies = LatencyRecorder::new();
+            let mut served = 0usize;
+            let mut energy_mj = 0.0;
+            let mut busy_ms = 0.0;
+            for h in handles {
+                let stats = h.join().expect("engine worker panicked");
+                latencies.merge(&stats.latencies);
+                served += stats.served;
+                energy_mj += stats.energy_mj;
+                busy_ms += stats.busy_ms;
+            }
             let elapsed = started.elapsed().as_secs_f64().max(1e-9);
-            let rep = engine.energy_report();
             ServerReport {
                 requests: served,
                 batches,
+                workers: n_workers,
                 mean_latency_us: latencies.mean_us(),
                 p50_us: latencies.percentile_us(50.0),
                 p99_us: latencies.percentile_us(99.0),
                 throughput_rps: served as f64 / elapsed,
-                energy_mj: rep.energy_mj,
-                p_avg_w: engine.p_avg_w(),
+                energy_mj,
+                // average power per occupied accelerator slot-time,
+                // consistent with the single-worker definition
+                p_avg_w: if busy_ms > 0.0 { energy_mj / busy_ms } else { 0.0 },
             }
         });
-        Self { tx, worker: Some(worker) }
+        Self { tx, dispatcher: Some(dispatcher) }
     }
 
     /// Submit an image; returns a receiver for the reply.
     pub fn submit(&self, image: Tensor) -> Receiver<Reply> {
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = Request { image, submitted: Instant::now(), reply: reply_tx };
-        self.tx.send(req).expect("server worker alive");
+        self.tx.send(req).expect("server dispatcher alive");
         reply_rx
     }
 
     /// Shut down and collect the report.
     pub fn shutdown(mut self) -> ServerReport {
         drop(self.tx);
-        self.worker.take().unwrap().join().expect("worker panicked")
+        self.dispatcher.take().unwrap().join().expect("dispatcher panicked")
     }
 }
 
@@ -154,21 +248,28 @@ mod tests {
     use super::*;
     use crate::config::SparsitySupport;
 
-    #[test]
-    fn serves_batches_and_reports() {
-        let model = crate::nn::models::cnn3();
-        let cfg = AcceleratorConfig {
+    fn test_cfg() -> AcceleratorConfig {
+        AcceleratorConfig {
             features: SparsitySupport::NONE,
             dac: crate::config::DacKind::Edac,
             l_g: 5.0,
             ..Default::default()
-        };
+        }
+    }
+
+    #[test]
+    fn serves_batches_and_reports() {
+        let model = crate::nn::models::cnn3();
         let server = InferenceServer::spawn(
             model,
-            cfg,
+            test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig { max_batch: 4, batch_timeout: Duration::from_millis(1) },
+            ServerConfig {
+                max_batch: 4,
+                batch_timeout: Duration::from_millis(1),
+                ..Default::default()
+            },
         );
         let ds = crate::data::SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
         let mut rxs = Vec::new();
@@ -187,5 +288,37 @@ mod tests {
         assert!(report.batches >= 1 && report.batches <= 6);
         assert!(report.energy_mj > 0.0);
         assert!(report.p99_us >= report.p50_us);
+    }
+
+    #[test]
+    fn multi_worker_sharding_serves_everything() {
+        let model = crate::nn::models::cnn3();
+        let server = InferenceServer::spawn(
+            model,
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig {
+                max_batch: 8,
+                batch_timeout: Duration::from_millis(2),
+                workers: 3,
+                engine_threads: 1,
+            },
+        );
+        let ds = crate::data::SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
+        let mut rxs = Vec::new();
+        for i in 0..9 {
+            let (img, _) = ds.sample(7, i);
+            rxs.push(server.submit(img));
+        }
+        // every request answered exactly once, with sane logits
+        for rx in rxs {
+            let reply = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
+            assert_eq!(reply.logits.len(), 10);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.requests, 9);
+        assert_eq!(report.workers, 3);
+        assert!(report.energy_mj > 0.0, "all workers account energy");
     }
 }

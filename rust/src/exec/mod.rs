@@ -1,0 +1,23 @@
+//! Sparsity-compiled parallel execution layer.
+//!
+//! SCATTER's premise is that pruned rows/columns cost *nothing* — this
+//! module makes the digital twin honor that at execution time:
+//!
+//! * [`plan`] — per-chunk [`ChunkPlan`]s compiled once at programming
+//!   time: active-index gather tables and gain-folded dense weight
+//!   panels, so the streamed matvec does zero mask branching and skips
+//!   pruned work entirely;
+//! * [`pool`] — a std-only scoped worker pool ([`parallel_map`]) that
+//!   partitions (chunk-row × column-block) work items across threads.
+//!
+//! Determinism contract: programming is sequential, and all per-cycle
+//! noise is drawn from counter-based per-(chunk, column) RNG streams
+//! ([`crate::util::XorShiftRng::from_stream`]), so engine outputs are
+//! bit-identical for any worker count — asserted in
+//! `rust/tests/exec_engine.rs`.
+
+pub mod plan;
+pub mod pool;
+
+pub use plan::ChunkPlan;
+pub use pool::{parallel_map, partition_ranges};

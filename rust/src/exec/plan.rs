@@ -1,0 +1,324 @@
+//! Sparsity-compiled chunk execution plans.
+//!
+//! The legacy matmul streamed every activation column through every
+//! `k1×k2` PTC block with per-element `Option<&[bool]>` mask branching —
+//! pruned rows/columns still cost control flow, and the access pattern
+//! was column-major strided. A [`ChunkPlan`] compiles all of that away at
+//! `program_layer` time (the SIGE gather/scatter recipe, applied to the
+//! photonic twin):
+//!
+//! * **active-index gather tables** — `rows` holds the chunk-local output
+//!   rows that are actually computed (output gating + out-dim clipping
+//!   folded in), `cols` the chunk-local input columns whose effective
+//!   port gain is nonzero (input gating / LR folded in; under
+//!   `ColumnMode::PruneOnly` every in-range column stays, because pruned
+//!   paths physically leak `δw·x`);
+//! * **gain-folded weight panel** — `w[ri][ci] = w_real · u_gain · lr_gain`,
+//!   packed dense over (rows × cols), so the hot loop is a branch-free
+//!   panel GEMM that skips pruned work entirely;
+//! * **constant leakage bias** — input-gated columns leak the
+//!   extinction-ratio floor of the CW carrier *independently of the
+//!   activation* (Eq. 13); that whole term collapses to one per-row
+//!   constant `bias[ri] = Σ_j w_real · u_floor · lr_gain` added once per
+//!   streamed column.
+//!
+//! The plan is exactly the realized-physics matmul of the programmed
+//! blocks: for every (row, col) pair the planned product
+//! `(w_real·u_gain·lr_gain)·x` equals the legacy `(w_real·(x·u_gain))·lr_gain`
+//! up to floating-point re-association, and the bias term equals the
+//! legacy floor contributions summed over *all* k2 columns (including
+//! grid-padding columns, which legacy streams as x = 0 but which still
+//! leak their floor).
+
+use crate::ptc::crossbar::ProgrammedPtc;
+
+/// A compiled execution plan for one `rk1 × ck2` programmed chunk.
+#[derive(Debug, Clone)]
+pub struct ChunkPlan {
+    /// Chunk-local output rows to compute (active under output gating and
+    /// within the layer's `out_dim`), ascending.
+    pub rows: Vec<u32>,
+    /// Chunk-local input columns with nonzero port gain (and within the
+    /// layer's `in_dim`), ascending. Gather indices into the activation
+    /// panel.
+    pub cols: Vec<u32>,
+    /// Gain-folded realized weights, row-major `rows.len() × cols.len()`.
+    pub w: Vec<f64>,
+    /// Per-exec-row constant leakage term (already LR-rescaled).
+    pub bias: Vec<f64>,
+    /// True if any bias entry is nonzero (skip the add otherwise).
+    any_bias: bool,
+    /// Per-row PD-noise std for this chunk (0 when noise is off).
+    pub noise_std: f64,
+}
+
+impl ChunkPlan {
+    /// Compile the plan from a chunk's r·c programmed PTC blocks
+    /// (row-major over the (a, b) grid, as built by `program_layer`).
+    ///
+    /// `row_limit`/`col_limit` clip the chunk to the layer's real
+    /// `out_dim`/`in_dim` (grid-padding rows are never computed; padding
+    /// columns carry no signal but their gating floor still leaks into
+    /// `bias`).
+    pub fn from_blocks(
+        blocks: &[ProgrammedPtc],
+        r: usize,
+        c: usize,
+        row_limit: usize,
+        col_limit: usize,
+        noise_std: f64,
+    ) -> Self {
+        assert_eq!(blocks.len(), r * c, "chunk must hold r*c programmed blocks");
+        let (k1, k2) = (blocks[0].k1, blocks[0].k2);
+        assert!(row_limit <= r * k1 && col_limit <= c * k2);
+
+        // active-index gather tables
+        let mut rows = Vec::new();
+        for row in 0..row_limit {
+            let (a, i) = (row / k1, row % k1);
+            let blk = &blocks[a * c];
+            if !blk.output_gating || blk.row_mask[i] {
+                rows.push(row as u32);
+            }
+        }
+        let mut cols = Vec::new();
+        for col in 0..col_limit {
+            let (b, j) = (col / k2, col % k2);
+            if blocks[b].u_gain[j] != 0.0 {
+                cols.push(col as u32);
+            }
+        }
+
+        // gain-folded dense panel over (active rows × active cols)
+        let mut w = vec![0.0f64; rows.len() * cols.len()];
+        for (ri, &row) in rows.iter().enumerate() {
+            let (a, i) = (row as usize / k1, row as usize % k1);
+            for (ci, &col) in cols.iter().enumerate() {
+                let (b, j) = (col as usize / k2, col as usize % k2);
+                let blk = &blocks[a * c + b];
+                w[ri * cols.len() + ci] =
+                    blk.w_real[i * k2 + j] * blk.u_gain[j] * blk.lr_gain;
+            }
+        }
+
+        // constant leakage bias: floor contributions over ALL k2 columns
+        // of every b-block (padding columns included — legacy streams
+        // them as x = 0 but their gated modulators still leak)
+        let mut bias = vec![0.0f64; rows.len()];
+        let mut any_bias = false;
+        for (ri, &row) in rows.iter().enumerate() {
+            let (a, i) = (row as usize / k1, row as usize % k1);
+            let mut acc = 0.0;
+            for b in 0..c {
+                let blk = &blocks[a * c + b];
+                let mut block_acc = 0.0;
+                for j in 0..k2 {
+                    if blk.u_floor[j] != 0.0 {
+                        block_acc += blk.w_real[i * k2 + j] * blk.u_floor[j];
+                    }
+                }
+                acc += block_acc * blk.lr_gain;
+            }
+            bias[ri] = acc;
+            any_bias |= acc != 0.0;
+        }
+
+        Self { rows, cols, w, bias, any_bias, noise_std }
+    }
+
+    /// Active input columns (the gather count per streamed column block).
+    pub fn n_active_cols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Accumulate this chunk's contribution for a block of `bcols`
+    /// activation columns into `buf` (chunk-local rows × `bcols`,
+    /// row-major, stride `bcols`).
+    ///
+    /// `xq` is the gathered + normalized + quantized activation panel:
+    /// `cols.len() × bcols`, row-major — i.e. `xq[ci*bcols + t]` is active
+    /// column `cols[ci]` of streamed column `t`. The inner sweep is
+    /// panel-contiguous on both `w` and `xq`: zero branches, zero gather
+    /// indirection.
+    pub fn accumulate(&self, xq: &[f64], bcols: usize, buf: &mut [f64]) {
+        let nc = self.cols.len();
+        debug_assert_eq!(xq.len(), nc * bcols);
+        for (ri, &row) in self.rows.iter().enumerate() {
+            let dst = &mut buf[row as usize * bcols..row as usize * bcols + bcols];
+            if self.any_bias {
+                let b = self.bias[ri];
+                for v in dst.iter_mut() {
+                    *v += b;
+                }
+            }
+            let wrow = &self.w[ri * nc..(ri + 1) * nc];
+            for (ci, &wv) in wrow.iter().enumerate() {
+                if wv == 0.0 {
+                    continue;
+                }
+                let xrow = &xq[ci * bcols..(ci + 1) * bcols];
+                for (d, &xv) in dst.iter_mut().zip(xrow) {
+                    *d += wv * xv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::DeviceLibrary;
+    use crate::ptc::crossbar::{ColumnMode, ForwardOptions, PtcSimulator};
+    use crate::thermal::{coupling::ArrayGeometry, GammaModel};
+    use crate::util::XorShiftRng;
+
+    fn sim(k: usize) -> PtcSimulator {
+        let geom = ArrayGeometry { rows: k, cols: k, l_v: 120.0, l_h: 16.0, l_s: 9.0 };
+        PtcSimulator::new(geom, &GammaModel::paper(), DeviceLibrary::default())
+    }
+
+    /// Program an r×c grid of blocks for one chunk, mirroring
+    /// `PhotonicEngine::program_layer`.
+    fn program_chunk(
+        s: &PtcSimulator,
+        r: usize,
+        c: usize,
+        w: &[f64],
+        row_mask: &[bool],
+        col_mask: &[bool],
+        mode: ColumnMode,
+        og: bool,
+        seed: u64,
+    ) -> Vec<ProgrammedPtc> {
+        let (k1, k2) = (s.k1, s.k2);
+        let cols = c * k2;
+        let mut rng = XorShiftRng::new(seed);
+        let mut blocks = Vec::with_capacity(r * c);
+        for a in 0..r {
+            let rm = &row_mask[a * k1..(a + 1) * k1];
+            for b in 0..c {
+                let cm = &col_mask[b * k2..(b + 1) * k2];
+                let mut wb = vec![0.0f64; k1 * k2];
+                for i in 0..k1 {
+                    let src = (a * k1 + i) * cols + b * k2;
+                    wb[i * k2..(i + 1) * k2].copy_from_slice(&w[src..src + k2]);
+                }
+                let fo = ForwardOptions {
+                    thermal: true,
+                    pd_noise: false,
+                    phase_noise: false,
+                    col_mask: Some(cm),
+                    row_mask: Some(rm),
+                    col_mode: mode,
+                    output_gating: og,
+                };
+                blocks.push(s.program(&wb, &fo, &mut rng));
+            }
+        }
+        blocks
+    }
+
+    /// The plan's single-column output must equal streaming the same
+    /// input through the programmed blocks one at a time.
+    #[test]
+    fn plan_matches_programmed_blocks_all_modes() {
+        let (r, c) = (2, 2);
+        let s = sim(8);
+        let (rows, cols) = (r * s.k1, c * s.k2);
+        let mut rng = XorShiftRng::new(11);
+        let mut w = vec![0.0; rows * cols];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let mut x = vec![0.0; cols];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let row_mask: Vec<bool> = (0..rows).map(|i| i % 3 != 1).collect();
+        let col_mask: Vec<bool> = (0..cols).map(|j| j % 2 == 0).collect();
+
+        for (mode, og) in [
+            (ColumnMode::PruneOnly, false),
+            (ColumnMode::InputGating, false),
+            (ColumnMode::InputGating, true),
+            (ColumnMode::InputGatingLr, true),
+        ] {
+            let mut blocks =
+                program_chunk(&s, r, c, &w, &row_mask, &col_mask, mode, og, 5);
+            // legacy: stream through each block, accumulate per tile row
+            let mut y_legacy = vec![0.0f64; rows];
+            let mut nrng = XorShiftRng::new(0);
+            for a in 0..r {
+                for b in 0..c {
+                    let mut yb = vec![0.0f64; s.k1];
+                    blocks[a * c + b].run_into(
+                        &x[b * s.k2..(b + 1) * s.k2],
+                        &mut yb,
+                        &mut nrng,
+                    );
+                    for i in 0..s.k1 {
+                        y_legacy[a * s.k1 + i] += yb[i];
+                    }
+                }
+            }
+
+            // planned: gather active cols, one accumulate call
+            let plan = ChunkPlan::from_blocks(&blocks, r, c, rows, cols, 0.0);
+            let xq: Vec<f64> =
+                plan.cols.iter().map(|&j| x[j as usize].max(0.0)).collect();
+            let mut buf = vec![0.0f64; rows];
+            plan.accumulate(&xq, 1, &mut buf);
+
+            for i in 0..rows {
+                assert!(
+                    (buf[i] - y_legacy[i]).abs() < 1e-9,
+                    "mode {mode:?} og {og} row {i}: plan {} vs legacy {}",
+                    buf[i],
+                    y_legacy[i]
+                );
+            }
+            // gated rows must be exact zeros in both paths
+            if og {
+                for i in 0..rows {
+                    if !row_mask[i] {
+                        assert_eq!(buf[i], 0.0);
+                        assert_eq!(y_legacy[i], 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_skips_pruned_work_under_gating_but_not_prune_only() {
+        let (r, c) = (1, 2);
+        let s = sim(8);
+        let (rows, cols) = (r * s.k1, c * s.k2);
+        let w = vec![0.5; rows * cols];
+        let row_mask = vec![true; rows];
+        let col_mask: Vec<bool> = (0..cols).map(|j| j % 4 == 0).collect(); // 25% active
+
+        let gated = program_chunk(
+            &s, r, c, &w, &row_mask, &col_mask, ColumnMode::InputGatingLr, true, 1,
+        );
+        let plan = ChunkPlan::from_blocks(&gated, r, c, rows, cols, 0.0);
+        assert_eq!(plan.n_active_cols(), cols / 4, "LR plan gathers only active cols");
+
+        let prune = program_chunk(
+            &s, r, c, &w, &row_mask, &col_mask, ColumnMode::PruneOnly, false, 1,
+        );
+        let plan = ChunkPlan::from_blocks(&prune, r, c, rows, cols, 0.0);
+        assert_eq!(plan.n_active_cols(), cols, "prune-only leaks through every port");
+    }
+
+    #[test]
+    fn plan_clips_padding_rows_and_cols() {
+        let (r, c) = (1, 1);
+        let s = sim(8);
+        let w = vec![0.25; 64];
+        let mask = vec![true; 8];
+        let blocks =
+            program_chunk(&s, r, c, &w, &mask, &mask, ColumnMode::PruneOnly, false, 2);
+        let plan = ChunkPlan::from_blocks(&blocks, r, c, 5, 6, 0.0);
+        assert_eq!(plan.rows, vec![0, 1, 2, 3, 4]);
+        assert_eq!(plan.cols, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(plan.w.len(), 30);
+    }
+}

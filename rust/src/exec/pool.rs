@@ -1,0 +1,127 @@
+//! Hand-rolled scoped worker pool (the offline toolchain has no rayon).
+//!
+//! [`parallel_map`] fans a list of independent work items across a fixed
+//! number of `std::thread::scope` workers pulling from a shared atomic
+//! counter, and returns the results in item order. Because items are
+//! claimed dynamically, stragglers load-balance automatically; because
+//! results are reassembled by index, the output is independent of which
+//! worker computed what.
+//!
+//! Callers must make the items themselves scheduling-invariant (e.g. the
+//! engine's counter-based per-(chunk, column) noise streams) — the pool
+//! guarantees only ordering of the result vector, not execution order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Map `f` over `0..n_items` on up to `threads` workers; results are
+/// returned in item order. `threads <= 1` (or a single item) runs inline
+/// on the caller with zero thread overhead, so a pool of one is exactly
+/// the sequential loop.
+pub fn parallel_map<T, F>(threads: usize, n_items: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads.max(1).min(n_items);
+    if workers <= 1 {
+        return (0..n_items).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                if tx.send((i, f(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+    });
+
+    let mut slots: Vec<Option<T>> = (0..n_items).map(|_| None).collect();
+    for (i, v) in rx.iter() {
+        slots[i] = Some(v);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("worker panicked before finishing its item"))
+        .collect()
+}
+
+/// Split `n` items into `parts` near-equal contiguous ranges (the last
+/// ranges are one shorter when `n % parts != 0`). Empty ranges are
+/// omitted, so the result has `min(parts, n)` entries.
+pub fn partition_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::new();
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            break;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order_any_thread_count() {
+        let expect: Vec<usize> = (0..100).map(|i| i * i).collect();
+        for threads in [1, 2, 4, 8, 32] {
+            let got = parallel_map(threads, 100, |i| i * i);
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item() {
+        let got: Vec<usize> = parallel_map(4, 0, |i| i);
+        assert!(got.is_empty());
+        let got = parallel_map(4, 1, |i| i + 10);
+        assert_eq!(got, vec![10]);
+    }
+
+    #[test]
+    fn workers_actually_run_concurrently() {
+        use std::sync::atomic::AtomicUsize;
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static LIVE: AtomicUsize = AtomicUsize::new(0);
+        let _ = parallel_map(4, 16, |_| {
+            let live = LIVE.fetch_add(1, Ordering::SeqCst) + 1;
+            PEAK.fetch_max(live, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            LIVE.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(PEAK.load(Ordering::SeqCst) > 1, "no overlap observed");
+    }
+
+    #[test]
+    fn partition_covers_everything() {
+        for (n, parts) in [(10, 3), (3, 10), (0, 4), (16, 4), (7, 1)] {
+            let ranges = partition_ranges(n, parts);
+            let total: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n, "n={n} parts={parts}");
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+}

@@ -15,7 +15,8 @@
 //!   (power/crosstalk-aware dynamic sparse training) at build time.
 //! * **L3** — this crate: the accelerator digital twin (device, thermal,
 //!   power, area models), the cycle-level multi-core scheduler, gating and
-//!   rerouter control, the power-aware mask optimizer, a tokio-based
+//!   rerouter control, the power-aware mask optimizer, the
+//!   sparsity-compiled parallel execution layer (`exec`), a threaded
 //!   batched inference service, and the benchmark harness that regenerates
 //!   every table and figure in the paper's evaluation.
 //!
@@ -35,6 +36,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod devices;
+pub mod exec;
 pub mod nn;
 pub mod power;
 pub mod ptc;
@@ -47,21 +49,44 @@ pub mod util;
 
 pub use config::AcceleratorConfig;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type. Display/Error are hand-implemented — the
+/// offline toolchain has no thiserror.
+#[derive(Debug)]
 pub enum Error {
-    #[error("configuration error: {0}")]
     Config(String),
-    #[error("shape mismatch: {0}")]
     Shape(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("serialization error: {0}")]
+    Io(std::io::Error),
     Serde(String),
-    #[error("runtime (PJRT/XLA) error: {0}")]
     Runtime(String),
-    #[error("{0}")]
     Other(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "configuration error: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Serde(m) => write!(f, "serialization error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime (PJRT/XLA) error: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

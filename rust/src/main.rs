@@ -1,12 +1,16 @@
 //! SCATTER command-line interface.
 //!
 //! ```text
-//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|all>
-//!         [--samples N] [--models cnn3,vgg8,resnet18]
+//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|all>
+//!         [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8]
 //! scatter config [--preset default|dense|foundry] [--out FILE]
 //! scatter gamma  [--heatsim]
 //! scatter info
 //! ```
+//!
+//! `bench engine` sweeps the sparsity-compiled execution engine across
+//! worker-thread counts × structured column sparsity and writes
+//! `BENCH_engine.json` at the repo root.
 //!
 //! (Hand-rolled parsing: the offline toolchain has no clap.)
 
@@ -25,8 +29,8 @@ fn main() {
             eprintln!(
                 "usage: scatter <bench|config|gamma|info> [...]\n\
                  \n\
-                 bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|all>\n\
-                 \x20      [--samples N] [--models cnn3,vgg8,resnet18]\n\
+                 bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|all>\n\
+                 \x20      [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8]\n\
                  config [--preset default|dense|foundry] [--out FILE]\n\
                  gamma  [--heatsim]\n\
                  info"
@@ -70,6 +74,17 @@ fn cmd_bench(args: &[String]) {
             println!("{}", bench::fig9::run_b(&ctx));
         }
         "fig10" => println!("{}", bench::fig10::run(&ctx)),
+        "engine" => {
+            let threads: Vec<usize> = flag_value(args, "--threads")
+                .unwrap_or("1,2,4,8")
+                .split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect();
+            // --samples doubles as the per-cell time budget (ms × 10):
+            // the default 100 gives ~1 s per cell
+            let budget = std::time::Duration::from_millis((samples as u64) * 10);
+            println!("{}", bench::engine::run(&threads, budget));
+        }
         "all" => bench::run_all(&ctx),
         other => {
             eprintln!("unknown bench target '{other}'");

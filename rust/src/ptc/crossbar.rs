@@ -300,11 +300,13 @@ pub struct ProgrammedPtc {
     pub w_real: Vec<f64>,
     /// |Δφ̃| per weight (row-major) — feeds the MZI hold-power model.
     pub phase_abs: Vec<f64>,
-    row_mask: Vec<bool>,
-    u_gain: Vec<f64>,
-    u_floor: Vec<f64>,
-    lr_gain: f64,
-    output_gating: bool,
+    // pub(crate): `exec::plan` compiles these frozen non-idealities into
+    // gain-folded active-index execution plans.
+    pub(crate) row_mask: Vec<bool>,
+    pub(crate) u_gain: Vec<f64>,
+    pub(crate) u_floor: Vec<f64>,
+    pub(crate) lr_gain: f64,
+    pub(crate) output_gating: bool,
     pd_noise: bool,
     pd_noise_std: f64,
     scratch: Vec<f64>,

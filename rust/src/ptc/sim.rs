@@ -106,12 +106,13 @@ impl ChunkSimulator {
         let mut y = vec![0.0f64; rows];
         let mut w_block = vec![0.0f64; k1 * k2];
         for a in 0..self.r {
-            // row-block mask segment
-            let rm_seg: Option<Vec<bool>> =
-                row_mask.map(|rm| rm[a * k1..(a + 1) * k1].to_vec());
+            // row-block mask segment — borrowed, not copied: the old
+            // `.to_vec()` here allocated two Vecs per (a, b) block on
+            // every forward call
+            let rm_seg: Option<&[bool]> = row_mask.map(|rm| &rm[a * k1..(a + 1) * k1]);
             for b in 0..self.c {
-                let cm_seg: Option<Vec<bool>> =
-                    col_mask.map(|cm| cm[b * k2..(b + 1) * k2].to_vec());
+                let cm_seg: Option<&[bool]> =
+                    col_mask.map(|cm| &cm[b * k2..(b + 1) * k2]);
                 // gather the k1×k2 block (a,b)
                 for i in 0..k1 {
                     let src = (a * k1 + i) * cols + b * k2;
@@ -121,8 +122,8 @@ impl ChunkSimulator {
                     thermal: opts.thermal,
                     pd_noise: opts.pd_noise,
                     phase_noise: opts.phase_noise,
-                    col_mask: cm_seg.as_deref(),
-                    row_mask: rm_seg.as_deref(),
+                    col_mask: cm_seg,
+                    row_mask: rm_seg,
                     col_mode: opts.col_mode,
                     output_gating: opts.output_gating,
                 };

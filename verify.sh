@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (ROADMAP.md): release build + tests, then a
+# short engine-bench smoke that refreshes BENCH_engine.json at the repo
+# root. Every PR runs this via .github/workflows/ci.yml.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+(cd rust && cargo build --release)
+
+echo "== tier-1: cargo test -q =="
+(cd rust && cargo test -q)
+
+echo "== bench smoke: engine sweep (--samples 5 ≈ 50 ms/cell) =="
+./rust/target/release/scatter bench engine --samples 5 --threads 1,2,4,8
+
+echo "verify OK"
