@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""CI perf-trajectory gate.
+
+Compares the fresh ``BENCH_engine.json`` (written by ``scatter bench
+engine``) against the committed baseline in ``ci/bench_baseline.json``
+and fails the build when any baselined cell's GMAC/s drops more than
+``tolerance`` (default 20%). Also sanity-checks ``BENCH_server.json``
+(written by ``scatter bench serve``) so a broken networked-serving path
+cannot ship a green build.
+
+Bootstrap protocol: the baseline ships with ``"cells": null`` because no
+trusted numbers exist until CI has run on real hardware. In that mode
+the gate is record-only — it prints a ready-to-paste baseline block
+built from the fresh run; commit it into ``ci/bench_baseline.json`` to
+arm the gate. Re-bootstrap the same way after intentional perf changes.
+
+Stdlib-only on purpose: CI and the offline dev container both run it
+with a bare python3.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def engine_cells(doc):
+    """{(path, threads, sparsity): gmacs} from a BENCH_engine.json."""
+    cells = {}
+    for row in doc.get("results", []):
+        key = (row["path"], int(row["threads"]), round(float(row["sparsity"]), 6))
+        cells[key] = float(row["gmacs"])
+    return cells
+
+
+def check_engine(fresh_path, baseline_path, failures):
+    fresh = engine_cells(load(fresh_path))
+    if not fresh:
+        failures.append(f"{fresh_path}: no engine results — bench did not run")
+        return
+    base_doc = load(baseline_path)
+    tolerance = float(base_doc.get("tolerance", 0.20))
+    cells = (base_doc.get("engine") or {}).get("cells")
+    if cells is None:
+        print(f"{baseline_path}: no committed baseline yet (cells: null) — record-only.")
+        print("To arm the regression gate, replace the \"engine\" block with:")
+        block = {
+            "cells": [
+                {"path": p, "threads": t, "sparsity": s, "gmacs": round(g, 3)}
+                for (p, t, s), g in sorted(fresh.items())
+            ]
+        }
+        print(json.dumps({"engine": block}, indent=2))
+        return
+    compared = 0
+    for cell in cells:
+        key = (cell["path"], int(cell["threads"]), round(float(cell["sparsity"]), 6))
+        if key not in fresh:
+            failures.append(f"baseline cell {key} missing from fresh engine run")
+            continue
+        compared += 1
+        floor = float(cell["gmacs"]) * (1.0 - tolerance)
+        if fresh[key] < floor:
+            failures.append(
+                f"engine cell {key}: {fresh[key]:.3f} GMAC/s < floor {floor:.3f} "
+                f"(baseline {float(cell['gmacs']):.3f}, tolerance {tolerance:.0%})"
+            )
+    print(
+        f"engine gate: compared {compared} cells against {baseline_path} "
+        f"(tolerance {tolerance:.0%})"
+    )
+
+
+def check_server(server_path, failures):
+    doc = load(server_path)
+    checks = [
+        ("requests_ok", lambda v: v > 0, "> 0 requests must be served"),
+        ("throughput_rps", lambda v: v > 0, "throughput must be nonzero"),
+        ("client_p50_us", lambda v: v > 0, "latency must be measured"),
+        ("shed_rate", lambda v: 0.0 <= v <= 1.0, "shed rate must be a fraction"),
+        ("errors", lambda v: v == 0, "transport errors mean a broken serving path"),
+    ]
+    for field, ok, why in checks:
+        if field not in doc:
+            failures.append(f"{server_path}: missing field '{field}'")
+            continue
+        value = float(doc[field])
+        if not ok(value):
+            failures.append(f"{server_path}: {field}={value} ({why})")
+    server = doc.get("server") or {}
+    if server:
+        if float(server.get("energy_mj", 0.0)) <= 0.0:
+            failures.append(f"{server_path}: server.energy_mj not accounted")
+    print(f"server gate: {server_path} structurally valid" if not failures else "")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--engine", default="BENCH_engine.json")
+    ap.add_argument("--server", default=None, help="BENCH_server.json (optional)")
+    ap.add_argument("--baseline", default="ci/bench_baseline.json")
+    args = ap.parse_args()
+
+    failures: list[str] = []
+    try:
+        check_engine(args.engine, args.baseline, failures)
+    except (OSError, ValueError, KeyError) as e:
+        failures.append(f"engine check unreadable: {e!r}")
+    if args.server:
+        try:
+            check_server(args.server, failures)
+        except (OSError, ValueError, KeyError) as e:
+            failures.append(f"server check unreadable: {e!r}")
+
+    if failures:
+        print("\nPERF GATE FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("perf gate OK")
+
+
+if __name__ == "__main__":
+    main()

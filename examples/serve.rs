@@ -1,9 +1,11 @@
-//! Batched inference service over the photonic digital twin.
+//! Networked batched-inference service over the photonic digital twin.
 //!
 //! Spawns the coordinator's dynamic-batching server with the CNN-3 model
-//! on the full SCATTER configuration, submits a stream of requests from
-//! the synthetic FashionMNIST-shaped dataset, and reports per-request
-//! latency percentiles, throughput, accuracy, and accelerator energy.
+//! on the full SCATTER configuration, puts it on a TCP socket with the
+//! std-only HTTP front-end, drives a stream of `POST /v1/predict`
+//! requests through real keep-alive connections, and reports
+//! per-request latency percentiles, throughput, accuracy, accelerator
+//! energy, and the admission-control counters.
 //!
 //! ```bash
 //! cargo run --release --example serve -- [n_requests]
@@ -11,7 +13,11 @@
 
 use scatter::bench::common::{BenchCtx, Workload};
 use scatter::config::AcceleratorConfig;
-use scatter::coordinator::{EngineOptions, InferenceServer, ServerConfig};
+use scatter::coordinator::net::{http_request, HttpClient, HttpServer, NetConfig};
+use scatter::coordinator::{
+    AdmissionConfig, EngineOptions, InferenceServer, ServerConfig,
+};
+use scatter::util::Json;
 use std::time::Duration;
 
 fn main() {
@@ -21,7 +27,7 @@ fn main() {
     let (model, ds, masks) = ctx.deployment(Workload::Cnn3, &cfg, 0.3);
 
     println!(
-        "spawning SCATTER inference server: CNN-3, s=0.3, IG+OG+LR, {n} requests, \
+        "spawning SCATTER inference service: CNN-3, s=0.3, IG+OG+LR, {n} requests, \
          2 engine workers x 2 threads"
     );
     let server = InferenceServer::spawn(
@@ -34,24 +40,55 @@ fn main() {
             batch_timeout: Duration::from_millis(4),
             workers: 2,
             engine_threads: 2,
+            admission: AdmissionConfig { max_in_flight: 128, ..Default::default() },
         },
     );
+    let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral port");
+    let addr = http.local_addr();
+    println!("listening on http://{addr}  (try: curl http://{addr}/healthz)");
 
-    let mut pending = Vec::new();
-    let mut labels = Vec::new();
-    for i in 0..n {
-        let (img, label) = ds.sample(0xBEEF, i);
-        labels.push(label);
-        pending.push(server.submit(img));
-    }
-    let mut correct = 0usize;
-    for (rx, label) in pending.into_iter().zip(labels) {
-        let reply = rx.recv().expect("server reply");
-        if reply.class == label {
-            correct += 1;
-        }
-    }
-    let report = server.shutdown();
+    // drive n requests through 4 real keep-alive HTTP connections
+    let clients = 4usize;
+    let correct: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let ds = &ds;
+                s.spawn(move || {
+                    let mut client = HttpClient::connect(&addr).expect("connect");
+                    let mut correct = 0usize;
+                    for i in (c..n).step_by(clients) {
+                        let (img, label) = ds.sample(0xBEEF, i);
+                        let body =
+                            Json::obj(vec![("image", Json::arr_f64(&img.data))]).to_string();
+                        let resp = client
+                            .request("POST", "/v1/predict", Some(&body))
+                            .expect("predict");
+                        assert_eq!(resp.status, 200, "unexpected: {}", resp.body);
+                        let reply = Json::parse(&resp.body).expect("json reply");
+                        let class =
+                            reply.get("class").and_then(Json::as_usize).expect("class");
+                        if class == label {
+                            correct += 1;
+                        }
+                    }
+                    correct
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client")).sum()
+    });
+
+    // live observability while the service is still up
+    let metrics = http_request(&addr, "GET", "/metrics", None).expect("metrics");
+    let in_queue = metrics
+        .body
+        .lines()
+        .find(|l| l.starts_with("scatter_requests_total"))
+        .unwrap_or("scatter_requests_total ?")
+        .to_string();
+    println!("live /metrics sample: {in_queue}");
+
+    let report = http.shutdown().expect("graceful drain");
     println!(
         "served {} requests in {} batches across {} engine workers",
         report.requests, report.batches, report.workers
@@ -65,5 +102,9 @@ fn main() {
     println!(
         "  accelerator: {:.3} mJ total, P_avg {:.2} W",
         report.energy_mj, report.p_avg_w
+    );
+    println!(
+        "  admission  : shed {}, expired {}, worker_lost {}",
+        report.shed, report.expired, report.worker_lost
     );
 }

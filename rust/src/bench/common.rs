@@ -203,6 +203,20 @@ impl BenchCtx {
     }
 }
 
+/// Resolve `name` to the repo root whether the bench runs from the repo
+/// root (`scatter bench ...`) or from `rust/` (`cargo bench`/`cargo
+/// test`), so perf artifacts (`BENCH_engine.json`, `BENCH_server.json`)
+/// always land in one place for CI to pick up.
+pub fn repo_root_file(name: &str) -> std::path::PathBuf {
+    if std::path::Path::new("ROADMAP.md").exists() {
+        name.into()
+    } else if std::path::Path::new("../ROADMAP.md").exists() {
+        std::path::Path::new("..").join(name)
+    } else {
+        name.into()
+    }
+}
+
 fn short_name(wl: Workload) -> &'static str {
     match wl {
         Workload::Cnn3 => "cnn3",

@@ -5,6 +5,7 @@
 //! root so the perf trajectory is tracked across PRs (EXPERIMENTS.md
 //! §Perf).
 
+use crate::bench::common::repo_root_file;
 use crate::bench::timing::bench;
 use crate::config::AcceleratorConfig;
 use crate::coordinator::{EngineOptions, PhotonicEngine};
@@ -27,7 +28,14 @@ pub const SPARSITIES: [f64; 3] = [0.0, 0.5, 0.875];
 /// Structured column mask at `sparsity` pruned columns: within every
 /// k2-segment the first `k2·(1−s)` columns stay active (the paper's
 /// per-segment uniform pattern, §3.3.5), rows stay dense.
-fn column_mask(p: usize, q: usize, rows: usize, cols: usize, k2: usize, sparsity: f64) -> LayerMask {
+fn column_mask(
+    p: usize,
+    q: usize,
+    rows: usize,
+    cols: usize,
+    k2: usize,
+    sparsity: f64,
+) -> LayerMask {
     let keep = ((k2 as f64 * (1.0 - sparsity)).round() as usize).clamp(0, k2);
     let col: Vec<bool> = (0..cols).map(|j| j % k2 < keep).collect();
     let chunk = ChunkMask::new(vec![true; rows], col);
@@ -72,18 +80,6 @@ fn bench_engine(sparsity: f64, threads: usize, reference: bool, budget: Duration
         }
     });
     r.mean_ns
-}
-
-/// `BENCH_engine.json` lands at the repo root whether the bench runs from
-/// the repo root (`scatter bench engine`) or from `rust/` (`cargo bench`).
-fn repo_root_file(name: &str) -> std::path::PathBuf {
-    if std::path::Path::new("ROADMAP.md").exists() {
-        name.into()
-    } else if std::path::Path::new("../ROADMAP.md").exists() {
-        std::path::Path::new("..").join(name)
-    } else {
-        name.into()
-    }
 }
 
 /// MAC/ns == GMAC/s for the fixed bench shape.

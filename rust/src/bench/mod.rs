@@ -8,6 +8,7 @@
 
 pub mod common;
 pub mod engine;
+pub mod serve;
 pub mod timing;
 
 pub mod fig10;

@@ -1,0 +1,262 @@
+//! Closed/open-loop load generator for the networked inference service.
+//!
+//! Drives `POST /v1/predict` over real TCP — by default against an
+//! in-process [`HttpServer`] on an ephemeral port (so CI measures the
+//! full wire path with zero setup), or against `--addr host:port` for an
+//! externally launched `scatter serve`. Emits `BENCH_server.json` at the
+//! repo root (throughput, client p50/p99, shed rate, J/inference) so the
+//! serving-perf trajectory is tracked across PRs next to
+//! `BENCH_engine.json` (EXPERIMENTS.md §Serving).
+//!
+//! Two drive modes:
+//!
+//! * **closed loop** (`rps == 0`): `concurrency` keep-alive clients fire
+//!   back-to-back — measures capacity;
+//! * **open loop** (`rps > 0`): clients fire on a fixed schedule
+//!   regardless of completions — measures behavior at a target arrival
+//!   rate, where admission control (shed rate) becomes visible.
+
+use crate::bench::common::{repo_root_file, BenchCtx, Workload};
+use crate::config::AcceleratorConfig;
+use crate::coordinator::metrics::LatencyRecorder;
+use crate::coordinator::net::{resolve_addr, HttpClient, HttpServer, NetConfig};
+use crate::coordinator::{EngineOptions, InferenceServer, ServerConfig, ServerReport};
+use crate::util::{Json, Table};
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+/// Load-generator configuration (`scatter bench serve`).
+#[derive(Debug, Clone)]
+pub struct ServeBenchConfig {
+    /// Target arrival rate; 0 switches to closed-loop mode.
+    pub rps: f64,
+    pub duration: Duration,
+    /// Concurrent keep-alive client connections.
+    pub concurrency: usize,
+    /// Drive an already-running server instead of spawning in-process.
+    pub addr: Option<String>,
+    /// Shape of the in-process server (ignored with `addr`).
+    pub server: ServerConfig,
+    /// Backbone density for the in-process deployment.
+    pub density: f64,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        Self {
+            rps: 0.0,
+            duration: Duration::from_secs(2),
+            concurrency: 4,
+            addr: None,
+            server: ServerConfig {
+                workers: 2,
+                batch_timeout: Duration::from_millis(4),
+                ..Default::default()
+            },
+            density: 0.3,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+struct ClientTally {
+    ok_latencies_us: Vec<u64>,
+    shed: u64,
+    expired: u64,
+    errors: u64,
+}
+
+/// One client connection's send loop.
+fn drive_client(
+    addr: SocketAddr,
+    bodies: &[String],
+    mode_interval: Option<Duration>,
+    deadline: Instant,
+    seed: usize,
+) -> ClientTally {
+    let mut tally = ClientTally::default();
+    let mut client = match HttpClient::connect(&addr) {
+        Ok(c) => c,
+        Err(_) => {
+            tally.errors += 1;
+            return tally;
+        }
+    };
+    let mut next_send = Instant::now();
+    let mut i = seed;
+    while Instant::now() < deadline {
+        if let Some(interval) = mode_interval {
+            let now = Instant::now();
+            if next_send > now {
+                std::thread::sleep(next_send - now);
+            }
+            next_send += interval;
+        }
+        let body = &bodies[i % bodies.len()];
+        i += 1;
+        let t0 = Instant::now();
+        match client.request("POST", "/v1/predict", Some(body)) {
+            Ok(resp) => match resp.status {
+                200 => tally.ok_latencies_us.push(t0.elapsed().as_micros() as u64),
+                503 => tally.shed += 1,
+                504 => tally.expired += 1,
+                _ => tally.errors += 1,
+            },
+            Err(_) => {
+                tally.errors += 1;
+                // the server may have closed the connection; reconnect
+                match HttpClient::connect(&addr) {
+                    Ok(c) => client = c,
+                    Err(_) => return tally,
+                }
+            }
+        }
+    }
+    tally
+}
+
+/// Pre-rendered request bodies (serialization stays off the timed path).
+fn render_bodies(n: usize) -> Vec<String> {
+    let ds = crate::data::SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
+    (0..n)
+        .map(|i| {
+            let (img, _) = ds.sample(0xBE7, i);
+            Json::obj(vec![("image", Json::arr_f64(&img.data))]).to_string()
+        })
+        .collect()
+}
+
+/// Run the load test, print the summary table, write
+/// `BENCH_server.json`, and return the rendered table.
+pub fn run(cfg: &ServeBenchConfig) -> String {
+    // stand up the target (in-process unless --addr points elsewhere)
+    let (addr, http) = match &cfg.addr {
+        Some(a) => (resolve_addr(a).expect("--addr resolves"), None),
+        None => {
+            let ctx = BenchCtx::new(50);
+            let acc = AcceleratorConfig::default();
+            let (model, _ds, masks) = ctx.deployment(Workload::Cnn3, &acc, cfg.density);
+            let server = InferenceServer::spawn(
+                model,
+                acc,
+                EngineOptions::NOISY,
+                masks,
+                cfg.server.clone(),
+            );
+            let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral");
+            (http.local_addr(), Some(http))
+        }
+    };
+
+    let bodies = render_bodies(16);
+    let interval = if cfg.rps > 0.0 {
+        Some(Duration::from_secs_f64(cfg.concurrency.max(1) as f64 / cfg.rps))
+    } else {
+        None
+    };
+    let started = Instant::now();
+    let deadline = started + cfg.duration;
+    let tallies: Vec<ClientTally> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.concurrency.max(1))
+            .map(|c| {
+                let bodies = &bodies;
+                s.spawn(move || drive_client(addr, bodies, interval, deadline, c * 7919))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall_s = started.elapsed().as_secs_f64().max(1e-9);
+
+    // graceful drain of the in-process server (also the energy source)
+    let report: Option<ServerReport> =
+        http.map(|h| h.shutdown().expect("drain in-process server"));
+
+    // merge client tallies
+    let mut lat = LatencyRecorder::new();
+    let (mut ok, mut shed, mut expired, mut errors) = (0u64, 0u64, 0u64, 0u64);
+    for t in &tallies {
+        ok += t.ok_latencies_us.len() as u64;
+        shed += t.shed;
+        expired += t.expired;
+        errors += t.errors;
+        for &us in &t.ok_latencies_us {
+            lat.record(Duration::from_micros(us));
+        }
+    }
+    let total = ok + shed + expired + errors;
+    let throughput = ok as f64 / wall_s;
+    let shed_rate = if total > 0 { shed as f64 / total as f64 } else { 0.0 };
+    let j_per_inference = report.as_ref().and_then(|r| {
+        if r.requests > 0 {
+            Some(r.energy_mj * 1e-3 / r.requests as f64)
+        } else {
+            None
+        }
+    });
+
+    let mode = if cfg.rps > 0.0 { "open" } else { "closed" };
+    let mut table = Table::new("networked serving load test (POST /v1/predict over TCP)")
+        .header(&["metric", "value"]);
+    table.row(vec!["mode".into(), format!("{mode}-loop x{}", cfg.concurrency.max(1))]);
+    table.row(vec!["duration".into(), format!("{:.2} s", wall_s)]);
+    table.row(vec![
+        "ok / shed / expired / errors".into(),
+        format!("{ok} / {shed} / {expired} / {errors}"),
+    ]);
+    table.row(vec!["throughput".into(), format!("{throughput:.1} req/s")]);
+    table.row(vec!["client p50".into(), format!("{} us", lat.percentile_us(50.0))]);
+    table.row(vec!["client p99".into(), format!("{} us", lat.percentile_us(99.0))]);
+    table.row(vec!["shed rate".into(), format!("{:.1} %", 100.0 * shed_rate)]);
+    if let Some(r) = &report {
+        table.row(vec!["server p50/p99".into(), format!("{}/{} us", r.p50_us, r.p99_us)]);
+        table.row(vec!["accelerator energy".into(), format!("{:.3} mJ", r.energy_mj)]);
+        if let Some(j) = j_per_inference {
+            table.row(vec!["energy/inference".into(), format!("{:.3} mJ", j * 1e3)]);
+        }
+    }
+
+    let mut pairs = vec![
+        ("bench", Json::Str("serve".into())),
+        ("mode", Json::Str(mode.into())),
+        ("rps_target", Json::Num(cfg.rps)),
+        ("duration_s", Json::Num(wall_s)),
+        ("concurrency", Json::Num(cfg.concurrency.max(1) as f64)),
+        ("requests_total", Json::Num(total as f64)),
+        ("requests_ok", Json::Num(ok as f64)),
+        ("shed", Json::Num(shed as f64)),
+        ("expired", Json::Num(expired as f64)),
+        ("errors", Json::Num(errors as f64)),
+        ("throughput_rps", Json::Num(throughput)),
+        ("client_p50_us", Json::Num(lat.percentile_us(50.0) as f64)),
+        ("client_p99_us", Json::Num(lat.percentile_us(99.0) as f64)),
+        ("client_mean_us", Json::Num(lat.mean_us())),
+        ("shed_rate", Json::Num(shed_rate)),
+    ];
+    if let Some(r) = &report {
+        pairs.push((
+            "server",
+            Json::obj(vec![
+                ("requests", Json::Num(r.requests as f64)),
+                ("batches", Json::Num(r.batches as f64)),
+                ("workers", Json::Num(r.workers as f64)),
+                ("p50_us", Json::Num(r.p50_us as f64)),
+                ("p99_us", Json::Num(r.p99_us as f64)),
+                ("energy_mj", Json::Num(r.energy_mj)),
+                ("p_avg_w", Json::Num(r.p_avg_w)),
+                ("shed", Json::Num(r.shed as f64)),
+                ("expired", Json::Num(r.expired as f64)),
+                (
+                    "j_per_inference",
+                    j_per_inference.map(Json::Num).unwrap_or(Json::Null),
+                ),
+            ]),
+        ));
+    }
+    let json = Json::obj(pairs);
+    let path = repo_root_file("BENCH_server.json");
+    match std::fs::write(&path, json.to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    table.render()
+}

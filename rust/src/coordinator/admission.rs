@@ -1,0 +1,191 @@
+//! Admission control for the inference service.
+//!
+//! The north-star deployment serves open-loop traffic: arrival rate is
+//! set by clients, not by the accelerator, so an unbounded inbox turns
+//! overload into unbounded latency and memory. [`AdmissionController`]
+//! instead enforces a hard in-flight cap — a request is either admitted
+//! (it holds a [`Permit`] until its reply is sent) or *shed* immediately
+//! with [`crate::Error::Busy`], which the HTTP front-end
+//! ([`crate::coordinator::net`]) translates into `503` + `Retry-After`.
+//! Shedding at the door keeps the queue short enough that admitted
+//! requests meet their deadlines; expired work is dropped before it
+//! wastes engine time (see [`crate::coordinator::server`]).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Admission-control knobs for [`crate::coordinator::ServerConfig`].
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Hard cap on requests admitted but not yet replied to (queued in
+    /// the dispatcher, batched, or executing). Submissions beyond the
+    /// cap are shed with [`crate::Error::Busy`]. Clamped to ≥ 1.
+    pub max_in_flight: usize,
+    /// Deadline applied to requests that do not carry their own; `None`
+    /// means admitted requests never expire in queue.
+    pub default_deadline: Option<Duration>,
+    /// Back-off hint returned with shed requests (the HTTP layer rounds
+    /// it up to whole seconds for the `Retry-After` header).
+    pub retry_after: Duration,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            max_in_flight: 256,
+            default_deadline: None,
+            retry_after: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Shared in-flight accounting; one per [`crate::coordinator::InferenceServer`],
+/// shared with the HTTP front-end for `/metrics` and `/healthz`.
+#[derive(Debug)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    in_flight: AtomicUsize,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Arc<Self> {
+        Arc::new(Self {
+            cfg,
+            in_flight: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Admit one request or shed it. The returned [`Permit`] releases
+    /// the in-flight slot when dropped (after the reply is sent, or when
+    /// the request dies anywhere along the pipeline).
+    pub fn try_admit(self: &Arc<Self>) -> crate::Result<Permit> {
+        let cap = self.cfg.max_in_flight.max(1);
+        let admitted = self
+            .in_flight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < cap).then_some(n + 1)
+            })
+            .is_ok();
+        if admitted {
+            self.admitted.fetch_add(1, Ordering::Relaxed);
+            Ok(Permit { ctrl: Arc::clone(self) })
+        } else {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            Err(crate::Error::Busy {
+                retry_after_ms: self.cfg.retry_after.as_millis() as u64,
+            })
+        }
+    }
+
+    /// Resolve a request's deadline: its own ask wins, then the
+    /// configured default, then none.
+    pub fn deadline_from(&self, now: Instant, requested: Option<Duration>) -> Option<Instant> {
+        requested.or(self.cfg.default_deadline).map(|d| now + d)
+    }
+
+    /// Requests admitted but not yet replied to (the queue-depth gauge).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII in-flight slot; dropping it re-opens the slot to new arrivals.
+#[derive(Debug)]
+pub struct Permit {
+    ctrl: Arc<AdmissionController>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.ctrl.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctrl(cap: usize) -> Arc<AdmissionController> {
+        AdmissionController::new(AdmissionConfig {
+            max_in_flight: cap,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn cap_reached_sheds_and_release_reopens() {
+        let c = ctrl(2);
+        let p1 = c.try_admit().expect("slot 1");
+        let p2 = c.try_admit().expect("slot 2");
+        assert_eq!(c.in_flight(), 2);
+        let shed = c.try_admit();
+        assert!(matches!(shed, Err(crate::Error::Busy { .. })), "cap must shed");
+        assert_eq!(c.shed_total(), 1);
+        drop(p1);
+        assert_eq!(c.in_flight(), 1);
+        let p3 = c.try_admit().expect("freed slot re-admits");
+        drop(p2);
+        drop(p3);
+        assert_eq!(c.in_flight(), 0);
+        assert_eq!(c.admitted_total(), 3);
+    }
+
+    #[test]
+    fn zero_cap_clamps_to_one() {
+        let c = ctrl(0);
+        let p = c.try_admit().expect("cap 0 behaves as cap 1");
+        assert!(c.try_admit().is_err());
+        drop(p);
+    }
+
+    #[test]
+    fn deadline_resolution_order() {
+        let now = Instant::now();
+        let c = AdmissionController::new(AdmissionConfig {
+            default_deadline: Some(Duration::from_secs(5)),
+            ..Default::default()
+        });
+        let own = c.deadline_from(now, Some(Duration::from_secs(1))).unwrap();
+        assert_eq!(own, now + Duration::from_secs(1), "request's own deadline wins");
+        let def = c.deadline_from(now, None).unwrap();
+        assert_eq!(def, now + Duration::from_secs(5), "falls back to the default");
+        let none = AdmissionController::new(AdmissionConfig::default());
+        assert!(none.deadline_from(now, None).is_none());
+    }
+
+    #[test]
+    fn concurrent_admits_never_exceed_cap() {
+        let c = ctrl(8);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = &c;
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        if let Ok(p) = c.try_admit() {
+                            assert!(c.in_flight() <= 8);
+                            drop(p);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(c.in_flight(), 0);
+    }
+}

@@ -1,5 +1,16 @@
 //! Latency / throughput metrics for the inference service.
+//!
+//! [`LatencyRecorder`] is the single-owner percentile ledger;
+//! [`ServerMetrics`] is the thread-shared live counterpart the engine
+//! workers write into and the HTTP front-end's `/metrics` endpoint reads
+//! out of while the service is running (the shutdown [`ServerReport`]
+//! used to be the only observable — a networked server must be
+//! observable mid-flight).
+//!
+//! [`ServerReport`]: crate::coordinator::ServerReport
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Records request latencies and computes percentiles.
@@ -54,6 +65,153 @@ impl LatencyRecorder {
     }
 }
 
+/// Retained latency samples for the live percentile view: a sliding
+/// window of the most recent requests, so a long-running server holds
+/// bounded memory and `/metrics` scrapes sort a bounded set. Totals
+/// (count, sum → mean, max) stay exact over the whole run. 64Ki samples
+/// ≈ the last minute of traffic at 1k req/s.
+const LATENCY_WINDOW: usize = 1 << 16;
+
+/// Ring of the most recent latency samples (µs).
+#[derive(Debug, Default)]
+struct LatencyRing {
+    samples_us: Vec<u64>,
+    pos: usize,
+}
+
+impl LatencyRing {
+    fn push(&mut self, us: u64) {
+        if self.samples_us.len() < LATENCY_WINDOW {
+            self.samples_us.push(us);
+        } else {
+            let p = self.pos;
+            self.samples_us[p] = us;
+        }
+        self.pos = (self.pos + 1) % LATENCY_WINDOW;
+    }
+}
+
+/// Nearest-rank percentile over an already-sorted window (the same
+/// formula as [`LatencyRecorder::percentile_us`]).
+fn percentile_us_of(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize - 1;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Live, thread-shared serving metrics: engine workers and the
+/// dispatcher write, `/metrics` and the shutdown report read. Energy is
+/// tracked per worker slot (each worker owns its engine ledger and
+/// overwrites its cumulative snapshot after every shard), so readers sum
+/// slots without contending with the hot path.
+#[derive(Debug)]
+pub struct ServerMetrics {
+    latencies: Mutex<LatencyRing>,
+    lat_sum_us: AtomicU64,
+    lat_max_us: AtomicU64,
+    served: AtomicUsize,
+    batches: AtomicUsize,
+    expired: AtomicU64,
+    worker_lost: AtomicU64,
+    energy: Vec<Mutex<(f64, f64)>>, // per worker: cumulative (energy_mj, busy_ms)
+}
+
+impl ServerMetrics {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            latencies: Mutex::new(LatencyRing::default()),
+            lat_sum_us: AtomicU64::new(0),
+            lat_max_us: AtomicU64::new(0),
+            served: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            expired: AtomicU64::new(0),
+            worker_lost: AtomicU64::new(0),
+            energy: (0..workers.max(1)).map(|_| Mutex::new((0.0, 0.0))).collect(),
+        }
+    }
+
+    /// Record one successfully served request.
+    pub fn record_served(&self, latency: Duration) {
+        let us = latency.as_micros() as u64;
+        self.latencies.lock().unwrap().push(us);
+        self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.lat_max_us.fetch_max(us, Ordering::Relaxed);
+        self.served.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests dropped because their deadline passed while queued.
+    pub fn note_expired(&self, n: u64) {
+        self.expired.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Requests failed because their engine worker died.
+    pub fn note_worker_lost(&self, n: u64) {
+        self.worker_lost.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite worker `widx`'s cumulative energy ledger snapshot.
+    pub fn set_worker_energy(&self, widx: usize, energy_mj: f64, busy_ms: f64) {
+        if let Some(slot) = self.energy.get(widx) {
+            *slot.lock().unwrap() = (energy_mj, busy_ms);
+        }
+    }
+
+    /// Consistent-enough point-in-time view (each gauge is internally
+    /// consistent; cross-gauge skew is bounded by one request).
+    /// Percentiles cover the sliding [`LATENCY_WINDOW`]; count, mean,
+    /// and max are exact over the whole run.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut window = self.latencies.lock().unwrap().samples_us.clone();
+        window.sort_unstable();
+        let (energy_mj, busy_ms) = self
+            .energy
+            .iter()
+            .map(|s| *s.lock().unwrap())
+            .fold((0.0, 0.0), |(e, b), (de, db)| (e + de, b + db));
+        let requests = self.served.load(Ordering::Relaxed);
+        let mean_us = if requests > 0 {
+            self.lat_sum_us.load(Ordering::Relaxed) as f64 / requests as f64
+        } else {
+            0.0
+        };
+        MetricsSnapshot {
+            requests,
+            batches: self.batches.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            worker_lost: self.worker_lost.load(Ordering::Relaxed),
+            mean_us,
+            p50_us: percentile_us_of(&window, 50.0),
+            p99_us: percentile_us_of(&window, 99.0),
+            max_us: self.lat_max_us.load(Ordering::Relaxed),
+            energy_mj,
+            busy_ms,
+            p_avg_w: if busy_ms > 0.0 { energy_mj / busy_ms } else { 0.0 },
+        }
+    }
+}
+
+/// Point-in-time view of [`ServerMetrics`].
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: usize,
+    pub batches: usize,
+    pub expired: u64,
+    pub worker_lost: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub energy_mj: f64,
+    pub busy_ms: f64,
+    pub p_avg_w: f64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +235,48 @@ mod tests {
         assert_eq!(r.percentile_us(99.0), 0);
         assert_eq!(r.mean_us(), 0.0);
         assert!(r.is_empty());
+    }
+
+    #[test]
+    fn server_metrics_snapshot_sums_worker_energy() {
+        let m = ServerMetrics::new(3);
+        m.record_served(Duration::from_micros(100));
+        m.record_served(Duration::from_micros(300));
+        m.note_batch();
+        m.note_expired(2);
+        m.set_worker_energy(0, 1.5, 10.0);
+        m.set_worker_energy(2, 0.5, 10.0);
+        m.set_worker_energy(0, 2.0, 20.0); // cumulative overwrite, not add
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.expired, 2);
+        assert!((s.energy_mj - 2.5).abs() < 1e-12);
+        assert!((s.p_avg_w - 2.5 / 30.0).abs() < 1e-12);
+        assert_eq!(s.p50_us, 100);
+        assert_eq!(s.p99_us, 300);
+        assert!((s.mean_us - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_window_stays_bounded_and_slides() {
+        let m = ServerMetrics::new(1);
+        for i in 0..(LATENCY_WINDOW + 10) {
+            m.record_served(Duration::from_micros(i as u64 + 1));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, LATENCY_WINDOW + 10, "count stays exact past the window");
+        assert_eq!(s.max_us, LATENCY_WINDOW as u64 + 10, "max stays exact");
+        let ring = m.latencies.lock().unwrap();
+        assert_eq!(ring.samples_us.len(), LATENCY_WINDOW, "memory bounded");
+        // the 10 oldest samples (1..=10) were overwritten by the slide
+        assert_eq!(*ring.samples_us.iter().min().unwrap(), 11);
+    }
+
+    #[test]
+    fn out_of_range_worker_slot_ignored() {
+        let m = ServerMetrics::new(1);
+        m.set_worker_energy(5, 1.0, 1.0); // no panic
+        assert_eq!(m.snapshot().energy_mj, 0.0);
     }
 }

@@ -8,15 +8,27 @@
 //!   quantization, masks, noise and per-chunk energy accounting;
 //! * [`server`] — a threaded batched-inference service (the offline build
 //!   has no tokio; std::thread + mpsc provide the same dynamic-batching
-//!   architecture);
-//! * [`metrics`] — latency/throughput/energy reporting.
+//!   architecture) with bounded queues, per-request deadlines, and
+//!   graceful drain;
+//! * [`admission`] — the in-flight cap + load-shedding policy in front
+//!   of the service;
+//! * [`net`] — the std-only HTTP/1.1 front-end (`POST /v1/predict`,
+//!   `GET /healthz`, `GET /metrics`) that puts the service on a socket;
+//! * [`metrics`] — latency/throughput/energy reporting, live and at
+//!   shutdown.
 
+pub mod admission;
 pub mod engine;
 pub mod metrics;
+pub mod net;
 pub mod scheduler;
 pub mod server;
 
+pub use admission::{AdmissionConfig, AdmissionController};
 pub use engine::{EngineOptions, PhotonicEngine};
-pub use metrics::LatencyRecorder;
+pub use metrics::{LatencyRecorder, MetricsSnapshot, ServerMetrics};
+pub use net::{HttpServer, NetConfig};
 pub use scheduler::{ChunkAssignment, LayerSchedule, Scheduler};
-pub use server::{InferenceServer, ServerConfig, ServerReport};
+pub use server::{
+    InferenceServer, Reply, ReplyResult, ServeError, ServerConfig, ServerReport,
+};

@@ -1,0 +1,726 @@
+//! Networked front-end: a dependency-free HTTP/1.1 server over
+//! `std::net::TcpListener` that puts the inference service on a socket.
+//!
+//! Routes:
+//!
+//! * `POST /v1/predict` — body `{"image":[f64,...], "shape":[c,h,w]?,
+//!   "deadline_ms":n?}`; replies `{"class":k, "logits":[...],
+//!   "latency_us":n, "batch_size":b}`. Overload is shed with `503` +
+//!   `Retry-After` (admission cap), expired deadlines get `504`.
+//! * `GET /healthz` — liveness + current queue depth.
+//! * `GET /metrics` — Prometheus text format: request/shed/expired
+//!   counters, p50/p99 latency, queue depth, energy and average power
+//!   from the engine ledgers.
+//!
+//! The parser handles exactly the protocol subset the load generator,
+//! `curl`, and the e2e tests speak: `Content-Length` bodies, keep-alive
+//! connections, no chunked encoding. A hand-rolled client
+//! ([`HttpClient`], [`http_request`]) lives here too so the bench
+//! driver and tests exercise the same wire path end to end.
+//!
+//! Shutdown is SIGTERM-style graceful: [`HttpServer::shutdown`] stops
+//! accepting, lets in-flight connections finish, drains the inference
+//! queue, and returns the final [`ServerReport`].
+
+use crate::coordinator::server::{InferenceServer, ServeError, ServerReport};
+use crate::nn::Tensor;
+use crate::util::Json;
+use std::fmt::Write as _;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Front-end configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address; use port 0 for an ephemeral port.
+    pub addr: String,
+    /// Default input-tensor shape (CHW) assumed when `/v1/predict`
+    /// bodies omit `"shape"`.
+    pub input_shape: Vec<usize>,
+    /// Cap on concurrently handled connections; beyond it new
+    /// connections are served one `503` and closed.
+    pub max_connections: usize,
+    /// How long a connection handler waits for the engine's reply
+    /// before answering `500`.
+    pub reply_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            input_shape: vec![1, 28, 28],
+            max_connections: 64,
+            reply_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// HTTP-level counters (requests by outcome class), separate from the
+/// inference-level [`crate::coordinator::ServerMetrics`].
+#[derive(Debug, Default)]
+struct HttpStats {
+    requests: AtomicU64,
+    responses_2xx: AtomicU64,
+    responses_4xx: AtomicU64,
+    responses_5xx: AtomicU64,
+}
+
+/// A running networked inference front-end.
+pub struct HttpServer {
+    addr: SocketAddr,
+    inference: Arc<InferenceServer>,
+    stop: Arc<AtomicBool>,
+    live_conns: Arc<AtomicUsize>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and start serving `inference` on `cfg.addr`.
+    pub fn bind(inference: InferenceServer, cfg: NetConfig) -> crate::Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        // non-blocking accept so the loop can poll the stop flag
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let inference = Arc::new(inference);
+        let stop = Arc::new(AtomicBool::new(false));
+        let live_conns = Arc::new(AtomicUsize::new(0));
+        let stats = Arc::new(HttpStats::default());
+        let accept = {
+            let inference = Arc::clone(&inference);
+            let stop = Arc::clone(&stop);
+            let live_conns = Arc::clone(&live_conns);
+            let cfg = Arc::new(cfg);
+            std::thread::spawn(move || loop {
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if live_conns.load(Ordering::Acquire) >= cfg.max_connections {
+                            let stats = Arc::clone(&stats);
+                            std::thread::spawn(move || reject_conn(stream, &stats));
+                            continue;
+                        }
+                        live_conns.fetch_add(1, Ordering::AcqRel);
+                        let inference = Arc::clone(&inference);
+                        let stop = Arc::clone(&stop);
+                        let live_conns = Arc::clone(&live_conns);
+                        let cfg = Arc::clone(&cfg);
+                        let stats = Arc::clone(&stats);
+                        std::thread::spawn(move || {
+                            handle_conn(stream, &inference, &cfg, &stop, &stats);
+                            live_conns.fetch_sub(1, Ordering::AcqRel);
+                        });
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            })
+        };
+        Ok(Self { addr, inference, stop, live_conns, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared handle to the underlying inference service.
+    pub fn inference(&self) -> Arc<InferenceServer> {
+        Arc::clone(&self.inference)
+    }
+
+    /// Graceful drain: stop accepting, finish in-flight connections,
+    /// drain the inference queue, and return the final report.
+    pub fn shutdown(mut self) -> crate::Result<ServerReport> {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // keep-alive handlers notice the stop flag at their next idle
+        // poll (≤ ~200 ms); give in-flight predicts time to finish
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while self.live_conns.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        self.inference.shutdown()
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        // consumed by shutdown() in the normal path; this covers early
+        // returns in tests so the accept thread doesn't spin forever
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+const MAX_REQUEST_BYTES: usize = 4 << 20;
+
+/// Over the connection cap: best-effort pull of the client's request
+/// bytes off the socket first (closing with unread data can turn the
+/// response into a TCP RST on common stacks), then answer `503` +
+/// `Retry-After` and close. Runs on its own short-lived thread so the
+/// accept loop never blocks on a shed client.
+fn reject_conn(mut stream: TcpStream, stats: &HttpStats) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut tmp = [0u8; 8192];
+    let _ = stream.read(&mut tmp);
+    stats.requests.fetch_add(1, Ordering::Relaxed);
+    stats.responses_5xx.fetch_add(1, Ordering::Relaxed);
+    let resp = Response::busy("connection limit reached", 1);
+    let _ = write_response(&mut stream, &resp, false);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Serve one connection: parse pipelined/keep-alive requests out of a
+/// persistent buffer, answer each, exit on close or server stop.
+fn handle_conn(
+    mut stream: TcpStream,
+    inference: &InferenceServer,
+    cfg: &NetConfig,
+    stop: &AtomicBool,
+    stats: &HttpStats,
+) {
+    let _ = stream.set_nodelay(true);
+    // short read timeout: the loop wakes to poll the stop flag
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 8192];
+    let mut drain_seen: Option<Instant> = None;
+    let mut sent_continue = false;
+    loop {
+        match parse_request(&buf) {
+            Parse::Complete(req, consumed) => {
+                buf.drain(..consumed);
+                sent_continue = false;
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                let draining = stop.load(Ordering::Acquire);
+                let resp = if draining && req.method == "POST" {
+                    Response::busy("server draining", 1)
+                } else {
+                    route(&req, inference, cfg, stats)
+                };
+                let class = match resp.status {
+                    200..=299 => &stats.responses_2xx,
+                    400..=499 => &stats.responses_4xx,
+                    _ => &stats.responses_5xx,
+                };
+                class.fetch_add(1, Ordering::Relaxed);
+                let keep_alive = req.keep_alive && !draining;
+                if write_response(&mut stream, &resp, keep_alive).is_err() || !keep_alive {
+                    return;
+                }
+            }
+            Parse::Partial => {
+                // curl sends `Expect: 100-continue` for bodies >1KB
+                // (every predict image) and waits ~1s for the interim
+                // reply before transmitting — answer it once per
+                // request so the advertised quickstart isn't stalled
+                if !sent_continue {
+                    if let Some(h) = find_subslice(&buf, b"\r\n\r\n") {
+                        let head = String::from_utf8_lossy(&buf[..h]).to_ascii_lowercase();
+                        if head.contains("expect: 100-continue") {
+                            let _ = stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+                            let _ = stream.flush();
+                            sent_continue = true;
+                        }
+                    }
+                }
+                if stop.load(Ordering::Acquire) {
+                    if buf.is_empty() {
+                        return; // idle keep-alive connection during drain
+                    }
+                    // half-received request during drain: give the
+                    // client one second to finish the send, then cut
+                    let t0 = *drain_seen.get_or_insert_with(Instant::now);
+                    if t0.elapsed() > Duration::from_secs(1) {
+                        return;
+                    }
+                }
+                match stream.read(&mut tmp) {
+                    Ok(0) => return,
+                    Ok(n) => {
+                        buf.extend_from_slice(&tmp[..n]);
+                        if buf.len() > MAX_REQUEST_BYTES {
+                            let resp =
+                                Response::json_error(413, "request body too large");
+                            let _ = write_response(&mut stream, &resp, false);
+                            return;
+                        }
+                    }
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::TimedOut =>
+                    {
+                        continue;
+                    }
+                    Err(_) => return,
+                }
+            }
+            Parse::Bad(msg) => {
+                let resp = Response::json_error(400, &msg);
+                let _ = write_response(&mut stream, &resp, false);
+                return;
+            }
+        }
+    }
+}
+
+fn route(
+    req: &HttpRequest,
+    inference: &InferenceServer,
+    cfg: &NetConfig,
+    stats: &HttpStats,
+) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let adm = inference.admission();
+            Response::json(
+                200,
+                Json::obj(vec![
+                    ("status", Json::Str("ok".into())),
+                    ("in_flight", Json::Num(adm.in_flight() as f64)),
+                ]),
+            )
+        }
+        ("GET", "/metrics") => Response {
+            status: 200,
+            content_type: "text/plain; version=0.0.4",
+            body: render_prometheus(inference, stats),
+            retry_after_s: None,
+        },
+        ("POST", "/v1/predict") => handle_predict(req, inference, cfg),
+        _ => Response::json_error(404, "no such route"),
+    }
+}
+
+fn handle_predict(req: &HttpRequest, inference: &InferenceServer, cfg: &NetConfig) -> Response {
+    let body = match Json::parse(&req.body) {
+        Ok(v) => v,
+        Err(e) => return Response::json_error(400, &format!("bad json: {e}")),
+    };
+    let Some(image) = body.get("image").and_then(Json::f64_vec) else {
+        return Response::json_error(400, "missing 'image' array");
+    };
+    let shape: Vec<usize> = body
+        .get("shape")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_else(|| cfg.input_shape.clone());
+    if shape.is_empty() || shape.iter().product::<usize>() != image.len() {
+        return Response::json_error(
+            400,
+            &format!("image has {} values, shape {shape:?} disagrees", image.len()),
+        );
+    }
+    let deadline = body
+        .get("deadline_ms")
+        .and_then(Json::as_f64)
+        .map(|ms| Duration::from_millis(ms.max(0.0) as u64));
+    let rx = match inference.submit_with_deadline(Tensor::from_vec(&shape, image), deadline) {
+        Ok(rx) => rx,
+        Err(crate::Error::Busy { retry_after_ms }) => {
+            return Response::busy("overloaded: admission cap reached", retry_after_ms)
+        }
+        Err(e) => return Response::busy(&format!("unavailable: {e}"), 1000),
+    };
+    match rx.recv_timeout(cfg.reply_timeout) {
+        Ok(Ok(reply)) => Response::json(
+            200,
+            Json::obj(vec![
+                ("class", Json::Num(reply.class as f64)),
+                ("logits", Json::arr_f64(&reply.logits)),
+                ("latency_us", Json::Num(reply.latency.as_micros() as f64)),
+                ("batch_size", Json::Num(reply.batch_size as f64)),
+            ]),
+        ),
+        Ok(Err(ServeError::Expired)) => Response::json_error(504, "deadline expired in queue"),
+        Ok(Err(ServeError::WorkerLost)) => Response::busy("engine worker lost; retry", 1000),
+        // a dropped reply sender means the engine worker died holding
+        // this request: retryable, and ours to count (the dispatcher
+        // only counts shards it fails to hand over after the death)
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            inference.metrics().note_worker_lost(1);
+            Response::busy("engine worker lost; retry", 1000)
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            Response::json_error(500, "timed out waiting for engine reply")
+        }
+    }
+}
+
+fn render_prometheus(inference: &InferenceServer, stats: &HttpStats) -> String {
+    let snap = inference.snapshot();
+    let adm = inference.admission();
+    let mut o = String::new();
+    let _ = writeln!(o, "# HELP scatter_requests_total Inference requests served.");
+    let _ = writeln!(o, "# TYPE scatter_requests_total counter");
+    let _ = writeln!(o, "scatter_requests_total {}", snap.requests);
+    let _ = writeln!(o, "# TYPE scatter_batches_total counter");
+    let _ = writeln!(o, "scatter_batches_total {}", snap.batches);
+    let _ = writeln!(o, "# TYPE scatter_shed_total counter");
+    let _ = writeln!(o, "scatter_shed_total {}", adm.shed_total());
+    let _ = writeln!(o, "# TYPE scatter_expired_total counter");
+    let _ = writeln!(o, "scatter_expired_total {}", snap.expired);
+    let _ = writeln!(o, "# TYPE scatter_worker_lost_total counter");
+    let _ = writeln!(o, "scatter_worker_lost_total {}", snap.worker_lost);
+    let _ = writeln!(o, "# HELP scatter_queue_depth Admitted requests awaiting reply.");
+    let _ = writeln!(o, "# TYPE scatter_queue_depth gauge");
+    let _ = writeln!(o, "scatter_queue_depth {}", adm.in_flight());
+    let _ = writeln!(o, "# TYPE scatter_request_latency_microseconds summary");
+    let _ = writeln!(
+        o,
+        "scatter_request_latency_microseconds{{quantile=\"0.5\"}} {}",
+        snap.p50_us
+    );
+    let _ = writeln!(
+        o,
+        "scatter_request_latency_microseconds{{quantile=\"0.99\"}} {}",
+        snap.p99_us
+    );
+    let _ = writeln!(
+        o,
+        "scatter_request_latency_microseconds_sum {}",
+        snap.mean_us * snap.requests as f64
+    );
+    let _ = writeln!(o, "scatter_request_latency_microseconds_count {}", snap.requests);
+    let _ = writeln!(o, "# HELP scatter_energy_millijoules_total Accelerator energy spent.");
+    let _ = writeln!(o, "# TYPE scatter_energy_millijoules_total counter");
+    let _ = writeln!(o, "scatter_energy_millijoules_total {}", snap.energy_mj);
+    let _ = writeln!(o, "# HELP scatter_p_avg_watts Average accelerator power while busy.");
+    let _ = writeln!(o, "# TYPE scatter_p_avg_watts gauge");
+    let _ = writeln!(o, "scatter_p_avg_watts {}", snap.p_avg_w);
+    let _ = writeln!(o, "# TYPE scatter_http_requests_total counter");
+    let _ = writeln!(o, "scatter_http_requests_total {}", stats.requests.load(Ordering::Relaxed));
+    let _ = writeln!(
+        o,
+        "scatter_http_responses_total{{class=\"2xx\"}} {}",
+        stats.responses_2xx.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        o,
+        "scatter_http_responses_total{{class=\"4xx\"}} {}",
+        stats.responses_4xx.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        o,
+        "scatter_http_responses_total{{class=\"5xx\"}} {}",
+        stats.responses_5xx.load(Ordering::Relaxed)
+    );
+    o
+}
+
+// ---------------------------------------------------------------------
+// wire format
+// ---------------------------------------------------------------------
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+    keep_alive: bool,
+}
+
+enum Parse {
+    Complete(HttpRequest, usize),
+    Partial,
+    Bad(String),
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn parse_request(buf: &[u8]) -> Parse {
+    let Some(hdr_end) = find_subslice(buf, b"\r\n\r\n") else {
+        return Parse::Partial;
+    };
+    let Ok(head) = std::str::from_utf8(&buf[..hdr_end]) else {
+        return Parse::Bad("non-utf8 request head".into());
+    };
+    let mut lines = head.split("\r\n");
+    let Some(request_line) = lines.next() else {
+        return Parse::Bad("empty request".into());
+    };
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return Parse::Bad(format!("malformed request line '{request_line}'"));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Parse::Bad(format!("unsupported version '{version}'"));
+    }
+    let mut content_length = 0usize;
+    let mut keep_alive = true; // HTTP/1.1 default
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            match value.parse() {
+                Ok(n) => content_length = n,
+                Err(_) => return Parse::Bad(format!("bad content-length '{value}'")),
+            }
+        } else if name.eq_ignore_ascii_case("connection") {
+            keep_alive = !value.eq_ignore_ascii_case("close");
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            return Parse::Bad("chunked bodies unsupported; send Content-Length".into());
+        }
+    }
+    if content_length > MAX_REQUEST_BYTES {
+        return Parse::Bad("request body too large".into());
+    }
+    let body_start = hdr_end + 4;
+    if buf.len() < body_start + content_length {
+        return Parse::Partial;
+    }
+    let body = String::from_utf8_lossy(&buf[body_start..body_start + content_length]).into_owned();
+    Parse::Complete(
+        HttpRequest { method: method.into(), path: path.into(), body, keep_alive },
+        body_start + content_length,
+    )
+}
+
+struct Response {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+    retry_after_s: Option<u64>,
+}
+
+impl Response {
+    fn json(status: u16, value: Json) -> Self {
+        Self {
+            status,
+            content_type: "application/json",
+            body: value.to_string(),
+            retry_after_s: None,
+        }
+    }
+
+    fn json_error(status: u16, msg: &str) -> Self {
+        Self::json(status, Json::obj(vec![("error", Json::Str(msg.into()))]))
+    }
+
+    /// `503` with a `Retry-After` hint (whole seconds, rounded up).
+    fn busy(msg: &str, retry_after_ms: u64) -> Self {
+        let mut r = Self::json_error(503, msg);
+        r.retry_after_s = Some(retry_after_ms.div_ceil(1000).max(1));
+        r
+    }
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = String::with_capacity(160);
+    let _ = write!(
+        head,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+        resp.status,
+        status_reason(resp.status),
+        resp.content_type,
+        resp.body.len()
+    );
+    if let Some(s) = resp.retry_after_s {
+        let _ = write!(head, "Retry-After: {s}\r\n");
+    }
+    let _ = write!(head, "Connection: {}\r\n\r\n", if keep_alive { "keep-alive" } else { "close" });
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+// ---------------------------------------------------------------------
+// client (load generator + tests drive the same wire path)
+// ---------------------------------------------------------------------
+
+/// A parsed HTTP response.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub body: String,
+    pub retry_after_s: Option<u64>,
+}
+
+/// A keep-alive HTTP/1.1 client for one connection.
+pub struct HttpClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &SocketAddr) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(180)))?;
+        Ok(Self { stream, buf: Vec::new() })
+    }
+
+    /// Issue one request and block for its response.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> crate::Result<HttpResponse> {
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: scatter\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body.as_bytes())?;
+        self.stream.flush()?;
+        let mut tmp = [0u8; 8192];
+        loop {
+            if let Some((resp, consumed)) = parse_response(&self.buf)? {
+                self.buf.drain(..consumed);
+                return Ok(resp);
+            }
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    return Err(crate::Error::Runtime(
+                        "connection closed mid-response".into(),
+                    ))
+                }
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e) => return Err(crate::Error::Io(e)),
+            }
+        }
+    }
+}
+
+/// One-shot request on a fresh connection.
+pub fn http_request(
+    addr: &SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> crate::Result<HttpResponse> {
+    HttpClient::connect(addr)?.request(method, path, body)
+}
+
+/// Resolve a `host:port` string (e.g. a `--addr` flag) to a socket
+/// address.
+pub fn resolve_addr(addr: &str) -> crate::Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .map_err(crate::Error::Io)?
+        .next()
+        .ok_or_else(|| crate::Error::Config(format!("'{addr}' resolves to no address")))
+}
+
+/// `Ok(None)` = need more bytes.
+fn parse_response(buf: &[u8]) -> crate::Result<Option<(HttpResponse, usize)>> {
+    let Some(hdr_end) = find_subslice(buf, b"\r\n\r\n") else {
+        return Ok(None);
+    };
+    let head = std::str::from_utf8(&buf[..hdr_end])
+        .map_err(|_| crate::Error::Runtime("non-utf8 response head".into()))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| crate::Error::Runtime(format!("bad status line '{status_line}'")))?;
+    let mut content_length = 0usize;
+    let mut retry_after_s = None;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value.parse().unwrap_or(0);
+        } else if name.eq_ignore_ascii_case("retry-after") {
+            retry_after_s = value.parse().ok();
+        }
+    }
+    let body_start = hdr_end + 4;
+    if buf.len() < body_start + content_length {
+        return Ok(None);
+    }
+    let body = String::from_utf8_lossy(&buf[body_start..body_start + content_length]).into_owned();
+    Ok(Some((HttpResponse { status, body, retry_after_s }, body_start + content_length)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_request_with_body_and_pipelining() {
+        let wire = b"POST /v1/predict HTTP/1.1\r\nContent-Length: 7\r\n\r\n{\"a\":1}\
+GET /healthz HTTP/1.1\r\n\r\n";
+        match parse_request(wire) {
+            Parse::Complete(req, consumed) => {
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/v1/predict");
+                assert_eq!(req.body, "{\"a\":1}");
+                assert!(req.keep_alive);
+                // second pipelined request parses from the remainder
+                match parse_request(&wire[consumed..]) {
+                    Parse::Complete(req2, _) => assert_eq!(req2.path, "/healthz"),
+                    _ => panic!("pipelined request must parse"),
+                }
+            }
+            _ => panic!("complete request must parse"),
+        }
+    }
+
+    #[test]
+    fn partial_requests_wait_for_more_bytes() {
+        assert!(matches!(parse_request(b"POST /v1/pre"), Parse::Partial));
+        assert!(matches!(
+            parse_request(b"POST /p HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort"),
+            Parse::Partial
+        ));
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let wire = b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n";
+        match parse_request(wire) {
+            Parse::Complete(req, _) => assert!(!req.keep_alive),
+            _ => panic!("must parse"),
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let wire =
+            b"HTTP/1.1 503 Service Unavailable\r\nContent-Length: 2\r\nRetry-After: 3\r\n\r\n{}";
+        let (resp, consumed) = parse_response(wire).unwrap().expect("complete");
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.body, "{}");
+        assert_eq!(resp.retry_after_s, Some(3));
+        assert_eq!(consumed, wire.len());
+        assert!(parse_response(&wire[..10]).unwrap().is_none(), "partial → None");
+    }
+}

@@ -1,22 +1,42 @@
 //! Threaded batched-inference service over the photonic twin.
 //!
 //! Architecture (vLLM-router-like, scaled to this accelerator): clients
-//! submit images over an mpsc channel; a dispatcher thread collects
-//! requests into dynamic batches (up to `max_batch` or `batch_timeout`)
-//! and shards each batch across `workers` engine threads, each owning its
-//! own [`PhotonicEngine`] + model replica (mirroring N physical
-//! accelerator boards behind one router). Workers reply on per-request
-//! channels and keep their own latency/energy ledgers, merged into one
-//! [`ServerReport`] at shutdown. The offline toolchain has no tokio, so
-//! the event loop is std::thread + mpsc — same batching semantics,
-//! simpler runtime.
+//! submit images over a **bounded** mpsc channel; a dispatcher thread
+//! collects requests into dynamic batches (up to `max_batch` or
+//! `batch_timeout`) and shards each batch across `workers` engine
+//! threads, each owning its own [`PhotonicEngine`] + model replica
+//! (mirroring N physical accelerator boards behind one router). Workers
+//! reply on per-request channels and stream their latency/energy ledgers
+//! into a shared [`ServerMetrics`], which both the live `/metrics`
+//! endpoint ([`crate::coordinator::net`]) and the shutdown
+//! [`ServerReport`] read. The offline toolchain has no tokio, so the
+//! event loop is std::thread + mpsc — same batching semantics, simpler
+//! runtime.
+//!
+//! Overload behavior (the part an open-loop deployment lives or dies
+//! by):
+//!
+//! * **admission control** — [`InferenceServer::submit`] sheds with
+//!   [`crate::Error::Busy`] once `admission.max_in_flight` requests are
+//!   in flight, instead of queueing unboundedly;
+//! * **deadlines** — a request that expires while queued is dropped
+//!   *before* it reaches an engine ([`ServeError::Expired`]), so stale
+//!   work never wastes accelerator time;
+//! * **degraded workers** — a dead engine worker fails its shard's
+//!   requests with [`ServeError::WorkerLost`] and is retired from the
+//!   shard rotation; the service keeps running on the survivors (the
+//!   seed design `panic!`ed the whole process);
+//! * **graceful drain** — [`InferenceServer::shutdown`] stops accepting,
+//!   finishes everything in flight, and emits the final [`ServerReport`].
 
+use crate::coordinator::admission::{AdmissionConfig, AdmissionController, Permit};
 use crate::coordinator::engine::{EngineOptions, PhotonicEngine};
-use crate::coordinator::metrics::LatencyRecorder;
+use crate::coordinator::metrics::{MetricsSnapshot, ServerMetrics};
 use crate::exec::partition_ranges;
 use crate::nn::{Model, Tensor};
 use crate::AcceleratorConfig;
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -32,6 +52,8 @@ pub struct ServerConfig {
     /// ([`PhotonicEngine::set_threads`]). Keep `workers ×
     /// engine_threads` at or below the host's cores.
     pub engine_threads: usize,
+    /// Load-shedding and deadline policy.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServerConfig {
@@ -41,6 +63,7 @@ impl Default for ServerConfig {
             batch_timeout: Duration::from_millis(2),
             workers: 1,
             engine_threads: 1,
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -48,7 +71,15 @@ impl Default for ServerConfig {
 struct Request {
     image: Tensor,
     submitted: Instant,
-    reply: Sender<Reply>,
+    deadline: Option<Instant>,
+    permit: Permit,
+    reply: Sender<ReplyResult>,
+}
+
+impl Request {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// One served prediction.
@@ -59,6 +90,37 @@ pub struct Reply {
     pub latency: Duration,
     pub batch_size: usize,
 }
+
+/// Why an admitted request still failed (shed-at-the-door is
+/// [`crate::Error::Busy`] from [`InferenceServer::submit`] instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// The deadline passed while the request was queued; it was dropped
+    /// before wasting engine time.
+    Expired,
+    /// The engine worker holding the request died before replying; the
+    /// request is safe to retry (it never executed to completion).
+    WorkerLost,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Expired => write!(f, "request deadline expired in queue"),
+            ServeError::WorkerLost => write!(f, "engine worker died before replying"),
+        }
+    }
+}
+
+impl From<ServeError> for crate::Error {
+    fn from(e: ServeError) -> Self {
+        crate::Error::Runtime(e.to_string())
+    }
+}
+
+/// What a reply receiver yields: a prediction, or the reason the
+/// admitted request died in the pipeline.
+pub type ReplyResult = Result<Reply, ServeError>;
 
 /// Aggregate report at shutdown.
 #[derive(Debug, Clone)]
@@ -72,14 +134,12 @@ pub struct ServerReport {
     pub throughput_rps: f64,
     pub energy_mj: f64,
     pub p_avg_w: f64,
-}
-
-/// One engine worker's ledger, merged at shutdown.
-struct WorkerStats {
-    latencies: LatencyRecorder,
-    served: usize,
-    energy_mj: f64,
-    busy_ms: f64,
+    /// Requests shed at admission ([`crate::Error::Busy`]).
+    pub shed: u64,
+    /// Admitted requests dropped on an expired deadline.
+    pub expired: u64,
+    /// Admitted requests failed by a dead engine worker.
+    pub worker_lost: u64,
 }
 
 /// A shard of a dynamic batch, tagged with the full batch size (clients
@@ -89,14 +149,21 @@ struct Shard {
     batch_size: usize,
 }
 
+/// Depth of each engine worker's shard queue. Small on purpose: the
+/// dispatcher blocking on a busy worker is backpressure, and the
+/// admission cap already bounds total queued work.
+const WORKER_QUEUE_DEPTH: usize = 2;
+
 fn spawn_engine_worker(
+    widx: usize,
     model: Model,
     cfg: AcceleratorConfig,
     opts: EngineOptions,
     masks: std::collections::BTreeMap<String, crate::sparsity::LayerMask>,
     engine_threads: usize,
+    metrics: Arc<ServerMetrics>,
     rx: Receiver<Shard>,
-) -> JoinHandle<WorkerStats> {
+) -> JoinHandle<()> {
     std::thread::spawn(move || {
         let mut engine = PhotonicEngine::new(cfg, opts);
         engine.set_threads(engine_threads);
@@ -106,32 +173,48 @@ fn spawn_engine_worker(
         if let Some((last, _, _)) = model.matmul_layers().last() {
             engine.set_protected([last.clone()].into_iter().collect());
         }
-        let mut latencies = LatencyRecorder::new();
-        let mut served = 0usize;
         while let Ok(shard) = rx.recv() {
             for req in shard.requests {
-                let logits = model.forward(req.image, &mut engine);
+                // second-chance deadline check: the request may have
+                // expired while sitting in this worker's shard queue
+                if req.expired(Instant::now()) {
+                    metrics.note_expired(1);
+                    let Request { permit, reply, .. } = req;
+                    drop(permit);
+                    let _ = reply.send(Err(ServeError::Expired));
+                    continue;
+                }
+                let Request { image, submitted, permit, reply, .. } = req;
+                let logits = model.forward(image, &mut engine);
                 let class = logits.argmax();
-                let latency = req.submitted.elapsed();
-                latencies.record(latency);
-                served += 1;
-                let _ = req.reply.send(Reply {
+                let latency = submitted.elapsed();
+                metrics.record_served(latency);
+                // release the slot before replying so a ping-pong client
+                // can re-submit without a spurious shed
+                drop(permit);
+                let _ = reply.send(Ok(Reply {
                     class,
                     logits: logits.data,
                     latency,
                     batch_size: shard.batch_size,
-                });
+                }));
             }
+            let rep = engine.energy_report();
+            metrics.set_worker_energy(widx, rep.energy_mj, rep.time_ms);
         }
-        let rep = engine.energy_report();
-        WorkerStats { latencies, served, energy_mj: rep.energy_mj, busy_ms: rep.time_ms }
     })
 }
 
-/// Handle to a running inference server.
+/// Handle to a running inference server. Cheap to share behind an
+/// `Arc`: every method takes `&self`, including [`shutdown`].
+///
+/// [`shutdown`]: InferenceServer::shutdown
 pub struct InferenceServer {
-    tx: Sender<Request>,
-    dispatcher: Option<JoinHandle<ServerReport>>,
+    /// `None` once draining; taking it closes the dispatcher inbox.
+    tx: Mutex<Option<SyncSender<Request>>>,
+    admission: Arc<AdmissionController>,
+    metrics: Arc<ServerMetrics>,
+    dispatcher: Mutex<Option<JoinHandle<ServerReport>>>,
 }
 
 impl InferenceServer {
@@ -143,103 +226,222 @@ impl InferenceServer {
         masks: std::collections::BTreeMap<String, crate::sparsity::LayerMask>,
         server_cfg: ServerConfig,
     ) -> Self {
-        let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
-        let dispatcher = std::thread::spawn(move || {
-            let n_workers = server_cfg.workers.max(1);
-            let mut worker_txs = Vec::with_capacity(n_workers);
-            let mut handles = Vec::with_capacity(n_workers);
-            for _ in 0..n_workers {
-                let (wtx, wrx) = mpsc::channel::<Shard>();
-                handles.push(spawn_engine_worker(
-                    model.clone(),
-                    cfg.clone(),
-                    opts,
-                    masks.clone(),
-                    server_cfg.engine_threads.max(1),
-                    wrx,
-                ));
-                worker_txs.push(wtx);
-            }
+        let n_workers = server_cfg.workers.max(1);
+        let admission = AdmissionController::new(server_cfg.admission.clone());
+        let metrics = Arc::new(ServerMetrics::new(n_workers));
+        // inbox bound = admission cap: a submit holding a permit can
+        // never block on a full channel
+        let inbox = server_cfg.admission.max_in_flight.max(1);
+        let (tx, rx): (SyncSender<Request>, Receiver<Request>) = mpsc::sync_channel(inbox);
+        let dispatcher = {
+            let admission = Arc::clone(&admission);
+            let metrics = Arc::clone(&metrics);
+            std::thread::spawn(move || {
+                run_dispatcher(model, cfg, opts, masks, server_cfg, admission, metrics, rx)
+            })
+        };
+        Self {
+            tx: Mutex::new(Some(tx)),
+            admission,
+            metrics,
+            dispatcher: Mutex::new(Some(dispatcher)),
+        }
+    }
 
-            let mut batches = 0usize;
-            let started = Instant::now();
-            loop {
-                // block for the first request (or shutdown)
-                let first = match rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => break,
-                };
-                // dynamic batching: drain until max_batch or timeout
-                let mut batch = vec![first];
-                let deadline = Instant::now() + server_cfg.batch_timeout;
-                while batch.len() < server_cfg.max_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(r) => batch.push(r),
-                        Err(_) => break,
-                    }
-                }
-                let batch_size = batch.len();
-                batches += 1;
-                // shard the batch across engine workers (contiguous
-                // near-equal splits; lone requests go to worker 0)
-                let ranges = partition_ranges(batch.len(), n_workers);
-                for (widx, range) in ranges.into_iter().enumerate().rev() {
-                    let requests: Vec<Request> = batch.drain(range).collect();
-                    if worker_txs[widx].send(Shard { requests, batch_size }).is_err() {
-                        // fail fast, like the pre-sharding single-worker
-                        // design: a dead worker must surface at submit(),
-                        // not silently drop requests until shutdown
-                        panic!("engine worker {widx} died (shard queue disconnected)");
-                    }
-                }
-            }
-            // shutdown: close worker queues, join, merge ledgers
-            drop(worker_txs);
-            let mut latencies = LatencyRecorder::new();
-            let mut served = 0usize;
-            let mut energy_mj = 0.0;
-            let mut busy_ms = 0.0;
-            for h in handles {
-                let stats = h.join().expect("engine worker panicked");
-                latencies.merge(&stats.latencies);
-                served += stats.served;
-                energy_mj += stats.energy_mj;
-                busy_ms += stats.busy_ms;
-            }
-            let elapsed = started.elapsed().as_secs_f64().max(1e-9);
-            ServerReport {
-                requests: served,
-                batches,
-                workers: n_workers,
-                mean_latency_us: latencies.mean_us(),
-                p50_us: latencies.percentile_us(50.0),
-                p99_us: latencies.percentile_us(99.0),
-                throughput_rps: served as f64 / elapsed,
-                energy_mj,
-                // average power per occupied accelerator slot-time,
-                // consistent with the single-worker definition
-                p_avg_w: if busy_ms > 0.0 { energy_mj / busy_ms } else { 0.0 },
-            }
-        });
-        Self { tx, dispatcher: Some(dispatcher) }
+    /// Submit an image with no explicit deadline (the configured
+    /// `default_deadline` still applies).
+    pub fn submit(&self, image: Tensor) -> crate::Result<Receiver<ReplyResult>> {
+        self.submit_with_deadline(image, None)
     }
 
     /// Submit an image; returns a receiver for the reply.
-    pub fn submit(&self, image: Tensor) -> Receiver<Reply> {
+    ///
+    /// Errors instead of panicking (the seed `expect`ed on a dead
+    /// dispatcher): [`crate::Error::Busy`] when admission sheds the
+    /// request, [`crate::Error::Runtime`] when the server is draining or
+    /// the dispatcher died.
+    pub fn submit_with_deadline(
+        &self,
+        image: Tensor,
+        deadline: Option<Duration>,
+    ) -> crate::Result<Receiver<ReplyResult>> {
+        let permit = self.admission.try_admit()?;
+        let tx = match &*self.tx.lock().unwrap() {
+            Some(tx) => tx.clone(),
+            None => {
+                return Err(crate::Error::Runtime(
+                    "inference server draining: not accepting new requests".into(),
+                ))
+            }
+        };
+        let now = Instant::now();
         let (reply_tx, reply_rx) = mpsc::channel();
-        let req = Request { image, submitted: Instant::now(), reply: reply_tx };
-        self.tx.send(req).expect("server dispatcher alive");
-        reply_rx
+        let req = Request {
+            image,
+            submitted: now,
+            deadline: self.admission.deadline_from(now, deadline),
+            permit,
+            reply: reply_tx,
+        };
+        tx.send(req).map_err(|_| {
+            crate::Error::Runtime("inference dispatcher disconnected".into())
+        })?;
+        Ok(reply_rx)
     }
 
-    /// Shut down and collect the report.
-    pub fn shutdown(mut self) -> ServerReport {
-        drop(self.tx);
-        self.dispatcher.take().unwrap().join().expect("dispatcher panicked")
+    /// Admission state (queue depth, shed counters) for the front-end.
+    pub fn admission(&self) -> Arc<AdmissionController> {
+        Arc::clone(&self.admission)
+    }
+
+    /// Live serving metrics (latency, energy) for the front-end.
+    pub fn metrics(&self) -> Arc<ServerMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Point-in-time metrics view.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful drain: stop accepting (subsequent [`submit`]s get
+    /// [`crate::Error::Runtime`]), finish every in-flight request, join
+    /// the workers, and return the final report. Errors on double
+    /// shutdown or a panicked dispatcher.
+    ///
+    /// [`submit`]: InferenceServer::submit
+    pub fn shutdown(&self) -> crate::Result<ServerReport> {
+        drop(self.tx.lock().unwrap().take());
+        let handle = self.dispatcher.lock().unwrap().take().ok_or_else(|| {
+            crate::Error::Runtime("inference server already shut down".into())
+        })?;
+        handle
+            .join()
+            .map_err(|_| crate::Error::Runtime("inference dispatcher panicked".into()))
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_dispatcher(
+    model: Model,
+    cfg: AcceleratorConfig,
+    opts: EngineOptions,
+    masks: std::collections::BTreeMap<String, crate::sparsity::LayerMask>,
+    server_cfg: ServerConfig,
+    admission: Arc<AdmissionController>,
+    metrics: Arc<ServerMetrics>,
+    rx: Receiver<Request>,
+) -> ServerReport {
+    let n_workers = server_cfg.workers.max(1);
+    let mut worker_txs: Vec<Option<SyncSender<Shard>>> = Vec::with_capacity(n_workers);
+    let mut handles = Vec::with_capacity(n_workers);
+    for widx in 0..n_workers {
+        let (wtx, wrx) = mpsc::sync_channel::<Shard>(WORKER_QUEUE_DEPTH);
+        handles.push(spawn_engine_worker(
+            widx,
+            model.clone(),
+            cfg.clone(),
+            opts,
+            masks.clone(),
+            server_cfg.engine_threads.max(1),
+            Arc::clone(&metrics),
+            wrx,
+        ));
+        worker_txs.push(Some(wtx));
+    }
+
+    let started = Instant::now();
+    loop {
+        // block for the first request (or shutdown)
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        // dynamic batching: drain until max_batch or timeout
+        let mut batch = vec![first];
+        let deadline = Instant::now() + server_cfg.batch_timeout;
+        while batch.len() < server_cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        // drop expired requests before they cost engine time
+        let now = Instant::now();
+        let (mut batch, dead): (Vec<Request>, Vec<Request>) =
+            batch.into_iter().partition(|r| !r.expired(now));
+        if !dead.is_empty() {
+            metrics.note_expired(dead.len() as u64);
+            for req in dead {
+                let _ = req.reply.send(Err(ServeError::Expired));
+            }
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        let alive: Vec<usize> = worker_txs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| t.is_some().then_some(i))
+            .collect();
+        if alive.is_empty() {
+            // every engine is gone: degrade to failing requests fast
+            // (clients see retryable errors, the process stays up)
+            metrics.note_worker_lost(batch.len() as u64);
+            for req in batch {
+                let _ = req.reply.send(Err(ServeError::WorkerLost));
+            }
+            continue;
+        }
+        let batch_size = batch.len();
+        metrics.note_batch();
+        // shard the batch across live engine workers (contiguous
+        // near-equal splits; lone requests go to the first live worker)
+        let ranges = partition_ranges(batch.len(), alive.len());
+        for (k, range) in ranges.into_iter().enumerate().rev() {
+            let requests: Vec<Request> = batch.drain(range).collect();
+            let widx = alive[k];
+            let sent = worker_txs[widx]
+                .as_ref()
+                .expect("alive index")
+                .send(Shard { requests, batch_size });
+            if let Err(mpsc::SendError(shard)) = sent {
+                // worker died: retire it and fail its shard's requests
+                // as retryable, instead of aborting the process
+                worker_txs[widx] = None;
+                metrics.note_worker_lost(shard.requests.len() as u64);
+                for req in shard.requests {
+                    let _ = req.reply.send(Err(ServeError::WorkerLost));
+                }
+            }
+        }
+    }
+    // shutdown: close worker queues, join, report from the shared ledger
+    worker_txs.clear();
+    for h in handles {
+        let _ = h.join();
+    }
+    let snap = metrics.snapshot();
+    let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+    ServerReport {
+        requests: snap.requests,
+        batches: snap.batches,
+        workers: n_workers,
+        mean_latency_us: snap.mean_us,
+        p50_us: snap.p50_us,
+        p99_us: snap.p99_us,
+        throughput_rps: snap.requests as f64 / elapsed,
+        energy_mj: snap.energy_mj,
+        // average power per occupied accelerator slot-time, consistent
+        // with the single-worker definition
+        p_avg_w: snap.p_avg_w,
+        shed: admission.shed_total(),
+        expired: snap.expired,
+        worker_lost: snap.worker_lost,
     }
 }
 
@@ -257,11 +459,15 @@ mod tests {
         }
     }
 
+    fn sample_img(class: usize, i: usize) -> Tensor {
+        let ds = crate::data::SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
+        ds.sample(class as u64, i).0
+    }
+
     #[test]
     fn serves_batches_and_reports() {
-        let model = crate::nn::models::cnn3();
         let server = InferenceServer::spawn(
-            model,
+            crate::nn::models::cnn3(),
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
@@ -271,30 +477,32 @@ mod tests {
                 ..Default::default()
             },
         );
-        let ds = crate::data::SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
         let mut rxs = Vec::new();
         for i in 0..6 {
-            let (img, _) = ds.sample(0, i);
-            rxs.push(server.submit(img));
+            rxs.push(server.submit(sample_img(0, i)).expect("admitted"));
         }
         for rx in rxs {
-            let reply = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
+            let reply = rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("reply")
+                .expect("served");
             assert_eq!(reply.logits.len(), 10);
             assert!(reply.class < 10);
             assert!(reply.batch_size >= 1);
         }
-        let report = server.shutdown();
+        let report = server.shutdown().expect("report");
         assert_eq!(report.requests, 6);
         assert!(report.batches >= 1 && report.batches <= 6);
         assert!(report.energy_mj > 0.0);
         assert!(report.p99_us >= report.p50_us);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.expired, 0);
     }
 
     #[test]
     fn multi_worker_sharding_serves_everything() {
-        let model = crate::nn::models::cnn3();
         let server = InferenceServer::spawn(
-            model,
+            crate::nn::models::cnn3(),
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
@@ -303,22 +511,109 @@ mod tests {
                 batch_timeout: Duration::from_millis(2),
                 workers: 3,
                 engine_threads: 1,
+                ..Default::default()
             },
         );
-        let ds = crate::data::SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
         let mut rxs = Vec::new();
         for i in 0..9 {
-            let (img, _) = ds.sample(7, i);
-            rxs.push(server.submit(img));
+            rxs.push(server.submit(sample_img(7, i)).expect("admitted"));
         }
         // every request answered exactly once, with sane logits
         for rx in rxs {
-            let reply = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
+            let reply = rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("reply")
+                .expect("served");
             assert_eq!(reply.logits.len(), 10);
         }
-        let report = server.shutdown();
+        let report = server.shutdown().expect("report");
         assert_eq!(report.requests, 9);
         assert_eq!(report.workers, 3);
         assert!(report.energy_mj > 0.0, "all workers account energy");
+    }
+
+    #[test]
+    fn admission_cap_sheds_with_conservation() {
+        // one slot, and a long batching window so the first request is
+        // still holding its permit when the rest arrive
+        let server = InferenceServer::spawn(
+            crate::nn::models::cnn3(),
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig {
+                max_batch: 8,
+                batch_timeout: Duration::from_millis(300),
+                admission: AdmissionConfig { max_in_flight: 1, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let rx = server.submit(sample_img(0, 0)).expect("first admitted");
+        let mut shed = 0;
+        for i in 0..5 {
+            match server.submit(sample_img(0, i + 1)) {
+                Err(crate::Error::Busy { retry_after_ms }) => {
+                    assert!(retry_after_ms > 0);
+                    shed += 1;
+                }
+                Ok(_) => panic!("cap 1 must shed while slot is held"),
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        assert_eq!(shed, 5);
+        let reply = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
+        assert!(reply.is_ok(), "admitted request must be served");
+        let report = server.shutdown().expect("report");
+        assert_eq!(report.requests, 1);
+        assert_eq!(report.shed, 5);
+    }
+
+    #[test]
+    fn expired_deadline_dropped_before_engine() {
+        let server = InferenceServer::spawn(
+            crate::nn::models::cnn3(),
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig::default(),
+        );
+        // a zero deadline is already expired when the dispatcher looks
+        let rx = server
+            .submit_with_deadline(sample_img(0, 0), Some(Duration::ZERO))
+            .expect("admitted");
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("reply");
+        assert!(matches!(reply, Err(ServeError::Expired)), "got {reply:?}");
+        let report = server.shutdown().expect("report");
+        assert_eq!(report.requests, 0, "expired work never reached an engine");
+        assert_eq!(report.expired, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_work() {
+        let server = InferenceServer::spawn(
+            crate::nn::models::cnn3(),
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig {
+                max_batch: 8,
+                batch_timeout: Duration::from_millis(100),
+                ..Default::default()
+            },
+        );
+        let rxs: Vec<_> =
+            (0..5).map(|i| server.submit(sample_img(1, i)).expect("admitted")).collect();
+        // immediate shutdown must still serve everything already queued
+        let report = server.shutdown().expect("report");
+        assert_eq!(report.requests, 5, "drain serves queued work");
+        for rx in rxs {
+            assert!(rx.recv().expect("reply buffered").is_ok());
+        }
+        // post-drain submits fail cleanly, no panic
+        match server.submit(sample_img(1, 9)) {
+            Err(crate::Error::Runtime(_)) => {}
+            other => panic!("expected Runtime error after shutdown, got {other:?}"),
+        }
+        assert!(server.shutdown().is_err(), "double shutdown is an error");
     }
 }

@@ -124,4 +124,42 @@ mod tests {
             }
         }
     }
+
+    #[test]
+    fn partition_zero_items_is_empty() {
+        assert!(partition_ranges(0, 1).is_empty());
+        assert!(partition_ranges(0, 8).is_empty());
+    }
+
+    #[test]
+    fn partition_more_workers_than_items_yields_singletons() {
+        // 3 items over 10 workers: 3 singleton ranges, no empty ranges
+        assert_eq!(partition_ranges(3, 10), vec![0..1, 1..2, 2..3]);
+        assert_eq!(partition_ranges(1, 4), vec![0..1]);
+    }
+
+    #[test]
+    fn partition_exact_division_is_uniform() {
+        let ranges = partition_ranges(16, 4);
+        assert_eq!(ranges, vec![0..4, 4..8, 8..12, 12..16]);
+        assert!(ranges.iter().all(|r| r.len() == 4));
+    }
+
+    #[test]
+    fn partition_remainder_spreads_over_leading_ranges() {
+        // 10 = 4 + 3 + 3: the extra item lands on the first range and
+        // range sizes never differ by more than one
+        let ranges = partition_ranges(10, 3);
+        assert_eq!(ranges, vec![0..4, 4..7, 7..10]);
+        let (min, max) = (
+            ranges.iter().map(|r| r.len()).min().unwrap(),
+            ranges.iter().map(|r| r.len()).max().unwrap(),
+        );
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn partition_zero_parts_clamps_to_one() {
+        assert_eq!(partition_ranges(5, 0), vec![0..5]);
+    }
 }

@@ -1,42 +1,117 @@
 //! SCATTER command-line interface.
 //!
 //! ```text
-//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|all>
+//! scatter serve  [--addr 127.0.0.1:8080] [--workers N] [--engine-threads N]
+//!         [--max-batch N] [--max-in-flight N] [--deadline-ms N] [--density D]
+//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|all>
 //!         [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8]
+//!         [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]
 //! scatter config [--preset default|dense|foundry] [--out FILE]
 //! scatter gamma  [--heatsim]
 //! scatter info
 //! ```
 //!
-//! `bench engine` sweeps the sparsity-compiled execution engine across
-//! worker-thread counts × structured column sparsity and writes
-//! `BENCH_engine.json` at the repo root.
+//! `serve` exposes the inference service over HTTP (`POST /v1/predict`,
+//! `GET /healthz`, `GET /metrics`); EOF or `quit` on stdin drains
+//! gracefully. `bench engine` sweeps the sparsity-compiled execution
+//! engine and writes `BENCH_engine.json`; `bench serve` load-tests the
+//! TCP endpoint and writes `BENCH_server.json`.
 //!
 //! (Hand-rolled parsing: the offline toolchain has no clap.)
 
 use scatter::bench::{self, BenchCtx};
 use scatter::config::AcceleratorConfig;
+use scatter::coordinator::{
+    AdmissionConfig, EngineOptions, HttpServer, InferenceServer, NetConfig, ServerConfig,
+};
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     match cmd {
+        "serve" => cmd_serve(&args[1..]),
         "bench" => cmd_bench(&args[1..]),
         "config" => cmd_config(&args[1..]),
         "gamma" => cmd_gamma(&args[1..]),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: scatter <bench|config|gamma|info> [...]\n\
+                "usage: scatter <serve|bench|config|gamma|info> [...]\n\
                  \n\
-                 bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|all>\n\
+                 serve  [--addr 127.0.0.1:8080] [--workers N] [--engine-threads N]\n\
+                 \x20      [--max-batch N] [--max-in-flight N] [--deadline-ms N] [--density D]\n\
+                 bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|all>\n\
                  \x20      [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8]\n\
+                 \x20      [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]\n\
                  config [--preset default|dense|foundry] [--out FILE]\n\
                  gamma  [--heatsim]\n\
                  info"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
+    }
+}
+
+/// Stand up the networked inference front-end and serve until stdin
+/// closes (EOF) or reads `quit`, then drain gracefully and report.
+fn cmd_serve(args: &[String]) {
+    let addr = flag_value(args, "--addr").unwrap_or("127.0.0.1:8080").to_string();
+    let parse_usize = |name: &str, default: usize| {
+        flag_value(args, name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    };
+    let density: f64 =
+        flag_value(args, "--density").and_then(|s| s.parse().ok()).unwrap_or(0.3);
+    let server_cfg = ServerConfig {
+        max_batch: parse_usize("--max-batch", 8),
+        batch_timeout: Duration::from_millis(4),
+        workers: parse_usize("--workers", 2),
+        engine_threads: parse_usize("--engine-threads", 1),
+        admission: AdmissionConfig {
+            max_in_flight: parse_usize("--max-in-flight", 256),
+            default_deadline: flag_value(args, "--deadline-ms")
+                .and_then(|s| s.parse().ok())
+                .map(Duration::from_millis),
+            ..Default::default()
+        },
+    };
+
+    eprintln!("loading CNN-3 deployment (density {density}) ...");
+    let ctx = BenchCtx::new(50);
+    let acc = AcceleratorConfig::default();
+    let (model, _ds, masks) =
+        ctx.deployment(bench::common::Workload::Cnn3, &acc, density);
+    let server =
+        InferenceServer::spawn(model, acc, EngineOptions::NOISY, masks, server_cfg);
+    let http = HttpServer::bind(server, NetConfig { addr: addr.clone(), ..Default::default() })
+        .unwrap_or_else(|e| {
+            eprintln!("cannot bind {addr}: {e}");
+            std::process::exit(1);
+        });
+    eprintln!("serving on http://{}", http.local_addr());
+    eprintln!("  POST /v1/predict   {{\"image\":[...784 floats]}}");
+    eprintln!("  GET  /healthz | /metrics");
+    eprintln!("EOF or 'quit' on stdin drains and exits.");
+
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match std::io::stdin().read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) if line.trim() == "quit" => break,
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    }
+    eprintln!("draining ...");
+    match http.shutdown() {
+        Ok(r) => eprintln!(
+            "served {} requests in {} batches ({:.1} req/s, p50 {} us, p99 {} us, \
+             {:.3} mJ, shed {}, expired {})",
+            r.requests, r.batches, r.throughput_rps, r.p50_us, r.p99_us, r.energy_mj,
+            r.shed, r.expired
+        ),
+        Err(e) => eprintln!("shutdown error: {e}"),
     }
 }
 
@@ -84,6 +159,22 @@ fn cmd_bench(args: &[String]) {
             // the default 100 gives ~1 s per cell
             let budget = std::time::Duration::from_millis((samples as u64) * 10);
             println!("{}", bench::engine::run(&threads, budget));
+        }
+        "serve" => {
+            let mut cfg = bench::serve::ServeBenchConfig {
+                rps: flag_value(args, "--rps").and_then(|s| s.parse().ok()).unwrap_or(0.0),
+                duration: Duration::from_secs_f64(
+                    flag_value(args, "--duration").and_then(|s| s.parse().ok()).unwrap_or(2.0),
+                ),
+                concurrency: flag_value(args, "--concurrency")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(4),
+                addr: flag_value(args, "--addr").map(String::from),
+                ..Default::default()
+            };
+            cfg.server.workers =
+                flag_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+            println!("{}", bench::serve::run(&cfg));
         }
         "all" => bench::run_all(&ctx),
         other => {

@@ -1,0 +1,190 @@
+//! End-to-end tests of the networked inference front-end: a real
+//! `TcpListener` on an ephemeral port, concurrent `POST /v1/predict`
+//! clients, admission-control conservation (every request gets exactly
+//! one reply or a 503), live `/metrics`, and graceful drain.
+
+use scatter::config::{AcceleratorConfig, DacKind, SparsitySupport};
+use scatter::coordinator::net::{http_request, HttpServer, NetConfig};
+use scatter::coordinator::{
+    AdmissionConfig, EngineOptions, InferenceServer, ServerConfig,
+};
+use scatter::util::Json;
+use std::time::Duration;
+
+fn test_cfg() -> AcceleratorConfig {
+    AcceleratorConfig {
+        features: SparsitySupport::NONE,
+        dac: DacKind::Edac,
+        l_g: 5.0,
+        ..Default::default()
+    }
+}
+
+fn spawn_http(max_in_flight: usize, workers: usize) -> HttpServer {
+    let server = InferenceServer::spawn(
+        scatter::nn::models::cnn3(),
+        test_cfg(),
+        EngineOptions::IDEAL,
+        Default::default(),
+        ServerConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            workers,
+            engine_threads: 1,
+            admission: AdmissionConfig { max_in_flight, ..Default::default() },
+        },
+    );
+    HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral port")
+}
+
+fn predict_body() -> String {
+    let ds = scatter::data::SyntheticDataset::new(scatter::data::DatasetSpec::fmnist_like());
+    let (img, _) = ds.sample(3, 0);
+    Json::obj(vec![("image", Json::arr_f64(&img.data))]).to_string()
+}
+
+/// First sample value of a prometheus metric (by line prefix).
+fn metric_value(text: &str, prefix: &str) -> f64 {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find(|l| l.starts_with(prefix))
+        .and_then(|l| l.split_whitespace().last())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(f64::NAN)
+}
+
+#[test]
+fn http_end_to_end_concurrent_load() {
+    let http = spawn_http(16, 2);
+    let addr = http.local_addr();
+    let body = predict_body();
+
+    // healthz before load
+    let health = http_request(&addr, "GET", "/healthz", None).expect("healthz");
+    assert_eq!(health.status, 200);
+    assert!(health.body.contains("\"status\":\"ok\""), "{}", health.body);
+
+    // 32 concurrent client threads, 2 requests each, over a 16-slot cap:
+    // every request must get exactly one terminal answer — a 200 with
+    // sane logits, or an admission 503 carrying Retry-After
+    let (ok, shed): (usize, usize) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..32)
+            .map(|_| {
+                let body = &body;
+                s.spawn(move || {
+                    let (mut ok, mut shed) = (0usize, 0usize);
+                    for _ in 0..2 {
+                        let resp = http_request(&addr, "POST", "/v1/predict", Some(body))
+                            .expect("one reply per request");
+                        match resp.status {
+                            200 => {
+                                let v = Json::parse(&resp.body).expect("json");
+                                let logits =
+                                    v.get("logits").and_then(Json::f64_vec).expect("logits");
+                                assert_eq!(logits.len(), 10);
+                                assert!(v.get("class").and_then(Json::as_usize).unwrap() < 10);
+                                assert!(
+                                    v.get("latency_us").and_then(Json::as_f64).unwrap() > 0.0
+                                );
+                                ok += 1;
+                            }
+                            503 => {
+                                assert!(
+                                    resp.retry_after_s.unwrap_or(0) >= 1,
+                                    "503 must carry Retry-After"
+                                );
+                                shed += 1;
+                            }
+                            other => panic!("unexpected status {other}: {}", resp.body),
+                        }
+                    }
+                    (ok, shed)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .fold((0, 0), |(a, b), (c, d)| (a + c, b + d))
+    });
+    assert_eq!(ok + shed, 64, "every request answered exactly once");
+    assert!(ok > 0, "some requests must be served");
+
+    // live metrics expose nonzero latency + energy counters
+    let m = http_request(&addr, "GET", "/metrics", None).expect("metrics");
+    assert_eq!(m.status, 200);
+    assert_eq!(metric_value(&m.body, "scatter_requests_total"), ok as f64);
+    assert_eq!(metric_value(&m.body, "scatter_shed_total"), shed as f64);
+    assert!(
+        metric_value(&m.body, "scatter_request_latency_microseconds{quantile=\"0.5\"}") > 0.0,
+        "p50 latency must be nonzero:\n{}",
+        m.body
+    );
+    assert!(
+        metric_value(&m.body, "scatter_request_latency_microseconds{quantile=\"0.99\"}")
+            >= metric_value(&m.body, "scatter_request_latency_microseconds{quantile=\"0.5\"}")
+    );
+    assert!(
+        metric_value(&m.body, "scatter_energy_millijoules_total") > 0.0,
+        "energy counter must be nonzero:\n{}",
+        m.body
+    );
+    assert!(metric_value(&m.body, "scatter_p_avg_watts") > 0.0);
+    assert_eq!(metric_value(&m.body, "scatter_queue_depth"), 0.0, "idle after load");
+
+    // graceful drain: the final report agrees with what clients saw
+    let report = http.shutdown().expect("drain");
+    assert_eq!(report.requests, ok, "served == client-observed 200s");
+    assert_eq!(report.shed, shed as u64, "shed == client-observed 503s");
+    assert!(report.energy_mj > 0.0);
+    assert!(report.p99_us >= report.p50_us);
+}
+
+#[test]
+fn predict_rejects_malformed_input() {
+    let http = spawn_http(8, 1);
+    let addr = http.local_addr();
+
+    let bad_json = http_request(&addr, "POST", "/v1/predict", Some("{not json")).unwrap();
+    assert_eq!(bad_json.status, 400);
+
+    let no_image = http_request(&addr, "POST", "/v1/predict", Some("{}")).unwrap();
+    assert_eq!(no_image.status, 400);
+
+    let wrong_shape = http_request(
+        &addr,
+        "POST",
+        "/v1/predict",
+        Some("{\"image\":[1,2,3]}"), // 3 values vs 1x28x28
+    )
+    .unwrap();
+    assert_eq!(wrong_shape.status, 400);
+    assert!(wrong_shape.body.contains("disagrees"), "{}", wrong_shape.body);
+
+    let lost = http_request(&addr, "GET", "/v1/unknown", None).unwrap();
+    assert_eq!(lost.status, 404);
+
+    // malformed input never ties up an admission slot
+    let m = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(metric_value(&m.body, "scatter_queue_depth"), 0.0);
+
+    http.shutdown().expect("drain");
+}
+
+#[test]
+fn expired_deadline_maps_to_504() {
+    let http = spawn_http(8, 1);
+    let addr = http.local_addr();
+    let ds = scatter::data::SyntheticDataset::new(scatter::data::DatasetSpec::fmnist_like());
+    let (img, _) = ds.sample(3, 1);
+    let body = Json::obj(vec![
+        ("image", Json::arr_f64(&img.data)),
+        ("deadline_ms", Json::Num(0.0)), // expired on arrival
+    ])
+    .to_string();
+    let resp = http_request(&addr, "POST", "/v1/predict", Some(&body)).unwrap();
+    assert_eq!(resp.status, 504, "{}", resp.body);
+    let report = http.shutdown().expect("drain");
+    assert_eq!(report.expired, 1);
+    assert_eq!(report.requests, 0, "expired work never reached an engine");
+}

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate (ROADMAP.md): release build + tests, then a
-# short engine-bench smoke that refreshes BENCH_engine.json at the repo
-# root. Every PR runs this via .github/workflows/ci.yml.
+# Tier-1 verification gate (ROADMAP.md): release build + tests, then
+# short bench smokes that refresh BENCH_engine.json and BENCH_server.json
+# at the repo root, and the perf gate over them. Every PR runs this via
+# .github/workflows/ci.yml.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -13,5 +14,12 @@ echo "== tier-1: cargo test -q =="
 
 echo "== bench smoke: engine sweep (--samples 5 ≈ 50 ms/cell) =="
 ./rust/target/release/scatter bench engine --samples 5 --threads 1,2,4,8
+
+echo "== bench smoke: networked serve (2 s closed-loop over TCP) =="
+./rust/target/release/scatter bench serve --duration 2 --concurrency 4 --workers 2
+
+echo "== perf gate: ci/check_bench.py =="
+python3 ci/check_bench.py --engine BENCH_engine.json --server BENCH_server.json \
+  --baseline ci/bench_baseline.json
 
 echo "verify OK"
