@@ -6,13 +6,23 @@ engine``) against the committed baseline in ``ci/bench_baseline.json``
 and fails the build when any baselined cell's GMAC/s drops more than
 ``tolerance`` (default 20%). Also sanity-checks ``BENCH_server.json``
 (written by ``scatter bench serve``) so a broken networked-serving path
-cannot ship a green build.
+cannot ship a green build, and ``BENCH_drift.json`` (written by
+``scatter bench drift``) so the thermal-drift runtime's acceptance
+criteria — threshold recalibration recovers ≥ ``min_recovery`` of the
+drift-free accuracy while recompiling fewer chunks than naive full
+re-programs, and the serving gauges register — hold on every build.
 
-Bootstrap protocol: the baseline ships with ``"cells": null`` because no
-trusted numbers exist until CI has run on real hardware. In that mode
-the gate is record-only — it prints a ready-to-paste baseline block
-built from the fresh run; commit it into ``ci/bench_baseline.json`` to
-arm the gate. Re-bootstrap the same way after intentional perf changes.
+The engine gate is **armed two ways**:
+
+* ``engine.ratios`` — machine-independent speedup floors over the
+  headline ratio fields of ``BENCH_engine.json`` (planned-vs-reference);
+  these ship armed, because a ratio regression is a code regression no
+  matter which runner measured it.
+* ``engine.cells`` — absolute per-cell GMAC/s floors. These bootstrap
+  as ``null`` (record-only: the gate prints a ready-to-paste block from
+  the fresh run) because absolute numbers are machine-specific; commit
+  the printed block after the first trusted CI run, and re-record after
+  intentional perf changes.
 
 Stdlib-only on purpose: CI and the offline dev container both run it
 with a bare python3.
@@ -40,13 +50,34 @@ def engine_cells(doc):
 
 
 def check_engine(fresh_path, baseline_path, failures):
-    fresh = engine_cells(load(fresh_path))
+    fresh_doc = load(fresh_path)
+    fresh = engine_cells(fresh_doc)
     if not fresh:
         failures.append(f"{fresh_path}: no engine results — bench did not run")
         return
     base_doc = load(baseline_path)
     tolerance = float(base_doc.get("tolerance", 0.20))
-    cells = (base_doc.get("engine") or {}).get("cells")
+    engine_base = base_doc.get("engine") or {}
+
+    # machine-independent ratio floors (armed: these fields are computed
+    # by the bench itself from the same run, so a drop is a real
+    # planned-path regression, not runner noise)
+    ratios = engine_base.get("ratios") or {}
+    for field, spec in sorted(ratios.items()):
+        floor = float(spec.get("min", 0.0))
+        if field not in fresh_doc:
+            failures.append(f"{fresh_path}: missing ratio field '{field}'")
+            continue
+        value = float(fresh_doc[field])
+        if value < floor:
+            failures.append(
+                f"engine ratio {field}: {value:.3f} < floor {floor:.3f} "
+                f"(planned path regressed vs the reference path)"
+            )
+    if ratios:
+        print(f"engine gate: checked {len(ratios)} speedup-ratio floors")
+
+    cells = engine_base.get("cells")
     if cells is None:
         print(f"{baseline_path}: no committed baseline yet (cells: null) — record-only.")
         print("To arm the regression gate, replace the \"engine\" block with:")
@@ -100,10 +131,56 @@ def check_server(server_path, failures):
     print(f"server gate: {server_path} structurally valid" if not failures else "")
 
 
+def check_drift(drift_path, baseline_path, failures):
+    doc = load(drift_path)
+    base = (load(baseline_path).get("drift") or {})
+    min_recovery = float(base.get("min_recovery", 0.90))
+
+    acc = doc.get("accuracy") or {}
+    recovery = float(acc.get("recovery_threshold", 0.0))
+    if recovery < min_recovery:
+        failures.append(
+            f"{drift_path}: threshold-policy recovery {recovery:.3f} < {min_recovery} "
+            f"(drift-free {acc.get('drift_free')}, threshold {acc.get('policy_threshold')})"
+        )
+    free = float(acc.get("drift_free", 0.0))
+    off = float(acc.get("policy_off", 1.0))
+    if not free > 0.0:
+        failures.append(f"{drift_path}: drift-free accuracy is zero — deployment broken")
+    if off >= free:
+        failures.append(
+            f"{drift_path}: policy-off accuracy {off} did not degrade below "
+            f"drift-free {free} — the drift schedule is not biting"
+        )
+
+    recal = doc.get("recalibration") or {}
+    events = float(recal.get("events", 0))
+    chunks = float(recal.get("chunks", 0))
+    full = float(recal.get("full_reprogram_chunks", 0))
+    if events < 1:
+        failures.append(f"{drift_path}: threshold policy never recalibrated")
+    if not chunks < full:
+        failures.append(
+            f"{drift_path}: recalibrated {chunks:.0f} chunks vs {full:.0f} for full "
+            f"re-programs — recalibration is not incremental"
+        )
+
+    serving = doc.get("serving") or {}
+    if float(serving.get("requests_ok", 0)) <= 0:
+        failures.append(f"{drift_path}: drift serving phase served nothing")
+    if not abs(float(serving.get("metrics_drift_rad") or 0.0)) > 0.0:
+        failures.append(f"{drift_path}: /metrics drift gauge is zero")
+    if float(serving.get("recalibrations", 0)) < 1:
+        failures.append(f"{drift_path}: /metrics recalibration counter is zero")
+    print(f"drift gate: {drift_path} recovery {recovery:.3f}, "
+          f"{chunks:.0f}/{full:.0f} chunks recompiled")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--engine", default="BENCH_engine.json")
     ap.add_argument("--server", default=None, help="BENCH_server.json (optional)")
+    ap.add_argument("--drift", default=None, help="BENCH_drift.json (optional)")
     ap.add_argument("--baseline", default="ci/bench_baseline.json")
     args = ap.parse_args()
 
@@ -117,6 +194,11 @@ def main():
             check_server(args.server, failures)
         except (OSError, ValueError, KeyError) as e:
             failures.append(f"server check unreadable: {e!r}")
+    if args.drift:
+        try:
+            check_drift(args.drift, args.baseline, failures)
+        except (OSError, ValueError, KeyError) as e:
+            failures.append(f"drift check unreadable: {e!r}")
 
     if failures:
         print("\nPERF GATE FAILED:", file=sys.stderr)

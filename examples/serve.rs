@@ -41,6 +41,7 @@ fn main() {
             workers: 2,
             engine_threads: 2,
             admission: AdmissionConfig { max_in_flight: 128, ..Default::default() },
+            ..Default::default()
         },
     );
     let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral port");

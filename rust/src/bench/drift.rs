@@ -1,0 +1,289 @@
+//! Thermal-drift serving scenario (`scatter bench drift`).
+//!
+//! The paper's Eqs. 8–9 crosstalk model is applied once at programming
+//! time; this bench measures what that one-shot calibration costs a
+//! *long-running* deployment, and what the online-recalibration runtime
+//! (`thermal::drift` + `PhotonicEngine::thermal_tick`) buys back:
+//!
+//! 1. **accuracy under drift** (virtual time, deterministic): the CNN-3
+//!    s=0.3 NOISY deployment classifies `n` samples while the
+//!    accelerated drift schedule plays out; policies compared are
+//!    drift-free (reference), policy-off (drift, no recalibration),
+//!    threshold (recalibrate chunks past a phase-error budget), and
+//!    periodic (recalibrate everything every n/8 requests);
+//! 2. **serving gauges** (real TCP): a 2-worker server runs under a
+//!    heat-only drift schedule while requests stream in, and
+//!    `/metrics` is scraped for the drift/recalibration gauges.
+//!
+//! Emits `BENCH_drift.json` at the repo root; `ci/check_bench.py` gates
+//! on the threshold policy recovering ≥ 90 % of the drift-free accuracy
+//! while recompiling fewer chunks than naive full re-programs
+//! (EXPERIMENTS.md §Thermal-drift).
+
+use crate::bench::common::{repo_root_file, BenchCtx, Workload};
+use crate::config::AcceleratorConfig;
+use crate::coordinator::net::{http_request, metric_value, HttpServer, NetConfig};
+use crate::coordinator::{
+    EngineOptions, InferenceServer, PhotonicEngine, ServerConfig, ThermalServerConfig,
+    ThermalStatus,
+};
+use crate::data::SyntheticDataset;
+use crate::nn::Model;
+use crate::sparsity::LayerMask;
+use crate::thermal::{DriftConfig, ThermalPolicy};
+use crate::util::{Json, Table};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Phase-error budget (rad) for the threshold policy.
+const BUDGET_RAD: f64 = 0.02;
+
+/// Classify `n` samples while advancing the drift runtime by `dt_s`
+/// virtual seconds per request. `thermal: None` = drift-free reference.
+fn accuracy_under_drift(
+    model: &Model,
+    ds: &SyntheticDataset,
+    cfg: &AcceleratorConfig,
+    masks: &BTreeMap<String, LayerMask>,
+    thermal: Option<(DriftConfig, ThermalPolicy)>,
+    n: usize,
+    dt_s: f64,
+) -> (f64, Option<ThermalStatus>) {
+    let mut engine = PhotonicEngine::new(cfg.clone(), EngineOptions::NOISY);
+    engine.set_masks(masks.clone());
+    // paper §4.1: protected readout, as in every other harness
+    if let Some((last, _, _)) = model.matmul_layers().last() {
+        engine.set_protected([last.clone()].into_iter().collect());
+    }
+    let ticking = if let Some((d, p)) = &thermal {
+        engine.set_thermal(d.clone(), *p);
+        true
+    } else {
+        false
+    };
+    let mut correct = 0usize;
+    let mut last = None;
+    for i in 0..n {
+        if ticking {
+            last = engine.thermal_tick(i as f64 * dt_s, i as u64);
+        }
+        let (img, label) = ds.sample(0xD21F7, i);
+        if model.predict(img, &mut engine) == label {
+            correct += 1;
+        }
+    }
+    (correct as f64 / n.max(1) as f64, last)
+}
+
+struct ServeGauges {
+    requests_ok: u64,
+    drift_rad: f64,
+    phase_error_rad: f64,
+    recalibrations: u64,
+    recal_chunks: u64,
+}
+
+/// Serve real TCP traffic under a heat-only drift schedule (time_scale
+/// 0: the envelope depends only on each worker's served count, so the
+/// gauges are deterministic) and scrape `/metrics` for the drift and
+/// recalibration gauges the acceptance criteria name.
+fn serve_with_drift(
+    model: Model,
+    cfg: &AcceleratorConfig,
+    masks: BTreeMap<String, LayerMask>,
+    requests: usize,
+) -> ServeGauges {
+    let server_cfg = ServerConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(2),
+        workers: 2,
+        thermal: ThermalServerConfig {
+            drift: Some(DriftConfig {
+                ambient_amp_rad: 0.0,
+                self_heat_amp_rad: 0.2,
+                self_heat_tau_reqs: 8.0,
+                time_scale: 0.0,
+                ..DriftConfig::default()
+            }),
+            policy: ThermalPolicy::Threshold { budget_rad: 0.01 },
+        },
+        ..Default::default()
+    };
+    let server =
+        InferenceServer::spawn(model, cfg.clone(), EngineOptions::NOISY, masks, server_cfg);
+    let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral port");
+    let addr = http.local_addr();
+
+    let ds = SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
+    let bodies: Vec<String> = (0..8)
+        .map(|i| {
+            let (img, _) = ds.sample(0xBE7, i);
+            Json::obj(vec![("image", Json::arr_f64(&img.data))]).to_string()
+        })
+        .collect();
+    let mut requests_ok = 0u64;
+    for i in 0..requests {
+        if let Ok(resp) =
+            http_request(&addr, "POST", "/v1/predict", Some(&bodies[i % bodies.len()]))
+        {
+            if resp.status == 200 {
+                requests_ok += 1;
+            }
+        }
+    }
+    let metrics = http_request(&addr, "GET", "/metrics", None).expect("metrics scrape");
+    let drift_rad = metric_value(&metrics.body, "scatter_thermal_drift_rad");
+    let phase_error_rad = metric_value(&metrics.body, "scatter_thermal_phase_error_rad");
+    let report = http.shutdown().expect("drain drift server");
+    ServeGauges {
+        requests_ok,
+        drift_rad,
+        phase_error_rad,
+        recalibrations: report.recalibrations,
+        recal_chunks: report.recal_chunks,
+    }
+}
+
+/// Run the scenario, print the summary table, write `BENCH_drift.json`,
+/// and return the rendered table.
+pub fn run(ctx: &BenchCtx) -> String {
+    let cfg = AcceleratorConfig::default();
+    let density = 0.3;
+    let (model, ds, masks) = ctx.deployment(Workload::Cnn3, &cfg, density);
+    let n = ctx.n_eval.clamp(20, 200);
+
+    let drift = DriftConfig::accelerated();
+    // the virtual schedule sweeps 1.5 ambient periods across the run,
+    // so policy-off sees both drift extremes
+    let dt_s = 1.5 * drift.ambient_period_s / n as f64;
+    let periodic_every = (n / 8).max(1) as u64;
+
+    let (acc_free, _) =
+        accuracy_under_drift(&model, &ds, &cfg, &masks, None, n, dt_s);
+    let (acc_off, st_off) = accuracy_under_drift(
+        &model,
+        &ds,
+        &cfg,
+        &masks,
+        Some((drift.clone(), ThermalPolicy::Off)),
+        n,
+        dt_s,
+    );
+    let (acc_thr, st_thr) = accuracy_under_drift(
+        &model,
+        &ds,
+        &cfg,
+        &masks,
+        Some((drift.clone(), ThermalPolicy::Threshold { budget_rad: BUDGET_RAD })),
+        n,
+        dt_s,
+    );
+    let (acc_per, st_per) = accuracy_under_drift(
+        &model,
+        &ds,
+        &cfg,
+        &masks,
+        Some((drift.clone(), ThermalPolicy::Periodic { every_requests: periodic_every })),
+        n,
+        dt_s,
+    );
+
+    let st_thr = st_thr.unwrap_or_default();
+    let st_off = st_off.unwrap_or_default();
+    let st_per = st_per.unwrap_or_default();
+    let recovery = if acc_free > 0.0 { acc_thr / acc_free } else { 0.0 };
+    // what a naive controller would have recompiled: every chunk, at
+    // every recalibration action
+    let full_reprogram = st_thr.recal_events * st_thr.chunks_total;
+
+    let serve = serve_with_drift(model, &cfg, masks, 40);
+
+    let mut table = Table::new(
+        "thermal drift: accuracy + recalibration, accelerated schedule (CNN-3, s=0.3, NOISY)",
+    )
+    .header(&["metric", "value"]);
+    table.row(vec!["samples × dt".into(), format!("{n} × {dt_s:.2} s")]);
+    table.row(vec!["accuracy drift-free".into(), format!("{acc_free:.3}")]);
+    table.row(vec![
+        "accuracy policy off".into(),
+        format!("{acc_off:.3} (final |err| {:.3} rad)", st_off.phase_error_rad),
+    ]);
+    table.row(vec![
+        format!("accuracy threshold ({BUDGET_RAD} rad)"),
+        format!("{acc_thr:.3} (recovery {recovery:.2})"),
+    ]);
+    table.row(vec![
+        format!("accuracy periodic (every {periodic_every})"),
+        format!("{acc_per:.3}"),
+    ]);
+    table.row(vec![
+        "threshold recal chunks / full-reprogram".into(),
+        format!(
+            "{} / {} ({} events × {} chunks)",
+            st_thr.recal_chunks, full_reprogram, st_thr.recal_events, st_thr.chunks_total
+        ),
+    ]);
+    table.row(vec![
+        "serve /metrics drift | phase error".into(),
+        format!("{:.4} | {:.4} rad", serve.drift_rad, serve.phase_error_rad),
+    ]);
+    table.row(vec![
+        "serve recalibrations (events / chunks)".into(),
+        format!("{} / {}", serve.recalibrations, serve.recal_chunks),
+    ]);
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("thermal_drift".into())),
+        (
+            "schedule",
+            Json::obj(vec![
+                ("ambient_amp_rad", Json::Num(drift.ambient_amp_rad)),
+                ("ambient_period_s", Json::Num(drift.ambient_period_s)),
+                ("self_heat_amp_rad", Json::Num(drift.self_heat_amp_rad)),
+                ("self_heat_tau_reqs", Json::Num(drift.self_heat_tau_reqs)),
+                ("dt_s", Json::Num(dt_s)),
+                ("samples", Json::Num(n as f64)),
+                ("budget_rad", Json::Num(BUDGET_RAD)),
+                ("periodic_every", Json::Num(periodic_every as f64)),
+            ]),
+        ),
+        (
+            "accuracy",
+            Json::obj(vec![
+                ("drift_free", Json::Num(acc_free)),
+                ("policy_off", Json::Num(acc_off)),
+                ("policy_threshold", Json::Num(acc_thr)),
+                ("policy_periodic", Json::Num(acc_per)),
+                ("recovery_threshold", Json::Num(recovery)),
+            ]),
+        ),
+        (
+            "recalibration",
+            Json::obj(vec![
+                ("events", Json::Num(st_thr.recal_events as f64)),
+                ("chunks", Json::Num(st_thr.recal_chunks as f64)),
+                ("chunks_total", Json::Num(st_thr.chunks_total as f64)),
+                ("full_reprogram_chunks", Json::Num(full_reprogram as f64)),
+                ("drift_applies", Json::Num(st_thr.drift_applies as f64)),
+                ("periodic_chunks", Json::Num(st_per.recal_chunks as f64)),
+                ("off_final_error_rad", Json::Num(st_off.phase_error_rad)),
+            ]),
+        ),
+        (
+            "serving",
+            Json::obj(vec![
+                ("requests_ok", Json::Num(serve.requests_ok as f64)),
+                ("metrics_drift_rad", Json::Num(serve.drift_rad)),
+                ("metrics_phase_error_rad", Json::Num(serve.phase_error_rad)),
+                ("recalibrations", Json::Num(serve.recalibrations as f64)),
+                ("recal_chunks", Json::Num(serve.recal_chunks as f64)),
+            ]),
+        ),
+    ]);
+    let path = repo_root_file("BENCH_drift.json");
+    match std::fs::write(&path, json.to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    table.render()
+}

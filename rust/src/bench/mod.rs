@@ -7,6 +7,7 @@
 //! and is what the assertions in `rust/tests/reproduction.rs` pin down.
 
 pub mod common;
+pub mod drift;
 pub mod engine;
 pub mod serve;
 pub mod timing;

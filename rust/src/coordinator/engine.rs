@@ -27,7 +27,8 @@ use crate::power::{EnergyAccumulator, EnergyReport, PowerModel};
 use crate::ptc::crossbar::{ColumnMode, ForwardOptions, ProgrammedPtc, PtcSimulator};
 use crate::quant::{SymmetricQuant, UnsignedQuant};
 use crate::sparsity::{mask_power_mw, ChunkMask, LayerMask};
-use crate::thermal::GammaModel;
+use crate::thermal::drift::layer_stream_id;
+use crate::thermal::{DriftConfig, DriftModel, GammaModel, ThermalPolicy};
 use crate::util::XorShiftRng;
 use std::collections::BTreeMap;
 
@@ -66,6 +67,56 @@ struct ProgrammedChunk {
     noise_std: f64,
     /// Sparsity-compiled execution plan over the programmed blocks.
     plan: ChunkPlan,
+    /// Layer-dim clips the plan was compiled with (needed to recompile
+    /// after a drift re-realization without re-deriving the schedule).
+    row_limit: usize,
+    col_limit: usize,
+    /// Runtime thermal-drift state; `None` when the drift runtime is off.
+    drift: Option<ChunkDrift>,
+}
+
+/// Per-chunk runtime drift state (tentpole of the thermal-drift runtime:
+/// the recalibration unit is the chunk, so only chunks past their budget
+/// re-realize and recompile).
+struct ChunkDrift {
+    /// Per-node susceptibility fingerprints, one per PTC block
+    /// (node layout j·k1+i, matching `ProgrammedPtc::realize_drifted`).
+    patterns: Vec<Vec<f64>>,
+    /// RMS of the fingerprints — scales |env| into a phase-error
+    /// estimate without touching per-node data.
+    pattern_rms: f64,
+    /// Drift envelope currently baked into `w_real`/`plan`.
+    applied_env: f64,
+    /// Drift envelope compensated away at the last recalibration (the
+    /// calibration reference; residual error ∝ |env − comp_env|).
+    comp_env: f64,
+}
+
+impl ProgrammedChunk {
+    /// Re-realize every block at the drift offset `env − comp_env` and
+    /// recompile the execution plan. With `env == comp_env` this
+    /// reproduces the programming-time plan bit for bit.
+    ///
+    /// `self.power` is deliberately NOT recomputed: the hold-power
+    /// ledger keeps programming-time phases (a drift bounded by the
+    /// recalibration budget moves it second-order; EXPERIMENTS.md
+    /// §Thermal-drift, known limits).
+    fn rebake(&mut self, env: f64, r: usize, c: usize) {
+        let Some(d) = &mut self.drift else { return };
+        let scale = env - d.comp_env;
+        for (b, blk) in self.blocks.iter_mut().enumerate() {
+            blk.realize_drifted(scale, &d.patterns[b]);
+        }
+        d.applied_env = env;
+        self.plan = ChunkPlan::from_blocks(
+            &self.blocks,
+            r,
+            c,
+            self.row_limit,
+            self.col_limit,
+            self.noise_std,
+        );
+    }
 }
 
 struct ProgrammedLayer {
@@ -78,6 +129,43 @@ struct ProgrammedLayer {
     n_waves: usize,
     /// 2 for protected layers (non-adjacent mapping halves occupancy).
     cycle_factor: u64,
+}
+
+/// Engine-level thermal-drift runtime state.
+struct ThermalState {
+    model: DriftModel,
+    policy: ThermalPolicy,
+    /// Drift envelope at the last tick.
+    env: f64,
+    /// Served count at the last periodic recalibration.
+    last_recal_served: u64,
+    /// Cumulative recalibration actions (ticks that recalibrated ≥ 1 chunk).
+    recal_events: u64,
+    /// Cumulative chunks re-realized + recompiled by recalibration.
+    recal_chunks: u64,
+    /// Cumulative physics updates (drift baked into plans outside
+    /// recalibration).
+    drift_applies: u64,
+}
+
+/// Gauges returned by [`PhotonicEngine::thermal_tick`] and read by the
+/// serving metrics (`/metrics`) and `scatter bench drift`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ThermalStatus {
+    /// Current drift envelope (rad).
+    pub env_rad: f64,
+    /// Worst residual phase-error estimate across chunks *after* this
+    /// tick's actions (recalibrated chunks contribute zero).
+    pub phase_error_rad: f64,
+    /// Cumulative recalibration actions.
+    pub recal_events: u64,
+    /// Cumulative chunks recompiled by recalibration — compare against
+    /// `recal_events × chunks_total`, the cost of naive full re-programs.
+    pub recal_chunks: u64,
+    /// Programmed chunks currently under drift management.
+    pub chunks_total: u64,
+    /// Cumulative drift physics updates.
+    pub drift_applies: u64,
 }
 
 /// The engine. One instance per deployment run; keeps programmed layers
@@ -95,6 +183,9 @@ pub struct PhotonicEngine {
     /// cost of 2x cycles (half physical occupancy).
     protected: std::collections::BTreeSet<String>,
     programmed: BTreeMap<String, ProgrammedLayer>,
+    /// Runtime thermal-drift model + recalibration policy (`None` =
+    /// seed behavior: Eqs. 8–9 applied once at programming time only).
+    thermal: Option<ThermalState>,
     energy: EnergyAccumulator,
     rng: crate::util::XorShiftRng,
     /// Worker threads for the compiled execution path (1 = inline).
@@ -123,6 +214,7 @@ impl PhotonicEngine {
             masks: BTreeMap::new(),
             protected: Default::default(),
             programmed: BTreeMap::new(),
+            thermal: None,
             energy: EnergyAccumulator::new(),
             rng,
             threads: 1,
@@ -158,6 +250,132 @@ impl PhotonicEngine {
     pub fn set_protected(&mut self, layers: std::collections::BTreeSet<String>) {
         self.protected = layers;
         self.programmed.clear();
+    }
+
+    /// Enable the thermal-drift runtime: programmed phases drift with
+    /// virtual time / served traffic per `drift`, and `policy` decides
+    /// when chunks recalibrate. Clears the programming cache (drift
+    /// fingerprints are attached at `program_layer` time).
+    pub fn set_thermal(&mut self, drift: DriftConfig, policy: ThermalPolicy) {
+        self.thermal = Some(ThermalState {
+            model: DriftModel::new(drift),
+            policy,
+            env: 0.0,
+            last_recal_served: 0,
+            recal_events: 0,
+            recal_chunks: 0,
+            drift_applies: 0,
+        });
+        self.programmed.clear();
+    }
+
+    /// Advance the drift runtime to virtual time `t_s` / served count
+    /// `served`: re-realize drifted chunks (physics) and recalibrate the
+    /// ones the policy selects (control). Returns the post-tick gauges,
+    /// or `None` when the runtime is disabled.
+    ///
+    /// Recalibration is **incremental**: a selected chunk re-realizes
+    /// its `ProgrammedPtc` blocks from their stored programmed phases
+    /// and recompiles only its own `ChunkPlan` — masks, quantization,
+    /// rerouter trees and gain tables from `program_layer` are reused
+    /// untouched, so the cost is per-chunk, not per-layer.
+    pub fn thermal_tick(&mut self, t_s: f64, served: u64) -> Option<ThermalStatus> {
+        let (r, c) = (self.cfg.share_r, self.cfg.share_c);
+        let (env, policy, apply_eps, due_periodic) = {
+            let st = self.thermal.as_mut()?;
+            let env = st.model.env(t_s, served);
+            st.env = env;
+            let due = match st.policy {
+                ThermalPolicy::Periodic { every_requests } => {
+                    served.saturating_sub(st.last_recal_served) >= every_requests.max(1)
+                }
+                _ => false,
+            };
+            (env, st.policy, st.model.config().apply_eps_rad, due)
+        };
+
+        let mut recal_now = 0u64;
+        let mut applies_now = 0u64;
+        let mut max_err = 0.0f64;
+        let mut chunks_total = 0u64;
+        for pl in self.programmed.values_mut() {
+            for chunk in &mut pl.chunks {
+                chunks_total += 1;
+                let Some((comp, applied, rms)) = chunk
+                    .drift
+                    .as_ref()
+                    .map(|d| (d.comp_env, d.applied_env, d.pattern_rms))
+                else {
+                    continue;
+                };
+                let err = (env - comp).abs() * rms;
+                let moved = comp != env || applied != env;
+                let recal = moved
+                    && match policy {
+                        ThermalPolicy::Off => false,
+                        ThermalPolicy::Threshold { budget_rad } => err > budget_rad,
+                        ThermalPolicy::Periodic { .. } => due_periodic,
+                    };
+                if recal {
+                    if let Some(d) = &mut chunk.drift {
+                        d.comp_env = env;
+                    }
+                    chunk.rebake(env, r, c);
+                    recal_now += 1;
+                } else {
+                    if (env - applied).abs() > apply_eps {
+                        chunk.rebake(env, r, c);
+                        applies_now += 1;
+                    }
+                    max_err = max_err.max(err);
+                }
+            }
+        }
+
+        let st = self.thermal.as_mut().expect("checked above");
+        if due_periodic {
+            st.last_recal_served = served;
+        }
+        if recal_now > 0 {
+            st.recal_events += 1;
+            st.recal_chunks += recal_now;
+        }
+        st.drift_applies += applies_now;
+        Some(ThermalStatus {
+            env_rad: env,
+            phase_error_rad: max_err,
+            recal_events: st.recal_events,
+            recal_chunks: st.recal_chunks,
+            chunks_total,
+            drift_applies: st.drift_applies,
+        })
+    }
+
+    /// Force-recalibrate every drifted chunk regardless of policy (the
+    /// operator's "recal now" button; also what `ThermalPolicy::Off`
+    /// deployments would call from a maintenance window). Returns the
+    /// number of chunks recompiled.
+    pub fn recalibrate_thermal(&mut self) -> u64 {
+        let (r, c) = (self.cfg.share_r, self.cfg.share_c);
+        let Some(env) = self.thermal.as_ref().map(|st| st.env) else { return 0 };
+        let mut recal_now = 0u64;
+        for pl in self.programmed.values_mut() {
+            for chunk in &mut pl.chunks {
+                let Some(d) = &mut chunk.drift else { continue };
+                if d.comp_env == env && d.applied_env == env {
+                    continue; // already calibrated at this envelope
+                }
+                d.comp_env = env;
+                chunk.rebake(env, r, c);
+                recal_now += 1;
+            }
+        }
+        let st = self.thermal.as_mut().expect("checked above");
+        if recal_now > 0 {
+            st.recal_events += 1;
+            st.recal_chunks += recal_now;
+        }
+        recal_now
     }
 
     /// Energy/power ledger for everything executed so far.
@@ -290,12 +508,37 @@ impl PhotonicEngine {
                 let col_limit = cols.min(in_dim - qi * cols);
                 let plan =
                     ChunkPlan::from_blocks(&blocks, r, c, row_limit, col_limit, noise_std);
+                // attach the runtime drift fingerprints (counter-based:
+                // reprogramming the same layer re-derives them exactly)
+                let drift = self.thermal.as_ref().map(|st| {
+                    let layer_id = layer_stream_id(layer);
+                    let chunk_id = (pi * sched.q + qi) as u64;
+                    let patterns =
+                        st.model.chunk_patterns(layer_id, chunk_id, r * c, k1 * k2);
+                    let n_nodes = (r * c * k1 * k2) as f64;
+                    let sum_sq: f64 = patterns
+                        .iter()
+                        .flat_map(|p| p.iter())
+                        .map(|v| v * v)
+                        .sum();
+                    ChunkDrift {
+                        patterns,
+                        pattern_rms: (sum_sq / n_nodes).sqrt(),
+                        // programming calibrates at the *current*
+                        // environment, not the t = 0 one
+                        applied_env: st.env,
+                        comp_env: st.env,
+                    }
+                });
                 chunks.push(ProgrammedChunk {
                     blocks,
                     power,
                     row_mask: mask.row.clone(),
                     noise_std,
                     plan,
+                    row_limit,
+                    col_limit,
+                    drift,
                 });
             }
         }
@@ -316,7 +559,12 @@ impl PhotonicEngine {
 
     /// Record the energy for streaming `n_cols` activation columns
     /// through a programmed layer (shared by both execution paths).
-    fn record_layer_energy(energy: &mut EnergyAccumulator, layer: &str, pl: &ProgrammedLayer, n_cols: usize) {
+    fn record_layer_energy(
+        energy: &mut EnergyAccumulator,
+        layer: &str,
+        pl: &ProgrammedLayer,
+        n_cols: usize,
+    ) {
         // energy ledger: every chunk holds power for n_cols cycles
         // (x2 for protected layers: non-adjacent mapping halves occupancy)
         for chunk in &pl.chunks {
@@ -621,6 +869,105 @@ mod tests {
             e_scatter < e_dense * 0.5,
             "SCATTER {e_scatter} should beat dense-under-TV {e_dense}"
         );
+    }
+
+    /// Heat-only drift schedule: env depends only on the served count,
+    /// so every assertion below is deterministic (no wall clock).
+    fn heat_only_drift() -> DriftConfig {
+        DriftConfig {
+            ambient_amp_rad: 0.0,
+            self_heat_amp_rad: 0.2,
+            self_heat_tau_reqs: 24.0,
+            ..DriftConfig::default()
+        }
+    }
+
+    fn drift_opts() -> EngineOptions {
+        // thermal crosstalk + quantization only: no per-call randomness,
+        // so output equality below is exact
+        EngineOptions { thermal: true, pd_noise: false, phase_noise: false, quantize: true }
+    }
+
+    #[test]
+    fn drift_runtime_inert_until_ticked() {
+        let cfg = small_cfg(crate::config::SparsitySupport::FULL);
+        let (w, x) = problem(128, 128, 4, 21);
+        let mut plain = PhotonicEngine::new(cfg.clone(), drift_opts());
+        let mut thermal = PhotonicEngine::new(cfg, drift_opts());
+        thermal.set_thermal(heat_only_drift(), ThermalPolicy::Off);
+        let y_plain = plain.matmul("l", &w, &x, 128, 128, 4);
+        let y_thermal = thermal.matmul("l", &w, &x, 128, 128, 4);
+        assert_eq!(y_plain, y_thermal, "un-ticked runtime must not perturb anything");
+    }
+
+    #[test]
+    fn drift_degrades_and_recalibration_restores_exactly() {
+        let cfg = small_cfg(crate::config::SparsitySupport::FULL);
+        let (w, x) = problem(128, 128, 4, 22);
+        let mut eng = PhotonicEngine::new(cfg, drift_opts());
+        eng.set_thermal(heat_only_drift(), ThermalPolicy::Off);
+        let y0 = eng.matmul("l", &w, &x, 128, 128, 4);
+        let s = eng.thermal_tick(0.0, 50).expect("runtime enabled");
+        assert!(s.env_rad > 0.1, "self-heating after 50 requests: {}", s.env_rad);
+        assert_eq!(s.chunks_total, 4, "128x128 on the 64x64 grid");
+        assert!(s.phase_error_rad > 0.0);
+        assert!(s.drift_applies > 0, "physics update must have re-baked plans");
+        assert_eq!(s.recal_events, 0, "policy off never recalibrates");
+        let y1 = eng.matmul("l", &w, &x, 128, 128, 4);
+        assert_ne!(y0, y1, "drifted plans must change the output");
+        let n = eng.recalibrate_thermal();
+        assert_eq!(n, 4, "all drifted chunks recompile");
+        let y2 = eng.matmul("l", &w, &x, 128, 128, 4);
+        assert_eq!(y0, y2, "recalibrated == freshly-programmed, bit for bit");
+    }
+
+    #[test]
+    fn threshold_policy_bounds_error_and_recalibrates_incrementally() {
+        let cfg = small_cfg(crate::config::SparsitySupport::FULL);
+        let (w, x) = problem(256, 256, 2, 23);
+        let mut eng = PhotonicEngine::new(cfg, drift_opts());
+        let budget = 0.05;
+        eng.set_thermal(heat_only_drift(), ThermalPolicy::Threshold { budget_rad: budget });
+        let _ = eng.matmul("l", &w, &x, 256, 256, 2);
+        let mut last = ThermalStatus::default();
+        for served in 1..=60u64 {
+            last = eng.thermal_tick(0.0, served).expect("runtime enabled");
+            assert!(
+                last.phase_error_rad <= budget + 1e-12,
+                "residual error {} exceeds budget at n={served}",
+                last.phase_error_rad
+            );
+        }
+        assert_eq!(last.chunks_total, 16, "256x256 on the 64x64 grid");
+        assert!(last.recal_events >= 2, "chunks cross the budget at different times");
+        assert!(last.recal_chunks >= 1);
+        assert!(
+            last.recal_chunks < last.recal_events * last.chunks_total,
+            "incremental: {} chunks over {} events beats full re-programs",
+            last.recal_chunks,
+            last.recal_events
+        );
+    }
+
+    #[test]
+    fn periodic_policy_recalibrates_on_cadence() {
+        let cfg = small_cfg(crate::config::SparsitySupport::FULL);
+        let (w, x) = problem(128, 128, 2, 24);
+        let mut eng = PhotonicEngine::new(cfg, drift_opts());
+        eng.set_thermal(
+            heat_only_drift(),
+            ThermalPolicy::Periodic { every_requests: 10 },
+        );
+        let _ = eng.matmul("l", &w, &x, 128, 128, 2);
+        let s = eng.thermal_tick(0.0, 5).expect("on");
+        assert_eq!(s.recal_events, 0, "before the cadence");
+        let s = eng.thermal_tick(0.0, 10).expect("on");
+        assert_eq!(s.recal_events, 1);
+        assert_eq!(s.recal_chunks, s.chunks_total, "periodic touches every chunk");
+        let s = eng.thermal_tick(0.0, 19).expect("on");
+        assert_eq!(s.recal_events, 1, "cadence counts from the last recal");
+        let s = eng.thermal_tick(0.0, 20).expect("on");
+        assert_eq!(s.recal_events, 2);
     }
 
     #[test]

@@ -14,9 +14,18 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 /// Records request latencies and computes percentiles.
+///
+/// Samples are kept sorted lazily: a percentile query sorts at most
+/// once after the last `record`, so a report reading several
+/// percentiles pays one sort total (the previous implementation cloned
+/// and re-sorted the full sample vector on *every* call). Insertion
+/// order is not preserved — every statistic here is order-independent.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
     samples_us: Vec<u64>,
+    /// Length of `samples_us` when it was last sorted; `!= len()` means
+    /// unsorted tail entries exist.
+    sorted_len: usize,
 }
 
 impl LatencyRecorder {
@@ -36,15 +45,18 @@ impl LatencyRecorder {
         self.samples_us.is_empty()
     }
 
-    /// Percentile in microseconds (nearest-rank).
-    pub fn percentile_us(&self, p: f64) -> u64 {
-        if self.samples_us.is_empty() {
-            return 0;
+    fn ensure_sorted(&mut self) {
+        if self.sorted_len != self.samples_us.len() {
+            self.samples_us.sort_unstable();
+            self.sorted_len = self.samples_us.len();
         }
-        let mut v = self.samples_us.clone();
-        v.sort_unstable();
-        let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize - 1;
-        v[rank.min(v.len() - 1)]
+    }
+
+    /// Percentile in microseconds (nearest-rank). Sorts only when new
+    /// samples arrived since the last query.
+    pub fn percentile_us(&mut self, p: f64) -> u64 {
+        self.ensure_sorted();
+        percentile_us_of(&self.samples_us, p)
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -116,6 +128,38 @@ pub struct ServerMetrics {
     expired: AtomicU64,
     worker_lost: AtomicU64,
     energy: Vec<Mutex<(f64, f64)>>, // per worker: cumulative (energy_mj, busy_ms)
+    /// Per-worker thermal-drift gauges, overwritten after every tick.
+    thermal: Vec<Mutex<ThermalGauges>>,
+}
+
+/// One engine worker's drift/recalibration gauges (zero when the drift
+/// runtime is off). Built from a tick's
+/// [`ThermalStatus`](crate::coordinator::engine::ThermalStatus) via
+/// `From`, so publish sites cannot drift out of sync field-by-field.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ThermalGauges {
+    /// Current drift envelope (rad).
+    pub drift_rad: f64,
+    /// Worst residual phase-error estimate across the worker's chunks.
+    pub phase_error_rad: f64,
+    /// Cumulative recalibration actions.
+    pub recal_events: u64,
+    /// Cumulative chunks recompiled by recalibration.
+    pub recal_chunks: u64,
+    /// Chunks under drift management on this worker.
+    pub chunks_total: u64,
+}
+
+impl From<crate::coordinator::engine::ThermalStatus> for ThermalGauges {
+    fn from(s: crate::coordinator::engine::ThermalStatus) -> Self {
+        Self {
+            drift_rad: s.env_rad,
+            phase_error_rad: s.phase_error_rad,
+            recal_events: s.recal_events,
+            recal_chunks: s.recal_chunks,
+            chunks_total: s.chunks_total,
+        }
+    }
 }
 
 impl ServerMetrics {
@@ -129,6 +173,7 @@ impl ServerMetrics {
             expired: AtomicU64::new(0),
             worker_lost: AtomicU64::new(0),
             energy: (0..workers.max(1)).map(|_| Mutex::new((0.0, 0.0))).collect(),
+            thermal: (0..workers.max(1)).map(|_| Mutex::new(ThermalGauges::default())).collect(),
         }
     }
 
@@ -162,6 +207,13 @@ impl ServerMetrics {
         }
     }
 
+    /// Overwrite worker `widx`'s thermal-drift gauges after a tick.
+    pub fn set_worker_thermal(&self, widx: usize, g: ThermalGauges) {
+        if let Some(slot) = self.thermal.get(widx) {
+            *slot.lock().unwrap() = g;
+        }
+    }
+
     /// Consistent-enough point-in-time view (each gauge is internally
     /// consistent; cross-gauge skew is bounded by one request).
     /// Percentiles cover the sliding [`LATENCY_WINDOW`]; count, mean,
@@ -174,6 +226,20 @@ impl ServerMetrics {
             .iter()
             .map(|s| *s.lock().unwrap())
             .fold((0.0, 0.0), |(e, b), (de, db)| (e + de, b + db));
+        // thermal: worst-case drift/error across workers, summed counters
+        let mut thermal_drift_rad = 0.0f64;
+        let mut thermal_phase_error_rad = 0.0f64;
+        let (mut recalibrations, mut recal_chunks, mut thermal_chunks) = (0u64, 0u64, 0u64);
+        for slot in &self.thermal {
+            let g = *slot.lock().unwrap();
+            if g.drift_rad.abs() > thermal_drift_rad.abs() {
+                thermal_drift_rad = g.drift_rad;
+            }
+            thermal_phase_error_rad = thermal_phase_error_rad.max(g.phase_error_rad);
+            recalibrations += g.recal_events;
+            recal_chunks += g.recal_chunks;
+            thermal_chunks += g.chunks_total;
+        }
         let requests = self.served.load(Ordering::Relaxed);
         let mean_us = if requests > 0 {
             self.lat_sum_us.load(Ordering::Relaxed) as f64 / requests as f64
@@ -192,6 +258,11 @@ impl ServerMetrics {
             energy_mj,
             busy_ms,
             p_avg_w: if busy_ms > 0.0 { energy_mj / busy_ms } else { 0.0 },
+            thermal_drift_rad,
+            thermal_phase_error_rad,
+            recalibrations,
+            recal_chunks,
+            thermal_chunks,
         }
     }
 }
@@ -210,6 +281,16 @@ pub struct MetricsSnapshot {
     pub energy_mj: f64,
     pub busy_ms: f64,
     pub p_avg_w: f64,
+    /// Worst drift envelope across workers (rad; 0 = runtime off).
+    pub thermal_drift_rad: f64,
+    /// Worst residual phase error across workers (rad).
+    pub thermal_phase_error_rad: f64,
+    /// Total recalibration actions across workers.
+    pub recalibrations: u64,
+    /// Total chunks recompiled by recalibration across workers.
+    pub recal_chunks: u64,
+    /// Total chunks under drift management across workers.
+    pub thermal_chunks: u64,
 }
 
 #[cfg(test)]
@@ -231,10 +312,44 @@ mod tests {
 
     #[test]
     fn empty_recorder_zeroes() {
-        let r = LatencyRecorder::new();
+        let mut r = LatencyRecorder::new();
         assert_eq!(r.percentile_us(99.0), 0);
         assert_eq!(r.mean_us(), 0.0);
         assert!(r.is_empty());
+    }
+
+    /// The lazy-sort implementation must report exactly what the naive
+    /// clone-and-sort-per-call one did, across interleaved records and
+    /// queries (including re-querying without new samples).
+    #[test]
+    fn lazy_sort_percentiles_match_naive_clone_sort() {
+        let naive = |samples: &[u64], p: f64| -> u64 {
+            if samples.is_empty() {
+                return 0;
+            }
+            let mut v = samples.to_vec();
+            v.sort_unstable();
+            let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize - 1;
+            v[rank.min(v.len() - 1)]
+        };
+        let mut r = LatencyRecorder::new();
+        let mut shadow: Vec<u64> = Vec::new();
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for round in 0..50 {
+            for _ in 0..=(round % 7) {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(round);
+                let us = state >> 40;
+                r.record(Duration::from_micros(us));
+                shadow.push(us);
+            }
+            for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+                assert_eq!(r.percentile_us(p), naive(&shadow, p), "p={p} round={round}");
+                // second query with no new samples: same answer
+                assert_eq!(r.percentile_us(p), naive(&shadow, p));
+            }
+            assert_eq!(r.max_us(), *shadow.iter().max().unwrap());
+            assert_eq!(r.len(), shadow.len());
+        }
     }
 
     #[test]
@@ -271,6 +386,37 @@ mod tests {
         assert_eq!(ring.samples_us.len(), LATENCY_WINDOW, "memory bounded");
         // the 10 oldest samples (1..=10) were overwritten by the slide
         assert_eq!(*ring.samples_us.iter().min().unwrap(), 11);
+    }
+
+    #[test]
+    fn thermal_gauges_aggregate_worst_case_and_sums() {
+        let m = ServerMetrics::new(2);
+        m.set_worker_thermal(
+            0,
+            ThermalGauges {
+                drift_rad: -0.3,
+                phase_error_rad: 0.01,
+                recal_events: 2,
+                recal_chunks: 5,
+                chunks_total: 16,
+            },
+        );
+        m.set_worker_thermal(
+            1,
+            ThermalGauges {
+                drift_rad: 0.1,
+                phase_error_rad: 0.04,
+                recal_events: 1,
+                recal_chunks: 3,
+                chunks_total: 16,
+            },
+        );
+        let s = m.snapshot();
+        assert_eq!(s.thermal_drift_rad, -0.3, "max by magnitude, sign kept");
+        assert_eq!(s.thermal_phase_error_rad, 0.04);
+        assert_eq!(s.recalibrations, 3);
+        assert_eq!(s.recal_chunks, 8);
+        assert_eq!(s.thermal_chunks, 32);
     }
 
     #[test]

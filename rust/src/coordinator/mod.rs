@@ -25,10 +25,11 @@ pub mod scheduler;
 pub mod server;
 
 pub use admission::{AdmissionConfig, AdmissionController};
-pub use engine::{EngineOptions, PhotonicEngine};
-pub use metrics::{LatencyRecorder, MetricsSnapshot, ServerMetrics};
+pub use engine::{EngineOptions, PhotonicEngine, ThermalStatus};
+pub use metrics::{LatencyRecorder, MetricsSnapshot, ServerMetrics, ThermalGauges};
 pub use net::{HttpServer, NetConfig};
 pub use scheduler::{ChunkAssignment, LayerSchedule, Scheduler};
 pub use server::{
     InferenceServer, Reply, ReplyResult, ServeError, ServerConfig, ServerReport,
+    ThermalServerConfig,
 };

@@ -311,8 +311,10 @@ fn handle_predict(req: &HttpRequest, inference: &InferenceServer, cfg: &NetConfi
         Ok(v) => v,
         Err(e) => return Response::json_error(400, &format!("bad json: {e}")),
     };
+    // strict decode: a single non-numeric element rejects the request
+    // (f64_vec no longer silently drops malformed entries)
     let Some(image) = body.get("image").and_then(Json::f64_vec) else {
-        return Response::json_error(400, "missing 'image' array");
+        return Response::json_error(400, "missing or malformed 'image' array");
     };
     let shape: Vec<usize> = body
         .get("shape")
@@ -402,6 +404,27 @@ fn render_prometheus(inference: &InferenceServer, stats: &HttpStats) -> String {
     let _ = writeln!(o, "# HELP scatter_p_avg_watts Average accelerator power while busy.");
     let _ = writeln!(o, "# TYPE scatter_p_avg_watts gauge");
     let _ = writeln!(o, "scatter_p_avg_watts {}", snap.p_avg_w);
+    let _ = writeln!(o, "# HELP scatter_thermal_drift_rad Worst drift envelope across workers.");
+    let _ = writeln!(o, "# TYPE scatter_thermal_drift_rad gauge");
+    let _ = writeln!(o, "scatter_thermal_drift_rad {}", snap.thermal_drift_rad);
+    let _ = writeln!(
+        o,
+        "# HELP scatter_thermal_phase_error_rad Worst residual phase error across workers."
+    );
+    let _ = writeln!(o, "# TYPE scatter_thermal_phase_error_rad gauge");
+    let _ = writeln!(o, "scatter_thermal_phase_error_rad {}", snap.thermal_phase_error_rad);
+    let _ = writeln!(
+        o,
+        "# HELP scatter_thermal_recalibrations_total Online recalibration actions."
+    );
+    let _ = writeln!(o, "# TYPE scatter_thermal_recalibrations_total counter");
+    let _ = writeln!(o, "scatter_thermal_recalibrations_total {}", snap.recalibrations);
+    let _ = writeln!(
+        o,
+        "# HELP scatter_thermal_recalibrated_chunks_total Chunks recompiled by recalibration."
+    );
+    let _ = writeln!(o, "# TYPE scatter_thermal_recalibrated_chunks_total counter");
+    let _ = writeln!(o, "scatter_thermal_recalibrated_chunks_total {}", snap.recal_chunks);
     let _ = writeln!(o, "# TYPE scatter_http_requests_total counter");
     let _ = writeln!(o, "scatter_http_requests_total {}", stats.requests.load(Ordering::Relaxed));
     let _ = writeln!(
@@ -626,6 +649,18 @@ pub fn http_request(
     body: Option<&str>,
 ) -> crate::Result<HttpResponse> {
     HttpClient::connect(addr)?.request(method, path, body)
+}
+
+/// First sample value of the `/metrics` line starting with `prefix`
+/// (comment lines skipped); NaN when absent. One scraper shared by the
+/// drift bench and the e2e tests, so they cannot parse differently.
+pub fn metric_value(text: &str, prefix: &str) -> f64 {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find(|l| l.starts_with(prefix))
+        .and_then(|l| l.split_whitespace().last())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(f64::NAN)
 }
 
 /// Resolve a `host:port` string (e.g. a `--addr` flag) to a socket

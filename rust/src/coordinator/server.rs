@@ -31,9 +31,10 @@
 
 use crate::coordinator::admission::{AdmissionConfig, AdmissionController, Permit};
 use crate::coordinator::engine::{EngineOptions, PhotonicEngine};
-use crate::coordinator::metrics::{MetricsSnapshot, ServerMetrics};
+use crate::coordinator::metrics::{MetricsSnapshot, ServerMetrics, ThermalGauges};
 use crate::exec::partition_ranges;
 use crate::nn::{Model, Tensor};
+use crate::thermal::{DriftConfig, ThermalPolicy};
 use crate::AcceleratorConfig;
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -54,6 +55,22 @@ pub struct ServerConfig {
     pub engine_threads: usize,
     /// Load-shedding and deadline policy.
     pub admission: AdmissionConfig,
+    /// Runtime thermal-drift model + recalibration policy. The default
+    /// (`drift: None`) reproduces the seed behavior: phases frozen at
+    /// programming time, no drift, no recalibration.
+    pub thermal: ThermalServerConfig,
+}
+
+/// Thermal-drift runtime knobs for the serving stack. Each engine
+/// worker gets the drift config with its own `worker_id`, so replicas
+/// behind the router drift (and self-heat with their own traffic)
+/// independently.
+#[derive(Debug, Clone, Default)]
+pub struct ThermalServerConfig {
+    /// `Some` enables the drift runtime on every engine worker.
+    pub drift: Option<DriftConfig>,
+    /// When/how workers recalibrate (ignored while `drift` is `None`).
+    pub policy: ThermalPolicy,
 }
 
 impl Default for ServerConfig {
@@ -64,6 +81,7 @@ impl Default for ServerConfig {
             workers: 1,
             engine_threads: 1,
             admission: AdmissionConfig::default(),
+            thermal: ThermalServerConfig::default(),
         }
     }
 }
@@ -140,6 +158,10 @@ pub struct ServerReport {
     pub expired: u64,
     /// Admitted requests failed by a dead engine worker.
     pub worker_lost: u64,
+    /// Thermal recalibration actions across workers (0 = runtime off).
+    pub recalibrations: u64,
+    /// Chunks recompiled by thermal recalibration across workers.
+    pub recal_chunks: u64,
 }
 
 /// A shard of a dynamic batch, tagged with the full batch size (clients
@@ -161,6 +183,7 @@ fn spawn_engine_worker(
     opts: EngineOptions,
     masks: std::collections::BTreeMap<String, crate::sparsity::LayerMask>,
     engine_threads: usize,
+    thermal: ThermalServerConfig,
     metrics: Arc<ServerMetrics>,
     rx: Receiver<Shard>,
 ) -> JoinHandle<()> {
@@ -173,6 +196,17 @@ fn spawn_engine_worker(
         if let Some((last, _, _)) = model.matmul_layers().last() {
             engine.set_protected([last.clone()].into_iter().collect());
         }
+        // thermal-drift runtime: this worker's replica drifts with wall
+        // time (scaled) and its own served-request self-heating
+        let time_scale = thermal.drift.as_ref().map(|d| d.time_scale);
+        if let Some(drift) = thermal.drift {
+            engine.set_thermal(
+                DriftConfig { worker_id: widx as u64, ..drift },
+                thermal.policy,
+            );
+        }
+        let started = Instant::now();
+        let mut served: u64 = 0;
         while let Ok(shard) = rx.recv() {
             for req in shard.requests {
                 // second-chance deadline check: the request may have
@@ -188,6 +222,7 @@ fn spawn_engine_worker(
                 let logits = model.forward(image, &mut engine);
                 let class = logits.argmax();
                 let latency = submitted.elapsed();
+                served += 1;
                 metrics.record_served(latency);
                 // release the slot before replying so a ping-pong client
                 // can re-submit without a spurious shed
@@ -201,6 +236,14 @@ fn spawn_engine_worker(
             }
             let rep = engine.energy_report();
             metrics.set_worker_energy(widx, rep.energy_mj, rep.time_ms);
+            // advance the drift runtime once per shard and publish the
+            // post-tick gauges
+            if let Some(scale) = time_scale {
+                let t_s = started.elapsed().as_secs_f64() * scale;
+                if let Some(s) = engine.thermal_tick(t_s, served) {
+                    metrics.set_worker_thermal(widx, ThermalGauges::from(s));
+                }
+            }
         }
     })
 }
@@ -344,6 +387,7 @@ fn run_dispatcher(
             opts,
             masks.clone(),
             server_cfg.engine_threads.max(1),
+            server_cfg.thermal.clone(),
             Arc::clone(&metrics),
             wrx,
         ));
@@ -442,6 +486,8 @@ fn run_dispatcher(
         shed: admission.shed_total(),
         expired: snap.expired,
         worker_lost: snap.worker_lost,
+        recalibrations: snap.recalibrations,
+        recal_chunks: snap.recal_chunks,
     }
 }
 
@@ -586,6 +632,51 @@ mod tests {
         let report = server.shutdown().expect("report");
         assert_eq!(report.requests, 0, "expired work never reached an engine");
         assert_eq!(report.expired, 1);
+    }
+
+    #[test]
+    fn thermal_runtime_recalibrates_and_reports() {
+        // heat-only drift (time_scale 0 freezes the ambient term), so
+        // the envelope depends only on each worker's served count —
+        // fully deterministic under test scheduling
+        let server = InferenceServer::spawn(
+            crate::nn::models::cnn3(),
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig {
+                max_batch: 2,
+                batch_timeout: Duration::from_millis(1),
+                thermal: ThermalServerConfig {
+                    drift: Some(DriftConfig {
+                        ambient_amp_rad: 0.0,
+                        self_heat_amp_rad: 0.2,
+                        self_heat_tau_reqs: 4.0,
+                        time_scale: 0.0,
+                        ..DriftConfig::default()
+                    }),
+                    policy: ThermalPolicy::Threshold { budget_rad: 0.01 },
+                },
+                ..Default::default()
+            },
+        );
+        // serve sequentially so the single worker ticks between requests
+        for i in 0..10 {
+            let rx = server.submit(sample_img(3, i)).expect("admitted");
+            let reply =
+                rx.recv_timeout(Duration::from_secs(120)).expect("reply").expect("served");
+            assert_eq!(reply.logits.len(), 10);
+        }
+        let snap = server.snapshot();
+        assert!(snap.thermal_drift_rad > 0.0, "self-heating must register");
+        assert!(snap.thermal_chunks > 0, "chunks under drift management");
+        let report = server.shutdown().expect("report");
+        assert_eq!(report.requests, 10);
+        assert!(
+            report.recalibrations >= 1,
+            "threshold policy must have recalibrated: {report:?}"
+        );
+        assert!(report.recal_chunks >= 1);
     }
 
     #[test]

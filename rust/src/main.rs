@@ -3,7 +3,8 @@
 //! ```text
 //! scatter serve  [--addr 127.0.0.1:8080] [--workers N] [--engine-threads N]
 //!         [--max-batch N] [--max-in-flight N] [--deadline-ms N] [--density D]
-//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|all>
+//!         [--thermal off|threshold[:RAD]|periodic[:N]]
+//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|all>
 //!         [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8]
 //!         [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]
 //! scatter config [--preset default|dense|foundry] [--out FILE]
@@ -13,9 +14,12 @@
 //!
 //! `serve` exposes the inference service over HTTP (`POST /v1/predict`,
 //! `GET /healthz`, `GET /metrics`); EOF or `quit` on stdin drains
-//! gracefully. `bench engine` sweeps the sparsity-compiled execution
-//! engine and writes `BENCH_engine.json`; `bench serve` load-tests the
-//! TCP endpoint and writes `BENCH_server.json`.
+//! gracefully; `--thermal` enables the runtime drift model + online
+//! recalibration policy. `bench engine` sweeps the sparsity-compiled
+//! execution engine and writes `BENCH_engine.json`; `bench serve`
+//! load-tests the TCP endpoint and writes `BENCH_server.json`; `bench
+//! drift` measures accuracy/recalibration under the thermal-drift
+//! schedule and writes `BENCH_drift.json`.
 //!
 //! (Hand-rolled parsing: the offline toolchain has no clap.)
 
@@ -23,7 +27,9 @@ use scatter::bench::{self, BenchCtx};
 use scatter::config::AcceleratorConfig;
 use scatter::coordinator::{
     AdmissionConfig, EngineOptions, HttpServer, InferenceServer, NetConfig, ServerConfig,
+    ThermalServerConfig,
 };
+use scatter::thermal::{DriftConfig, ThermalPolicy};
 use std::time::Duration;
 
 fn main() {
@@ -41,7 +47,8 @@ fn main() {
                  \n\
                  serve  [--addr 127.0.0.1:8080] [--workers N] [--engine-threads N]\n\
                  \x20      [--max-batch N] [--max-in-flight N] [--deadline-ms N] [--density D]\n\
-                 bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|all>\n\
+                 \x20      [--thermal off|threshold[:RAD]|periodic[:N]]\n\
+                 bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|all>\n\
                  \x20      [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8]\n\
                  \x20      [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]\n\
                  config [--preset default|dense|foundry] [--out FILE]\n\
@@ -74,6 +81,7 @@ fn cmd_serve(args: &[String]) {
                 .map(Duration::from_millis),
             ..Default::default()
         },
+        thermal: parse_thermal(flag_value(args, "--thermal")),
     };
 
     eprintln!("loading CNN-3 deployment (density {density}) ...");
@@ -107,9 +115,9 @@ fn cmd_serve(args: &[String]) {
     match http.shutdown() {
         Ok(r) => eprintln!(
             "served {} requests in {} batches ({:.1} req/s, p50 {} us, p99 {} us, \
-             {:.3} mJ, shed {}, expired {})",
+             {:.3} mJ, shed {}, expired {}, recal {}x/{} chunks)",
             r.requests, r.batches, r.throughput_rps, r.p50_us, r.p99_us, r.energy_mj,
-            r.shed, r.expired
+            r.shed, r.expired, r.recalibrations, r.recal_chunks
         ),
         Err(e) => eprintln!("shutdown error: {e}"),
     }
@@ -117,6 +125,37 @@ fn cmd_serve(args: &[String]) {
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(String::as_str)
+}
+
+/// `--thermal off | threshold[:BUDGET_RAD] | periodic[:EVERY_REQS]` →
+/// drift runtime config (default schedule, per-policy knobs inline).
+/// A present-but-unparseable knob is an error, never a silent default.
+fn parse_thermal(spec: Option<&str>) -> ThermalServerConfig {
+    fn knob<T: std::str::FromStr>(spec: &str, rest: &str, default: T) -> T {
+        match rest.strip_prefix(':') {
+            None if rest.is_empty() => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("bad --thermal value '{spec}': cannot parse '{v}'");
+                std::process::exit(2);
+            }),
+            _ => {
+                eprintln!("unknown --thermal '{spec}' (off|threshold[:RAD]|periodic[:N])");
+                std::process::exit(2);
+            }
+        }
+    }
+    let Some(spec) = spec else { return ThermalServerConfig::default() };
+    let policy = if spec == "off" {
+        return ThermalServerConfig::default();
+    } else if let Some(rest) = spec.strip_prefix("threshold") {
+        ThermalPolicy::Threshold { budget_rad: knob(spec, rest, 0.02) }
+    } else if let Some(rest) = spec.strip_prefix("periodic") {
+        ThermalPolicy::Periodic { every_requests: knob(spec, rest, 256) }
+    } else {
+        eprintln!("unknown --thermal '{spec}' (off|threshold[:RAD]|periodic[:N])");
+        std::process::exit(2);
+    };
+    ThermalServerConfig { drift: Some(DriftConfig::default()), policy }
 }
 
 fn cmd_bench(args: &[String]) {
@@ -149,6 +188,7 @@ fn cmd_bench(args: &[String]) {
             println!("{}", bench::fig9::run_b(&ctx));
         }
         "fig10" => println!("{}", bench::fig10::run(&ctx)),
+        "drift" => println!("{}", bench::drift::run(&ctx)),
         "engine" => {
             let threads: Vec<usize> = flag_value(args, "--threads")
                 .unwrap_or("1,2,4,8")

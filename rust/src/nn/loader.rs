@@ -31,7 +31,14 @@ impl WeightBundle {
                 .get("w")
                 .and_then(Json::f64_vec)
                 .ok_or_else(|| Error::Serde(format!("layer {name}: missing 'w'")))?;
-            let b = entry.get("b").and_then(Json::f64_vec).unwrap_or_default();
+            // a bundle may omit 'b' (bias-free layer), but a present,
+            // malformed 'b' must error — not decay into "no bias"
+            let b = match entry.get("b") {
+                None => Vec::new(),
+                Some(v) => v.f64_vec().ok_or_else(|| {
+                    Error::Serde(format!("layer {name}: malformed 'b'"))
+                })?,
+            };
             weights.insert(name, (w, b));
         }
         Ok(Self { weights })
@@ -133,5 +140,23 @@ mod tests {
     fn rejects_malformed() {
         assert!(WeightBundle::parse("[1,2]").is_err());
         assert!(parse_masks("{\"l\": {\"p\":1,\"q\":1}}").is_err());
+    }
+
+    #[test]
+    fn corrupt_weight_element_is_an_error_not_a_short_tensor() {
+        // strict Json::f64_vec: one bad element fails the whole bundle
+        // instead of decoding a wrong-length weight vector
+        let text = "{\"fc\": {\"w\": [0.5, \"oops\", 0.5]}}";
+        assert!(WeightBundle::parse(text).is_err());
+        // a malformed present 'b' errors too (it must not silently
+        // decay into "bundle has no bias")
+        let text = "{\"fc\": {\"w\": [0.5], \"b\": [0.1, \"oops\"]}}";
+        assert!(WeightBundle::parse(text).is_err());
+        // while an absent 'b' stays legal
+        let text = "{\"fc\": {\"w\": [0.5]}}";
+        assert!(WeightBundle::parse(text).is_ok());
+        // same for masks: a malformed bool no longer coerces to false
+        let masks = "{\"l\": {\"p\":1,\"q\":1,\"chunks\":[{\"row\":[true,null],\"col\":[1,0]}]}}";
+        assert!(parse_masks(masks).is_err());
     }
 }

@@ -251,6 +251,7 @@ impl PtcSimulator {
                 phase_abs[i * k2 + j] = phases[j * k1 + i].abs();
             }
         }
+        let programmed_phases = phases;
 
         // per-port input scaling under the column mode
         let k2_active = col_mask.iter().filter(|&&m| m).count();
@@ -278,6 +279,7 @@ impl PtcSimulator {
             k2,
             w_real,
             phase_abs,
+            phases: programmed_phases,
             row_mask,
             u_gain,
             u_floor,
@@ -298,8 +300,16 @@ pub struct ProgrammedPtc {
     pub k2: usize,
     /// Realized (crosstalk-perturbed) weights, row-major k1×k2.
     pub w_real: Vec<f64>,
-    /// |Δφ̃| per weight (row-major) — feeds the MZI hold-power model.
+    /// |Δφ̃| per weight (row-major) — read once at programming time by
+    /// the MZI hold-power model. [`Self::realize_drifted`] keeps it in
+    /// sync with the current realized phases, but the energy ledger
+    /// intentionally stays at programming-time power (drift is bounded
+    /// by the recalibration budget; EXPERIMENTS.md §Thermal-drift).
     pub phase_abs: Vec<f64>,
+    /// Signed programmed phases (crosstalk-perturbed, node layout
+    /// j·k1+i) — the calibration reference [`Self::realize_drifted`]
+    /// re-realizes against when runtime thermal drift moves the array.
+    phases: Vec<f64>,
     // pub(crate): `exec::plan` compiles these frozen non-idealities into
     // gain-folded active-index execution plans.
     pub(crate) row_mask: Vec<bool>,
@@ -348,6 +358,35 @@ impl ProgrammedPtc {
         self.run_into(x, &mut y, rng);
         y
     }
+
+    /// Re-realize the crossbar from its programmed phases plus a runtime
+    /// drift offset `scale · pattern[m]` per node (node layout j·k1+i,
+    /// matching [`crate::thermal::DriftModel::block_pattern`]).
+    ///
+    /// `scale == 0.0` reproduces the programming-time realized weights
+    /// **bit for bit** — the same `weight_from_phase(phases[m])`
+    /// evaluation as [`PtcSimulator::program`] — which is what makes a
+    /// recalibrated chunk indistinguishable from a freshly programmed
+    /// one without re-running masks, quantization, or the crosstalk
+    /// model.
+    pub fn realize_drifted(&mut self, scale: f64, pattern: &[f64]) {
+        let (k1, k2) = (self.k1, self.k2);
+        assert_eq!(pattern.len(), k1 * k2, "drift pattern must cover the array");
+        for j in 0..k2 {
+            for i in 0..k1 {
+                let m = j * k1 + i;
+                // scale 0 short-circuits the add so ±0.0 phases keep
+                // their programming-time bit pattern exactly
+                let phi = if scale == 0.0 {
+                    self.phases[m]
+                } else {
+                    self.phases[m] + scale * pattern[m]
+                };
+                self.w_real[i * k2 + j] = crate::devices::Mzi::weight_from_phase(phi);
+                self.phase_abs[i * k2 + j] = phi.abs();
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -386,6 +425,24 @@ mod programmed_tests {
             let y_prog = prog.run(&x, &mut XorShiftRng::new(0));
             assert!(nmae(&y_prog, &y_fwd) < 1e-12, "mode {mode:?}");
         }
+    }
+
+    #[test]
+    fn realize_drifted_perturbs_and_restores_exactly() {
+        let s = sim();
+        let mut rng = XorShiftRng::new(5);
+        let mut w = vec![0.0; 256];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let opts = ForwardOptions { thermal: true, ..Default::default() };
+        let mut prog = s.program(&w, &opts, &mut XorShiftRng::new(0));
+        let w0 = prog.w_real.clone();
+        let p0 = prog.phase_abs.clone();
+        let pattern: Vec<f64> = (0..256).map(|m| 0.4 + (m % 5) as f64 * 0.1).collect();
+        prog.realize_drifted(0.2, &pattern);
+        assert_ne!(prog.w_real, w0, "drift must move realized weights");
+        prog.realize_drifted(0.0, &pattern);
+        assert_eq!(prog.w_real, w0, "recalibration restores weights bit-for-bit");
+        assert_eq!(prog.phase_abs, p0, "and the power-model phases");
     }
 
     #[test]

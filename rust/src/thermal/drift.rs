@@ -1,0 +1,294 @@
+//! Time-varying thermal drift and the online-recalibration policy.
+//!
+//! Eqs. 8–9 are applied once, at programming time; this module models
+//! what happens *afterwards*: a long-running accelerator sits in an
+//! ambient that ramps slowly (HVAC cycles, neighbouring boards) and
+//! self-heats with served traffic, so the realized phases walk away from
+//! their programmed values. ENLighten (arXiv 2510.01673) treats this
+//! runtime thermal loop as a first-class system concern; SCATTER's
+//! redistribution hardware makes the *recovery* cheap — recalibrating a
+//! chunk re-realizes only its programmed MZI phases and recompiles its
+//! execution plan, while the masks, rerouter trees, quantization and
+//! gain tables compiled at `program_layer` time are untouched.
+//!
+//! The model is deliberately simple and fully deterministic:
+//!
+//! ```text
+//!   env(t, n)   = A_a·(sin(2π·t/T + φ₀) − sin φ₀)  ambient ramp (rad)
+//!               + A_s·(1 − exp(−n/τ))              self-heating (rad)
+//!   Δφ_m(t, n)  = env(t, n) · pattern_m            per-MZI offset
+//! ```
+//!
+//! `t` is (virtual) seconds since programming, `n` requests served by
+//! this engine worker. `pattern_m` is a fixed per-node susceptibility
+//! fingerprint (positive, counter-based from the seed, per-chunk gain ×
+//! per-node variation) so different chunks cross a phase-error budget at
+//! different times — the property that makes *incremental*
+//! recalibration pay off over a full re-program. `φ₀` is a per-worker
+//! ambient phase, so replicas behind one router drift independently
+//! (the `− sin φ₀` term anchors env(0, 0) = 0: drift is deviation
+//! *since calibration*).
+
+use crate::util::XorShiftRng;
+use std::f64::consts::TAU;
+
+/// When/how engine workers recalibrate against drift.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ThermalPolicy {
+    /// Never recalibrate (the drift still applies — this is the
+    /// "one-shot calibration" failure mode the subsystem exists to fix).
+    #[default]
+    Off,
+    /// Recalibrate every programmed chunk every `every_requests` served
+    /// requests, drifted or not.
+    Periodic { every_requests: u64 },
+    /// Recalibrate a chunk when its estimated phase error exceeds
+    /// `budget_rad` — only the chunks over budget are touched.
+    Threshold { budget_rad: f64 },
+}
+
+/// Drift-model parameters. All phase quantities are radians.
+#[derive(Debug, Clone)]
+pub struct DriftConfig {
+    /// Base seed for the susceptibility fingerprints and the per-worker
+    /// ambient phase (independent of the engine's noise seed).
+    pub seed: u64,
+    /// Stream id of the engine worker owning this model; replicas get
+    /// distinct ambient phases and fingerprints.
+    pub worker_id: u64,
+    /// Peak ambient phase drift A_a.
+    pub ambient_amp_rad: f64,
+    /// Ambient ramp period T (virtual seconds).
+    pub ambient_period_s: f64,
+    /// Asymptotic self-heating phase drift A_s.
+    pub self_heat_amp_rad: f64,
+    /// Served-request count τ to reach ~63 % of A_s.
+    pub self_heat_tau_reqs: f64,
+    /// Minimum |env| change before drifted weights are re-realized
+    /// (bounds how often the physics update recompiles plans).
+    pub apply_eps_rad: f64,
+    /// Wall-clock → virtual-time multiplier used by serving workers
+    /// (benches/tests accelerate drift without waiting; 0 freezes the
+    /// ambient term so only self-heating drives env — deterministic).
+    pub time_scale: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0xD21F7,
+            worker_id: 0,
+            ambient_amp_rad: 0.08,
+            ambient_period_s: 120.0,
+            self_heat_amp_rad: 0.05,
+            self_heat_tau_reqs: 256.0,
+            apply_eps_rad: 2e-3,
+            time_scale: 1.0,
+        }
+    }
+}
+
+impl DriftConfig {
+    /// Aggressive schedule for benches and tests: drift large enough to
+    /// visibly break an uncompensated deployment within tens of requests
+    /// / a couple of virtual minutes.
+    pub fn accelerated() -> Self {
+        Self {
+            ambient_amp_rad: 0.35,
+            ambient_period_s: 40.0,
+            self_heat_amp_rad: 0.20,
+            self_heat_tau_reqs: 24.0,
+            ..Self::default()
+        }
+    }
+}
+
+/// Deterministic drift generator for one engine worker.
+#[derive(Debug, Clone)]
+pub struct DriftModel {
+    cfg: DriftConfig,
+    /// Per-worker ambient phase φ₀.
+    phase0: f64,
+}
+
+impl DriftModel {
+    pub fn new(cfg: DriftConfig) -> Self {
+        let phase0 =
+            XorShiftRng::from_stream(cfg.seed, &[cfg.worker_id]).uniform_in(0.0, TAU);
+        Self { cfg, phase0 }
+    }
+
+    pub fn config(&self) -> &DriftConfig {
+        &self.cfg
+    }
+
+    /// Drift envelope (rad) at virtual time `t_s` after `served`
+    /// requests. `env(0, 0) == 0` by construction.
+    pub fn env(&self, t_s: f64, served: u64) -> f64 {
+        let c = &self.cfg;
+        let ambient = if c.ambient_period_s > 0.0 {
+            let arg = TAU * t_s / c.ambient_period_s + self.phase0;
+            c.ambient_amp_rad * (arg.sin() - self.phase0.sin())
+        } else {
+            0.0
+        };
+        let heat = if c.self_heat_tau_reqs > 0.0 {
+            c.self_heat_amp_rad * (1.0 - (-(served as f64) / c.self_heat_tau_reqs).exp())
+        } else {
+            0.0
+        };
+        ambient + heat
+    }
+
+    /// Per-chunk thermal-environment gain in [0.3, 1) — how close this
+    /// chunk's physical slot sits to the hot spots.
+    fn chunk_gain(&self, layer_id: u64, chunk: u64) -> f64 {
+        XorShiftRng::from_stream(self.cfg.seed, &[self.cfg.worker_id, layer_id, chunk])
+            .uniform_in(0.3, 1.0)
+    }
+
+    /// Per-node susceptibility fingerprints for all `blocks` PTC blocks
+    /// of one chunk: the chunk gain (derived once) times per-node
+    /// variation in [0.35, 1). Counter-based: the same (worker, layer,
+    /// chunk, block) tuple always yields the same fingerprint.
+    pub fn chunk_patterns(
+        &self,
+        layer_id: u64,
+        chunk: u64,
+        blocks: usize,
+        n: usize,
+    ) -> Vec<Vec<f64>> {
+        let gain = self.chunk_gain(layer_id, chunk);
+        (0..blocks)
+            .map(|block| {
+                let mut rng = XorShiftRng::from_stream(
+                    self.cfg.seed,
+                    &[self.cfg.worker_id, layer_id, chunk, block as u64],
+                );
+                (0..n).map(|_| gain * rng.uniform_in(0.35, 1.0)).collect()
+            })
+            .collect()
+    }
+
+    /// Single-block fingerprint — identical to the matching entry of
+    /// [`Self::chunk_patterns`] (diagnostics/tests).
+    pub fn block_pattern(
+        &self,
+        layer_id: u64,
+        chunk: u64,
+        block: u64,
+        n: usize,
+    ) -> Vec<f64> {
+        let gain = self.chunk_gain(layer_id, chunk);
+        let mut rng = XorShiftRng::from_stream(
+            self.cfg.seed,
+            &[self.cfg.worker_id, layer_id, chunk, block],
+        );
+        (0..n).map(|_| gain * rng.uniform_in(0.35, 1.0)).collect()
+    }
+}
+
+/// Stable stream id for a layer name (FNV-1a), so fingerprints survive
+/// re-programming and differ across layers.
+pub fn layer_stream_id(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_zero_at_calibration_point() {
+        let m = DriftModel::new(DriftConfig::accelerated());
+        assert_eq!(m.env(0.0, 0), 0.0);
+    }
+
+    #[test]
+    fn env_deterministic_and_worker_dependent() {
+        let a = DriftModel::new(DriftConfig { worker_id: 0, ..DriftConfig::accelerated() });
+        let b = DriftModel::new(DriftConfig { worker_id: 0, ..DriftConfig::accelerated() });
+        let c = DriftModel::new(DriftConfig { worker_id: 1, ..DriftConfig::accelerated() });
+        assert_eq!(a.env(13.0, 40), b.env(13.0, 40));
+        assert_ne!(a.env(13.0, 40), c.env(13.0, 40), "workers drift independently");
+    }
+
+    #[test]
+    fn self_heating_saturates_monotonically() {
+        let cfg = DriftConfig {
+            ambient_amp_rad: 0.0, // isolate the self-heating term
+            self_heat_amp_rad: 0.2,
+            self_heat_tau_reqs: 24.0,
+            ..DriftConfig::default()
+        };
+        let m = DriftModel::new(cfg);
+        let mut prev = -1.0;
+        for n in [0u64, 1, 8, 24, 100, 10_000] {
+            let e = m.env(0.0, n);
+            assert!(e >= prev, "self-heating must be monotone");
+            assert!(e <= 0.2 + 1e-12, "bounded by the amplitude");
+            prev = e;
+        }
+        assert!((m.env(0.0, 1_000_000) - 0.2).abs() < 1e-9, "saturates at A_s");
+    }
+
+    #[test]
+    fn ambient_bounded_by_twice_amplitude() {
+        let m = DriftModel::new(DriftConfig {
+            self_heat_amp_rad: 0.0,
+            ambient_amp_rad: 0.35,
+            ..DriftConfig::accelerated()
+        });
+        for i in 0..200 {
+            let e = m.env(i as f64 * 0.7, 0);
+            assert!(e.abs() <= 2.0 * 0.35 + 1e-12, "|env|={e}");
+        }
+    }
+
+    #[test]
+    fn time_frozen_leaves_only_self_heating() {
+        // time_scale = 0 callers pass t = 0: the ambient term vanishes
+        // and env depends only on the served count (fully deterministic).
+        let m = DriftModel::new(DriftConfig::accelerated());
+        let pure_heat = m.cfg.self_heat_amp_rad
+            * (1.0 - (-(40.0) / m.cfg.self_heat_tau_reqs).exp());
+        assert!((m.env(0.0, 40) - pure_heat).abs() < 1e-12);
+    }
+
+    #[test]
+    fn patterns_positive_bounded_and_counter_based() {
+        let m = DriftModel::new(DriftConfig::default());
+        let a = m.block_pattern(7, 2, 3, 256);
+        let b = m.block_pattern(7, 2, 3, 256);
+        assert_eq!(a, b, "same ids reproduce the fingerprint");
+        assert!(a.iter().all(|&v| v > 0.0 && v < 1.0));
+        let c = m.block_pattern(7, 2, 4, 256);
+        assert_ne!(a, c, "different block, different fingerprint");
+        // per-chunk gain: nodes of one chunk share a scale factor, so
+        // two chunks' mean susceptibilities must differ measurably
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let other = m.block_pattern(7, 9, 3, 256);
+        assert!((mean(&a) - mean(&other)).abs() > 1e-3, "chunk gains spread");
+    }
+
+    #[test]
+    fn chunk_patterns_match_per_block_derivation() {
+        let m = DriftModel::new(DriftConfig::default());
+        let all = m.chunk_patterns(7, 2, 4, 64);
+        assert_eq!(all.len(), 4);
+        for (b, pattern) in all.iter().enumerate() {
+            assert_eq!(pattern, &m.block_pattern(7, 2, b as u64, 64), "block {b}");
+        }
+    }
+
+    #[test]
+    fn layer_ids_distinct() {
+        assert_ne!(layer_stream_id("conv1"), layer_stream_id("conv2"));
+        assert_eq!(layer_stream_id("fc"), layer_stream_id("fc"));
+    }
+}

@@ -11,12 +11,18 @@
 //! * [`gamma`] — the fitted γ(d) model, shipping the paper's published
 //!   coefficients as the golden default;
 //! * [`coupling`] — the array-level coupling matrices of Eqs. 8–9 with the
-//!   phase-sign-dependent aggressor/victim distances.
+//!   phase-sign-dependent aggressor/victim distances;
+//! * [`drift`] — the *runtime* counterpart: time-varying ambient +
+//!   activity-dependent self-heating drift over programmed phases, and
+//!   the online-recalibration policy that keeps a serving deployment
+//!   inside its phase-error budget.
 
 pub mod coupling;
+pub mod drift;
 pub mod fit;
 pub mod gamma;
 pub mod heatsim;
 
 pub use coupling::CouplingModel;
+pub use drift::{DriftConfig, DriftModel, ThermalPolicy};
 pub use gamma::GammaModel;

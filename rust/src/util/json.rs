@@ -70,13 +70,29 @@ impl Json {
         }
     }
 
+    /// Strict numeric-array decode: `None` if this is not an array or
+    /// *any* element is non-numeric. (A lenient `filter_map` here once
+    /// let a corrupt weight bundle decode into a wrong-length tensor
+    /// instead of an error.)
     pub fn f64_vec(&self) -> Option<Vec<f64>> {
-        self.as_arr().map(|a| a.iter().filter_map(Json::as_f64).collect())
+        let a = self.as_arr()?;
+        let mut out = Vec::with_capacity(a.len());
+        for v in a {
+            out.push(v.as_f64()?);
+        }
+        Some(out)
     }
 
+    /// Strict bool-array decode; numbers are accepted as 0/nonzero (the
+    /// python mask exports use 0/1), anything else is `None` — malformed
+    /// entries used to coerce to `false` silently.
     pub fn bool_vec(&self) -> Option<Vec<bool>> {
-        self.as_arr()
-            .map(|a| a.iter().map(|v| v.as_bool().or(v.as_f64().map(|x| x != 0.0)).unwrap_or(false)).collect())
+        let a = self.as_arr()?;
+        let mut out = Vec::with_capacity(a.len());
+        for v in a {
+            out.push(v.as_bool().or_else(|| v.as_f64().map(|x| x != 0.0))?);
+        }
+        Some(out)
     }
 
     /// Serialize (compact).
@@ -92,7 +108,12 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity literal; `write!("{x}")`
+                    // used to emit them verbatim, corrupting BENCH_*.json
+                    // artifacts into unparseable text
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -351,5 +372,54 @@ mod tests {
     fn bool_vec_accepts_numbers() {
         let v = Json::parse("[1, 0, true, false]").unwrap();
         assert_eq!(v.bool_vec().unwrap(), vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null_and_round_trips() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        // a bench artifact carrying a NaN cell must stay valid JSON
+        let doc = Json::obj(vec![
+            ("p_avg_w", Json::Num(f64::NAN)),
+            ("gmacs", Json::Num(12.5)),
+        ]);
+        let text = doc.to_string();
+        assert_eq!(text, "{\"gmacs\":12.5,\"p_avg_w\":null}");
+        let back = Json::parse(&text).expect("round-trips through the parser");
+        assert_eq!(back.get("p_avg_w"), Some(&Json::Null));
+        assert_eq!(back.get("gmacs").and_then(Json::as_f64), Some(12.5));
+        // nested containers too
+        let arr = Json::arr_f64(&[1.0, f64::NAN, 3.0]).to_string();
+        assert_eq!(arr, "[1,null,3]");
+        assert!(Json::parse(&arr).is_ok());
+    }
+
+    #[test]
+    fn f64_vec_rejects_any_non_numeric_element() {
+        assert_eq!(
+            Json::parse("[1, 2.5, 3]").unwrap().f64_vec(),
+            Some(vec![1.0, 2.5, 3.0])
+        );
+        for bad in ["[1, \"x\", 3]", "[1, null, 3]", "[1, true]", "[[1]]"] {
+            assert_eq!(
+                Json::parse(bad).unwrap().f64_vec(),
+                None,
+                "{bad} must not decode into a shorter tensor"
+            );
+        }
+        assert_eq!(Json::Str("not an array".into()).f64_vec(), None);
+    }
+
+    #[test]
+    fn bool_vec_rejects_malformed_elements() {
+        for bad in ["[true, \"x\"]", "[1, null]", "[[true]]", "[false, {}]"] {
+            assert_eq!(
+                Json::parse(bad).unwrap().bool_vec(),
+                None,
+                "{bad} must not coerce to false"
+            );
+        }
+        assert_eq!(Json::parse("[]").unwrap().bool_vec(), Some(vec![]));
     }
 }

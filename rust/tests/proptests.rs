@@ -177,6 +177,134 @@ fn prop_config_json_roundtrip() {
     }
 }
 
+/// The CSR fast path of `CouplingModel::perturb_phases` must equal the
+/// dense Eq.-8 mat-vec over the exported `matrices()` —
+/// `Δφ̃ = Δφ + G⁺·max(Δφ, 0) + G⁻·max(−Δφ, 0)` — for random
+/// geometries and phase vectors (the AOT/Pallas path consumes the dense
+/// matrices, so divergence here would split the two backends).
+#[test]
+fn prop_coupling_csr_matches_dense_matvec() {
+    use scatter::thermal::coupling::{ArrayGeometry, CouplingModel};
+    use std::f64::consts::FRAC_PI_2;
+    let mut rng = XorShiftRng::new(0xC58D);
+    let gamma = GammaModel::paper();
+    for case in 0..80 {
+        let rows = 1 + rng.index(4);
+        let cols = 2 + rng.index(7);
+        let geom = ArrayGeometry {
+            rows,
+            cols,
+            l_v: rng.uniform_in(100.0, 140.0),
+            l_h: rng.uniform_in(14.0, 40.0),
+            l_s: rng.uniform_in(7.0, 11.0),
+        };
+        let m = CouplingModel::new(geom, &gamma);
+        let n = rows * cols;
+        let (g_pos, g_neg) = m.matrices();
+        let mut phases = vec![0.0f64; n];
+        rng.fill_uniform(&mut phases, -FRAC_PI_2, FRAC_PI_2);
+        // sprinkle exact zeros and sign boundaries into the vector
+        for j in 0..n {
+            if rng.uniform() < 0.2 {
+                phases[j] = 0.0;
+            }
+        }
+        let csr = m.perturbed(&phases);
+        for i in 0..n {
+            let mut dense = phases[i];
+            for j in 0..n {
+                dense += g_pos[i * n + j] * phases[j].max(0.0)
+                    + g_neg[i * n + j] * (-phases[j]).max(0.0);
+            }
+            assert!(
+                (csr[i] - dense).abs() < 1e-12,
+                "case {case}: victim {i} CSR {} vs dense {dense}",
+                csr[i]
+            );
+        }
+    }
+}
+
+/// Drifted-then-recalibrated engines must match never-drifted engines
+/// **exactly** on every output, across random shapes, masks, drift
+/// times, and worker ids — the property that makes online
+/// recalibration indistinguishable from a fresh `program_layer` while
+/// recompiling only the affected chunks.
+#[test]
+fn prop_drift_recalibrated_matches_fresh_bit_for_bit() {
+    use scatter::coordinator::{EngineOptions, PhotonicEngine};
+    use scatter::nn::MatmulEngine;
+    use scatter::thermal::{DriftConfig, ThermalPolicy};
+    use std::collections::BTreeMap;
+    let mut rng = XorShiftRng::new(0xD21F7A);
+    let opts =
+        EngineOptions { thermal: true, pd_noise: false, phase_noise: false, quantize: true };
+    for case in 0..12 {
+        let cfg = AcceleratorConfig {
+            features: SparsitySupport::FULL,
+            l_g: [1.0, 5.0][rng.index(2)],
+            ..Default::default()
+        };
+        let (rows, cols) = cfg.chunk_shape();
+        let out_dim = rows + rng.index(rows * 2);
+        let in_dim = cols + rng.index(cols * 2);
+        let n_cols = 1 + rng.index(4);
+        let mut w = vec![0.0; out_dim * in_dim];
+        rng.fill_uniform(&mut w, -0.5, 0.5);
+        let mut x = vec![0.0; in_dim * n_cols];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let p = out_dim.div_ceil(rows);
+        let q = in_dim.div_ceil(cols);
+        let chunks: Vec<ChunkMask> = (0..p * q)
+            .map(|_| {
+                ChunkMask::new(
+                    (0..rows).map(|_| rng.uniform() < 0.7).collect(),
+                    (0..cols).map(|_| rng.uniform() < 0.6).collect(),
+                )
+            })
+            .collect();
+        let mask = LayerMask { p, q, chunks };
+        let build = |with_thermal: bool| {
+            let mut eng = PhotonicEngine::new(cfg.clone(), opts);
+            let mut masks = BTreeMap::new();
+            masks.insert("l".to_string(), mask.clone());
+            eng.set_masks(masks);
+            if with_thermal {
+                eng.set_thermal(
+                    DriftConfig {
+                        worker_id: case as u64,
+                        ..DriftConfig::accelerated()
+                    },
+                    ThermalPolicy::Off,
+                );
+            }
+            eng
+        };
+        let mut fresh = build(false);
+        let mut drifted = build(true);
+        let y_fresh = fresh.matmul("l", &w, &x, out_dim, in_dim, n_cols);
+        let y0 = drifted.matmul("l", &w, &x, out_dim, in_dim, n_cols);
+        assert_eq!(y_fresh, y0, "case {case}: un-ticked runtime must be inert");
+        // drift to a random point in the schedule, then recalibrate
+        let t = rng.uniform_in(1.0, 90.0);
+        let served = 1 + rng.index(200) as u64;
+        let status = drifted.thermal_tick(t, served).expect("runtime on");
+        let y_drift = drifted.matmul("l", &w, &x, out_dim, in_dim, n_cols);
+        let recal = drifted.recalibrate_thermal();
+        let y_recal = drifted.matmul("l", &w, &x, out_dim, in_dim, n_cols);
+        assert_eq!(
+            y_fresh, y_recal,
+            "case {case}: recalibrated output must match fresh programming bit-for-bit"
+        );
+        // when the schedule actually moved the phases, the drifted
+        // output differed and recalibration touched every chunk
+        if status.env_rad.abs() * 0.2 > 1e-3 {
+            assert_ne!(y_drift, y_fresh, "case {case}: drift must be visible");
+            assert!(recal > 0, "case {case}: recalibration must recompile chunks");
+        }
+    }
+}
+
 /// Programmed-PTC streaming equals the one-shot forward for random
 /// problems, masks, and modes (noise off: bitwise determinism).
 #[test]

@@ -4,7 +4,7 @@
 //! one reply or a 503), live `/metrics`, and graceful drain.
 
 use scatter::config::{AcceleratorConfig, DacKind, SparsitySupport};
-use scatter::coordinator::net::{http_request, HttpServer, NetConfig};
+use scatter::coordinator::net::{http_request, metric_value, HttpServer, NetConfig};
 use scatter::coordinator::{
     AdmissionConfig, EngineOptions, InferenceServer, ServerConfig,
 };
@@ -32,6 +32,7 @@ fn spawn_http(max_in_flight: usize, workers: usize) -> HttpServer {
             workers,
             engine_threads: 1,
             admission: AdmissionConfig { max_in_flight, ..Default::default() },
+            ..Default::default()
         },
     );
     HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral port")
@@ -41,16 +42,6 @@ fn predict_body() -> String {
     let ds = scatter::data::SyntheticDataset::new(scatter::data::DatasetSpec::fmnist_like());
     let (img, _) = ds.sample(3, 0);
     Json::obj(vec![("image", Json::arr_f64(&img.data))]).to_string()
-}
-
-/// First sample value of a prometheus metric (by line prefix).
-fn metric_value(text: &str, prefix: &str) -> f64 {
-    text.lines()
-        .filter(|l| !l.starts_with('#'))
-        .find(|l| l.starts_with(prefix))
-        .and_then(|l| l.split_whitespace().last())
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(f64::NAN)
 }
 
 #[test]

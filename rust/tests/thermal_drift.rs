@@ -1,0 +1,120 @@
+//! End-to-end guarantees of the thermal-drift runtime on the serving
+//! stack:
+//!
+//! * `/metrics` exposes nonzero drift and recalibration gauges while a
+//!   drift-enabled deployment serves real TCP traffic;
+//! * with the policy off, drift registers but recalibration counters
+//!   stay zero (the gauges separate physics from control).
+//!
+//! Drift schedules here are heat-only with `time_scale: 0`, so every
+//! envelope value depends only on each worker's served count — no
+//! wall-clock flakiness.
+
+use scatter::config::SparsitySupport;
+use scatter::coordinator::net::{http_request, metric_value, HttpClient};
+use scatter::coordinator::{
+    EngineOptions, HttpServer, InferenceServer, NetConfig, ServerConfig, ThermalServerConfig,
+};
+use scatter::nn::Tensor;
+use scatter::thermal::{DriftConfig, ThermalPolicy};
+use scatter::util::Json;
+use scatter::AcceleratorConfig;
+use std::time::Duration;
+
+fn test_cfg() -> AcceleratorConfig {
+    AcceleratorConfig {
+        features: SparsitySupport::NONE,
+        dac: scatter::config::DacKind::Edac,
+        l_g: 5.0,
+        ..Default::default()
+    }
+}
+
+fn heat_only_drift() -> DriftConfig {
+    DriftConfig {
+        ambient_amp_rad: 0.0,
+        self_heat_amp_rad: 0.2,
+        self_heat_tau_reqs: 4.0,
+        time_scale: 0.0,
+        ..DriftConfig::default()
+    }
+}
+
+fn sample_body() -> String {
+    let ds = scatter::data::SyntheticDataset::new(scatter::data::DatasetSpec::fmnist_like());
+    let (img, _): (Tensor, usize) = ds.sample(7, 0);
+    Json::obj(vec![("image", Json::arr_f64(&img.data))]).to_string()
+}
+
+fn spawn_http(policy: ThermalPolicy) -> HttpServer {
+    let server = InferenceServer::spawn(
+        scatter::nn::models::cnn3(),
+        test_cfg(),
+        EngineOptions::IDEAL,
+        Default::default(),
+        ServerConfig {
+            max_batch: 2,
+            batch_timeout: Duration::from_millis(1),
+            workers: 1,
+            thermal: ThermalServerConfig { drift: Some(heat_only_drift()), policy },
+            ..Default::default()
+        },
+    );
+    HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral port")
+}
+
+#[test]
+fn metrics_expose_nonzero_drift_and_recalibration_gauges() {
+    let http = spawn_http(ThermalPolicy::Threshold { budget_rad: 0.01 });
+    let addr = http.local_addr();
+    let body = sample_body();
+    let mut client = HttpClient::connect(&addr).expect("connect");
+    for i in 0..12 {
+        let resp = client
+            .request("POST", "/v1/predict", Some(&body))
+            .unwrap_or_else(|e| panic!("predict {i}: {e}"));
+        assert_eq!(resp.status, 200, "predict {i}: {}", resp.body);
+    }
+    let m = http_request(&addr, "GET", "/metrics", None).expect("metrics");
+    assert_eq!(m.status, 200);
+    let drift = metric_value(&m.body, "scatter_thermal_drift_rad");
+    assert!(drift > 0.0, "self-heating drift must register:\n{}", m.body);
+    let recals = metric_value(&m.body, "scatter_thermal_recalibrations_total");
+    assert!(recals >= 1.0, "threshold policy must recalibrate:\n{}", m.body);
+    let chunks = metric_value(&m.body, "scatter_thermal_recalibrated_chunks_total");
+    assert!(chunks >= recals, "each action recompiles ≥ 1 chunk");
+    let err = metric_value(&m.body, "scatter_thermal_phase_error_rad");
+    assert!(
+        err <= 0.01 + 1e-9,
+        "threshold policy keeps residual error within budget, got {err}"
+    );
+    let report = http.shutdown().expect("drain");
+    assert_eq!(report.requests, 12);
+    // the final shard's tick may land after the scrape, so the report
+    // can only ever be ahead of the gauges read mid-flight
+    assert!(report.recalibrations as f64 >= recals);
+    assert!(report.recal_chunks as f64 >= chunks);
+}
+
+#[test]
+fn policy_off_registers_drift_but_never_recalibrates() {
+    let http = spawn_http(ThermalPolicy::Off);
+    let addr = http.local_addr();
+    let body = sample_body();
+    for _ in 0..8 {
+        let resp =
+            http_request(&addr, "POST", "/v1/predict", Some(&body)).expect("predict");
+        assert_eq!(resp.status, 200);
+    }
+    let m = http_request(&addr, "GET", "/metrics", None).expect("metrics");
+    assert!(metric_value(&m.body, "scatter_thermal_drift_rad") > 0.0);
+    assert!(
+        metric_value(&m.body, "scatter_thermal_phase_error_rad") > 0.0,
+        "uncompensated drift accumulates phase error:\n{}",
+        m.body
+    );
+    assert_eq!(metric_value(&m.body, "scatter_thermal_recalibrations_total"), 0.0);
+    let report = http.shutdown().expect("drain");
+    assert_eq!(report.recalibrations, 0);
+    assert_eq!(report.recal_chunks, 0);
+}

@@ -18,8 +18,11 @@ echo "== bench smoke: engine sweep (--samples 5 ≈ 50 ms/cell) =="
 echo "== bench smoke: networked serve (2 s closed-loop over TCP) =="
 ./rust/target/release/scatter bench serve --duration 2 --concurrency 4 --workers 2
 
+echo "== bench smoke: thermal drift (policy off vs threshold recalibration) =="
+./rust/target/release/scatter bench drift --samples 40
+
 echo "== perf gate: ci/check_bench.py =="
 python3 ci/check_bench.py --engine BENCH_engine.json --server BENCH_server.json \
-  --baseline ci/bench_baseline.json
+  --drift BENCH_drift.json --baseline ci/bench_baseline.json
 
 echo "verify OK"
