@@ -77,6 +77,8 @@ def check_engine(fresh_path, baseline_path, failures):
     if ratios:
         print(f"engine gate: checked {len(ratios)} speedup-ratio floors")
 
+    check_engine_stages(fresh_path, fresh_doc, engine_base, failures)
+
     cells = engine_base.get("cells")
     if cells is None:
         print(f"{baseline_path}: no committed baseline yet (cells: null) — record-only.")
@@ -106,6 +108,57 @@ def check_engine(fresh_path, baseline_path, failures):
         f"engine gate: compared {compared} cells against {baseline_path} "
         f"(tolerance {tolerance:.0%})"
     )
+
+
+def check_engine_stages(fresh_path, fresh_doc, engine_base, failures):
+    """Sanity-check the per-stage breakdown written by ``scatter bench
+    engine --stages``: every path's gather/kernel/scatter shares are
+    fractions summing to ~1.0, and the kernel stage is actually measured
+    (a zero kernel share means the timers are not wired through the hot
+    loop). Required when the baseline sets ``engine.stages.require``
+    (verify.sh and CI always pass ``--stages``); merely optional
+    otherwise so ad-hoc local runs without the flag still gate."""
+    required = bool((engine_base.get("stages") or {}).get("require"))
+    stages = fresh_doc.get("stages")
+    if stages is None:
+        if required:
+            failures.append(
+                f"{fresh_path}: no 'stages' block — run bench engine with --stages"
+            )
+        return
+    if not isinstance(stages, dict) or not stages:
+        failures.append(f"{fresh_path}: 'stages' block empty or malformed")
+        return
+    share_fields = ("gather_share", "kernel_share", "scatter_share")
+    failures_before = len(failures)
+    for path_name, block in sorted(stages.items()):
+        shares = []
+        for field in share_fields:
+            if field not in block:
+                failures.append(f"{fresh_path}: stages.{path_name} missing '{field}'")
+                continue
+            v = float(block[field])
+            if not 0.0 <= v <= 1.0:
+                failures.append(
+                    f"{fresh_path}: stages.{path_name}.{field}={v} not a fraction"
+                )
+            shares.append(v)
+        if len(shares) == len(share_fields) and abs(sum(shares) - 1.0) > 0.02:
+            failures.append(
+                f"{fresh_path}: stages.{path_name} shares sum to {sum(shares):.3f} "
+                f"(want ~1.0)"
+            )
+        if "kernel_share" in block and float(block["kernel_share"]) <= 0.0:
+            failures.append(
+                f"{fresh_path}: stages.{path_name} kernel share is zero — "
+                f"stage timers not reaching the micro-kernel"
+            )
+    if len(failures) == failures_before:
+        kernel = {p: float(b.get("kernel_share", 0.0)) for p, b in sorted(stages.items())}
+        print(
+            "engine gate: stage breakdown OK — kernel shares "
+            + ", ".join(f"{p}={v:.2f}" for p, v in kernel.items())
+        )
 
 
 def check_server(server_path, failures):

@@ -28,11 +28,12 @@ fn main() {
     });
 
     // sparsity-compiled execution sweep: 1/2/4/8 threads ×
-    // 0%/50%/87.5% structured column sparsity, reference path included;
-    // refreshes BENCH_engine.json at the repo root
+    // 0%/50%/87.5% structured column sparsity, reference path included,
+    // plus the tall-layer cached-vs-uncached panel sweep and the
+    // per-stage breakdown; refreshes BENCH_engine.json at the repo root
     println!(
         "{}",
-        scatter::bench::engine::run(&[1, 2, 4, 8], Duration::from_millis(500))
+        scatter::bench::engine::run(&[1, 2, 4, 8], Duration::from_millis(500), true)
     );
 
     // whole-model inference

@@ -1,29 +1,63 @@
 //! End-to-end layer-matmul throughput bench for the sparsity-compiled
 //! parallel execution engine: sweeps worker-thread counts × structured
-//! column sparsity, times both the compiled path and the pre-compilation
-//! bool-mask reference path, and emits `BENCH_engine.json` at the repo
-//! root so the perf trajectory is tracked across PRs (EXPERIMENTS.md
-//! §Perf).
+//! column sparsity on the square 256×256 shape (compiled vs the
+//! pre-compilation bool-mask reference path), plus the **tall-layer
+//! sweep** (512×256, p = 8 chunk-rows) that isolates the shared
+//! activation-panel cache: the two-pass cached path vs the PR1-style
+//! single-pass uncached path, whose per-chunk-row re-gather redundancy
+//! grows with p. Emits `BENCH_engine.json` at the repo root so the perf
+//! trajectory is tracked across PRs (EXPERIMENTS.md §Perf); with
+//! `--stages` it also reports the gather/kernel/scatter wall-time
+//! breakdown of both paths.
 
 use crate::bench::common::repo_root_file;
 use crate::bench::timing::bench;
 use crate::config::AcceleratorConfig;
 use crate::coordinator::{EngineOptions, PhotonicEngine};
+use crate::exec::StageBreakdown;
 use crate::nn::MatmulEngine;
 use crate::sparsity::{ChunkMask, LayerMask};
 use crate::util::{Json, Table, XorShiftRng};
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-/// Bench problem: a 256×256 layer streaming 64 activation columns
+/// Square bench problem: a 256×256 layer streaming 64 activation columns
 /// (4 chunks on the default 64×64 grid — enough to exercise multi-chunk
 /// accumulation and the work-item partitioner).
-const OUT: usize = 256;
-const IN: usize = 256;
-const N_COLS: usize = 64;
+const SQUARE: (usize, usize, usize) = (256, 256, 64);
+
+/// Tall bench problem: 512×256×64 ⇒ p = 8 chunk-rows per chunk-column on
+/// the 64×64 grid. The single-pass path gathers + quantizes every
+/// activation panel 8 times (once per chunk-row); the cached path once.
+const TALL: (usize, usize, usize) = (512, 256, 64);
+
+/// Sparsity and thread count of the tall-layer headline cells.
+const TALL_SPARSITY: f64 = 0.5;
+const TALL_THREADS: usize = 4;
 
 /// The swept structured column sparsities (fraction of pruned columns).
 pub const SPARSITIES: [f64; 3] = [0.0, 0.5, 0.875];
+
+/// Which execution path a cell times.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Path {
+    /// Pre-compilation scalar streaming with bool-mask branching.
+    Reference,
+    /// PR1-style single-pass compiled path (per-item gather, `Vec` churn).
+    Uncached,
+    /// Two-pass shared-panel path (`MatmulEngine::matmul`).
+    Cached,
+}
+
+impl Path {
+    fn label(self) -> &'static str {
+        match self {
+            Path::Reference => "reference",
+            Path::Uncached => "uncached",
+            Path::Cached => "planned",
+        }
+    }
+}
 
 /// Structured column mask at `sparsity` pruned columns: within every
 /// k2-segment the first `k2·(1−s)` columns stay active (the paper's
@@ -42,7 +76,14 @@ fn column_mask(
     LayerMask { p, q, chunks: vec![chunk; p * q] }
 }
 
-fn bench_engine(sparsity: f64, threads: usize, reference: bool, budget: Duration) -> f64 {
+/// Engine + problem for one cell, mask installed and programming primed
+/// (so only streaming is timed).
+fn setup(
+    shape: (usize, usize, usize),
+    sparsity: f64,
+    threads: usize,
+) -> (PhotonicEngine, Vec<f64>, Vec<f64>) {
+    let (out, inp, n_cols) = shape;
     let cfg = AcceleratorConfig::default(); // FULL features: IG + OG + LR
     let (rows, cols) = cfg.chunk_shape();
     let k2 = cfg.k2;
@@ -52,62 +93,105 @@ fn bench_engine(sparsity: f64, threads: usize, reference: bool, budget: Duration
         let mut masks = BTreeMap::new();
         masks.insert(
             "bench".to_string(),
-            column_mask(OUT.div_ceil(rows), IN.div_ceil(cols), rows, cols, k2, sparsity),
+            column_mask(out.div_ceil(rows), inp.div_ceil(cols), rows, cols, k2, sparsity),
         );
         eng.set_masks(masks);
     }
     let mut rng = XorShiftRng::new(3);
-    let mut w = vec![0.0; OUT * IN];
+    let mut w = vec![0.0; out * inp];
     rng.fill_uniform(&mut w, -0.5, 0.5);
-    let mut x = vec![0.0; IN * N_COLS];
+    let mut x = vec![0.0; inp * n_cols];
     rng.fill_uniform(&mut x, 0.0, 1.0);
-    // prime the programming cache so only streaming is timed
-    let _ = eng.matmul("bench", &w, &x, OUT, IN, N_COLS);
+    let _ = eng.matmul("bench", &w, &x, out, inp, n_cols);
+    (eng, w, x)
+}
+
+fn bench_engine(
+    shape: (usize, usize, usize),
+    sparsity: f64,
+    threads: usize,
+    path: Path,
+    budget: Duration,
+) -> f64 {
+    let (out, inp, n_cols) = shape;
+    let (mut eng, w, x) = setup(shape, sparsity, threads);
     let label = format!(
-        "layer_matmul {}x{}x{} {} s={:.3} t={}",
-        OUT,
-        IN,
-        N_COLS,
-        if reference { "ref " } else { "plan" },
-        sparsity,
-        threads
+        "layer_matmul {out}x{inp}x{n_cols} {:<9} s={sparsity:.3} t={threads}",
+        path.label()
     );
     let r = bench(&label, budget, || {
-        if reference {
-            std::hint::black_box(eng.matmul_reference("bench", &w, &x, OUT, IN, N_COLS));
-        } else {
-            std::hint::black_box(eng.matmul("bench", &w, &x, OUT, IN, N_COLS));
-        }
+        let y = match path {
+            Path::Reference => eng.matmul_reference("bench", &w, &x, out, inp, n_cols),
+            Path::Uncached => eng.matmul_uncached("bench", &w, &x, out, inp, n_cols),
+            Path::Cached => eng.matmul("bench", &w, &x, out, inp, n_cols),
+        };
+        std::hint::black_box(y);
     });
     r.mean_ns
 }
 
-/// MAC/ns == GMAC/s for the fixed bench shape.
-fn gmacs(mean_ns: f64) -> f64 {
-    (OUT * IN * N_COLS) as f64 / mean_ns
+/// Gather/kernel/scatter breakdown of one path on the tall shape.
+fn measure_stages(path: Path, iters: usize) -> StageBreakdown {
+    let (out, inp, n_cols) = TALL;
+    let (mut eng, w, x) = setup(TALL, TALL_SPARSITY, TALL_THREADS);
+    eng.set_stage_timing(true);
+    for _ in 0..iters {
+        let y = match path {
+            Path::Uncached => eng.matmul_uncached("bench", &w, &x, out, inp, n_cols),
+            _ => eng.matmul("bench", &w, &x, out, inp, n_cols),
+        };
+        std::hint::black_box(y);
+    }
+    eng.take_stage_breakdown()
 }
 
-fn record(results: &mut Vec<Json>, path: &str, t: usize, per_sparsity: &[(f64, f64)]) {
+/// MAC/ns == GMAC/s for a bench shape.
+fn gmacs(shape: (usize, usize, usize), mean_ns: f64) -> f64 {
+    (shape.0 * shape.1 * shape.2) as f64 / mean_ns
+}
+
+fn record(
+    results: &mut Vec<Json>,
+    shape: (usize, usize, usize),
+    path: &str,
+    t: usize,
+    per_sparsity: &[(f64, f64)],
+) {
     for &(s, mean_ns) in per_sparsity {
         results.push(Json::obj(vec![
             ("path", Json::Str(path.into())),
             ("threads", Json::Num(t as f64)),
             ("sparsity", Json::Num(s)),
             ("mean_ns_per_call", Json::Num(mean_ns)),
-            ("gmacs", Json::Num(gmacs(mean_ns))),
+            ("gmacs", Json::Num(gmacs(shape, mean_ns))),
         ]));
     }
 }
 
-fn table_row(path: &str, t: usize, per_sparsity: &[(f64, f64)]) -> Vec<String> {
+fn table_row(
+    shape: (usize, usize, usize),
+    path: &str,
+    t: usize,
+    per_sparsity: &[(f64, f64)],
+) -> Vec<String> {
     let mut row = vec![path.to_string(), t.to_string()];
-    row.extend(per_sparsity.iter().map(|&(_, ns)| format!("{:.2}", gmacs(ns))));
+    row.extend(per_sparsity.iter().map(|&(_, ns)| format!("{:.2}", gmacs(shape, ns))));
     row
 }
 
-/// Run the sweep, print the throughput table, write `BENCH_engine.json`,
-/// and return the rendered table.
-pub fn run(threads: &[usize], budget: Duration) -> String {
+fn stages_json(b: &StageBreakdown) -> Json {
+    let (g, k, s) = b.shares();
+    Json::obj(vec![
+        ("gather_share", Json::Num(g)),
+        ("kernel_share", Json::Num(k)),
+        ("scatter_share", Json::Num(s)),
+        ("total_ns", Json::Num(b.total_ns() as f64)),
+    ])
+}
+
+/// Run the sweeps, print the throughput (and optional stage-breakdown)
+/// tables, write `BENCH_engine.json`, and return the rendered output.
+pub fn run(threads: &[usize], budget: Duration, stages: bool) -> String {
     let mut table = Table::new(
         "engine layer-matmul throughput (GMAC/s, noisy twin, IG+OG+LR column sparsity)",
     )
@@ -116,30 +200,82 @@ pub fn run(threads: &[usize], budget: Duration) -> String {
 
     // the seed path: single-thread scalar streaming with bool-mask
     // branching (pruned work is still paid for)
-    let ref_cells: Vec<(f64, f64)> =
-        SPARSITIES.iter().map(|&s| (s, bench_engine(s, 1, true, budget))).collect();
-    record(&mut results, "reference", 1, &ref_cells);
-    table.row(table_row("reference", 1, &ref_cells));
+    let ref_cells: Vec<(f64, f64)> = SPARSITIES
+        .iter()
+        .map(|&s| (s, bench_engine(SQUARE, s, 1, Path::Reference, budget)))
+        .collect();
+    record(&mut results, SQUARE, "reference", 1, &ref_cells);
+    table.row(table_row(SQUARE, "reference", 1, &ref_cells));
 
     let mut plan_4t_875 = None;
     for &t in threads {
-        let cells: Vec<(f64, f64)> =
-            SPARSITIES.iter().map(|&s| (s, bench_engine(s, t, false, budget))).collect();
-        record(&mut results, "planned", t, &cells);
+        let cells: Vec<(f64, f64)> = SPARSITIES
+            .iter()
+            .map(|&s| (s, bench_engine(SQUARE, s, t, Path::Cached, budget)))
+            .collect();
+        record(&mut results, SQUARE, "planned", t, &cells);
         if t == 4 {
             plan_4t_875 = cells.iter().find(|&&(s, _)| s > 0.8).map(|&(_, ns)| ns);
         }
-        table.row(table_row("planned", t, &cells));
+        table.row(table_row(SQUARE, "planned", t, &cells));
     }
 
-    // headline acceptance ratio: planned @ 4 threads + 87.5% sparsity vs
-    // the reference single-thread path at the same sparsity and dense
+    // tall-layer sweep (p = 8): the shared-panel cache removes an O(p×)
+    // gather/quantize redundancy, so cached-vs-uncached is the headline
+    // ratio ci/check_bench.py floors at 1.3×
+    let tall_hdr = format!("s={TALL_SPARSITY}");
+    let mut tall_table = Table::new(&format!(
+        "tall-layer sweep {}x{}x{} (p=8, s={TALL_SPARSITY}): shared-panel cache vs \
+         PR1-style single-pass",
+        TALL.0, TALL.1, TALL.2
+    ))
+    .header(&["path", "threads", tall_hdr.as_str()]);
+    let mut tall_ratio = None;
+    let mut tall = |path: Path, t: usize, results: &mut Vec<Json>| {
+        let ns = bench_engine(TALL, TALL_SPARSITY, t, path, budget);
+        // tall row names parallel the `stages` block's "cached" /
+        // "uncached" naming (with a `_tall` suffix), not the square
+        // sweep's legacy "planned" label
+        let name = if path == Path::Uncached { "uncached_tall" } else { "cached_tall" };
+        record(results, TALL, name, t, &[(TALL_SPARSITY, ns)]);
+        tall_table.row(vec![
+            name.to_string(),
+            t.to_string(),
+            format!("{:.2}", gmacs(TALL, ns)),
+        ]);
+        ns
+    };
+    let _ = tall(Path::Uncached, 1, &mut results);
+    let _ = tall(Path::Cached, 1, &mut results);
+    let un_4t = tall(Path::Uncached, TALL_THREADS, &mut results);
+    let ca_4t = tall(Path::Cached, TALL_THREADS, &mut results);
+    if ca_4t > 0.0 {
+        tall_ratio = Some(un_4t / ca_4t);
+    }
+
+    // headline acceptance ratios: planned @ 4 threads + 87.5% sparsity vs
+    // the reference single-thread path (same sparsity / dense), and the
+    // tall cached-vs-uncached panel-cache speedup
     let ref_875 = ref_cells.iter().find(|&&(s, _)| s > 0.8).map(|&(_, ns)| ns);
     let ref_dense = ref_cells.first().map(|&(_, ns)| ns);
     let mut extra = Vec::new();
-    if let (Some(plan_ns), Some(ref_ns), Some(dense_ns)) = (plan_4t_875, ref_875, ref_dense) {
+    if let (Some(plan_ns), Some(ref_ns), Some(dense_ns)) = (plan_4t_875, ref_875, ref_dense)
+    {
         extra.push(("speedup_4t_s875_vs_ref_s875", Json::Num(ref_ns / plan_ns)));
         extra.push(("speedup_4t_s875_vs_ref_dense", Json::Num(dense_ns / plan_ns)));
+    }
+    if let Some(ratio) = tall_ratio {
+        extra.push(("speedup_cached_vs_uncached_tall", Json::Num(ratio)));
+    }
+
+    let mut out = table.render();
+    out.push('\n');
+    out.push_str(&tall_table.render());
+    if let Some(ratio) = tall_ratio {
+        out.push_str(&format!(
+            "\ntall-layer panel-cache speedup (cached vs uncached, {TALL_THREADS}t): \
+             {ratio:.2}x\n"
+        ));
     }
 
     let mut pairs = vec![
@@ -147,22 +283,60 @@ pub fn run(threads: &[usize], budget: Duration) -> String {
         (
             "shape",
             Json::obj(vec![
-                ("out", Json::Num(OUT as f64)),
-                ("in", Json::Num(IN as f64)),
-                ("n_cols", Json::Num(N_COLS as f64)),
+                ("out", Json::Num(SQUARE.0 as f64)),
+                ("in", Json::Num(SQUARE.1 as f64)),
+                ("n_cols", Json::Num(SQUARE.2 as f64)),
+            ]),
+        ),
+        (
+            "tall_shape",
+            Json::obj(vec![
+                ("out", Json::Num(TALL.0 as f64)),
+                ("in", Json::Num(TALL.1 as f64)),
+                ("n_cols", Json::Num(TALL.2 as f64)),
             ]),
         ),
         ("results", Json::Arr(results)),
     ];
     pairs.extend(extra);
-    let json = Json::obj(pairs);
 
+    if stages {
+        // enough iterations to smooth scheduler noise, few enough to
+        // stay inside the smoke budget
+        let iters = 10;
+        let cached = measure_stages(Path::Cached, iters);
+        let uncached = measure_stages(Path::Uncached, iters);
+        pairs.push((
+            "stages",
+            Json::obj(vec![
+                ("cached", stages_json(&cached)),
+                ("uncached", stages_json(&uncached)),
+            ]),
+        ));
+        let mut st = Table::new(&format!(
+            "per-stage wall-time shares, tall shape @ {TALL_THREADS}t (n={iters})"
+        ))
+        .header(&["path", "gather/quantize", "kernel", "scatter"]);
+        for (name, b) in [("cached", &cached), ("uncached", &uncached)] {
+            let (g, k, s) = b.shares();
+            st.row(vec![
+                name.to_string(),
+                format!("{:.1}%", g * 100.0),
+                format!("{:.1}%", k * 100.0),
+                format!("{:.1}%", s * 100.0),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&st.render());
+    }
+
+    let json = Json::obj(pairs);
     let path = repo_root_file("BENCH_engine.json");
     match std::fs::write(&path, json.to_string()) {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
-    table.render()
+    out
 }
 
 #[cfg(test)]
@@ -178,5 +352,17 @@ mod tests {
         }
         let dense = column_mask(1, 1, 64, 64, 16, 0.0);
         assert_eq!(dense.chunks[0].active_cols(), 64);
+    }
+
+    #[test]
+    fn stage_breakdown_measures_all_three_stages() {
+        for path in [Path::Cached, Path::Uncached] {
+            let b = measure_stages(path, 1);
+            assert!(b.gather_ns > 0, "gather stage untimed");
+            assert!(b.kernel_ns > 0, "kernel stage untimed");
+            assert!(b.scatter_ns > 0, "scatter stage untimed");
+            let (g, k, s) = b.shares();
+            assert!((g + k + s - 1.0).abs() < 1e-9, "shares must sum to 1");
+        }
     }
 }

@@ -21,7 +21,10 @@
 use crate::config::AcceleratorConfig;
 use crate::coordinator::scheduler::Scheduler;
 use crate::devices::{DeviceLibrary, Mzi, MziSpec};
-use crate::exec::{parallel_map, ChunkPlan};
+use crate::exec::{
+    parallel_for_with, parallel_map, ChunkPlan, DisjointWriter, PanelCache, StageBreakdown,
+    StageTimes, WorkerArena,
+};
 use crate::nn::MatmulEngine;
 use crate::power::{EnergyAccumulator, EnergyReport, PowerModel};
 use crate::ptc::crossbar::{ColumnMode, ForwardOptions, ProgrammedPtc, PtcSimulator};
@@ -119,12 +122,35 @@ impl ProgrammedChunk {
     }
 }
 
+/// One distinct activation gather table within a chunk-column `qi`.
+/// Pass 1 of the two-pass matmul materializes one quantized panel per
+/// (group, column block); every chunk-row whose plan shares the table
+/// reads it read-only in pass 2, which is what removes the O(p×)
+/// re-gather/re-quantize redundancy of the single-pass path.
+struct PanelGroup {
+    /// Chunk-column this table gathers from.
+    qi: usize,
+    /// The shared gather table — bit-equal to `plan.cols` of every
+    /// member chunk. Valid across thermal rebakes: `realize_drifted`
+    /// perturbs `w_real` only, never the port gains `cols` derives from.
+    cols: Vec<u32>,
+}
+
 struct ProgrammedLayer {
     out_dim: usize,
     in_dim: usize,
     p: usize,
     q: usize,
     chunks: Vec<ProgrammedChunk>,
+    /// Distinct activation gather tables across the layer's chunks
+    /// (deduped per chunk-column at `program_layer` time). For uniform
+    /// column masks this has exactly `q` entries — one shared panel per
+    /// chunk-column regardless of `p`; fully heterogeneous masks
+    /// degenerate to one group per chunk (no redundancy to remove, and
+    /// none paid).
+    panel_groups: Vec<PanelGroup>,
+    /// Chunk index (`pi·q + qi`) → index into `panel_groups`.
+    group_of: Vec<usize>,
     w_scale: f64,
     n_waves: usize,
     /// 2 for protected layers (non-adjacent mapping halves occupancy).
@@ -193,6 +219,13 @@ pub struct PhotonicEngine {
     /// Monotone per-matmul-call counter; part of every noise-stream id so
     /// repeated calls draw independent noise while staying reproducible.
     noise_epoch: u64,
+    /// Shared activation-panel slab, reused (grow-only) across matmul
+    /// calls — the steady state allocates nothing but the output.
+    panels: PanelCache,
+    /// Per-stage wall-time accumulators (gather/kernel/scatter) behind
+    /// [`Self::set_stage_timing`]; zero overhead while disabled.
+    stage_times: StageTimes,
+    stage_timing: bool,
 }
 
 impl PhotonicEngine {
@@ -219,7 +252,24 @@ impl PhotonicEngine {
             rng,
             threads: 1,
             noise_epoch: 0,
+            panels: PanelCache::new(),
+            stage_times: StageTimes::new(),
+            stage_timing: false,
         }
+    }
+
+    /// Toggle per-stage (gather/kernel/scatter) wall-time accounting for
+    /// `scatter bench engine --stages`. Off by default: the hot loops
+    /// skip every clock read.
+    pub fn set_stage_timing(&mut self, on: bool) {
+        self.stage_timing = on;
+        let _ = self.stage_times.take(); // start from clean counters
+    }
+
+    /// Drain the per-stage timers accumulated since the last call (or
+    /// since [`Self::set_stage_timing`] enabled them).
+    pub fn take_stage_breakdown(&mut self) -> StageBreakdown {
+        self.stage_times.take()
     }
 
     /// Set the worker-thread count for the compiled execution path.
@@ -542,6 +592,32 @@ impl PhotonicEngine {
                 });
             }
         }
+        // dedupe the activation gather tables per chunk-column: every
+        // chunk-row whose plan shares a table will read one shared
+        // quantized panel per column block (matmul pass 1) instead of
+        // re-gathering it p times
+        let mut panel_groups: Vec<PanelGroup> = Vec::new();
+        let mut group_of = vec![0usize; chunks.len()];
+        for qi in 0..sched.q {
+            let mut local: Vec<usize> = Vec::new(); // this column's groups
+            for pi in 0..sched.p {
+                let idx = pi * sched.q + qi;
+                let cols_tbl = &chunks[idx].plan.cols;
+                let g = match local
+                    .iter()
+                    .copied()
+                    .find(|&g| panel_groups[g].cols == *cols_tbl)
+                {
+                    Some(g) => g,
+                    None => {
+                        panel_groups.push(PanelGroup { qi, cols: cols_tbl.clone() });
+                        local.push(panel_groups.len() - 1);
+                        panel_groups.len() - 1
+                    }
+                };
+                group_of[idx] = g;
+            }
+        }
         self.programmed.insert(
             layer.to_string(),
             ProgrammedLayer {
@@ -550,11 +626,33 @@ impl PhotonicEngine {
                 p: sched.p,
                 q: sched.q,
                 chunks,
+                panel_groups,
+                group_of,
                 w_scale: w_max,
                 n_waves: sched.n_waves(),
                 cycle_factor: if protected { 2 } else { 1 },
             },
         );
+    }
+
+    /// Per-call activation normalization scan, shared by all execution
+    /// paths and run only after the staleness check decided the call is
+    /// proceeding.
+    ///
+    /// **Unsigned-activation contract**: the twin intensity-encodes
+    /// activations, so negative values carry no light — they clip to
+    /// zero at the modulator (`(v / x_max).clamp(0.0, 1.0)`) and are
+    /// deliberately excluded from this scan (`fold` from `0.0`). An
+    /// all-zero (or all-negative) input therefore normalizes against the
+    /// `1e-12` floor and streams pure darkness: finite outputs, leakage
+    /// bias only. NaN activations are a caller bug the clamp would
+    /// silently swallow, hence the debug assertion.
+    fn activation_max(x: &[f64]) -> f64 {
+        debug_assert!(
+            x.iter().all(|v| !v.is_nan()),
+            "activations must not contain NaN"
+        );
+        x.iter().fold(0.0f64, |m, &v| m.max(v)).max(1e-12)
     }
 
     /// Record the energy for streaming `n_cols` activation columns
@@ -591,6 +689,11 @@ impl PhotonicEngine {
     ) -> Vec<f64> {
         assert_eq!(w.len(), out_dim * in_dim);
         assert_eq!(x.len(), in_dim * n_cols);
+        if out_dim == 0 || in_dim == 0 || n_cols == 0 {
+            // degenerate layer: the product is all zeros (empty when the
+            // output itself is empty) — nothing to program or meter
+            return vec![0.0; out_dim * n_cols];
+        }
         let stale = match self.programmed.get(layer) {
             Some(pl) => pl.out_dim != out_dim || pl.in_dim != in_dim,
             None => true,
@@ -599,8 +702,7 @@ impl PhotonicEngine {
             self.program_layer(layer, w, out_dim, in_dim);
         }
 
-        // activation normalization + quantization (per call)
-        let x_max = x.iter().fold(0.0f64, |m, &v| m.max(v)).max(1e-12);
+        let x_max = Self::activation_max(x);
         let aq = UnsignedQuant { bits: self.cfg.b_in, max: 1.0 };
         let (rows, cols) = self.cfg.chunk_shape();
         let (k1, k2) = (self.cfg.k1, self.cfg.k2);
@@ -656,20 +758,28 @@ impl PhotonicEngine {
         }
 
         Self::record_layer_energy(&mut self.energy, layer, pl, n_cols);
-        let _ = &pl.chunks[0].row_mask; // row gating already applied in blocks
         y
     }
-}
 
-impl MatmulEngine for PhotonicEngine {
-    /// Sparsity-compiled parallel execution: (chunk-row × column-block)
-    /// work items fan out over the worker pool; each item gathers +
-    /// quantizes the active input segments of a whole column block once,
-    /// then sweeps all its columns through each chunk's gain-folded panel
-    /// (`ChunkPlan::accumulate`) before moving on — panel-contiguous
-    /// access instead of the reference path's column-major strides, and
-    /// zero work on pruned rows/columns.
-    fn matmul(
+    /// The faithful **pre-PR4 (PR1-style) single-pass** compiled path:
+    /// (chunk-row × column-block) items that each gather + quantize
+    /// their own copy of the activation panel into a fresh `Vec`, sweep
+    /// it with the scalar branch-per-weight kernel
+    /// (`ChunkPlan::accumulate_scalar`), and get collected into a
+    /// `Vec<Vec<f64>>` before scattering on the caller. Every column
+    /// block's panel is thus materialized once *per chunk-row* — the
+    /// O(p×) redundancy (plus the scalar kernel and the allocation
+    /// churn) that the two-pass [`MatmulEngine::matmul`] removes.
+    ///
+    /// Kept (a) as the uncached baseline `scatter bench engine` measures
+    /// the zero-redundancy speedup ratio against
+    /// (`ci/bench_baseline.json` arms `speedup_cached_vs_uncached_tall`
+    /// at ≥ 1.3×), and (b) as the equivalence oracle: outputs equal the
+    /// cached path's for every thread count and feature set, PD noise
+    /// included — the noise streams are counter-based per (chunk,
+    /// column) and the kernels share per-element term order
+    /// (`rust/tests/exec_engine.rs`).
+    pub fn matmul_uncached(
         &mut self,
         layer: &str,
         w: &[f64],
@@ -680,8 +790,8 @@ impl MatmulEngine for PhotonicEngine {
     ) -> Vec<f64> {
         assert_eq!(w.len(), out_dim * in_dim);
         assert_eq!(x.len(), in_dim * n_cols);
-        if n_cols == 0 {
-            return Vec::new();
+        if out_dim == 0 || in_dim == 0 || n_cols == 0 {
+            return vec![0.0; out_dim * n_cols];
         }
         let stale = match self.programmed.get(layer) {
             Some(pl) => pl.out_dim != out_dim || pl.in_dim != in_dim,
@@ -692,7 +802,7 @@ impl MatmulEngine for PhotonicEngine {
         }
 
         // per-call context, copied out before borrowing the plan
-        let x_max = x.iter().fold(0.0f64, |m, &v| m.max(v)).max(1e-12);
+        let x_max = Self::activation_max(x);
         let aq = UnsignedQuant { bits: self.cfg.b_in, max: 1.0 };
         let quantize = self.opts.quantize;
         let (rows, cols) = self.cfg.chunk_shape();
@@ -700,19 +810,12 @@ impl MatmulEngine for PhotonicEngine {
         let threads = self.threads;
         let epoch = self.noise_epoch;
         self.noise_epoch = self.noise_epoch.wrapping_add(1);
+        let timing = self.stage_timing.then_some(&self.stage_times);
 
         let pl = self.programmed.get(layer).unwrap();
         let scale = pl.w_scale * x_max;
         let (p, q) = (pl.p, pl.q);
-
-        // column blocking: panel-contiguous sweeps, sized so the pool has
-        // a few items per worker to load-balance (block size never
-        // affects results — accumulation order per (row, column) is
-        // fixed, and noise streams are per column)
-        let target_items = (threads * 4).max(p);
-        let blocks_per_p = target_items.div_ceil(p).max(1);
-        let block_cols = n_cols.div_ceil(blocks_per_p).clamp(1, 64);
-        let n_cblocks = n_cols.div_ceil(block_cols);
+        let (block_cols, n_cblocks) = Self::column_blocking(threads, p, n_cols);
         let n_items = p * n_cblocks;
 
         let results: Vec<Vec<f64>> = parallel_map(threads, n_items, |item| {
@@ -724,8 +827,9 @@ impl MatmulEngine for PhotonicEngine {
             for qi in 0..q {
                 let chunk = &pl.chunks[pi * q + qi];
                 let plan = &chunk.plan;
-                // gather + normalize + quantize the active input
-                // segments for the whole column block at once
+                // every item re-gathers + re-quantizes its own panel —
+                // the redundancy the cached path exists to remove
+                let t0 = timing.map(|_| std::time::Instant::now());
                 xq.clear();
                 xq.resize(plan.n_active_cols() * bcols, 0.0);
                 for (ci, &j) in plan.cols.iter().enumerate() {
@@ -737,11 +841,16 @@ impl MatmulEngine for PhotonicEngine {
                         *d = if quantize { aq.quantize(v) } else { v };
                     }
                 }
-                plan.accumulate(&xq, bcols, &mut buf);
-                // hoisted PD noise, one draw per active chunk row from a
-                // counter-based per-(chunk, column) stream — bit-identical
-                // for any thread count or block partitioning
+                if let Some(st) = timing {
+                    st.add_gather(t0.expect("timer started").elapsed());
+                }
+                let t0 = timing.map(|_| std::time::Instant::now());
+                plan.accumulate_scalar(&xq, bcols, &mut buf);
+                if let Some(st) = timing {
+                    st.add_kernel(t0.expect("timer started").elapsed());
+                }
                 if plan.noise_std > 0.0 {
+                    let t0 = timing.map(|_| std::time::Instant::now());
                     let chunk_id = (pi * q + qi) as u64;
                     for t in 0..bcols {
                         let mut nrng = XorShiftRng::from_stream(
@@ -753,12 +862,16 @@ impl MatmulEngine for PhotonicEngine {
                                 nrng.gaussian_std(plan.noise_std);
                         }
                     }
+                    if let Some(st) = timing {
+                        st.add_scatter(t0.expect("timer started").elapsed());
+                    }
                 }
             }
             buf
         });
 
         // scatter the disjoint (chunk-row × column-block) regions into y
+        let t0 = timing.map(|_| std::time::Instant::now());
         let mut y = vec![0.0f64; out_dim * n_cols];
         for (item, buf) in results.iter().enumerate() {
             let pi = item / n_cblocks;
@@ -774,8 +887,178 @@ impl MatmulEngine for PhotonicEngine {
                 }
             }
         }
+        if let Some(st) = timing {
+            st.add_scatter(t0.expect("timer started").elapsed());
+        }
 
         Self::record_layer_energy(&mut self.energy, layer, pl, n_cols);
+        y
+    }
+
+    /// Column-blocking policy, shared verbatim by the cached and
+    /// uncached paths: panel-contiguous sweeps sized so the pool has a
+    /// few items per worker to load-balance. Block size never affects
+    /// results — accumulation order per (row, column) is fixed, and
+    /// noise streams are per column.
+    fn column_blocking(threads: usize, p: usize, n_cols: usize) -> (usize, usize) {
+        let target_items = (threads * 4).max(p);
+        let blocks_per_p = target_items.div_ceil(p).max(1);
+        let block_cols = n_cols.div_ceil(blocks_per_p).clamp(1, 64);
+        (block_cols, n_cols.div_ceil(block_cols))
+    }
+}
+
+impl MatmulEngine for PhotonicEngine {
+    /// Zero-redundancy two-pass execution. **Pass 1** materializes, once
+    /// per (distinct gather table, column block), the gathered +
+    /// normalized + quantized activation panel into the engine's shared
+    /// slab ([`PanelCache`]) — a (group × column-block) parallel fan-out
+    /// writing disjoint slab regions. **Pass 2** fans (chunk-row ×
+    /// column-block) items that read those panels read-only, sweep them
+    /// through each chunk's register-blocked weight panel
+    /// (`ChunkPlan::accumulate`), and scatter scaled results directly
+    /// into the preallocated output's disjoint (row-band × column-block)
+    /// regions — no per-item allocation (worker arenas), no result
+    /// collection.
+    ///
+    /// Equal to [`Self::matmul_uncached`] output-for-output at any
+    /// thread count: quantization is elementwise (pass-invariant), the
+    /// two kernels share per-element MAC term order, and PD noise comes
+    /// from counter-based per-(chunk, column) streams that never observe
+    /// the pass split.
+    fn matmul(
+        &mut self,
+        layer: &str,
+        w: &[f64],
+        x: &[f64],
+        out_dim: usize,
+        in_dim: usize,
+        n_cols: usize,
+    ) -> Vec<f64> {
+        assert_eq!(w.len(), out_dim * in_dim);
+        assert_eq!(x.len(), in_dim * n_cols);
+        if out_dim == 0 || in_dim == 0 || n_cols == 0 {
+            return vec![0.0; out_dim * n_cols];
+        }
+        let stale = match self.programmed.get(layer) {
+            Some(pl) => pl.out_dim != out_dim || pl.in_dim != in_dim,
+            None => true,
+        };
+        if stale {
+            self.program_layer(layer, w, out_dim, in_dim);
+        }
+
+        // per-call context, copied out before borrowing the plan
+        let x_max = Self::activation_max(x);
+        let aq = UnsignedQuant { bits: self.cfg.b_in, max: 1.0 };
+        let quantize = self.opts.quantize;
+        let (rows, cols) = self.cfg.chunk_shape();
+        let seed = self.cfg.noise_seed;
+        let threads = self.threads;
+        let epoch = self.noise_epoch;
+        self.noise_epoch = self.noise_epoch.wrapping_add(1);
+        let timing = self.stage_timing.then_some(&self.stage_times);
+        let mut panels = std::mem::take(&mut self.panels);
+
+        let pl = self.programmed.get(layer).unwrap();
+        let scale = pl.w_scale * x_max;
+        let (p, q) = (pl.p, pl.q);
+        let (block_cols, n_cblocks) = Self::column_blocking(threads, p, n_cols);
+
+        // ---- pass 1: shared quantized-activation panels, one per
+        // (gather-table group, column block) ----
+        panels.prepare(pl.panel_groups.iter().map(|g| g.cols.len() * n_cols));
+        {
+            let (offsets, slab) = panels.parts_mut();
+            let writer = DisjointWriter::new(slab);
+            let n_pitems = pl.panel_groups.len() * n_cblocks;
+            parallel_for_with(threads, n_pitems, || (), |item, _| {
+                let g = item / n_cblocks;
+                let col0 = (item % n_cblocks) * block_cols;
+                let bcols = block_cols.min(n_cols - col0);
+                let grp = &pl.panel_groups[g];
+                let nc = grp.cols.len();
+                let t0 = timing.map(|_| std::time::Instant::now());
+                // SAFETY: group panels are disjoint slab ranges (prefix-
+                // sum offsets) and column blocks partition each panel,
+                // so every item owns its range exclusively
+                let panel = unsafe { writer.slice_mut(offsets[g] + nc * col0, nc * bcols) };
+                for (ci, &j) in grp.cols.iter().enumerate() {
+                    let gj = grp.qi * cols + j as usize;
+                    let src = &x[gj * n_cols + col0..gj * n_cols + col0 + bcols];
+                    let dst = &mut panel[ci * bcols..(ci + 1) * bcols];
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        let v = (v / x_max).clamp(0.0, 1.0);
+                        *d = if quantize { aq.quantize(v) } else { v };
+                    }
+                }
+                if let Some(st) = timing {
+                    st.add_gather(t0.expect("timer started").elapsed());
+                }
+            });
+        }
+
+        // ---- pass 2: accumulate + direct scatter, panels read-only ----
+        let (offsets, slab) = panels.parts();
+        let mut y = vec![0.0f64; out_dim * n_cols];
+        let writer = DisjointWriter::new(&mut y);
+        let n_items = p * n_cblocks;
+        parallel_for_with(threads, n_items, WorkerArena::new, |item, arena| {
+            let pi = item / n_cblocks;
+            let col0 = (item % n_cblocks) * block_cols;
+            let bcols = block_cols.min(n_cols - col0);
+            let buf = arena.zeroed(rows * bcols);
+            for qi in 0..q {
+                let idx = pi * q + qi;
+                let plan = &pl.chunks[idx].plan;
+                let nc = plan.n_active_cols();
+                let xq = &slab[offsets[pl.group_of[idx]] + nc * col0..][..nc * bcols];
+                let t0 = timing.map(|_| std::time::Instant::now());
+                plan.accumulate(xq, bcols, buf);
+                if let Some(st) = timing {
+                    st.add_kernel(t0.expect("timer started").elapsed());
+                }
+                // hoisted PD noise, one draw per active chunk row from a
+                // counter-based per-(chunk, column) stream — bit-identical
+                // for any thread count, block partitioning, or pass split
+                if plan.noise_std > 0.0 {
+                    let t0 = timing.map(|_| std::time::Instant::now());
+                    let chunk_id = idx as u64;
+                    for t in 0..bcols {
+                        let mut nrng = XorShiftRng::from_stream(
+                            seed,
+                            &[epoch, chunk_id, (col0 + t) as u64],
+                        );
+                        for &row in &plan.rows {
+                            buf[row as usize * bcols + t] +=
+                                nrng.gaussian_std(plan.noise_std);
+                        }
+                    }
+                    if let Some(st) = timing {
+                        st.add_scatter(t0.expect("timer started").elapsed());
+                    }
+                }
+            }
+            // direct scatter: this item exclusively owns output rows
+            // [pi·rows, pi·rows + row_limit) × columns [col0, col0+bcols)
+            let t0 = timing.map(|_| std::time::Instant::now());
+            let row_limit = rows.min(out_dim - pi * rows);
+            for i in 0..row_limit {
+                let gi = pi * rows + i;
+                // SAFETY: (row-band × column-block) regions are pairwise
+                // disjoint across items
+                let dst = unsafe { writer.slice_mut(gi * n_cols + col0, bcols) };
+                for (d, &v) in dst.iter_mut().zip(&buf[i * bcols..(i + 1) * bcols]) {
+                    *d = v * scale;
+                }
+            }
+            if let Some(st) = timing {
+                st.add_scatter(t0.expect("timer started").elapsed());
+            }
+        });
+
+        Self::record_layer_energy(&mut self.energy, layer, pl, n_cols);
+        self.panels = panels;
         y
     }
 }

@@ -1,0 +1,220 @@
+//! Allocation-free steady-state support for the compiled execution
+//! path: per-worker scratch arenas, the shared activation-panel cache,
+//! and the per-stage wall-time instrumentation behind
+//! `scatter bench engine --stages`.
+//!
+//! The PR1 execution loop allocated a fresh `vec![0.0; rows*bcols]`
+//! accumulator (plus an `xq` gather buffer) per work item and collected
+//! every item's buffer into a `Vec<Vec<f64>>` before scattering. With
+//! the panel cache ([`PanelCache`]) the gather buffers become shared
+//! read-only slabs materialized once per (gather-table, column-block),
+//! and with [`WorkerArena`] each pool worker reuses one accumulator slab
+//! across all the items it claims — the steady-state hot path performs
+//! no heap allocation beyond the returned output vector.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Per-worker scratch, created once per [`parallel_for_with`] worker and
+/// reused across every item that worker claims.
+///
+/// The activation panels are *not* in here: those are shared read-only
+/// across workers via [`PanelCache`], which is what removes the O(p×)
+/// re-gather redundancy.
+///
+/// [`parallel_for_with`]: crate::exec::parallel_for_with
+#[derive(Default)]
+pub struct WorkerArena {
+    buf: Vec<f64>,
+}
+
+impl WorkerArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zeroed accumulator slab of exactly `len`, reusing the worker's
+    /// allocation (grow-only: the slab keeps the largest size seen).
+    pub fn zeroed(&mut self, len: usize) -> &mut [f64] {
+        if self.buf.len() < len {
+            self.buf.resize(len, 0.0);
+        }
+        let slab = &mut self.buf[..len];
+        slab.fill(0.0);
+        slab
+    }
+}
+
+/// The shared quantized-activation panel cache: one flat slab holding,
+/// per (distinct gather table, call), a `cols.len() × n_cols` panel in
+/// column-blocked layout, plus the per-group offsets into it.
+///
+/// Layout: group `g`'s panel occupies
+/// `slab[offsets[g] .. offsets[g] + cols_len(g) · n_cols]`; within it,
+/// the column block starting at `col0` with `bcols` columns is the
+/// contiguous sub-slice at `offsets[g] + cols_len(g) · col0`, packed
+/// `ci · bcols + t` — exactly the `xq` layout
+/// [`ChunkPlan::accumulate`](crate::exec::ChunkPlan::accumulate)
+/// consumes, so pass 2 reads panels with zero copies.
+///
+/// The slab is owned by the engine and reused across matmul calls
+/// (grow-only); `prepare` never zeroes it because pass 1 overwrites
+/// every region pass 2 reads.
+#[derive(Default)]
+pub struct PanelCache {
+    slab: Vec<f64>,
+    offsets: Vec<usize>,
+}
+
+impl PanelCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size the slab for one call: `group_sizes` yields each group's
+    /// total panel length (`cols.len() · n_cols`). Returns nothing; read
+    /// back via [`Self::offset`] / [`Self::slab_mut`].
+    pub fn prepare(&mut self, group_sizes: impl Iterator<Item = usize>) {
+        self.offsets.clear();
+        let mut total = 0usize;
+        for len in group_sizes {
+            self.offsets.push(total);
+            total += len;
+        }
+        if self.slab.len() < total {
+            self.slab.resize(total, 0.0);
+        }
+    }
+
+    /// Slab offset of group `g`'s panel.
+    pub fn offset(&self, g: usize) -> usize {
+        self.offsets[g]
+    }
+
+    /// Per-group offsets + the whole slab, mutable — pass 1 writes
+    /// disjoint regions through a
+    /// [`DisjointWriter`](crate::exec::DisjointWriter) over the slab
+    /// while indexing by offset.
+    pub fn parts_mut(&mut self) -> (&[usize], &mut [f64]) {
+        (&self.offsets, &mut self.slab)
+    }
+
+    /// Per-group offsets + the slab, read-only (pass 2).
+    pub fn parts(&self) -> (&[usize], &[f64]) {
+        (&self.offsets, &self.slab)
+    }
+}
+
+/// Cumulative per-stage wall time of the execution path, accumulated
+/// across pool workers with relaxed atomics. Zero-cost when the engine's
+/// stage timing is off (the hot loops skip the `Instant` reads
+/// entirely); when on, enables the gather/kernel/scatter breakdown in
+/// `BENCH_engine.json` (EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct StageTimes {
+    gather_ns: AtomicU64,
+    kernel_ns: AtomicU64,
+    scatter_ns: AtomicU64,
+}
+
+impl StageTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_gather(&self, d: Duration) {
+        self.gather_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_kernel(&self, d: Duration) {
+        self.kernel_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_scatter(&self, d: Duration) {
+        self.scatter_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Drain the counters into a snapshot (resets to zero).
+    pub fn take(&self) -> StageBreakdown {
+        StageBreakdown {
+            gather_ns: self.gather_ns.swap(0, Ordering::Relaxed),
+            kernel_ns: self.kernel_ns.swap(0, Ordering::Relaxed),
+            scatter_ns: self.scatter_ns.swap(0, Ordering::Relaxed),
+        }
+    }
+}
+
+/// A drained stage-time snapshot. `gather` is activation gather +
+/// normalize + quantize, `kernel` is the panel micro-kernel (bias + FMA
+/// sweeps), `scatter` is PD-noise injection + the scaled write into the
+/// output matrix.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageBreakdown {
+    pub gather_ns: u64,
+    pub kernel_ns: u64,
+    pub scatter_ns: u64,
+}
+
+impl StageBreakdown {
+    pub fn total_ns(&self) -> u64 {
+        self.gather_ns + self.kernel_ns + self.scatter_ns
+    }
+
+    /// (gather, kernel, scatter) shares of the summed stage time;
+    /// all-zero when nothing was recorded.
+    pub fn shares(&self) -> (f64, f64, f64) {
+        let total = self.total_ns() as f64;
+        if total <= 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (
+            self.gather_ns as f64 / total,
+            self.kernel_ns as f64 / total,
+            self.scatter_ns as f64 / total,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_reuses_and_zeroes() {
+        let mut a = WorkerArena::new();
+        let s = a.zeroed(8);
+        s.fill(3.0);
+        let ptr = a.buf.as_ptr();
+        let s = a.zeroed(4);
+        assert!(s.iter().all(|&v| v == 0.0), "slab must come back zeroed");
+        assert_eq!(s.len(), 4);
+        assert_eq!(a.buf.as_ptr(), ptr, "shrinking request must not reallocate");
+        assert_eq!(a.zeroed(16).len(), 16, "growing request resizes");
+    }
+
+    #[test]
+    fn panel_cache_offsets_are_prefix_sums() {
+        let mut c = PanelCache::new();
+        c.prepare([6usize, 0, 10].into_iter());
+        assert_eq!(c.offset(0), 0);
+        assert_eq!(c.offset(1), 6);
+        assert_eq!(c.offset(2), 6);
+        assert!(c.parts().1.len() >= 16);
+        let grown = c.parts().1.len();
+        c.prepare([2usize].into_iter());
+        assert_eq!(c.parts().1.len(), grown, "slab is grow-only across calls");
+    }
+
+    #[test]
+    fn stage_times_accumulate_and_drain() {
+        let st = StageTimes::new();
+        st.add_gather(Duration::from_nanos(10));
+        st.add_kernel(Duration::from_nanos(30));
+        st.add_scatter(Duration::from_nanos(60));
+        let b = st.take();
+        assert_eq!(b.total_ns(), 100);
+        let (g, k, s) = b.shares();
+        assert!((g - 0.1).abs() < 1e-12 && (k - 0.3).abs() < 1e-12 && (s - 0.6).abs() < 1e-12);
+        assert_eq!(st.take().total_ns(), 0, "drained");
+    }
+}

@@ -1,0 +1,297 @@
+//! Register-blocked panel micro-kernel over a row-run-packed weight
+//! panel.
+//!
+//! [`ChunkPlan::accumulate`](crate::exec::ChunkPlan::accumulate) used to
+//! sweep the gain-folded panel one row at a time with an
+//! `if wv == 0.0 { continue }` branch per weight — every output row
+//! re-streamed the whole `xq` panel from memory, and quantized-to-zero
+//! weights still cost control flow. [`PackedPanel`] compiles the panel
+//! once (at `ChunkPlan::from_blocks` time) into the shape the hot loop
+//! wants:
+//!
+//! * **4-row register tiles** — exec rows are grouped into quads; the
+//!   inner loop loads each `xq` row once and FMAs it into four
+//!   accumulator rows, quartering the activation-panel traffic;
+//! * **row-run packing** — per quad, maximal column runs where at least
+//!   one of the four rows is nonzero are recorded as `(col0, len)` runs
+//!   with their weights packed contiguously (`[w0 w1 w2 w3]` per
+//!   column), so all-zero column spans are compiled out and the inner
+//!   loop is branch-free FMA over contiguous `w` and `xq`;
+//! * **scalar tail** — the `nrows % 4` leftover rows keep the
+//!   one-row-at-a-time sweep (dense, zero-skipping), bounding the
+//!   padding waste at zero.
+//!
+//! Numerical contract: for every output element the MAC terms are added
+//! in ascending active-column order, exactly like the scalar sweep, so
+//! planned-vs-reference equivalence is preserved across all mask modes
+//! (asserted in `rust/tests/exec_engine.rs`). The only difference is
+//! that a quad adds `0.0 · x` terms for columns where *some* of its four
+//! rows are zero — an exact no-op for finite activations.
+
+/// One maximal nonzero column run of a 4-row quad.
+#[derive(Debug, Clone)]
+struct Run {
+    /// First panel column of the run.
+    col0: u32,
+    /// Number of consecutive columns.
+    len: u32,
+    /// Offset of the run's packed weights in `w_packed`
+    /// (`len × 4` values, column-major: `[ci][row_in_quad]`).
+    w_off: u32,
+}
+
+/// A weight panel packed for the register-blocked kernel. Logical shape
+/// is `nrows × ncols` (exec rows × active columns), identical to the
+/// dense panel it was packed from.
+#[derive(Debug, Clone, Default)]
+pub struct PackedPanel {
+    nrows: usize,
+    ncols: usize,
+    /// Per full quad: `(offset, count)` into `runs`.
+    quads: Vec<(u32, u32)>,
+    runs: Vec<Run>,
+    /// Packed quad weights, run-major; within a run, `[ci][0..4]`.
+    w_packed: Vec<f64>,
+    /// Dense scalar-tail rows (`nrows % 4` of them), row-major `ncols`.
+    tail: Vec<f64>,
+}
+
+impl PackedPanel {
+    /// Pack a dense row-major `nrows × ncols` panel.
+    pub fn pack(w: &[f64], nrows: usize, ncols: usize) -> Self {
+        assert_eq!(w.len(), nrows * ncols);
+        let nquads = nrows / 4;
+        let mut quads = Vec::with_capacity(nquads);
+        let mut runs = Vec::new();
+        let mut w_packed = Vec::new();
+        for qd in 0..nquads {
+            let base = qd * 4;
+            let run0 = runs.len() as u32;
+            let mut ci = 0;
+            while ci < ncols {
+                // skip columns where the whole quad is zero
+                let live =
+                    |ci: usize| (0..4).any(|k| w[(base + k) * ncols + ci] != 0.0);
+                if !live(ci) {
+                    ci += 1;
+                    continue;
+                }
+                let col0 = ci;
+                let w_off = w_packed.len() as u32;
+                while ci < ncols && live(ci) {
+                    for k in 0..4 {
+                        w_packed.push(w[(base + k) * ncols + ci]);
+                    }
+                    ci += 1;
+                }
+                runs.push(Run { col0: col0 as u32, len: (ci - col0) as u32, w_off });
+            }
+            quads.push((run0, runs.len() as u32 - run0));
+        }
+        let tail = w[nquads * 4 * ncols..].to_vec();
+        Self { nrows, ncols, quads, runs, w_packed, tail }
+    }
+
+    /// Logical (rows, cols) of the packed panel.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    /// Panel columns the quad kernel actually visits (Σ run lengths over
+    /// all quads) — all-zero spans are compiled out of this count.
+    pub fn packed_cols(&self) -> usize {
+        self.runs.iter().map(|r| r.len as usize).sum()
+    }
+
+    /// Accumulate `panel × xq` into `buf`.
+    ///
+    /// `xq` is the activation panel, `ncols × bcols` row-major. `rows`
+    /// maps exec row `ri` to its destination row in `buf` (chunk-local,
+    /// stride `bcols`, strictly ascending — the [`ChunkPlan`] gather
+    /// table).
+    ///
+    /// [`ChunkPlan`]: crate::exec::ChunkPlan
+    pub fn accumulate(&self, xq: &[f64], bcols: usize, buf: &mut [f64], rows: &[u32]) {
+        debug_assert_eq!(rows.len(), self.nrows);
+        debug_assert_eq!(xq.len(), self.ncols * bcols);
+        let nquads = self.nrows / 4;
+        for (qd, &(run0, nruns)) in self.quads.iter().enumerate() {
+            let r = [
+                rows[qd * 4] as usize,
+                rows[qd * 4 + 1] as usize,
+                rows[qd * 4 + 2] as usize,
+                rows[qd * 4 + 3] as usize,
+            ];
+            let [d0, d1, d2, d3] = four_rows(buf, bcols, r);
+            for run in &self.runs[run0 as usize..(run0 + nruns) as usize] {
+                let mut wo = run.w_off as usize;
+                for ci in run.col0 as usize..(run.col0 + run.len) as usize {
+                    let xrow = &xq[ci * bcols..ci * bcols + bcols];
+                    let (w0, w1, w2, w3) = (
+                        self.w_packed[wo],
+                        self.w_packed[wo + 1],
+                        self.w_packed[wo + 2],
+                        self.w_packed[wo + 3],
+                    );
+                    wo += 4;
+                    for t in 0..bcols {
+                        let xv = xrow[t];
+                        d0[t] += w0 * xv;
+                        d1[t] += w1 * xv;
+                        d2[t] += w2 * xv;
+                        d3[t] += w3 * xv;
+                    }
+                }
+            }
+        }
+        // scalar tail: the 0..3 rows a quad cannot cover
+        for ri in nquads * 4..self.nrows {
+            let row = rows[ri] as usize;
+            let dst = &mut buf[row * bcols..row * bcols + bcols];
+            let wrow = &self.tail[(ri - nquads * 4) * self.ncols..][..self.ncols];
+            for (ci, &wv) in wrow.iter().enumerate() {
+                if wv == 0.0 {
+                    continue;
+                }
+                let xrow = &xq[ci * bcols..(ci + 1) * bcols];
+                for (d, &xv) in dst.iter_mut().zip(xrow) {
+                    *d += wv * xv;
+                }
+            }
+        }
+    }
+}
+
+/// Split four disjoint `bcols`-wide destination rows out of `buf`
+/// (row offsets strictly ascending), all exactly `bcols` long so the
+/// kernel's bounds checks vanish in release builds.
+fn four_rows(buf: &mut [f64], bcols: usize, r: [usize; 4]) -> [&mut [f64]; 4] {
+    debug_assert!(r[0] < r[1] && r[1] < r[2] && r[2] < r[3]);
+    let (a, rest) = buf.split_at_mut(r[1] * bcols);
+    let (b, rest) = rest.split_at_mut((r[2] - r[1]) * bcols);
+    let (c, d) = rest.split_at_mut((r[3] - r[2]) * bcols);
+    [
+        &mut a[r[0] * bcols..(r[0] + 1) * bcols],
+        &mut b[..bcols],
+        &mut c[..bcols],
+        &mut d[..bcols],
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShiftRng;
+
+    /// The scalar oracle: one row at a time, zero-skipping — the exact
+    /// pre-PR4 `ChunkPlan::accumulate` inner sweep.
+    fn naive(
+        w: &[f64],
+        ncols: usize,
+        xq: &[f64],
+        bcols: usize,
+        buf: &mut [f64],
+        rows: &[u32],
+    ) {
+        for (ri, &row) in rows.iter().enumerate() {
+            let dst = &mut buf[row as usize * bcols..row as usize * bcols + bcols];
+            let wrow = &w[ri * ncols..(ri + 1) * ncols];
+            for (ci, &wv) in wrow.iter().enumerate() {
+                if wv == 0.0 {
+                    continue;
+                }
+                let xrow = &xq[ci * bcols..(ci + 1) * bcols];
+                for (d, &xv) in dst.iter_mut().zip(xrow) {
+                    *d += wv * xv;
+                }
+            }
+        }
+    }
+
+    fn random_panel(
+        nrows: usize,
+        ncols: usize,
+        zero_frac: f64,
+        rng: &mut XorShiftRng,
+    ) -> Vec<f64> {
+        (0..nrows * ncols)
+            .map(|_| {
+                if rng.uniform() < zero_frac {
+                    0.0
+                } else {
+                    rng.uniform() * 2.0 - 1.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn packed_kernel_matches_scalar_sweep() {
+        let mut rng = XorShiftRng::new(42);
+        for &(nrows, ncols) in
+            &[(0, 5), (1, 7), (3, 4), (4, 9), (5, 1), (8, 16), (11, 13), (16, 64)]
+        {
+            for &bcols in &[1usize, 2, 5, 8] {
+                for &zero_frac in &[0.0, 0.3, 0.9] {
+                    let w = random_panel(nrows, ncols, zero_frac, &mut rng);
+                    // sparse ascending destination-row table with gaps
+                    let rows: Vec<u32> = (0..nrows as u32).map(|i| i * 2 + 1).collect();
+                    let buf_rows = nrows * 2 + 2;
+                    let mut xq = vec![0.0; ncols * bcols];
+                    rng.fill_uniform(&mut xq, 0.0, 1.0);
+
+                    let mut want = vec![0.0; buf_rows * bcols];
+                    naive(&w, ncols, &xq, bcols, &mut want, &rows);
+
+                    let panel = PackedPanel::pack(&w, nrows, ncols);
+                    assert_eq!(panel.dims(), (nrows, ncols));
+                    let mut got = vec![0.0; buf_rows * bcols];
+                    panel.accumulate(&xq, bcols, &mut got, &rows);
+
+                    for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+                        assert!(
+                            (g - w_).abs() < 1e-12,
+                            "{nrows}x{ncols} b={bcols} z={zero_frac} idx {i}: {g} vs {w_}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_column_spans_are_compiled_out() {
+        // 4 rows × 16 cols with columns 4..12 all-zero: one quad, two
+        // runs, and the packed column count excludes the dead span
+        let mut w = vec![1.0; 4 * 16];
+        for row in 0..4 {
+            for ci in 4..12 {
+                w[row * 16 + ci] = 0.0;
+            }
+        }
+        let panel = PackedPanel::pack(&w, 4, 16);
+        assert_eq!(panel.quads.len(), 1);
+        assert_eq!(panel.quads[0].1, 2, "two runs around the zero span");
+        assert_eq!(panel.packed_cols(), 8, "8 of 16 columns survive packing");
+    }
+
+    #[test]
+    fn all_zero_panel_has_no_runs() {
+        let w = vec![0.0; 8 * 6];
+        let panel = PackedPanel::pack(&w, 8, 6);
+        assert_eq!(panel.packed_cols(), 0);
+        let xq = vec![1.0; 6 * 3];
+        let rows: Vec<u32> = (0..8).collect();
+        let mut buf = vec![0.0; 8 * 3];
+        panel.accumulate(&xq, 3, &mut buf, &rows);
+        assert!(buf.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn empty_panel_is_a_noop() {
+        let panel = PackedPanel::pack(&[], 0, 0);
+        assert_eq!(panel.dims(), (0, 0));
+        let mut buf: Vec<f64> = Vec::new();
+        panel.accumulate(&[], 1, &mut buf, &[]);
+    }
+}

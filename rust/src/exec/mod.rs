@@ -1,23 +1,39 @@
 //! Sparsity-compiled parallel execution layer.
 //!
 //! SCATTER's premise is that pruned rows/columns cost *nothing* — this
-//! module makes the digital twin honor that at execution time:
+//! module makes the digital twin honor that at execution time, and (as
+//! of PR 4) that sparsity bookkeeping is paid **once**, never per MAC:
 //!
 //! * [`plan`] — per-chunk [`ChunkPlan`]s compiled once at programming
-//!   time: active-index gather tables and gain-folded dense weight
-//!   panels, so the streamed matvec does zero mask branching and skips
-//!   pruned work entirely;
-//! * [`pool`] — a std-only scoped worker pool ([`parallel_map`]) that
-//!   partitions (chunk-row × column-block) work items across threads.
+//!   time: active-index gather tables and gain-folded weight panels, so
+//!   the streamed matvec does zero mask branching and skips pruned work
+//!   entirely;
+//! * [`kernel`] — the register-blocked [`PackedPanel`] micro-kernel the
+//!   panels compile into: 4-row quads × nonzero column runs, branch-free
+//!   FMA over contiguous `w` and `xq`;
+//! * [`arena`] — allocation-free steady state: per-worker scratch
+//!   ([`WorkerArena`]), the shared quantized-activation panel cache
+//!   ([`PanelCache`]) that removes the O(p×) per-chunk-row re-gather
+//!   redundancy, and the stage-time instrumentation ([`StageTimes`])
+//!   behind `scatter bench engine --stages`;
+//! * [`pool`] — a std-only scoped worker pool: [`parallel_map`]
+//!   (collects results by index) and [`parallel_for_with`] (worker-local
+//!   scratch + direct disjoint-region output via [`DisjointWriter`]).
 //!
 //! Determinism contract: programming is sequential, and all per-cycle
 //! noise is drawn from counter-based per-(chunk, column) RNG streams
 //! ([`crate::util::XorShiftRng::from_stream`]), so engine outputs are
-//! bit-identical for any worker count — asserted in
+//! bit-identical for any worker count **and** for any split of the work
+//! into passes — the two-pass shared-panel path and the single-pass
+//! uncached path produce the same bits — asserted in
 //! `rust/tests/exec_engine.rs`.
 
+pub mod arena;
+pub mod kernel;
 pub mod plan;
 pub mod pool;
 
+pub use arena::{PanelCache, StageBreakdown, StageTimes, WorkerArena};
+pub use kernel::PackedPanel;
 pub use plan::ChunkPlan;
-pub use pool::{parallel_map, partition_ranges};
+pub use pool::{parallel_for_with, parallel_map, partition_ranges, DisjointWriter};

@@ -13,9 +13,11 @@
 //!   port gain is nonzero (input gating / LR folded in; under
 //!   `ColumnMode::PruneOnly` every in-range column stays, because pruned
 //!   paths physically leak `δw·x`);
-//! * **gain-folded weight panel** — `w[ri][ci] = w_real · u_gain · lr_gain`,
-//!   packed dense over (rows × cols), so the hot loop is a branch-free
-//!   panel GEMM that skips pruned work entirely;
+//! * **gain-folded weight panel** — `w[ri][ci] = w_real · u_gain · lr_gain`
+//!   over (rows × cols), register-block-packed for the
+//!   [`PackedPanel`](crate::exec::kernel::PackedPanel) micro-kernel
+//!   (4-row quads × nonzero column runs), so the hot loop is a
+//!   branch-free panel GEMM that skips pruned work entirely;
 //! * **constant leakage bias** — input-gated columns leak the
 //!   extinction-ratio floor of the CW carrier *independently of the
 //!   activation* (Eq. 13); that whole term collapses to one per-row
@@ -30,20 +32,32 @@
 //! grid-padding columns, which legacy streams as x = 0 but which still
 //! leak their floor).
 
+use crate::exec::kernel::PackedPanel;
 use crate::ptc::crossbar::ProgrammedPtc;
 
 /// A compiled execution plan for one `rk1 × ck2` programmed chunk.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ChunkPlan {
     /// Chunk-local output rows to compute (active under output gating and
     /// within the layer's `out_dim`), ascending.
     pub rows: Vec<u32>,
     /// Chunk-local input columns with nonzero port gain (and within the
     /// layer's `in_dim`), ascending. Gather indices into the activation
-    /// panel.
+    /// panel. Invariant under thermal re-realization
+    /// (`ProgrammedPtc::realize_drifted` perturbs `w_real` only), which
+    /// is what lets the engine's shared-panel groups survive per-chunk
+    /// recalibration without re-derivation.
     pub cols: Vec<u32>,
-    /// Gain-folded realized weights, row-major `rows.len() × cols.len()`.
+    /// Gain-folded realized weights, row-major `rows.len() × cols.len()`
+    /// — the dense panel [`Self::accumulate_scalar`] (the pre-PR4
+    /// baseline path) sweeps. Deliberately kept alongside the packed
+    /// copy: ~`rows·cols·8 B` per chunk, small next to the programmed
+    /// blocks' realized state, and it keeps the bench baseline and the
+    /// equivalence oracle runnable on any engine.
     pub w: Vec<f64>,
+    /// The same weights packed for the register-blocked micro-kernel
+    /// (4-row quads × nonzero column runs; see [`PackedPanel`]).
+    pub panel: PackedPanel,
     /// Per-exec-row constant leakage term (already LR-rescaled).
     pub bias: Vec<f64>,
     /// True if any bias entry is nonzero (skip the add otherwise).
@@ -69,6 +83,11 @@ impl ChunkPlan {
         noise_std: f64,
     ) -> Self {
         assert_eq!(blocks.len(), r * c, "chunk must hold r*c programmed blocks");
+        if blocks.is_empty() {
+            // degenerate layer (out_dim or in_dim of 0 schedules no
+            // blocks): an empty plan, not a blocks[0] panic
+            return Self { noise_std, ..Self::default() };
+        }
         let (k1, k2) = (blocks[0].k1, blocks[0].k2);
         assert!(row_limit <= r * k1 && col_limit <= c * k2);
 
@@ -123,7 +142,8 @@ impl ChunkPlan {
             any_bias |= acc != 0.0;
         }
 
-        Self { rows, cols, w, bias, any_bias, noise_std }
+        let panel = PackedPanel::pack(&w, rows.len(), cols.len());
+        Self { rows, cols, w, panel, bias, any_bias, noise_std }
     }
 
     /// Active input columns (the gather count per streamed column block).
@@ -137,10 +157,35 @@ impl ChunkPlan {
     ///
     /// `xq` is the gathered + normalized + quantized activation panel:
     /// `cols.len() × bcols`, row-major — i.e. `xq[ci*bcols + t]` is active
-    /// column `cols[ci]` of streamed column `t`. The inner sweep is
-    /// panel-contiguous on both `w` and `xq`: zero branches, zero gather
-    /// indirection.
+    /// column `cols[ci]` of streamed column `t`. The bias adds first (one
+    /// constant per active row), then the register-blocked
+    /// [`PackedPanel`] micro-kernel sweeps 4-row quads over contiguous
+    /// `w`/`xq` runs: zero branches, zero gather indirection, and each
+    /// `xq` row loaded once per quad instead of once per row.
     pub fn accumulate(&self, xq: &[f64], bcols: usize, buf: &mut [f64]) {
+        debug_assert_eq!(xq.len(), self.cols.len() * bcols);
+        if self.any_bias {
+            for (ri, &row) in self.rows.iter().enumerate() {
+                let dst = &mut buf[row as usize * bcols..row as usize * bcols + bcols];
+                let b = self.bias[ri];
+                for v in dst.iter_mut() {
+                    *v += b;
+                }
+            }
+        }
+        self.panel.accumulate(xq, bcols, buf, &self.rows);
+    }
+
+    /// The pre-PR4 scalar sweep: one row at a time over the dense panel
+    /// with an `if wv == 0.0 { continue }` branch per weight. Kept as
+    /// the faithful PR1 execution for
+    /// `PhotonicEngine::matmul_uncached` (bench baseline + equivalence
+    /// oracle). Value-identical to [`Self::accumulate`]: both add the
+    /// nonzero MAC terms of every output element in ascending
+    /// active-column order — the register-blocked kernel merely also
+    /// adds exact `0·x` no-ops where a 4-row quad straddles a zero
+    /// weight (at worst flipping a zero's sign, invisible to `==`).
+    pub fn accumulate_scalar(&self, xq: &[f64], bcols: usize, buf: &mut [f64]) {
         let nc = self.cols.len();
         debug_assert_eq!(xq.len(), nc * bcols);
         for (ri, &row) in self.rows.iter().enumerate() {
@@ -320,5 +365,45 @@ mod tests {
         assert_eq!(plan.rows, vec![0, 1, 2, 3, 4]);
         assert_eq!(plan.cols, vec![0, 1, 2, 3, 4, 5]);
         assert_eq!(plan.w.len(), 30);
+        assert_eq!(plan.panel.dims(), (5, 6));
+    }
+
+    /// The register-blocked kernel path and the pre-PR4 scalar sweep
+    /// must agree on every plan (they share per-element term order).
+    #[test]
+    fn packed_and_scalar_accumulate_agree() {
+        let (r, c) = (2, 2);
+        let s = sim(8);
+        let (rows, cols) = (r * s.k1, c * s.k2);
+        let mut rng = XorShiftRng::new(19);
+        let mut w = vec![0.0; rows * cols];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let row_mask: Vec<bool> = (0..rows).map(|i| i % 4 != 2).collect();
+        let col_mask: Vec<bool> = (0..cols).map(|j| j % 3 != 1).collect();
+        let blocks = program_chunk(
+            &s, r, c, &w, &row_mask, &col_mask, ColumnMode::InputGatingLr, true, 6,
+        );
+        let plan = ChunkPlan::from_blocks(&blocks, r, c, rows - 3, cols - 5, 0.0);
+        for bcols in [1usize, 3, 7] {
+            let mut xq = vec![0.0; plan.n_active_cols() * bcols];
+            rng.fill_uniform(&mut xq, 0.0, 1.0);
+            let mut a = vec![0.0f64; rows * bcols];
+            let mut b = vec![0.0f64; rows * bcols];
+            plan.accumulate(&xq, bcols, &mut a);
+            plan.accumulate_scalar(&xq, bcols, &mut b);
+            assert_eq!(a, b, "bcols {bcols}");
+        }
+    }
+
+    /// Degenerate layers schedule zero blocks; the plan must come back
+    /// empty instead of indexing `blocks[0]` (regression: PR 4).
+    #[test]
+    fn from_blocks_of_empty_chunk_is_empty_plan() {
+        let plan = ChunkPlan::from_blocks(&[], 0, 0, 0, 0, 0.125);
+        assert!(plan.rows.is_empty() && plan.cols.is_empty());
+        assert_eq!(plan.panel.dims(), (0, 0));
+        assert_eq!(plan.noise_std, 0.125);
+        let mut buf: Vec<f64> = Vec::new();
+        plan.accumulate(&[], 1, &mut buf); // no-op, no panic
     }
 }

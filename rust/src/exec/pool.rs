@@ -7,6 +7,11 @@
 //! results are reassembled by index, the output is independent of which
 //! worker computed what.
 //!
+//! [`parallel_for_with`] is the allocation-free sibling: no result
+//! channel — items write straight into caller-owned disjoint output
+//! regions (via [`DisjointWriter`]) and every worker reuses one scratch
+//! arena across all the items it claims.
+//!
 //! Callers must make the items themselves scheduling-invariant (e.g. the
 //! engine's counter-based per-(chunk, column) noise streams) — the pool
 //! guarantees only ordering of the result vector, not execution order.
@@ -56,6 +61,105 @@ where
         .into_iter()
         .map(|s| s.expect("worker panicked before finishing its item"))
         .collect()
+}
+
+/// Run `f` over `0..n_items` on up to `threads` workers for effect
+/// (no result collection). Each worker builds one scratch value with
+/// `scratch` when it starts and reuses it — `&mut` — across every item
+/// it claims, so per-item heap churn amortizes to zero (the engine's
+/// [`WorkerArena`](crate::exec::WorkerArena) accumulator slabs).
+///
+/// Items are claimed dynamically from a shared atomic counter exactly
+/// like [`parallel_map`], so stragglers load-balance; callers that write
+/// shared output must do so through provably disjoint regions (see
+/// [`DisjointWriter`]). `threads <= 1` (or a single item) runs inline on
+/// the caller with one scratch and zero thread overhead.
+pub fn parallel_for_with<S, F>(
+    threads: usize,
+    n_items: usize,
+    scratch: impl Fn() -> S + Sync,
+    f: F,
+) where
+    F: Fn(usize, &mut S) + Sync,
+{
+    let workers = threads.max(1).min(n_items);
+    if workers <= 1 {
+        let mut s = scratch();
+        for i in 0..n_items {
+            f(i, &mut s);
+        }
+        return;
+    }
+
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            let scratch = &scratch;
+            scope.spawn(move || {
+                let mut s = scratch();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_items {
+                        break;
+                    }
+                    f(i, &mut s);
+                }
+            });
+        }
+    });
+}
+
+/// Shared-mutable access to one output slice for parallel scatter into
+/// **disjoint** regions — the zero-copy alternative to collecting
+/// per-item `Vec`s and reassembling on the caller.
+///
+/// The writer pins the slice's pointer and length; workers carve out
+/// bounds-checked sub-slices with [`Self::slice_mut`]. Disjointness of
+/// concurrently handed-out ranges is the caller's obligation (it cannot
+/// be checked cheaply at runtime), which is why `slice_mut` is
+/// `unsafe` — the engine's items partition the output by construction
+/// ((chunk-row band × column block) regions never overlap).
+pub struct DisjointWriter<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: handing `&DisjointWriter` to multiple threads only enables
+// `slice_mut`, whose disjointness contract makes concurrent use sound
+// for `T: Send` (distinct elements move to distinct threads).
+unsafe impl<T: Send> Sync for DisjointWriter<'_, T> {}
+
+impl<'a, T> DisjointWriter<'a, T> {
+    /// Borrow `slice` for parallel disjoint writes. The writer holds the
+    /// unique borrow, so no safe access to the slice can race it.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _borrow: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The sub-slice `[start, start + len)`, bounds-checked.
+    ///
+    /// # Safety
+    /// Ranges handed to concurrently running callers must be pairwise
+    /// disjoint; a range may be revisited only after the call that held
+    /// it returned (in the engine: each work item owns its output region
+    /// exclusively for the whole parallel pass).
+    #[allow(clippy::mut_from_ref)] // shared handle is the whole point; see Safety
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        let end = start.checked_add(len).expect("range overflow");
+        assert!(end <= self.len, "range {start}..{end} out of bounds ({})", self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
 }
 
 /// Split `n` items into `parts` near-equal contiguous ranges (the last
@@ -161,5 +265,75 @@ mod tests {
     #[test]
     fn partition_zero_parts_clamps_to_one() {
         assert_eq!(partition_ranges(5, 0), vec![0..5]);
+    }
+
+    #[test]
+    fn for_with_scatters_disjoint_regions_any_thread_count() {
+        // 64 items, each owning an 8-wide region of one shared output —
+        // the exact shape of the engine's pass-2 direct scatter
+        let n_items = 64;
+        let width = 8;
+        for threads in [1, 2, 4, 8, 32] {
+            let mut out = vec![0usize; n_items * width];
+            let writer = DisjointWriter::new(&mut out);
+            parallel_for_with(
+                threads,
+                n_items,
+                || 0usize,
+                |i, _| {
+                    // SAFETY: item i exclusively owns [i·width, (i+1)·width)
+                    let dst = unsafe { writer.slice_mut(i * width, width) };
+                    for (t, d) in dst.iter_mut().enumerate() {
+                        *d = i * width + t;
+                    }
+                },
+            );
+            let want: Vec<usize> = (0..n_items * width).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_with_builds_one_scratch_per_worker_not_per_item() {
+        static BUILT: AtomicUsize = AtomicUsize::new(0);
+        BUILT.store(0, Ordering::SeqCst);
+        let hits = AtomicUsize::new(0);
+        parallel_for_with(
+            4,
+            100,
+            || {
+                BUILT.fetch_add(1, Ordering::SeqCst);
+                Vec::<u8>::new()
+            },
+            |_, s: &mut Vec<u8>| {
+                s.push(1); // scratch persists across the worker's items
+                hits.fetch_add(1, Ordering::SeqCst);
+            },
+        );
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
+        let built = BUILT.load(Ordering::SeqCst);
+        assert!(built <= 4, "scratch built {built} times for 4 workers");
+    }
+
+    #[test]
+    fn for_with_inline_when_single_threaded_or_single_item() {
+        let mut out = vec![0u32; 3];
+        let writer = DisjointWriter::new(&mut out);
+        parallel_for_with(1, 3, || (), |i, _| {
+            // SAFETY: singleton regions are disjoint
+            unsafe { writer.slice_mut(i, 1) }[0] = i as u32 + 1;
+        });
+        assert_eq!(out, vec![1, 2, 3]);
+        let got: Vec<usize> = parallel_map(8, 1, |i| i + 7);
+        assert_eq!(got, vec![7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn disjoint_writer_bounds_checked() {
+        let mut out = vec![0u8; 4];
+        let writer = DisjointWriter::new(&mut out);
+        // SAFETY: single-threaded; the panic fires before any write
+        let _ = unsafe { writer.slice_mut(2, 3) };
     }
 }

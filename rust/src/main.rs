@@ -5,7 +5,7 @@
 //!         [--max-batch N] [--max-in-flight N] [--deadline-ms N] [--density D]
 //!         [--thermal off|threshold[:RAD]|periodic[:N]]
 //! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|all>
-//!         [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8]
+//!         [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8] [--stages]
 //!         [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]
 //! scatter config [--preset default|dense|foundry] [--out FILE]
 //! scatter gamma  [--heatsim]
@@ -49,7 +49,7 @@ fn main() {
                  \x20      [--max-batch N] [--max-in-flight N] [--deadline-ms N] [--density D]\n\
                  \x20      [--thermal off|threshold[:RAD]|periodic[:N]]\n\
                  bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|all>\n\
-                 \x20      [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8]\n\
+                 \x20      [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8] [--stages]\n\
                  \x20      [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]\n\
                  config [--preset default|dense|foundry] [--out FILE]\n\
                  gamma  [--heatsim]\n\
@@ -198,7 +198,8 @@ fn cmd_bench(args: &[String]) {
             // --samples doubles as the per-cell time budget (ms × 10):
             // the default 100 gives ~1 s per cell
             let budget = std::time::Duration::from_millis((samples as u64) * 10);
-            println!("{}", bench::engine::run(&threads, budget));
+            let stages = args.iter().any(|a| a == "--stages");
+            println!("{}", bench::engine::run(&threads, budget, stages));
         }
         "serve" => {
             let mut cfg = bench::serve::ServeBenchConfig {

@@ -4,7 +4,12 @@
 //!   thread count (counter-based per-(chunk, column) noise streams);
 //! * **plan correctness** — the compiled active-index path matches the
 //!   pre-compilation bool-mask reference path on random structured masks
-//!   (dense, row-only, col-only, both) under every gating feature set.
+//!   (dense, row-only, col-only, both) under every gating feature set;
+//! * **pass-split invariance** — the two-pass shared-activation-panel
+//!   path (`matmul`) is bit-identical to the PR1-style single-pass
+//!   uncached path (`matmul_uncached`) for every thread count, feature
+//!   set, and odd shape, PD noise included: materializing the quantized
+//!   panels in a separate pass must not move a single bit.
 
 use scatter::config::{AcceleratorConfig, SparsitySupport};
 use scatter::coordinator::{EngineOptions, PhotonicEngine};
@@ -140,6 +145,119 @@ fn compiled_plan_matches_reference_when_dense_unmasked() {
     let y_plan = eng.matmul("l", &w, &x, out, inp, n_cols);
     let y_ref = eng.matmul_reference("l", &w, &x, out, inp, n_cols);
     assert!(nmae(&y_plan, &y_ref) < 1e-9);
+}
+
+#[test]
+fn cached_two_pass_bit_identical_to_uncached_single_pass() {
+    // PD noise ON: the counter-based per-(chunk, column, epoch) streams
+    // must be unaffected by the pass split. Both engines see the same
+    // call sequence, so call k draws from epoch k on each — outputs must
+    // match bit for bit at every thread count. Mask kind 3 gives every
+    // chunk its own random column mask (heterogeneous gather tables
+    // across chunk-rows → multiple panel groups per chunk-column); kind
+    // 1 keeps columns dense (one shared panel per chunk-column — the
+    // maximal-redundancy case the cache removes).
+    let (out, inp) = (70, 90);
+    for (features, kind) in [
+        (SparsitySupport::NONE, 3u8),
+        (SparsitySupport::IG, 3),
+        (SparsitySupport::IG_OG, 3),
+        (SparsitySupport::FULL, 3),
+        (SparsitySupport::FULL, 1),
+    ] {
+        for n_cols in [1usize, 65] {
+            let (w, x) = problem(out, inp, n_cols, 7);
+            let mut rng = XorShiftRng::new(31 + kind as u64);
+            let mask = random_mask(2, 2, 64, 64, kind, &mut rng);
+            let mut cached =
+                engine_with_mask(features, Some(mask.clone()), EngineOptions::NOISY);
+            let mut uncached =
+                engine_with_mask(features, Some(mask), EngineOptions::NOISY);
+            for threads in [1usize, 2, 4, 8] {
+                cached.set_threads(threads);
+                uncached.set_threads(threads);
+                let y_two_pass = cached.matmul("l", &w, &x, out, inp, n_cols);
+                let y_one_pass =
+                    uncached.matmul_uncached("l", &w, &x, out, inp, n_cols);
+                assert_eq!(
+                    y_two_pass, y_one_pass,
+                    "pass split moved bits: {features:?} kind {kind} \
+                     n_cols {n_cols} threads {threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_and_uncached_match_reference_on_odd_shapes() {
+    // noise off so all three paths are deterministic; thermal + phase
+    // noise on so realized weights are nontrivial. One engine serves all
+    // paths (programming is cached), so divergence is purely executional.
+    let opts = EngineOptions { pd_noise: false, ..EngineOptions::NOISY };
+    let (out, inp) = (70, 90);
+    let mut rng = XorShiftRng::new(17);
+    for features in [
+        SparsitySupport::NONE,
+        SparsitySupport::IG,
+        SparsitySupport::IG_OG,
+        SparsitySupport::FULL,
+    ] {
+        for n_cols in [1usize, 65] {
+            let (w, x) = problem(out, inp, n_cols, 8);
+            let mask = random_mask(2, 2, 64, 64, 3, &mut rng);
+            let mut eng = engine_with_mask(features, Some(mask), opts);
+            eng.set_threads(4);
+            let y_plan = eng.matmul("l", &w, &x, out, inp, n_cols);
+            let y_un = eng.matmul_uncached("l", &w, &x, out, inp, n_cols);
+            let y_ref = eng.matmul_reference("l", &w, &x, out, inp, n_cols);
+            assert_eq!(y_plan, y_un, "{features:?} n_cols {n_cols}");
+            let e = nmae(&y_plan, &y_ref);
+            assert!(e < 1e-9, "plan/reference divergence {e} ({features:?}, {n_cols})");
+        }
+    }
+}
+
+#[test]
+fn degenerate_dims_return_empty_without_panicking() {
+    // out_dim/in_dim/n_cols of 0 used to reach chunks[0]/blocks[0]
+    // indexing (regression: PR 4) — now every path returns the
+    // correctly-shaped all-zero product without programming anything
+    let mut eng = engine_with_mask(SparsitySupport::FULL, None, EngineOptions::NOISY);
+    let x3 = vec![0.5; 16 * 3];
+    assert!(eng.matmul("a", &[], &x3, 0, 16, 3).is_empty());
+    assert!(eng.matmul_reference("a", &[], &x3, 0, 16, 3).is_empty());
+    assert!(eng.matmul_uncached("a", &[], &x3, 0, 16, 3).is_empty());
+    assert_eq!(eng.matmul("b", &[], &[], 16, 0, 3), vec![0.0; 48]);
+    assert_eq!(eng.matmul_reference("b", &[], &[], 16, 0, 3), vec![0.0; 48]);
+    assert_eq!(eng.matmul_uncached("b", &[], &[], 16, 0, 3), vec![0.0; 48]);
+    let w = vec![0.25; 16 * 16];
+    assert!(eng.matmul("c", &w, &[], 16, 16, 0).is_empty());
+    assert!(eng.matmul_reference("c", &w, &[], 16, 16, 0).is_empty());
+    assert!(eng.matmul_uncached("c", &w, &[], 16, 16, 0).is_empty());
+}
+
+#[test]
+fn all_zero_activations_stay_finite_and_equal_across_paths() {
+    // all-zero input normalizes against the 1e-12 floor (unsigned-
+    // activation contract): outputs must be finite — pure leakage bias
+    // under input gating, exact zeros without it — and identical across
+    // the three paths
+    let opts = EngineOptions { pd_noise: false, ..EngineOptions::NOISY };
+    let (out, inp, n_cols) = (70, 90, 5);
+    let (w, _) = problem(out, inp, n_cols, 9);
+    let x = vec![0.0; inp * n_cols];
+    let mut rng = XorShiftRng::new(23);
+    for features in [SparsitySupport::NONE, SparsitySupport::IG, SparsitySupport::FULL] {
+        let mask = random_mask(2, 2, 64, 64, 3, &mut rng);
+        let mut eng = engine_with_mask(features, Some(mask), opts);
+        let y = eng.matmul("l", &w, &x, out, inp, n_cols);
+        assert!(y.iter().all(|v| v.is_finite()), "{features:?}: non-finite output");
+        let y_un = eng.matmul_uncached("l", &w, &x, out, inp, n_cols);
+        let y_ref = eng.matmul_reference("l", &w, &x, out, inp, n_cols);
+        assert_eq!(y, y_un, "{features:?}");
+        assert!(nmae(&y, &y_ref) < 1e-9, "{features:?}");
+    }
 }
 
 #[test]
