@@ -6,7 +6,9 @@ engine``) against the committed baseline in ``ci/bench_baseline.json``
 and fails the build when any baselined cell's GMAC/s drops more than
 ``tolerance`` (default 20%). Also sanity-checks ``BENCH_server.json``
 (written by ``scatter bench serve``) so a broken networked-serving path
-cannot ship a green build, and ``BENCH_drift.json`` (written by
+cannot ship a green build — including the armed batched-compute floor
+``per_image_throughput_b8 / per_image_throughput_b1 >= 1.3`` from the
+``--max-batch`` sweep — and ``BENCH_drift.json`` (written by
 ``scatter bench drift``) so the thermal-drift runtime's acceptance
 criteria — threshold recalibration recovers ≥ ``min_recovery`` of the
 drift-free accuracy while recompiling fewer chunks than naive full
@@ -161,7 +163,7 @@ def check_engine_stages(fresh_path, fresh_doc, engine_base, failures):
         )
 
 
-def check_server(server_path, failures):
+def check_server(server_path, baseline_path, failures):
     doc = load(server_path)
     checks = [
         ("requests_ok", lambda v: v > 0, "> 0 requests must be served"),
@@ -181,7 +183,71 @@ def check_server(server_path, failures):
     if server:
         if float(server.get("energy_mj", 0.0)) <= 0.0:
             failures.append(f"{server_path}: server.energy_mj not accounted")
+    check_batch_speedup(server_path, doc, baseline_path, failures)
     print(f"server gate: {server_path} structurally valid" if not failures else "")
+
+
+def check_batch_speedup(server_path, doc, baseline_path, failures):
+    """Machine-independent batched-compute floor: the ``--max-batch``
+    sweep's ``per_image_throughput_b8 / per_image_throughput_b1`` ratio
+    must clear ``server.batch_speedup.min`` from the baseline (default
+    1.3). Both points run on the same machine in the same bench
+    invocation, so a ratio drop means batching stopped paying — a code
+    regression, not runner noise. Armed whenever the baseline carries the
+    ``server.batch_speedup`` block (verify.sh and CI always pass
+    ``--max-batch 1,8``). Deliberate skips gate cleanly: the bench
+    stamps ``batch_sweep_skipped`` when driving a remote ``--addr``
+    target (whose batching it cannot reconfigure) or when the sweep is
+    disabled, and non-default sweep points carry a ``batch_sweep`` block
+    — both are noted, not failed. Only an artifact with *no* sweep
+    evidence (bench predates the sweep, or it silently didn't run)
+    fails."""
+    spec = (load(baseline_path).get("server") or {}).get("batch_speedup")
+    if not spec:
+        return
+    floor = float(spec.get("min", 1.3))
+    b1 = doc.get("per_image_throughput_b1")
+    b8 = doc.get("per_image_throughput_b8")
+    if b1 is None or b8 is None:
+        skipped = doc.get("batch_sweep_skipped")
+        if skipped:
+            print(f"server gate: batch sweep skipped ({skipped}) — floor not evaluated")
+            return
+        if doc.get("batch_sweep"):
+            print(
+                "server gate: batch sweep ran without points 1 and 8 — "
+                "floor not evaluated (CI pins --max-batch 1,8)"
+            )
+            return
+        failures.append(
+            f"{server_path}: missing per_image_throughput_b1/b8 — "
+            f"run 'scatter bench serve' with the --max-batch 1,8 sweep"
+        )
+        return
+    b1, b8 = float(b1), float(b8)
+    if b1 <= 0.0 or b8 <= 0.0:
+        failures.append(
+            f"{server_path}: degenerate sweep point (b1={b1}, b8={b8} img/s)"
+        )
+        return
+    ratio = b8 / b1
+    if ratio < floor:
+        failures.append(
+            f"batched-compute speedup b8/b1 = {ratio:.3f} < floor {floor:.2f} "
+            f"({b8:.1f} vs {b1:.1f} img/s — one-engine-pass-per-shard "
+            f"batching stopped paying)"
+        )
+    else:
+        print(f"server gate: batched-compute b8/b1 = {ratio:.2f} (floor {floor:.2f})")
+    # advisory: a b8 sweep that never formed batches can't measure
+    # amortization; surface it without failing (the ratio floor already
+    # catches the throughput consequence)
+    for pt in (doc.get("batch_sweep") or {}).get("points", []):
+        if int(pt.get("max_batch", 0)) == 8 and float(pt.get("mean_occupancy", 0)) < 1.5:
+            print(
+                f"server gate: WARNING b8 sweep mean occupancy "
+                f"{float(pt.get('mean_occupancy', 0)):.2f} — batches barely formed"
+            )
 
 
 def check_drift(drift_path, baseline_path, failures):
@@ -244,7 +310,7 @@ def main():
         failures.append(f"engine check unreadable: {e!r}")
     if args.server:
         try:
-            check_server(args.server, failures)
+            check_server(args.server, args.baseline, failures)
         except (OSError, ValueError, KeyError) as e:
             failures.append(f"server check unreadable: {e!r}")
     if args.drift:

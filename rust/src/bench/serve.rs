@@ -15,6 +15,21 @@
 //! * **open loop** (`rps > 0`): clients fire on a fixed schedule
 //!   regardless of completions — measures behavior at a target arrival
 //!   rate, where admission control (shed rate) becomes visible.
+//!
+//! After the main run (in-process targets only), a **`--max-batch`
+//! sweep** measures what batched *compute* buys: for each B it stands up
+//! a one-worker server over the MLP readout workload
+//! ([`crate::nn::models::mlp`] — every matmul carries one activation
+//! column per image, the worst case per-sample dispatch and exactly the
+//! serving shape ENLighten batches for) and records closed-loop
+//! per-image throughput. `per_image_throughput_b1` vs
+//! `per_image_throughput_b8` lands in `BENCH_server.json`, where
+//! `ci/check_bench.py` arms the machine-independent `b8/b1 ≥ 1.3` floor:
+//! at B=8 each linear layer runs ONE `n_cols = 8` matmul instead of 8
+//! matvec dispatches, so the register-blocked kernel amortizes its
+//! per-run setup over 8 columns and the per-call overheads (programming
+//! lookups, panel prep, pool fan-out, output alloc, energy recording)
+//! are paid once per batch.
 
 use crate::bench::common::{repo_root_file, BenchCtx, Workload};
 use crate::config::AcceleratorConfig;
@@ -39,6 +54,12 @@ pub struct ServeBenchConfig {
     pub server: ServerConfig,
     /// Backbone density for the in-process deployment.
     pub density: f64,
+    /// `--max-batch` sweep points for the batched-compute comparison
+    /// (skipped with `addr`: a remote server's batching cannot be
+    /// reconfigured from here). Each point serves the MLP readout
+    /// workload closed-loop on one engine worker and emits
+    /// `per_image_throughput_b<N>`.
+    pub sweep_max_batch: Vec<usize>,
 }
 
 impl Default for ServeBenchConfig {
@@ -54,6 +75,7 @@ impl Default for ServeBenchConfig {
                 ..Default::default()
             },
             density: 0.3,
+            sweep_max_batch: vec![1, 8],
         }
     }
 }
@@ -126,6 +148,84 @@ fn render_bodies(n: usize) -> Vec<String> {
         .collect()
 }
 
+/// Fan `concurrency` keep-alive clients at `addr` until `duration`
+/// elapses; returns per-client tallies and the measured wall seconds.
+fn drive_load(
+    addr: SocketAddr,
+    bodies: &[String],
+    interval: Option<Duration>,
+    duration: Duration,
+    concurrency: usize,
+) -> (Vec<ClientTally>, f64) {
+    let started = Instant::now();
+    let deadline = started + duration;
+    let tallies: Vec<ClientTally> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..concurrency.max(1))
+            .map(|c| s.spawn(move || drive_client(addr, bodies, interval, deadline, c * 7919)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    (tallies, started.elapsed().as_secs_f64().max(1e-9))
+}
+
+/// One `--max-batch` sweep point measurement.
+struct SweepPoint {
+    max_batch: usize,
+    ok: u64,
+    errors: u64,
+    wall_s: f64,
+    per_image_rps: f64,
+    mean_occupancy: f64,
+}
+
+/// Closed-loop per-image throughput of the MLP readout workload at one
+/// `max_batch`. One engine worker so the comparison isolates batched
+/// *compute* (every linear layer: one `n_cols = B` matmul vs B matvec
+/// dispatches), not router parallelism; client concurrency is held at
+/// `≥ 2·max_batch` so full batches can actually form.
+fn sweep_point(max_batch: usize, cfg: &ServeBenchConfig, bodies: &[String]) -> SweepPoint {
+    let acc = AcceleratorConfig::default();
+    let model = crate::nn::models::mlp();
+    let masks = crate::bench::common::build_masks(&model, &acc, cfg.density);
+    let server = InferenceServer::spawn(
+        model,
+        acc,
+        EngineOptions::NOISY,
+        masks,
+        ServerConfig {
+            max_batch,
+            batch_timeout: Duration::from_millis(2),
+            workers: 1,
+            engine_threads: 1,
+            ..Default::default()
+        },
+    );
+    let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral");
+    let concurrency = cfg.concurrency.max(2 * max_batch).max(1);
+    let (tallies, wall_s) =
+        drive_load(http.local_addr(), bodies, None, cfg.duration, concurrency);
+    let report = http.shutdown().expect("drain sweep server");
+    let ok: u64 = tallies.iter().map(|t| t.ok_latencies_us.len() as u64).sum();
+    let errors: u64 = tallies.iter().map(|t| t.errors).sum();
+    SweepPoint {
+        max_batch,
+        ok,
+        errors,
+        wall_s,
+        per_image_rps: ok as f64 / wall_s,
+        mean_occupancy: report.mean_batch_occupancy,
+    }
+}
+
+/// Per-image-throughput ratio between the sweep points at `num` and
+/// `den` max-batch (None unless both ran and the denominator measured
+/// something).
+fn batch_speedup(sweep: &[SweepPoint], num: usize, den: usize) -> Option<f64> {
+    let n = sweep.iter().find(|p| p.max_batch == num)?;
+    let d = sweep.iter().find(|p| p.max_batch == den)?;
+    (d.per_image_rps > 0.0).then(|| n.per_image_rps / d.per_image_rps)
+}
+
 /// Run the load test, print the summary table, write
 /// `BENCH_server.json`, and return the rendered table.
 pub fn run(cfg: &ServeBenchConfig) -> String {
@@ -154,22 +254,22 @@ pub fn run(cfg: &ServeBenchConfig) -> String {
     } else {
         None
     };
-    let started = Instant::now();
-    let deadline = started + cfg.duration;
-    let tallies: Vec<ClientTally> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..cfg.concurrency.max(1))
-            .map(|c| {
-                let bodies = &bodies;
-                s.spawn(move || drive_client(addr, bodies, interval, deadline, c * 7919))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
-    });
-    let wall_s = started.elapsed().as_secs_f64().max(1e-9);
+    let (tallies, wall_s) =
+        drive_load(addr, &bodies, interval, cfg.duration, cfg.concurrency);
 
     // graceful drain of the in-process server (also the energy source)
     let report: Option<ServerReport> =
         http.map(|h| h.shutdown().expect("drain in-process server"));
+
+    // ---- batched-compute sweep (in-process targets only) ----
+    let sweep: Vec<SweepPoint> = if cfg.addr.is_none() {
+        cfg.sweep_max_batch.iter().map(|&b| sweep_point(b, cfg, &bodies)).collect()
+    } else {
+        if !cfg.sweep_max_batch.is_empty() {
+            eprintln!("note: --max-batch sweep skipped (remote --addr target)");
+        }
+        Vec::new()
+    };
 
     // merge client tallies
     let mut lat = LatencyRecorder::new();
@@ -209,10 +309,24 @@ pub fn run(cfg: &ServeBenchConfig) -> String {
     table.row(vec!["shed rate".into(), format!("{:.1} %", 100.0 * shed_rate)]);
     if let Some(r) = &report {
         table.row(vec!["server p50/p99".into(), format!("{}/{} us", r.p50_us, r.p99_us)]);
+        table.row(vec!["mean batch occupancy".into(), format!("{:.2}", r.mean_batch_occupancy)]);
         table.row(vec!["accelerator energy".into(), format!("{:.3} mJ", r.energy_mj)]);
         if let Some(j) = j_per_inference {
             table.row(vec!["energy/inference".into(), format!("{:.3} mJ", j * 1e3)]);
         }
+    }
+    for pt in &sweep {
+        table.row(vec![
+            format!("mlp per-image tput @B={}", pt.max_batch),
+            format!(
+                "{:.1} img/s (occupancy {:.2}, {} ok)",
+                pt.per_image_rps, pt.mean_occupancy, pt.ok
+            ),
+        ]);
+    }
+    let speedup = batch_speedup(&sweep, 8, 1);
+    if let Some(s) = speedup {
+        table.row(vec!["batched-compute speedup b8/b1".into(), format!("{s:.2}x")]);
     }
 
     let mut pairs = vec![
@@ -232,12 +346,66 @@ pub fn run(cfg: &ServeBenchConfig) -> String {
         ("client_mean_us", Json::Num(lat.mean_us())),
         ("shed_rate", Json::Num(shed_rate)),
     ];
+    // the sweep's headline fields are top-level so the CI gate can read
+    // them without digging (ci/check_bench.py: b8/b1 >= floor); a
+    // deliberately skipped sweep says so, so the gate can tell "skipped
+    // on purpose" from "bench never ran the sweep"
+    let sweep_names: Vec<String> =
+        sweep.iter().map(|pt| format!("per_image_throughput_b{}", pt.max_batch)).collect();
+    for (pt, name) in sweep.iter().zip(&sweep_names) {
+        pairs.push((name.as_str(), Json::Num(pt.per_image_rps)));
+    }
+    if sweep.is_empty() {
+        let reason = if cfg.addr.is_some() {
+            "remote --addr target (server batching not reconfigurable from here)"
+        } else {
+            "disabled via --max-batch"
+        };
+        pairs.push(("batch_sweep_skipped", Json::Str(reason.into())));
+    }
+    if let Some(s) = speedup {
+        pairs.push(("batch_speedup_b8_over_b1", Json::Num(s)));
+    }
+    if !sweep.is_empty() {
+        pairs.push((
+            "batch_sweep",
+            Json::obj(vec![
+                ("workload", Json::Str("mlp".into())),
+                ("duration_s_per_point", Json::Num(cfg.duration.as_secs_f64())),
+                (
+                    "points",
+                    Json::Arr(
+                        sweep
+                            .iter()
+                            .map(|pt| {
+                                Json::obj(vec![
+                                    ("max_batch", Json::Num(pt.max_batch as f64)),
+                                    ("requests_ok", Json::Num(pt.ok as f64)),
+                                    ("errors", Json::Num(pt.errors as f64)),
+                                    ("wall_s", Json::Num(pt.wall_s)),
+                                    (
+                                        "per_image_throughput",
+                                        Json::Num(pt.per_image_rps),
+                                    ),
+                                    (
+                                        "mean_occupancy",
+                                        Json::Num(pt.mean_occupancy),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
     if let Some(r) = &report {
         pairs.push((
             "server",
             Json::obj(vec![
                 ("requests", Json::Num(r.requests as f64)),
                 ("batches", Json::Num(r.batches as f64)),
+                ("mean_batch_occupancy", Json::Num(r.mean_batch_occupancy)),
                 ("workers", Json::Num(r.workers as f64)),
                 ("p50_us", Json::Num(r.p50_us as f64)),
                 ("p99_us", Json::Num(r.p99_us as f64)),

@@ -157,6 +157,47 @@ struct ProgrammedLayer {
     cycle_factor: u64,
 }
 
+/// Open batched-forward context ([`MatmulEngine::begin_batch`]): the
+/// noise-epoch geometry that makes ONE batched pass per layer draw the
+/// exact PD-noise bits the equivalent sequential per-item forwards
+/// would. Sequential item `g`'s `l`-th matmul call runs at epoch
+/// `base + g·stride + l` (every plain call advances the epoch by one,
+/// and each item makes `stride` calls); a batched call at call-index `l`
+/// therefore addresses item `g`'s columns with exactly that epoch.
+struct BatchCtx {
+    batch: u64,
+    /// Matmul calls per item (the model's matmul-layer count).
+    stride: u64,
+    /// `noise_epoch` when the context opened.
+    base: u64,
+    /// Batched matmul calls issued so far in this context.
+    calls: u64,
+}
+
+/// Column → PD-noise-stream addressing for one matmul call. Columns are
+/// item-major (`cols_per_item` per item); item `g`'s column `t` draws
+/// from stream `(epoch0 + g·epoch_stride, chunk, t)` — for an unbatched
+/// call (`cols_per_item = n_cols`, one item) this degenerates to the
+/// original `(epoch, chunk, col)` addressing bit for bit.
+#[derive(Clone, Copy)]
+struct NoiseGrid {
+    epoch0: u64,
+    epoch_stride: u64,
+    cols_per_item: usize,
+}
+
+impl NoiseGrid {
+    /// (epoch, item-local column) of packed column `col`.
+    #[inline]
+    fn stream(&self, col: usize) -> (u64, u64) {
+        let g = (col / self.cols_per_item) as u64;
+        (
+            self.epoch0.wrapping_add(g.wrapping_mul(self.epoch_stride)),
+            (col % self.cols_per_item) as u64,
+        )
+    }
+}
+
 /// Engine-level thermal-drift runtime state.
 struct ThermalState {
     model: DriftModel,
@@ -219,9 +260,15 @@ pub struct PhotonicEngine {
     /// Monotone per-matmul-call counter; part of every noise-stream id so
     /// repeated calls draw independent noise while staying reproducible.
     noise_epoch: u64,
+    /// Open batched-forward context (`None` outside
+    /// [`MatmulEngine::begin_batch`] / [`MatmulEngine::end_batch`]).
+    batch_ctx: Option<BatchCtx>,
     /// Shared activation-panel slab, reused (grow-only) across matmul
     /// calls — the steady state allocates nothing but the output.
     panels: PanelCache,
+    /// Per-column (normalization divisor, output scale) scratch, reused
+    /// (capacity grow-only) across matmul calls like `panels`.
+    col_norm: (Vec<f64>, Vec<f64>),
     /// Per-stage wall-time accumulators (gather/kernel/scatter) behind
     /// [`Self::set_stage_timing`]; zero overhead while disabled.
     stage_times: StageTimes,
@@ -252,7 +299,9 @@ impl PhotonicEngine {
             rng,
             threads: 1,
             noise_epoch: 0,
+            batch_ctx: None,
             panels: PanelCache::new(),
+            col_norm: (Vec::new(), Vec::new()),
             stage_times: StageTimes::new(),
             stage_timing: false,
         }
@@ -655,6 +704,35 @@ impl PhotonicEngine {
         x.iter().fold(0.0f64, |m, &v| m.max(v)).max(1e-12)
     }
 
+    /// Per-item activation maxima of an item-major batched panel
+    /// (`in_dim` rows × `batch·cols_per_item` columns): each item
+    /// normalizes against *its own* modulator full-scale, exactly like
+    /// the sequential per-item call it replaces — a shared batch-wide max
+    /// would re-quantize every image against the brightest one and break
+    /// batched-vs-sequential value identity. Same unsigned-activation
+    /// contract (and `1e-12` floor) as [`Self::activation_max`].
+    fn batch_activation_max(
+        x: &[f64],
+        n_cols: usize,
+        cols_per_item: usize,
+        batch: usize,
+    ) -> Vec<f64> {
+        debug_assert!(
+            x.iter().all(|v| !v.is_nan()),
+            "activations must not contain NaN"
+        );
+        let mut maxes = vec![0.0f64; batch];
+        for row in x.chunks_exact(n_cols) {
+            for (m, stripe) in maxes.iter_mut().zip(row.chunks_exact(cols_per_item)) {
+                *m = stripe.iter().fold(*m, |acc, &v| acc.max(v));
+            }
+        }
+        for m in &mut maxes {
+            *m = m.max(1e-12);
+        }
+        maxes
+    }
+
     /// Record the energy for streaming `n_cols` activation columns
     /// through a programmed layer (shared by both execution paths).
     fn record_layer_energy(
@@ -909,23 +987,10 @@ impl PhotonicEngine {
 }
 
 impl MatmulEngine for PhotonicEngine {
-    /// Zero-redundancy two-pass execution. **Pass 1** materializes, once
-    /// per (distinct gather table, column block), the gathered +
-    /// normalized + quantized activation panel into the engine's shared
-    /// slab ([`PanelCache`]) — a (group × column-block) parallel fan-out
-    /// writing disjoint slab regions. **Pass 2** fans (chunk-row ×
-    /// column-block) items that read those panels read-only, sweep them
-    /// through each chunk's register-blocked weight panel
-    /// (`ChunkPlan::accumulate`), and scatter scaled results directly
-    /// into the preallocated output's disjoint (row-band × column-block)
-    /// regions — no per-item allocation (worker arenas), no result
-    /// collection.
-    ///
-    /// Equal to [`Self::matmul_uncached`] output-for-output at any
-    /// thread count: quantization is elementwise (pass-invariant), the
-    /// two kernels share per-element MAC term order, and PD noise comes
-    /// from counter-based per-(chunk, column) streams that never observe
-    /// the pass split.
+    /// The production single-call path: one item spanning every column.
+    /// Delegates to [`MatmulEngine::matmul_batch`] with `batch = 1`,
+    /// which reproduces the historical behavior bit for bit (one noise
+    /// epoch covering all columns, one activation full-scale).
     fn matmul(
         &mut self,
         layer: &str,
@@ -935,9 +1000,80 @@ impl MatmulEngine for PhotonicEngine {
         in_dim: usize,
         n_cols: usize,
     ) -> Vec<f64> {
+        self.matmul_batch(layer, w, x, out_dim, in_dim, n_cols, 1)
+    }
+
+    /// Open a batched-forward context: record the epoch base and batch
+    /// geometry so every [`MatmulEngine::matmul_batch`] call until
+    /// [`MatmulEngine::end_batch`] addresses item `g`'s noise streams at
+    /// epoch `base + g·matmuls_per_item + call_index` — the exact epochs
+    /// the sequential per-item schedule would consume.
+    fn begin_batch(&mut self, batch: usize, matmuls_per_item: u64) {
+        debug_assert!(self.batch_ctx.is_none(), "begin_batch while a batch is open");
+        self.batch_ctx = Some(BatchCtx {
+            batch: batch as u64,
+            stride: matmuls_per_item,
+            base: self.noise_epoch,
+            calls: 0,
+        });
+    }
+
+    /// Close the batched-forward context and advance the noise epoch to
+    /// where the equivalent sequential forwards would have left it
+    /// (`base + batch · matmuls_per_item`).
+    fn end_batch(&mut self) {
+        if let Some(ctx) = self.batch_ctx.take() {
+            self.noise_epoch = ctx.base.wrapping_add(ctx.batch.wrapping_mul(ctx.stride));
+        }
+    }
+
+    /// Zero-redundancy two-pass execution over a whole batch. **Pass 1**
+    /// materializes, once per (distinct gather table, column block), the
+    /// gathered + normalized + quantized activation panel into the
+    /// engine's shared slab ([`PanelCache`], sized by the full
+    /// `batch · cols_per_item` column count) — a (group × column-block)
+    /// parallel fan-out writing disjoint slab regions. **Pass 2** fans
+    /// (chunk-row × column-block) items that read those panels
+    /// read-only, sweep them through each chunk's register-blocked
+    /// weight panel (`ChunkPlan::accumulate`), and scatter scaled
+    /// results directly into the preallocated output's disjoint
+    /// (row-band × column-block) regions — no per-item allocation
+    /// (worker arenas), no result collection.
+    ///
+    /// **Batched-vs-sequential value identity** (the
+    /// `rust/tests/batch_forward.rs` property): columns are item-major,
+    /// and each item keeps the exact semantics of the per-item call it
+    /// replaces —
+    ///
+    /// * *normalization*: item `g` normalizes and re-scales against its
+    ///   own activation maximum ([`Self::batch_activation_max`]), never
+    ///   a batch-wide one;
+    /// * *noise*: item `g`'s column `t` draws from stream
+    ///   `(epoch(g), chunk, t)` ([`NoiseGrid`]) with `epoch(g)` supplied
+    ///   by the open [`BatchCtx`] (or `noise_epoch + g` for a standalone
+    ///   batched call, matching `g` prior plain calls), so the bits are
+    ///   independent of batching, thread count, block partitioning, and
+    ///   the pass split.
+    ///
+    /// Also equal to [`Self::matmul_uncached`] output-for-output when
+    /// `batch = 1`: quantization is elementwise (pass-invariant) and the
+    /// two kernels share per-element MAC term order.
+    fn matmul_batch(
+        &mut self,
+        layer: &str,
+        w: &[f64],
+        x: &[f64],
+        out_dim: usize,
+        in_dim: usize,
+        cols_per_item: usize,
+        batch: usize,
+    ) -> Vec<f64> {
+        let n_cols = cols_per_item * batch;
         assert_eq!(w.len(), out_dim * in_dim);
         assert_eq!(x.len(), in_dim * n_cols);
         if out_dim == 0 || in_dim == 0 || n_cols == 0 {
+            // degenerate: nothing to program, meter, or draw noise for
+            // (the epoch stays put, exactly like the sequential calls)
             return vec![0.0; out_dim * n_cols];
         }
         let stale = match self.programmed.get(layer) {
@@ -949,20 +1085,47 @@ impl MatmulEngine for PhotonicEngine {
         }
 
         // per-call context, copied out before borrowing the plan
-        let x_max = Self::activation_max(x);
+        let x_maxes = Self::batch_activation_max(x, n_cols, cols_per_item, batch);
         let aq = UnsignedQuant { bits: self.cfg.b_in, max: 1.0 };
         let quantize = self.opts.quantize;
         let (rows, cols) = self.cfg.chunk_shape();
         let seed = self.cfg.noise_seed;
         let threads = self.threads;
-        let epoch = self.noise_epoch;
-        self.noise_epoch = self.noise_epoch.wrapping_add(1);
+        let (epoch0, epoch_stride) = match self.batch_ctx.as_mut() {
+            Some(ctx) => {
+                debug_assert_eq!(batch as u64, ctx.batch, "batch size vs begin_batch");
+                debug_assert!(ctx.calls < ctx.stride, "more matmul calls than declared");
+                let e = ctx.base.wrapping_add(ctx.calls);
+                ctx.calls += 1;
+                (e, ctx.stride)
+            }
+            None => {
+                // standalone call: item g draws the epoch g sequential
+                // calls would have consumed, then the counter moves past
+                // the whole batch
+                let e = self.noise_epoch;
+                self.noise_epoch = self.noise_epoch.wrapping_add(batch as u64);
+                (e, 1)
+            }
+        };
+        let grid = NoiseGrid { epoch0, epoch_stride, cols_per_item };
         let timing = self.stage_timing.then_some(&self.stage_times);
         let mut panels = std::mem::take(&mut self.panels);
+        let (mut col_xmax, mut col_scale) = std::mem::take(&mut self.col_norm);
 
         let pl = self.programmed.get(layer).unwrap();
-        let scale = pl.w_scale * x_max;
         let (p, q) = (pl.p, pl.q);
+        // per-column normalization divisor and output scale, item-major
+        // stripes (the sequential calls' `x_max` / `w_scale · x_max`);
+        // the scratch vectors are engine-owned and grow-only, so the
+        // steady state stays allocation-free beyond the output
+        col_xmax.clear();
+        col_scale.clear();
+        for (g, &m) in x_maxes.iter().enumerate() {
+            let end = (g + 1) * cols_per_item;
+            col_xmax.resize(end, m);
+            col_scale.resize(end, pl.w_scale * m);
+        }
         let (block_cols, n_cblocks) = Self::column_blocking(threads, p, n_cols);
 
         // ---- pass 1: shared quantized-activation panels, one per
@@ -983,12 +1146,13 @@ impl MatmulEngine for PhotonicEngine {
                 // sum offsets) and column blocks partition each panel,
                 // so every item owns its range exclusively
                 let panel = unsafe { writer.slice_mut(offsets[g] + nc * col0, nc * bcols) };
+                let xm = &col_xmax[col0..col0 + bcols];
                 for (ci, &j) in grp.cols.iter().enumerate() {
                     let gj = grp.qi * cols + j as usize;
                     let src = &x[gj * n_cols + col0..gj * n_cols + col0 + bcols];
                     let dst = &mut panel[ci * bcols..(ci + 1) * bcols];
-                    for (d, &v) in dst.iter_mut().zip(src) {
-                        let v = (v / x_max).clamp(0.0, 1.0);
+                    for ((d, &v), &m) in dst.iter_mut().zip(src).zip(xm) {
+                        let v = (v / m).clamp(0.0, 1.0);
                         *d = if quantize { aq.quantize(v) } else { v };
                     }
                 }
@@ -1019,16 +1183,15 @@ impl MatmulEngine for PhotonicEngine {
                     st.add_kernel(t0.expect("timer started").elapsed());
                 }
                 // hoisted PD noise, one draw per active chunk row from a
-                // counter-based per-(chunk, column) stream — bit-identical
-                // for any thread count, block partitioning, or pass split
+                // counter-based per-(item-epoch, chunk, item-local
+                // column) stream — bit-identical for any thread count,
+                // block partitioning, pass split, or batching
                 if plan.noise_std > 0.0 {
                     let t0 = timing.map(|_| std::time::Instant::now());
                     let chunk_id = idx as u64;
                     for t in 0..bcols {
-                        let mut nrng = XorShiftRng::from_stream(
-                            seed,
-                            &[epoch, chunk_id, (col0 + t) as u64],
-                        );
+                        let (epoch, lcol) = grid.stream(col0 + t);
+                        let mut nrng = XorShiftRng::from_stream(seed, &[epoch, chunk_id, lcol]);
                         for &row in &plan.rows {
                             buf[row as usize * bcols + t] +=
                                 nrng.gaussian_std(plan.noise_std);
@@ -1043,13 +1206,15 @@ impl MatmulEngine for PhotonicEngine {
             // [pi·rows, pi·rows + row_limit) × columns [col0, col0+bcols)
             let t0 = timing.map(|_| std::time::Instant::now());
             let row_limit = rows.min(out_dim - pi * rows);
+            let sc = &col_scale[col0..col0 + bcols];
             for i in 0..row_limit {
                 let gi = pi * rows + i;
                 // SAFETY: (row-band × column-block) regions are pairwise
                 // disjoint across items
                 let dst = unsafe { writer.slice_mut(gi * n_cols + col0, bcols) };
-                for (d, &v) in dst.iter_mut().zip(&buf[i * bcols..(i + 1) * bcols]) {
-                    *d = v * scale;
+                let src = &buf[i * bcols..(i + 1) * bcols];
+                for ((d, &v), &s) in dst.iter_mut().zip(src).zip(sc) {
+                    *d = v * s;
                 }
             }
             if let Some(st) = timing {
@@ -1059,6 +1224,7 @@ impl MatmulEngine for PhotonicEngine {
 
         Self::record_layer_energy(&mut self.energy, layer, pl, n_cols);
         self.panels = panels;
+        self.col_norm = (col_xmax, col_scale);
         y
     }
 }

@@ -127,10 +127,23 @@ pub struct ServerMetrics {
     batches: AtomicUsize,
     expired: AtomicU64,
     worker_lost: AtomicU64,
+    /// Batch-occupancy histogram: per-bin counts of requests per
+    /// dispatched dynamic batch (bin `i` covers occupancies in
+    /// `(OCCUPANCY_BUCKETS[i-1], OCCUPANCY_BUCKETS[i]]`, the last bin is
+    /// everything above the largest bound). Exposed cumulatively as the
+    /// Prometheus `scatter_batch_occupancy` histogram.
+    occupancy_bins: [AtomicU64; OCCUPANCY_BUCKETS.len() + 1],
+    /// Σ occupancy over every dispatched batch (mean = sum / batches).
+    occupancy_sum: AtomicU64,
     energy: Vec<Mutex<(f64, f64)>>, // per worker: cumulative (energy_mj, busy_ms)
     /// Per-worker thermal-drift gauges, overwritten after every tick.
     thermal: Vec<Mutex<ThermalGauges>>,
 }
+
+/// Upper bounds of the batch-occupancy histogram buckets (requests per
+/// dynamic batch); occupancies above the last bound land in the
+/// implicit `+Inf` bin.
+pub const OCCUPANCY_BUCKETS: [usize; 5] = [1, 2, 4, 8, 16];
 
 /// One engine worker's drift/recalibration gauges (zero when the drift
 /// runtime is off). Built from a tick's
@@ -172,6 +185,8 @@ impl ServerMetrics {
             batches: AtomicUsize::new(0),
             expired: AtomicU64::new(0),
             worker_lost: AtomicU64::new(0),
+            occupancy_bins: Default::default(),
+            occupancy_sum: AtomicU64::new(0),
             energy: (0..workers.max(1)).map(|_| Mutex::new((0.0, 0.0))).collect(),
             thermal: (0..workers.max(1)).map(|_| Mutex::new(ThermalGauges::default())).collect(),
         }
@@ -188,6 +203,17 @@ impl ServerMetrics {
 
     pub fn note_batch(&self) {
         self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record how many requests rode in one dispatched dynamic batch
+    /// (called by the dispatcher alongside [`Self::note_batch`]).
+    pub fn note_batch_occupancy(&self, n: usize) {
+        let bin = OCCUPANCY_BUCKETS
+            .iter()
+            .position(|&b| n <= b)
+            .unwrap_or(OCCUPANCY_BUCKETS.len());
+        self.occupancy_bins[bin].fetch_add(1, Ordering::Relaxed);
+        self.occupancy_sum.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// Requests dropped because their deadline passed while queued.
@@ -246,9 +272,23 @@ impl ServerMetrics {
         } else {
             0.0
         };
+        let batches = self.batches.load(Ordering::Relaxed);
+        let mut batch_occupancy = [0u64; OCCUPANCY_BUCKETS.len() + 1];
+        for (dst, bin) in batch_occupancy.iter_mut().zip(&self.occupancy_bins) {
+            *dst = bin.load(Ordering::Relaxed);
+        }
+        let batch_occupancy_sum = self.occupancy_sum.load(Ordering::Relaxed);
+        let occupancy_count: u64 = batch_occupancy.iter().sum();
         MetricsSnapshot {
             requests,
-            batches: self.batches.load(Ordering::Relaxed),
+            batches,
+            mean_batch_occupancy: if occupancy_count > 0 {
+                batch_occupancy_sum as f64 / occupancy_count as f64
+            } else {
+                0.0
+            },
+            batch_occupancy,
+            batch_occupancy_sum,
             expired: self.expired.load(Ordering::Relaxed),
             worker_lost: self.worker_lost.load(Ordering::Relaxed),
             mean_us,
@@ -272,6 +312,13 @@ impl ServerMetrics {
 pub struct MetricsSnapshot {
     pub requests: usize,
     pub batches: usize,
+    /// Per-bin batch-occupancy counts (bounds [`OCCUPANCY_BUCKETS`] plus
+    /// the trailing `+Inf` bin), non-cumulative.
+    pub batch_occupancy: [u64; OCCUPANCY_BUCKETS.len() + 1],
+    /// Σ occupancy over every dispatched batch.
+    pub batch_occupancy_sum: u64,
+    /// Mean requests per dispatched dynamic batch (0 before traffic).
+    pub mean_batch_occupancy: f64,
     pub expired: u64,
     pub worker_lost: u64,
     pub mean_us: f64,
@@ -371,6 +418,28 @@ mod tests {
         assert_eq!(s.p50_us, 100);
         assert_eq!(s.p99_us, 300);
         assert!((s.mean_us - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_occupancy_histogram_bins_and_mean() {
+        let m = ServerMetrics::new(1);
+        // bounds 1, 2, 4, 8, 16, +Inf — one batch per interesting edge
+        for n in [1usize, 2, 3, 4, 5, 8, 16, 17, 40] {
+            m.note_batch();
+            m.note_batch_occupancy(n);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.batch_occupancy, [1, 1, 2, 2, 1, 2], "bins: 1|2|3-4|5-8|9-16|17+");
+        assert_eq!(s.batch_occupancy_sum, 96);
+        assert!((s.mean_batch_occupancy - 96.0 / 9.0).abs() < 1e-12);
+        assert_eq!(s.batches, 9);
+    }
+
+    #[test]
+    fn batch_occupancy_empty_is_zero() {
+        let s = ServerMetrics::new(1).snapshot();
+        assert_eq!(s.batch_occupancy, [0; 6]);
+        assert_eq!(s.mean_batch_occupancy, 0.0);
     }
 
     #[test]

@@ -5,12 +5,15 @@
 //!
 //! * `POST /v1/predict` — body `{"image":[f64,...], "shape":[c,h,w]?,
 //!   "deadline_ms":n?}`; replies `{"class":k, "logits":[...],
-//!   "latency_us":n, "batch_size":b}`. Overload is shed with `503` +
-//!   `Retry-After` (admission cap), expired deadlines get `504`.
+//!   "latency_us":n, "batch_size":b, "energy_mj":e}` (`energy_mj` is the
+//!   request's column share of its batched engine pass). Overload is
+//!   shed with `503` + `Retry-After` (admission cap), expired deadlines
+//!   get `504`.
 //! * `GET /healthz` — liveness + current queue depth.
 //! * `GET /metrics` — Prometheus text format: request/shed/expired
-//!   counters, p50/p99 latency, queue depth, energy and average power
-//!   from the engine ledgers.
+//!   counters, the `scatter_batch_occupancy` histogram (requests per
+//!   dispatched dynamic batch), p50/p99 latency, queue depth, energy and
+//!   average power from the engine ledgers.
 //!
 //! The parser handles exactly the protocol subset the load generator,
 //! `curl`, and the e2e tests speak: `Content-Length` bodies, keep-alive
@@ -346,6 +349,7 @@ fn handle_predict(req: &HttpRequest, inference: &InferenceServer, cfg: &NetConfi
                 ("logits", Json::arr_f64(&reply.logits)),
                 ("latency_us", Json::Num(reply.latency.as_micros() as f64)),
                 ("batch_size", Json::Num(reply.batch_size as f64)),
+                ("energy_mj", Json::Num(reply.energy_mj)),
             ]),
         ),
         Ok(Err(ServeError::Expired)) => Response::json_error(504, "deadline expired in queue"),
@@ -372,6 +376,24 @@ fn render_prometheus(inference: &InferenceServer, stats: &HttpStats) -> String {
     let _ = writeln!(o, "scatter_requests_total {}", snap.requests);
     let _ = writeln!(o, "# TYPE scatter_batches_total counter");
     let _ = writeln!(o, "scatter_batches_total {}", snap.batches);
+    let _ = writeln!(
+        o,
+        "# HELP scatter_batch_occupancy Requests per dispatched dynamic batch."
+    );
+    let _ = writeln!(o, "# TYPE scatter_batch_occupancy histogram");
+    let mut cum = 0u64;
+    for (bin, le) in snap
+        .batch_occupancy
+        .iter()
+        .zip(crate::coordinator::metrics::OCCUPANCY_BUCKETS)
+    {
+        cum += bin;
+        let _ = writeln!(o, "scatter_batch_occupancy_bucket{{le=\"{le}\"}} {cum}");
+    }
+    cum += snap.batch_occupancy[snap.batch_occupancy.len() - 1];
+    let _ = writeln!(o, "scatter_batch_occupancy_bucket{{le=\"+Inf\"}} {cum}");
+    let _ = writeln!(o, "scatter_batch_occupancy_sum {}", snap.batch_occupancy_sum);
+    let _ = writeln!(o, "scatter_batch_occupancy_count {cum}");
     let _ = writeln!(o, "# TYPE scatter_shed_total counter");
     let _ = writeln!(o, "scatter_shed_total {}", adm.shed_total());
     let _ = writeln!(o, "# TYPE scatter_expired_total counter");

@@ -5,13 +5,19 @@
 //! collects requests into dynamic batches (up to `max_batch` or
 //! `batch_timeout`) and shards each batch across `workers` engine
 //! threads, each owning its own [`PhotonicEngine`] + model replica
-//! (mirroring N physical accelerator boards behind one router). Workers
-//! reply on per-request channels and stream their latency/energy ledgers
-//! into a shared [`ServerMetrics`], which both the live `/metrics`
-//! endpoint ([`crate::coordinator::net`]) and the shutdown
-//! [`ServerReport`] read. The offline toolchain has no tokio, so the
-//! event loop is std::thread + mpsc — same batching semantics, simpler
-//! runtime.
+//! (mirroring N physical accelerator boards behind one router). A
+//! worker executes its whole shard as ONE batched forward
+//! ([`Model::forward_batch`]: every matmul layer streams `shard ×
+//! positions` activation columns through the programmed arrays in a
+//! single engine pass — the §3.2 cycle amortization `max_batch` exists
+//! to buy), then splits logits, per-request latency, and a per-request
+//! energy share back into individual [`Reply`]s on per-request
+//! channels. Workers stream their latency/energy ledgers into a shared
+//! [`ServerMetrics`] (including the batch-occupancy histogram), which
+//! both the live `/metrics` endpoint ([`crate::coordinator::net`]) and
+//! the shutdown [`ServerReport`] read. The offline toolchain has no
+//! tokio, so the event loop is std::thread + mpsc — same batching
+//! semantics, simpler runtime.
 //!
 //! Overload behavior (the part an open-loop deployment lives or dies
 //! by):
@@ -107,6 +113,11 @@ pub struct Reply {
     pub logits: Vec<f64>,
     pub latency: Duration,
     pub batch_size: usize,
+    /// This request's share of the accelerator energy its batched
+    /// engine pass spent (the shard's engine-ledger delta apportioned by
+    /// column share — every request of a shard streams the same column
+    /// count, so the share is `delta / shard_len`), in mJ.
+    pub energy_mj: f64,
 }
 
 /// Why an admitted request still failed (shed-at-the-door is
@@ -145,6 +156,9 @@ pub type ReplyResult = Result<Reply, ServeError>;
 pub struct ServerReport {
     pub requests: usize,
     pub batches: usize,
+    /// Mean requests per dispatched dynamic batch — how much of the
+    /// `max_batch` compute amortization traffic actually realized.
+    pub mean_batch_occupancy: f64,
     pub workers: usize,
     pub mean_latency_us: f64,
     pub p50_us: u64,
@@ -208,31 +222,54 @@ fn spawn_engine_worker(
         let started = Instant::now();
         let mut served: u64 = 0;
         while let Ok(shard) = rx.recv() {
-            for req in shard.requests {
-                // second-chance deadline check: the request may have
-                // expired while sitting in this worker's shard queue
-                if req.expired(Instant::now()) {
-                    metrics.note_expired(1);
+            let batch_size = shard.batch_size;
+            // second-chance deadline check, hoisted to ONE scan over the
+            // whole shard *before* batch assembly: requests that expired
+            // in this worker's shard queue never inflate the batched
+            // matmul's column count
+            let now = Instant::now();
+            let (live, dead): (Vec<Request>, Vec<Request>) =
+                shard.requests.into_iter().partition(|r| !r.expired(now));
+            if !dead.is_empty() {
+                metrics.note_expired(dead.len() as u64);
+                for req in dead {
                     let Request { permit, reply, .. } = req;
                     drop(permit);
                     let _ = reply.send(Err(ServeError::Expired));
-                    continue;
                 }
-                let Request { image, submitted, permit, reply, .. } = req;
-                let logits = model.forward(image, &mut engine);
-                let class = logits.argmax();
-                let latency = submitted.elapsed();
-                served += 1;
-                metrics.record_served(latency);
-                // release the slot before replying so a ping-pong client
-                // can re-submit without a spurious shed
-                drop(permit);
-                let _ = reply.send(Ok(Reply {
-                    class,
-                    logits: logits.data,
-                    latency,
-                    batch_size: shard.batch_size,
-                }));
+            }
+            if !live.is_empty() {
+                let n = live.len();
+                let mut images = Vec::with_capacity(n);
+                let mut routing = Vec::with_capacity(n);
+                for req in live {
+                    let Request { image, submitted, permit, reply, .. } = req;
+                    images.push(image);
+                    routing.push((submitted, permit, reply));
+                }
+                // the tentpole: the whole shard is ONE batched forward —
+                // every matmul layer runs once with n_cols = n × positions
+                let e_before = engine.energy_report().energy_mj;
+                let outputs = model.forward_batch(images, &mut engine);
+                // apportion the engine's energy delta by column share
+                // (uniform: same model, same column count per request)
+                let e_each = (engine.energy_report().energy_mj - e_before) / n as f64;
+                served += n as u64;
+                for ((submitted, permit, reply), logits) in routing.into_iter().zip(outputs) {
+                    let class = logits.argmax();
+                    let latency = submitted.elapsed();
+                    metrics.record_served(latency);
+                    // release the slot before replying so a ping-pong
+                    // client can re-submit without a spurious shed
+                    drop(permit);
+                    let _ = reply.send(Ok(Reply {
+                        class,
+                        logits: logits.data,
+                        latency,
+                        batch_size,
+                        energy_mj: e_each,
+                    }));
+                }
             }
             let rep = engine.energy_report();
             metrics.set_worker_energy(widx, rep.energy_mj, rep.time_ms);
@@ -443,6 +480,7 @@ fn run_dispatcher(
         }
         let batch_size = batch.len();
         metrics.note_batch();
+        metrics.note_batch_occupancy(batch_size);
         // shard the batch across live engine workers (contiguous
         // near-equal splits; lone requests go to the first live worker)
         let ranges = partition_ranges(batch.len(), alive.len());
@@ -474,6 +512,7 @@ fn run_dispatcher(
     ServerReport {
         requests: snap.requests,
         batches: snap.batches,
+        mean_batch_occupancy: snap.mean_batch_occupancy,
         workers: n_workers,
         mean_latency_us: snap.mean_us,
         p50_us: snap.p50_us,
@@ -535,14 +574,66 @@ mod tests {
             assert_eq!(reply.logits.len(), 10);
             assert!(reply.class < 10);
             assert!(reply.batch_size >= 1);
+            assert!(
+                reply.energy_mj > 0.0,
+                "every request carries its batched-pass energy share"
+            );
         }
         let report = server.shutdown().expect("report");
         assert_eq!(report.requests, 6);
         assert!(report.batches >= 1 && report.batches <= 6);
+        assert!(
+            report.mean_batch_occupancy >= 1.0
+                && report.mean_batch_occupancy <= 4.0 + 1e-9,
+            "mean occupancy within [1, max_batch]: {}",
+            report.mean_batch_occupancy
+        );
+        assert!(
+            (report.mean_batch_occupancy - 6.0 / report.batches as f64).abs() < 1e-9,
+            "mean occupancy consistent with requests/batches"
+        );
         assert!(report.energy_mj > 0.0);
         assert!(report.p99_us >= report.p50_us);
         assert_eq!(report.shed, 0);
         assert_eq!(report.expired, 0);
+    }
+
+    /// The batched engine pass must return exactly what per-request
+    /// passes on a fresh engine return: EngineOptions::IDEAL has no
+    /// per-call randomness, so the served logits are reproducible by a
+    /// standalone engine regardless of how the server batched them.
+    #[test]
+    fn served_logits_equal_offline_forward_regardless_of_batching() {
+        let model = crate::nn::models::cnn3();
+        let server = InferenceServer::spawn(
+            model.clone(),
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig {
+                max_batch: 8,
+                batch_timeout: Duration::from_millis(50),
+                ..Default::default()
+            },
+        );
+        let images: Vec<Tensor> = (0..5).map(|i| sample_img(2, i)).collect();
+        let rxs: Vec<_> = images
+            .iter()
+            .map(|img| server.submit(img.clone()).expect("admitted"))
+            .collect();
+        let mut offline = PhotonicEngine::new(test_cfg(), EngineOptions::IDEAL);
+        if let Some((last, _, _)) = model.matmul_layers().last() {
+            offline.set_protected([last.clone()].into_iter().collect());
+        }
+        for (img, rx) in images.into_iter().zip(rxs) {
+            let want = model.forward(img, &mut offline);
+            let reply = rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("reply")
+                .expect("served");
+            assert_eq!(reply.logits, want.data, "batched serving moved bits");
+        }
+        server.shutdown().expect("report");
     }
 
     #[test]

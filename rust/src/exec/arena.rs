@@ -72,8 +72,11 @@ impl PanelCache {
     }
 
     /// Size the slab for one call: `group_sizes` yields each group's
-    /// total panel length (`cols.len() · n_cols`). Returns nothing; read
-    /// back via [`Self::offset`] / [`Self::slab_mut`].
+    /// total panel length (`cols.len() · n_cols`). With the batched
+    /// forward path `n_cols` is `batch × cols_per_item`, so the slab
+    /// grows to the largest batch seen and then serves every smaller
+    /// call allocation-free (grow-only, like [`WorkerArena`]). Returns
+    /// nothing; read back via [`Self::offset`] / [`Self::parts_mut`].
     pub fn prepare(&mut self, group_sizes: impl Iterator<Item = usize>) {
         self.offsets.clear();
         let mut total = 0usize;
@@ -203,6 +206,31 @@ mod tests {
         let grown = c.parts().1.len();
         c.prepare([2usize].into_iter());
         assert_eq!(c.parts().1.len(), grown, "slab is grow-only across calls");
+    }
+
+    /// The batched serving path multiplies every group's panel length by
+    /// the dynamic batch size; the cache must absorb the growth once and
+    /// then serve both batched and unbatched calls without reallocating.
+    #[test]
+    fn panel_cache_grows_once_for_batched_columns_then_reuses() {
+        let mut c = PanelCache::new();
+        let (nc_a, nc_b, cols_per_item) = (48usize, 30usize, 25usize);
+        c.prepare([nc_a * cols_per_item, nc_b * cols_per_item].into_iter());
+        let single = c.parts().1.len();
+        assert!(single >= (nc_a + nc_b) * cols_per_item);
+        // a batch of 8 images: every panel is 8× wider
+        let batch = 8;
+        c.prepare(
+            [nc_a * cols_per_item * batch, nc_b * cols_per_item * batch].into_iter(),
+        );
+        assert!(c.parts().1.len() >= (nc_a + nc_b) * cols_per_item * batch);
+        assert_eq!(c.offset(1), nc_a * cols_per_item * batch, "offsets track the batch");
+        let grown = c.parts().1.len();
+        let ptr = c.parts().1.as_ptr();
+        // back to batch 1: no shrink, no reallocation
+        c.prepare([nc_a * cols_per_item, nc_b * cols_per_item].into_iter());
+        assert_eq!(c.parts().1.len(), grown);
+        assert_eq!(c.parts().1.as_ptr(), ptr, "smaller batch reuses the slab");
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|all>
 //!         [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8] [--stages]
 //!         [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]
+//!         [--max-batch 1,8]
 //! scatter config [--preset default|dense|foundry] [--out FILE]
 //! scatter gamma  [--heatsim]
 //! scatter info
@@ -51,6 +52,7 @@ fn main() {
                  bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|all>\n\
                  \x20      [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8] [--stages]\n\
                  \x20      [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]\n\
+                 \x20      [--max-batch 1,8]\n\
                  config [--preset default|dense|foundry] [--out FILE]\n\
                  gamma  [--heatsim]\n\
                  info"
@@ -114,10 +116,10 @@ fn cmd_serve(args: &[String]) {
     eprintln!("draining ...");
     match http.shutdown() {
         Ok(r) => eprintln!(
-            "served {} requests in {} batches ({:.1} req/s, p50 {} us, p99 {} us, \
-             {:.3} mJ, shed {}, expired {}, recal {}x/{} chunks)",
-            r.requests, r.batches, r.throughput_rps, r.p50_us, r.p99_us, r.energy_mj,
-            r.shed, r.expired, r.recalibrations, r.recal_chunks
+            "served {} requests in {} batches (mean occupancy {:.2}, {:.1} req/s, \
+             p50 {} us, p99 {} us, {:.3} mJ, shed {}, expired {}, recal {}x/{} chunks)",
+            r.requests, r.batches, r.mean_batch_occupancy, r.throughput_rps, r.p50_us,
+            r.p99_us, r.energy_mj, r.shed, r.expired, r.recalibrations, r.recal_chunks
         ),
         Err(e) => eprintln!("shutdown error: {e}"),
     }
@@ -215,6 +217,15 @@ fn cmd_bench(args: &[String]) {
             };
             cfg.server.workers =
                 flag_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+            // batched-compute sweep points (default 1,8 → the CI-gated
+            // per_image_throughput_b8/b1 ratio); `--max-batch 0` disables
+            if let Some(list) = flag_value(args, "--max-batch") {
+                cfg.sweep_max_batch = list
+                    .split(',')
+                    .filter_map(|b| b.trim().parse().ok())
+                    .filter(|&b: &usize| b > 0)
+                    .collect();
+            }
             println!("{}", bench::serve::run(&cfg));
         }
         "all" => bench::run_all(&ctx),

@@ -1,7 +1,12 @@
 //! im2col lowering of 2-D convolution (§3.3.5: the unfolded weight matrix
 //! is what gets partitioned into rk1×ck2 chunks and mapped onto PTCs).
+//!
+//! [`im2col_batch`] lowers a whole [`BatchTensor`] at once into a single
+//! `(C·k·k) × (batch·out_h·out_w)` patch matrix with **item-major
+//! columns** — the column-offset convention the batched forward path and
+//! the engine's per-(chunk, column) noise streams share.
 
-use super::tensor::Tensor;
+use super::tensor::{BatchTensor, Tensor};
 
 /// Unfold a CHW input into the patch matrix for a k×k convolution with
 /// given stride and zero padding.
@@ -16,9 +21,7 @@ pub fn im2col(
 ) -> (Vec<f64>, usize, usize) {
     assert_eq!(input.ndim(), 3, "im2col expects CHW");
     let (c, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
-    assert!(h + 2 * pad >= k && w + 2 * pad >= k, "kernel larger than padded input");
-    let out_h = (h + 2 * pad - k) / stride + 1;
-    let out_w = (w + 2 * pad - k) / stride + 1;
+    let (out_h, out_w) = out_shape(h, w, k, stride, pad);
     let n_cols = out_h * out_w;
     let n_rows = c * k * k;
     let mut patches = vec![0.0f64; n_rows * n_cols];
@@ -27,25 +30,96 @@ pub fn im2col(
             for kj in 0..k {
                 let row = (ci * k + ki) * k + kj;
                 let dst = &mut patches[row * n_cols..(row + 1) * n_cols];
-                let mut col = 0usize;
-                for oy in 0..out_h {
-                    let iy = oy * stride + ki;
-                    for ox in 0..out_w {
-                        let ix = ox * stride + kj;
-                        // account for padding offset
-                        let v = if iy >= pad && ix >= pad && iy - pad < h && ix - pad < w {
-                            input.at3(ci, iy - pad, ix - pad)
-                        } else {
-                            0.0
-                        };
-                        dst[col] = v;
-                        col += 1;
-                    }
+                fill_patch_row(&input.data, h, w, ci, ki, kj, stride, pad, out_h, out_w, dst);
+            }
+        }
+    }
+    (patches, out_h, out_w)
+}
+
+/// Batched im2col: unfold every item of a CHW batch into ONE patch
+/// matrix, row-major `(C·k·k) × (batch·out_h·out_w)` with item-major
+/// columns — item `b`'s output pixels occupy columns
+/// `[b·out_h·out_w, (b+1)·out_h·out_w)`. Per-item columns are identical
+/// to [`im2col`] of that item, so a batched conv is the per-image convs
+/// glued column-wise (the engine treats each item's column range as its
+/// own noise-stream group).
+pub fn im2col_batch(
+    input: &BatchTensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<f64>, usize, usize) {
+    assert_eq!(input.shape.len(), 3, "im2col_batch expects CHW items");
+    let (c, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (out_h, out_w) = out_shape(h, w, k, stride, pad);
+    let pos = out_h * out_w;
+    let n_cols = input.batch * pos;
+    let n_rows = c * k * k;
+    let mut patches = vec![0.0f64; n_rows * n_cols];
+    for ci in 0..c {
+        for ki in 0..k {
+            for kj in 0..k {
+                let row = (ci * k + ki) * k + kj;
+                let prow = &mut patches[row * n_cols..(row + 1) * n_cols];
+                for (b, dst) in prow.chunks_exact_mut(pos).enumerate() {
+                    fill_patch_row(
+                        input.item(b),
+                        h,
+                        w,
+                        ci,
+                        ki,
+                        kj,
+                        stride,
+                        pad,
+                        out_h,
+                        out_w,
+                        dst,
+                    );
                 }
             }
         }
     }
     (patches, out_h, out_w)
+}
+
+fn out_shape(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> (usize, usize) {
+    assert!(h + 2 * pad >= k && w + 2 * pad >= k, "kernel larger than padded input");
+    ((h + 2 * pad - k) / stride + 1, (w + 2 * pad - k) / stride + 1)
+}
+
+/// Fill one patch row (kernel tap `(ci, ki, kj)`) for one CHW item into
+/// `dst` (`out_h·out_w` values, one per output pixel).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fill_patch_row(
+    item: &[f64],
+    h: usize,
+    w: usize,
+    ci: usize,
+    ki: usize,
+    kj: usize,
+    stride: usize,
+    pad: usize,
+    out_h: usize,
+    out_w: usize,
+    dst: &mut [f64],
+) {
+    let mut col = 0usize;
+    for oy in 0..out_h {
+        let iy = oy * stride + ki;
+        for ox in 0..out_w {
+            let ix = ox * stride + kj;
+            // account for padding offset
+            let v = if iy >= pad && ix >= pad && iy - pad < h && ix - pad < w {
+                item[(ci * h + (iy - pad)) * w + (ix - pad)]
+            } else {
+                0.0
+            };
+            dst[col] = v;
+            col += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -94,6 +168,41 @@ mod tests {
         // center kernel position (1,1), output (0,0) -> input (0,0) = 1
         let row_center = (0 * 3 + 1) * 3 + 1;
         assert_eq!(p[row_center * 4], 1.0);
+    }
+
+    #[test]
+    fn batched_im2col_is_per_item_im2col_glued_columnwise() {
+        let mut rng = crate::util::XorShiftRng::new(41);
+        let items: Vec<Tensor> = (0..3)
+            .map(|_| {
+                let mut data = vec![0.0; 2 * 5 * 5];
+                rng.fill_uniform(&mut data, -1.0, 1.0);
+                Tensor::from_vec(&[2, 5, 5], data)
+            })
+            .collect();
+        let batch = BatchTensor::from_items(&items);
+        let (pb, oh, ow) = im2col_batch(&batch, 3, 1, 1);
+        assert_eq!((oh, ow), (5, 5));
+        let pos = oh * ow;
+        let n_cols = 3 * pos;
+        for (b, item) in items.iter().enumerate() {
+            let (pi, ih, iw) = im2col(item, 3, 1, 1);
+            assert_eq!((ih, iw), (oh, ow));
+            for row in 0..2 * 9 {
+                let got = &pb[row * n_cols + b * pos..row * n_cols + (b + 1) * pos];
+                let want = &pi[row * pos..(row + 1) * pos];
+                assert_eq!(got, want, "item {b} row {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_im2col_single_item_equals_im2col() {
+        let t = Tensor::from_vec(&[1, 4, 4], (0..16).map(|x| x as f64).collect());
+        let (p1, oh1, ow1) = im2col(&t, 3, 2, 1);
+        let (pb, ohb, owb) = im2col_batch(&BatchTensor::from_items(&[t]), 3, 2, 1);
+        assert_eq!((oh1, ow1), (ohb, owb));
+        assert_eq!(p1, pb);
     }
 
     #[test]

@@ -4,9 +4,21 @@
 //! [`MatmulEngine`](super::MatmulEngine), so the same model definition runs
 //! exactly (reference) or photonically (digital twin with masks, noise and
 //! energy accounting).
+//!
+//! Two execution modes share one model definition:
+//!
+//! * [`Model::forward`] — one image at a time (the batched path's
+//!   equivalence oracle);
+//! * [`Model::forward_batch`] — a whole batch per pass: every
+//!   matmul-bearing layer issues ONE
+//!   [`MatmulEngine::matmul_batch`](super::MatmulEngine::matmul_batch)
+//!   with `n_cols = batch × positions` (item-major columns), and
+//!   pool/relu/residual/flatten sweep the batch slab — the §3.2
+//!   amortization (a programmed layer's cycle cost spread over many
+//!   activation columns) realized in software.
 
-use super::im2col::im2col;
-use super::tensor::Tensor;
+use super::im2col::{im2col, im2col_batch};
+use super::tensor::{BatchTensor, Tensor};
 use super::MatmulEngine;
 
 /// A layer of the inference graph.
@@ -105,6 +117,88 @@ impl Layer {
             }
         }
     }
+
+    /// Batched forward: same math as [`Self::forward`] applied to every
+    /// item, with each matmul-bearing layer issuing ONE
+    /// [`MatmulEngine::matmul_batch`] over the item-major packed panel
+    /// (`n_cols = batch × positions`) instead of `batch` engine passes.
+    pub fn forward_batch(&self, x: BatchTensor, engine: &mut dyn MatmulEngine) -> BatchTensor {
+        let bt = x.batch;
+        match self {
+            Layer::Conv2d { name, out_c, in_c, k, stride, pad, weight, bias } => {
+                assert_eq!(x.shape[0], *in_c, "conv {name}: channel mismatch");
+                let (patches, oh, ow) = im2col_batch(&x, *k, *stride, *pad);
+                let in_dim = in_c * k * k;
+                let pos = oh * ow;
+                let y = engine.matmul_batch(name, weight, &patches, *out_c, in_dim, pos, bt);
+                // un-pack the row-major `out_c × (batch·pos)` product into
+                // the item-major batch slab, folding the bias in
+                let mut out = BatchTensor::zeros(bt, &[*out_c, oh, ow]);
+                for (o, b_o) in bias.iter().enumerate() {
+                    let yrow = &y[o * bt * pos..(o + 1) * bt * pos];
+                    for b in 0..bt {
+                        let dst =
+                            &mut out.data[(b * out_c + o) * pos..(b * out_c + o + 1) * pos];
+                        for (d, &v) in dst.iter_mut().zip(&yrow[b * pos..(b + 1) * pos]) {
+                            *d = v + b_o;
+                        }
+                    }
+                }
+                out
+            }
+            Layer::Linear { name, out_dim, in_dim, weight, bias } => {
+                assert_eq!(x.item_len(), *in_dim, "linear {name}: input dim");
+                // transpose the item-major slab into the `in_dim × batch`
+                // panel (one column per item; cols_per_item = 1)
+                let mut xm = vec![0.0f64; in_dim * bt];
+                for b in 0..bt {
+                    for (j, &v) in x.item(b).iter().enumerate() {
+                        xm[j * bt + b] = v;
+                    }
+                }
+                let y = engine.matmul_batch(name, weight, &xm, *out_dim, *in_dim, 1, bt);
+                let mut out = BatchTensor::zeros(bt, &[*out_dim]);
+                for (o, b_o) in bias.iter().enumerate() {
+                    for b in 0..bt {
+                        out.data[b * out_dim + o] = y[o * bt + b] + b_o;
+                    }
+                }
+                out
+            }
+            Layer::BatchNorm { scale, shift } => {
+                let c = x.shape[0];
+                assert_eq!(scale.len(), c);
+                let hw = x.item_len() / c;
+                let mut out = x;
+                for item in out.data.chunks_exact_mut(c * hw) {
+                    for ci in 0..c {
+                        for v in &mut item[ci * hw..(ci + 1) * hw] {
+                            *v = *v * scale[ci] + shift[ci];
+                        }
+                    }
+                }
+                out
+            }
+            Layer::Relu => x.map(|v| v.max(0.0)),
+            Layer::AvgPool { k } => pool_batch(x, *k, true),
+            Layer::MaxPool { k } => pool_batch(x, *k, false),
+            Layer::Residual { body, shortcut } => {
+                let mut main = x.clone();
+                for l in body {
+                    main = l.forward_batch(main, engine);
+                }
+                let mut skip = x;
+                for l in shortcut {
+                    skip = l.forward_batch(skip, engine);
+                }
+                main.add(&skip).map(|v| v.max(0.0))
+            }
+            Layer::Flatten => {
+                let n = x.item_len();
+                x.reshape_items(&[n])
+            }
+        }
+    }
 }
 
 fn pool(x: Tensor, k: usize, avg: bool) -> Tensor {
@@ -112,13 +206,33 @@ fn pool(x: Tensor, k: usize, avg: bool) -> Tensor {
     let (oh, ow) = (h / k, w / k);
     assert!(oh > 0 && ow > 0, "pool window larger than input");
     let mut out = Tensor::zeros(&[c, oh, ow]);
+    pool_item(&x.data, c, h, w, k, avg, &mut out.data);
+    out
+}
+
+fn pool_batch(x: BatchTensor, k: usize, avg: bool) -> BatchTensor {
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (oh, ow) = (h / k, w / k);
+    assert!(oh > 0 && ow > 0, "pool window larger than input");
+    let mut out = BatchTensor::zeros(x.batch, &[c, oh, ow]);
+    for (src, dst) in
+        x.data.chunks_exact(c * h * w).zip(out.data.chunks_exact_mut(c * oh * ow))
+    {
+        pool_item(src, c, h, w, k, avg, dst);
+    }
+    out
+}
+
+/// k×k stride-k pooling of one CHW item (`dst` is `c × (h/k) × (w/k)`).
+fn pool_item(src: &[f64], c: usize, h: usize, w: usize, k: usize, avg: bool, dst: &mut [f64]) {
+    let (oh, ow) = (h / k, w / k);
     for ci in 0..c {
         for oy in 0..oh {
             for ox in 0..ow {
                 let mut acc = if avg { 0.0 } else { f64::NEG_INFINITY };
                 for dy in 0..k {
                     for dx in 0..k {
-                        let v = x.at3(ci, oy * k + dy, ox * k + dx);
+                        let v = src[(ci * h + oy * k + dy) * w + ox * k + dx];
                         if avg {
                             acc += v;
                         } else if v > acc {
@@ -129,11 +243,10 @@ fn pool(x: Tensor, k: usize, avg: bool) -> Tensor {
                 if avg {
                     acc /= (k * k) as f64;
                 }
-                out.set3(ci, oy, ox, acc);
+                dst[(ci * oh + oy) * ow + ox] = acc;
             }
         }
     }
-    out
 }
 
 /// A sequential model with a name and input shape.
@@ -157,6 +270,67 @@ impl Model {
     /// Predicted class.
     pub fn predict(&self, x: Tensor, engine: &mut dyn MatmulEngine) -> usize {
         self.forward(x, engine).argmax()
+    }
+
+    /// Batched forward: carry `images` through the whole model in ONE
+    /// engine pass per layer (`n_cols = batch × positions`), returning
+    /// per-image outputs in input order.
+    ///
+    /// Value-identical to `batch` sequential [`Self::forward`] calls on
+    /// the same engine state — including PD noise: the engine is told the
+    /// batch geometry via [`MatmulEngine::begin_batch`] (`batch`, matmul
+    /// calls per item) so its counter-based noise streams address each
+    /// item's columns exactly as the sequential schedule would
+    /// (`rust/tests/batch_forward.rs` asserts bit-equality).
+    pub fn forward_batch(
+        &self,
+        images: Vec<Tensor>,
+        engine: &mut dyn MatmulEngine,
+    ) -> Vec<Tensor> {
+        if images.is_empty() {
+            return Vec::new();
+        }
+        for x in &images {
+            assert_eq!(x.shape, self.input_shape, "model {} input shape", self.name);
+        }
+        let batch = images.len();
+        let mut cur = BatchTensor::from_items(&images);
+        drop(images);
+        engine.begin_batch(batch, self.matmul_layer_count() as u64);
+        for l in &self.layers {
+            cur = l.forward_batch(cur, engine);
+        }
+        engine.end_batch();
+        cur.into_items()
+    }
+
+    /// Number of *epoch-consuming* matmul calls per forward, counted
+    /// without materializing names — this runs once per served shard
+    /// ([`Self::forward_batch`] passes it to
+    /// [`MatmulEngine::begin_batch`] as the per-item stride).
+    ///
+    /// Degenerate (zero-dim) layers are excluded: their engine call
+    /// returns early without consuming a noise epoch in sequential
+    /// execution, so counting them would shift every later item's
+    /// streams and break batched-vs-sequential bit identity
+    /// (`rust/tests/batch_forward.rs`). [`Self::matmul_layers`] still
+    /// lists them (masking/protection care about existence, not epochs).
+    pub fn matmul_layer_count(&self) -> usize {
+        fn walk(layers: &[Layer]) -> usize {
+            layers
+                .iter()
+                .map(|l| {
+                    usize::from(l.matmul_shape().is_some_and(|(_, o, i)| o > 0 && i > 0))
+                        + match l {
+                            Layer::Residual { body, shortcut } => {
+                                walk(body) + walk(shortcut)
+                            }
+                            _ => 0,
+                        }
+                })
+                .sum()
+        }
+        walk(&self.layers)
     }
 
     /// All matmul layers, flattened through residual blocks:
@@ -289,5 +463,96 @@ mod tests {
         let m = crate::nn::models::cnn3();
         let names: Vec<String> = m.matmul_layers().iter().map(|(n, _, _)| n.clone()).collect();
         assert_eq!(names, vec!["conv1", "conv2", "fc"]);
+    }
+
+    /// Every layer kind (conv, linear, pools, batchnorm, residual,
+    /// flatten, relu) batched over B items must be bit-identical to B
+    /// sequential forwards on the exact engine.
+    #[test]
+    fn forward_batch_bit_identical_to_sequential_on_exact_engine() {
+        let mut rng = crate::util::XorShiftRng::new(0xBA7C);
+        let mk = |rng: &mut crate::util::XorShiftRng, n: usize| {
+            let mut v = vec![0.0; n];
+            rng.fill_uniform(&mut v, -1.0, 1.0);
+            v
+        };
+        let w1 = mk(&mut rng, 4 * 2 * 9);
+        let wr = mk(&mut rng, 4 * 4 * 9);
+        let wl = mk(&mut rng, 5 * 16);
+        let model = Model {
+            name: "mixed".into(),
+            input_shape: vec![2, 8, 8],
+            layers: vec![
+                Layer::Conv2d {
+                    name: "c1".into(),
+                    out_c: 4,
+                    in_c: 2,
+                    k: 3,
+                    stride: 1,
+                    pad: 1,
+                    weight: w1,
+                    bias: vec![0.1, -0.2, 0.3, 0.0],
+                },
+                Layer::BatchNorm {
+                    scale: vec![1.5, 0.5, 2.0, 1.0],
+                    shift: vec![0.0, 0.1, -0.1, 0.2],
+                },
+                Layer::Relu,
+                Layer::Residual {
+                    body: vec![Layer::Conv2d {
+                        name: "rb".into(),
+                        out_c: 4,
+                        in_c: 4,
+                        k: 3,
+                        stride: 1,
+                        pad: 1,
+                        weight: wr,
+                        bias: vec![0.0; 4],
+                    }],
+                    shortcut: vec![],
+                },
+                Layer::MaxPool { k: 2 },
+                Layer::AvgPool { k: 2 },
+                Layer::Flatten,
+                Layer::Linear {
+                    name: "fc".into(),
+                    out_dim: 5,
+                    in_dim: 16,
+                    weight: wl,
+                    bias: vec![0.5, -0.5, 0.0, 0.25, -0.25],
+                },
+            ],
+        };
+        for b in [1usize, 2, 5] {
+            let images: Vec<Tensor> = (0..b)
+                .map(|_| {
+                    let mut v = vec![0.0; 2 * 8 * 8];
+                    rng.fill_uniform(&mut v, 0.0, 1.0);
+                    Tensor::from_vec(&[2, 8, 8], v)
+                })
+                .collect();
+            let batched = model.forward_batch(images.clone(), &mut crate::nn::ExactEngine);
+            for (i, img) in images.into_iter().enumerate() {
+                let seq = model.forward(img, &mut crate::nn::ExactEngine);
+                assert_eq!(batched[i], seq, "B={b} item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_of_empty_input_is_empty() {
+        let m = crate::nn::models::cnn3();
+        assert!(m.forward_batch(Vec::new(), &mut crate::nn::ExactEngine).is_empty());
+    }
+
+    #[test]
+    fn matmul_layer_count_matches_listing() {
+        for m in [
+            crate::nn::models::cnn3(),
+            crate::nn::models::mlp(),
+            crate::nn::models::resnet18(),
+        ] {
+            assert_eq!(m.matmul_layer_count(), m.matmul_layers().len(), "{}", m.name);
+        }
     }
 }

@@ -15,10 +15,10 @@ pub mod models;
 pub mod tensor;
 
 pub use fit::fit_prototype_readout;
-pub use im2col::im2col;
+pub use im2col::{im2col, im2col_batch};
 pub use layers::{Layer, Model};
-pub use models::{cnn3, resnet18, vgg8};
-pub use tensor::Tensor;
+pub use models::{cnn3, mlp, resnet18, vgg8};
+pub use tensor::{BatchTensor, Tensor};
 
 /// A matrix-multiplication backend: computes `Y = W · X` where W is
 /// `out_dim × in_dim` (row-major) and X is `in_dim × n_cols` (row-major).
@@ -35,6 +35,45 @@ pub trait MatmulEngine {
         in_dim: usize,
         n_cols: usize,
     ) -> Vec<f64>;
+
+    /// Batched matmul: `x` packs `batch` independent activation panels of
+    /// `cols_per_item` columns each, **item-major** (total `n_cols =
+    /// batch · cols_per_item`; item `b`'s columns at `[b·cols_per_item,
+    /// (b+1)·cols_per_item)`), and the result uses the same column
+    /// layout.
+    ///
+    /// **Column-offset convention**: stochastic engines must treat each
+    /// item's column range as the column range of a *separate* per-item
+    /// call — i.e. draw per-column randomness keyed on `(item, col %
+    /// cols_per_item)`, not on the packed column index — so a batched
+    /// call is value-identical to the `batch` sequential [`Self::matmul`]
+    /// calls it replaces (see `PhotonicEngine`'s counter-based noise
+    /// streams). The default forwards to one plain [`Self::matmul`] over
+    /// the packed panel, which is already item-equivalent for
+    /// deterministic column-independent engines ([`ExactEngine`]).
+    fn matmul_batch(
+        &mut self,
+        layer: &str,
+        w: &[f64],
+        x: &[f64],
+        out_dim: usize,
+        in_dim: usize,
+        cols_per_item: usize,
+        batch: usize,
+    ) -> Vec<f64> {
+        self.matmul(layer, w, x, out_dim, in_dim, cols_per_item * batch)
+    }
+
+    /// Open a batched-forward context: the next `matmuls_per_item`
+    /// [`Self::matmul_batch`] calls together carry one whole batch of
+    /// `batch` items through the model. Stochastic engines use this to
+    /// line their per-item randomness up with the sequential schedule
+    /// (`Model::forward_batch` passes the model's matmul-layer count);
+    /// deterministic engines ignore it (default no-op).
+    fn begin_batch(&mut self, _batch: usize, _matmuls_per_item: u64) {}
+
+    /// Close the context opened by [`Self::begin_batch`] (default no-op).
+    fn end_batch(&mut self) {}
 }
 
 /// Exact f64 reference engine.

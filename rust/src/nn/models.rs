@@ -128,12 +128,34 @@ pub fn resnet18() -> Model {
     Model { name: "resnet18-cifar100".into(), input_shape: vec![3, 32, 32], layers }
 }
 
+/// MLP-3: Flatten — FC256 — ReLU — FC128 — ReLU — FC10 on 1×28×28.
+///
+/// The batched-serving stress workload: every matmul layer carries
+/// exactly ONE activation column per image, so per-image throughput
+/// lives or dies on dynamic batching turning matvec dispatches into one
+/// `n_cols = B` matmul (the §3.2 cycle-amortization argument, and
+/// ENLighten's transformer-FC serving case). `scatter bench serve`
+/// sweeps `--max-batch` over this model for the `b8/b1` CI floor.
+pub fn mlp() -> Model {
+    let mut rng = XorShiftRng::new(0x317);
+    let layers = vec![
+        Layer::Flatten,
+        linear(&mut rng, "fc1", 28 * 28, 256),
+        Layer::Relu,
+        linear(&mut rng, "fc2", 256, 128),
+        Layer::Relu,
+        linear(&mut rng, "fc3", 128, 10),
+    ];
+    Model { name: "mlp3-fmnist".into(), input_shape: vec![1, 28, 28], layers }
+}
+
 /// Look a model up by name.
 pub fn by_name(name: &str) -> Option<Model> {
     match name {
         "cnn3" | "cnn3-fmnist" => Some(cnn3()),
         "vgg8" | "vgg8-cifar10" => Some(vgg8()),
         "resnet18" | "resnet18-cifar100" => Some(resnet18()),
+        "mlp" | "mlp3" | "mlp3-fmnist" => Some(mlp()),
         _ => None,
     }
 }
@@ -183,10 +205,21 @@ mod tests {
     }
 
     #[test]
+    fn mlp_forward_shape_and_layers() {
+        let m = mlp();
+        let y = m.forward(Tensor::zeros(&[1, 28, 28]), &mut ExactEngine);
+        assert_eq!(y.shape, vec![10]);
+        let names: Vec<String> =
+            m.matmul_layers().iter().map(|(n, _, _)| n.clone()).collect();
+        assert_eq!(names, vec!["fc1", "fc2", "fc3"]);
+    }
+
+    #[test]
     fn by_name_lookup() {
         assert!(by_name("cnn3").is_some());
         assert!(by_name("vgg8").is_some());
         assert!(by_name("resnet18").is_some());
+        assert!(by_name("mlp").is_some());
         assert!(by_name("nope").is_none());
     }
 }

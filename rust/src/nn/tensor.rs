@@ -1,4 +1,8 @@
-//! A tiny row-major f64 tensor — just enough for CNN inference.
+//! A tiny row-major f64 tensor — just enough for CNN inference — and
+//! its batched sibling [`BatchTensor`], the activation representation
+//! the batched-compute serving path streams through the engine (one
+//! `MatmulEngine::matmul_batch` per layer with `n_cols = batch ×
+//! positions`, instead of one engine pass per image).
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -72,6 +76,97 @@ impl Tensor {
     }
 }
 
+/// A batch of same-shaped activations, stored **item-major**: item `b`
+/// occupies `data[b·item_len .. (b+1)·item_len]`, each item laid out
+/// exactly like the corresponding [`Tensor`]. This is the activation
+/// representation of the batched forward path
+/// ([`Model::forward_batch`](super::Model::forward_batch)): elementwise
+/// layers sweep the flat slab once, and matmul-bearing layers lower the
+/// whole batch into a single `in_dim × (batch·cols_per_item)` panel with
+/// item-major columns (item `b`'s columns at `[b·cols_per_item,
+/// (b+1)·cols_per_item)`) — the column-offset convention the engine's
+/// counter-based noise streams key on (see
+/// [`MatmulEngine::matmul_batch`](super::MatmulEngine::matmul_batch)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchTensor {
+    pub batch: usize,
+    /// Per-item shape (shared by every item).
+    pub shape: Vec<usize>,
+    /// Item-major flat storage, `batch · item_len` values.
+    pub data: Vec<f64>,
+}
+
+impl BatchTensor {
+    pub fn zeros(batch: usize, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { batch, shape: shape.to_vec(), data: vec![0.0; batch * n] }
+    }
+
+    /// Pack same-shaped tensors into one batch (item order preserved).
+    pub fn from_items(items: &[Tensor]) -> Self {
+        assert!(!items.is_empty(), "empty batch");
+        let shape = items[0].shape.clone();
+        let n = items[0].numel();
+        let mut data = Vec::with_capacity(items.len() * n);
+        for t in items {
+            assert_eq!(t.shape, shape, "batch items must share one shape");
+            data.extend_from_slice(&t.data);
+        }
+        Self { batch: items.len(), shape, data }
+    }
+
+    /// Split back into per-item tensors (inverse of [`Self::from_items`]).
+    pub fn into_items(self) -> Vec<Tensor> {
+        let n = self.item_len();
+        let mut out = Vec::with_capacity(self.batch);
+        let mut data = self.data;
+        for b in (0..self.batch).rev() {
+            let tail = data.split_off(b * n);
+            out.push(Tensor { shape: self.shape.clone(), data: tail });
+        }
+        out.reverse();
+        out
+    }
+
+    /// Elements per item.
+    pub fn item_len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Item `b`'s flat values.
+    #[inline]
+    pub fn item(&self, b: usize) -> &[f64] {
+        let n = self.item_len();
+        &self.data[b * n..(b + 1) * n]
+    }
+
+    /// Replace the per-item shape (must preserve the per-item count).
+    pub fn reshape_items(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.item_len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Elementwise map over the whole batch.
+    pub fn map(mut self, f: impl Fn(f64) -> f64) -> Self {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+        self
+    }
+
+    /// Elementwise add (batch and shapes must match) — batched residual.
+    pub fn add(&self, other: &BatchTensor) -> BatchTensor {
+        assert_eq!(self.batch, other.batch, "residual batch mismatch");
+        assert_eq!(self.shape, other.shape, "residual shape mismatch");
+        BatchTensor {
+            batch: self.batch,
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +203,42 @@ mod tests {
     #[should_panic]
     fn bad_shape_panics() {
         let _ = Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn batch_roundtrip_preserves_items() {
+        let items = vec![
+            Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            Tensor::from_vec(&[1, 2, 2], vec![5.0, 6.0, 7.0, 8.0]),
+            Tensor::from_vec(&[1, 2, 2], vec![-1.0, 0.0, 0.5, 9.0]),
+        ];
+        let b = BatchTensor::from_items(&items);
+        assert_eq!(b.batch, 3);
+        assert_eq!(b.item(1), &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(b.into_items(), items);
+    }
+
+    #[test]
+    fn batch_map_add_and_reshape() {
+        let a = BatchTensor::from_items(&[
+            Tensor::from_vec(&[2], vec![1.0, -2.0]),
+            Tensor::from_vec(&[2], vec![3.0, 4.0]),
+        ]);
+        let relu = a.clone().map(|v| v.max(0.0));
+        assert_eq!(relu.data, vec![1.0, 0.0, 3.0, 4.0]);
+        let sum = a.add(&a);
+        assert_eq!(sum.data, vec![2.0, -4.0, 6.0, 8.0]);
+        let r = a.reshape_items(&[1, 1, 2]);
+        assert_eq!(r.shape, vec![1, 1, 2]);
+        assert_eq!(r.item_len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "share one shape")]
+    fn mixed_shape_batch_panics() {
+        let _ = BatchTensor::from_items(&[
+            Tensor::zeros(&[2]),
+            Tensor::zeros(&[3]),
+        ]);
     }
 }

@@ -1,0 +1,235 @@
+//! Batched-vs-sequential value identity of the batch-compute pipeline
+//! (the ISSUE 5 tentpole property): `Model::forward_batch` over B
+//! images must be **bit-identical** to B sequential `Model::forward`
+//! calls on an engine with the same starting state — across batch sizes
+//! {1, 2, 5, 8}, engine thread counts {1, 4}, masked/dense layers, and
+//! PD noise on/off.
+//!
+//! The column-offset convention that makes the noisy case hold: a
+//! batched matmul's columns are item-major (`cols_per_item` per image),
+//! and item `g`'s column `t` draws PD noise from the counter-based
+//! stream `(epoch(g), chunk, t)` where `epoch(g) = base +
+//! g·matmuls_per_item + call_index` — exactly the epoch the sequential
+//! schedule would have consumed (`MatmulEngine::begin_batch` declares
+//! the geometry). Normalization is likewise per item: each image
+//! quantizes against its own activation maximum, never a batch-wide
+//! one. The post-batch test asserts the epoch counter also *lands*
+//! where the sequential schedule leaves it, so traffic after a batch
+//! draws identical noise too.
+
+use scatter::config::{AcceleratorConfig, DacKind, SparsitySupport};
+use scatter::coordinator::{EngineOptions, PhotonicEngine};
+use scatter::nn::{Layer, Model, Tensor};
+use scatter::sparsity::LayerMask;
+use std::collections::BTreeMap;
+
+fn acc_cfg(features: SparsitySupport) -> AcceleratorConfig {
+    AcceleratorConfig { features, dac: DacKind::Edac, l_g: 5.0, ..Default::default() }
+}
+
+fn engine(
+    features: SparsitySupport,
+    opts: EngineOptions,
+    masks: &BTreeMap<String, LayerMask>,
+    threads: usize,
+) -> PhotonicEngine {
+    let mut eng = PhotonicEngine::new(acc_cfg(features), opts);
+    eng.set_masks(masks.clone());
+    eng.set_threads(threads);
+    eng
+}
+
+fn images(n: usize, seed: u64) -> Vec<Tensor> {
+    let ds = scatter::data::SyntheticDataset::new(scatter::data::DatasetSpec::fmnist_like());
+    (0..n).map(|i| ds.sample(seed.wrapping_add(i as u64) % 10, i).0).collect()
+}
+
+/// Run the property for one (model, masks) pair over the full
+/// {B} × {threads} × {noise on/off} matrix.
+fn assert_batched_equals_sequential(
+    model: &Model,
+    masks: &BTreeMap<String, LayerMask>,
+    batches: &[usize],
+    label: &str,
+) {
+    let features = SparsitySupport::FULL;
+    for opts in [EngineOptions::IDEAL, EngineOptions::NOISY] {
+        for threads in [1usize, 4] {
+            for &b in batches {
+                let mut seq = engine(features, opts, masks, threads);
+                let mut bat = engine(features, opts, masks, threads);
+                let imgs = images(b, 7);
+                let y_seq: Vec<Tensor> =
+                    imgs.iter().map(|im| model.forward(im.clone(), &mut seq)).collect();
+                let y_bat = model.forward_batch(imgs, &mut bat);
+                assert_eq!(y_bat.len(), b);
+                for (g, (yb, ys)) in y_bat.iter().zip(&y_seq).enumerate() {
+                    assert_eq!(
+                        yb, ys,
+                        "{label}: batched != sequential (pd_noise {}, threads \
+                         {threads}, B {b}, item {g})",
+                        opts.pd_noise
+                    );
+                }
+                // the batch must leave the noise epoch exactly where B
+                // sequential forwards do: the next request on each
+                // engine draws the same bits
+                let after = images(1, 99).pop().unwrap();
+                let y_after_seq = model.forward(after.clone(), &mut seq);
+                let y_after_bat = model.forward(after, &mut bat);
+                assert_eq!(
+                    y_after_seq, y_after_bat,
+                    "{label}: post-batch epoch diverged (pd_noise {}, threads \
+                     {threads}, B {b})",
+                    opts.pd_noise
+                );
+            }
+        }
+    }
+}
+
+/// The full ISSUE-5 matrix on the FC workload (every matmul layer
+/// carries one column per image — the batching-sensitive shape).
+#[test]
+fn mlp_forward_batch_matches_sequential_dense_and_masked() {
+    let model = scatter::nn::models::mlp();
+    let dense = BTreeMap::new();
+    assert_batched_equals_sequential(&model, &dense, &[1, 2, 5, 8], "mlp dense");
+    let masked =
+        scatter::bench::common::build_masks(&model, &acc_cfg(SparsitySupport::FULL), 0.3);
+    assert!(!masked.is_empty(), "mlp must have a maskable middle layer");
+    assert_batched_equals_sequential(&model, &masked, &[1, 2, 5, 8], "mlp masked");
+}
+
+/// The conv workload (im2col lowering: many columns per image) on the
+/// served CNN-3 model, masked like the serving deployment.
+#[test]
+fn cnn3_forward_batch_matches_sequential() {
+    let model = scatter::nn::models::cnn3();
+    let masked =
+        scatter::bench::common::build_masks(&model, &acc_cfg(SparsitySupport::FULL), 0.3);
+    assert_batched_equals_sequential(&model, &masked, &[1, 3], "cnn3 masked");
+}
+
+/// Degenerate (zero-dim) matmul layers return early without consuming a
+/// noise epoch in sequential execution; `matmul_layer_count` must
+/// exclude them from the batched stride or every later item's streams
+/// (and all post-batch traffic) would shift.
+#[test]
+fn degenerate_matmul_layer_keeps_epoch_contract() {
+    let mut rng = scatter::util::XorShiftRng::new(0xDE6);
+    let mut w = vec![0.0; 8 * 784];
+    rng.fill_uniform(&mut w, -0.3, 0.3);
+    let model = Model {
+        name: "degen".into(),
+        input_shape: vec![1, 28, 28],
+        layers: vec![
+            Layer::Flatten,
+            Layer::Linear {
+                name: "fc".into(),
+                out_dim: 8,
+                in_dim: 784,
+                weight: w,
+                bias: vec![0.0; 8],
+            },
+            Layer::Linear {
+                name: "dead".into(),
+                out_dim: 0,
+                in_dim: 8,
+                weight: Vec::new(),
+                bias: Vec::new(),
+            },
+        ],
+    };
+    assert_eq!(model.matmul_layer_count(), 1, "degenerate layer consumes no epoch");
+    assert_eq!(model.matmul_layers().len(), 2, "but still lists for masks/protection");
+    // a zero-dim tail makes every output empty, so the contract is only
+    // observable through the epoch counter: run batched vs sequential,
+    // then probe both engines with a *different* noisy model — if the
+    // degenerate layer had shifted the stride, the probes would draw
+    // different noise bits
+    let probe_model = scatter::nn::models::mlp();
+    for threads in [1usize, 4] {
+        let empty = BTreeMap::new();
+        let mut seq = engine(SparsitySupport::FULL, EngineOptions::NOISY, &empty, threads);
+        let mut bat = engine(SparsitySupport::FULL, EngineOptions::NOISY, &empty, threads);
+        let imgs = images(3, 7);
+        let y_seq: Vec<Tensor> =
+            imgs.iter().map(|im| model.forward(im.clone(), &mut seq)).collect();
+        let y_bat = model.forward_batch(imgs, &mut bat);
+        for (yb, ys) in y_bat.iter().zip(&y_seq) {
+            assert_eq!(yb, ys, "empty outputs must still agree in shape");
+        }
+        let after = images(1, 99).pop().unwrap();
+        assert_eq!(
+            probe_model.forward(after.clone(), &mut seq),
+            probe_model.forward(after, &mut bat),
+            "degenerate layer shifted the noise epoch (threads {threads})"
+        );
+    }
+}
+
+/// Residual blocks (body + shortcut both batched) through the photonic
+/// engine on a small custom model — resnet18 itself is too heavy for a
+/// bit-identity sweep.
+#[test]
+fn residual_conv_model_forward_batch_matches_sequential() {
+    let mut rng = scatter::util::XorShiftRng::new(0x5E5);
+    let mut w1 = vec![0.0; 4 * 1 * 9];
+    rng.fill_uniform(&mut w1, -0.5, 0.5);
+    let mut wr = vec![0.0; 4 * 4 * 9];
+    rng.fill_uniform(&mut wr, -0.5, 0.5);
+    let mut wd = vec![0.0; 4 * 4];
+    rng.fill_uniform(&mut wd, -0.5, 0.5);
+    let mut wl = vec![0.0; 10 * 4 * 49];
+    rng.fill_uniform(&mut wl, -0.3, 0.3);
+    let model = Model {
+        name: "mini-res".into(),
+        input_shape: vec![1, 28, 28],
+        layers: vec![
+            Layer::Conv2d {
+                name: "stem".into(),
+                out_c: 4,
+                in_c: 1,
+                k: 3,
+                stride: 2,
+                pad: 1,
+                weight: w1,
+                bias: vec![0.05; 4],
+            },
+            Layer::Relu,
+            Layer::Residual {
+                body: vec![Layer::Conv2d {
+                    name: "res.conv".into(),
+                    out_c: 4,
+                    in_c: 4,
+                    k: 3,
+                    stride: 1,
+                    pad: 1,
+                    weight: wr,
+                    bias: vec![0.0; 4],
+                }],
+                shortcut: vec![Layer::Conv2d {
+                    name: "res.down".into(),
+                    out_c: 4,
+                    in_c: 4,
+                    k: 1,
+                    stride: 1,
+                    pad: 0,
+                    weight: wd,
+                    bias: vec![0.0; 4],
+                }],
+            },
+            Layer::MaxPool { k: 2 },
+            Layer::Flatten,
+            Layer::Linear {
+                name: "head".into(),
+                out_dim: 10,
+                in_dim: 4 * 49,
+                weight: wl,
+                bias: vec![0.0; 10],
+            },
+        ],
+    };
+    assert_batched_equals_sequential(&model, &BTreeMap::new(), &[1, 4], "mini-res");
+}

@@ -260,6 +260,117 @@ fn all_zero_activations_stay_finite_and_equal_across_paths() {
     }
 }
 
+/// A standalone `matmul_batch` (no `begin_batch` context) must be
+/// bit-identical to the `batch` sequential `matmul` calls it replaces:
+/// item `g` draws the epoch `g` prior plain calls would have consumed,
+/// normalizes against its own activation maximum, and addresses noise
+/// by item-local column — for every thread count, with the full noise
+/// stack on.
+#[test]
+fn standalone_batched_matmul_equals_sequential_item_calls() {
+    let (out, inp) = (70, 90);
+    let mut mrng = XorShiftRng::new(77);
+    let mask = random_mask(2, 2, 64, 64, 3, &mut mrng);
+    let (w, _) = problem(out, inp, 1, 5);
+    for (cpi, batch) in [(1usize, 5usize), (13, 2), (13, 5)] {
+        let n_cols = cpi * batch;
+        let mut rng = XorShiftRng::new(55 + cpi as u64);
+        let items: Vec<Vec<f64>> = (0..batch)
+            .map(|_| {
+                let mut v = vec![0.0; inp * cpi];
+                rng.fill_uniform(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        // pack the items column-wise (item-major columns)
+        let mut packed = vec![0.0; inp * n_cols];
+        for (g, item) in items.iter().enumerate() {
+            for j in 0..inp {
+                packed[j * n_cols + g * cpi..j * n_cols + (g + 1) * cpi]
+                    .copy_from_slice(&item[j * cpi..(j + 1) * cpi]);
+            }
+        }
+        for threads in [1usize, 4] {
+            let mut e_seq = engine_with_mask(
+                SparsitySupport::FULL,
+                Some(mask.clone()),
+                EngineOptions::NOISY,
+            );
+            let mut e_bat = engine_with_mask(
+                SparsitySupport::FULL,
+                Some(mask.clone()),
+                EngineOptions::NOISY,
+            );
+            e_seq.set_threads(threads);
+            e_bat.set_threads(threads);
+            let y_bat = e_bat.matmul_batch("l", &w, &packed, out, inp, cpi, batch);
+            for (g, item) in items.iter().enumerate() {
+                let y_g = e_seq.matmul("l", &w, item, out, inp, cpi);
+                for o in 0..out {
+                    for t in 0..cpi {
+                        assert_eq!(
+                            y_bat[o * n_cols + g * cpi + t],
+                            y_g[o * cpi + t],
+                            "cpi {cpi} batch {batch} threads {threads} item {g} \
+                             row {o} col {t}"
+                        );
+                    }
+                }
+            }
+            // both engines must leave the epoch at the same place
+            let probe = &items[0];
+            assert_eq!(
+                e_bat.matmul("l", &w, probe, out, inp, cpi),
+                e_seq.matmul("l", &w, probe, out, inp, cpi),
+                "post-call epoch diverged (cpi {cpi} batch {batch})"
+            );
+        }
+    }
+}
+
+/// Documents that the batched column-offset convention is load-bearing:
+/// a *flat* call over the same packed panel shares item 0's noise
+/// streams (epoch base, columns 0..cpi) but addresses every later
+/// item's columns globally — so item 0 agrees bit-for-bit and the rest
+/// diverge. Items are identical copies, which pins the activation
+/// maximum (and therefore quantization) equal across both calls; any
+/// difference is purely noise addressing.
+#[test]
+fn batched_noise_addressing_differs_from_flat_call_after_item_zero() {
+    let (out, inp, cpi, batch) = (64, 64, 7, 3);
+    let n_cols = cpi * batch;
+    let (w, item) = problem(out, inp, cpi, 6);
+    let mut packed = vec![0.0; inp * n_cols];
+    for g in 0..batch {
+        for j in 0..inp {
+            packed[j * n_cols + g * cpi..j * n_cols + (g + 1) * cpi]
+                .copy_from_slice(&item[j * cpi..(j + 1) * cpi]);
+        }
+    }
+    let mut e_flat = engine_with_mask(SparsitySupport::FULL, None, EngineOptions::NOISY);
+    let mut e_bat = engine_with_mask(SparsitySupport::FULL, None, EngineOptions::NOISY);
+    let y_flat = e_flat.matmul("l", &w, &packed, out, inp, n_cols);
+    let y_bat = e_bat.matmul_batch("l", &w, &packed, out, inp, cpi, batch);
+    let item_cols = |y: &[f64], g: usize| -> Vec<f64> {
+        let mut v = Vec::with_capacity(out * cpi);
+        for o in 0..out {
+            v.extend_from_slice(&y[o * n_cols + g * cpi..o * n_cols + (g + 1) * cpi]);
+        }
+        v
+    };
+    assert_eq!(
+        item_cols(&y_flat, 0),
+        item_cols(&y_bat, 0),
+        "item 0 shares (epoch, chunk, 0..cpi) streams in both addressings"
+    );
+    assert_ne!(
+        item_cols(&y_flat, 1),
+        item_cols(&y_bat, 1),
+        "later items must re-key noise per item — flat addressing would \
+         correlate a batch's noise with its packing order"
+    );
+}
+
 #[test]
 fn noise_statistics_survive_compilation() {
     // the planned path draws noise from per-(chunk, column) streams

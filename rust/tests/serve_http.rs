@@ -77,6 +77,10 @@ fn http_end_to_end_concurrent_load() {
                                 assert!(
                                     v.get("latency_us").and_then(Json::as_f64).unwrap() > 0.0
                                 );
+                                assert!(
+                                    v.get("energy_mj").and_then(Json::as_f64).unwrap() > 0.0,
+                                    "every 200 carries its batched-pass energy share"
+                                );
                                 ok += 1;
                             }
                             503 => {
@@ -123,10 +127,27 @@ fn http_end_to_end_concurrent_load() {
     assert!(metric_value(&m.body, "scatter_p_avg_watts") > 0.0);
     assert_eq!(metric_value(&m.body, "scatter_queue_depth"), 0.0, "idle after load");
 
+    // batch-occupancy histogram: every dispatched batch is observed,
+    // buckets are cumulative, and the mean is derivable from sum/count
+    let occ_count = metric_value(&m.body, "scatter_batch_occupancy_count");
+    let occ_sum = metric_value(&m.body, "scatter_batch_occupancy_sum");
+    let occ_inf = metric_value(&m.body, "scatter_batch_occupancy_bucket{le=\"+Inf\"}");
+    assert!(occ_count > 0.0, "batches must register in the histogram:\n{}", m.body);
+    assert_eq!(occ_inf, occ_count, "+Inf bucket equals count");
+    assert_eq!(occ_sum, ok as f64, "every served request rode in some batch");
+    assert!(
+        metric_value(&m.body, "scatter_batch_occupancy_bucket{le=\"8\"}") <= occ_count,
+        "buckets are cumulative and bounded by count"
+    );
+
     // graceful drain: the final report agrees with what clients saw
     let report = http.shutdown().expect("drain");
     assert_eq!(report.requests, ok, "served == client-observed 200s");
     assert_eq!(report.shed, shed as u64, "shed == client-observed 503s");
+    assert!(
+        (report.mean_batch_occupancy - occ_sum / occ_count).abs() < 1e-9,
+        "report mean occupancy equals histogram sum/count"
+    );
     assert!(report.energy_mj > 0.0);
     assert!(report.p99_us >= report.p50_us);
 }
