@@ -13,6 +13,11 @@ cannot ship a green build — including the armed batched-compute floor
 criteria — threshold recalibration recovers ≥ ``min_recovery`` of the
 drift-free accuracy while recompiling fewer chunks than naive full
 re-programs, and the serving gauges register — hold on every build.
+``BENCH_chaos.json`` (written by ``scatter bench chaos``, which kills
+every engine worker once on a seeded schedule) gates recovery: zero
+lost replies, at least one supervisor respawn, a full-strength pool at
+drain, and post-fault throughput at or above
+``chaos.min_recovery × pre-fault``.
 
 The engine gate is **armed two ways**:
 
@@ -295,11 +300,55 @@ def check_drift(drift_path, baseline_path, failures):
           f"{chunks:.0f}/{full:.0f} chunks recompiled")
 
 
+def check_chaos(chaos_path, baseline_path, failures):
+    """Self-healing gate over ``BENCH_chaos.json``. Every floor here is
+    machine-independent: lost replies, respawn counts, and pool strength
+    are exact invariants of the supervision protocol, and the recovery
+    ratio compares two windows of the same run on the same runner."""
+    doc = load(chaos_path)
+    base = (load(baseline_path).get("chaos") or {})
+    min_recovery = float(base.get("min_recovery", 0.8))
+
+    if float(doc.get("requests_ok", 0)) <= 0:
+        failures.append(f"{chaos_path}: nothing served — pool never recovered")
+    lost = float(doc.get("lost", -1))
+    if lost != 0:
+        failures.append(
+            f"{chaos_path}: lost={lost:.0f} replies (supervision must conserve "
+            f"one-terminal-outcome-per-request; anything else is a dropped client)"
+        )
+    respawns = float(doc.get("respawns", 0))
+    if respawns < 1:
+        failures.append(
+            f"{chaos_path}: respawns={respawns:.0f} — the kill schedule never "
+            f"exercised the supervisor (seed/plan wiring broken?)"
+        )
+    live = float(doc.get("workers_live", -1))
+    configured = float(doc.get("workers_configured", 0))
+    if live != configured:
+        failures.append(
+            f"{chaos_path}: workers_live={live:.0f} != configured={configured:.0f} "
+            f"at drain — a killed worker stayed dead"
+        )
+    recovery = float(doc.get("recovery_ratio", 0.0))
+    if recovery < min_recovery:
+        failures.append(
+            f"{chaos_path}: post/pre-fault throughput ratio {recovery:.3f} < "
+            f"{min_recovery} (post {float(doc.get('post_fault_rps', 0)):.1f} vs "
+            f"pre {float(doc.get('pre_fault_rps', 0)):.1f} req/s)"
+        )
+    print(
+        f"chaos gate: {chaos_path} recovery {recovery:.2f}x, "
+        f"{respawns:.0f} respawns, {live:.0f}/{configured:.0f} workers live"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--engine", default="BENCH_engine.json")
     ap.add_argument("--server", default=None, help="BENCH_server.json (optional)")
     ap.add_argument("--drift", default=None, help="BENCH_drift.json (optional)")
+    ap.add_argument("--chaos", default=None, help="BENCH_chaos.json (optional)")
     ap.add_argument("--baseline", default="ci/bench_baseline.json")
     args = ap.parse_args()
 
@@ -318,6 +367,11 @@ def main():
             check_drift(args.drift, args.baseline, failures)
         except (OSError, ValueError, KeyError) as e:
             failures.append(f"drift check unreadable: {e!r}")
+    if args.chaos:
+        try:
+            check_chaos(args.chaos, args.baseline, failures)
+        except (OSError, ValueError, KeyError) as e:
+            failures.append(f"chaos check unreadable: {e!r}")
 
     if failures:
         print("\nPERF GATE FAILED:", file=sys.stderr)

@@ -1,0 +1,251 @@
+//! Chaos bench: seeded worker-kill schedule under concurrent load
+//! (`scatter bench chaos`, EXPERIMENTS.md §Robustness).
+//!
+//! Stands up an in-process CNN-3 server with a
+//! [`FaultPlan::kill_each_worker_once`] schedule — every engine worker
+//! panics exactly once, at a seed-chosen early shard — then drives
+//! closed-loop keep-alive clients for the full duration and timestamps
+//! every outcome. Recovery is summarized two ways:
+//!
+//! * **client side**: `pre_fault_rps` (ok-throughput over the first
+//!   quarter of the run, which contains the kills) vs `post_fault_rps`
+//!   (last quarter, after the supervisor has respawned everyone);
+//!   `recovery_ratio = post/pre` is the CI-gated headline;
+//! * **server side**: `/metrics` is scraped before drain for the live
+//!   supervision gauges, and the drain report supplies the authoritative
+//!   respawn/retry/live-worker counts.
+//!
+//! `ci/check_bench.py --chaos` gates: zero lost replies, at least one
+//! respawn, a full-strength pool at drain, and `recovery_ratio` at or
+//! above the baseline floor. Everything is seed-deterministic on the
+//! fault side; only timing varies run to run.
+
+use crate::bench::common::{repo_root_file, BenchCtx, Workload};
+use crate::config::AcceleratorConfig;
+use crate::coordinator::net::{http_request, metric_value, HttpClient, HttpServer, NetConfig};
+use crate::coordinator::{EngineOptions, FaultPlan, InferenceServer, ServerConfig};
+use crate::util::{Json, Table};
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+/// `scatter bench chaos` configuration.
+#[derive(Debug, Clone)]
+pub struct ChaosBenchConfig {
+    pub duration: Duration,
+    /// Concurrent keep-alive client connections.
+    pub concurrency: usize,
+    /// Engine-worker pool size (every worker is killed once).
+    pub workers: usize,
+    /// Seed for the kill schedule — same seed, same `FaultPlan`.
+    pub seed: u64,
+}
+
+impl Default for ChaosBenchConfig {
+    fn default() -> Self {
+        Self {
+            duration: Duration::from_secs(4),
+            concurrency: 4,
+            workers: 3,
+            seed: 42,
+        }
+    }
+}
+
+/// One client request outcome, timestamped relative to load start.
+#[derive(Debug, Clone, Copy)]
+enum Outcome {
+    Ok,
+    /// 503 — shed by admission or worker-lost retry-after.
+    Retryable,
+    /// 504 — deadline expired server-side.
+    Expired,
+    /// Anything else: unexpected status or a connection-level failure
+    /// that ate the reply. The chaos gate requires zero of these.
+    Lost,
+}
+
+/// Closed-loop send loop; every request gets a timestamped outcome.
+fn drive_client(
+    addr: SocketAddr,
+    bodies: &[String],
+    started: Instant,
+    deadline: Instant,
+    seed: usize,
+) -> Vec<(f64, Outcome)> {
+    let mut events = Vec::new();
+    let mut client = match HttpClient::connect(&addr) {
+        Ok(c) => c,
+        Err(_) => return events,
+    };
+    let mut i = seed;
+    while Instant::now() < deadline {
+        let body = &bodies[i % bodies.len()];
+        i += 1;
+        let outcome = match client.request("POST", "/v1/predict", Some(body)) {
+            Ok(resp) => match resp.status {
+                200 => Outcome::Ok,
+                503 => Outcome::Retryable,
+                504 => Outcome::Expired,
+                _ => Outcome::Lost,
+            },
+            Err(_) => {
+                // the reply is gone for good; reconnect and keep driving
+                match HttpClient::connect(&addr) {
+                    Ok(c) => client = c,
+                    Err(_) => {
+                        events.push((started.elapsed().as_secs_f64(), Outcome::Lost));
+                        return events;
+                    }
+                }
+                Outcome::Lost
+            }
+        };
+        events.push((started.elapsed().as_secs_f64(), outcome));
+    }
+    events
+}
+
+/// ok-throughput inside `[lo, hi)` seconds of the run.
+fn window_rps(events: &[(f64, Outcome)], lo: f64, hi: f64) -> f64 {
+    let ok = events
+        .iter()
+        .filter(|(t, o)| *t >= lo && *t < hi && matches!(o, Outcome::Ok))
+        .count();
+    ok as f64 / (hi - lo).max(1e-9)
+}
+
+/// Run the chaos bench, print the summary table, write
+/// `BENCH_chaos.json`, and return the rendered table.
+pub fn run(cfg: &ChaosBenchConfig) -> String {
+    let workers = cfg.workers.max(1);
+    let faults = FaultPlan::kill_each_worker_once(workers, cfg.seed);
+    let fault_desc = faults.describe().join(",");
+
+    let ctx = BenchCtx::new(50);
+    let acc = AcceleratorConfig::default();
+    let (model, _ds, masks) = ctx.deployment(Workload::Cnn3, &acc, 0.3);
+    let server = InferenceServer::spawn(
+        model,
+        acc,
+        EngineOptions::NOISY,
+        masks,
+        ServerConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(2),
+            workers,
+            faults,
+            ..Default::default()
+        },
+    );
+    let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral");
+    let addr = http.local_addr();
+
+    let ds = crate::data::SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
+    let bodies: Vec<String> = (0..16)
+        .map(|i| {
+            let (img, _) = ds.sample(0xBE7, i);
+            Json::obj(vec![("image", Json::arr_f64(&img.data))]).to_string()
+        })
+        .collect();
+
+    let started = Instant::now();
+    let deadline = started + cfg.duration;
+    let events: Vec<(f64, Outcome)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.concurrency.max(1))
+            .map(|c| {
+                let bodies = &bodies;
+                s.spawn(move || drive_client(addr, bodies, started, deadline, c * 7919))
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall_s = started.elapsed().as_secs_f64().max(1e-9);
+
+    // live supervision gauges, scraped while the server is still up
+    let scraped = http_request(&addr, "GET", "/metrics", None)
+        .map(|r| r.body)
+        .unwrap_or_default();
+    let live_restarts = metric_value(&scraped, "scatter_worker_restarts_total");
+    let live_workers = metric_value(&scraped, "scatter_workers_live");
+
+    let report = http.shutdown().expect("drain chaos server");
+
+    let (mut ok, mut shed, mut expired, mut lost) = (0u64, 0u64, 0u64, 0u64);
+    for (_, o) in &events {
+        match o {
+            Outcome::Ok => ok += 1,
+            Outcome::Retryable => shed += 1,
+            Outcome::Expired => expired += 1,
+            Outcome::Lost => lost += 1,
+        }
+    }
+    let total = ok + shed + expired + lost;
+    let quarter = wall_s / 4.0;
+    let pre_fault_rps = window_rps(&events, 0.0, quarter);
+    let post_fault_rps = window_rps(&events, 3.0 * quarter, wall_s);
+    let recovery_ratio =
+        if pre_fault_rps > 0.0 { post_fault_rps / pre_fault_rps } else { 0.0 };
+
+    let mut table = Table::new("chaos bench (kill every worker once under load)")
+        .header(&["metric", "value"]);
+    table.row(vec!["seed / fault plan".into(), format!("{} / {fault_desc}", cfg.seed)]);
+    table.row(vec![
+        "pool".into(),
+        format!("{workers} workers, closed-loop x{}", cfg.concurrency.max(1)),
+    ]);
+    table.row(vec!["duration".into(), format!("{wall_s:.2} s")]);
+    table.row(vec![
+        "ok / shed / expired / lost".into(),
+        format!("{ok} / {shed} / {expired} / {lost}"),
+    ]);
+    table.row(vec![
+        "pre-fault throughput".into(),
+        format!("{pre_fault_rps:.1} req/s (first quarter, kills included)"),
+    ]);
+    table.row(vec![
+        "post-fault throughput".into(),
+        format!("{post_fault_rps:.1} req/s (last quarter)"),
+    ]);
+    table.row(vec!["recovery ratio".into(), format!("{recovery_ratio:.2}x")]);
+    table.row(vec![
+        "respawns / retries".into(),
+        format!("{} / {}", report.worker_restarts, report.request_retries),
+    ]);
+    table.row(vec![
+        "workers live at drain".into(),
+        format!("{} of {workers}", report.workers_live),
+    ]);
+    if live_restarts.is_finite() && live_workers.is_finite() {
+        table.row(vec![
+            "live gauges (pre-drain scrape)".into(),
+            format!("restarts {live_restarts:.0}, live {live_workers:.0}"),
+        ]);
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("chaos".into())),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("faults", Json::Str(fault_desc.clone())),
+        ("duration_s", Json::Num(wall_s)),
+        ("concurrency", Json::Num(cfg.concurrency.max(1) as f64)),
+        ("workers_configured", Json::Num(workers as f64)),
+        ("workers_live", Json::Num(report.workers_live as f64)),
+        ("requests_total", Json::Num(total as f64)),
+        ("requests_ok", Json::Num(ok as f64)),
+        ("shed", Json::Num(shed as f64)),
+        ("expired", Json::Num(expired as f64)),
+        ("lost", Json::Num(lost as f64)),
+        ("respawns", Json::Num(report.worker_restarts as f64)),
+        ("retries", Json::Num(report.request_retries as f64)),
+        ("brownouts", Json::Num(report.brownouts as f64)),
+        ("pre_fault_rps", Json::Num(pre_fault_rps)),
+        ("post_fault_rps", Json::Num(post_fault_rps)),
+        ("recovery_ratio", Json::Num(recovery_ratio)),
+    ]);
+    let path = repo_root_file("BENCH_chaos.json");
+    match std::fs::write(&path, json.to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    table.render()
+}

@@ -106,6 +106,7 @@ fn serve_with_drift(
                 ..DriftConfig::default()
             }),
             policy: ThermalPolicy::Threshold { budget_rad: 0.01 },
+            ..Default::default()
         },
         ..Default::default()
     };

@@ -6,6 +6,7 @@
 //! wins, by what factor, where crossovers fall) is the reproduction target
 //! and is what the assertions in `rust/tests/reproduction.rs` pin down.
 
+pub mod chaos;
 pub mod common;
 pub mod drift;
 pub mod engine;

@@ -477,6 +477,29 @@ impl PhotonicEngine {
         recal_now
     }
 
+    /// Worst residual phase-error estimate (rad) across programmed
+    /// chunks at the last-tick envelope, without advancing the runtime —
+    /// the heartbeat the serving supervisor reads between ticks for its
+    /// brownout decision. 0 while the drift runtime is off.
+    pub fn thermal_phase_error_rad(&self) -> f64 {
+        let Some(env) = self.thermal.as_ref().map(|st| st.env) else { return 0.0 };
+        let mut max_err = 0.0f64;
+        for pl in self.programmed.values() {
+            for chunk in &pl.chunks {
+                if let Some(d) = &chunk.drift {
+                    max_err = max_err.max((env - d.comp_env).abs() * d.pattern_rms);
+                }
+            }
+        }
+        max_err
+    }
+
+    /// Drift envelope (rad) as of the last [`Self::thermal_tick`]
+    /// (0 while the drift runtime is off).
+    pub fn thermal_env_rad(&self) -> f64 {
+        self.thermal.as_ref().map(|st| st.env).unwrap_or(0.0)
+    }
+
     /// Energy/power ledger for everything executed so far.
     pub fn energy_report(&self) -> EnergyReport {
         self.energy.report(self.cfg.freq_ghz)

@@ -1,0 +1,271 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Every recovery path in the supervisor (`server.rs`) is driven by a
+//! [`FaultPlan`]: a seedable, fully explicit schedule of worker faults
+//! addressed by `(worker index, shard sequence number)`. Shard sequence
+//! numbers are per-worker-slot and survive respawns (the dispatcher
+//! numbers shards monotonically per slot across generations), so a plan
+//! like "worker 1 panics at shard 3" fires exactly once no matter how
+//! the surrounding traffic interleaves — chaos tests are reproducible
+//! bit-for-bit, not statistically.
+//!
+//! Spec grammar (CLI `--faults`, comma-separated entries):
+//!
+//! ```text
+//!   panic@w0:s2          worker 0 panics on receiving its shard #2
+//!   stall@w1:s3:500ms    worker 1 sleeps 500 ms before executing shard #3
+//!   slow@*:s5:20ms       every worker delays its shard-#5 replies 20 ms
+//!   drop@w0:s7           worker 0 drops shard #7's reply channels
+//!   kill-each:42         seeded macro: every worker panics once early on
+//! ```
+//!
+//! `panic`, `stall` and `drop` fire while the shard is parked in the
+//! worker's checkpoint slot, so the supervisor recovers the requests
+//! losslessly; `slow` fires after the worker has committed to the shard
+//! and exercises the late-reply path.
+
+use crate::util::XorShiftRng;
+use std::time::Duration;
+
+/// What a worker does when its fault entry matches the current shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic with the shard still parked in the checkpoint slot: the
+    /// supervisor recovers and re-dispatches every request.
+    Panic,
+    /// Sleep with the shard still parked: long stalls trip the watchdog
+    /// and the supervisor steals the shard from the zombie.
+    Stall(Duration),
+    /// Execute normally, then sleep before replying: exercises client
+    /// reply timeouts without losing work.
+    SlowReply(Duration),
+    /// Drop the shard's reply channels without executing: clients see a
+    /// disconnect (retryable), the worker itself stays healthy.
+    DropReplies,
+}
+
+/// One scheduled fault: `worker` of `None` is the `*` wildcard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct FaultEntry {
+    worker: Option<usize>,
+    seq: u64,
+    action: FaultAction,
+}
+
+/// A deterministic schedule of worker faults (empty by default).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    entries: Vec<FaultEntry>,
+}
+
+impl FaultPlan {
+    /// No faults — the production default.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The action scheduled for shard `seq` on worker `worker`, if any.
+    /// First matching entry wins; wildcard entries match every worker.
+    pub fn action(&self, worker: usize, seq: u64) -> Option<FaultAction> {
+        self.entries
+            .iter()
+            .find(|e| e.seq == seq && (e.worker.is_none() || e.worker == Some(worker)))
+            .map(|e| e.action)
+    }
+
+    /// Seeded chaos macro: every worker panics exactly once, at a shard
+    /// sequence drawn from `seed` in `[1, 4)` — early enough that short
+    /// bench runs hit every fault, late enough that each replica serves
+    /// real traffic first. Counter-based, so the same `(workers, seed)`
+    /// always yields the same plan.
+    pub fn kill_each_worker_once(workers: usize, seed: u64) -> Self {
+        let entries = (0..workers)
+            .map(|w| FaultEntry {
+                worker: Some(w),
+                seq: 1 + XorShiftRng::from_stream(seed, &[w as u64]).next_u64() % 3,
+                action: FaultAction::Panic,
+            })
+            .collect();
+        Self { entries }
+    }
+
+    /// Parse a `--faults` spec (see module docs for the grammar).
+    /// `workers` resolves the `kill-each:SEED` macro.
+    pub fn parse(spec: &str, workers: usize) -> Result<Self, String> {
+        let mut plan = Self::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(seed) = part.strip_prefix("kill-each:") {
+                let seed: u64 = seed
+                    .parse()
+                    .map_err(|_| format!("bad kill-each seed in `{part}`"))?;
+                plan.entries
+                    .extend(Self::kill_each_worker_once(workers, seed).entries);
+                continue;
+            }
+            plan.entries.push(parse_entry(part)?);
+        }
+        Ok(plan)
+    }
+
+    /// Human-readable entry list (bench JSON / serve logs).
+    pub fn describe(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .map(|e| {
+                let target = match e.worker {
+                    Some(w) => format!("w{w}"),
+                    None => "*".into(),
+                };
+                match e.action {
+                    FaultAction::Panic => format!("panic@{target}:s{}", e.seq),
+                    FaultAction::Stall(d) => {
+                        format!("stall@{target}:s{}:{}ms", e.seq, d.as_millis())
+                    }
+                    FaultAction::SlowReply(d) => {
+                        format!("slow@{target}:s{}:{}ms", e.seq, d.as_millis())
+                    }
+                    FaultAction::DropReplies => format!("drop@{target}:s{}", e.seq),
+                }
+            })
+            .collect()
+    }
+}
+
+fn parse_entry(part: &str) -> Result<FaultEntry, String> {
+    let (kind, rest) = part
+        .split_once('@')
+        .ok_or_else(|| format!("fault `{part}` missing `@` (kind@wW:sN[:Dms])"))?;
+    let mut fields = rest.split(':');
+    let worker = match fields.next() {
+        Some("*") => None,
+        Some(w) => Some(
+            w.strip_prefix('w')
+                .and_then(|n| n.parse::<usize>().ok())
+                .ok_or_else(|| format!("fault `{part}`: worker must be wN or *"))?,
+        ),
+        None => return Err(format!("fault `{part}` missing worker field")),
+    };
+    let seq = fields
+        .next()
+        .and_then(|s| s.strip_prefix('s'))
+        .and_then(|n| n.parse::<u64>().ok())
+        .ok_or_else(|| format!("fault `{part}`: shard must be sN"))?;
+    let duration = match fields.next() {
+        Some(d) => Some(
+            d.strip_suffix("ms")
+                .and_then(|n| n.parse::<u64>().ok())
+                .map(Duration::from_millis)
+                .ok_or_else(|| format!("fault `{part}`: duration must be <N>ms"))?,
+        ),
+        None => None,
+    };
+    if fields.next().is_some() {
+        return Err(format!("fault `{part}`: too many fields"));
+    }
+    let action = match (kind, duration) {
+        ("panic", None) => FaultAction::Panic,
+        ("drop", None) => FaultAction::DropReplies,
+        ("panic" | "drop", Some(_)) => {
+            return Err(format!("fault `{part}`: {kind} takes no duration"))
+        }
+        ("stall", Some(d)) => FaultAction::Stall(d),
+        ("slow", Some(d)) => FaultAction::SlowReply(d),
+        ("stall" | "slow", None) => {
+            return Err(format!("fault `{part}`: {kind} needs a :<N>ms duration"))
+        }
+        _ => return Err(format!("fault `{part}`: unknown kind `{kind}`")),
+    };
+    Ok(FaultEntry { worker, seq, action })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        let plan =
+            FaultPlan::parse("panic@w0:s2, stall@w1:s3:500ms, slow@*:s5:20ms, drop@w0:s7", 2)
+                .unwrap();
+        assert_eq!(plan.action(0, 2), Some(FaultAction::Panic));
+        assert_eq!(plan.action(1, 2), None, "panic is worker-addressed");
+        assert_eq!(
+            plan.action(1, 3),
+            Some(FaultAction::Stall(Duration::from_millis(500)))
+        );
+        assert_eq!(
+            plan.action(0, 5),
+            Some(FaultAction::SlowReply(Duration::from_millis(20))),
+            "wildcard matches worker 0"
+        );
+        assert_eq!(
+            plan.action(7, 5),
+            Some(FaultAction::SlowReply(Duration::from_millis(20))),
+            "wildcard matches any worker"
+        );
+        assert_eq!(plan.action(0, 7), Some(FaultAction::DropReplies));
+        assert_eq!(plan.action(0, 0), None);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "panic",             // no @
+            "panic@x0:s1",       // bad worker
+            "panic@w0:3",        // shard missing s prefix
+            "panic@w0:s1:10ms",  // panic takes no duration
+            "stall@w0:s1",       // stall needs a duration
+            "stall@w0:s1:10s",   // wrong unit
+            "melt@w0:s1",        // unknown kind
+            "slow@w0:s1:1ms:x",  // trailing field
+            "kill-each:banana",  // bad seed
+        ] {
+            assert!(FaultPlan::parse(bad, 2).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn kill_each_is_seed_deterministic_and_covers_every_worker() {
+        let a = FaultPlan::kill_each_worker_once(3, 0xC0FFEE);
+        let b = FaultPlan::kill_each_worker_once(3, 0xC0FFEE);
+        assert_eq!(a, b, "same seed, same plan — bit for bit");
+        assert_ne!(a, FaultPlan::kill_each_worker_once(3, 1), "seed matters");
+        for w in 0..3 {
+            let seq = (0..8).find(|&s| a.action(w, s) == Some(FaultAction::Panic));
+            let seq = seq.expect("every worker is scheduled to die once");
+            assert!((1..4).contains(&seq), "kill lands early: seq {seq}");
+            assert_eq!(
+                (0..8).filter(|&s| a.action(w, s).is_some()).count(),
+                1,
+                "exactly one fault per worker"
+            );
+        }
+        // the macro parses through the CLI grammar too
+        let via_spec = FaultPlan::parse("kill-each:12648430", 3).unwrap();
+        assert_eq!(via_spec, a, "spec form resolves to the same plan");
+    }
+
+    #[test]
+    fn describe_round_trips_through_parse() {
+        let plan =
+            FaultPlan::parse("panic@w0:s2,stall@w1:s3:500ms,slow@*:s5:20ms,drop@w0:s7", 2)
+                .unwrap();
+        let spec = plan.describe().join(",");
+        assert_eq!(FaultPlan::parse(&spec, 2).unwrap(), plan);
+    }
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_empty());
+        for w in 0..4 {
+            for s in 0..16 {
+                assert_eq!(plan.action(w, s), None);
+            }
+        }
+    }
+}

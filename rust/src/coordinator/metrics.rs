@@ -9,7 +9,7 @@
 //!
 //! [`ServerReport`]: crate::coordinator::ServerReport
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -138,6 +138,19 @@ pub struct ServerMetrics {
     energy: Vec<Mutex<(f64, f64)>>, // per worker: cumulative (energy_mj, busy_ms)
     /// Per-worker thermal-drift gauges, overwritten after every tick.
     thermal: Vec<Mutex<ThermalGauges>>,
+    /// Per-worker liveness (`scatter_worker_up`). A slot starts `true`
+    /// — presumed live until the supervisor proves otherwise — so a
+    /// freshly spawned server never reports a spurious degraded state.
+    worker_up: Vec<AtomicBool>,
+    /// Per-worker thermal-brownout flag (`scatter_brownout_active` is
+    /// the count of set flags).
+    worker_brownout: Vec<AtomicBool>,
+    /// Worker respawns performed by the supervisor.
+    worker_restarts: AtomicU64,
+    /// Loss-driven request re-dispatches performed by the supervisor.
+    request_retries: AtomicU64,
+    /// Cumulative brownout entries across workers.
+    brownouts: AtomicU64,
 }
 
 /// Upper bounds of the batch-occupancy histogram buckets (requests per
@@ -189,6 +202,11 @@ impl ServerMetrics {
             occupancy_sum: AtomicU64::new(0),
             energy: (0..workers.max(1)).map(|_| Mutex::new((0.0, 0.0))).collect(),
             thermal: (0..workers.max(1)).map(|_| Mutex::new(ThermalGauges::default())).collect(),
+            worker_up: (0..workers.max(1)).map(|_| AtomicBool::new(true)).collect(),
+            worker_brownout: (0..workers.max(1)).map(|_| AtomicBool::new(false)).collect(),
+            worker_restarts: AtomicU64::new(0),
+            request_retries: AtomicU64::new(0),
+            brownouts: AtomicU64::new(0),
         }
     }
 
@@ -224,6 +242,35 @@ impl ServerMetrics {
     /// Requests failed because their engine worker died.
     pub fn note_worker_lost(&self, n: u64) {
         self.worker_lost.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Mark worker slot `widx` live (spawned/respawned) or down.
+    pub fn set_worker_up(&self, widx: usize, up: bool) {
+        if let Some(flag) = self.worker_up.get(widx) {
+            flag.store(up, Ordering::Release);
+        }
+    }
+
+    /// Set/clear worker `widx`'s thermal-brownout flag.
+    pub fn set_worker_brownout(&self, widx: usize, on: bool) {
+        if let Some(flag) = self.worker_brownout.get(widx) {
+            flag.store(on, Ordering::Release);
+        }
+    }
+
+    /// One supervisor respawn of a worker slot.
+    pub fn note_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One loss-driven request re-dispatch.
+    pub fn note_request_retry(&self) {
+        self.request_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One brownout entry (a worker crossed its phase-error budget).
+    pub fn note_brownout(&self) {
+        self.brownouts.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Overwrite worker `widx`'s cumulative energy ledger snapshot.
@@ -279,7 +326,22 @@ impl ServerMetrics {
         }
         let batch_occupancy_sum = self.occupancy_sum.load(Ordering::Relaxed);
         let occupancy_count: u64 = batch_occupancy.iter().sum();
+        let worker_up: Vec<bool> =
+            self.worker_up.iter().map(|f| f.load(Ordering::Acquire)).collect();
+        let workers_live = worker_up.iter().filter(|&&up| up).count();
+        let brownout_active = self
+            .worker_brownout
+            .iter()
+            .filter(|f| f.load(Ordering::Acquire))
+            .count();
         MetricsSnapshot {
+            workers_configured: worker_up.len(),
+            workers_live,
+            worker_up,
+            brownout_active,
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            request_retries: self.request_retries.load(Ordering::Relaxed),
+            brownouts_total: self.brownouts.load(Ordering::Relaxed),
             requests,
             batches,
             mean_batch_occupancy: if occupancy_count > 0 {
@@ -310,6 +372,20 @@ impl ServerMetrics {
 /// Point-in-time view of [`ServerMetrics`].
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Worker slots the server was configured with.
+    pub workers_configured: usize,
+    /// Worker slots currently live (respawned as needed).
+    pub workers_live: usize,
+    /// Per-slot liveness, indexed by worker id.
+    pub worker_up: Vec<bool>,
+    /// Worker slots currently browned out (over phase-error budget).
+    pub brownout_active: usize,
+    /// Worker respawns performed by the supervisor.
+    pub worker_restarts: u64,
+    /// Loss-driven request re-dispatches performed by the supervisor.
+    pub request_retries: u64,
+    /// Cumulative brownout entries across workers.
+    pub brownouts_total: u64,
     pub requests: usize,
     pub batches: usize,
     /// Per-bin batch-occupancy counts (bounds [`OCCUPANCY_BUCKETS`] plus
@@ -492,6 +568,45 @@ mod tests {
     fn out_of_range_worker_slot_ignored() {
         let m = ServerMetrics::new(1);
         m.set_worker_energy(5, 1.0, 1.0); // no panic
-        assert_eq!(m.snapshot().energy_mj, 0.0);
+        m.set_worker_up(5, false);
+        m.set_worker_brownout(5, true);
+        let s = m.snapshot();
+        assert_eq!(s.energy_mj, 0.0);
+        assert_eq!(s.workers_live, 1, "out-of-range flags are ignored");
+        assert_eq!(s.brownout_active, 0);
+    }
+
+    #[test]
+    fn worker_up_gauge_tracks_supervision() {
+        let m = ServerMetrics::new(3);
+        let s = m.snapshot();
+        assert_eq!(s.workers_configured, 3);
+        assert_eq!(s.workers_live, 3, "slots are presumed live at spawn");
+        assert_eq!(s.worker_up, vec![true, true, true]);
+        m.set_worker_up(1, false);
+        let s = m.snapshot();
+        assert_eq!(s.workers_live, 2);
+        assert_eq!(s.worker_up, vec![true, false, true]);
+        m.set_worker_up(1, true); // respawned
+        assert_eq!(m.snapshot().workers_live, 3);
+    }
+
+    #[test]
+    fn restart_retry_and_brownout_counters_accumulate() {
+        let m = ServerMetrics::new(2);
+        m.note_worker_restart();
+        m.note_worker_restart();
+        m.note_request_retry();
+        m.note_brownout();
+        m.set_worker_brownout(0, true);
+        let s = m.snapshot();
+        assert_eq!(s.worker_restarts, 2);
+        assert_eq!(s.request_retries, 1);
+        assert_eq!(s.brownouts_total, 1);
+        assert_eq!(s.brownout_active, 1);
+        m.set_worker_brownout(0, false); // cooled down: gauge clears,
+        let s = m.snapshot(); // the cumulative counter does not
+        assert_eq!(s.brownout_active, 0);
+        assert_eq!(s.brownouts_total, 1);
     }
 }

@@ -12,6 +12,9 @@
 //!   graceful drain;
 //! * [`admission`] — the in-flight cap + load-shedding policy in front
 //!   of the service;
+//! * [`faults`] — seedable deterministic fault injection
+//!   ([`FaultPlan`]) driving the supervisor's recovery paths in tests,
+//!   `--faults` runs, and `bench chaos`;
 //! * [`net`] — the std-only HTTP/1.1 front-end (`POST /v1/predict`,
 //!   `GET /healthz`, `GET /metrics`) that puts the service on a socket;
 //! * [`metrics`] — latency/throughput/energy reporting, live and at
@@ -19,6 +22,7 @@
 
 pub mod admission;
 pub mod engine;
+pub mod faults;
 pub mod metrics;
 pub mod net;
 pub mod scheduler;
@@ -26,10 +30,11 @@ pub mod server;
 
 pub use admission::{AdmissionConfig, AdmissionController};
 pub use engine::{EngineOptions, PhotonicEngine, ThermalStatus};
+pub use faults::{FaultAction, FaultPlan};
 pub use metrics::{LatencyRecorder, MetricsSnapshot, ServerMetrics, ThermalGauges};
 pub use net::{HttpServer, NetConfig};
 pub use scheduler::{ChunkAssignment, LayerSchedule, Scheduler};
 pub use server::{
     InferenceServer, Reply, ReplyResult, ServeError, ServerConfig, ServerReport,
-    ThermalServerConfig,
+    SupervisorConfig, ThermalServerConfig,
 };

@@ -290,11 +290,26 @@ fn route(
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let adm = inference.admission();
+            let snap = inference.snapshot();
+            // degraded = still serving but below full strength (a worker
+            // slot down or browned out); down = zero live workers, which
+            // is a 503 so load balancers eject the instance
+            let status = if snap.workers_live == 0 {
+                "down"
+            } else if snap.workers_live < snap.workers_configured || snap.brownout_active > 0 {
+                "degraded"
+            } else {
+                "ok"
+            };
+            let code = if snap.workers_live == 0 { 503 } else { 200 };
             Response::json(
-                200,
+                code,
                 Json::obj(vec![
-                    ("status", Json::Str("ok".into())),
+                    ("status", Json::Str(status.into())),
                     ("in_flight", Json::Num(adm.in_flight() as f64)),
+                    ("workers_live", Json::Num(snap.workers_live as f64)),
+                    ("workers_configured", Json::Num(snap.workers_configured as f64)),
+                    ("brownout_active", Json::Num(snap.brownout_active as f64)),
                 ]),
             )
         }
@@ -400,6 +415,30 @@ fn render_prometheus(inference: &InferenceServer, stats: &HttpStats) -> String {
     let _ = writeln!(o, "scatter_expired_total {}", snap.expired);
     let _ = writeln!(o, "# TYPE scatter_worker_lost_total counter");
     let _ = writeln!(o, "scatter_worker_lost_total {}", snap.worker_lost);
+    let _ = writeln!(o, "# HELP scatter_worker_up Per-slot engine worker liveness.");
+    let _ = writeln!(o, "# TYPE scatter_worker_up gauge");
+    for (widx, up) in snap.worker_up.iter().enumerate() {
+        let _ = writeln!(o, "scatter_worker_up{{worker=\"{widx}\"}} {}", u8::from(*up));
+    }
+    let _ = writeln!(o, "# TYPE scatter_workers_live gauge");
+    let _ = writeln!(o, "scatter_workers_live {}", snap.workers_live);
+    let _ = writeln!(o, "# HELP scatter_worker_restarts_total Supervisor worker respawns.");
+    let _ = writeln!(o, "# TYPE scatter_worker_restarts_total counter");
+    let _ = writeln!(o, "scatter_worker_restarts_total {}", snap.worker_restarts);
+    let _ = writeln!(
+        o,
+        "# HELP scatter_request_retries_total Loss-driven request re-dispatches."
+    );
+    let _ = writeln!(o, "# TYPE scatter_request_retries_total counter");
+    let _ = writeln!(o, "scatter_request_retries_total {}", snap.request_retries);
+    let _ = writeln!(
+        o,
+        "# HELP scatter_brownout_active Workers currently over their phase-error budget."
+    );
+    let _ = writeln!(o, "# TYPE scatter_brownout_active gauge");
+    let _ = writeln!(o, "scatter_brownout_active {}", snap.brownout_active);
+    let _ = writeln!(o, "# TYPE scatter_brownouts_total counter");
+    let _ = writeln!(o, "scatter_brownouts_total {}", snap.brownouts_total);
     let _ = writeln!(o, "# HELP scatter_queue_depth Admitted requests awaiting reply.");
     let _ = writeln!(o, "# TYPE scatter_queue_depth gauge");
     let _ = writeln!(o, "scatter_queue_depth {}", adm.in_flight());

@@ -19,6 +19,38 @@
 //! tokio, so the event loop is std::thread + mpsc — same batching
 //! semantics, simpler runtime.
 //!
+//! ## Self-healing (worker supervision)
+//!
+//! The dispatcher doubles as a supervisor. Each engine worker parks the
+//! shard it just received in a per-generation **checkpoint slot**
+//! ([`WorkerHealth::checkpoint`]) before committing to execute it, and
+//! stamps a heartbeat ([`WorkerHealth::busy_since_ms`]). Every
+//! supervision tick the dispatcher checks each worker:
+//!
+//! * **dead** (thread finished, e.g. a panic) — the checkpointed shard
+//!   is recovered losslessly, the worker is respawned with a fresh
+//!   engine built from the retained config, and the recovered requests
+//!   are re-dispatched with bounded retries + exponential backoff
+//!   ([`SupervisorConfig`]) before surfacing [`ServeError::WorkerLost`];
+//! * **stuck** (busy past the shard watchdog) — the shard is *stolen*
+//!   from the checkpoint slot (try-lock, never blocking) and the zombie
+//!   is detached; because a worker only executes a shard it can still
+//!   take *out* of its slot, execution stays exactly-once.
+//!
+//! Every recovery path is exercisable on demand through a seedable
+//! [`FaultPlan`] (`ServerConfig::faults`, `scatter serve --faults`,
+//! `scatter bench chaos`).
+//!
+//! ## Thermal brownout
+//!
+//! With a drift runtime enabled and `brownout_budget_rad` set, a worker
+//! whose post-tick phase-error estimate exceeds the budget is marked
+//! **browned out**: the dispatcher steers new shards to cooler replicas
+//! (or, when every replica is hot, halves shard sizes so each ticks and
+//! recalibrates sooner), and the worker force-recalibrates before its
+//! next shard — graceful degradation instead of serving silently
+//! drifted values.
+//!
 //! Overload behavior (the part an open-loop deployment lives or dies
 //! by):
 //!
@@ -28,22 +60,26 @@
 //! * **deadlines** — a request that expires while queued is dropped
 //!   *before* it reaches an engine ([`ServeError::Expired`]), so stale
 //!   work never wastes accelerator time;
-//! * **degraded workers** — a dead engine worker fails its shard's
-//!   requests with [`ServeError::WorkerLost`] and is retired from the
-//!   shard rotation; the service keeps running on the survivors (the
-//!   seed design `panic!`ed the whole process);
+//! * **degraded workers** — a dead engine worker is respawned and its
+//!   in-flight shard re-dispatched; only a slot whose restart budget is
+//!   exhausted is retired, and requests fail with
+//!   [`ServeError::WorkerLost`] only after their retry budget is spent
+//!   (the seed design `panic!`ed the whole process);
 //! * **graceful drain** — [`InferenceServer::shutdown`] stops accepting,
-//!   finishes everything in flight, and emits the final [`ServerReport`].
+//!   finishes everything in flight (supervision stays live mid-drain),
+//!   and emits the final [`ServerReport`].
 
 use crate::coordinator::admission::{AdmissionConfig, AdmissionController, Permit};
 use crate::coordinator::engine::{EngineOptions, PhotonicEngine};
+use crate::coordinator::faults::{FaultAction, FaultPlan};
 use crate::coordinator::metrics::{MetricsSnapshot, ServerMetrics, ThermalGauges};
 use crate::exec::partition_ranges;
 use crate::nn::{Model, Tensor};
 use crate::thermal::{DriftConfig, ThermalPolicy};
 use crate::AcceleratorConfig;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -65,6 +101,10 @@ pub struct ServerConfig {
     /// (`drift: None`) reproduces the seed behavior: phases frozen at
     /// programming time, no drift, no recalibration.
     pub thermal: ThermalServerConfig,
+    /// Worker supervision: watchdog, retry budget, restart budget.
+    pub supervisor: SupervisorConfig,
+    /// Deterministic fault injection (empty in production).
+    pub faults: FaultPlan,
 }
 
 /// Thermal-drift runtime knobs for the serving stack. Each engine
@@ -77,6 +117,39 @@ pub struct ThermalServerConfig {
     pub drift: Option<DriftConfig>,
     /// When/how workers recalibrate (ignored while `drift` is `None`).
     pub policy: ThermalPolicy,
+    /// `Some(budget)` enables thermal brownout: a worker whose
+    /// post-tick phase-error estimate exceeds `budget` rad is steered
+    /// around and force-recalibrated before its next shard.
+    pub brownout_budget_rad: Option<f64>,
+}
+
+/// Supervision policy: how failures are detected and how hard the
+/// dispatcher tries to heal before giving up.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// A worker busy on one shard longer than this is declared stuck:
+    /// its checkpointed shard is stolen and the worker replaced.
+    pub watchdog: Duration,
+    /// Re-dispatch attempts per request after a worker loss before the
+    /// request fails with [`ServeError::WorkerLost`].
+    pub max_retries: u32,
+    /// Base retry backoff; re-dispatch attempt `k` waits `backoff ×
+    /// 2^(k−1)`.
+    pub backoff: Duration,
+    /// Respawn budget per worker slot; 0 retires a dead worker forever
+    /// (the pre-supervision behavior).
+    pub max_restarts: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        Self {
+            watchdog: Duration::from_secs(30),
+            max_retries: 3,
+            backoff: Duration::from_millis(2),
+            max_restarts: u64::MAX,
+        }
+    }
 }
 
 impl Default for ServerConfig {
@@ -88,8 +161,18 @@ impl Default for ServerConfig {
             engine_threads: 1,
             admission: AdmissionConfig::default(),
             thermal: ThermalServerConfig::default(),
+            supervisor: SupervisorConfig::default(),
+            faults: FaultPlan::none(),
         }
     }
+}
+
+/// Poison-recovering lock: a panicked holder leaves the data intact for
+/// our protocols (the checkpoint slot holds plain owned requests; the
+/// server handle holds channel ends), so recover instead of cascading
+/// the panic into every caller.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 struct Request {
@@ -98,12 +181,21 @@ struct Request {
     deadline: Option<Instant>,
     permit: Permit,
     reply: Sender<ReplyResult>,
+    /// Loss-driven re-dispatches so far (backpressure requeues are free).
+    retries: u32,
 }
 
 impl Request {
     fn expired(&self, now: Instant) -> bool {
         self.deadline.is_some_and(|d| now >= d)
     }
+}
+
+/// Terminal failure: release the admission slot, then answer.
+fn fail_request(req: Request, err: ServeError) {
+    let Request { permit, reply, .. } = req;
+    drop(permit);
+    let _ = reply.send(Err(err));
 }
 
 /// One served prediction.
@@ -127,8 +219,8 @@ pub enum ServeError {
     /// The deadline passed while the request was queued; it was dropped
     /// before wasting engine time.
     Expired,
-    /// The engine worker holding the request died before replying; the
-    /// request is safe to retry (it never executed to completion).
+    /// Every re-dispatch attempt ran out of live workers; the request is
+    /// safe to retry (it never executed to completion).
     WorkerLost,
 }
 
@@ -160,6 +252,8 @@ pub struct ServerReport {
     /// `max_batch` compute amortization traffic actually realized.
     pub mean_batch_occupancy: f64,
     pub workers: usize,
+    /// Worker slots still live (respawned as needed) at shutdown.
+    pub workers_live: usize,
     pub mean_latency_us: f64,
     pub p50_us: u64,
     pub p99_us: u64,
@@ -170,8 +264,15 @@ pub struct ServerReport {
     pub shed: u64,
     /// Admitted requests dropped on an expired deadline.
     pub expired: u64,
-    /// Admitted requests failed by a dead engine worker.
+    /// Admitted requests failed by a dead engine worker after their
+    /// retry budget was spent.
     pub worker_lost: u64,
+    /// Worker respawns performed by the supervisor.
+    pub worker_restarts: u64,
+    /// Loss-driven request re-dispatches performed by the supervisor.
+    pub request_retries: u64,
+    /// Thermal brownout entries across workers.
+    pub brownouts: u64,
     /// Thermal recalibration actions across workers (0 = runtime off).
     pub recalibrations: u64,
     /// Chunks recompiled by thermal recalibration across workers.
@@ -179,110 +280,264 @@ pub struct ServerReport {
 }
 
 /// A shard of a dynamic batch, tagged with the full batch size (clients
-/// observe the batch they rode in, not the shard).
+/// observe the batch they rode in, not the shard) and its per-slot
+/// sequence number (monotone across worker generations — the fault
+/// plan's address space).
 struct Shard {
     requests: Vec<Request>,
     batch_size: usize,
+    seq: u64,
 }
 
 /// Depth of each engine worker's shard queue. Small on purpose: the
-/// dispatcher blocking on a busy worker is backpressure, and the
-/// admission cap already bounds total queued work.
+/// dispatcher plans shards only onto workers with in-flight headroom
+/// below this depth (capacity-aware dispatch), and the admission cap
+/// already bounds total queued work.
 const WORKER_QUEUE_DEPTH: usize = 2;
 
-fn spawn_engine_worker(
-    widx: usize,
+/// How often the dispatcher wakes to run supervision while idle.
+const SUPERVISE_TICK: Duration = Duration::from_millis(10);
+
+/// Shared per-generation worker state: heartbeat, checkpoint slot,
+/// completion counter, brownout flag. A respawn allocates a fresh
+/// `WorkerHealth`, so a detached zombie can never corrupt the state of
+/// its replacement.
+struct WorkerHealth {
+    /// Heartbeat: ms since the dispatcher epoch when the current shard
+    /// was received (`u64::MAX` = idle). The watchdog reads this.
+    busy_since_ms: AtomicU64,
+    /// Shards fully accounted by this generation.
+    done: AtomicU64,
+    /// Post-tick phase-error estimate exceeded the brownout budget.
+    brownout: AtomicBool,
+    /// The checkpoint slot: a shard parks here from receive until the
+    /// worker commits to executing it, so the supervisor can recover it
+    /// losslessly from a dead or stuck worker.
+    checkpoint: Mutex<Option<Shard>>,
+}
+
+impl WorkerHealth {
+    fn new() -> Self {
+        Self {
+            busy_since_ms: AtomicU64::new(u64::MAX),
+            done: AtomicU64::new(0),
+            brownout: AtomicBool::new(false),
+            checkpoint: Mutex::new(None),
+        }
+    }
+
+    fn begin_busy(&self, epoch: Instant) {
+        let ms = Instant::now().saturating_duration_since(epoch).as_millis() as u64;
+        self.busy_since_ms.store(ms, Ordering::Release);
+    }
+
+    fn end_busy(&self) {
+        self.busy_since_ms.store(u64::MAX, Ordering::Release);
+    }
+
+    /// How long the current shard has been in progress, if any.
+    fn busy_for(&self, epoch: Instant, now: Instant) -> Option<Duration> {
+        let since = self.busy_since_ms.load(Ordering::Acquire);
+        if since == u64::MAX {
+            return None;
+        }
+        Some(now.saturating_duration_since(epoch + Duration::from_millis(since)))
+    }
+}
+
+/// Everything needed to (re)build an engine worker — retained by the
+/// dispatcher so the supervisor can respawn with a fresh engine.
+struct WorkerContext {
     model: Model,
     cfg: AcceleratorConfig,
     opts: EngineOptions,
     masks: std::collections::BTreeMap<String, crate::sparsity::LayerMask>,
     engine_threads: usize,
     thermal: ThermalServerConfig,
+    faults: FaultPlan,
     metrics: Arc<ServerMetrics>,
+    /// Time origin for the heartbeat encoding.
+    epoch: Instant,
+}
+
+/// One live worker generation.
+struct WorkerGen {
+    tx: SyncSender<Shard>,
+    handle: JoinHandle<()>,
+    health: Arc<WorkerHealth>,
+}
+
+/// Dispatcher-side bookkeeping for one worker slot across generations.
+struct WorkerSlot {
+    widx: usize,
+    /// Respawns performed on this slot.
+    restarts: u64,
+    /// Next shard sequence number (monotone across generations, so the
+    /// fault plan's addresses survive respawns).
+    seq_next: u64,
+    /// Shards sent to the CURRENT generation.
+    sent: u64,
+    /// `None` = retired (restart budget exhausted).
+    gen: Option<WorkerGen>,
+}
+
+impl WorkerSlot {
+    /// Shards sent to the current generation and not yet accounted.
+    fn in_flight(&self) -> u64 {
+        match &self.gen {
+            Some(g) => self.sent.saturating_sub(g.health.done.load(Ordering::Acquire)),
+            None => 0,
+        }
+    }
+}
+
+fn spawn_engine_worker(ctx: &Arc<WorkerContext>, widx: usize) -> WorkerGen {
+    let (tx, rx) = mpsc::sync_channel::<Shard>(WORKER_QUEUE_DEPTH);
+    let health = Arc::new(WorkerHealth::new());
+    ctx.metrics.set_worker_up(widx, true);
+    let handle = {
+        let ctx = Arc::clone(ctx);
+        let health = Arc::clone(&health);
+        std::thread::spawn(move || run_engine_worker(ctx, widx, health, rx))
+    };
+    WorkerGen { tx, handle, health }
+}
+
+fn run_engine_worker(
+    ctx: Arc<WorkerContext>,
+    widx: usize,
+    health: Arc<WorkerHealth>,
     rx: Receiver<Shard>,
-) -> JoinHandle<()> {
-    std::thread::spawn(move || {
-        let mut engine = PhotonicEngine::new(cfg, opts);
-        engine.set_threads(engine_threads);
-        engine.set_masks(masks);
-        // §4.1: deploy the final linear layer on non-adjacent MZI
-        // columns (crosstalk-protected readout)
-        if let Some((last, _, _)) = model.matmul_layers().last() {
-            engine.set_protected([last.clone()].into_iter().collect());
-        }
-        // thermal-drift runtime: this worker's replica drifts with wall
-        // time (scaled) and its own served-request self-heating
-        let time_scale = thermal.drift.as_ref().map(|d| d.time_scale);
-        if let Some(drift) = thermal.drift {
-            engine.set_thermal(
-                DriftConfig { worker_id: widx as u64, ..drift },
-                thermal.policy,
-            );
-        }
-        let started = Instant::now();
-        let mut served: u64 = 0;
-        while let Ok(shard) = rx.recv() {
-            let batch_size = shard.batch_size;
-            // second-chance deadline check, hoisted to ONE scan over the
-            // whole shard *before* batch assembly: requests that expired
-            // in this worker's shard queue never inflate the batched
-            // matmul's column count
-            let now = Instant::now();
-            let (live, dead): (Vec<Request>, Vec<Request>) =
-                shard.requests.into_iter().partition(|r| !r.expired(now));
-            if !dead.is_empty() {
-                metrics.note_expired(dead.len() as u64);
-                for req in dead {
-                    let Request { permit, reply, .. } = req;
-                    drop(permit);
-                    let _ = reply.send(Err(ServeError::Expired));
-                }
+) {
+    let mut engine = PhotonicEngine::new(ctx.cfg.clone(), ctx.opts);
+    engine.set_threads(ctx.engine_threads);
+    engine.set_masks(ctx.masks.clone());
+    // §4.1: deploy the final linear layer on non-adjacent MZI
+    // columns (crosstalk-protected readout)
+    if let Some((last, _, _)) = ctx.model.matmul_layers().last() {
+        engine.set_protected([last.clone()].into_iter().collect());
+    }
+    // thermal-drift runtime: this worker's replica drifts with wall
+    // time (scaled) and its own served-request self-heating
+    let time_scale = ctx.thermal.drift.as_ref().map(|d| d.time_scale);
+    if let Some(drift) = ctx.thermal.drift.clone() {
+        engine.set_thermal(
+            DriftConfig { worker_id: widx as u64, ..drift },
+            ctx.thermal.policy,
+        );
+    }
+    let started = Instant::now();
+    let mut served: u64 = 0;
+    while let Ok(shard) = rx.recv() {
+        let seq = shard.seq;
+        let batch_size = shard.batch_size;
+        health.begin_busy(ctx.epoch);
+        // checkpoint: park the shard where the supervisor can reach it.
+        // From here until the take() below, a death or watchdog theft
+        // loses nothing — the requests live in the slot, unexecuted.
+        *lock_clean(&health.checkpoint) = Some(shard);
+        match ctx.faults.action(widx, seq) {
+            Some(FaultAction::Panic) => {
+                // the shard stays parked: the supervisor recovers it
+                panic!("injected fault: worker {widx} dies at shard s{seq}");
             }
-            if !live.is_empty() {
-                let n = live.len();
-                let mut images = Vec::with_capacity(n);
-                let mut routing = Vec::with_capacity(n);
-                for req in live {
-                    let Request { image, submitted, permit, reply, .. } = req;
-                    images.push(image);
-                    routing.push((submitted, permit, reply));
-                }
-                // the tentpole: the whole shard is ONE batched forward —
-                // every matmul layer runs once with n_cols = n × positions
-                let e_before = engine.energy_report().energy_mj;
-                let outputs = model.forward_batch(images, &mut engine);
-                // apportion the engine's energy delta by column share
-                // (uniform: same model, same column count per request)
-                let e_each = (engine.energy_report().energy_mj - e_before) / n as f64;
-                served += n as u64;
-                for ((submitted, permit, reply), logits) in routing.into_iter().zip(outputs) {
-                    let class = logits.argmax();
-                    let latency = submitted.elapsed();
-                    metrics.record_served(latency);
-                    // release the slot before replying so a ping-pong
-                    // client can re-submit without a spurious shed
-                    drop(permit);
-                    let _ = reply.send(Ok(Reply {
-                        class,
-                        logits: logits.data,
-                        latency,
-                        batch_size,
-                        energy_mj: e_each,
-                    }));
-                }
+            Some(FaultAction::Stall(d)) => std::thread::sleep(d),
+            Some(FaultAction::DropReplies) => {
+                // reply channels vanish un-sent: clients observe a
+                // disconnect (retryable); the worker stays healthy
+                drop(lock_clean(&health.checkpoint).take());
+                health.done.fetch_add(1, Ordering::AcqRel);
+                health.end_busy();
+                continue;
             }
-            let rep = engine.energy_report();
-            metrics.set_worker_energy(widx, rep.energy_mj, rep.time_ms);
-            // advance the drift runtime once per shard and publish the
-            // post-tick gauges
-            if let Some(scale) = time_scale {
-                let t_s = started.elapsed().as_secs_f64() * scale;
-                if let Some(s) = engine.thermal_tick(t_s, served) {
-                    metrics.set_worker_thermal(widx, ThermalGauges::from(s));
-                }
+            Some(FaultAction::SlowReply(_)) | None => {}
+        }
+        // commit: take the shard back out. An empty slot means the
+        // watchdog already stole it — it belongs to a replacement now.
+        let Some(shard) = lock_clean(&health.checkpoint).take() else {
+            health.end_busy();
+            continue;
+        };
+        if let Some(FaultAction::SlowReply(d)) = ctx.faults.action(widx, seq) {
+            // committed, so this shard is ours alone: a late reply, not
+            // a lost one, even if the watchdog replaces us meanwhile
+            std::thread::sleep(d);
+        }
+        if let Some(budget) = ctx.thermal.brownout_budget_rad {
+            if health.brownout.load(Ordering::Acquire)
+                && engine.thermal_phase_error_rad() > budget
+            {
+                // browned out: restore fidelity before serving more
+                engine.recalibrate_thermal();
             }
         }
-    })
+        // second-chance deadline check, hoisted to ONE scan over the
+        // whole shard *before* batch assembly: requests that expired
+        // in this worker's shard queue never inflate the batched
+        // matmul's column count
+        let now = Instant::now();
+        let (live, dead): (Vec<Request>, Vec<Request>) =
+            shard.requests.into_iter().partition(|r| !r.expired(now));
+        if !dead.is_empty() {
+            ctx.metrics.note_expired(dead.len() as u64);
+            for req in dead {
+                fail_request(req, ServeError::Expired);
+            }
+        }
+        if !live.is_empty() {
+            let n = live.len();
+            let mut images = Vec::with_capacity(n);
+            let mut routing = Vec::with_capacity(n);
+            for req in live {
+                let Request { image, submitted, permit, reply, .. } = req;
+                images.push(image);
+                routing.push((submitted, permit, reply));
+            }
+            // the whole shard is ONE batched forward — every matmul
+            // layer runs once with n_cols = n × positions
+            let e_before = engine.energy_report().energy_mj;
+            let outputs = ctx.model.forward_batch(images, &mut engine);
+            // apportion the engine's energy delta by column share
+            // (uniform: same model, same column count per request)
+            let e_each = (engine.energy_report().energy_mj - e_before) / n as f64;
+            served += n as u64;
+            for ((submitted, permit, reply), logits) in routing.into_iter().zip(outputs) {
+                let class = logits.argmax();
+                let latency = submitted.elapsed();
+                ctx.metrics.record_served(latency);
+                // release the slot before replying so a ping-pong
+                // client can re-submit without a spurious shed
+                drop(permit);
+                let _ = reply.send(Ok(Reply {
+                    class,
+                    logits: logits.data,
+                    latency,
+                    batch_size,
+                    energy_mj: e_each,
+                }));
+            }
+        }
+        health.done.fetch_add(1, Ordering::AcqRel);
+        health.end_busy();
+        let rep = engine.energy_report();
+        ctx.metrics.set_worker_energy(widx, rep.energy_mj, rep.time_ms);
+        // advance the drift runtime once per shard and publish the
+        // post-tick gauges + brownout state
+        if let Some(scale) = time_scale {
+            let t_s = started.elapsed().as_secs_f64() * scale;
+            if let Some(s) = engine.thermal_tick(t_s, served) {
+                if let Some(budget) = ctx.thermal.brownout_budget_rad {
+                    let hot = s.phase_error_rad > budget;
+                    let was = health.brownout.swap(hot, Ordering::AcqRel);
+                    ctx.metrics.set_worker_brownout(widx, hot);
+                    if hot && !was {
+                        ctx.metrics.note_brownout();
+                    }
+                }
+                ctx.metrics.set_worker_thermal(widx, ThermalGauges::from(s));
+            }
+        }
+    }
 }
 
 /// Handle to a running inference server. Cheap to share behind an
@@ -339,14 +594,15 @@ impl InferenceServer {
     /// Errors instead of panicking (the seed `expect`ed on a dead
     /// dispatcher): [`crate::Error::Busy`] when admission sheds the
     /// request, [`crate::Error::Runtime`] when the server is draining or
-    /// the dispatcher died.
+    /// the dispatcher died. A poisoned handle lock (some caller panicked
+    /// mid-submit) is recovered, not propagated.
     pub fn submit_with_deadline(
         &self,
         image: Tensor,
         deadline: Option<Duration>,
     ) -> crate::Result<Receiver<ReplyResult>> {
         let permit = self.admission.try_admit()?;
-        let tx = match &*self.tx.lock().unwrap() {
+        let tx = match &*lock_clean(&self.tx) {
             Some(tx) => tx.clone(),
             None => {
                 return Err(crate::Error::Runtime(
@@ -362,6 +618,7 @@ impl InferenceServer {
             deadline: self.admission.deadline_from(now, deadline),
             permit,
             reply: reply_tx,
+            retries: 0,
         };
         tx.send(req).map_err(|_| {
             crate::Error::Runtime("inference dispatcher disconnected".into())
@@ -385,19 +642,210 @@ impl InferenceServer {
     }
 
     /// Graceful drain: stop accepting (subsequent [`submit`]s get
-    /// [`crate::Error::Runtime`]), finish every in-flight request, join
-    /// the workers, and return the final report. Errors on double
-    /// shutdown or a panicked dispatcher.
+    /// [`crate::Error::Runtime`]), finish every in-flight request —
+    /// supervision keeps running, so a worker dying mid-drain is still
+    /// healed — join the workers, and return the final report. Errors on
+    /// double shutdown or a panicked dispatcher.
     ///
     /// [`submit`]: InferenceServer::submit
     pub fn shutdown(&self) -> crate::Result<ServerReport> {
-        drop(self.tx.lock().unwrap().take());
-        let handle = self.dispatcher.lock().unwrap().take().ok_or_else(|| {
+        drop(lock_clean(&self.tx).take());
+        let handle = lock_clean(&self.dispatcher).take().ok_or_else(|| {
             crate::Error::Runtime("inference server already shut down".into())
         })?;
         handle
             .join()
             .map_err(|_| crate::Error::Runtime("inference dispatcher panicked".into()))
+    }
+}
+
+/// Park a lost shard's requests for re-dispatch, failing the ones whose
+/// retry budget is spent.
+fn requeue_lost(
+    requests: Vec<Request>,
+    retry_q: &mut Vec<(Instant, Request)>,
+    sup: &SupervisorConfig,
+    metrics: &ServerMetrics,
+    now: Instant,
+) {
+    let mut failed = 0u64;
+    for mut req in requests {
+        if req.retries >= sup.max_retries {
+            failed += 1;
+            fail_request(req, ServeError::WorkerLost);
+        } else {
+            req.retries += 1;
+            // exponential backoff: base × 2^(attempt−1)
+            let delay = sup.backoff.saturating_mul(1u32 << (req.retries - 1).min(20));
+            metrics.note_request_retry();
+            retry_q.push((now + delay, req));
+        }
+    }
+    if failed > 0 {
+        metrics.note_worker_lost(failed);
+    }
+}
+
+/// One supervision pass: reap dead workers, steal from stuck ones,
+/// respawn within budget, and requeue recovered requests.
+fn supervise(
+    slots: &mut [WorkerSlot],
+    ctx: &Arc<WorkerContext>,
+    sup: &SupervisorConfig,
+    retry_q: &mut Vec<(Instant, Request)>,
+) {
+    let now = Instant::now();
+    for slot in slots.iter_mut() {
+        let (dead, stuck) = match &slot.gen {
+            Some(g) => {
+                let dead = g.handle.is_finished();
+                let stuck = !dead
+                    && g.health
+                        .busy_for(ctx.epoch, now)
+                        .is_some_and(|d| d >= sup.watchdog);
+                (dead, stuck)
+            }
+            None => continue,
+        };
+        if !dead && !stuck {
+            continue;
+        }
+        // retire this generation. Dropping the tx ends a stuck zombie's
+        // loop at its next recv (it may still drain already-queued
+        // shards — late replies, not double execution: the checkpoint
+        // protocol keeps execution exactly-once).
+        let gen = slot.gen.take().expect("checked above");
+        drop(gen.tx);
+        if dead {
+            let _ = gen.handle.join(); // reap; a panic is already handled
+        } // stuck: detach — never block the dispatcher on a zombie
+        ctx.metrics.set_worker_up(slot.widx, false);
+        ctx.metrics.set_worker_brownout(slot.widx, false);
+        // recover the checkpointed shard: a dead worker's slot is free
+        // (poison recovered); for a stuck one only try_lock — a held
+        // lock means the worker is actively moving, nothing to steal
+        let recovered = if dead {
+            lock_clean(&gen.health.checkpoint).take()
+        } else {
+            match gen.health.checkpoint.try_lock() {
+                Ok(mut g) => g.take(),
+                Err(_) => None,
+            }
+        };
+        if let Some(shard) = recovered {
+            requeue_lost(shard.requests, retry_q, sup, &ctx.metrics, now);
+        }
+        slot.sent = 0;
+        if slot.restarts < sup.max_restarts {
+            // warm restart: fresh engine from the retained config, same
+            // worker id (drift fingerprints + metric slots stay stable)
+            slot.restarts += 1;
+            ctx.metrics.note_worker_restart();
+            slot.gen = Some(spawn_engine_worker(ctx, slot.widx));
+        }
+    }
+}
+
+/// Brownout-aware shard planning over available workers (`(slot index,
+/// browned-out)` pairs). Cool workers absorb the whole batch in
+/// contiguous near-equal shards; when every available replica is hot,
+/// availability wins over strict fidelity — shards are halved so each
+/// hot replica ticks and recalibrates sooner.
+fn plan_shards(
+    n: usize,
+    avail: &[(usize, bool)],
+    max_batch: usize,
+) -> Vec<(usize, std::ops::Range<usize>)> {
+    let cool: Vec<usize> =
+        avail.iter().filter(|(_, hot)| !hot).map(|&(i, _)| i).collect();
+    if !cool.is_empty() {
+        return partition_ranges(n, cool.len())
+            .into_iter()
+            .enumerate()
+            .map(|(k, r)| (cool[k], r))
+            .collect();
+    }
+    let half = (max_batch / 2).max(1);
+    let mut out = Vec::new();
+    let (mut start, mut k) = (0, 0);
+    while start < n {
+        let end = (start + half).min(n);
+        out.push((avail[k % avail.len()].0, start..end));
+        start = end;
+        k += 1;
+    }
+    out
+}
+
+/// Shard `batch` over the available workers. Returns without blocking:
+/// requests that cannot be placed right now are parked in `retry_q`.
+fn dispatch_batch(
+    mut batch: Vec<Request>,
+    slots: &mut [WorkerSlot],
+    retry_q: &mut Vec<(Instant, Request)>,
+    sup: &SupervisorConfig,
+    metrics: &ServerMetrics,
+    max_batch: usize,
+) {
+    let any_live = slots.iter().any(|s| s.gen.is_some());
+    if !any_live {
+        // every restart budget is spent: degrade to failing requests
+        // fast (clients see retryable errors, the process stays up)
+        metrics.note_worker_lost(batch.len() as u64);
+        for req in batch {
+            fail_request(req, ServeError::WorkerLost);
+        }
+        return;
+    }
+    // capacity-aware dispatch: only workers with queue headroom (their
+    // in-flight count below the queue depth) receive shards, so a send
+    // can never block the dispatcher behind a slow or stalled worker
+    let avail: Vec<(usize, bool)> = slots
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| {
+            s.gen.as_ref().and_then(|g| {
+                (s.in_flight() < WORKER_QUEUE_DEPTH as u64)
+                    .then(|| (i, g.health.brownout.load(Ordering::Acquire)))
+            })
+        })
+        .collect();
+    let now = Instant::now();
+    if avail.is_empty() {
+        // live but saturated: park the whole batch for a moment (no
+        // retry charge — backpressure, not failure)
+        for req in batch {
+            retry_q.push((now + Duration::from_millis(1), req));
+        }
+        return;
+    }
+    let batch_size = batch.len();
+    metrics.note_batch();
+    metrics.note_batch_occupancy(batch_size);
+    let plan = plan_shards(batch.len(), &avail, max_batch);
+    for (slot_idx, range) in plan.into_iter().rev() {
+        let requests: Vec<Request> = batch.drain(range).collect();
+        let slot = &mut slots[slot_idx];
+        let gen = slot.gen.as_ref().expect("planned over live slots");
+        let shard = Shard { requests, batch_size, seq: slot.seq_next };
+        match gen.tx.try_send(shard) {
+            Ok(()) => {
+                slot.seq_next += 1;
+                slot.sent += 1;
+            }
+            Err(mpsc::TrySendError::Full(shard)) => {
+                // only reachable when the halving path stacks several
+                // shards on one hot worker: park, no retry charge
+                for req in shard.requests {
+                    retry_q.push((now + Duration::from_millis(1), req));
+                }
+            }
+            Err(mpsc::TrySendError::Disconnected(shard)) => {
+                // died since the last supervision pass; the next pass
+                // respawns it, these requests ride the retry path
+                requeue_lost(shard.requests, retry_q, sup, metrics, now);
+            }
+        }
     }
 }
 
@@ -413,97 +861,123 @@ fn run_dispatcher(
     rx: Receiver<Request>,
 ) -> ServerReport {
     let n_workers = server_cfg.workers.max(1);
-    let mut worker_txs: Vec<Option<SyncSender<Shard>>> = Vec::with_capacity(n_workers);
-    let mut handles = Vec::with_capacity(n_workers);
-    for widx in 0..n_workers {
-        let (wtx, wrx) = mpsc::sync_channel::<Shard>(WORKER_QUEUE_DEPTH);
-        handles.push(spawn_engine_worker(
+    let sup = server_cfg.supervisor.clone();
+    let ctx = Arc::new(WorkerContext {
+        model,
+        cfg,
+        opts,
+        masks,
+        engine_threads: server_cfg.engine_threads.max(1),
+        thermal: server_cfg.thermal.clone(),
+        faults: server_cfg.faults.clone(),
+        metrics: Arc::clone(&metrics),
+        epoch: Instant::now(),
+    });
+    let mut slots: Vec<WorkerSlot> = (0..n_workers)
+        .map(|widx| WorkerSlot {
             widx,
-            model.clone(),
-            cfg.clone(),
-            opts,
-            masks.clone(),
-            server_cfg.engine_threads.max(1),
-            server_cfg.thermal.clone(),
-            Arc::clone(&metrics),
-            wrx,
-        ));
-        worker_txs.push(Some(wtx));
-    }
+            restarts: 0,
+            seq_next: 0,
+            sent: 0,
+            gen: Some(spawn_engine_worker(&ctx, widx)),
+        })
+        .collect();
 
     let started = Instant::now();
+    let mut retry_q: Vec<(Instant, Request)> = Vec::new();
+    let mut inbox_open = true;
     loop {
-        // block for the first request (or shutdown)
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break,
-        };
-        // dynamic batching: drain until max_batch or timeout
-        let mut batch = vec![first];
-        let deadline = Instant::now() + server_cfg.batch_timeout;
-        while batch.len() < server_cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
+        supervise(&mut slots, &ctx, &sup, &mut retry_q);
+        // due retries seed the batch ahead of fresh arrivals
+        let mut batch: Vec<Request> = Vec::new();
+        let now = Instant::now();
+        let mut i = 0;
+        while i < retry_q.len() && batch.len() < server_cfg.max_batch {
+            if retry_q[i].0 <= now {
+                batch.push(retry_q.remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        if inbox_open && batch.is_empty() {
+            // wait for work, bounded so supervision (and pending
+            // retries) stay live
+            let mut wait = SUPERVISE_TICK;
+            if let Some(due) = retry_q.iter().map(|(d, _)| *d).min() {
+                let until = due.saturating_duration_since(now);
+                wait = wait.min(until.max(Duration::from_millis(1)));
+            }
+            match rx.recv_timeout(wait) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => inbox_open = false,
+            }
+        }
+        if inbox_open && !batch.is_empty() {
+            // dynamic batching: top up until max_batch or timeout
+            let deadline = Instant::now() + server_cfg.batch_timeout;
+            while batch.len() < server_cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        inbox_open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if batch.is_empty() {
+            // inbox closed: drain. Keep supervising until no retry is
+            // pending and every dispatched shard is accounted — a
+            // worker dying mid-drain is still healed.
+            if !inbox_open
+                && retry_q.is_empty()
+                && slots.iter().map(WorkerSlot::in_flight).sum::<u64>() == 0
+            {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
+            if !inbox_open {
+                std::thread::sleep(Duration::from_millis(1));
             }
+            continue;
         }
         // drop expired requests before they cost engine time
         let now = Instant::now();
-        let (mut batch, dead): (Vec<Request>, Vec<Request>) =
+        let (batch, dead): (Vec<Request>, Vec<Request>) =
             batch.into_iter().partition(|r| !r.expired(now));
         if !dead.is_empty() {
             metrics.note_expired(dead.len() as u64);
             for req in dead {
-                let _ = req.reply.send(Err(ServeError::Expired));
+                fail_request(req, ServeError::Expired);
             }
         }
         if batch.is_empty() {
             continue;
         }
-        let alive: Vec<usize> = worker_txs
-            .iter()
-            .enumerate()
-            .filter_map(|(i, t)| t.is_some().then_some(i))
-            .collect();
-        if alive.is_empty() {
-            // every engine is gone: degrade to failing requests fast
-            // (clients see retryable errors, the process stays up)
-            metrics.note_worker_lost(batch.len() as u64);
-            for req in batch {
-                let _ = req.reply.send(Err(ServeError::WorkerLost));
-            }
-            continue;
-        }
-        let batch_size = batch.len();
-        metrics.note_batch();
-        metrics.note_batch_occupancy(batch_size);
-        // shard the batch across live engine workers (contiguous
-        // near-equal splits; lone requests go to the first live worker)
-        let ranges = partition_ranges(batch.len(), alive.len());
-        for (k, range) in ranges.into_iter().enumerate().rev() {
-            let requests: Vec<Request> = batch.drain(range).collect();
-            let widx = alive[k];
-            let sent = worker_txs[widx]
-                .as_ref()
-                .expect("alive index")
-                .send(Shard { requests, batch_size });
-            if let Err(mpsc::SendError(shard)) = sent {
-                // worker died: retire it and fail its shard's requests
-                // as retryable, instead of aborting the process
-                worker_txs[widx] = None;
-                metrics.note_worker_lost(shard.requests.len() as u64);
-                for req in shard.requests {
-                    let _ = req.reply.send(Err(ServeError::WorkerLost));
-                }
-            }
-        }
+        dispatch_batch(
+            batch,
+            &mut slots,
+            &mut retry_q,
+            &sup,
+            &metrics,
+            server_cfg.max_batch,
+        );
     }
     // shutdown: close worker queues, join, report from the shared ledger
-    worker_txs.clear();
+    let workers_live = slots.iter().filter(|s| s.gen.is_some()).count();
+    let handles: Vec<JoinHandle<()>> = slots
+        .iter_mut()
+        .filter_map(|s| s.gen.take())
+        .map(|g| {
+            drop(g.tx);
+            g.handle
+        })
+        .collect();
     for h in handles {
         let _ = h.join();
     }
@@ -514,6 +988,7 @@ fn run_dispatcher(
         batches: snap.batches,
         mean_batch_occupancy: snap.mean_batch_occupancy,
         workers: n_workers,
+        workers_live,
         mean_latency_us: snap.mean_us,
         p50_us: snap.p50_us,
         p99_us: snap.p99_us,
@@ -525,6 +1000,9 @@ fn run_dispatcher(
         shed: admission.shed_total(),
         expired: snap.expired,
         worker_lost: snap.worker_lost,
+        worker_restarts: snap.worker_restarts,
+        request_retries: snap.request_retries,
+        brownouts: snap.brownouts_total,
         recalibrations: snap.recalibrations,
         recal_chunks: snap.recal_chunks,
     }
@@ -596,6 +1074,8 @@ mod tests {
         assert!(report.p99_us >= report.p50_us);
         assert_eq!(report.shed, 0);
         assert_eq!(report.expired, 0);
+        assert_eq!(report.worker_restarts, 0, "no faults, no restarts");
+        assert_eq!(report.workers_live, 1);
     }
 
     /// The batched engine pass must return exactly what per-request
@@ -666,6 +1146,7 @@ mod tests {
         let report = server.shutdown().expect("report");
         assert_eq!(report.requests, 9);
         assert_eq!(report.workers, 3);
+        assert_eq!(report.workers_live, 3);
         assert!(report.energy_mj > 0.0, "all workers account energy");
     }
 
@@ -747,6 +1228,7 @@ mod tests {
                         ..DriftConfig::default()
                     }),
                     policy: ThermalPolicy::Threshold { budget_rad: 0.01 },
+                    brownout_budget_rad: None,
                 },
                 ..Default::default()
             },
@@ -797,5 +1279,220 @@ mod tests {
             other => panic!("expected Runtime error after shutdown, got {other:?}"),
         }
         assert!(server.shutdown().is_err(), "double shutdown is an error");
+    }
+
+    #[test]
+    fn plan_shards_steers_and_halves() {
+        // all cool: near-equal contiguous partition over every worker
+        let plan = plan_shards(6, &[(0, false), (1, false), (2, false)], 8);
+        assert_eq!(plan, vec![(0, 0..2), (1, 2..4), (2, 4..6)]);
+        // a hot replica gets NO new traffic while cool ones exist
+        let plan = plan_shards(6, &[(0, false), (1, true), (2, false)], 8);
+        assert_eq!(plan.iter().map(|(w, _)| *w).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(plan.iter().map(|(_, r)| r.len()).sum::<usize>(), 6);
+        // every replica hot: serve anyway at half shard size, round-robin
+        let plan = plan_shards(8, &[(0, true), (1, true)], 8);
+        assert!(plan.iter().all(|(_, r)| r.len() <= 4), "{plan:?}");
+        assert_eq!(plan.iter().map(|(_, r)| r.len()).sum::<usize>(), 8);
+        assert_eq!(plan[0].0, 0);
+        assert_eq!(plan[1].0, 1);
+        // degenerate: max_batch 1 still makes progress
+        let plan = plan_shards(3, &[(0, true)], 1);
+        assert_eq!(plan.len(), 3);
+        assert!(plan.iter().all(|(w, r)| *w == 0 && r.len() == 1));
+    }
+
+    /// Satellite: a caller panicking while holding the handle locks must
+    /// not poison the server for everyone else.
+    #[test]
+    fn submit_survives_poisoned_handle_lock() {
+        let server = Arc::new(InferenceServer::spawn(
+            crate::nn::models::cnn3(),
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig {
+                max_batch: 2,
+                batch_timeout: Duration::from_millis(1),
+                ..Default::default()
+            },
+        ));
+        let poisoner = Arc::clone(&server);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.tx.lock().unwrap();
+            panic!("poison the handle lock");
+        })
+        .join();
+        assert!(server.tx.is_poisoned(), "precondition: lock is poisoned");
+        let rx = server.submit(sample_img(0, 0)).expect("submit recovers the lock");
+        assert!(rx.recv_timeout(Duration::from_secs(120)).expect("reply").is_ok());
+        let report = server.shutdown().expect("shutdown recovers the lock");
+        assert_eq!(report.requests, 1);
+    }
+
+    /// Tentpole: an injected worker panic loses nothing — the
+    /// supervisor recovers the checkpointed shard, respawns the worker,
+    /// and the retried requests produce bit-identical logits (IDEAL has
+    /// no per-call randomness, and the respawned engine reprograms from
+    /// the same retained config).
+    #[test]
+    fn supervisor_respawns_after_injected_panic() {
+        let model = crate::nn::models::cnn3();
+        let server = InferenceServer::spawn(
+            model.clone(),
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig {
+                max_batch: 4,
+                batch_timeout: Duration::from_millis(20),
+                faults: FaultPlan::parse("panic@w0:s0", 1).expect("spec"),
+                supervisor: SupervisorConfig {
+                    backoff: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let images: Vec<Tensor> = (0..4).map(|i| sample_img(5, i)).collect();
+        let rxs: Vec<_> = images
+            .iter()
+            .map(|img| server.submit(img.clone()).expect("admitted"))
+            .collect();
+        let mut offline = PhotonicEngine::new(test_cfg(), EngineOptions::IDEAL);
+        if let Some((last, _, _)) = model.matmul_layers().last() {
+            offline.set_protected([last.clone()].into_iter().collect());
+        }
+        for (img, rx) in images.into_iter().zip(rxs) {
+            let want = model.forward(img, &mut offline);
+            let reply = rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("reply")
+                .expect("served after respawn");
+            assert_eq!(reply.logits, want.data, "warm restart moved bits");
+        }
+        let report = server.shutdown().expect("report");
+        assert_eq!(report.requests, 4, "every request served despite the panic");
+        assert_eq!(report.worker_restarts, 1, "exactly one respawn");
+        assert!(report.request_retries >= 1, "the killed shard was re-dispatched");
+        assert_eq!(report.worker_lost, 0, "nothing surfaced as lost");
+        assert_eq!(report.workers_live, 1, "pool back to full strength");
+    }
+
+    /// Tentpole: the watchdog steals the checkpointed shard from a
+    /// stalled worker and a replacement serves it long before the
+    /// zombie wakes up.
+    #[test]
+    fn watchdog_steals_stalled_shard() {
+        let server = InferenceServer::spawn(
+            crate::nn::models::cnn3(),
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig {
+                max_batch: 2,
+                batch_timeout: Duration::from_millis(20),
+                faults: FaultPlan::parse("stall@w0:s0:20000ms", 1).expect("spec"),
+                supervisor: SupervisorConfig {
+                    watchdog: Duration::from_millis(50),
+                    backoff: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let started = Instant::now();
+        let rxs: Vec<_> =
+            (0..2).map(|i| server.submit(sample_img(4, i)).expect("admitted")).collect();
+        for rx in rxs {
+            let reply = rx
+                .recv_timeout(Duration::from_secs(120))
+                .expect("reply")
+                .expect("served by the replacement");
+            assert_eq!(reply.logits.len(), 10);
+        }
+        assert!(
+            started.elapsed() < Duration::from_secs(15),
+            "served via theft, not by waiting out the stall"
+        );
+        let report = server.shutdown().expect("report");
+        assert_eq!(report.requests, 2);
+        assert_eq!(report.worker_restarts, 1, "the zombie was replaced");
+        assert_eq!(report.worker_lost, 0);
+    }
+
+    /// Tentpole: the retry budget is a real bound — a slot that dies on
+    /// every attempt eventually surfaces `WorkerLost`.
+    #[test]
+    fn retry_budget_exhausts_to_worker_lost() {
+        let server = InferenceServer::spawn(
+            crate::nn::models::cnn3(),
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig {
+                max_batch: 2,
+                batch_timeout: Duration::from_millis(1),
+                faults: FaultPlan::parse("panic@w0:s0,panic@w0:s1", 1).expect("spec"),
+                supervisor: SupervisorConfig {
+                    max_retries: 1,
+                    backoff: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let rx = server.submit(sample_img(0, 0)).expect("admitted");
+        let reply = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
+        assert!(matches!(reply, Err(ServeError::WorkerLost)), "got {reply:?}");
+        let report = server.shutdown().expect("report");
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.worker_lost, 1, "budget exhaustion surfaces WorkerLost");
+        assert_eq!(report.worker_restarts, 2, "both panics healed the slot");
+        assert!(report.request_retries >= 1);
+    }
+
+    /// Tentpole: a replica over its phase-error budget browns out —
+    /// the flag registers, and with the recal policy OFF the only
+    /// recalibrations in the report are the forced brownout ones.
+    #[test]
+    fn brownout_forces_recalibration_and_keeps_serving() {
+        let server = InferenceServer::spawn(
+            crate::nn::models::cnn3(),
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig {
+                max_batch: 1,
+                batch_timeout: Duration::from_millis(1),
+                thermal: ThermalServerConfig {
+                    drift: Some(DriftConfig {
+                        ambient_amp_rad: 0.0,
+                        self_heat_amp_rad: 0.2,
+                        self_heat_tau_reqs: 4.0,
+                        time_scale: 0.0,
+                        ..DriftConfig::default()
+                    }),
+                    policy: ThermalPolicy::Off,
+                    brownout_budget_rad: Some(1e-3),
+                },
+                ..Default::default()
+            },
+        );
+        for i in 0..8 {
+            let rx = server.submit(sample_img(6, i)).expect("admitted");
+            let reply =
+                rx.recv_timeout(Duration::from_secs(120)).expect("reply").expect("served");
+            assert_eq!(reply.logits.len(), 10, "brownout degrades, never drops");
+        }
+        let snap = server.snapshot();
+        assert!(snap.brownouts_total >= 1, "self-heating must trip the budget");
+        let report = server.shutdown().expect("report");
+        assert_eq!(report.requests, 8);
+        assert!(report.brownouts >= 1);
+        assert!(
+            report.recalibrations >= 1,
+            "policy is Off, so any recalibration is brownout-forced: {report:?}"
+        );
     }
 }

@@ -3,11 +3,12 @@
 //! ```text
 //! scatter serve  [--addr 127.0.0.1:8080] [--workers N] [--engine-threads N]
 //!         [--max-batch N] [--max-in-flight N] [--deadline-ms N] [--density D]
-//!         [--thermal off|threshold[:RAD]|periodic[:N]]
-//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|all>
+//!         [--thermal off|threshold[:RAD]|periodic[:N]] [--brownout RAD]
+//!         [--faults SPEC] [--watchdog-ms N]
+//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|chaos|all>
 //!         [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8] [--stages]
 //!         [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]
-//!         [--max-batch 1,8]
+//!         [--max-batch 1,8] [--seed N]
 //! scatter config [--preset default|dense|foundry] [--out FILE]
 //! scatter gamma  [--heatsim]
 //! scatter info
@@ -20,15 +21,20 @@
 //! execution engine and writes `BENCH_engine.json`; `bench serve`
 //! load-tests the TCP endpoint and writes `BENCH_server.json`; `bench
 //! drift` measures accuracy/recalibration under the thermal-drift
-//! schedule and writes `BENCH_drift.json`.
+//! schedule and writes `BENCH_drift.json`; `bench chaos` kills every
+//! worker once (seeded `FaultPlan`) under concurrent load, measures
+//! recovery, and writes `BENCH_chaos.json`.
+//!
+//! `--faults` takes the grammar accepted by `FaultPlan::parse`
+//! (e.g. `panic@w0:s3,stall@w1:s5:200ms` or `kill-each:42`).
 //!
 //! (Hand-rolled parsing: the offline toolchain has no clap.)
 
 use scatter::bench::{self, BenchCtx};
 use scatter::config::AcceleratorConfig;
 use scatter::coordinator::{
-    AdmissionConfig, EngineOptions, HttpServer, InferenceServer, NetConfig, ServerConfig,
-    ThermalServerConfig,
+    AdmissionConfig, EngineOptions, FaultPlan, HttpServer, InferenceServer, NetConfig,
+    ServerConfig, SupervisorConfig, ThermalServerConfig,
 };
 use scatter::thermal::{DriftConfig, ThermalPolicy};
 use std::time::Duration;
@@ -48,11 +54,12 @@ fn main() {
                  \n\
                  serve  [--addr 127.0.0.1:8080] [--workers N] [--engine-threads N]\n\
                  \x20      [--max-batch N] [--max-in-flight N] [--deadline-ms N] [--density D]\n\
-                 \x20      [--thermal off|threshold[:RAD]|periodic[:N]]\n\
-                 bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|all>\n\
+                 \x20      [--thermal off|threshold[:RAD]|periodic[:N]] [--brownout RAD]\n\
+                 \x20      [--faults SPEC] [--watchdog-ms N]\n\
+                 bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|chaos|all>\n\
                  \x20      [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8] [--stages]\n\
                  \x20      [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]\n\
-                 \x20      [--max-batch 1,8]\n\
+                 \x20      [--max-batch 1,8] [--seed N]\n\
                  config [--preset default|dense|foundry] [--out FILE]\n\
                  gamma  [--heatsim]\n\
                  info"
@@ -71,10 +78,37 @@ fn cmd_serve(args: &[String]) {
     };
     let density: f64 =
         flag_value(args, "--density").and_then(|s| s.parse().ok()).unwrap_or(0.3);
+    let workers = parse_usize("--workers", 2);
+    let mut thermal = parse_thermal(flag_value(args, "--thermal"));
+    if let Some(rad) = flag_value(args, "--brownout") {
+        thermal.brownout_budget_rad = Some(rad.parse().unwrap_or_else(|_| {
+            eprintln!("bad --brownout value '{rad}': expected radians (e.g. 0.02)");
+            std::process::exit(2);
+        }));
+    }
+    let faults = match flag_value(args, "--faults") {
+        Some(spec) => FaultPlan::parse(spec, workers).unwrap_or_else(|e| {
+            eprintln!("bad --faults '{spec}': {e}");
+            std::process::exit(2);
+        }),
+        None => FaultPlan::none(),
+    };
+    let mut supervisor = SupervisorConfig::default();
+    if let Some(ms) = flag_value(args, "--watchdog-ms") {
+        supervisor.watchdog = Duration::from_millis(ms.parse().unwrap_or_else(|_| {
+            eprintln!("bad --watchdog-ms value '{ms}': expected milliseconds");
+            std::process::exit(2);
+        }));
+    }
+    if !faults.is_empty() {
+        for line in faults.describe() {
+            eprintln!("fault injection armed: {line}");
+        }
+    }
     let server_cfg = ServerConfig {
         max_batch: parse_usize("--max-batch", 8),
         batch_timeout: Duration::from_millis(4),
-        workers: parse_usize("--workers", 2),
+        workers,
         engine_threads: parse_usize("--engine-threads", 1),
         admission: AdmissionConfig {
             max_in_flight: parse_usize("--max-in-flight", 256),
@@ -83,7 +117,9 @@ fn cmd_serve(args: &[String]) {
                 .map(Duration::from_millis),
             ..Default::default()
         },
-        thermal: parse_thermal(flag_value(args, "--thermal")),
+        thermal,
+        supervisor,
+        faults,
     };
 
     eprintln!("loading CNN-3 deployment (density {density}) ...");
@@ -117,9 +153,11 @@ fn cmd_serve(args: &[String]) {
     match http.shutdown() {
         Ok(r) => eprintln!(
             "served {} requests in {} batches (mean occupancy {:.2}, {:.1} req/s, \
-             p50 {} us, p99 {} us, {:.3} mJ, shed {}, expired {}, recal {}x/{} chunks)",
+             p50 {} us, p99 {} us, {:.3} mJ, shed {}, expired {}, recal {}x/{} chunks, \
+             workers {} live, {} respawns, {} retries, {} brownouts)",
             r.requests, r.batches, r.mean_batch_occupancy, r.throughput_rps, r.p50_us,
-            r.p99_us, r.energy_mj, r.shed, r.expired, r.recalibrations, r.recal_chunks
+            r.p99_us, r.energy_mj, r.shed, r.expired, r.recalibrations, r.recal_chunks,
+            r.workers_live, r.worker_restarts, r.request_retries, r.brownouts
         ),
         Err(e) => eprintln!("shutdown error: {e}"),
     }
@@ -157,7 +195,7 @@ fn parse_thermal(spec: Option<&str>) -> ThermalServerConfig {
         eprintln!("unknown --thermal '{spec}' (off|threshold[:RAD]|periodic[:N])");
         std::process::exit(2);
     };
-    ThermalServerConfig { drift: Some(DriftConfig::default()), policy }
+    ThermalServerConfig { drift: Some(DriftConfig::default()), policy, ..Default::default() }
 }
 
 fn cmd_bench(args: &[String]) {
@@ -227,6 +265,21 @@ fn cmd_bench(args: &[String]) {
                     .collect();
             }
             println!("{}", bench::serve::run(&cfg));
+        }
+        "chaos" => {
+            let cfg = bench::chaos::ChaosBenchConfig {
+                duration: Duration::from_secs_f64(
+                    flag_value(args, "--duration").and_then(|s| s.parse().ok()).unwrap_or(4.0),
+                ),
+                concurrency: flag_value(args, "--concurrency")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(4),
+                workers: flag_value(args, "--workers")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(3),
+                seed: flag_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42),
+            };
+            println!("{}", bench::chaos::run(&cfg));
         }
         "all" => bench::run_all(&ctx),
         other => {

@@ -1,0 +1,127 @@
+//! Deterministic chaos test (the PR's acceptance scenario): a seeded
+//! [`FaultPlan`] kills every engine worker exactly once under concurrent
+//! load. Conservation — every submitted request resolves to exactly one
+//! terminal outcome, never a hang — plus full pool recovery and
+//! same-seed reproducibility of both the kill schedule and the served
+//! logits (IDEAL engines are replicas, so respawned workers cannot move
+//! bits).
+
+use scatter::config::{AcceleratorConfig, DacKind, SparsitySupport};
+use scatter::coordinator::{
+    EngineOptions, FaultPlan, InferenceServer, ServerConfig,
+};
+use scatter::nn::Tensor;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+const SEED: u64 = 0xC0FFEE;
+const WORKERS: usize = 3;
+const CLIENTS: usize = 8;
+const PER_CLIENT: usize = 8;
+
+fn test_cfg() -> AcceleratorConfig {
+    AcceleratorConfig {
+        features: SparsitySupport::NONE,
+        dac: DacKind::Edac,
+        l_g: 5.0,
+        ..Default::default()
+    }
+}
+
+fn sample_img() -> Tensor {
+    let ds = scatter::data::SyntheticDataset::new(scatter::data::DatasetSpec::fmnist_like());
+    ds.sample(5, 0).0
+}
+
+#[test]
+fn kill_schedule_is_bit_identical_across_reruns() {
+    let a = FaultPlan::kill_each_worker_once(WORKERS, SEED);
+    let b = FaultPlan::kill_each_worker_once(WORKERS, SEED);
+    assert_eq!(a, b, "same seed, same plan");
+    assert_eq!(a.describe(), b.describe());
+    let c = FaultPlan::kill_each_worker_once(WORKERS, SEED + 1);
+    assert_ne!(a.describe(), c.describe(), "seed actually drives the schedule");
+}
+
+#[test]
+fn killing_every_worker_once_conserves_replies_and_restores_the_pool() {
+    let server = InferenceServer::spawn(
+        scatter::nn::models::cnn3(),
+        test_cfg(),
+        EngineOptions::IDEAL,
+        Default::default(),
+        ServerConfig {
+            max_batch: 6,
+            batch_timeout: Duration::from_millis(2),
+            workers: WORKERS,
+            engine_threads: 1,
+            faults: FaultPlan::kill_each_worker_once(WORKERS, SEED),
+            ..Default::default()
+        },
+    );
+
+    // closed-loop clients: each waits for its reply before submitting
+    // the next, so load (and per-worker shard sequence numbers) keeps
+    // advancing until every scheduled kill has fired
+    let img = sample_img();
+    let outcomes: Vec<(u64, u64, Vec<Vec<f64>>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                let server = &server;
+                let img = &img;
+                s.spawn(move || {
+                    let (mut ok, mut err) = (0u64, 0u64);
+                    let mut logits = Vec::new();
+                    for _ in 0..PER_CLIENT {
+                        let rx = server.submit(img.clone()).expect("admitted");
+                        match rx.recv_timeout(Duration::from_secs(120)) {
+                            Ok(Ok(reply)) => {
+                                assert_eq!(reply.logits.len(), 10);
+                                assert!(reply.logits.iter().all(|v| v.is_finite()));
+                                logits.push(reply.logits);
+                                ok += 1;
+                            }
+                            // retry budget spent, or the request rode a
+                            // channel-queued shard a dying worker never
+                            // received: terminal, retryable, conserved
+                            Ok(Err(_)) | Err(RecvTimeoutError::Disconnected) => err += 1,
+                            Err(e @ RecvTimeoutError::Timeout) => {
+                                panic!("reply neither served nor failed: {e:?}")
+                            }
+                        }
+                    }
+                    (ok, err, logits)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    let ok: u64 = outcomes.iter().map(|(o, _, _)| o).sum();
+    let err: u64 = outcomes.iter().map(|(_, e, _)| e).sum();
+    assert_eq!(
+        ok + err,
+        (CLIENTS * PER_CLIENT) as u64,
+        "every request resolved exactly once"
+    );
+    assert!(ok > 0, "the pool kept serving through the kills");
+
+    // IDEAL engines are deterministic replicas: every served reply for
+    // the same image carries bit-identical logits, before and after
+    // every respawn
+    let mut all_logits = outcomes.iter().flat_map(|(_, _, l)| l.iter());
+    if let Some(first) = all_logits.next() {
+        for l in all_logits {
+            assert_eq!(l, first, "a respawned replica moved bits");
+        }
+    }
+
+    let report = server.shutdown().expect("drain");
+    assert_eq!(report.requests as u64, ok, "report agrees with client-observed serves");
+    assert_eq!(
+        report.worker_restarts, WORKERS as u64,
+        "each worker died once and was respawned once"
+    );
+    assert_eq!(report.workers_live, WORKERS, "pool back at full strength");
+    assert!(report.request_retries >= WORKERS as u64, "every kill forced re-dispatch");
+}

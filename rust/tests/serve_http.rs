@@ -1,12 +1,16 @@
 //! End-to-end tests of the networked inference front-end: a real
 //! `TcpListener` on an ephemeral port, concurrent `POST /v1/predict`
 //! clients, admission-control conservation (every request gets exactly
-//! one reply or a 503), live `/metrics`, and graceful drain.
+//! one reply or a 503), live `/metrics`, health degradation under
+//! injected worker faults, and graceful drain.
 
 use scatter::config::{AcceleratorConfig, DacKind, SparsitySupport};
-use scatter::coordinator::net::{http_request, metric_value, HttpServer, NetConfig};
+use scatter::coordinator::net::{
+    http_request, metric_value, HttpClient, HttpServer, NetConfig,
+};
 use scatter::coordinator::{
-    AdmissionConfig, EngineOptions, InferenceServer, ServerConfig,
+    AdmissionConfig, EngineOptions, FaultPlan, InferenceServer, ServerConfig,
+    SupervisorConfig,
 };
 use scatter::util::Json;
 use std::time::Duration;
@@ -20,22 +24,26 @@ fn test_cfg() -> AcceleratorConfig {
     }
 }
 
-fn spawn_http(max_in_flight: usize, workers: usize) -> HttpServer {
+fn spawn_http_cfg(server_cfg: ServerConfig) -> HttpServer {
     let server = InferenceServer::spawn(
         scatter::nn::models::cnn3(),
         test_cfg(),
         EngineOptions::IDEAL,
         Default::default(),
-        ServerConfig {
-            max_batch: 8,
-            batch_timeout: Duration::from_millis(1),
-            workers,
-            engine_threads: 1,
-            admission: AdmissionConfig { max_in_flight, ..Default::default() },
-            ..Default::default()
-        },
+        server_cfg,
     );
     HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral port")
+}
+
+fn spawn_http(max_in_flight: usize, workers: usize) -> HttpServer {
+    spawn_http_cfg(ServerConfig {
+        max_batch: 8,
+        batch_timeout: Duration::from_millis(1),
+        workers,
+        engine_threads: 1,
+        admission: AdmissionConfig { max_in_flight, ..Default::default() },
+        ..Default::default()
+    })
 }
 
 fn predict_body() -> String {
@@ -199,4 +207,158 @@ fn expired_deadline_maps_to_504() {
     let report = http.shutdown().expect("drain");
     assert_eq!(report.expired, 1);
     assert_eq!(report.requests, 0, "expired work never reached an engine");
+}
+
+/// A worker that dies with no restart budget leaves the pool degraded:
+/// requests keep flowing to the survivor, `/healthz` says so, and the
+/// per-worker gauges agree.
+#[test]
+fn healthz_degrades_when_a_worker_stays_down() {
+    let http = spawn_http_cfg(ServerConfig {
+        max_batch: 8,
+        batch_timeout: Duration::from_millis(1),
+        workers: 2,
+        engine_threads: 1,
+        faults: FaultPlan::parse("panic@w0:s0", 2).expect("valid spec"),
+        supervisor: SupervisorConfig { max_restarts: 0, ..Default::default() },
+        ..Default::default()
+    });
+    let addr = http.local_addr();
+    let body = predict_body();
+
+    // the first shard goes to worker 0 and panics with the shard
+    // checkpointed; the supervisor recovers it and (no restart budget)
+    // re-dispatches to worker 1 — the client still gets its 200
+    let resp = http_request(&addr, "POST", "/v1/predict", Some(&body)).expect("reply");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+
+    let health = http_request(&addr, "GET", "/healthz", None).expect("healthz");
+    assert_eq!(health.status, 200, "degraded is alive, not down");
+    assert!(health.body.contains("\"status\":\"degraded\""), "{}", health.body);
+    assert!(health.body.contains("\"workers_live\":1"), "{}", health.body);
+    assert!(health.body.contains("\"workers_configured\":2"), "{}", health.body);
+
+    let m = http_request(&addr, "GET", "/metrics", None).expect("metrics");
+    assert_eq!(metric_value(&m.body, "scatter_worker_up{worker=\"0\"}"), 0.0);
+    assert_eq!(metric_value(&m.body, "scatter_worker_up{worker=\"1\"}"), 1.0);
+    assert_eq!(metric_value(&m.body, "scatter_workers_live"), 1.0);
+    assert_eq!(
+        metric_value(&m.body, "scatter_worker_restarts_total"),
+        0.0,
+        "max_restarts 0 means the death is permanent"
+    );
+    assert_eq!(
+        metric_value(&m.body, "scatter_request_retries_total"),
+        1.0,
+        "the recovered request was retried exactly once"
+    );
+
+    let report = http.shutdown().expect("drain");
+    assert_eq!(report.workers_live, 1);
+    assert_eq!(report.worker_restarts, 0);
+    assert_eq!(report.requests, 1);
+}
+
+/// With the whole pool dead and no restart budget, `/healthz` turns 503
+/// and predicts fail fast with a retryable 503 instead of hanging.
+#[test]
+fn healthz_reports_down_when_no_workers_remain() {
+    let http = spawn_http_cfg(ServerConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(1),
+        workers: 1,
+        engine_threads: 1,
+        faults: FaultPlan::parse("panic@w0:s0", 1).expect("valid spec"),
+        supervisor: SupervisorConfig { max_restarts: 0, ..Default::default() },
+        ..Default::default()
+    });
+    let addr = http.local_addr();
+    let body = predict_body();
+
+    let resp = http_request(&addr, "POST", "/v1/predict", Some(&body)).expect("reply");
+    assert_eq!(resp.status, 503, "only worker dead: retryable, not a hang");
+    assert!(resp.retry_after_s.unwrap_or(0) >= 1, "503 carries Retry-After");
+
+    let health = http_request(&addr, "GET", "/healthz", None).expect("healthz");
+    assert_eq!(health.status, 503, "zero live workers is down, not degraded");
+    assert!(health.body.contains("\"status\":\"down\""), "{}", health.body);
+    assert!(health.body.contains("\"workers_live\":0"), "{}", health.body);
+
+    let report = http.shutdown().expect("drain");
+    assert_eq!(report.workers_live, 0);
+    assert!(report.worker_lost >= 1, "the failed request is accounted");
+}
+
+/// Drain racing a worker panic conserves replies: clients hammering
+/// keep-alive connections while `shutdown()` lands mid-respawn each see
+/// exactly one terminal status per request (200 / 503 / 504) — never a
+/// hang, never a lost reply — and the server's own served count matches
+/// the clients' 200s.
+#[test]
+fn drain_under_fault_conserves_replies() {
+    let http = spawn_http_cfg(ServerConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(1),
+        workers: 1,
+        engine_threads: 1,
+        admission: AdmissionConfig { max_in_flight: 64, ..Default::default() },
+        // seq 0 dies under the warm-up request; seq 3 dies somewhere
+        // inside the race (or never fires — both are fine)
+        faults: FaultPlan::parse("panic@w0:s0,panic@w0:s3", 1).expect("valid spec"),
+        ..Default::default()
+    });
+    let addr = http.local_addr();
+    let body = predict_body();
+
+    // warm-up: consumes the seq-0 panic, proving respawn works before
+    // the drain race starts
+    let resp = http_request(&addr, "POST", "/v1/predict", Some(&body)).expect("reply");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+
+    let (oks, others, report) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let body = &body;
+                s.spawn(move || {
+                    // connect before the drain so the race is over
+                    // in-flight work, not over the listener socket
+                    let mut client = HttpClient::connect(&addr).expect("connect");
+                    let (mut ok, mut other) = (0u64, 0u64);
+                    for _ in 0..4 {
+                        match client.request("POST", "/v1/predict", Some(body)) {
+                            Ok(resp) => match resp.status {
+                                200 => ok += 1,
+                                503 | 504 => other += 1,
+                                s => panic!("unexpected status {s}: {}", resp.body),
+                            },
+                            // the drain closed this keep-alive
+                            // connection after its final response —
+                            // nothing accepted, nothing lost
+                            Err(_) => break,
+                        }
+                    }
+                    (ok, other)
+                })
+            })
+            .collect();
+        let shutdown = s.spawn(|| {
+            std::thread::sleep(Duration::from_millis(30));
+            http.shutdown().expect("drain under fault")
+        });
+        let (mut oks, mut others) = (0u64, 0u64);
+        for h in handles {
+            let (a, b) = h.join().expect("client thread");
+            oks += a;
+            others += b;
+        }
+        (oks, others, shutdown.join().expect("shutdown thread"))
+    });
+    assert_eq!(
+        report.requests as u64,
+        oks + 1,
+        "server-served count equals client-observed 200s (warm-up + {oks} raced, \
+         {others} retryable/expired)"
+    );
+    assert!(report.worker_restarts >= 1, "the seq-0 panic was healed by a respawn");
+    assert_eq!(report.workers_live, 1, "the pool is back at full strength");
 }

@@ -56,7 +56,11 @@ fn spawn_http(policy: ThermalPolicy) -> HttpServer {
             max_batch: 2,
             batch_timeout: Duration::from_millis(1),
             workers: 1,
-            thermal: ThermalServerConfig { drift: Some(heat_only_drift()), policy },
+            thermal: ThermalServerConfig {
+                drift: Some(heat_only_drift()),
+                policy,
+                ..Default::default()
+            },
             ..Default::default()
         },
     );

@@ -22,8 +22,12 @@ echo "== bench smoke: networked serve (2 s closed-loop over TCP + batched-comput
 echo "== bench smoke: thermal drift (policy off vs threshold recalibration) =="
 ./rust/target/release/scatter bench drift --samples 40
 
+echo "== bench smoke: chaos (seeded kill-each-worker-once + recovery gate) =="
+./rust/target/release/scatter bench chaos --duration 4 --concurrency 4 --workers 3 \
+  --seed 42
+
 echo "== perf gate: ci/check_bench.py =="
 python3 ci/check_bench.py --engine BENCH_engine.json --server BENCH_server.json \
-  --drift BENCH_drift.json --baseline ci/bench_baseline.json
+  --drift BENCH_drift.json --chaos BENCH_chaos.json --baseline ci/bench_baseline.json
 
 echo "verify OK"
