@@ -8,7 +8,9 @@ and fails the build when any baselined cell's GMAC/s drops more than
 (written by ``scatter bench serve``) so a broken networked-serving path
 cannot ship a green build — including the armed batched-compute floor
 ``per_image_throughput_b8 / per_image_throughput_b1 >= 1.3`` from the
-``--max-batch`` sweep — and ``BENCH_drift.json`` (written by
+``--max-batch`` sweep and the replica-scaling floor
+``replica_speedup_4_over_1`` from the ``--replicas`` sweep (record-only
+while the baseline holds ``server.replica_speedup: null``) — and ``BENCH_drift.json`` (written by
 ``scatter bench drift``) so the thermal-drift runtime's acceptance
 criteria — threshold recalibration recovers ≥ ``min_recovery`` of the
 drift-free accuracy while recompiling fewer chunks than naive full
@@ -189,6 +191,7 @@ def check_server(server_path, baseline_path, failures):
         if float(server.get("energy_mj", 0.0)) <= 0.0:
             failures.append(f"{server_path}: server.energy_mj not accounted")
     check_batch_speedup(server_path, doc, baseline_path, failures)
+    check_replica_speedup(server_path, doc, baseline_path, failures)
     print(f"server gate: {server_path} structurally valid" if not failures else "")
 
 
@@ -253,6 +256,62 @@ def check_batch_speedup(server_path, doc, baseline_path, failures):
                 f"server gate: WARNING b8 sweep mean occupancy "
                 f"{float(pt.get('mean_occupancy', 0)):.2f} — batches barely formed"
             )
+
+
+def check_replica_speedup(server_path, doc, baseline_path, failures):
+    """Machine-independent replica-scaling floor: the ``--replicas``
+    sweep's ``replica_speedup_4_over_1`` ratio (MLP per-image throughput
+    at 4 replicas over 1, both points from the same bench invocation on
+    the same runner) must clear ``server.replica_speedup.min``. The
+    baseline bootstraps with ``server.replica_speedup: null`` —
+    record-only: the gate prints the fresh ratio and the ready-to-arm
+    block; commit it after the first trusted CI artifact. Deliberate
+    skips (``replica_sweep_skipped``: remote ``--addr`` target, or the
+    sweep disabled) and non-default sweep points are noted, not failed;
+    only an armed floor with *no* sweep evidence fails."""
+    server_base = load(baseline_path).get("server") or {}
+    if "replica_speedup" not in server_base:
+        return
+    spec = server_base["replica_speedup"]
+    ratio = doc.get("replica_speedup_4_over_1")
+    if spec is None:
+        if ratio is not None:
+            print(
+                f"server gate: replica-scaling r4/r1 = {float(ratio):.2f} "
+                f"(record-only; baseline replica_speedup is null)"
+            )
+            print("To arm the replica-scaling floor, replace \"replica_speedup\": null with:")
+            print(json.dumps({"replica_speedup": {"min": 2.0}}, indent=2))
+        else:
+            skipped = doc.get("replica_sweep_skipped")
+            note = f" ({skipped})" if skipped else ""
+            print(f"server gate: replica sweep absent{note} — record-only, nothing to record")
+        return
+    floor = float(spec.get("min", 2.0))
+    if ratio is None:
+        skipped = doc.get("replica_sweep_skipped")
+        if skipped:
+            print(f"server gate: replica sweep skipped ({skipped}) — floor not evaluated")
+            return
+        if doc.get("replicas"):
+            print(
+                "server gate: replica sweep ran without points 1 and 4 — "
+                "floor not evaluated (CI pins --replicas 1,4)"
+            )
+            return
+        failures.append(
+            f"{server_path}: missing replica_speedup_4_over_1 — "
+            f"run 'scatter bench serve' with the --replicas 1,4 sweep"
+        )
+        return
+    ratio = float(ratio)
+    if ratio < floor:
+        failures.append(
+            f"replica-scaling speedup r4/r1 = {ratio:.3f} < floor {floor:.2f} "
+            f"(4 replicas no longer scale over 1 — cluster routing regressed)"
+        )
+    else:
+        print(f"server gate: replica-scaling r4/r1 = {ratio:.2f} (floor {floor:.2f})")
 
 
 def check_drift(drift_path, baseline_path, failures):

@@ -14,9 +14,7 @@
 use scatter::bench::common::{BenchCtx, Workload};
 use scatter::config::AcceleratorConfig;
 use scatter::coordinator::net::{http_request, HttpClient, HttpServer, NetConfig};
-use scatter::coordinator::{
-    AdmissionConfig, EngineOptions, InferenceServer, ServerConfig,
-};
+use scatter::coordinator::{EngineOptions, InferenceServer, ServerConfig};
 use scatter::util::Json;
 use std::time::Duration;
 
@@ -35,14 +33,14 @@ fn main() {
         cfg,
         EngineOptions::NOISY,
         masks,
-        ServerConfig {
-            max_batch: 8,
-            batch_timeout: Duration::from_millis(4),
-            workers: 2,
-            engine_threads: 2,
-            admission: AdmissionConfig { max_in_flight: 128, ..Default::default() },
-            ..Default::default()
-        },
+        ServerConfig::builder()
+            .max_batch(8)
+            .batch_timeout(Duration::from_millis(4))
+            .workers(2)
+            .engine_threads(2)
+            .max_in_flight(128)
+            .build()
+            .expect("example config validates"),
     );
     let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral port");
     let addr = http.local_addr();

@@ -129,13 +129,13 @@ pub fn run(cfg: &ChaosBenchConfig) -> String {
         acc,
         EngineOptions::NOISY,
         masks,
-        ServerConfig {
-            max_batch: 4,
-            batch_timeout: Duration::from_millis(2),
-            workers,
-            faults,
-            ..Default::default()
-        },
+        ServerConfig::builder()
+            .max_batch(4)
+            .batch_timeout(Duration::from_millis(2))
+            .workers(workers)
+            .faults(faults)
+            .build()
+            .expect("chaos bench config validates"),
     );
     let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral");
     let addr = http.local_addr();

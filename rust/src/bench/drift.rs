@@ -93,11 +93,11 @@ fn serve_with_drift(
     masks: BTreeMap<String, LayerMask>,
     requests: usize,
 ) -> ServeGauges {
-    let server_cfg = ServerConfig {
-        max_batch: 4,
-        batch_timeout: Duration::from_millis(2),
-        workers: 2,
-        thermal: ThermalServerConfig {
+    let server_cfg = ServerConfig::builder()
+        .max_batch(4)
+        .batch_timeout(Duration::from_millis(2))
+        .workers(2)
+        .thermal(ThermalServerConfig {
             drift: Some(DriftConfig {
                 ambient_amp_rad: 0.0,
                 self_heat_amp_rad: 0.2,
@@ -107,9 +107,9 @@ fn serve_with_drift(
             }),
             policy: ThermalPolicy::Threshold { budget_rad: 0.01 },
             ..Default::default()
-        },
-        ..Default::default()
-    };
+        })
+        .build()
+        .expect("drift bench config validates");
     let server =
         InferenceServer::spawn(model, cfg.clone(), EngineOptions::NOISY, masks, server_cfg);
     let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral port");

@@ -30,6 +30,16 @@
 //! per-run setup over 8 columns and the per-call overheads (programming
 //! lookups, panel prep, pool fan-out, output alloc, energy recording)
 //! are paid once per batch.
+//!
+//! A second **`--replicas` sweep** measures what the cluster scheduler
+//! buys: for each R it stands up an R-replica server (`max_batch 1`,
+//! one engine thread per replica, so every request is one shard and
+//! the only lever is routing across replicas) over the same MLP
+//! workload and records closed-loop per-image throughput.
+//! `replica_speedup_4_over_1` lands next to the batch ratio as the
+//! machine-independent replica-scaling floor (R=4 runs four engine
+//! passes on four OS threads concurrently, so the ratio clears 2.0
+//! even on modest CI runners).
 
 use crate::bench::common::{repo_root_file, BenchCtx, Workload};
 use crate::config::AcceleratorConfig;
@@ -50,8 +60,11 @@ pub struct ServeBenchConfig {
     pub concurrency: usize,
     /// Drive an already-running server instead of spawning in-process.
     pub addr: Option<String>,
-    /// Shape of the in-process server (ignored with `addr`).
-    pub server: ServerConfig,
+    /// Engine-worker replicas for the in-process main run (ignored
+    /// with `addr`).
+    pub workers: usize,
+    /// Enable work stealing on every in-process server stood up here.
+    pub steal: bool,
     /// Backbone density for the in-process deployment.
     pub density: f64,
     /// `--max-batch` sweep points for the batched-compute comparison
@@ -60,6 +73,11 @@ pub struct ServeBenchConfig {
     /// workload closed-loop on one engine worker and emits
     /// `per_image_throughput_b<N>`.
     pub sweep_max_batch: Vec<usize>,
+    /// `--replicas` sweep points for the replica-scaling comparison
+    /// (same skip rule). Each point serves the MLP workload
+    /// closed-loop at `max_batch 1` across N replicas and emits the
+    /// `replicas` block plus `replica_speedup_4_over_1`.
+    pub sweep_replicas: Vec<usize>,
 }
 
 impl Default for ServeBenchConfig {
@@ -69,13 +87,11 @@ impl Default for ServeBenchConfig {
             duration: Duration::from_secs(2),
             concurrency: 4,
             addr: None,
-            server: ServerConfig {
-                workers: 2,
-                batch_timeout: Duration::from_millis(4),
-                ..Default::default()
-            },
+            workers: 2,
+            steal: false,
             density: 0.3,
             sweep_max_batch: vec![1, 8],
+            sweep_replicas: vec![1, 4],
         }
     }
 }
@@ -192,13 +208,14 @@ fn sweep_point(max_batch: usize, cfg: &ServeBenchConfig, bodies: &[String]) -> S
         acc,
         EngineOptions::NOISY,
         masks,
-        ServerConfig {
-            max_batch,
-            batch_timeout: Duration::from_millis(2),
-            workers: 1,
-            engine_threads: 1,
-            ..Default::default()
-        },
+        ServerConfig::builder()
+            .max_batch(max_batch)
+            .batch_timeout(Duration::from_millis(2))
+            .workers(1)
+            .engine_threads(1)
+            .steal(cfg.steal)
+            .build()
+            .expect("sweep server config validates"),
     );
     let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral");
     let concurrency = cfg.concurrency.max(2 * max_batch).max(1);
@@ -215,6 +232,68 @@ fn sweep_point(max_batch: usize, cfg: &ServeBenchConfig, bodies: &[String]) -> S
         per_image_rps: ok as f64 / wall_s,
         mean_occupancy: report.mean_batch_occupancy,
     }
+}
+
+/// One `--replicas` sweep point measurement.
+struct ReplicaPoint {
+    replicas: usize,
+    ok: u64,
+    errors: u64,
+    wall_s: f64,
+    per_image_rps: f64,
+    /// Batches routed to each replica slot (from the cluster router).
+    routed: Vec<u64>,
+    steals: u64,
+}
+
+/// Closed-loop per-image throughput of the MLP workload across
+/// `replicas` engine workers. `max_batch 1` + one engine thread per
+/// replica make every request its own shard, so throughput scales only
+/// through the cluster router spreading shards across replicas — the
+/// quantity `replica_speedup_4_over_1` gates. Client concurrency is
+/// held at `≥ 2·replicas` so every replica can be kept busy.
+fn replica_point(replicas: usize, cfg: &ServeBenchConfig, bodies: &[String]) -> ReplicaPoint {
+    let acc = AcceleratorConfig::default();
+    let model = crate::nn::models::mlp();
+    let masks = crate::bench::common::build_masks(&model, &acc, cfg.density);
+    let server = InferenceServer::spawn(
+        model,
+        acc,
+        EngineOptions::NOISY,
+        masks,
+        ServerConfig::builder()
+            .max_batch(1)
+            .batch_timeout(Duration::from_millis(1))
+            .workers(replicas)
+            .engine_threads(1)
+            .steal(cfg.steal)
+            .build()
+            .expect("replica sweep config validates"),
+    );
+    let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral");
+    let concurrency = cfg.concurrency.max(2 * replicas).max(1);
+    let (tallies, wall_s) =
+        drive_load(http.local_addr(), bodies, None, cfg.duration, concurrency);
+    let report = http.shutdown().expect("drain replica sweep server");
+    let ok: u64 = tallies.iter().map(|t| t.ok_latencies_us.len() as u64).sum();
+    let errors: u64 = tallies.iter().map(|t| t.errors).sum();
+    ReplicaPoint {
+        replicas,
+        ok,
+        errors,
+        wall_s,
+        per_image_rps: ok as f64 / wall_s,
+        routed: report.routed,
+        steals: report.steals,
+    }
+}
+
+/// Per-image-throughput ratio between the replica sweep points at
+/// `num` and `den` replicas.
+fn replica_speedup(sweep: &[ReplicaPoint], num: usize, den: usize) -> Option<f64> {
+    let n = sweep.iter().find(|p| p.replicas == num)?;
+    let d = sweep.iter().find(|p| p.replicas == den)?;
+    (d.per_image_rps > 0.0).then(|| n.per_image_rps / d.per_image_rps)
 }
 
 /// Per-image-throughput ratio between the sweep points at `num` and
@@ -241,7 +320,12 @@ pub fn run(cfg: &ServeBenchConfig) -> String {
                 acc,
                 EngineOptions::NOISY,
                 masks,
-                cfg.server.clone(),
+                ServerConfig::builder()
+                    .workers(cfg.workers)
+                    .batch_timeout(Duration::from_millis(4))
+                    .steal(cfg.steal)
+                    .build()
+                    .expect("bench serve config validates"),
             );
             let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral");
             (http.local_addr(), Some(http))
@@ -267,6 +351,16 @@ pub fn run(cfg: &ServeBenchConfig) -> String {
     } else {
         if !cfg.sweep_max_batch.is_empty() {
             eprintln!("note: --max-batch sweep skipped (remote --addr target)");
+        }
+        Vec::new()
+    };
+
+    // ---- replica-scaling sweep (in-process targets only) ----
+    let rsweep: Vec<ReplicaPoint> = if cfg.addr.is_none() {
+        cfg.sweep_replicas.iter().map(|&r| replica_point(r, cfg, &bodies)).collect()
+    } else {
+        if !cfg.sweep_replicas.is_empty() {
+            eprintln!("note: --replicas sweep skipped (remote --addr target)");
         }
         Vec::new()
     };
@@ -327,6 +421,23 @@ pub fn run(cfg: &ServeBenchConfig) -> String {
     let speedup = batch_speedup(&sweep, 8, 1);
     if let Some(s) = speedup {
         table.row(vec!["batched-compute speedup b8/b1".into(), format!("{s:.2}x")]);
+    }
+    for pt in &rsweep {
+        let routed: Vec<String> = pt.routed.iter().map(|r| r.to_string()).collect();
+        table.row(vec![
+            format!("mlp per-image tput @R={}", pt.replicas),
+            format!(
+                "{:.1} img/s (routed [{}], {} steals, {} ok)",
+                pt.per_image_rps,
+                routed.join(" "),
+                pt.steals,
+                pt.ok
+            ),
+        ]);
+    }
+    let rspeedup = replica_speedup(&rsweep, 4, 1);
+    if let Some(s) = rspeedup {
+        table.row(vec!["replica-scaling speedup r4/r1".into(), format!("{s:.2}x")]);
     }
 
     let mut pairs = vec![
@@ -390,6 +501,59 @@ pub fn run(cfg: &ServeBenchConfig) -> String {
                                     (
                                         "mean_occupancy",
                                         Json::Num(pt.mean_occupancy),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
+    // replica-scaling sweep: same top-level/skip-stamp conventions as
+    // the batch sweep (ci/check_bench.py: replica_speedup_4_over_1)
+    if rsweep.is_empty() {
+        let reason = if cfg.addr.is_some() {
+            "remote --addr target (replica count not reconfigurable from here)"
+        } else {
+            "disabled via --replicas"
+        };
+        pairs.push(("replica_sweep_skipped", Json::Str(reason.into())));
+    }
+    if let Some(s) = rspeedup {
+        pairs.push(("replica_speedup_4_over_1", Json::Num(s)));
+    }
+    if !rsweep.is_empty() {
+        pairs.push((
+            "replicas",
+            Json::obj(vec![
+                ("workload", Json::Str("mlp".into())),
+                ("duration_s_per_point", Json::Num(cfg.duration.as_secs_f64())),
+                ("steal", Json::Bool(cfg.steal)),
+                (
+                    "points",
+                    Json::Arr(
+                        rsweep
+                            .iter()
+                            .map(|pt| {
+                                Json::obj(vec![
+                                    ("replicas", Json::Num(pt.replicas as f64)),
+                                    ("requests_ok", Json::Num(pt.ok as f64)),
+                                    ("errors", Json::Num(pt.errors as f64)),
+                                    ("wall_s", Json::Num(pt.wall_s)),
+                                    (
+                                        "per_image_throughput",
+                                        Json::Num(pt.per_image_rps),
+                                    ),
+                                    ("steals", Json::Num(pt.steals as f64)),
+                                    (
+                                        "routed",
+                                        Json::Arr(
+                                            pt.routed
+                                                .iter()
+                                                .map(|&r| Json::Num(r as f64))
+                                                .collect(),
+                                        ),
                                     ),
                                 ])
                             })

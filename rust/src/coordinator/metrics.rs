@@ -151,6 +151,18 @@ pub struct ServerMetrics {
     request_retries: AtomicU64,
     /// Cumulative brownout entries across workers.
     brownouts: AtomicU64,
+    /// Shards the cluster scheduler routed to each replica (the
+    /// steering observable: a hot replica's share visibly drops).
+    routed: Vec<AtomicU64>,
+    /// Shards executed by a replica other than the one they were
+    /// routed to (work stealing, when enabled).
+    steals: AtomicU64,
+    /// Per-replica heat score (milliradians of accumulated phase
+    /// error), overwritten after every thermal tick.
+    replica_heat_milli: Vec<AtomicU64>,
+    /// Per-replica shard queue depth (enqueued + executing),
+    /// overwritten by the dispatcher each supervision pass.
+    replica_queue_depth: Vec<AtomicU64>,
 }
 
 /// Upper bounds of the batch-occupancy histogram buckets (requests per
@@ -207,6 +219,10 @@ impl ServerMetrics {
             worker_restarts: AtomicU64::new(0),
             request_retries: AtomicU64::new(0),
             brownouts: AtomicU64::new(0),
+            routed: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            steals: AtomicU64::new(0),
+            replica_heat_milli: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            replica_queue_depth: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
@@ -271,6 +287,32 @@ impl ServerMetrics {
     /// One brownout entry (a worker crossed its phase-error budget).
     pub fn note_brownout(&self) {
         self.brownouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One shard routed to replica `widx` by the cluster scheduler.
+    pub fn note_routed(&self, widx: usize) {
+        if let Some(slot) = self.routed.get(widx) {
+            slot.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One shard stolen off another replica's queue.
+    pub fn note_steal(&self) {
+        self.steals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Overwrite replica `widx`'s heat score (milliradians).
+    pub fn set_replica_heat(&self, widx: usize, milli: u64) {
+        if let Some(slot) = self.replica_heat_milli.get(widx) {
+            slot.store(milli, Ordering::Relaxed);
+        }
+    }
+
+    /// Overwrite replica `widx`'s shard queue depth gauge.
+    pub fn set_replica_queue_depth(&self, widx: usize, depth: u64) {
+        if let Some(slot) = self.replica_queue_depth.get(widx) {
+            slot.store(depth, Ordering::Relaxed);
+        }
     }
 
     /// Overwrite worker `widx`'s cumulative energy ledger snapshot.
@@ -342,6 +384,18 @@ impl ServerMetrics {
             worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
             request_retries: self.request_retries.load(Ordering::Relaxed),
             brownouts_total: self.brownouts.load(Ordering::Relaxed),
+            routed: self.routed.iter().map(|s| s.load(Ordering::Relaxed)).collect(),
+            steals: self.steals.load(Ordering::Relaxed),
+            replica_heat_milli: self
+                .replica_heat_milli
+                .iter()
+                .map(|s| s.load(Ordering::Relaxed))
+                .collect(),
+            replica_queue_depth: self
+                .replica_queue_depth
+                .iter()
+                .map(|s| s.load(Ordering::Relaxed))
+                .collect(),
             requests,
             batches,
             mean_batch_occupancy: if occupancy_count > 0 {
@@ -386,6 +440,14 @@ pub struct MetricsSnapshot {
     pub request_retries: u64,
     /// Cumulative brownout entries across workers.
     pub brownouts_total: u64,
+    /// Shards routed to each replica by the cluster scheduler.
+    pub routed: Vec<u64>,
+    /// Shards executed away from their routed replica (work stealing).
+    pub steals: u64,
+    /// Per-replica heat score (milliradians of phase error).
+    pub replica_heat_milli: Vec<u64>,
+    /// Per-replica shard queue depth at the last supervision pass.
+    pub replica_queue_depth: Vec<u64>,
     pub requests: usize,
     pub batches: usize,
     /// Per-bin batch-occupancy counts (bounds [`OCCUPANCY_BUCKETS`] plus
@@ -589,6 +651,25 @@ mod tests {
         assert_eq!(s.worker_up, vec![true, false, true]);
         m.set_worker_up(1, true); // respawned
         assert_eq!(m.snapshot().workers_live, 3);
+    }
+
+    #[test]
+    fn routing_steal_and_heat_gauges_track_the_cluster() {
+        let m = ServerMetrics::new(3);
+        m.note_routed(0);
+        m.note_routed(0);
+        m.note_routed(2);
+        m.note_steal();
+        m.set_replica_heat(1, 42);
+        m.set_replica_heat(1, 7); // gauge overwrites, not adds
+        m.set_replica_queue_depth(2, 5);
+        m.note_routed(9); // out-of-range slots are ignored
+        m.set_replica_heat(9, 1);
+        let s = m.snapshot();
+        assert_eq!(s.routed, vec![2, 0, 1]);
+        assert_eq!(s.steals, 1);
+        assert_eq!(s.replica_heat_milli, vec![0, 7, 0]);
+        assert_eq!(s.replica_queue_depth, vec![0, 0, 5]);
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //!   ([`FaultPlan`]) driving the supervisor's recovery paths in tests,
 //!   `--faults` runs, and `bench chaos`;
 //! * [`net`] — the std-only HTTP/1.1 front-end (`POST /v1/predict`,
-//!   `GET /healthz`, `GET /metrics`) that puts the service on a socket;
+//!   `GET /healthz`, `GET /metrics`), a readiness-driven reactor over
+//!   [`poller`] that puts the service on a socket;
+//! * [`poller`] — dependency-free readiness polling (epoll on Linux)
+//!   behind a portable `Poller` abstraction;
 //! * [`metrics`] — latency/throughput/energy reporting, live and at
 //!   shutdown.
 
@@ -25,6 +28,7 @@ pub mod engine;
 pub mod faults;
 pub mod metrics;
 pub mod net;
+pub mod poller;
 pub mod scheduler;
 pub mod server;
 
@@ -33,8 +37,8 @@ pub use engine::{EngineOptions, PhotonicEngine, ThermalStatus};
 pub use faults::{FaultAction, FaultPlan};
 pub use metrics::{LatencyRecorder, MetricsSnapshot, ServerMetrics, ThermalGauges};
 pub use net::{HttpServer, NetConfig};
-pub use scheduler::{ChunkAssignment, LayerSchedule, Scheduler};
+pub use scheduler::{ChunkAssignment, ClusterConfig, LayerSchedule, ReplicaState, Scheduler};
 pub use server::{
-    InferenceServer, Reply, ReplyResult, ServeError, ServerConfig, ServerReport,
-    SupervisorConfig, ThermalServerConfig,
+    InferenceServer, Reply, ReplyResult, ServeError, ServerConfig, ServerConfigBuilder,
+    ServerReport, SupervisorConfig, ThermalServerConfig,
 };

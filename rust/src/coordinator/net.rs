@@ -1,19 +1,49 @@
 //! Networked front-end: a dependency-free HTTP/1.1 server over
 //! `std::net::TcpListener` that puts the inference service on a socket.
 //!
+//! ## Reactor architecture
+//!
+//! One thread runs a readiness-driven event loop over a
+//! [`Poller`](crate::coordinator::poller::Poller) (epoll on Linux): the
+//! listener and every connection are nonblocking and registered by
+//! token, and each connection is a small state machine — accumulate
+//! request bytes, route, park a `/v1/predict` on its reply channel
+//! without blocking the loop, stream the response out, repeat
+//! (keep-alive + pipelining). Connection count is bounded by
+//! [`NetConfig::max_connections`], not by threads: a thousand idle
+//! keep-alive connections cost a thousand fds and nothing else — the
+//! thread-per-connection design this replaced held a stack per idle
+//! socket and collapsed under slow-loris clients.
+//!
 //! Routes:
 //!
 //! * `POST /v1/predict` — body `{"image":[f64,...], "shape":[c,h,w]?,
 //!   "deadline_ms":n?}`; replies `{"class":k, "logits":[...],
 //!   "latency_us":n, "batch_size":b, "energy_mj":e}` (`energy_mj` is the
-//!   request's column share of its batched engine pass). Overload is
-//!   shed with `503` + `Retry-After` (admission cap), expired deadlines
-//!   get `504`.
+//!   request's column share of its batched engine pass).
 //! * `GET /healthz` — liveness + current queue depth.
 //! * `GET /metrics` — Prometheus text format: request/shed/expired
-//!   counters, the `scatter_batch_occupancy` histogram (requests per
-//!   dispatched dynamic batch), p50/p99 latency, queue depth, energy and
-//!   average power from the engine ledgers.
+//!   counters, the `scatter_batch_occupancy` histogram, p50/p99
+//!   latency, queue depth, energy and average power from the engine
+//!   ledgers, and the cluster-routing series (per-replica routed
+//!   shards, steals, heat, queue depth).
+//!
+//! ## Error envelope
+//!
+//! Every non-2xx response carries one JSON shape:
+//!
+//! ```json
+//! {"error": {"code": "overloaded", "message": "...", "retryable": true,
+//!            "retry_after_s": 1}}
+//! ```
+//!
+//! `code` is a stable machine-readable slug (`bad_request`,
+//! `not_found`, `payload_too_large`, `internal`, `overloaded`,
+//! `unavailable`, `draining`, `deadline_exceeded`), `retryable` tells
+//! the client whether the same request can succeed later, and 503s
+//! carry `retry_after_s` both in the body and as a `Retry-After`
+//! header. Overload is shed with `503 overloaded` (admission cap),
+//! expired deadlines get `504 deadline_exceeded`.
 //!
 //! The parser handles exactly the protocol subset the load generator,
 //! `curl`, and the e2e tests speak: `Content-Length` bodies, keep-alive
@@ -25,9 +55,11 @@
 //! accepting, lets in-flight connections finish, drains the inference
 //! queue, and returns the final [`ServerReport`].
 
-use crate::coordinator::server::{InferenceServer, ServeError, ServerReport};
+use crate::coordinator::poller::{Interest, Poller};
+use crate::coordinator::server::{InferenceServer, ReplyResult, ServeError, ServerReport};
 use crate::nn::Tensor;
 use crate::util::Json;
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -45,11 +77,11 @@ pub struct NetConfig {
     /// Default input-tensor shape (CHW) assumed when `/v1/predict`
     /// bodies omit `"shape"`.
     pub input_shape: Vec<usize>,
-    /// Cap on concurrently handled connections; beyond it new
-    /// connections are served one `503` and closed.
+    /// Cap on concurrently open connections; beyond it new connections
+    /// are served one `503` and closed.
     pub max_connections: usize,
-    /// How long a connection handler waits for the engine's reply
-    /// before answering `500`.
+    /// How long a connection waits for the engine's reply before
+    /// answering `500`.
     pub reply_timeout: Duration,
 }
 
@@ -74,61 +106,60 @@ struct HttpStats {
     responses_5xx: AtomicU64,
 }
 
+impl HttpStats {
+    fn count_response(&self, status: u16) {
+        let class = match status {
+            200..=299 => &self.responses_2xx,
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        class.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(unix)]
+fn raw_fd<T: std::os::fd::AsRawFd>(t: &T) -> i32 {
+    t.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn raw_fd<T>(_t: &T) -> i32 {
+    0
+}
+
 /// A running networked inference front-end.
 pub struct HttpServer {
     addr: SocketAddr,
     inference: Arc<InferenceServer>,
     stop: Arc<AtomicBool>,
-    live_conns: Arc<AtomicUsize>,
-    accept: Option<JoinHandle<()>>,
+    reactor: Option<JoinHandle<()>>,
 }
 
 impl HttpServer {
     /// Bind and start serving `inference` on `cfg.addr`.
     pub fn bind(inference: InferenceServer, cfg: NetConfig) -> crate::Result<Self> {
         let listener = TcpListener::bind(&cfg.addr)?;
-        // non-blocking accept so the loop can poll the stop flag
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
+        let poller = Poller::new()?;
+        poller.register(raw_fd(&listener), LISTENER_TOKEN, Interest::READ)?;
         let inference = Arc::new(inference);
         let stop = Arc::new(AtomicBool::new(false));
-        let live_conns = Arc::new(AtomicUsize::new(0));
-        let stats = Arc::new(HttpStats::default());
-        let accept = {
-            let inference = Arc::clone(&inference);
-            let stop = Arc::clone(&stop);
-            let live_conns = Arc::clone(&live_conns);
-            let cfg = Arc::new(cfg);
-            std::thread::spawn(move || loop {
-                if stop.load(Ordering::Acquire) {
-                    return;
-                }
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        if live_conns.load(Ordering::Acquire) >= cfg.max_connections {
-                            let stats = Arc::clone(&stats);
-                            std::thread::spawn(move || reject_conn(stream, &stats));
-                            continue;
-                        }
-                        live_conns.fetch_add(1, Ordering::AcqRel);
-                        let inference = Arc::clone(&inference);
-                        let stop = Arc::clone(&stop);
-                        let live_conns = Arc::clone(&live_conns);
-                        let cfg = Arc::clone(&cfg);
-                        let stats = Arc::clone(&stats);
-                        std::thread::spawn(move || {
-                            handle_conn(stream, &inference, &cfg, &stop, &stats);
-                            live_conns.fetch_sub(1, Ordering::AcqRel);
-                        });
-                    }
-                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(5));
-                    }
-                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
-                }
-            })
+        let reactor = {
+            let mut reactor = Reactor {
+                poller,
+                listener,
+                conns: BTreeMap::new(),
+                next_token: LISTENER_TOKEN + 1,
+                inference: Arc::clone(&inference),
+                cfg: Arc::new(cfg),
+                stop: Arc::clone(&stop),
+                stats: Arc::new(HttpStats::default()),
+                live_conns: Arc::new(AtomicUsize::new(0)),
+            };
+            std::thread::spawn(move || reactor.run())
         };
-        Ok(Self { addr, inference, stop, live_conns, accept: Some(accept) })
+        Ok(Self { addr, inference, stop, reactor: Some(reactor) })
     }
 
     /// The bound address (resolves port 0 to the real ephemeral port).
@@ -145,14 +176,8 @@ impl HttpServer {
     /// drain the inference queue, and return the final report.
     pub fn shutdown(mut self) -> crate::Result<ServerReport> {
         self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.reactor.take() {
             let _ = h.join();
-        }
-        // keep-alive handlers notice the stop flag at their next idle
-        // poll (≤ ~200 ms); give in-flight predicts time to finish
-        let deadline = Instant::now() + Duration::from_secs(30);
-        while self.live_conns.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(10));
         }
         self.inference.shutdown()
     }
@@ -161,124 +186,421 @@ impl HttpServer {
 impl Drop for HttpServer {
     fn drop(&mut self) {
         // consumed by shutdown() in the normal path; this covers early
-        // returns in tests so the accept thread doesn't spin forever
+        // returns in tests so the reactor thread doesn't spin forever
         self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.reactor.take() {
             let _ = h.join();
         }
     }
 }
 
 const MAX_REQUEST_BYTES: usize = 4 << 20;
+const LISTENER_TOKEN: u64 = 0;
+/// How long a connection accepted over the cap may sit before its `503`
+/// is sent even without a complete request head.
+const REJECT_GRACE: Duration = Duration::from_millis(100);
+/// How long a half-received request may linger once the server drains.
+const DRAIN_PARTIAL_GRACE: Duration = Duration::from_secs(1);
+/// Hard ceiling on finishing in-flight work after shutdown is signaled.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(30);
 
-/// Over the connection cap: best-effort pull of the client's request
-/// bytes off the socket first (closing with unread data can turn the
-/// response into a TCP RST on common stacks), then answer `503` +
-/// `Retry-After` and close. Runs on its own short-lived thread so the
-/// accept loop never blocks on a shed client.
-fn reject_conn(mut stream: TcpStream, stats: &HttpStats) {
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
-    let mut tmp = [0u8; 8192];
-    let _ = stream.read(&mut tmp);
-    stats.requests.fetch_add(1, Ordering::Relaxed);
-    stats.responses_5xx.fetch_add(1, Ordering::Relaxed);
-    let resp = Response::busy("connection limit reached", 1);
-    let _ = write_response(&mut stream, &resp, false);
-    let _ = stream.shutdown(std::net::Shutdown::Both);
+/// A `/v1/predict` parked on its reply channel. The reactor polls
+/// `try_recv` each tick instead of blocking a thread on `recv`.
+struct Pending {
+    rx: mpsc::Receiver<ReplyResult>,
+    since: Instant,
+    keep_alive: bool,
 }
 
-/// Serve one connection: parse pipelined/keep-alive requests out of a
-/// persistent buffer, answer each, exit on close or server stop.
-fn handle_conn(
-    mut stream: TcpStream,
-    inference: &InferenceServer,
-    cfg: &NetConfig,
-    stop: &AtomicBool,
-    stats: &HttpStats,
-) {
-    let _ = stream.set_nodelay(true);
-    // short read timeout: the loop wakes to poll the stop flag
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-    let mut buf: Vec<u8> = Vec::new();
-    let mut tmp = [0u8; 8192];
-    let mut drain_seen: Option<Instant> = None;
-    let mut sent_continue = false;
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    /// Accumulated request bytes not yet consumed by the parser.
+    buf: Vec<u8>,
+    /// Queued response bytes; `out[out_pos..]` is still unsent.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// A predict in flight; while `Some`, no further pipelined request
+    /// is parsed (responses stay in request order).
+    awaiting: Option<Pending>,
+    /// `100 Continue` already sent for the current partial request.
+    sent_continue: bool,
+    close_after_write: bool,
+    /// Current poller registration includes write interest.
+    want_write: bool,
+    /// Accepted over the connection cap: answer one `503` and close.
+    reject: bool,
+    /// The reject `503` has been queued.
+    reject_sent: bool,
+    created: Instant,
+    /// First time this conn was seen with a partial request mid-drain.
+    drain_partial_since: Option<Instant>,
+    closed: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, reject: bool) -> Self {
+        Self {
+            stream,
+            buf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            awaiting: None,
+            sent_continue: false,
+            close_after_write: false,
+            want_write: false,
+            reject,
+            reject_sent: false,
+            created: Instant::now(),
+            drain_partial_since: None,
+            closed: false,
+        }
+    }
+
+    fn has_output(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    fn queue_response(&mut self, resp: &Response, keep_alive: bool, stats: &HttpStats) {
+        stats.count_response(resp.status);
+        self.out.extend_from_slice(&render_response(resp, keep_alive));
+        if !keep_alive {
+            self.close_after_write = true;
+        }
+    }
+}
+
+/// Read everything currently available; `false` = connection is done
+/// (EOF or a hard error).
+fn read_into(conn: &mut Conn) -> bool {
+    let mut tmp = [0u8; 16384];
     loop {
-        match parse_request(&buf) {
-            Parse::Complete(req, consumed) => {
-                buf.drain(..consumed);
-                sent_continue = false;
-                stats.requests.fetch_add(1, Ordering::Relaxed);
-                let draining = stop.load(Ordering::Acquire);
-                let resp = if draining && req.method == "POST" {
-                    Response::busy("server draining", 1)
-                } else {
-                    route(&req, inference, cfg, stats)
-                };
-                let class = match resp.status {
-                    200..=299 => &stats.responses_2xx,
-                    400..=499 => &stats.responses_4xx,
-                    _ => &stats.responses_5xx,
-                };
-                class.fetch_add(1, Ordering::Relaxed);
-                let keep_alive = req.keep_alive && !draining;
-                if write_response(&mut stream, &resp, keep_alive).is_err() || !keep_alive {
-                    return;
-                }
+        // stop pulling once the buffer is oversized — the parser will
+        // answer 413; reading further just buys the client free memory
+        if conn.buf.len() > MAX_REQUEST_BYTES {
+            return true;
+        }
+        match conn.stream.read(&mut tmp) {
+            Ok(0) => return false,
+            Ok(n) => conn.buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Push queued response bytes until the socket blocks.
+fn flush_conn(conn: &mut Conn) {
+    while conn.out_pos < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.out_pos..]) {
+            Ok(0) => {
+                conn.closed = true;
+                return;
             }
-            Parse::Partial => {
-                // curl sends `Expect: 100-continue` for bodies >1KB
-                // (every predict image) and waits ~1s for the interim
-                // reply before transmitting — answer it once per
-                // request so the advertised quickstart isn't stalled
-                if !sent_continue {
-                    if let Some(h) = find_subslice(&buf, b"\r\n\r\n") {
-                        let head = String::from_utf8_lossy(&buf[..h]).to_ascii_lowercase();
-                        if head.contains("expect: 100-continue") {
-                            let _ = stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
-                            let _ = stream.flush();
-                            sent_continue = true;
-                        }
-                    }
-                }
-                if stop.load(Ordering::Acquire) {
-                    if buf.is_empty() {
-                        return; // idle keep-alive connection during drain
-                    }
-                    // half-received request during drain: give the
-                    // client one second to finish the send, then cut
-                    let t0 = *drain_seen.get_or_insert_with(Instant::now);
-                    if t0.elapsed() > Duration::from_secs(1) {
-                        return;
-                    }
-                }
-                match stream.read(&mut tmp) {
-                    Ok(0) => return,
-                    Ok(n) => {
-                        buf.extend_from_slice(&tmp[..n]);
-                        if buf.len() > MAX_REQUEST_BYTES {
-                            let resp =
-                                Response::json_error(413, "request body too large");
-                            let _ = write_response(&mut stream, &resp, false);
-                            return;
-                        }
-                    }
-                    Err(e)
-                        if e.kind() == ErrorKind::WouldBlock
-                            || e.kind() == ErrorKind::TimedOut =>
-                    {
-                        continue;
-                    }
-                    Err(_) => return,
-                }
-            }
-            Parse::Bad(msg) => {
-                let resp = Response::json_error(400, &msg);
-                let _ = write_response(&mut stream, &resp, false);
+            Ok(n) => conn.out_pos += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.closed = true;
                 return;
             }
         }
     }
+    conn.out.clear();
+    conn.out_pos = 0;
+    if conn.close_after_write {
+        conn.closed = true;
+    }
+}
+
+/// Parse and serve every complete request currently buffered (stops at
+/// a parked predict so responses stay ordered).
+fn process_conn(
+    conn: &mut Conn,
+    inference: &InferenceServer,
+    cfg: &NetConfig,
+    stats: &HttpStats,
+    draining: bool,
+) {
+    while !conn.closed && conn.awaiting.is_none() && !conn.reject {
+        match parse_request(&conn.buf) {
+            Parse::Complete(req, consumed) => {
+                conn.buf.drain(..consumed);
+                conn.sent_continue = false;
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                let keep_alive = req.keep_alive && !draining;
+                if draining && req.method == "POST" {
+                    let resp =
+                        Response::busy("draining", "server draining; retry elsewhere", 1000);
+                    conn.queue_response(&resp, keep_alive, stats);
+                    if !keep_alive {
+                        return;
+                    }
+                    continue;
+                }
+                match route(&req, inference, cfg, stats) {
+                    Routed::Done(resp) => {
+                        conn.queue_response(&resp, keep_alive, stats);
+                        if !keep_alive {
+                            return;
+                        }
+                    }
+                    Routed::Wait(rx) => {
+                        conn.awaiting =
+                            Some(Pending { rx, since: Instant::now(), keep_alive });
+                        return;
+                    }
+                }
+            }
+            Parse::Partial => {
+                if conn.buf.len() > MAX_REQUEST_BYTES {
+                    let resp = Response::error(
+                        413,
+                        "payload_too_large",
+                        "request body too large",
+                        false,
+                    );
+                    conn.queue_response(&resp, false, stats);
+                    return;
+                }
+                // curl sends `Expect: 100-continue` for bodies >1KB
+                // (every predict image) and waits ~1s for the interim
+                // reply before transmitting — answer it once per
+                // request so the advertised quickstart isn't stalled
+                if !conn.sent_continue {
+                    if let Some(h) = find_subslice(&conn.buf, b"\r\n\r\n") {
+                        let head =
+                            String::from_utf8_lossy(&conn.buf[..h]).to_ascii_lowercase();
+                        if head.contains("expect: 100-continue") {
+                            conn.out.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+                            conn.sent_continue = true;
+                        }
+                    }
+                }
+                return;
+            }
+            Parse::Bad(msg) => {
+                let resp = Response::error(400, "bad_request", &msg, false);
+                conn.queue_response(&resp, false, stats);
+                return;
+            }
+        }
+    }
+}
+
+/// Poll a parked predict; queue its response when the reply (or the
+/// timeout) arrives.
+fn poll_pending(conn: &mut Conn, inference: &InferenceServer, cfg: &NetConfig, stats: &HttpStats) {
+    let Some(pending) = &conn.awaiting else { return };
+    let resp = match pending.rx.try_recv() {
+        Ok(Ok(reply)) => Response::json(
+            200,
+            Json::obj(vec![
+                ("class", Json::Num(reply.class as f64)),
+                ("logits", Json::arr_f64(&reply.logits)),
+                ("latency_us", Json::Num(reply.latency.as_micros() as f64)),
+                ("batch_size", Json::Num(reply.batch_size as f64)),
+                ("energy_mj", Json::Num(reply.energy_mj)),
+            ]),
+        ),
+        Ok(Err(ServeError::Expired)) => Response::error(
+            504,
+            "deadline_exceeded",
+            "deadline expired in queue",
+            true,
+        ),
+        Ok(Err(ServeError::WorkerLost)) => {
+            Response::busy("unavailable", "engine worker lost; retry", 1000)
+        }
+        // a dropped reply sender means the engine worker died holding
+        // this request: retryable, and ours to count (the dispatcher
+        // only counts shards it fails to hand over after the death)
+        Err(mpsc::TryRecvError::Disconnected) => {
+            inference.metrics().note_worker_lost(1);
+            Response::busy("unavailable", "engine worker lost; retry", 1000)
+        }
+        Err(mpsc::TryRecvError::Empty) => {
+            if pending.since.elapsed() < cfg.reply_timeout {
+                return;
+            }
+            Response::error(500, "internal", "timed out waiting for engine reply", false)
+        }
+    };
+    let keep_alive = pending.keep_alive;
+    conn.awaiting = None;
+    conn.queue_response(&resp, keep_alive, stats);
+}
+
+/// A connection accepted over the cap: pull whatever the client sent
+/// (closing with unread data can turn the response into a TCP RST on
+/// common stacks), answer one `503`, close. The grace period bounds how
+/// long we wait for a client that never sends.
+fn poll_reject(conn: &mut Conn, stats: &HttpStats) {
+    if conn.reject_sent {
+        return;
+    }
+    let head_done = find_subslice(&conn.buf, b"\r\n\r\n").is_some();
+    if head_done || conn.created.elapsed() >= REJECT_GRACE {
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        let resp = Response::busy("overloaded", "connection limit reached", 1000);
+        conn.queue_response(&resp, false, stats);
+        conn.reject_sent = true;
+        conn.buf.clear();
+    }
+}
+
+struct Reactor {
+    poller: Poller,
+    listener: TcpListener,
+    conns: BTreeMap<u64, Conn>,
+    next_token: u64,
+    inference: Arc<InferenceServer>,
+    cfg: Arc<NetConfig>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<HttpStats>,
+    live_conns: Arc<AtomicUsize>,
+}
+
+impl Reactor {
+    fn run(&mut self) {
+        let mut events = Vec::new();
+        let mut draining = false;
+        let mut drain_deadline: Option<Instant> = None;
+        loop {
+            if !draining && self.stop.load(Ordering::Acquire) {
+                draining = true;
+                drain_deadline = Some(Instant::now() + DRAIN_DEADLINE);
+                let _ = self.poller.deregister(raw_fd(&self.listener));
+            }
+            if draining
+                && (self.conns.is_empty()
+                    || drain_deadline.is_some_and(|d| Instant::now() >= d))
+            {
+                return;
+            }
+            // short ticks while anything is pending (parked replies,
+            // unsent output, reject grace); long ticks when fully idle
+            let busy = self.conns.values().any(|c| {
+                c.awaiting.is_some() || c.has_output() || (c.reject && !c.reject_sent)
+            });
+            let timeout = if busy || draining {
+                Duration::from_millis(5)
+            } else {
+                Duration::from_millis(50)
+            };
+            if self.poller.wait(&mut events, timeout).is_err() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            for ev in &events {
+                if ev.token == LISTENER_TOKEN {
+                    if !draining {
+                        self.accept_ready();
+                    }
+                    continue;
+                }
+                if let Some(conn) = self.conns.get_mut(&ev.token) {
+                    if ev.readable || ev.hangup {
+                        let open = read_into(conn);
+                        if !open {
+                            // client is gone; last-gasp flush of
+                            // anything already queued, then close
+                            flush_conn(conn);
+                            conn.closed = true;
+                        }
+                    }
+                }
+            }
+            self.sweep(draining);
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    let reject = self.conns.len() >= self.cfg.max_connections;
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.poller.register(raw_fd(&stream), token, Interest::READ).is_err()
+                    {
+                        continue; // kernel said no; drop the socket
+                    }
+                    self.conns.insert(token, Conn::new(stream, reject));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        self.live_conns.store(self.conns.len(), Ordering::Release);
+    }
+
+    /// One pass over every connection: advance reject/pending/parse
+    /// state machines, flush output, update poller interest, apply
+    /// drain policy, reap closed connections.
+    fn sweep(&mut self, draining: bool) {
+        for (&token, conn) in self.conns.iter_mut() {
+            if conn.closed {
+                continue;
+            }
+            if conn.reject {
+                poll_reject(conn, &self.stats);
+            } else {
+                poll_pending(conn, &self.inference, &self.cfg, &self.stats);
+                process_conn(conn, &self.inference, &self.cfg, &self.stats, draining);
+            }
+            flush_conn(conn);
+            if conn.closed {
+                continue;
+            }
+            if draining && conn.awaiting.is_none() && !conn.has_output() {
+                if conn.buf.is_empty() {
+                    // idle keep-alive connection during drain
+                    conn.closed = true;
+                } else {
+                    // half-received request: bounded grace to finish
+                    let t0 = *conn.drain_partial_since.get_or_insert_with(Instant::now);
+                    if t0.elapsed() > DRAIN_PARTIAL_GRACE {
+                        conn.closed = true;
+                    }
+                }
+                if conn.closed {
+                    continue;
+                }
+            }
+            let want_write = conn.has_output();
+            if want_write != conn.want_write {
+                // best-effort: a failed re-registration only costs
+                // latency (the next read event re-enters the sweep)
+                conn.want_write = want_write;
+                let interest =
+                    if want_write { Interest::READ_WRITE } else { Interest::READ };
+                let _ = self.poller.modify(raw_fd(&conn.stream), token, interest);
+            }
+        }
+        let dead: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.closed)
+            .map(|(&t, _)| t)
+            .collect();
+        for token in dead {
+            if let Some(conn) = self.conns.remove(&token) {
+                let _ = self.poller.deregister(raw_fd(&conn.stream));
+                let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        self.live_conns.store(self.conns.len(), Ordering::Release);
+    }
+}
+
+enum Routed {
+    Done(Response),
+    /// A predict handed to the inference service; the reactor parks the
+    /// connection on this receiver.
+    Wait(mpsc::Receiver<ReplyResult>),
 }
 
 fn route(
@@ -286,7 +608,7 @@ fn route(
     inference: &InferenceServer,
     cfg: &NetConfig,
     stats: &HttpStats,
-) -> Response {
+) -> Routed {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let adm = inference.admission();
@@ -302,7 +624,7 @@ fn route(
                 "ok"
             };
             let code = if snap.workers_live == 0 { 503 } else { 200 };
-            Response::json(
+            Routed::Done(Response::json(
                 code,
                 Json::obj(vec![
                     ("status", Json::Str(status.into())),
@@ -311,28 +633,40 @@ fn route(
                     ("workers_configured", Json::Num(snap.workers_configured as f64)),
                     ("brownout_active", Json::Num(snap.brownout_active as f64)),
                 ]),
-            )
+            ))
         }
-        ("GET", "/metrics") => Response {
+        ("GET", "/metrics") => Routed::Done(Response {
             status: 200,
             content_type: "text/plain; version=0.0.4",
             body: render_prometheus(inference, stats),
             retry_after_s: None,
-        },
+        }),
         ("POST", "/v1/predict") => handle_predict(req, inference, cfg),
-        _ => Response::json_error(404, "no such route"),
+        _ => Routed::Done(Response::error(404, "not_found", "no such route", false)),
     }
 }
 
-fn handle_predict(req: &HttpRequest, inference: &InferenceServer, cfg: &NetConfig) -> Response {
+fn handle_predict(req: &HttpRequest, inference: &InferenceServer, cfg: &NetConfig) -> Routed {
     let body = match Json::parse(&req.body) {
         Ok(v) => v,
-        Err(e) => return Response::json_error(400, &format!("bad json: {e}")),
+        Err(e) => {
+            return Routed::Done(Response::error(
+                400,
+                "bad_request",
+                &format!("bad json: {e}"),
+                false,
+            ))
+        }
     };
     // strict decode: a single non-numeric element rejects the request
     // (f64_vec no longer silently drops malformed entries)
     let Some(image) = body.get("image").and_then(Json::f64_vec) else {
-        return Response::json_error(400, "missing or malformed 'image' array");
+        return Routed::Done(Response::error(
+            400,
+            "bad_request",
+            "missing or malformed 'image' array",
+            false,
+        ));
     };
     let shape: Vec<usize> = body
         .get("shape")
@@ -340,44 +674,26 @@ fn handle_predict(req: &HttpRequest, inference: &InferenceServer, cfg: &NetConfi
         .map(|a| a.iter().filter_map(Json::as_usize).collect())
         .unwrap_or_else(|| cfg.input_shape.clone());
     if shape.is_empty() || shape.iter().product::<usize>() != image.len() {
-        return Response::json_error(
+        return Routed::Done(Response::error(
             400,
+            "bad_request",
             &format!("image has {} values, shape {shape:?} disagrees", image.len()),
-        );
+            false,
+        ));
     }
     let deadline = body
         .get("deadline_ms")
         .and_then(Json::as_f64)
         .map(|ms| Duration::from_millis(ms.max(0.0) as u64));
-    let rx = match inference.submit_with_deadline(Tensor::from_vec(&shape, image), deadline) {
-        Ok(rx) => rx,
-        Err(crate::Error::Busy { retry_after_ms }) => {
-            return Response::busy("overloaded: admission cap reached", retry_after_ms)
-        }
-        Err(e) => return Response::busy(&format!("unavailable: {e}"), 1000),
-    };
-    match rx.recv_timeout(cfg.reply_timeout) {
-        Ok(Ok(reply)) => Response::json(
-            200,
-            Json::obj(vec![
-                ("class", Json::Num(reply.class as f64)),
-                ("logits", Json::arr_f64(&reply.logits)),
-                ("latency_us", Json::Num(reply.latency.as_micros() as f64)),
-                ("batch_size", Json::Num(reply.batch_size as f64)),
-                ("energy_mj", Json::Num(reply.energy_mj)),
-            ]),
-        ),
-        Ok(Err(ServeError::Expired)) => Response::json_error(504, "deadline expired in queue"),
-        Ok(Err(ServeError::WorkerLost)) => Response::busy("engine worker lost; retry", 1000),
-        // a dropped reply sender means the engine worker died holding
-        // this request: retryable, and ours to count (the dispatcher
-        // only counts shards it fails to hand over after the death)
-        Err(mpsc::RecvTimeoutError::Disconnected) => {
-            inference.metrics().note_worker_lost(1);
-            Response::busy("engine worker lost; retry", 1000)
-        }
-        Err(mpsc::RecvTimeoutError::Timeout) => {
-            Response::json_error(500, "timed out waiting for engine reply")
+    match inference.submit_with_deadline(Tensor::from_vec(&shape, image), deadline) {
+        Ok(rx) => Routed::Wait(rx),
+        Err(crate::Error::Busy { retry_after_ms }) => Routed::Done(Response::busy(
+            "overloaded",
+            "overloaded: admission cap reached",
+            retry_after_ms,
+        )),
+        Err(e) => {
+            Routed::Done(Response::busy("unavailable", &format!("unavailable: {e}"), 1000))
         }
     }
 }
@@ -431,6 +747,33 @@ fn render_prometheus(inference: &InferenceServer, stats: &HttpStats) -> String {
     );
     let _ = writeln!(o, "# TYPE scatter_request_retries_total counter");
     let _ = writeln!(o, "scatter_request_retries_total {}", snap.request_retries);
+    let _ = writeln!(
+        o,
+        "# HELP scatter_replica_routed_total Shards routed to each replica slot."
+    );
+    let _ = writeln!(o, "# TYPE scatter_replica_routed_total counter");
+    for (widx, n) in snap.routed.iter().enumerate() {
+        let _ = writeln!(o, "scatter_replica_routed_total{{worker=\"{widx}\"}} {n}");
+    }
+    let _ = writeln!(o, "# HELP scatter_steals_total Shards stolen between replica queues.");
+    let _ = writeln!(o, "# TYPE scatter_steals_total counter");
+    let _ = writeln!(o, "scatter_steals_total {}", snap.steals);
+    let _ = writeln!(
+        o,
+        "# HELP scatter_replica_heat_millirad Routing heat score (phase error) per replica."
+    );
+    let _ = writeln!(o, "# TYPE scatter_replica_heat_millirad gauge");
+    for (widx, h) in snap.replica_heat_milli.iter().enumerate() {
+        let _ = writeln!(o, "scatter_replica_heat_millirad{{worker=\"{widx}\"}} {h}");
+    }
+    let _ = writeln!(
+        o,
+        "# HELP scatter_replica_queue_depth Shards queued or executing per replica."
+    );
+    let _ = writeln!(o, "# TYPE scatter_replica_queue_depth gauge");
+    for (widx, d) in snap.replica_queue_depth.iter().enumerate() {
+        let _ = writeln!(o, "scatter_replica_queue_depth{{worker=\"{widx}\"}} {d}");
+    }
     let _ = writeln!(
         o,
         "# HELP scatter_brownout_active Workers currently over their phase-error budget."
@@ -593,14 +936,40 @@ impl Response {
         }
     }
 
-    fn json_error(status: u16, msg: &str) -> Self {
-        Self::json(status, Json::obj(vec![("error", Json::Str(msg.into()))]))
+    /// The structured error envelope every non-2xx response carries:
+    /// `{"error":{"code","message","retryable"}}`.
+    fn error(status: u16, code: &str, msg: &str, retryable: bool) -> Self {
+        Self::json(
+            status,
+            Json::obj(vec![(
+                "error",
+                Json::obj(vec![
+                    ("code", Json::Str(code.into())),
+                    ("message", Json::Str(msg.into())),
+                    ("retryable", Json::Bool(retryable)),
+                ]),
+            )]),
+        )
     }
 
-    /// `503` with a `Retry-After` hint (whole seconds, rounded up).
-    fn busy(msg: &str, retry_after_ms: u64) -> Self {
-        let mut r = Self::json_error(503, msg);
-        r.retry_after_s = Some(retry_after_ms.div_ceil(1000).max(1));
+    /// `503` + `Retry-After` (whole seconds, rounded up), with the hint
+    /// mirrored as `retry_after_s` inside the error envelope so JSON
+    /// clients never need to read headers.
+    fn busy(code: &str, msg: &str, retry_after_ms: u64) -> Self {
+        let secs = retry_after_ms.div_ceil(1000).max(1);
+        let mut r = Self::json(
+            503,
+            Json::obj(vec![(
+                "error",
+                Json::obj(vec![
+                    ("code", Json::Str(code.into())),
+                    ("message", Json::Str(msg.into())),
+                    ("retryable", Json::Bool(true)),
+                    ("retry_after_s", Json::Num(secs as f64)),
+                ]),
+            )]),
+        );
+        r.retry_after_s = Some(secs);
         r
     }
 }
@@ -618,12 +987,8 @@ fn status_reason(status: u16) -> &'static str {
     }
 }
 
-fn write_response(
-    stream: &mut TcpStream,
-    resp: &Response,
-    keep_alive: bool,
-) -> std::io::Result<()> {
-    let mut head = String::with_capacity(160);
+fn render_response(resp: &Response, keep_alive: bool) -> Vec<u8> {
+    let mut head = String::with_capacity(160 + resp.body.len());
     let _ = write!(
         head,
         "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
@@ -636,9 +1001,8 @@ fn write_response(
         let _ = write!(head, "Retry-After: {s}\r\n");
     }
     let _ = write!(head, "Connection: {}\r\n\r\n", if keep_alive { "keep-alive" } else { "close" });
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(resp.body.as_bytes())?;
-    stream.flush()
+    head.push_str(&resp.body);
+    head.into_bytes()
 }
 
 // ---------------------------------------------------------------------
@@ -818,5 +1182,35 @@ GET /healthz HTTP/1.1\r\n\r\n";
         assert_eq!(resp.retry_after_s, Some(3));
         assert_eq!(consumed, wire.len());
         assert!(parse_response(&wire[..10]).unwrap().is_none(), "partial → None");
+    }
+
+    #[test]
+    fn error_envelope_shape_is_stable() {
+        let resp = Response::error(400, "bad_request", "nope", false);
+        let doc = Json::parse(&resp.body).expect("envelope is json");
+        let err = doc.get("error").expect("error object");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some("bad_request"));
+        assert_eq!(err.get("message").and_then(Json::as_str), Some("nope"));
+        assert_eq!(err.get("retryable").and_then(Json::as_bool), Some(false));
+        assert!(err.get("retry_after_s").is_none(), "only 503s carry the hint");
+
+        let resp = Response::busy("overloaded", "try later", 2500);
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.retry_after_s, Some(3), "rounded up to whole seconds");
+        let doc = Json::parse(&resp.body).expect("envelope is json");
+        let err = doc.get("error").expect("error object");
+        assert_eq!(err.get("retryable").and_then(Json::as_bool), Some(true));
+        assert_eq!(err.get("retry_after_s").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn render_response_marks_connection_disposition() {
+        let resp = Response::json(200, Json::obj(vec![("ok", Json::Bool(true))]));
+        let wire = String::from_utf8(render_response(&resp, true)).unwrap();
+        assert!(wire.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(wire.contains("Connection: keep-alive\r\n"));
+        assert!(wire.ends_with("{\"ok\":true}"));
+        let wire = String::from_utf8(render_response(&resp, false)).unwrap();
+        assert!(wire.contains("Connection: close\r\n"));
     }
 }

@@ -1,13 +1,26 @@
-//! Chunk partitioning and slot scheduling (§3.2, Fig. 2).
+//! Scheduling at two scales.
 //!
-//! A layer's `out_dim × in_dim` weight matrix is zero-padded to a p×q grid
-//! of `rk1 × ck2` chunks. The accelerator holds `R·C/(r·c)` chunk *slots*
-//! at a time; executing one chunk against one input vector costs one cycle
-//! regardless of its sparsity (the paper's fixed-cycle clarification), so
-//! a layer with `n_cols` activation vectors takes
-//! `ceil(p·q / slots) · n_cols` wall cycles.
+//! **Chunk scale** (§3.2, Fig. 2): a layer's `out_dim × in_dim` weight
+//! matrix is zero-padded to a p×q grid of `rk1 × ck2` chunks. The
+//! accelerator holds `R·C/(r·c)` chunk *slots* at a time; executing one
+//! chunk against one input vector costs one cycle regardless of its
+//! sparsity (the paper's fixed-cycle clarification), so a layer with
+//! `n_cols` activation vectors takes `ceil(p·q / slots) · n_cols` wall
+//! cycles. [`Scheduler`]/[`LayerSchedule`] model this.
+//!
+//! **Cluster scale**: the serving dispatcher routes request batches
+//! across N engine-worker replicas. Each replica exposes a load/thermal
+//! summary ([`ReplicaState`]); [`plan_shards`] splits a batch across
+//! the coolest, least-loaded replicas. Thermal state is a scheduling
+//! dimension unique to photonics — replicas heat independently, so the
+//! router steers around a replica while it recalibrates (the brownout
+//! `hot` bit) and, among cool replicas, minimizes the continuous heat
+//! score so load drifts toward thermally settled hardware *before*
+//! anyone trips a brownout.
 
+use crate::exec::partition_ranges;
 use crate::AcceleratorConfig;
+use std::ops::Range;
 
 /// Where one chunk lands: the slot index and its (tile, core) rectangle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,6 +111,88 @@ impl Scheduler {
     }
 }
 
+/// Cluster-scheduler knobs carried by
+/// [`crate::coordinator::ServerConfig`].
+#[derive(Debug, Clone, Default)]
+pub struct ClusterConfig {
+    /// Allow idle replicas to steal queued shards from loaded ones.
+    /// Off by default: stealing trades strict per-replica shard
+    /// ordering for tail latency, and deterministic fault schedules
+    /// (seeded `FaultPlan`s keyed on per-replica sequence numbers)
+    /// want the strict order.
+    pub steal: bool,
+}
+
+/// The router's view of one replica at dispatch time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaState {
+    /// Worker-slot index (stable across respawns).
+    pub idx: usize,
+    /// Shards enqueued or executing on this replica.
+    pub queue_depth: u64,
+    /// EWMA shard service time in microseconds (0 = no sample yet).
+    pub ewma_us: u64,
+    /// Continuous thermal score in milliradians of accumulated phase
+    /// error; the router minimizes this among cool replicas.
+    pub heat_milli: u64,
+    /// Browned out: phase error past the brownout budget, replica is
+    /// recalibrating. Excluded from routing while any peer is cool.
+    pub hot: bool,
+}
+
+impl ReplicaState {
+    /// An idle, cold replica — the state every slot starts in.
+    pub fn idle(idx: usize) -> Self {
+        Self { idx, queue_depth: 0, ewma_us: 0, heat_milli: 0, hot: false }
+    }
+}
+
+/// Rank key: load first (queue depth, then expected service time via
+/// the heat-then-EWMA tie-break), index last so ties break
+/// deterministically toward lower slot numbers.
+fn rank(r: &ReplicaState) -> (u64, u64, u64, usize) {
+    (r.queue_depth, r.heat_milli, r.ewma_us, r.idx)
+}
+
+/// Split a batch of `n` requests into per-replica shards.
+///
+/// Cool replicas split the batch near-equally, assigned best-ranked
+/// first (so when the batch is smaller than the pool, the coolest,
+/// least-loaded replicas serve it). If *every* replica is browned out
+/// there is nowhere cool to steer, so the batch degrades to
+/// `max(1, max_batch/2)`-sized shards dealt round-robin — each
+/// recalibration pause then blocks half a batch instead of a full one.
+pub fn plan_shards(
+    n: usize,
+    replicas: &[ReplicaState],
+    max_batch: usize,
+) -> Vec<(usize, Range<usize>)> {
+    if n == 0 || replicas.is_empty() {
+        return Vec::new();
+    }
+    let mut cool: Vec<&ReplicaState> = replicas.iter().filter(|r| !r.hot).collect();
+    if !cool.is_empty() {
+        cool.sort_by_key(|r| rank(r));
+        return partition_ranges(n, cool.len())
+            .into_iter()
+            .zip(cool)
+            .map(|(range, r)| (r.idx, range))
+            .collect();
+    }
+    let mut order: Vec<&ReplicaState> = replicas.iter().collect();
+    order.sort_by_key(|r| rank(r));
+    let half = (max_batch / 2).max(1);
+    let mut plan = Vec::new();
+    let (mut start, mut i) = (0, 0);
+    while start < n {
+        let end = (start + half).min(n);
+        plan.push((order[i % order.len()].idx, start..end));
+        start = end;
+        i += 1;
+    }
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,5 +256,73 @@ mod tests {
         let sched = s.schedule(64, 64);
         assert_eq!((sched.p, sched.q), (1, 1));
         assert_eq!(sched.n_waves(), 1);
+    }
+
+    #[test]
+    fn equal_replicas_partition_in_index_order() {
+        let pool: Vec<ReplicaState> = (0..3).map(ReplicaState::idle).collect();
+        assert_eq!(
+            plan_shards(6, &pool, 8),
+            vec![(0, 0..2), (1, 2..4), (2, 4..6)],
+            "ties split near-equally in index order"
+        );
+        // a single request lands on the lowest index, never an empty shard
+        assert_eq!(plan_shards(1, &pool, 8), vec![(0, 0..1)]);
+        assert!(plan_shards(0, &pool, 8).is_empty());
+        assert!(plan_shards(4, &[], 8).is_empty());
+    }
+
+    #[test]
+    fn hot_replicas_are_excluded_while_any_peer_is_cool() {
+        let mut pool: Vec<ReplicaState> = (0..3).map(ReplicaState::idle).collect();
+        pool[1].hot = true;
+        let plan = plan_shards(6, &pool, 8);
+        assert_eq!(plan, vec![(0, 0..3), (2, 3..6)], "hot replica receives nothing");
+    }
+
+    #[test]
+    fn all_hot_pool_degrades_to_half_batches_round_robin() {
+        let mut pool: Vec<ReplicaState> = (0..2).map(ReplicaState::idle).collect();
+        for r in &mut pool {
+            r.hot = true;
+        }
+        let plan = plan_shards(6, &pool, 8);
+        assert_eq!(plan.len(), 2, "half-batches of max(1, 8/2)=4");
+        assert_eq!(plan[0], (0, 0..4));
+        assert_eq!(plan[1], (1, 4..6));
+        // max_batch 1 must not wedge into zero-sized shards
+        let plan = plan_shards(2, &pool, 1);
+        assert_eq!(plan, vec![(0, 0..1), (1, 1..2)]);
+    }
+
+    #[test]
+    fn load_routes_around_deep_queues_and_heat() {
+        let mut pool: Vec<ReplicaState> = (0..3).map(ReplicaState::idle).collect();
+        pool[0].queue_depth = 2;
+        let plan = plan_shards(1, &pool, 8);
+        assert_eq!(plan, vec![(1, 0..1)], "deepest queue is ranked last");
+
+        // equal depth: the cooler replica wins
+        let mut pool: Vec<ReplicaState> = (0..2).map(ReplicaState::idle).collect();
+        pool[0].heat_milli = 40;
+        assert_eq!(plan_shards(1, &pool, 8), vec![(1, 0..1)]);
+
+        // equal depth and heat: the faster replica (lower EWMA) wins
+        let mut pool: Vec<ReplicaState> = (0..2).map(ReplicaState::idle).collect();
+        pool[0].ewma_us = 900;
+        pool[1].ewma_us = 200;
+        assert_eq!(plan_shards(1, &pool, 8), vec![(1, 0..1)]);
+    }
+
+    #[test]
+    fn planning_is_deterministic() {
+        let mut pool: Vec<ReplicaState> = (0..4).map(ReplicaState::idle).collect();
+        pool[2].queue_depth = 1;
+        pool[3].heat_milli = 7;
+        let a = plan_shards(9, &pool, 8);
+        let b = plan_shards(9, &pool, 8);
+        assert_eq!(a, b);
+        let covered: usize = a.iter().map(|(_, r)| r.len()).sum();
+        assert_eq!(covered, 9, "every request is assigned exactly once");
     }
 }

@@ -4,7 +4,7 @@
 //! submit images over a **bounded** mpsc channel; a dispatcher thread
 //! collects requests into dynamic batches (up to `max_batch` or
 //! `batch_timeout`) and shards each batch across `workers` engine
-//! threads, each owning its own [`PhotonicEngine`] + model replica
+//! replicas, each owning its own [`PhotonicEngine`] + model replica
 //! (mirroring N physical accelerator boards behind one router). A
 //! worker executes its whole shard as ONE batched forward
 //! ([`Model::forward_batch`]: every matmul layer streams `shard ×
@@ -18,6 +18,24 @@
 //! the shutdown [`ServerReport`] read. The offline toolchain has no
 //! tokio, so the event loop is std::thread + mpsc — same batching
 //! semantics, simpler runtime.
+//!
+//! ## Cluster scheduling (replica routing)
+//!
+//! Each worker slot owns a persistent [`ReplicaQueue`] of shards. The
+//! dispatcher snapshots every live replica as a
+//! [`scheduler::ReplicaState`] — queue depth, EWMA shard service time,
+//! continuous thermal heat score, brownout bit — and
+//! [`scheduler::plan_shards`] splits each dynamic batch across the
+//! coolest, least-loaded replicas. With `ClusterConfig::steal` enabled,
+//! an idle replica steals queued shards from the deepest peer queue
+//! (victim pops front, thief pops back), trading strict per-replica
+//! shard ordering for tail latency. Queues outlive worker generations:
+//! a respawned worker resumes its predecessor's backlog, and a
+//! generation token retires zombies (a replaced worker exits at its
+//! next queue visit instead of double-serving).
+//!
+//! [`scheduler::ReplicaState`]: crate::coordinator::scheduler::ReplicaState
+//! [`scheduler::plan_shards`]: crate::coordinator::scheduler::plan_shards
 //!
 //! ## Self-healing (worker supervision)
 //!
@@ -49,7 +67,10 @@
 //! (or, when every replica is hot, halves shard sizes so each ticks and
 //! recalibrates sooner), and the worker force-recalibrates before its
 //! next shard — graceful degradation instead of serving silently
-//! drifted values.
+//! drifted values. Below the brownout threshold the same phase-error
+//! estimate feeds the router continuously (the replica heat score), so
+//! load drifts toward thermally settled hardware *before* anyone trips
+//! a brownout.
 //!
 //! Overload behavior (the part an open-loop deployment lives or dies
 //! by):
@@ -68,43 +89,58 @@
 //! * **graceful drain** — [`InferenceServer::shutdown`] stops accepting,
 //!   finishes everything in flight (supervision stays live mid-drain),
 //!   and emits the final [`ServerReport`].
+//!
+//! ## Configuration
+//!
+//! [`ServerConfig`] is constructed through [`ServerConfig::builder`],
+//! which validates invariants (`workers >= 1`, `max_batch >= 1`,
+//! `watchdog > batch_timeout`, ...) and returns typed
+//! [`crate::Error::Config`] errors, or loaded from a JSON file
+//! ([`ServerConfig::from_json`], `scatter serve --config FILE`).
 
 use crate::coordinator::admission::{AdmissionConfig, AdmissionController, Permit};
 use crate::coordinator::engine::{EngineOptions, PhotonicEngine};
 use crate::coordinator::faults::{FaultAction, FaultPlan};
 use crate::coordinator::metrics::{MetricsSnapshot, ServerMetrics, ThermalGauges};
-use crate::exec::partition_ranges;
+use crate::coordinator::scheduler::{plan_shards, ClusterConfig, ReplicaState};
 use crate::nn::{Model, Tensor};
 use crate::thermal::{DriftConfig, ThermalPolicy};
+use crate::util::Json;
 use crate::AcceleratorConfig;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// Serving-stack configuration. Construct through
+/// [`ServerConfig::builder`] (validated) or [`ServerConfig::from_json`]
+/// (`--config FILE`); `Default` is the valid single-replica baseline.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    pub max_batch: usize,
-    pub batch_timeout: Duration,
-    /// Engine worker threads the dispatcher shards batches across; each
+    pub(crate) max_batch: usize,
+    pub(crate) batch_timeout: Duration,
+    /// Engine worker replicas the dispatcher routes batches across; each
     /// owns a full engine + model replica. 1 reproduces the single-board
     /// service exactly.
-    pub workers: usize,
+    pub(crate) workers: usize,
     /// Worker threads inside each engine's compiled execution path
     /// ([`PhotonicEngine::set_threads`]). Keep `workers ×
     /// engine_threads` at or below the host's cores.
-    pub engine_threads: usize,
+    pub(crate) engine_threads: usize,
     /// Load-shedding and deadline policy.
-    pub admission: AdmissionConfig,
+    pub(crate) admission: AdmissionConfig,
     /// Runtime thermal-drift model + recalibration policy. The default
     /// (`drift: None`) reproduces the seed behavior: phases frozen at
     /// programming time, no drift, no recalibration.
-    pub thermal: ThermalServerConfig,
+    pub(crate) thermal: ThermalServerConfig,
     /// Worker supervision: watchdog, retry budget, restart budget.
-    pub supervisor: SupervisorConfig,
+    pub(crate) supervisor: SupervisorConfig,
     /// Deterministic fault injection (empty in production).
-    pub faults: FaultPlan,
+    pub(crate) faults: FaultPlan,
+    /// Cluster-scheduler knobs (work stealing).
+    pub(crate) cluster: ClusterConfig,
 }
 
 /// Thermal-drift runtime knobs for the serving stack. Each engine
@@ -121,6 +157,10 @@ pub struct ThermalServerConfig {
     /// post-tick phase-error estimate exceeds `budget` rad is steered
     /// around and force-recalibrated before its next shard.
     pub brownout_budget_rad: Option<f64>,
+    /// Restrict the drift runtime to one replica (the rest stay ideal).
+    /// A test/bench hook: force exactly one replica hot and watch the
+    /// router steer load off it.
+    pub drift_only_worker: Option<usize>,
 }
 
 /// Supervision policy: how failures are detected and how hard the
@@ -163,7 +203,395 @@ impl Default for ServerConfig {
             thermal: ThermalServerConfig::default(),
             supervisor: SupervisorConfig::default(),
             faults: FaultPlan::none(),
+            cluster: ClusterConfig::default(),
         }
+    }
+}
+
+impl ServerConfig {
+    /// Start building a validated configuration from the defaults.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder { cfg: ServerConfig::default() }
+    }
+
+    /// A builder seeded with this config's values — how CLI flag
+    /// overrides stack on top of a `--config` file (the result passes
+    /// validation again at `build`).
+    pub fn to_builder(&self) -> ServerConfigBuilder {
+        ServerConfigBuilder { cfg: self.clone() }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn batch_timeout(&self) -> Duration {
+        self.batch_timeout
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn engine_threads(&self) -> usize {
+        self.engine_threads
+    }
+
+    pub fn steal(&self) -> bool {
+        self.cluster.steal
+    }
+
+    pub fn admission(&self) -> &AdmissionConfig {
+        &self.admission
+    }
+
+    pub fn thermal(&self) -> &ThermalServerConfig {
+        &self.thermal
+    }
+
+    pub fn supervisor(&self) -> &SupervisorConfig {
+        &self.supervisor
+    }
+
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// Serialize for `--config` files. Durations are milliseconds;
+    /// `max_restarts`/`deadline_ms` use `null` for "unbounded"/"none";
+    /// the fault plan round-trips through its spec grammar. Lossy only
+    /// for a non-default [`DriftConfig`] (the file format carries
+    /// `"drift": true|false`, standing for the default drift model).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("batch_timeout_ms", Json::Num(self.batch_timeout.as_millis() as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("engine_threads", Json::Num(self.engine_threads as f64)),
+            ("steal", Json::Bool(self.cluster.steal)),
+            ("max_in_flight", Json::Num(self.admission.max_in_flight as f64)),
+            (
+                "deadline_ms",
+                match self.admission.default_deadline {
+                    Some(d) => Json::Num(d.as_millis() as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("retry_after_ms", Json::Num(self.admission.retry_after.as_millis() as f64)),
+            ("watchdog_ms", Json::Num(self.supervisor.watchdog.as_millis() as f64)),
+            ("max_retries", Json::Num(self.supervisor.max_retries as f64)),
+            ("backoff_ms", Json::Num(self.supervisor.backoff.as_millis() as f64)),
+            (
+                "max_restarts",
+                if self.supervisor.max_restarts == u64::MAX {
+                    Json::Null
+                } else {
+                    Json::Num(self.supervisor.max_restarts as f64)
+                },
+            ),
+            ("thermal", thermal_to_json(&self.thermal)),
+        ];
+        if !self.faults.is_empty() {
+            pairs.push(("faults", Json::Str(self.faults.describe().join(","))));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Load from `--config FILE` text. Unknown keys are rejected (a
+    /// typo must not silently fall back to a default), and the result
+    /// passes the same builder validation as programmatic construction.
+    pub fn from_json(text: &str) -> crate::Result<ServerConfig> {
+        let doc = Json::parse(text)
+            .map_err(|e| crate::Error::Config(format!("server config: {e}")))?;
+        let Json::Obj(map) = &doc else {
+            return Err(crate::Error::Config("server config must be a JSON object".into()));
+        };
+        let mut b = ServerConfig::builder();
+        let mut faults_spec: Option<String> = None;
+        for (key, val) in map {
+            match key.as_str() {
+                "max_batch" => b = b.max_batch(cfg_usize(val, key)?),
+                "batch_timeout_ms" => {
+                    b = b.batch_timeout(Duration::from_millis(cfg_u64(val, key)?))
+                }
+                "workers" => b = b.workers(cfg_usize(val, key)?),
+                "engine_threads" => b = b.engine_threads(cfg_usize(val, key)?),
+                "steal" => b = b.steal(cfg_bool(val, key)?),
+                "max_in_flight" => b = b.max_in_flight(cfg_usize(val, key)?),
+                "deadline_ms" => {
+                    b = b.default_deadline(match val {
+                        Json::Null => None,
+                        v => Some(Duration::from_millis(cfg_u64(v, key)?)),
+                    })
+                }
+                "retry_after_ms" => {
+                    b = b.retry_after(Duration::from_millis(cfg_u64(val, key)?))
+                }
+                "watchdog_ms" => b = b.watchdog(Duration::from_millis(cfg_u64(val, key)?)),
+                "max_retries" => b = b.max_retries(cfg_u64(val, key)? as u32),
+                "backoff_ms" => b = b.backoff(Duration::from_millis(cfg_u64(val, key)?)),
+                "max_restarts" => {
+                    b = b.max_restarts(match val {
+                        Json::Null => u64::MAX,
+                        v => cfg_u64(v, key)?,
+                    })
+                }
+                "thermal" => b = b.thermal(thermal_from_json(val)?),
+                "faults" => {
+                    let spec = val.as_str().ok_or_else(|| {
+                        crate::Error::Config(
+                            "server config key \"faults\" must be a spec string".into(),
+                        )
+                    })?;
+                    // parsed after the loop: kill-each needs the final
+                    // worker count, and BTreeMap order visits "faults"
+                    // before "workers"
+                    faults_spec = Some(spec.to_string());
+                }
+                other => {
+                    return Err(crate::Error::Config(format!(
+                        "unknown server config key {other:?}"
+                    )))
+                }
+            }
+        }
+        if let Some(spec) = faults_spec {
+            let plan = FaultPlan::parse(&spec, b.cfg.workers.max(1))
+                .map_err(|e| crate::Error::Config(format!("faults: {e}")))?;
+            b = b.faults(plan);
+        }
+        b.build()
+    }
+}
+
+fn thermal_to_json(t: &ThermalServerConfig) -> Json {
+    let mut pairs = vec![("drift", Json::Bool(t.drift.is_some()))];
+    match t.policy {
+        ThermalPolicy::Off => pairs.push(("policy", Json::Str("off".into()))),
+        ThermalPolicy::Periodic { every_requests } => {
+            pairs.push(("policy", Json::Str("periodic".into())));
+            pairs.push(("every_requests", Json::Num(every_requests as f64)));
+        }
+        ThermalPolicy::Threshold { budget_rad } => {
+            pairs.push(("policy", Json::Str("threshold".into())));
+            pairs.push(("budget_rad", Json::Num(budget_rad)));
+        }
+    }
+    if let Some(b) = t.brownout_budget_rad {
+        pairs.push(("brownout_budget_rad", Json::Num(b)));
+    }
+    if let Some(w) = t.drift_only_worker {
+        pairs.push(("drift_only_worker", Json::Num(w as f64)));
+    }
+    Json::obj(pairs)
+}
+
+fn thermal_from_json(v: &Json) -> crate::Result<ThermalServerConfig> {
+    let Json::Obj(map) = v else {
+        return Err(crate::Error::Config(
+            "server config key \"thermal\" must be an object".into(),
+        ));
+    };
+    let mut t = ThermalServerConfig::default();
+    let mut policy_name: Option<String> = None;
+    let mut every_requests: Option<u64> = None;
+    let mut budget_rad: Option<f64> = None;
+    for (key, val) in map {
+        match key.as_str() {
+            "drift" => {
+                if cfg_bool(val, "thermal.drift")? {
+                    t.drift = Some(DriftConfig::default());
+                }
+            }
+            "policy" => {
+                let name = val.as_str().ok_or_else(|| {
+                    crate::Error::Config("thermal.policy must be a string".into())
+                })?;
+                policy_name = Some(name.to_string());
+            }
+            "every_requests" => {
+                every_requests = Some(cfg_u64(val, "thermal.every_requests")?)
+            }
+            "budget_rad" => budget_rad = Some(cfg_f64(val, "thermal.budget_rad")?),
+            "brownout_budget_rad" => {
+                t.brownout_budget_rad = Some(cfg_f64(val, "thermal.brownout_budget_rad")?)
+            }
+            "drift_only_worker" => {
+                t.drift_only_worker = Some(cfg_usize(val, "thermal.drift_only_worker")?)
+            }
+            other => {
+                return Err(crate::Error::Config(format!(
+                    "unknown thermal config key {other:?}"
+                )))
+            }
+        }
+    }
+    t.policy = match policy_name.as_deref() {
+        None | Some("off") => ThermalPolicy::Off,
+        Some("periodic") => ThermalPolicy::Periodic {
+            every_requests: every_requests.ok_or_else(|| {
+                crate::Error::Config(
+                    "thermal.policy \"periodic\" needs every_requests".into(),
+                )
+            })?,
+        },
+        Some("threshold") => ThermalPolicy::Threshold {
+            budget_rad: budget_rad.ok_or_else(|| {
+                crate::Error::Config("thermal.policy \"threshold\" needs budget_rad".into())
+            })?,
+        },
+        Some(other) => {
+            return Err(crate::Error::Config(format!("unknown thermal policy {other:?}")))
+        }
+    };
+    Ok(t)
+}
+
+fn cfg_f64(v: &Json, key: &str) -> crate::Result<f64> {
+    v.as_f64().ok_or_else(|| {
+        crate::Error::Config(format!("server config key {key:?} must be a number"))
+    })
+}
+
+fn cfg_u64(v: &Json, key: &str) -> crate::Result<u64> {
+    let x = cfg_f64(v, key)?;
+    if x < 0.0 || x.fract() != 0.0 {
+        return Err(crate::Error::Config(format!(
+            "server config key {key:?} must be a non-negative integer"
+        )));
+    }
+    Ok(x as u64)
+}
+
+fn cfg_usize(v: &Json, key: &str) -> crate::Result<usize> {
+    cfg_u64(v, key).map(|x| x as usize)
+}
+
+fn cfg_bool(v: &Json, key: &str) -> crate::Result<bool> {
+    v.as_bool().ok_or_else(|| {
+        crate::Error::Config(format!("server config key {key:?} must be a boolean"))
+    })
+}
+
+/// Validating builder for [`ServerConfig`] — the only construction path
+/// outside this crate. Setters mirror the config fields plus shortcuts
+/// into the nested policies (`max_in_flight`, `watchdog`, ...);
+/// [`build`](ServerConfigBuilder::build) checks every invariant and
+/// returns [`crate::Error::Config`] naming the violated one.
+#[derive(Debug, Clone)]
+pub struct ServerConfigBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    pub fn batch_timeout(mut self, d: Duration) -> Self {
+        self.cfg.batch_timeout = d;
+        self
+    }
+
+    /// Engine replica count (`--replicas` at the bench level routes
+    /// through this).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    pub fn engine_threads(mut self, n: usize) -> Self {
+        self.cfg.engine_threads = n;
+        self
+    }
+
+    pub fn admission(mut self, a: AdmissionConfig) -> Self {
+        self.cfg.admission = a;
+        self
+    }
+
+    pub fn max_in_flight(mut self, n: usize) -> Self {
+        self.cfg.admission.max_in_flight = n;
+        self
+    }
+
+    pub fn default_deadline(mut self, d: Option<Duration>) -> Self {
+        self.cfg.admission.default_deadline = d;
+        self
+    }
+
+    pub fn retry_after(mut self, d: Duration) -> Self {
+        self.cfg.admission.retry_after = d;
+        self
+    }
+
+    pub fn thermal(mut self, t: ThermalServerConfig) -> Self {
+        self.cfg.thermal = t;
+        self
+    }
+
+    pub fn supervisor(mut self, s: SupervisorConfig) -> Self {
+        self.cfg.supervisor = s;
+        self
+    }
+
+    pub fn watchdog(mut self, d: Duration) -> Self {
+        self.cfg.supervisor.watchdog = d;
+        self
+    }
+
+    pub fn max_retries(mut self, n: u32) -> Self {
+        self.cfg.supervisor.max_retries = n;
+        self
+    }
+
+    pub fn backoff(mut self, d: Duration) -> Self {
+        self.cfg.supervisor.backoff = d;
+        self
+    }
+
+    pub fn max_restarts(mut self, n: u64) -> Self {
+        self.cfg.supervisor.max_restarts = n;
+        self
+    }
+
+    pub fn faults(mut self, f: FaultPlan) -> Self {
+        self.cfg.faults = f;
+        self
+    }
+
+    /// Enable work stealing between replica queues.
+    pub fn steal(mut self, on: bool) -> Self {
+        self.cfg.cluster.steal = on;
+        self
+    }
+
+    /// Validate and produce the config. Each violated invariant gets
+    /// its own [`crate::Error::Config`] message.
+    pub fn build(self) -> crate::Result<ServerConfig> {
+        let cfg = self.cfg;
+        if cfg.workers == 0 {
+            return Err(crate::Error::Config("workers must be >= 1".into()));
+        }
+        if cfg.max_batch == 0 {
+            return Err(crate::Error::Config("max_batch must be >= 1".into()));
+        }
+        if cfg.engine_threads == 0 {
+            return Err(crate::Error::Config("engine_threads must be >= 1".into()));
+        }
+        if cfg.admission.max_in_flight == 0 {
+            return Err(crate::Error::Config("admission.max_in_flight must be >= 1".into()));
+        }
+        if cfg.supervisor.watchdog <= cfg.batch_timeout {
+            return Err(crate::Error::Config(format!(
+                "supervisor.watchdog ({}ms) must exceed batch_timeout ({}ms): a watchdog \
+                 shorter than one batching window declares healthy workers stuck",
+                cfg.supervisor.watchdog.as_millis(),
+                cfg.batch_timeout.as_millis()
+            )));
+        }
+        Ok(cfg)
     }
 }
 
@@ -277,39 +705,128 @@ pub struct ServerReport {
     pub recalibrations: u64,
     /// Chunks recompiled by thermal recalibration across workers.
     pub recal_chunks: u64,
+    /// Shards stolen between replica queues (`ClusterConfig::steal`).
+    pub steals: u64,
+    /// Shards routed to each replica slot by the cluster scheduler.
+    pub routed: Vec<u64>,
 }
 
 /// A shard of a dynamic batch, tagged with the full batch size (clients
-/// observe the batch they rode in, not the shard) and its per-slot
+/// observe the batch they rode in, not the shard), its per-slot
 /// sequence number (monotone across worker generations — the fault
-/// plan's address space).
+/// plan's address space), and the slot whose queue ledger carries it
+/// (`home` — unchanged by stealing, so accounting follows the queue a
+/// shard was charged to).
 struct Shard {
     requests: Vec<Request>,
     batch_size: usize,
     seq: u64,
+    home: usize,
 }
 
-/// Depth of each engine worker's shard queue. Small on purpose: the
-/// dispatcher plans shards only onto workers with in-flight headroom
-/// below this depth (capacity-aware dispatch), and the admission cap
-/// already bounds total queued work.
+/// In-flight headroom per replica: the dispatcher plans shards only
+/// onto replicas whose queued + executing shard count is below this.
+/// Small on purpose — the admission cap already bounds total queued
+/// work, and deep per-replica queues would defeat load-aware routing.
 const WORKER_QUEUE_DEPTH: usize = 2;
 
 /// How often the dispatcher wakes to run supervision while idle.
 const SUPERVISE_TICK: Duration = Duration::from_millis(10);
 
+/// How long an idle worker sleeps on its queue condvar per wait round.
+/// Bounded so steal attempts, generation checks, and shutdown stay
+/// live even if a notify is missed.
+const WORKER_POLL: Duration = Duration::from_millis(10);
+
+/// One replica slot's persistent shard queue. Outlives worker
+/// generations: a respawned worker resumes the backlog its predecessor
+/// left, and the `gen` token retires zombies (a worker whose generation
+/// no longer matches exits at its next queue visit).
+///
+/// The ledger (`enqueued` − `accounted`) counts shards queued or
+/// executing on this slot. Workers account a shard against its *home*
+/// queue when done; the supervisor reconciles the ledger on respawn
+/// (writes off what a dead generation had popped) and settles it on
+/// retirement. `ewma_us` is the router's service-time estimate,
+/// updated by the slot's own worker after each executed shard.
+struct ReplicaQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    /// Shards ever pushed to this queue.
+    enqueued: AtomicU64,
+    /// Shards fully accounted (served, dropped, recovered, or written
+    /// off by reconciliation).
+    accounted: AtomicU64,
+    /// EWMA shard service time in µs (0 = no sample yet).
+    ewma_us: AtomicU64,
+}
+
+struct QueueInner {
+    shards: VecDeque<Shard>,
+    /// Generation token: bumped by the supervisor when it retires the
+    /// slot's worker, so the zombie can never serve the replacement's
+    /// queue.
+    gen: u64,
+    /// Set at shutdown after the backlog drains.
+    closed: bool,
+}
+
+impl ReplicaQueue {
+    fn new() -> Self {
+        Self {
+            inner: Mutex::new(QueueInner {
+                shards: VecDeque::new(),
+                gen: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            enqueued: AtomicU64::new(0),
+            accounted: AtomicU64::new(0),
+            ewma_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Shards queued or executing on this slot.
+    fn in_flight(&self) -> u64 {
+        self.enqueued
+            .load(Ordering::Acquire)
+            .saturating_sub(self.accounted.load(Ordering::Acquire))
+    }
+
+    /// Mark one shard of this queue's ledger fully handled.
+    fn account(&self) {
+        self.accounted.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn push(&self, shard: Shard) {
+        self.enqueued.fetch_add(1, Ordering::AcqRel);
+        lock_clean(&self.inner).shards.push_back(shard);
+        self.cv.notify_one();
+    }
+
+    /// Fold one shard-execution sample into the EWMA (`new = (4·old +
+    /// sample) / 5`); the first sample seeds it. Clamped to >= 1 µs so
+    /// "has a sample" and "no sample yet" stay distinguishable.
+    fn observe_service_us(&self, us: u64) {
+        let sample = us.max(1);
+        let old = self.ewma_us.load(Ordering::Acquire);
+        let new = if old == 0 { sample } else { (4 * old + sample) / 5 };
+        self.ewma_us.store(new, Ordering::Release);
+    }
+}
+
 /// Shared per-generation worker state: heartbeat, checkpoint slot,
-/// completion counter, brownout flag. A respawn allocates a fresh
-/// `WorkerHealth`, so a detached zombie can never corrupt the state of
-/// its replacement.
+/// thermal scores. A respawn allocates a fresh `WorkerHealth`, so a
+/// detached zombie can never corrupt the state of its replacement.
 struct WorkerHealth {
     /// Heartbeat: ms since the dispatcher epoch when the current shard
     /// was received (`u64::MAX` = idle). The watchdog reads this.
     busy_since_ms: AtomicU64,
-    /// Shards fully accounted by this generation.
-    done: AtomicU64,
     /// Post-tick phase-error estimate exceeded the brownout budget.
     brownout: AtomicBool,
+    /// Continuous thermal score (phase error in milliradians) for the
+    /// router's heat-aware ranking; 0 until the first thermal tick.
+    heat_milli: AtomicU64,
     /// The checkpoint slot: a shard parks here from receive until the
     /// worker commits to executing it, so the supervisor can recover it
     /// losslessly from a dead or stuck worker.
@@ -320,8 +837,8 @@ impl WorkerHealth {
     fn new() -> Self {
         Self {
             busy_since_ms: AtomicU64::new(u64::MAX),
-            done: AtomicU64::new(0),
             brownout: AtomicBool::new(false),
+            heat_milli: AtomicU64::new(0),
             checkpoint: Mutex::new(None),
         }
     }
@@ -358,11 +875,14 @@ struct WorkerContext {
     metrics: Arc<ServerMetrics>,
     /// Time origin for the heartbeat encoding.
     epoch: Instant,
+    /// One persistent shard queue per replica slot.
+    queues: Vec<Arc<ReplicaQueue>>,
+    /// Idle replicas steal from the deepest peer queue.
+    steal: bool,
 }
 
 /// One live worker generation.
 struct WorkerGen {
-    tx: SyncSender<Shard>,
     handle: JoinHandle<()>,
     health: Arc<WorkerHealth>,
 }
@@ -375,39 +895,91 @@ struct WorkerSlot {
     /// Next shard sequence number (monotone across generations, so the
     /// fault plan's addresses survive respawns).
     seq_next: u64,
-    /// Shards sent to the CURRENT generation.
-    sent: u64,
     /// `None` = retired (restart budget exhausted).
     gen: Option<WorkerGen>,
 }
 
-impl WorkerSlot {
-    /// Shards sent to the current generation and not yet accounted.
-    fn in_flight(&self) -> u64 {
-        match &self.gen {
-            Some(g) => self.sent.saturating_sub(g.health.done.load(Ordering::Acquire)),
-            None => 0,
-        }
-    }
-}
-
 fn spawn_engine_worker(ctx: &Arc<WorkerContext>, widx: usize) -> WorkerGen {
-    let (tx, rx) = mpsc::sync_channel::<Shard>(WORKER_QUEUE_DEPTH);
     let health = Arc::new(WorkerHealth::new());
     ctx.metrics.set_worker_up(widx, true);
+    // bind to the queue's current generation: if the supervisor later
+    // bumps it, this worker knows to stand down
+    let my_gen = lock_clean(&ctx.queues[widx].inner).gen;
     let handle = {
         let ctx = Arc::clone(ctx);
         let health = Arc::clone(&health);
-        std::thread::spawn(move || run_engine_worker(ctx, widx, health, rx))
+        std::thread::spawn(move || run_engine_worker(ctx, widx, my_gen, health))
     };
-    WorkerGen { tx, handle, health }
+    WorkerGen { handle, health }
+}
+
+/// Take the deepest peer backlog's newest shard (victim pops front,
+/// thief pops back — the classic deque split keeps the victim's oldest
+/// work with the victim). Try-locks only: stealing never blocks on a
+/// busy queue.
+fn try_steal(ctx: &WorkerContext, widx: usize) -> Option<Shard> {
+    let mut victim = None;
+    let mut deepest = 0usize;
+    for (i, q) in ctx.queues.iter().enumerate() {
+        if i == widx {
+            continue;
+        }
+        if let Ok(inner) = q.inner.try_lock() {
+            if inner.shards.len() > deepest {
+                deepest = inner.shards.len();
+                victim = Some(i);
+            }
+        }
+    }
+    let mut inner = ctx.queues[victim?].inner.try_lock().ok()?;
+    let shard = inner.shards.pop_back();
+    if shard.is_some() {
+        ctx.metrics.note_steal();
+    }
+    shard
+}
+
+/// Next shard for worker `widx` of generation `my_gen`: own queue
+/// first, then (if enabled) a steal from the deepest peer, else a
+/// bounded condvar wait. Returns `None` when the generation is retired
+/// or the queue is closed and drained.
+fn next_shard(ctx: &WorkerContext, widx: usize, my_gen: u64) -> Option<Shard> {
+    let q = &ctx.queues[widx];
+    let mut inner = lock_clean(&q.inner);
+    loop {
+        if inner.gen != my_gen {
+            return None;
+        }
+        if let Some(shard) = inner.shards.pop_front() {
+            return Some(shard);
+        }
+        if inner.closed {
+            return None;
+        }
+        if ctx.steal {
+            drop(inner);
+            let stolen = try_steal(ctx, widx);
+            inner = lock_clean(&q.inner);
+            if let Some(shard) = stolen {
+                return Some(shard);
+            }
+            // nothing to steal: re-check own state, then sleep below
+            if inner.gen != my_gen || inner.closed || !inner.shards.is_empty() {
+                continue;
+            }
+        }
+        inner = match q.cv.wait_timeout(inner, WORKER_POLL) {
+            Ok((guard, _)) => guard,
+            Err(e) => e.into_inner().0,
+        };
+    }
 }
 
 fn run_engine_worker(
     ctx: Arc<WorkerContext>,
     widx: usize,
+    my_gen: u64,
     health: Arc<WorkerHealth>,
-    rx: Receiver<Shard>,
 ) {
     let mut engine = PhotonicEngine::new(ctx.cfg.clone(), ctx.opts);
     engine.set_threads(ctx.engine_threads);
@@ -418,19 +990,29 @@ fn run_engine_worker(
         engine.set_protected([last.clone()].into_iter().collect());
     }
     // thermal-drift runtime: this worker's replica drifts with wall
-    // time (scaled) and its own served-request self-heating
-    let time_scale = ctx.thermal.drift.as_ref().map(|d| d.time_scale);
-    if let Some(drift) = ctx.thermal.drift.clone() {
-        engine.set_thermal(
-            DriftConfig { worker_id: widx as u64, ..drift },
-            ctx.thermal.policy,
-        );
+    // time (scaled) and its own served-request self-heating.
+    // `drift_only_worker` narrows the runtime to one replica — the
+    // hot-replica routing experiments force exactly one hot board.
+    let drift_here = ctx.thermal.drift_only_worker.is_none_or(|w| w == widx);
+    let time_scale = if drift_here {
+        ctx.thermal.drift.as_ref().map(|d| d.time_scale)
+    } else {
+        None
+    };
+    if drift_here {
+        if let Some(drift) = ctx.thermal.drift.clone() {
+            engine.set_thermal(
+                DriftConfig { worker_id: widx as u64, ..drift },
+                ctx.thermal.policy,
+            );
+        }
     }
     let started = Instant::now();
     let mut served: u64 = 0;
-    while let Ok(shard) = rx.recv() {
+    while let Some(shard) = next_shard(&ctx, widx, my_gen) {
         let seq = shard.seq;
         let batch_size = shard.batch_size;
+        let home = shard.home;
         health.begin_busy(ctx.epoch);
         // checkpoint: park the shard where the supervisor can reach it.
         // From here until the take() below, a death or watchdog theft
@@ -446,7 +1028,7 @@ fn run_engine_worker(
                 // reply channels vanish un-sent: clients observe a
                 // disconnect (retryable); the worker stays healthy
                 drop(lock_clean(&health.checkpoint).take());
-                health.done.fetch_add(1, Ordering::AcqRel);
+                ctx.queues[home].account();
                 health.end_busy();
                 continue;
             }
@@ -471,6 +1053,7 @@ fn run_engine_worker(
                 engine.recalibrate_thermal();
             }
         }
+        let exec_started = Instant::now();
         // second-chance deadline check, hoisted to ONE scan over the
         // whole shard *before* batch assembly: requests that expired
         // in this worker's shard queue never inflate the batched
@@ -517,15 +1100,22 @@ fn run_engine_worker(
                 }));
             }
         }
-        health.done.fetch_add(1, Ordering::AcqRel);
+        // settle the ledger against the shard's home queue (a stolen
+        // shard still belongs to its victim's ledger) and feed the
+        // router's service-time estimate from our own execution
+        ctx.queues[home].account();
+        ctx.queues[widx].observe_service_us(exec_started.elapsed().as_micros() as u64);
         health.end_busy();
         let rep = engine.energy_report();
         ctx.metrics.set_worker_energy(widx, rep.energy_mj, rep.time_ms);
         // advance the drift runtime once per shard and publish the
-        // post-tick gauges + brownout state
+        // post-tick heat score, gauges, and brownout state
         if let Some(scale) = time_scale {
             let t_s = started.elapsed().as_secs_f64() * scale;
             if let Some(s) = engine.thermal_tick(t_s, served) {
+                let heat = (s.phase_error_rad.max(0.0) * 1000.0) as u64;
+                health.heat_milli.store(heat, Ordering::Release);
+                ctx.metrics.set_replica_heat(widx, heat);
                 if let Some(budget) = ctx.thermal.brownout_budget_rad {
                     let hot = s.phase_error_rad > budget;
                     let was = health.brownout.swap(hot, Ordering::AcqRel);
@@ -561,9 +1151,8 @@ impl InferenceServer {
         masks: std::collections::BTreeMap<String, crate::sparsity::LayerMask>,
         server_cfg: ServerConfig,
     ) -> Self {
-        let n_workers = server_cfg.workers.max(1);
         let admission = AdmissionController::new(server_cfg.admission.clone());
-        let metrics = Arc::new(ServerMetrics::new(n_workers));
+        let metrics = Arc::new(ServerMetrics::new(server_cfg.workers.max(1)));
         // inbox bound = admission cap: a submit holding a permit can
         // never block on a full channel
         let inbox = server_cfg.admission.max_in_flight.max(1);
@@ -687,7 +1276,9 @@ fn requeue_lost(
 }
 
 /// One supervision pass: reap dead workers, steal from stuck ones,
-/// respawn within budget, and requeue recovered requests.
+/// respawn within budget (the replacement resumes the queue backlog),
+/// and requeue recovered requests. Also publishes the per-replica
+/// queue-depth gauges.
 fn supervise(
     slots: &mut [WorkerSlot],
     ctx: &Arc<WorkerContext>,
@@ -696,6 +1287,8 @@ fn supervise(
 ) {
     let now = Instant::now();
     for slot in slots.iter_mut() {
+        let q = &ctx.queues[slot.widx];
+        ctx.metrics.set_replica_queue_depth(slot.widx, q.in_flight());
         let (dead, stuck) = match &slot.gen {
             Some(g) => {
                 let dead = g.handle.is_finished();
@@ -710,12 +1303,14 @@ fn supervise(
         if !dead && !stuck {
             continue;
         }
-        // retire this generation. Dropping the tx ends a stuck zombie's
-        // loop at its next recv (it may still drain already-queued
-        // shards — late replies, not double execution: the checkpoint
-        // protocol keeps execution exactly-once).
+        // retire this generation: bump the queue's generation token so
+        // a stuck zombie stands down at its next queue visit (it may
+        // still finish the shard it committed to — a late reply, not
+        // double execution: the checkpoint protocol keeps execution
+        // exactly-once).
         let gen = slot.gen.take().expect("checked above");
-        drop(gen.tx);
+        lock_clean(&q.inner).gen += 1;
+        q.cv.notify_all();
         if dead {
             let _ = gen.handle.join(); // reap; a panic is already handled
         } // stuck: detach — never block the dispatcher on a zombie
@@ -733,80 +1328,80 @@ fn supervise(
             }
         };
         if let Some(shard) = recovered {
+            // settle the recovered shard against its home ledger (it
+            // may be a stolen shard from a peer's queue)
+            ctx.queues[shard.home].account();
             requeue_lost(shard.requests, retry_q, sup, &ctx.metrics, now);
         }
-        slot.sent = 0;
         if slot.restarts < sup.max_restarts {
             // warm restart: fresh engine from the retained config, same
-            // worker id (drift fingerprints + metric slots stay stable)
+            // worker id (drift fingerprints + metric slots stay stable).
+            // The replacement resumes the queue backlog — queued shards
+            // survive their worker.
             slot.restarts += 1;
             ctx.metrics.note_worker_restart();
+            // reconcile the ledger first: backlogged shards stay in
+            // flight; anything the dead generation had popped without
+            // accounting is written off. (A detached zombie completing
+            // after this store double-accounts one shard — benign: the
+            // ledger saturates at zero and the next reconcile resets it.)
+            let backlog = lock_clean(&q.inner).shards.len() as u64;
+            q.accounted.store(
+                q.enqueued.load(Ordering::Acquire).saturating_sub(backlog),
+                Ordering::Release,
+            );
             slot.gen = Some(spawn_engine_worker(ctx, slot.widx));
+        } else {
+            // retired for good: nothing will serve this queue again —
+            // requeue its backlog and settle the ledger
+            let orphans: Vec<Shard> =
+                lock_clean(&q.inner).shards.drain(..).collect();
+            for shard in orphans {
+                requeue_lost(shard.requests, retry_q, sup, &ctx.metrics, now);
+            }
+            q.accounted.store(q.enqueued.load(Ordering::Acquire), Ordering::Release);
         }
     }
 }
 
-/// Brownout-aware shard planning over available workers (`(slot index,
-/// browned-out)` pairs). Cool workers absorb the whole batch in
-/// contiguous near-equal shards; when every available replica is hot,
-/// availability wins over strict fidelity — shards are halved so each
-/// hot replica ticks and recalibrates sooner.
-fn plan_shards(
-    n: usize,
-    avail: &[(usize, bool)],
-    max_batch: usize,
-) -> Vec<(usize, std::ops::Range<usize>)> {
-    let cool: Vec<usize> =
-        avail.iter().filter(|(_, hot)| !hot).map(|&(i, _)| i).collect();
-    if !cool.is_empty() {
-        return partition_ranges(n, cool.len())
-            .into_iter()
-            .enumerate()
-            .map(|(k, r)| (cool[k], r))
-            .collect();
-    }
-    let half = (max_batch / 2).max(1);
-    let mut out = Vec::new();
-    let (mut start, mut k) = (0, 0);
-    while start < n {
-        let end = (start + half).min(n);
-        out.push((avail[k % avail.len()].0, start..end));
-        start = end;
-        k += 1;
-    }
-    out
-}
-
-/// Shard `batch` over the available workers. Returns without blocking:
-/// requests that cannot be placed right now are parked in `retry_q`.
+/// Route `batch` across the replica pool: snapshot every live replica
+/// with queue headroom as a [`ReplicaState`] and let the cluster
+/// scheduler split the batch across the coolest, least-loaded ones.
+/// Returns without blocking: requests that cannot be placed right now
+/// are parked in `retry_q`.
 fn dispatch_batch(
     mut batch: Vec<Request>,
     slots: &mut [WorkerSlot],
+    ctx: &Arc<WorkerContext>,
     retry_q: &mut Vec<(Instant, Request)>,
-    sup: &SupervisorConfig,
-    metrics: &ServerMetrics,
     max_batch: usize,
 ) {
     let any_live = slots.iter().any(|s| s.gen.is_some());
     if !any_live {
         // every restart budget is spent: degrade to failing requests
         // fast (clients see retryable errors, the process stays up)
-        metrics.note_worker_lost(batch.len() as u64);
+        ctx.metrics.note_worker_lost(batch.len() as u64);
         for req in batch {
             fail_request(req, ServeError::WorkerLost);
         }
         return;
     }
-    // capacity-aware dispatch: only workers with queue headroom (their
-    // in-flight count below the queue depth) receive shards, so a send
-    // can never block the dispatcher behind a slow or stalled worker
-    let avail: Vec<(usize, bool)> = slots
+    // capacity-aware routing: only replicas with queue headroom are
+    // candidates, so a planned shard can always be queued immediately
+    // and the dispatcher never blocks behind a slow worker
+    let avail: Vec<ReplicaState> = slots
         .iter()
-        .enumerate()
-        .filter_map(|(i, s)| {
+        .filter_map(|s| {
             s.gen.as_ref().and_then(|g| {
-                (s.in_flight() < WORKER_QUEUE_DEPTH as u64)
-                    .then(|| (i, g.health.brownout.load(Ordering::Acquire)))
+                let q = &ctx.queues[s.widx];
+                let depth = q.in_flight();
+                (depth < WORKER_QUEUE_DEPTH as u64).then(|| ReplicaState {
+                    idx: s.widx,
+                    queue_depth: depth,
+                    ewma_us: q.ewma_us.load(Ordering::Acquire),
+                    heat_milli: g.health.heat_milli.load(Ordering::Acquire),
+                    hot: g.health.brownout.load(Ordering::Acquire),
+                })
             })
         })
         .collect();
@@ -820,32 +1415,17 @@ fn dispatch_batch(
         return;
     }
     let batch_size = batch.len();
-    metrics.note_batch();
-    metrics.note_batch_occupancy(batch_size);
-    let plan = plan_shards(batch.len(), &avail, max_batch);
-    for (slot_idx, range) in plan.into_iter().rev() {
+    ctx.metrics.note_batch();
+    ctx.metrics.note_batch_occupancy(batch_size);
+    let plan = plan_shards(batch_size, &avail, max_batch);
+    // drain back-to-front so earlier ranges stay valid
+    for (widx, range) in plan.into_iter().rev() {
         let requests: Vec<Request> = batch.drain(range).collect();
-        let slot = &mut slots[slot_idx];
-        let gen = slot.gen.as_ref().expect("planned over live slots");
-        let shard = Shard { requests, batch_size, seq: slot.seq_next };
-        match gen.tx.try_send(shard) {
-            Ok(()) => {
-                slot.seq_next += 1;
-                slot.sent += 1;
-            }
-            Err(mpsc::TrySendError::Full(shard)) => {
-                // only reachable when the halving path stacks several
-                // shards on one hot worker: park, no retry charge
-                for req in shard.requests {
-                    retry_q.push((now + Duration::from_millis(1), req));
-                }
-            }
-            Err(mpsc::TrySendError::Disconnected(shard)) => {
-                // died since the last supervision pass; the next pass
-                // respawns it, these requests ride the retry path
-                requeue_lost(shard.requests, retry_q, sup, metrics, now);
-            }
-        }
+        let slot = &mut slots[widx];
+        let shard = Shard { requests, batch_size, seq: slot.seq_next, home: widx };
+        slot.seq_next += 1;
+        ctx.queues[widx].push(shard);
+        ctx.metrics.note_routed(widx);
     }
 }
 
@@ -862,6 +1442,8 @@ fn run_dispatcher(
 ) -> ServerReport {
     let n_workers = server_cfg.workers.max(1);
     let sup = server_cfg.supervisor.clone();
+    let queues: Vec<Arc<ReplicaQueue>> =
+        (0..n_workers).map(|_| Arc::new(ReplicaQueue::new())).collect();
     let ctx = Arc::new(WorkerContext {
         model,
         cfg,
@@ -872,13 +1454,14 @@ fn run_dispatcher(
         faults: server_cfg.faults.clone(),
         metrics: Arc::clone(&metrics),
         epoch: Instant::now(),
+        queues,
+        steal: server_cfg.cluster.steal,
     });
     let mut slots: Vec<WorkerSlot> = (0..n_workers)
         .map(|widx| WorkerSlot {
             widx,
             restarts: 0,
             seq_next: 0,
-            sent: 0,
             gen: Some(spawn_engine_worker(&ctx, widx)),
         })
         .collect();
@@ -933,11 +1516,12 @@ fn run_dispatcher(
         }
         if batch.is_empty() {
             // inbox closed: drain. Keep supervising until no retry is
-            // pending and every dispatched shard is accounted — a
-            // worker dying mid-drain is still healed.
+            // pending and every queue ledger is settled — a worker
+            // dying mid-drain is still healed, and its queue backlog is
+            // served by the replacement.
             if !inbox_open
                 && retry_q.is_empty()
-                && slots.iter().map(WorkerSlot::in_flight).sum::<u64>() == 0
+                && ctx.queues.iter().map(|q| q.in_flight()).sum::<u64>() == 0
             {
                 break;
             }
@@ -959,25 +1543,16 @@ fn run_dispatcher(
         if batch.is_empty() {
             continue;
         }
-        dispatch_batch(
-            batch,
-            &mut slots,
-            &mut retry_q,
-            &sup,
-            &metrics,
-            server_cfg.max_batch,
-        );
+        dispatch_batch(batch, &mut slots, &ctx, &mut retry_q, server_cfg.max_batch);
     }
     // shutdown: close worker queues, join, report from the shared ledger
     let workers_live = slots.iter().filter(|s| s.gen.is_some()).count();
-    let handles: Vec<JoinHandle<()>> = slots
-        .iter_mut()
-        .filter_map(|s| s.gen.take())
-        .map(|g| {
-            drop(g.tx);
-            g.handle
-        })
-        .collect();
+    for q in &ctx.queues {
+        lock_clean(&q.inner).closed = true;
+        q.cv.notify_all();
+    }
+    let handles: Vec<JoinHandle<()>> =
+        slots.iter_mut().filter_map(|s| s.gen.take()).map(|g| g.handle).collect();
     for h in handles {
         let _ = h.join();
     }
@@ -1005,6 +1580,8 @@ fn run_dispatcher(
         brownouts: snap.brownouts_total,
         recalibrations: snap.recalibrations,
         recal_chunks: snap.recal_chunks,
+        steals: snap.steals,
+        routed: snap.routed,
     }
 }
 
@@ -1027,6 +1604,103 @@ mod tests {
         ds.sample(class as u64, i).0
     }
 
+    fn heat_only_drift() -> DriftConfig {
+        DriftConfig {
+            ambient_amp_rad: 0.0,
+            self_heat_amp_rad: 0.2,
+            self_heat_tau_reqs: 4.0,
+            time_scale: 0.0,
+            ..DriftConfig::default()
+        }
+    }
+
+    #[test]
+    fn builder_validates_each_invariant() {
+        let cases: Vec<(ServerConfigBuilder, &str)> = vec![
+            (ServerConfig::builder().workers(0), "workers"),
+            (ServerConfig::builder().max_batch(0), "max_batch"),
+            (ServerConfig::builder().engine_threads(0), "engine_threads"),
+            (ServerConfig::builder().max_in_flight(0), "max_in_flight"),
+            (
+                ServerConfig::builder()
+                    .batch_timeout(Duration::from_millis(100))
+                    .watchdog(Duration::from_millis(100)),
+                "watchdog",
+            ),
+        ];
+        for (builder, needle) in cases {
+            match builder.build() {
+                Err(crate::Error::Config(msg)) => {
+                    assert!(msg.contains(needle), "message {msg:?} must name {needle:?}")
+                }
+                other => panic!("invalid config for {needle:?} must fail, got {other:?}"),
+            }
+        }
+        assert!(ServerConfig::builder().build().is_ok(), "defaults are valid");
+    }
+
+    #[test]
+    fn config_json_roundtrip_and_validation() {
+        let cfg = ServerConfig::builder()
+            .max_batch(6)
+            .batch_timeout(Duration::from_millis(3))
+            .workers(4)
+            .steal(true)
+            .max_in_flight(64)
+            .default_deadline(Some(Duration::from_millis(250)))
+            .watchdog(Duration::from_millis(500))
+            .max_restarts(2)
+            .thermal(ThermalServerConfig {
+                drift: Some(DriftConfig::default()),
+                policy: ThermalPolicy::Threshold { budget_rad: 0.01 },
+                brownout_budget_rad: Some(0.02),
+                drift_only_worker: Some(1),
+            })
+            .faults(FaultPlan::parse("panic@w0:s2", 4).expect("spec"))
+            .build()
+            .expect("valid config");
+        let text = cfg.to_json().to_string();
+        let back = ServerConfig::from_json(&text).expect("round-trip parses");
+        assert_eq!(back.max_batch, 6);
+        assert_eq!(back.batch_timeout, Duration::from_millis(3));
+        assert_eq!(back.workers, 4);
+        assert!(back.cluster.steal);
+        assert_eq!(back.admission.max_in_flight, 64);
+        assert_eq!(back.admission.default_deadline, Some(Duration::from_millis(250)));
+        assert_eq!(back.supervisor.watchdog, Duration::from_millis(500));
+        assert_eq!(back.supervisor.max_restarts, 2);
+        assert!(back.thermal.drift.is_some());
+        assert!(matches!(
+            back.thermal.policy,
+            ThermalPolicy::Threshold { budget_rad } if (budget_rad - 0.01).abs() < 1e-12
+        ));
+        assert_eq!(back.thermal.brownout_budget_rad, Some(0.02));
+        assert_eq!(back.thermal.drift_only_worker, Some(1));
+        assert_eq!(back.faults.describe(), cfg.faults.describe());
+        // typos must not silently fall back to defaults
+        assert!(ServerConfig::from_json("{\"max_batcch\": 4}").is_err());
+        // file configs pass the same validation as the builder
+        assert!(ServerConfig::from_json("{\"workers\": 0}").is_err());
+    }
+
+    #[test]
+    fn replica_queue_ledger_and_ewma() {
+        let q = ReplicaQueue::new();
+        assert_eq!(q.in_flight(), 0);
+        q.push(Shard { requests: Vec::new(), batch_size: 1, seq: 0, home: 0 });
+        assert_eq!(q.in_flight(), 1, "queued counts as in flight");
+        let popped = lock_clean(&q.inner).shards.pop_front();
+        assert!(popped.is_some());
+        assert_eq!(q.in_flight(), 1, "executing still counts as in flight");
+        q.account();
+        assert_eq!(q.in_flight(), 0, "accounting settles the ledger");
+        // EWMA: first sample seeds, later samples fold at 1/5 weight
+        q.observe_service_us(1000);
+        assert_eq!(q.ewma_us.load(Ordering::Acquire), 1000);
+        q.observe_service_us(2000);
+        assert_eq!(q.ewma_us.load(Ordering::Acquire), 1200);
+    }
+
     #[test]
     fn serves_batches_and_reports() {
         let server = InferenceServer::spawn(
@@ -1034,11 +1708,11 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 4,
-                batch_timeout: Duration::from_millis(1),
-                ..Default::default()
-            },
+            ServerConfig::builder()
+                .max_batch(4)
+                .batch_timeout(Duration::from_millis(1))
+                .build()
+                .expect("config"),
         );
         let mut rxs = Vec::new();
         for i in 0..6 {
@@ -1076,6 +1750,12 @@ mod tests {
         assert_eq!(report.expired, 0);
         assert_eq!(report.worker_restarts, 0, "no faults, no restarts");
         assert_eq!(report.workers_live, 1);
+        assert_eq!(report.routed.len(), 1);
+        assert_eq!(
+            report.routed[0] as usize, report.batches,
+            "single replica carries every dispatched batch"
+        );
+        assert_eq!(report.steals, 0, "stealing is off by default");
     }
 
     /// The batched engine pass must return exactly what per-request
@@ -1090,11 +1770,11 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 8,
-                batch_timeout: Duration::from_millis(50),
-                ..Default::default()
-            },
+            ServerConfig::builder()
+                .max_batch(8)
+                .batch_timeout(Duration::from_millis(50))
+                .build()
+                .expect("config"),
         );
         let images: Vec<Tensor> = (0..5).map(|i| sample_img(2, i)).collect();
         let rxs: Vec<_> = images
@@ -1123,13 +1803,13 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 8,
-                batch_timeout: Duration::from_millis(2),
-                workers: 3,
-                engine_threads: 1,
-                ..Default::default()
-            },
+            ServerConfig::builder()
+                .max_batch(8)
+                .batch_timeout(Duration::from_millis(2))
+                .workers(3)
+                .engine_threads(1)
+                .build()
+                .expect("config"),
         );
         let mut rxs = Vec::new();
         for i in 0..9 {
@@ -1148,6 +1828,8 @@ mod tests {
         assert_eq!(report.workers, 3);
         assert_eq!(report.workers_live, 3);
         assert!(report.energy_mj > 0.0, "all workers account energy");
+        assert_eq!(report.routed.len(), 3);
+        assert!(report.routed.iter().sum::<u64>() >= 1, "shards were routed");
     }
 
     #[test]
@@ -1159,12 +1841,12 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 8,
-                batch_timeout: Duration::from_millis(300),
-                admission: AdmissionConfig { max_in_flight: 1, ..Default::default() },
-                ..Default::default()
-            },
+            ServerConfig::builder()
+                .max_batch(8)
+                .batch_timeout(Duration::from_millis(300))
+                .max_in_flight(1)
+                .build()
+                .expect("config"),
         );
         let rx = server.submit(sample_img(0, 0)).expect("first admitted");
         let mut shed = 0;
@@ -1193,7 +1875,7 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig::default(),
+            ServerConfig::builder().build().expect("config"),
         );
         // a zero deadline is already expired when the dispatcher looks
         let rx = server
@@ -1216,22 +1898,16 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 2,
-                batch_timeout: Duration::from_millis(1),
-                thermal: ThermalServerConfig {
-                    drift: Some(DriftConfig {
-                        ambient_amp_rad: 0.0,
-                        self_heat_amp_rad: 0.2,
-                        self_heat_tau_reqs: 4.0,
-                        time_scale: 0.0,
-                        ..DriftConfig::default()
-                    }),
+            ServerConfig::builder()
+                .max_batch(2)
+                .batch_timeout(Duration::from_millis(1))
+                .thermal(ThermalServerConfig {
+                    drift: Some(heat_only_drift()),
                     policy: ThermalPolicy::Threshold { budget_rad: 0.01 },
-                    brownout_budget_rad: None,
-                },
-                ..Default::default()
-            },
+                    ..Default::default()
+                })
+                .build()
+                .expect("config"),
         );
         // serve sequentially so the single worker ticks between requests
         for i in 0..10 {
@@ -1243,6 +1919,11 @@ mod tests {
         let snap = server.snapshot();
         assert!(snap.thermal_drift_rad > 0.0, "self-heating must register");
         assert!(snap.thermal_chunks > 0, "chunks under drift management");
+        assert_eq!(
+            snap.replica_heat_milli.len(),
+            1,
+            "one heat gauge per replica slot"
+        );
         let report = server.shutdown().expect("report");
         assert_eq!(report.requests, 10);
         assert!(
@@ -1259,11 +1940,11 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 8,
-                batch_timeout: Duration::from_millis(100),
-                ..Default::default()
-            },
+            ServerConfig::builder()
+                .max_batch(8)
+                .batch_timeout(Duration::from_millis(100))
+                .build()
+                .expect("config"),
         );
         let rxs: Vec<_> =
             (0..5).map(|i| server.submit(sample_img(1, i)).expect("admitted")).collect();
@@ -1281,27 +1962,6 @@ mod tests {
         assert!(server.shutdown().is_err(), "double shutdown is an error");
     }
 
-    #[test]
-    fn plan_shards_steers_and_halves() {
-        // all cool: near-equal contiguous partition over every worker
-        let plan = plan_shards(6, &[(0, false), (1, false), (2, false)], 8);
-        assert_eq!(plan, vec![(0, 0..2), (1, 2..4), (2, 4..6)]);
-        // a hot replica gets NO new traffic while cool ones exist
-        let plan = plan_shards(6, &[(0, false), (1, true), (2, false)], 8);
-        assert_eq!(plan.iter().map(|(w, _)| *w).collect::<Vec<_>>(), vec![0, 2]);
-        assert_eq!(plan.iter().map(|(_, r)| r.len()).sum::<usize>(), 6);
-        // every replica hot: serve anyway at half shard size, round-robin
-        let plan = plan_shards(8, &[(0, true), (1, true)], 8);
-        assert!(plan.iter().all(|(_, r)| r.len() <= 4), "{plan:?}");
-        assert_eq!(plan.iter().map(|(_, r)| r.len()).sum::<usize>(), 8);
-        assert_eq!(plan[0].0, 0);
-        assert_eq!(plan[1].0, 1);
-        // degenerate: max_batch 1 still makes progress
-        let plan = plan_shards(3, &[(0, true)], 1);
-        assert_eq!(plan.len(), 3);
-        assert!(plan.iter().all(|(w, r)| *w == 0 && r.len() == 1));
-    }
-
     /// Satellite: a caller panicking while holding the handle locks must
     /// not poison the server for everyone else.
     #[test]
@@ -1311,11 +1971,11 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 2,
-                batch_timeout: Duration::from_millis(1),
-                ..Default::default()
-            },
+            ServerConfig::builder()
+                .max_batch(2)
+                .batch_timeout(Duration::from_millis(1))
+                .build()
+                .expect("config"),
         ));
         let poisoner = Arc::clone(&server);
         let _ = std::thread::spawn(move || {
@@ -1343,16 +2003,13 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 4,
-                batch_timeout: Duration::from_millis(20),
-                faults: FaultPlan::parse("panic@w0:s0", 1).expect("spec"),
-                supervisor: SupervisorConfig {
-                    backoff: Duration::from_millis(1),
-                    ..Default::default()
-                },
-                ..Default::default()
-            },
+            ServerConfig::builder()
+                .max_batch(4)
+                .batch_timeout(Duration::from_millis(20))
+                .faults(FaultPlan::parse("panic@w0:s0", 1).expect("spec"))
+                .backoff(Duration::from_millis(1))
+                .build()
+                .expect("config"),
         );
         let images: Vec<Tensor> = (0..4).map(|i| sample_img(5, i)).collect();
         let rxs: Vec<_> = images
@@ -1389,17 +2046,14 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 2,
-                batch_timeout: Duration::from_millis(20),
-                faults: FaultPlan::parse("stall@w0:s0:20000ms", 1).expect("spec"),
-                supervisor: SupervisorConfig {
-                    watchdog: Duration::from_millis(50),
-                    backoff: Duration::from_millis(1),
-                    ..Default::default()
-                },
-                ..Default::default()
-            },
+            ServerConfig::builder()
+                .max_batch(2)
+                .batch_timeout(Duration::from_millis(20))
+                .faults(FaultPlan::parse("stall@w0:s0:20000ms", 1).expect("spec"))
+                .watchdog(Duration::from_millis(50))
+                .backoff(Duration::from_millis(1))
+                .build()
+                .expect("config"),
         );
         let started = Instant::now();
         let rxs: Vec<_> =
@@ -1430,17 +2084,14 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 2,
-                batch_timeout: Duration::from_millis(1),
-                faults: FaultPlan::parse("panic@w0:s0,panic@w0:s1", 1).expect("spec"),
-                supervisor: SupervisorConfig {
-                    max_retries: 1,
-                    backoff: Duration::from_millis(1),
-                    ..Default::default()
-                },
-                ..Default::default()
-            },
+            ServerConfig::builder()
+                .max_batch(2)
+                .batch_timeout(Duration::from_millis(1))
+                .faults(FaultPlan::parse("panic@w0:s0,panic@w0:s1", 1).expect("spec"))
+                .max_retries(1)
+                .backoff(Duration::from_millis(1))
+                .build()
+                .expect("config"),
         );
         let rx = server.submit(sample_img(0, 0)).expect("admitted");
         let reply = rx.recv_timeout(Duration::from_secs(120)).expect("reply");
@@ -1462,22 +2113,17 @@ mod tests {
             test_cfg(),
             EngineOptions::IDEAL,
             Default::default(),
-            ServerConfig {
-                max_batch: 1,
-                batch_timeout: Duration::from_millis(1),
-                thermal: ThermalServerConfig {
-                    drift: Some(DriftConfig {
-                        ambient_amp_rad: 0.0,
-                        self_heat_amp_rad: 0.2,
-                        self_heat_tau_reqs: 4.0,
-                        time_scale: 0.0,
-                        ..DriftConfig::default()
-                    }),
+            ServerConfig::builder()
+                .max_batch(1)
+                .batch_timeout(Duration::from_millis(1))
+                .thermal(ThermalServerConfig {
+                    drift: Some(heat_only_drift()),
                     policy: ThermalPolicy::Off,
                     brownout_budget_rad: Some(1e-3),
-                },
-                ..Default::default()
-            },
+                    ..Default::default()
+                })
+                .build()
+                .expect("config"),
         );
         for i in 0..8 {
             let rx = server.submit(sample_img(6, i)).expect("admitted");

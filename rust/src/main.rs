@@ -1,42 +1,52 @@
 //! SCATTER command-line interface.
 //!
 //! ```text
-//! scatter serve  [--addr 127.0.0.1:8080] [--workers N] [--engine-threads N]
-//!         [--max-batch N] [--max-in-flight N] [--deadline-ms N] [--density D]
+//! scatter serve  [--config FILE] [--addr 127.0.0.1:8080] [--workers N]
+//!         [--engine-threads N] [--max-batch N] [--max-in-flight N]
+//!         [--deadline-ms N] [--density D] [--steal]
 //!         [--thermal off|threshold[:RAD]|periodic[:N]] [--brownout RAD]
 //!         [--faults SPEC] [--watchdog-ms N]
 //! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|chaos|all>
 //!         [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8] [--stages]
 //!         [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]
-//!         [--max-batch 1,8] [--seed N]
+//!         [--workers N] [--max-batch 1,8] [--replicas 1,4] [--steal] [--seed N]
 //! scatter config [--preset default|dense|foundry] [--out FILE]
 //! scatter gamma  [--heatsim]
 //! scatter info
 //! ```
 //!
+//! Every subcommand answers `--help` with a generated flag table
+//! ([`scatter::util::FlagTable`] — the offline toolchain has no clap).
+//!
 //! `serve` exposes the inference service over HTTP (`POST /v1/predict`,
 //! `GET /healthz`, `GET /metrics`); EOF or `quit` on stdin drains
-//! gracefully; `--thermal` enables the runtime drift model + online
-//! recalibration policy. `bench engine` sweeps the sparsity-compiled
-//! execution engine and writes `BENCH_engine.json`; `bench serve`
-//! load-tests the TCP endpoint and writes `BENCH_server.json`; `bench
-//! drift` measures accuracy/recalibration under the thermal-drift
-//! schedule and writes `BENCH_drift.json`; `bench chaos` kills every
-//! worker once (seeded `FaultPlan`) under concurrent load, measures
-//! recovery, and writes `BENCH_chaos.json`.
+//! gracefully. `--config FILE` loads a [`ServerConfig`] JSON document
+//! (write a starting point with `ServerConfig::default().to_json()`;
+//! see README §Serving); CLI flags override the file, and the merged
+//! config passes builder validation before anything spawns. `--thermal`
+//! enables the runtime drift model + online recalibration policy;
+//! `--steal` lets idle replicas pull queued shards from the deepest
+//! backlog.
+//!
+//! `bench engine` sweeps the sparsity-compiled execution engine and
+//! writes `BENCH_engine.json`; `bench serve` load-tests the TCP
+//! endpoint, sweeps `--max-batch` and `--replicas`, and writes
+//! `BENCH_server.json`; `bench drift` measures accuracy/recalibration
+//! under the thermal-drift schedule and writes `BENCH_drift.json`;
+//! `bench chaos` kills every worker once (seeded `FaultPlan`) under
+//! concurrent load, measures recovery, and writes `BENCH_chaos.json`.
 //!
 //! `--faults` takes the grammar accepted by `FaultPlan::parse`
 //! (e.g. `panic@w0:s3,stall@w1:s5:200ms` or `kill-each:42`).
-//!
-//! (Hand-rolled parsing: the offline toolchain has no clap.)
 
 use scatter::bench::{self, BenchCtx};
 use scatter::config::AcceleratorConfig;
 use scatter::coordinator::{
-    AdmissionConfig, EngineOptions, FaultPlan, HttpServer, InferenceServer, NetConfig,
-    ServerConfig, SupervisorConfig, ThermalServerConfig,
+    EngineOptions, FaultPlan, HttpServer, InferenceServer, NetConfig, ServerConfig,
+    ThermalServerConfig,
 };
 use scatter::thermal::{DriftConfig, ThermalPolicy};
+use scatter::util::{FlagTable, ParsedArgs};
 use std::time::Duration;
 
 fn main() {
@@ -52,75 +62,157 @@ fn main() {
             eprintln!(
                 "usage: scatter <serve|bench|config|gamma|info> [...]\n\
                  \n\
-                 serve  [--addr 127.0.0.1:8080] [--workers N] [--engine-threads N]\n\
-                 \x20      [--max-batch N] [--max-in-flight N] [--deadline-ms N] [--density D]\n\
-                 \x20      [--thermal off|threshold[:RAD]|periodic[:N]] [--brownout RAD]\n\
-                 \x20      [--faults SPEC] [--watchdog-ms N]\n\
-                 bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|chaos|all>\n\
-                 \x20      [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8] [--stages]\n\
-                 \x20      [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]\n\
-                 \x20      [--max-batch 1,8] [--seed N]\n\
-                 config [--preset default|dense|foundry] [--out FILE]\n\
-                 gamma  [--heatsim]\n\
-                 info"
+                 serve   the networked inference service (scatter serve --help)\n\
+                 bench   paper tables/figures + engine/serve/drift/chaos perf\n\
+                 \x20       benches (scatter bench --help)\n\
+                 config  print or write an AcceleratorConfig preset\n\
+                 gamma   print the thermal crosstalk model gamma(d)\n\
+                 info    chip area / power / runtime summary\n\
+                 \n\
+                 each subcommand answers --help with its full flag table"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
         }
     }
 }
 
+// ---------------------------------------------------------------------------
+// shared flag-table plumbing
+// ---------------------------------------------------------------------------
+
+/// Parse `args` against `table`: `--help` prints the generated screen
+/// and exits 0; a parse error prints the error plus the screen and
+/// exits 2.
+fn parse_or_exit(table: &FlagTable, args: &[String]) -> ParsedArgs {
+    match table.parse(args) {
+        Ok(p) if p.wants_help() => {
+            print!("{}", table.help_text());
+            std::process::exit(0);
+        }
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprint!("{}", table.help_text());
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Typed flag lookup; an unparseable value is a usage error (exit 2),
+/// never a silent default.
+fn get_or_exit<T: std::str::FromStr>(p: &ParsedArgs, name: &str) -> Option<T> {
+    p.get(name).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    })
+}
+
+/// Comma-separated typed list (`--replicas 1,4`), same error policy.
+fn get_list_or_exit<T: std::str::FromStr>(p: &ParsedArgs, name: &str) -> Option<Vec<T>> {
+    p.get_list(name).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    })
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+fn serve_flags() -> FlagTable {
+    FlagTable::new(
+        "scatter serve [options]",
+        "Serve batched inference over HTTP (POST /v1/predict, GET /healthz, GET /metrics).\n\
+         EOF or 'quit' on stdin drains gracefully. Flags override --config FILE values;\n\
+         the merged config is validated before anything spawns.",
+    )
+    .flag("--addr", "HOST:PORT", "bind address (default 127.0.0.1:8080)")
+    .flag("--config", "FILE", "ServerConfig JSON to start from (README §Serving)")
+    .flag("--density", "D", "backbone density of the CNN-3 deployment (default 0.3)")
+    .flag("--workers", "N", "engine-worker replicas (default 2)")
+    .flag("--engine-threads", "N", "compute threads per replica (default 1)")
+    .flag("--max-batch", "N", "max requests fused per engine pass (default 8)")
+    .flag("--max-in-flight", "N", "admission cap before shedding 503s (default 256)")
+    .flag("--deadline-ms", "N", "per-request deadline (default: none)")
+    .flag("--watchdog-ms", "N", "supervisor stuck-worker threshold")
+    .flag("--thermal", "SPEC", "off | threshold[:RAD] | periodic[:N] drift policy")
+    .flag("--brownout", "RAD", "phase-error budget that triggers replica brownout")
+    .flag("--faults", "SPEC", "fault injection plan (FaultPlan grammar, e.g. kill-each:42)")
+    .switch("--steal", "idle replicas steal queued shards from the deepest backlog")
+}
+
 /// Stand up the networked inference front-end and serve until stdin
 /// closes (EOF) or reads `quit`, then drain gracefully and report.
 fn cmd_serve(args: &[String]) {
-    let addr = flag_value(args, "--addr").unwrap_or("127.0.0.1:8080").to_string();
-    let parse_usize = |name: &str, default: usize| {
-        flag_value(args, name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    let table = serve_flags();
+    let p = parse_or_exit(&table, args);
+    let addr = p.value("--addr").unwrap_or("127.0.0.1:8080").to_string();
+    let density: f64 = get_or_exit(&p, "--density").unwrap_or(0.3);
+
+    // base config: --config FILE when given, else the serve defaults
+    let base = match p.value("--config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                eprintln!("cannot read --config {path}: {e}");
+                std::process::exit(2);
+            });
+            ServerConfig::from_json(&text).unwrap_or_else(|e| {
+                eprintln!("bad --config {path}: {e}");
+                std::process::exit(2);
+            })
+        }
+        None => ServerConfig::builder()
+            .workers(2)
+            .batch_timeout(Duration::from_millis(4))
+            .build()
+            .expect("default serve config validates"),
     };
-    let density: f64 =
-        flag_value(args, "--density").and_then(|s| s.parse().ok()).unwrap_or(0.3);
-    let workers = parse_usize("--workers", 2);
-    let mut thermal = parse_thermal(flag_value(args, "--thermal"));
-    if let Some(rad) = flag_value(args, "--brownout") {
-        thermal.brownout_budget_rad = Some(rad.parse().unwrap_or_else(|_| {
-            eprintln!("bad --brownout value '{rad}': expected radians (e.g. 0.02)");
-            std::process::exit(2);
-        }));
+
+    // CLI flags layer on top of the base; faults parse against the
+    // final worker count so `kill-each` covers every replica
+    let workers = get_or_exit::<usize>(&p, "--workers").unwrap_or(base.workers());
+    let mut b = base.to_builder().workers(workers);
+    if let Some(n) = get_or_exit::<usize>(&p, "--engine-threads") {
+        b = b.engine_threads(n);
     }
-    let faults = match flag_value(args, "--faults") {
-        Some(spec) => FaultPlan::parse(spec, workers).unwrap_or_else(|e| {
+    if let Some(n) = get_or_exit::<usize>(&p, "--max-batch") {
+        b = b.max_batch(n);
+    }
+    if let Some(n) = get_or_exit::<usize>(&p, "--max-in-flight") {
+        b = b.max_in_flight(n);
+    }
+    if let Some(ms) = get_or_exit::<u64>(&p, "--deadline-ms") {
+        b = b.default_deadline(Some(Duration::from_millis(ms)));
+    }
+    if let Some(ms) = get_or_exit::<u64>(&p, "--watchdog-ms") {
+        b = b.watchdog(Duration::from_millis(ms));
+    }
+    if p.has("--steal") {
+        b = b.steal(true);
+    }
+    let mut thermal = match p.value("--thermal") {
+        Some(spec) => parse_thermal(spec),
+        None => base.thermal().clone(),
+    };
+    if let Some(rad) = get_or_exit::<f64>(&p, "--brownout") {
+        thermal.brownout_budget_rad = Some(rad);
+    }
+    b = b.thermal(thermal);
+    if let Some(spec) = p.value("--faults") {
+        b = b.faults(FaultPlan::parse(spec, workers).unwrap_or_else(|e| {
             eprintln!("bad --faults '{spec}': {e}");
             std::process::exit(2);
-        }),
-        None => FaultPlan::none(),
-    };
-    let mut supervisor = SupervisorConfig::default();
-    if let Some(ms) = flag_value(args, "--watchdog-ms") {
-        supervisor.watchdog = Duration::from_millis(ms.parse().unwrap_or_else(|_| {
-            eprintln!("bad --watchdog-ms value '{ms}': expected milliseconds");
-            std::process::exit(2);
         }));
     }
-    if !faults.is_empty() {
-        for line in faults.describe() {
+    let server_cfg = b.build().unwrap_or_else(|e| {
+        eprintln!("invalid server config: {e}");
+        std::process::exit(2);
+    });
+    if !server_cfg.faults().is_empty() {
+        for line in server_cfg.faults().describe() {
             eprintln!("fault injection armed: {line}");
         }
     }
-    let server_cfg = ServerConfig {
-        max_batch: parse_usize("--max-batch", 8),
-        batch_timeout: Duration::from_millis(4),
-        workers,
-        engine_threads: parse_usize("--engine-threads", 1),
-        admission: AdmissionConfig {
-            max_in_flight: parse_usize("--max-in-flight", 256),
-            default_deadline: flag_value(args, "--deadline-ms")
-                .and_then(|s| s.parse().ok())
-                .map(Duration::from_millis),
-            ..Default::default()
-        },
-        thermal,
-        supervisor,
-        faults,
-    };
 
     eprintln!("loading CNN-3 deployment (density {density}) ...");
     let ctx = BenchCtx::new(50);
@@ -154,23 +246,19 @@ fn cmd_serve(args: &[String]) {
         Ok(r) => eprintln!(
             "served {} requests in {} batches (mean occupancy {:.2}, {:.1} req/s, \
              p50 {} us, p99 {} us, {:.3} mJ, shed {}, expired {}, recal {}x/{} chunks, \
-             workers {} live, {} respawns, {} retries, {} brownouts)",
+             workers {} live, {} respawns, {} retries, {} brownouts, {} steals)",
             r.requests, r.batches, r.mean_batch_occupancy, r.throughput_rps, r.p50_us,
             r.p99_us, r.energy_mj, r.shed, r.expired, r.recalibrations, r.recal_chunks,
-            r.workers_live, r.worker_restarts, r.request_retries, r.brownouts
+            r.workers_live, r.worker_restarts, r.request_retries, r.brownouts, r.steals
         ),
         Err(e) => eprintln!("shutdown error: {e}"),
     }
 }
 
-fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(String::as_str)
-}
-
 /// `--thermal off | threshold[:BUDGET_RAD] | periodic[:EVERY_REQS]` →
 /// drift runtime config (default schedule, per-policy knobs inline).
 /// A present-but-unparseable knob is an error, never a silent default.
-fn parse_thermal(spec: Option<&str>) -> ThermalServerConfig {
+fn parse_thermal(spec: &str) -> ThermalServerConfig {
     fn knob<T: std::str::FromStr>(spec: &str, rest: &str, default: T) -> T {
         match rest.strip_prefix(':') {
             None if rest.is_empty() => default,
@@ -184,7 +272,6 @@ fn parse_thermal(spec: Option<&str>) -> ThermalServerConfig {
             }
         }
     }
-    let Some(spec) = spec else { return ThermalServerConfig::default() };
     let policy = if spec == "off" {
         return ThermalServerConfig::default();
     } else if let Some(rest) = spec.strip_prefix("threshold") {
@@ -198,16 +285,42 @@ fn parse_thermal(spec: Option<&str>) -> ThermalServerConfig {
     ThermalServerConfig { drift: Some(DriftConfig::default()), policy, ..Default::default() }
 }
 
+// ---------------------------------------------------------------------------
+// bench
+// ---------------------------------------------------------------------------
+
+fn bench_flags() -> FlagTable {
+    FlagTable::new(
+        "scatter bench <target> [options]",
+        "Run paper reproductions and perf benches. Targets: table1 table2 table3\n\
+         fig4 fig5 fig6 fig8 fig9 fig10 engine serve drift chaos all.",
+    )
+    .flag("--samples", "N", "evaluation samples (engine: time budget = N*10 ms/cell)")
+    .flag("--models", "A,B", "table3 workloads (cnn3,vgg8,resnet18)")
+    .flag("--threads", "A,B", "engine bench thread sweep (default 1,2,4,8)")
+    .switch("--stages", "engine bench: per-stage latency breakdown")
+    .flag("--rps", "R", "bench serve: open-loop arrival rate (0 = closed loop)")
+    .flag("--duration", "S", "bench serve/chaos: seconds per measurement")
+    .flag("--concurrency", "C", "bench serve/chaos: concurrent client connections")
+    .flag("--addr", "HOST:PORT", "bench serve: drive an external server (skips sweeps)")
+    .flag("--workers", "N", "bench serve/chaos: engine-worker replicas for the main run")
+    .flag("--max-batch", "A,B", "bench serve: batched-compute sweep points (0 disables)")
+    .flag("--replicas", "A,B", "bench serve: replica-scaling sweep points (0 disables)")
+    .switch("--steal", "bench serve: enable work stealing on in-process servers")
+    .flag("--seed", "N", "bench chaos: fault-plan seed")
+}
+
 fn cmd_bench(args: &[String]) {
-    let which = args.first().map(String::as_str).unwrap_or("all");
-    let samples: usize =
-        flag_value(args, "--samples").and_then(|s| s.parse().ok()).unwrap_or(100);
+    let table = bench_flags();
+    let p = parse_or_exit(&table, args);
+    let which = p.positionals().first().map(String::as_str).unwrap_or("all");
+    let samples: usize = get_or_exit(&p, "--samples").unwrap_or(100);
     let ctx = BenchCtx::new(samples);
     match which {
         "table1" => println!("{}", bench::table1::run(&ctx)),
         "table2" => println!("{}", bench::table2::run(&ctx)),
         "table3" => {
-            let models = flag_value(args, "--models").unwrap_or("cnn3,vgg8,resnet18");
+            let models = p.value("--models").unwrap_or("cnn3,vgg8,resnet18");
             let workloads: Vec<_> = models
                 .split(',')
                 .filter_map(|m| match m.trim() {
@@ -230,54 +343,42 @@ fn cmd_bench(args: &[String]) {
         "fig10" => println!("{}", bench::fig10::run(&ctx)),
         "drift" => println!("{}", bench::drift::run(&ctx)),
         "engine" => {
-            let threads: Vec<usize> = flag_value(args, "--threads")
-                .unwrap_or("1,2,4,8")
-                .split(',')
-                .filter_map(|t| t.trim().parse().ok())
-                .collect();
+            let threads =
+                get_list_or_exit::<usize>(&p, "--threads").unwrap_or_else(|| vec![1, 2, 4, 8]);
             // --samples doubles as the per-cell time budget (ms × 10):
             // the default 100 gives ~1 s per cell
             let budget = std::time::Duration::from_millis((samples as u64) * 10);
-            let stages = args.iter().any(|a| a == "--stages");
-            println!("{}", bench::engine::run(&threads, budget, stages));
+            println!("{}", bench::engine::run(&threads, budget, p.has("--stages")));
         }
         "serve" => {
             let mut cfg = bench::serve::ServeBenchConfig {
-                rps: flag_value(args, "--rps").and_then(|s| s.parse().ok()).unwrap_or(0.0),
+                rps: get_or_exit::<f64>(&p, "--rps").unwrap_or(0.0),
                 duration: Duration::from_secs_f64(
-                    flag_value(args, "--duration").and_then(|s| s.parse().ok()).unwrap_or(2.0),
+                    get_or_exit::<f64>(&p, "--duration").unwrap_or(2.0),
                 ),
-                concurrency: flag_value(args, "--concurrency")
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(4),
-                addr: flag_value(args, "--addr").map(String::from),
+                concurrency: get_or_exit::<usize>(&p, "--concurrency").unwrap_or(4),
+                addr: p.value("--addr").map(String::from),
+                workers: get_or_exit::<usize>(&p, "--workers").unwrap_or(2),
+                steal: p.has("--steal"),
                 ..Default::default()
             };
-            cfg.server.workers =
-                flag_value(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(2);
-            // batched-compute sweep points (default 1,8 → the CI-gated
-            // per_image_throughput_b8/b1 ratio); `--max-batch 0` disables
-            if let Some(list) = flag_value(args, "--max-batch") {
-                cfg.sweep_max_batch = list
-                    .split(',')
-                    .filter_map(|b| b.trim().parse().ok())
-                    .filter(|&b: &usize| b > 0)
-                    .collect();
+            // sweep points: `--max-batch 0` / `--replicas 0` disable
+            if let Some(list) = get_list_or_exit::<usize>(&p, "--max-batch") {
+                cfg.sweep_max_batch = list.into_iter().filter(|&b| b > 0).collect();
+            }
+            if let Some(list) = get_list_or_exit::<usize>(&p, "--replicas") {
+                cfg.sweep_replicas = list.into_iter().filter(|&r| r > 0).collect();
             }
             println!("{}", bench::serve::run(&cfg));
         }
         "chaos" => {
             let cfg = bench::chaos::ChaosBenchConfig {
                 duration: Duration::from_secs_f64(
-                    flag_value(args, "--duration").and_then(|s| s.parse().ok()).unwrap_or(4.0),
+                    get_or_exit::<f64>(&p, "--duration").unwrap_or(4.0),
                 ),
-                concurrency: flag_value(args, "--concurrency")
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(4),
-                workers: flag_value(args, "--workers")
-                    .and_then(|s| s.parse().ok())
-                    .unwrap_or(3),
-                seed: flag_value(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42),
+                concurrency: get_or_exit::<usize>(&p, "--concurrency").unwrap_or(4),
+                workers: get_or_exit::<usize>(&p, "--workers").unwrap_or(3),
+                seed: get_or_exit::<u64>(&p, "--seed").unwrap_or(42),
             };
             println!("{}", bench::chaos::run(&cfg));
         }
@@ -289,14 +390,25 @@ fn cmd_bench(args: &[String]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// config / gamma / info
+// ---------------------------------------------------------------------------
+
 fn cmd_config(args: &[String]) {
-    let cfg = match flag_value(args, "--preset").unwrap_or("default") {
+    let table = FlagTable::new(
+        "scatter config [options]",
+        "Print (or write) an AcceleratorConfig preset as JSON.",
+    )
+    .flag("--preset", "NAME", "default | dense | foundry")
+    .flag("--out", "FILE", "write to FILE instead of stdout");
+    let p = parse_or_exit(&table, args);
+    let cfg = match p.value("--preset").unwrap_or("default") {
         "dense" => AcceleratorConfig::dense_optimal(),
         "foundry" => AcceleratorConfig::foundry_baseline(),
         _ => AcceleratorConfig::default(),
     };
     let json = cfg.to_json();
-    match flag_value(args, "--out") {
+    match p.value("--out") {
         Some(path) => {
             std::fs::write(path, &json).expect("write config");
             eprintln!("wrote {path}");
@@ -307,7 +419,13 @@ fn cmd_config(args: &[String]) {
 
 fn cmd_gamma(args: &[String]) {
     use scatter::thermal::GammaModel;
-    if args.iter().any(|a| a == "--heatsim") {
+    let table = FlagTable::new(
+        "scatter gamma [options]",
+        "Print the thermal crosstalk model gamma(d).",
+    )
+    .switch("--heatsim", "characterize gamma from the finite-difference heat solver");
+    let p = parse_or_exit(&table, args);
+    if p.has("--heatsim") {
         let (samples, model) = scatter::thermal::heatsim::characterize(
             &scatter::thermal::heatsim::HeatSimConfig::default(),
             23.0,

@@ -1,0 +1,245 @@
+//! Declarative CLI flag parsing shared by every `scatter` subcommand.
+//!
+//! Each subcommand declares a [`FlagTable`] — name, optional value
+//! metavar, and help line per flag — and gets parsing, unknown-flag
+//! rejection, and a generated `--help` screen from the one table. This
+//! replaces the hand-rolled `flag_value` scans that `cmd_serve` and
+//! `cmd_bench` used to duplicate, so new flags (`--replicas`,
+//! `--steal`, `--config`) land in exactly one place.
+//!
+//! Flags accept both `--name value` and `--name=value`; flags declared
+//! without a metavar are boolean switches. Anything not starting with
+//! `--` is collected as a positional (bench targets use one).
+
+use std::fmt::Write as _;
+use std::str::FromStr;
+
+/// One flag declaration: `--name VALUE  help`.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: &'static str,
+    /// Metavar shown in help (`N`, `FILE`, `A,B,...`); `None` marks a
+    /// boolean switch that takes no value.
+    value: Option<&'static str>,
+    help: &'static str,
+}
+
+/// A subcommand's full flag declaration; build with [`FlagTable::new`]
+/// and chained [`FlagTable::flag`]/[`FlagTable::switch`] calls.
+#[derive(Debug, Clone)]
+pub struct FlagTable {
+    usage: &'static str,
+    about: &'static str,
+    specs: Vec<FlagSpec>,
+}
+
+/// Parse result: flag values plus positionals, queried by flag name.
+#[derive(Debug, Clone, Default)]
+pub struct ParsedArgs {
+    values: Vec<(&'static str, Option<String>)>,
+    positionals: Vec<String>,
+    help: bool,
+}
+
+impl FlagTable {
+    pub fn new(usage: &'static str, about: &'static str) -> Self {
+        Self { usage, about, specs: Vec::new() }
+    }
+
+    /// Declare a value-taking flag (`--name METAVAR`).
+    pub fn flag(mut self, name: &'static str, metavar: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, value: Some(metavar), help });
+        self
+    }
+
+    /// Declare a boolean switch (`--name`, no value).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, value: None, help });
+        self
+    }
+
+    /// The generated help screen — usage line, about text, then one
+    /// aligned row per flag straight from the table.
+    pub fn help_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "usage: {}", self.usage);
+        if !self.about.is_empty() {
+            let _ = writeln!(out, "\n{}", self.about);
+        }
+        let _ = writeln!(out, "\noptions:");
+        let left: Vec<String> = self
+            .specs
+            .iter()
+            .map(|s| match s.value {
+                Some(mv) => format!("{} {mv}", s.name),
+                None => s.name.to_string(),
+            })
+            .collect();
+        let width = left.iter().map(|l| l.len()).max().unwrap_or(0).max(6);
+        for (l, s) in left.iter().zip(&self.specs) {
+            let _ = writeln!(out, "  {l:width$}  {}", s.help);
+        }
+        let _ = writeln!(out, "  {:width$}  print this help", "--help");
+        out
+    }
+
+    /// Parse `args`; unknown flags and missing values are errors that
+    /// name the offending flag (the caller prints the help screen).
+    pub fn parse(&self, args: &[String]) -> Result<ParsedArgs, String> {
+        let mut out = ParsedArgs::default();
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                out.help = true;
+                continue;
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let Some(spec) = self.specs.iter().find(|s| s.name.trim_start_matches('-') == name)
+                else {
+                    return Err(format!("unknown flag --{name}"));
+                };
+                match spec.value {
+                    Some(_) => {
+                        let value = match inline {
+                            Some(v) => v,
+                            None => match it.next() {
+                                Some(v) if !v.starts_with("--") => v.clone(),
+                                _ => return Err(format!("flag {} expects a value", spec.name)),
+                            },
+                        };
+                        out.values.push((spec.name, Some(value)));
+                    }
+                    None => {
+                        if inline.is_some() {
+                            return Err(format!("switch {} takes no value", spec.name));
+                        }
+                        out.values.push((spec.name, None));
+                    }
+                }
+            } else {
+                out.positionals.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl ParsedArgs {
+    /// `--help` was present anywhere on the line.
+    pub fn wants_help(&self) -> bool {
+        self.help
+    }
+
+    /// Last value given for a flag (`--x a --x b` yields `b`).
+    pub fn value(&self, name: &str) -> Option<&str> {
+        self.values
+            .iter()
+            .rev()
+            .find(|(n, _)| *n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    /// The flag or switch appeared at all.
+    pub fn has(&self, name: &str) -> bool {
+        self.values.iter().any(|(n, _)| *n == name)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Parse a flag's value with `FromStr`; `Ok(None)` when absent.
+    pub fn get<T: FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.value(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("flag {name}: cannot parse {raw:?}")),
+        }
+    }
+
+    /// Parse a comma-separated list (`--replicas 1,4`).
+    pub fn get_list<T: FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, String> {
+        match self.value(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .map_err(|_| format!("flag {name}: cannot parse {s:?} in {raw:?}"))
+                })
+                .collect::<Result<Vec<T>, String>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> FlagTable {
+        FlagTable::new("scatter serve [options]", "run the server")
+            .flag("--workers", "N", "engine workers")
+            .flag("--max-batch", "B", "batch cap")
+            .flag("--replicas", "A,B", "replica sweep")
+            .switch("--steal", "enable work stealing")
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_switches_and_positionals() {
+        let p = table()
+            .parse(&args(&["serve", "--workers", "4", "--steal", "--max-batch=8"]))
+            .expect("parse");
+        assert_eq!(p.positionals(), &["serve".to_string()]);
+        assert_eq!(p.get::<usize>("--workers").unwrap(), Some(4));
+        assert_eq!(p.get::<usize>("--max-batch").unwrap(), Some(8));
+        assert!(p.has("--steal"));
+        assert!(!p.wants_help());
+        assert_eq!(p.get::<usize>("--replicas").unwrap(), None);
+    }
+
+    #[test]
+    fn rejects_unknown_flags_and_missing_values() {
+        assert!(table().parse(&args(&["--bogus"])).unwrap_err().contains("--bogus"));
+        let err = table().parse(&args(&["--workers"])).unwrap_err();
+        assert!(err.contains("--workers"), "{err}");
+        let err = table().parse(&args(&["--workers", "--steal"])).unwrap_err();
+        assert!(err.contains("expects a value"), "{err}");
+        let err = table().parse(&args(&["--steal=yes"])).unwrap_err();
+        assert!(err.contains("takes no value"), "{err}");
+    }
+
+    #[test]
+    fn comma_lists_and_help_generation() {
+        let p = table().parse(&args(&["--replicas", "1,4", "--help"])).expect("parse");
+        assert_eq!(p.get_list::<usize>("--replicas").unwrap(), Some(vec![1, 4]));
+        assert!(p.wants_help());
+        let help = table().help_text();
+        for needle in
+            ["usage: scatter serve", "--workers N", "--steal", "work stealing", "--help"]
+        {
+            assert!(help.contains(needle), "help missing {needle:?}:\n{help}");
+        }
+    }
+
+    #[test]
+    fn bad_typed_values_name_the_flag() {
+        let p = table().parse(&args(&["--workers", "lots"])).expect("parse");
+        let err = p.get::<usize>("--workers").unwrap_err();
+        assert!(err.contains("--workers") && err.contains("lots"), "{err}");
+        let p = table().parse(&args(&["--replicas", "1,x"])).expect("parse");
+        assert!(p.get_list::<usize>("--replicas").is_err());
+    }
+}

@@ -1,10 +1,13 @@
-//! Small shared utilities: deterministic RNG, math helpers, table printing.
+//! Small shared utilities: deterministic RNG, math helpers, table
+//! printing, JSON, and CLI flag parsing.
 
+pub mod args;
 pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use args::{FlagTable, ParsedArgs};
 pub use json::Json;
 pub use rng::XorShiftRng;
 pub use stats::{mean, nmae, snr_db};

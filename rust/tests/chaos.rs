@@ -50,14 +50,14 @@ fn killing_every_worker_once_conserves_replies_and_restores_the_pool() {
         test_cfg(),
         EngineOptions::IDEAL,
         Default::default(),
-        ServerConfig {
-            max_batch: 6,
-            batch_timeout: Duration::from_millis(2),
-            workers: WORKERS,
-            engine_threads: 1,
-            faults: FaultPlan::kill_each_worker_once(WORKERS, SEED),
-            ..Default::default()
-        },
+        ServerConfig::builder()
+            .max_batch(6)
+            .batch_timeout(Duration::from_millis(2))
+            .workers(WORKERS)
+            .engine_threads(1)
+            .faults(FaultPlan::kill_each_worker_once(WORKERS, SEED))
+            .build()
+            .expect("chaos config validates"),
     );
 
     // closed-loop clients: each waits for its reply before submitting

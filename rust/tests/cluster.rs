@@ -1,0 +1,191 @@
+//! Cluster-scheduler integration tests (the PR's acceptance scenario):
+//! thermal-aware routing steers load off a forced-hot replica without
+//! dropping aggregate service, and work stealing drains a stalled
+//! replica's backlog through an idle peer.
+//!
+//! Drift schedules are heat-only with `time_scale: 0`, so the heat
+//! envelope depends only on each worker's served count — deterministic
+//! up to dispatch/tick interleaving, which the assertions leave slack
+//! for (the hot replica may serve a request or two before its first
+//! thermal tick publishes the brownout).
+
+use scatter::config::{AcceleratorConfig, DacKind, SparsitySupport};
+use scatter::coordinator::{
+    EngineOptions, FaultPlan, InferenceServer, ServerConfig, ThermalServerConfig,
+};
+use scatter::nn::Tensor;
+use scatter::thermal::{DriftConfig, ThermalPolicy};
+use std::time::Duration;
+
+fn test_cfg() -> AcceleratorConfig {
+    AcceleratorConfig {
+        features: SparsitySupport::NONE,
+        dac: DacKind::Edac,
+        l_g: 5.0,
+        ..Default::default()
+    }
+}
+
+fn sample_img() -> Tensor {
+    let ds = scatter::data::SyntheticDataset::new(scatter::data::DatasetSpec::fmnist_like());
+    ds.sample(11, 0).0
+}
+
+/// Self-heating-only drift: one request pushes phase error to
+/// ~44 mrad, far past the 1 mrad brownout budget used below.
+fn heat_only_drift() -> DriftConfig {
+    DriftConfig {
+        ambient_amp_rad: 0.0,
+        self_heat_amp_rad: 0.2,
+        self_heat_tau_reqs: 4.0,
+        time_scale: 0.0,
+        ..DriftConfig::default()
+    }
+}
+
+/// Acceptance criterion: with 4 replicas and drift injected on exactly
+/// one (`drift_only_worker`), the router steers load off the hot
+/// replica — its routed share collapses — while every request is still
+/// served (aggregate service intact; the pool absorbs the brownout).
+#[test]
+fn router_steers_load_off_a_hot_replica() {
+    const WORKERS: usize = 4;
+    const REQUESTS: usize = 16;
+    let server = InferenceServer::spawn(
+        scatter::nn::models::cnn3(),
+        test_cfg(),
+        EngineOptions::IDEAL,
+        Default::default(),
+        ServerConfig::builder()
+            .max_batch(1) // every request is one shard: routing is the only lever
+            .batch_timeout(Duration::from_millis(1))
+            .workers(WORKERS)
+            .thermal(ThermalServerConfig {
+                drift: Some(heat_only_drift()),
+                policy: ThermalPolicy::Off,
+                brownout_budget_rad: Some(1e-3),
+                drift_only_worker: Some(0),
+            })
+            .build()
+            .expect("cluster config validates"),
+    );
+
+    // closed loop: each reply lands before the next submit, so the
+    // router sees worker 0's post-tick heat/brownout state almost
+    // immediately after its first served shard
+    let img = sample_img();
+    for i in 0..REQUESTS {
+        let rx = server.submit(img.clone()).expect("admitted");
+        let reply = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("reply")
+            .unwrap_or_else(|e| panic!("request {i} failed: {e:?}"));
+        assert_eq!(reply.logits.len(), 10, "request {i} served a real prediction");
+    }
+
+    let snap = server.snapshot();
+    assert_eq!(snap.replica_heat_milli.len(), WORKERS);
+    assert!(
+        snap.replica_heat_milli[0] >= 1,
+        "the drift-injected replica publishes a nonzero heat score: {:?}",
+        snap.replica_heat_milli
+    );
+
+    let report = server.shutdown().expect("drain");
+    assert_eq!(report.requests, REQUESTS, "aggregate service intact under brownout");
+    assert_eq!(report.routed.len(), WORKERS);
+    assert_eq!(
+        report.routed.iter().sum::<u64>(),
+        REQUESTS as u64,
+        "every shard routed exactly once: {:?}",
+        report.routed
+    );
+    assert!(
+        report.routed[0] <= 3,
+        "hot replica's routed load collapses (tick-lag slack of 3): {:?}",
+        report.routed
+    );
+    assert!(
+        report.routed[1..].iter().sum::<u64>() >= (REQUESTS as u64) - 3,
+        "cool replicas absorb the load: {:?}",
+        report.routed
+    );
+    assert!(report.brownouts >= 1, "the forced-hot replica tripped its budget");
+    assert_eq!(report.workers_live, WORKERS, "brownout degrades, never kills");
+}
+
+/// An injected slow shard pins replica 0 while its queued shard is
+/// stolen and served by the idle peer — the backlog never waits out the
+/// stall.
+#[test]
+fn idle_replica_steals_backlog_from_a_stalled_peer() {
+    const REQUESTS: usize = 8;
+    let server = InferenceServer::spawn(
+        scatter::nn::models::cnn3(),
+        test_cfg(),
+        EngineOptions::IDEAL,
+        Default::default(),
+        ServerConfig::builder()
+            .max_batch(1)
+            .batch_timeout(Duration::from_millis(1))
+            .workers(2)
+            .steal(true)
+            // worker 0's first two shards reply ~300 ms late; stolen
+            // shards execute under the thief's identity, so a steal
+            // also dodges the fault — exactly the latency win stealing
+            // is for
+            .faults(
+                FaultPlan::parse("slow@w0:s0:300ms,slow@w0:s1:300ms", 2).expect("spec"),
+            )
+            .build()
+            .expect("steal config validates"),
+    );
+
+    // burst-submit so shards queue behind worker 0's stall, then
+    // collect: every reply must arrive
+    let img = sample_img();
+    let rxs: Vec<_> =
+        (0..REQUESTS).map(|_| server.submit(img.clone()).expect("admitted")).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("reply")
+            .unwrap_or_else(|e| panic!("request {i} failed: {e:?}"));
+        assert_eq!(reply.logits.len(), 10);
+    }
+
+    let report = server.shutdown().expect("drain");
+    assert_eq!(report.requests, REQUESTS, "stealing loses nothing");
+    assert!(
+        report.steals >= 1,
+        "the idle replica must steal from the stalled one: {report:?}"
+    );
+    assert_eq!(report.routed.len(), 2);
+    assert_eq!(report.routed.iter().sum::<u64>(), REQUESTS as u64);
+}
+
+/// The builder is the public construction path; invalid shapes must be
+/// typed config errors at build time, not panics at spawn time.
+#[test]
+fn builder_validation_is_enforced_at_the_public_api() {
+    assert!(ServerConfig::builder().workers(0).build().is_err());
+    assert!(ServerConfig::builder().max_batch(0).build().is_err());
+    let err = ServerConfig::builder()
+        .batch_timeout(Duration::from_millis(50))
+        .watchdog(Duration::from_millis(10))
+        .build()
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("watchdog"),
+        "watchdog/batch_timeout invariant names the fields: {err}"
+    );
+    // and the happy path round-trips through JSON for --config files
+    let cfg = ServerConfig::builder()
+        .workers(3)
+        .steal(true)
+        .build()
+        .expect("valid config");
+    let back = ServerConfig::from_json(&cfg.to_json().to_string()).expect("roundtrip");
+    assert_eq!(back.workers(), 3);
+    assert!(back.steal());
+}

@@ -1,0 +1,262 @@
+//! Torture tests for the epoll reactor front-end: slow-loris clients,
+//! mid-body disconnects, oversize uploads, and a keep-alive connection
+//! storm — all against a real listener, with `/proc/self` assertions
+//! that connections are reclaimed (fd count) and that the reactor stays
+//! one thread (task count), not thread-per-connection.
+//!
+//! Linux-only: the assertions read `/proc/self/fd` and
+//! `/proc/self/task`, and the reactor's production path is the epoll
+//! poller. Other platforms compile this file to nothing.
+#![cfg(target_os = "linux")]
+
+use scatter::config::{AcceleratorConfig, DacKind, SparsitySupport};
+use scatter::coordinator::net::{http_request, HttpServer, NetConfig};
+use scatter::coordinator::{EngineOptions, InferenceServer, ServerConfig};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The fd/thread assertions count process-wide state, so the tests in
+/// this binary must not overlap.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn test_cfg() -> AcceleratorConfig {
+    AcceleratorConfig {
+        features: SparsitySupport::NONE,
+        dac: DacKind::Edac,
+        l_g: 5.0,
+        ..Default::default()
+    }
+}
+
+fn spawn_http(net: NetConfig) -> HttpServer {
+    let server = InferenceServer::spawn(
+        scatter::nn::models::cnn3(),
+        test_cfg(),
+        EngineOptions::IDEAL,
+        Default::default(),
+        ServerConfig::builder()
+            .max_batch(4)
+            .batch_timeout(Duration::from_millis(1))
+            .workers(1)
+            .build()
+            .expect("test config validates"),
+    );
+    HttpServer::bind(server, net).expect("bind ephemeral port")
+}
+
+fn open_fds() -> usize {
+    std::fs::read_dir("/proc/self/fd").expect("procfs").count()
+}
+
+fn live_threads() -> usize {
+    std::fs::read_dir("/proc/self/task").expect("procfs").count()
+}
+
+/// Poll until `pred` holds or `timeout` elapses; returns success.
+fn eventually(timeout: Duration, mut pred: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if pred() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    pred()
+}
+
+/// Read until the peer closes; the reactor marks every torture-path
+/// response `Connection: close`, so EOF delimits it.
+fn read_to_eof(stream: &mut TcpStream) -> String {
+    let mut buf = Vec::new();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("read timeout");
+    let _ = stream.read_to_end(&mut buf);
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+/// A request trickled in 3-byte chunks still parses and gets its
+/// response: the reactor accumulates partial reads across ticks instead
+/// of blocking a thread on the socket.
+#[test]
+fn slow_loris_request_still_completes() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let http = spawn_http(NetConfig::default());
+    let addr: SocketAddr = http.local_addr();
+
+    let request = b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n";
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    for chunk in request.chunks(3) {
+        stream.write_all(chunk).expect("trickle");
+        stream.flush().expect("flush");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let resp = read_to_eof(&mut stream);
+    assert!(resp.starts_with("HTTP/1.1 200"), "loris got a real response: {resp}");
+    assert!(resp.contains("\"status\":\"ok\""), "{resp}");
+
+    http.shutdown().expect("drain");
+}
+
+/// A client that dies mid-body must not leak its connection: the
+/// reactor sees the hangup, drops the state, and the fd count returns
+/// to where it was. The server keeps serving afterwards.
+#[test]
+fn mid_body_disconnect_reclaims_the_connection() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let http = spawn_http(NetConfig::default());
+    let addr: SocketAddr = http.local_addr();
+    // settle: the listener and engine threads are all up
+    assert!(http_request(&addr, "GET", "/healthz", None).is_ok());
+    let baseline = open_fds();
+
+    {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .write_all(
+                b"POST /v1/predict HTTP/1.1\r\nHost: t\r\n\
+                  Content-Type: application/json\r\nContent-Length: 100000\r\n\r\n{\"image\":[",
+            )
+            .expect("partial body");
+        stream.flush().expect("flush");
+        // give the reactor a tick to register and start reading
+        std::thread::sleep(Duration::from_millis(50));
+    } // dropped mid-body: RST/EOF at the server
+
+    assert!(
+        eventually(Duration::from_secs(10), || open_fds() <= baseline),
+        "abandoned connection must be reclaimed: {} fds vs baseline {baseline}",
+        open_fds()
+    );
+    // and the reactor is still serving
+    let health = http_request(&addr, "GET", "/healthz", None).expect("alive");
+    assert_eq!(health.status, 200);
+
+    http.shutdown().expect("drain");
+}
+
+/// A body larger than the request cap gets the 413 envelope as soon as
+/// the buffered bytes cross the limit — the client need not finish the
+/// upload (it stops early here, so the response is never lost to a
+/// reset race).
+#[test]
+fn oversize_body_gets_413_envelope() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let http = spawn_http(NetConfig::default());
+    let addr: SocketAddr = http.local_addr();
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .write_all(
+            b"POST /v1/predict HTTP/1.1\r\nHost: t\r\n\
+              Content-Type: application/json\r\nContent-Length: 6000000\r\n\r\n",
+        )
+        .expect("head");
+    // push past the 4 MiB cap, then stop and listen
+    let filler = vec![b'1'; 64 * 1024];
+    for _ in 0..70 {
+        if stream.write_all(&filler).is_err() {
+            break; // server already rejected and closed — fine
+        }
+    }
+    let resp = read_to_eof(&mut stream);
+    assert!(resp.starts_with("HTTP/1.1 413"), "oversize upload rejected: {resp}");
+    assert!(resp.contains("\"code\":\"payload_too_large\""), "{resp}");
+    assert!(resp.contains("\"retryable\":false"), "{resp}");
+
+    http.shutdown().expect("drain");
+}
+
+/// Hundreds of concurrent keep-alive connections are held open and
+/// served by ONE reactor thread: the process thread count stays flat
+/// (thread-per-connection would add one each), every connection gets
+/// its responses, and closing them returns the fd count to baseline.
+#[test]
+fn keep_alive_storm_holds_on_one_thread() {
+    const CONNS: usize = 256;
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let http = spawn_http(NetConfig { max_connections: CONNS + 8, ..Default::default() });
+    let addr: SocketAddr = http.local_addr();
+    assert!(http_request(&addr, "GET", "/healthz", None).is_ok());
+    let fd_baseline = open_fds();
+    let thread_baseline = live_threads();
+
+    let mut conns = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        let stream = TcpStream::connect(addr).unwrap_or_else(|e| panic!("conn {i}: {e}"));
+        conns.push(stream);
+    }
+    // every connection speaks once (keep-alive: the reactor must hold
+    // all of them open simultaneously, not serve-and-close)
+    let req = b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n";
+    for (i, stream) in conns.iter_mut().enumerate() {
+        stream.write_all(req).unwrap_or_else(|e| panic!("write {i}: {e}"));
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .expect("read timeout");
+        let mut buf = [0u8; 4096];
+        let n = stream.read(&mut buf).unwrap_or_else(|e| panic!("read {i}: {e}"));
+        let head = String::from_utf8_lossy(&buf[..n]);
+        assert!(head.starts_with("HTTP/1.1 200"), "conn {i}: {head}");
+    }
+
+    assert!(
+        open_fds() >= fd_baseline + CONNS,
+        "all {CONNS} connections are held open concurrently"
+    );
+    assert!(
+        live_threads() <= thread_baseline + 4,
+        "the reactor serves {CONNS} connections without per-connection threads: \
+         {} threads vs baseline {thread_baseline}",
+        live_threads()
+    );
+
+    drop(conns);
+    assert!(
+        eventually(Duration::from_secs(10), || open_fds() <= fd_baseline),
+        "closed connections must be reclaimed: {} fds vs baseline {fd_baseline}",
+        open_fds()
+    );
+
+    http.shutdown().expect("drain");
+}
+
+/// Connections beyond `max_connections` get one `overloaded` 503
+/// envelope and are closed — and those rejected sockets are reclaimed
+/// too.
+#[test]
+fn connections_beyond_the_cap_get_a_503_envelope() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let http = spawn_http(NetConfig { max_connections: 4, ..Default::default() });
+    let addr: SocketAddr = http.local_addr();
+    assert!(http_request(&addr, "GET", "/healthz", None).is_ok());
+    let baseline = open_fds();
+
+    // fill the table with idle keep-alive connections
+    let holders: Vec<TcpStream> =
+        (0..4).map(|i| TcpStream::connect(addr).unwrap_or_else(|e| panic!("{i}: {e}"))).collect();
+    // give the reactor a tick to accept them all
+    std::thread::sleep(Duration::from_millis(100));
+
+    let mut extra = TcpStream::connect(addr).expect("connect past cap");
+    extra
+        .write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n")
+        .expect("request past cap");
+    let resp = read_to_eof(&mut extra);
+    assert!(resp.starts_with("HTTP/1.1 503"), "over-cap connection rejected: {resp}");
+    assert!(resp.contains("\"code\":\"overloaded\""), "{resp}");
+    assert!(resp.contains("\"retryable\":true"), "{resp}");
+    assert!(resp.contains("Retry-After:"), "{resp}");
+
+    drop(extra);
+    drop(holders);
+    assert!(
+        eventually(Duration::from_secs(10), || open_fds() <= baseline),
+        "rejected + held connections all reclaimed: {} vs baseline {baseline}",
+        open_fds()
+    );
+
+    http.shutdown().expect("drain");
+}

@@ -1,19 +1,49 @@
 //! End-to-end tests of the networked inference front-end: a real
 //! `TcpListener` on an ephemeral port, concurrent `POST /v1/predict`
 //! clients, admission-control conservation (every request gets exactly
-//! one reply or a 503), live `/metrics`, health degradation under
-//! injected worker faults, and graceful drain.
+//! one reply or a 503), the structured error envelope on every 4xx/5xx
+//! path, live `/metrics`, health degradation under injected worker
+//! faults, and graceful drain.
 
 use scatter::config::{AcceleratorConfig, DacKind, SparsitySupport};
 use scatter::coordinator::net::{
     http_request, metric_value, HttpClient, HttpServer, NetConfig,
 };
 use scatter::coordinator::{
-    AdmissionConfig, EngineOptions, FaultPlan, InferenceServer, ServerConfig,
-    SupervisorConfig,
+    EngineOptions, FaultPlan, InferenceServer, ServerConfig,
 };
 use scatter::util::Json;
 use std::time::Duration;
+
+/// Every non-200 from the API must carry the structured envelope
+/// `{"error":{"code","message","retryable"}}`; 503s additionally carry
+/// `retry_after_s` mirroring the Retry-After header. Returns the code.
+fn assert_envelope(body: &str, status: u16, want_code: &str, want_retryable: bool) {
+    let v = Json::parse(body).unwrap_or_else(|e| panic!("{status} body not JSON ({e}): {body}"));
+    let err = v.get("error").unwrap_or_else(|| panic!("{status} body has no error: {body}"));
+    assert_eq!(
+        err.get("code").and_then(Json::as_str),
+        Some(want_code),
+        "{status} code: {body}"
+    );
+    assert!(
+        !err.get("message").and_then(Json::as_str).unwrap_or("").is_empty(),
+        "{status} message must be non-empty: {body}"
+    );
+    assert_eq!(
+        err.get("retryable").and_then(Json::as_bool),
+        Some(want_retryable),
+        "{status} retryable: {body}"
+    );
+    if status == 503 {
+        assert!(
+            err.get("retry_after_s").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0,
+            "503 envelope carries retry_after_s: {body}"
+        );
+    } else {
+        assert!(err.get("retry_after_s").is_none(), "only 503 hints a retry: {body}");
+    }
+}
 
 fn test_cfg() -> AcceleratorConfig {
     AcceleratorConfig {
@@ -36,14 +66,16 @@ fn spawn_http_cfg(server_cfg: ServerConfig) -> HttpServer {
 }
 
 fn spawn_http(max_in_flight: usize, workers: usize) -> HttpServer {
-    spawn_http_cfg(ServerConfig {
-        max_batch: 8,
-        batch_timeout: Duration::from_millis(1),
-        workers,
-        engine_threads: 1,
-        admission: AdmissionConfig { max_in_flight, ..Default::default() },
-        ..Default::default()
-    })
+    spawn_http_cfg(
+        ServerConfig::builder()
+            .max_batch(8)
+            .batch_timeout(Duration::from_millis(1))
+            .workers(workers)
+            .engine_threads(1)
+            .max_in_flight(max_in_flight)
+            .build()
+            .expect("test config validates"),
+    )
 }
 
 fn predict_body() -> String {
@@ -96,6 +128,7 @@ fn http_end_to_end_concurrent_load() {
                                     resp.retry_after_s.unwrap_or(0) >= 1,
                                     "503 must carry Retry-After"
                                 );
+                                assert_envelope(&resp.body, 503, "overloaded", true);
                                 shed += 1;
                             }
                             other => panic!("unexpected status {other}: {}", resp.body),
@@ -167,9 +200,11 @@ fn predict_rejects_malformed_input() {
 
     let bad_json = http_request(&addr, "POST", "/v1/predict", Some("{not json")).unwrap();
     assert_eq!(bad_json.status, 400);
+    assert_envelope(&bad_json.body, 400, "bad_request", false);
 
     let no_image = http_request(&addr, "POST", "/v1/predict", Some("{}")).unwrap();
     assert_eq!(no_image.status, 400);
+    assert_envelope(&no_image.body, 400, "bad_request", false);
 
     let wrong_shape = http_request(
         &addr,
@@ -180,9 +215,11 @@ fn predict_rejects_malformed_input() {
     .unwrap();
     assert_eq!(wrong_shape.status, 400);
     assert!(wrong_shape.body.contains("disagrees"), "{}", wrong_shape.body);
+    assert_envelope(&wrong_shape.body, 400, "bad_request", false);
 
     let lost = http_request(&addr, "GET", "/v1/unknown", None).unwrap();
     assert_eq!(lost.status, 404);
+    assert_envelope(&lost.body, 404, "not_found", false);
 
     // malformed input never ties up an admission slot
     let m = http_request(&addr, "GET", "/metrics", None).unwrap();
@@ -204,6 +241,7 @@ fn expired_deadline_maps_to_504() {
     .to_string();
     let resp = http_request(&addr, "POST", "/v1/predict", Some(&body)).unwrap();
     assert_eq!(resp.status, 504, "{}", resp.body);
+    assert_envelope(&resp.body, 504, "deadline_exceeded", true);
     let report = http.shutdown().expect("drain");
     assert_eq!(report.expired, 1);
     assert_eq!(report.requests, 0, "expired work never reached an engine");
@@ -214,15 +252,17 @@ fn expired_deadline_maps_to_504() {
 /// per-worker gauges agree.
 #[test]
 fn healthz_degrades_when_a_worker_stays_down() {
-    let http = spawn_http_cfg(ServerConfig {
-        max_batch: 8,
-        batch_timeout: Duration::from_millis(1),
-        workers: 2,
-        engine_threads: 1,
-        faults: FaultPlan::parse("panic@w0:s0", 2).expect("valid spec"),
-        supervisor: SupervisorConfig { max_restarts: 0, ..Default::default() },
-        ..Default::default()
-    });
+    let http = spawn_http_cfg(
+        ServerConfig::builder()
+            .max_batch(8)
+            .batch_timeout(Duration::from_millis(1))
+            .workers(2)
+            .engine_threads(1)
+            .faults(FaultPlan::parse("panic@w0:s0", 2).expect("valid spec"))
+            .max_restarts(0)
+            .build()
+            .expect("test config validates"),
+    );
     let addr = http.local_addr();
     let body = predict_body();
 
@@ -263,21 +303,24 @@ fn healthz_degrades_when_a_worker_stays_down() {
 /// and predicts fail fast with a retryable 503 instead of hanging.
 #[test]
 fn healthz_reports_down_when_no_workers_remain() {
-    let http = spawn_http_cfg(ServerConfig {
-        max_batch: 4,
-        batch_timeout: Duration::from_millis(1),
-        workers: 1,
-        engine_threads: 1,
-        faults: FaultPlan::parse("panic@w0:s0", 1).expect("valid spec"),
-        supervisor: SupervisorConfig { max_restarts: 0, ..Default::default() },
-        ..Default::default()
-    });
+    let http = spawn_http_cfg(
+        ServerConfig::builder()
+            .max_batch(4)
+            .batch_timeout(Duration::from_millis(1))
+            .workers(1)
+            .engine_threads(1)
+            .faults(FaultPlan::parse("panic@w0:s0", 1).expect("valid spec"))
+            .max_restarts(0)
+            .build()
+            .expect("test config validates"),
+    );
     let addr = http.local_addr();
     let body = predict_body();
 
     let resp = http_request(&addr, "POST", "/v1/predict", Some(&body)).expect("reply");
     assert_eq!(resp.status, 503, "only worker dead: retryable, not a hang");
     assert!(resp.retry_after_s.unwrap_or(0) >= 1, "503 carries Retry-After");
+    assert_envelope(&resp.body, 503, "unavailable", true);
 
     let health = http_request(&addr, "GET", "/healthz", None).expect("healthz");
     assert_eq!(health.status, 503, "zero live workers is down, not degraded");
@@ -296,17 +339,19 @@ fn healthz_reports_down_when_no_workers_remain() {
 /// the clients' 200s.
 #[test]
 fn drain_under_fault_conserves_replies() {
-    let http = spawn_http_cfg(ServerConfig {
-        max_batch: 4,
-        batch_timeout: Duration::from_millis(1),
-        workers: 1,
-        engine_threads: 1,
-        admission: AdmissionConfig { max_in_flight: 64, ..Default::default() },
-        // seq 0 dies under the warm-up request; seq 3 dies somewhere
-        // inside the race (or never fires — both are fine)
-        faults: FaultPlan::parse("panic@w0:s0,panic@w0:s3", 1).expect("valid spec"),
-        ..Default::default()
-    });
+    let http = spawn_http_cfg(
+        ServerConfig::builder()
+            .max_batch(4)
+            .batch_timeout(Duration::from_millis(1))
+            .workers(1)
+            .engine_threads(1)
+            .max_in_flight(64)
+            // seq 0 dies under the warm-up request; seq 3 dies somewhere
+            // inside the race (or never fires — both are fine)
+            .faults(FaultPlan::parse("panic@w0:s0,panic@w0:s3", 1).expect("valid spec"))
+            .build()
+            .expect("test config validates"),
+    );
     let addr = http.local_addr();
     let body = predict_body();
 

@@ -52,17 +52,17 @@ fn spawn_http(policy: ThermalPolicy) -> HttpServer {
         test_cfg(),
         EngineOptions::IDEAL,
         Default::default(),
-        ServerConfig {
-            max_batch: 2,
-            batch_timeout: Duration::from_millis(1),
-            workers: 1,
-            thermal: ThermalServerConfig {
+        ServerConfig::builder()
+            .max_batch(2)
+            .batch_timeout(Duration::from_millis(1))
+            .workers(1)
+            .thermal(ThermalServerConfig {
                 drift: Some(heat_only_drift()),
                 policy,
                 ..Default::default()
-            },
-            ..Default::default()
-        },
+            })
+            .build()
+            .expect("drift config validates"),
     );
     HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral port")
 }

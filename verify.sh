@@ -15,9 +15,9 @@ echo "== tier-1: cargo test -q =="
 echo "== bench smoke: engine sweep + stage breakdown (--samples 5 ≈ 50 ms/cell) =="
 ./rust/target/release/scatter bench engine --samples 5 --threads 1,2,4,8 --stages
 
-echo "== bench smoke: networked serve (2 s closed-loop over TCP + batched-compute B-sweep) =="
+echo "== bench smoke: networked serve (2 s closed-loop over TCP + B-sweep + replica sweep) =="
 ./rust/target/release/scatter bench serve --duration 2 --concurrency 4 --workers 2 \
-  --max-batch 1,8
+  --max-batch 1,8 --replicas 1,4
 
 echo "== bench smoke: thermal drift (policy off vs threshold recalibration) =="
 ./rust/target/release/scatter bench drift --samples 40
