@@ -19,7 +19,12 @@ re-programs, and the serving gauges register — hold on every build.
 every engine worker once on a seeded schedule) gates recovery: zero
 lost replies, at least one supervisor respawn, a full-strength pool at
 drain, and post-fault throughput at or above
-``chaos.min_recovery × pre-fault``.
+``chaos.min_recovery × pre-fault``. ``BENCH_swap.json`` (written by
+``scatter bench swap``: in-serving DST mask hot-swap under load, a
+promote phase plus an injected-bad-canary rollback phase) gates the
+co-design loop: at least ``swap.min_swaps`` promoted generations, zero
+lost replies in both phases, the rollback path exercised at least once,
+and no candidate promoted past a failing canary.
 
 The engine gate is **armed two ways**:
 
@@ -402,12 +407,63 @@ def check_chaos(chaos_path, baseline_path, failures):
     )
 
 
+def check_swap(swap_path, baseline_path, failures):
+    """Mask hot-swap gate over ``BENCH_swap.json``. Every floor is
+    machine-independent: swap/rollback counts and reply conservation are
+    exact invariants of the shard-boundary cutover protocol, measured in
+    one run on one runner."""
+    doc = load(swap_path)
+    base = (load(baseline_path).get("swap") or {})
+    min_swaps = float(base.get("min_swaps", 2))
+
+    if float(doc.get("requests_ok", 0)) <= 0:
+        failures.append(f"{swap_path}: promote phase served nothing")
+    swaps = float(doc.get("swaps", 0))
+    if swaps < min_swaps:
+        failures.append(
+            f"{swap_path}: swaps={swaps:.0f} < {min_swaps:.0f} — the in-serving "
+            f"DST loop never promoted enough mask generations under load"
+        )
+    lost = float(doc.get("lost", -1))
+    if lost != 0:
+        failures.append(
+            f"{swap_path}: lost={lost:.0f} replies in the promote phase — a "
+            f"shard-boundary cutover must never eat a reply"
+        )
+    if float(doc.get("generation_max", 0)) < 1:
+        failures.append(f"{swap_path}: no replica ever left mask generation 0")
+    rb_lost = float(doc.get("rollback_lost", -1))
+    if rb_lost != 0:
+        failures.append(
+            f"{swap_path}: rollback phase lost {rb_lost:.0f} replies — a vetoed "
+            f"candidate must not touch traffic"
+        )
+    rollbacks = float(doc.get("rollback_rollbacks", 0))
+    if rollbacks < 1:
+        failures.append(
+            f"{swap_path}: rollback_rollbacks={rollbacks:.0f} — the injected "
+            f"failing canary never exercised the rollback path"
+        )
+    rb_swaps = float(doc.get("rollback_swaps", -1))
+    if rb_swaps != 0:
+        failures.append(
+            f"{swap_path}: rollback_swaps={rb_swaps:.0f} — a candidate was "
+            f"promoted past a failing canary"
+        )
+    print(
+        f"swap gate: {swap_path} {swaps:.0f} promotions "
+        f"(top generation {float(doc.get('generation_max', 0)):.0f}), "
+        f"{rollbacks:.0f} bad-canary rollbacks, 0 lost replies in both phases"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--engine", default="BENCH_engine.json")
     ap.add_argument("--server", default=None, help="BENCH_server.json (optional)")
     ap.add_argument("--drift", default=None, help="BENCH_drift.json (optional)")
     ap.add_argument("--chaos", default=None, help="BENCH_chaos.json (optional)")
+    ap.add_argument("--swap", default=None, help="BENCH_swap.json (optional)")
     ap.add_argument("--baseline", default="ci/bench_baseline.json")
     args = ap.parse_args()
 
@@ -431,6 +487,11 @@ def main():
             check_chaos(args.chaos, args.baseline, failures)
         except (OSError, ValueError, KeyError) as e:
             failures.append(f"chaos check unreadable: {e!r}")
+    if args.swap:
+        try:
+            check_swap(args.swap, args.baseline, failures)
+        except (OSError, ValueError, KeyError) as e:
+            failures.append(f"swap check unreadable: {e!r}")
 
     if failures:
         print("\nPERF GATE FAILED:", file=sys.stderr)

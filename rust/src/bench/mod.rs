@@ -11,6 +11,7 @@ pub mod common;
 pub mod drift;
 pub mod engine;
 pub mod serve;
+pub mod swap;
 pub mod timing;
 
 pub mod fig10;

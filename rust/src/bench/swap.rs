@@ -1,0 +1,330 @@
+//! Mask hot-swap bench: in-serving DST under concurrent load
+//! (`scatter bench swap`, EXPERIMENTS.md §Mask hot-swap protocol).
+//!
+//! Two phases against the same CNN-3 deployment, both driven by
+//! closed-loop keep-alive HTTP clients:
+//!
+//! * **promote** — DST enabled with a permissive canary: the dispatcher
+//!   steps the power-optimized mask search on its idle headroom and the
+//!   workers cut candidate generations over at shard boundaries while
+//!   traffic flows. Headlines: promoted swap count, reply conservation
+//!   (`lost == 0` — a swap never eats a reply), and client-observed
+//!   energy per image before vs after the swaps.
+//! * **rollback** — same loop with an injected failing canary
+//!   (`dst.inject_bad_canary`): every candidate is applied, probed, and
+//!   rolled back at the shard boundary. Headlines: at least one
+//!   rollback, zero promotions, and again zero lost replies.
+//!
+//! `ci/check_bench.py --swap` gates: promoted swaps at or above the
+//! baseline floor, zero lost replies in BOTH phases, the rollback path
+//! exercised at least once, and no promotion slipping past the bad
+//! canary.
+
+use crate::bench::common::{repo_root_file, BenchCtx, Workload};
+use crate::config::AcceleratorConfig;
+use crate::coordinator::net::{http_request, metric_value, HttpClient, HttpServer, NetConfig};
+use crate::coordinator::{DstServerConfig, EngineOptions, InferenceServer, ServerConfig};
+use crate::util::{Json, Table};
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+/// `scatter bench swap` configuration.
+#[derive(Debug, Clone)]
+pub struct SwapBenchConfig {
+    /// Promote-phase load duration (the rollback phase runs half).
+    pub duration: Duration,
+    /// Concurrent keep-alive client connections.
+    pub concurrency: usize,
+    /// Engine-worker pool size.
+    pub workers: usize,
+    /// DST stepping period (idle-headroom pacing).
+    pub period: Duration,
+    /// DST rounds (upper bound on candidate generations).
+    pub rounds: usize,
+}
+
+impl Default for SwapBenchConfig {
+    fn default() -> Self {
+        Self {
+            duration: Duration::from_secs(4),
+            concurrency: 4,
+            workers: 2,
+            period: Duration::from_millis(2),
+            rounds: 40,
+        }
+    }
+}
+
+/// One request outcome: timestamp, status class, per-reply energy.
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    t_s: f64,
+    ok: bool,
+    shed: bool,
+    expired: bool,
+    lost: bool,
+    energy_mj: f64,
+}
+
+/// Closed-loop send loop; every request gets a timestamped outcome and,
+/// on a 200, its batched-pass energy share (the before/after-swap
+/// energy-per-image headline is client-observed).
+fn drive_client(
+    addr: SocketAddr,
+    bodies: &[String],
+    started: Instant,
+    deadline: Instant,
+    seed: usize,
+) -> Vec<Event> {
+    let mut events = Vec::new();
+    let mut client = match HttpClient::connect(&addr) {
+        Ok(c) => c,
+        Err(_) => return events,
+    };
+    let mut i = seed;
+    while Instant::now() < deadline {
+        let body = &bodies[i % bodies.len()];
+        i += 1;
+        let mut ev = Event {
+            t_s: 0.0,
+            ok: false,
+            shed: false,
+            expired: false,
+            lost: false,
+            energy_mj: 0.0,
+        };
+        match client.request("POST", "/v1/predict", Some(body)) {
+            Ok(resp) => match resp.status {
+                200 => {
+                    ev.ok = true;
+                    ev.energy_mj = Json::parse(&resp.body)
+                        .ok()
+                        .and_then(|v| v.get("energy_mj").and_then(Json::as_f64))
+                        .unwrap_or(0.0);
+                }
+                503 => ev.shed = true,
+                504 => ev.expired = true,
+                _ => ev.lost = true,
+            },
+            Err(_) => {
+                ev.lost = true;
+                match HttpClient::connect(&addr) {
+                    Ok(c) => client = c,
+                    Err(_) => {
+                        ev.t_s = started.elapsed().as_secs_f64();
+                        events.push(ev);
+                        return events;
+                    }
+                }
+            }
+        }
+        ev.t_s = started.elapsed().as_secs_f64();
+        events.push(ev);
+    }
+    events
+}
+
+/// Mean per-reply energy inside `[lo, hi)` seconds; NaN when empty.
+fn window_energy(events: &[Event], lo: f64, hi: f64) -> f64 {
+    let hits: Vec<f64> = events
+        .iter()
+        .filter(|e| e.ok && e.t_s >= lo && e.t_s < hi)
+        .map(|e| e.energy_mj)
+        .collect();
+    if hits.is_empty() {
+        f64::NAN
+    } else {
+        hits.iter().sum::<f64>() / hits.len() as f64
+    }
+}
+
+struct PhaseResult {
+    ok: u64,
+    shed: u64,
+    expired: u64,
+    lost: u64,
+    swaps: u64,
+    rollbacks: u64,
+    generation_max: u64,
+    mask_power_mw: f64,
+    energy_pre_mj: f64,
+    energy_post_mj: f64,
+    wall_s: f64,
+}
+
+/// One serving run with the given DST settings under closed-loop load.
+fn run_phase(cfg: &SwapBenchConfig, dst: DstServerConfig, duration: Duration) -> PhaseResult {
+    let workers = cfg.workers.max(1);
+    let ctx = BenchCtx::new(50);
+    let acc = AcceleratorConfig::default();
+    let (model, _ds, masks) = ctx.deployment(Workload::Cnn3, &acc, 0.3);
+    let server = InferenceServer::spawn(
+        model,
+        acc,
+        EngineOptions::NOISY,
+        masks,
+        ServerConfig::builder()
+            .max_batch(4)
+            .batch_timeout(Duration::from_millis(2))
+            .workers(workers)
+            .dst(dst)
+            .build()
+            .expect("swap bench config validates"),
+    );
+    let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral");
+    let addr = http.local_addr();
+
+    let ds = crate::data::SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
+    let bodies: Vec<String> = (0..16)
+        .map(|i| {
+            let (img, _) = ds.sample(0x51A9, i);
+            Json::obj(vec![("image", Json::arr_f64(&img.data))]).to_string()
+        })
+        .collect();
+
+    let started = Instant::now();
+    let deadline = started + duration;
+    let events: Vec<Event> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.concurrency.max(1))
+            .map(|c| {
+                let bodies = &bodies;
+                s.spawn(move || drive_client(addr, bodies, started, deadline, c * 7919))
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall_s = started.elapsed().as_secs_f64().max(1e-9);
+
+    // live swap gauges, scraped while the server is still up
+    let scraped = http_request(&addr, "GET", "/metrics", None)
+        .map(|r| r.body)
+        .unwrap_or_default();
+    let mask_power_mw = metric_value(&scraped, "scatter_mask_power_mw");
+
+    let report = http.shutdown().expect("drain swap server");
+
+    let (mut ok, mut shed, mut expired, mut lost) = (0u64, 0u64, 0u64, 0u64);
+    for e in &events {
+        ok += u64::from(e.ok);
+        shed += u64::from(e.shed);
+        expired += u64::from(e.expired);
+        lost += u64::from(e.lost);
+    }
+    let quarter = wall_s / 4.0;
+    PhaseResult {
+        ok,
+        shed,
+        expired,
+        lost,
+        swaps: report.mask_swaps,
+        rollbacks: report.mask_rollbacks,
+        generation_max: report.mask_generation.iter().copied().max().unwrap_or(0),
+        mask_power_mw,
+        energy_pre_mj: window_energy(&events, 0.0, quarter),
+        energy_post_mj: window_energy(&events, 3.0 * quarter, wall_s),
+        wall_s,
+    }
+}
+
+/// Run the swap bench, print the summary table, write
+/// `BENCH_swap.json`, and return the rendered table.
+pub fn run(cfg: &SwapBenchConfig) -> String {
+    // promote: the canary gate is opened fully so every candidate the
+    // DST job emits cuts over — the phase measures the swap machinery
+    // (conservation + energy trend), not argmax agreement of a
+    // synthetic-fitted model
+    let promote = run_phase(
+        cfg,
+        DstServerConfig {
+            enabled: true,
+            period: cfg.period,
+            rounds: cfg.rounds,
+            canary_threshold: 0.0,
+            inject_bad_canary: false,
+            artifact_dir: None,
+        },
+        cfg.duration,
+    );
+    // rollback: every candidate fails its canary by injection and must
+    // be rolled back at the shard boundary without touching traffic
+    let rollback = run_phase(
+        cfg,
+        DstServerConfig {
+            enabled: true,
+            period: cfg.period,
+            rounds: cfg.rounds,
+            canary_threshold: 0.5,
+            inject_bad_canary: true,
+            artifact_dir: None,
+        },
+        cfg.duration / 2,
+    );
+
+    let mut table = Table::new("mask hot-swap bench (in-serving DST under load)")
+        .header(&["metric", "promote", "rollback (bad canary)"]);
+    table.row(vec![
+        "duration".into(),
+        format!("{:.2} s", promote.wall_s),
+        format!("{:.2} s", rollback.wall_s),
+    ]);
+    table.row(vec![
+        "ok / shed / expired / lost".into(),
+        format!(
+            "{} / {} / {} / {}",
+            promote.ok, promote.shed, promote.expired, promote.lost
+        ),
+        format!(
+            "{} / {} / {} / {}",
+            rollback.ok, rollback.shed, rollback.expired, rollback.lost
+        ),
+    ]);
+    table.row(vec![
+        "mask swaps / rollbacks".into(),
+        format!("{} / {}", promote.swaps, promote.rollbacks),
+        format!("{} / {}", rollback.swaps, rollback.rollbacks),
+    ]);
+    table.row(vec![
+        "max generation at drain".into(),
+        format!("{}", promote.generation_max),
+        format!("{}", rollback.generation_max),
+    ]);
+    table.row(vec![
+        "active mask power".into(),
+        format!("{:.3} mW", promote.mask_power_mw),
+        format!("{:.3} mW", rollback.mask_power_mw),
+    ]);
+    table.row(vec![
+        "energy/img pre → post swap".into(),
+        format!("{:.4} → {:.4} mJ", promote.energy_pre_mj, promote.energy_post_mj),
+        format!("{:.4} → {:.4} mJ", rollback.energy_pre_mj, rollback.energy_post_mj),
+    ]);
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("swap".into())),
+        ("concurrency", Json::Num(cfg.concurrency.max(1) as f64)),
+        ("workers", Json::Num(cfg.workers.max(1) as f64)),
+        ("dst_rounds", Json::Num(cfg.rounds as f64)),
+        ("duration_s", Json::Num(promote.wall_s)),
+        ("requests_ok", Json::Num(promote.ok as f64)),
+        ("shed", Json::Num(promote.shed as f64)),
+        ("expired", Json::Num(promote.expired as f64)),
+        ("lost", Json::Num(promote.lost as f64)),
+        ("swaps", Json::Num(promote.swaps as f64)),
+        ("rollbacks", Json::Num(promote.rollbacks as f64)),
+        ("generation_max", Json::Num(promote.generation_max as f64)),
+        ("mask_power_mw", Json::Num(promote.mask_power_mw)),
+        ("energy_mj_per_img_pre", Json::Num(promote.energy_pre_mj)),
+        ("energy_mj_per_img_post", Json::Num(promote.energy_post_mj)),
+        ("rollback_ok", Json::Num(rollback.ok as f64)),
+        ("rollback_lost", Json::Num(rollback.lost as f64)),
+        ("rollback_swaps", Json::Num(rollback.swaps as f64)),
+        ("rollback_rollbacks", Json::Num(rollback.rollbacks as f64)),
+        ("rollback_generation_max", Json::Num(rollback.generation_max as f64)),
+    ]);
+    let path = repo_root_file("BENCH_swap.json");
+    match std::fs::write(&path, json.to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    table.render()
+}

@@ -111,6 +111,7 @@ impl ProgrammedChunk {
             blk.realize_drifted(scale, &d.patterns[b]);
         }
         d.applied_env = env;
+        let mask_gen = self.plan.mask_gen;
         self.plan = ChunkPlan::from_blocks(
             &self.blocks,
             r,
@@ -119,6 +120,9 @@ impl ProgrammedChunk {
             self.col_limit,
             self.noise_std,
         );
+        // thermal recalibration never changes which artifact the chunk
+        // is executing — keep the hot-swap attribution
+        self.plan.mask_gen = mask_gen;
     }
 }
 
@@ -253,6 +257,15 @@ pub struct PhotonicEngine {
     /// Runtime thermal-drift model + recalibration policy (`None` =
     /// seed behavior: Eqs. 8–9 applied once at programming time only).
     thermal: Option<ThermalState>,
+    /// Generation id of the installed mask set (0 = the deployment
+    /// baseline from [`Self::set_masks`]; hot-swap artifacts carry
+    /// monotone ids via [`Self::apply_mask_update`]).
+    mask_generation: u64,
+    /// Chunk indices per programmed layer whose masks changed in the
+    /// last [`Self::apply_mask_update`] and are awaiting incremental
+    /// reprogramming — flushed lazily at the layer's next matmul call,
+    /// where the weight matrix is in hand.
+    pending_reprogram: BTreeMap<String, Vec<usize>>,
     energy: EnergyAccumulator,
     rng: crate::util::XorShiftRng,
     /// Worker threads for the compiled execution path (1 = inline).
@@ -295,6 +308,8 @@ impl PhotonicEngine {
             protected: Default::default(),
             programmed: BTreeMap::new(),
             thermal: None,
+            mask_generation: 0,
+            pending_reprogram: BTreeMap::new(),
             energy: EnergyAccumulator::new(),
             rng,
             threads: 1,
@@ -333,14 +348,85 @@ impl PhotonicEngine {
     }
 
     /// Install per-layer sparsity masks (from `nn::loader` or
-    /// `sparsity::init`). Clears the programming cache.
+    /// `sparsity::init`). Clears the programming cache and resets the
+    /// mask generation to 0 — this is the full-deployment path; use
+    /// [`Self::apply_mask_update`] for versioned incremental swaps.
     pub fn set_masks(&mut self, masks: BTreeMap<String, LayerMask>) {
         self.masks = masks;
         self.programmed.clear();
+        self.pending_reprogram.clear();
+        self.mask_generation = 0;
     }
 
     pub fn masks(&self) -> &BTreeMap<String, LayerMask> {
         &self.masks
+    }
+
+    /// Generation id of the installed mask set (see
+    /// [`Self::apply_mask_update`]).
+    pub fn mask_generation(&self) -> u64 {
+        self.mask_generation
+    }
+
+    /// Install a new mask generation **incrementally**: diff the new
+    /// masks against the installed ones per chunk and schedule only the
+    /// chunks whose row/column pattern actually changed for
+    /// reprogramming — unchanged chunks keep their programmed blocks,
+    /// compiled plans, and thermal-drift calibration state untouched.
+    /// This is the hot-swap analogue of the per-chunk thermal
+    /// recalibration path: cost scales with the DST step's churn, not
+    /// the model size.
+    ///
+    /// Reprogramming happens lazily at each affected layer's next
+    /// matmul call (where the weight matrix is available); the shared
+    /// activation-panel groups are rebuilt for affected layers only.
+    /// Layers whose chunk grid no longer matches (shape change) fall
+    /// back to a full re-program. Returns the number of chunks
+    /// scheduled for reprogramming across all programmed layers.
+    pub fn apply_mask_update(
+        &mut self,
+        masks: BTreeMap<String, LayerMask>,
+        generation: u64,
+    ) -> usize {
+        let (rows, cols) = self.cfg.chunk_shape();
+        let dense = ChunkMask::dense(rows, cols);
+        let mut dirty_total = 0usize;
+        let mut drop_layers: Vec<String> = Vec::new();
+        for (layer, pl) in &self.programmed {
+            let old = self.masks.get(layer);
+            let new = masks.get(layer);
+            let grid_ok = |lm: Option<&LayerMask>| {
+                lm.is_none_or(|m| m.p == pl.p && m.q == pl.q)
+            };
+            if !grid_ok(old) || !grid_ok(new) {
+                // chunk grid changed shape: no per-chunk diff is
+                // meaningful — full re-program on next use
+                drop_layers.push(layer.clone());
+                dirty_total += pl.chunks.len();
+                continue;
+            }
+            let mut dirty: Vec<usize> = Vec::new();
+            for pi in 0..pl.p {
+                for qi in 0..pl.q {
+                    let oc = old.map(|m| m.chunk(pi, qi)).unwrap_or(&dense);
+                    let nc = new.map(|m| m.chunk(pi, qi)).unwrap_or(&dense);
+                    if oc != nc {
+                        dirty.push(pi * pl.q + qi);
+                    }
+                }
+            }
+            if !dirty.is_empty() {
+                dirty_total += dirty.len();
+                self.pending_reprogram.insert(layer.clone(), dirty);
+            }
+        }
+        for layer in drop_layers {
+            self.programmed.remove(&layer);
+            self.pending_reprogram.remove(&layer);
+        }
+        self.masks = masks;
+        self.mask_generation = generation;
+        dirty_total
     }
 
     /// Mark layers for non-adjacent-column deployment (§4.1: "we protect
@@ -349,6 +435,7 @@ impl PhotonicEngine {
     pub fn set_protected(&mut self, layers: std::collections::BTreeSet<String>) {
         self.protected = layers;
         self.programmed.clear();
+        self.pending_reprogram.clear();
     }
 
     /// Enable the thermal-drift runtime: programmed phases drift with
@@ -366,6 +453,7 @@ impl PhotonicEngine {
             drift_applies: 0,
         });
         self.programmed.clear();
+        self.pending_reprogram.clear();
     }
 
     /// Advance the drift runtime to virtual time `t_s` / served count
@@ -532,8 +620,6 @@ impl PhotonicEngine {
         let protected = self.protected.contains(layer);
         let sched = self.scheduler.schedule(out_dim, in_dim);
         let (rows, cols) = (sched.chunk_rows, sched.chunk_cols);
-        let (k1, k2) = (self.cfg.k1, self.cfg.k2);
-        let (r, c) = (self.cfg.share_r, self.cfg.share_c);
 
         // per-tensor symmetric quantization + normalization to [-1, 1]
         let quant = SymmetricQuant::calibrate(self.cfg.b_w, w);
@@ -549,131 +635,188 @@ impl PhotonicEngine {
                     .as_ref()
                     .map(|lm| lm.chunk(pi, qi).clone())
                     .unwrap_or_else(|| dense_chunk.clone());
-                assert_eq!(mask.rows, rows, "layer {layer}: mask rows");
-                assert_eq!(mask.cols, cols, "layer {layer}: mask cols");
-
-                // gather + normalize + quantize + mask the chunk
-                let mut wc = vec![0.0f64; rows * cols];
-                for i in 0..rows {
-                    let gi = pi * rows + i;
-                    if gi >= out_dim {
-                        break;
-                    }
-                    for j in 0..cols {
-                        let gj = qi * cols + j;
-                        if gj >= in_dim {
-                            break;
-                        }
-                        let mut v = w[gi * in_dim + gj];
-                        if self.opts.quantize {
-                            v = quant.quantize(v);
-                        }
-                        wc[i * cols + j] = v / w_max;
-                    }
-                }
-                mask.apply(&mut wc);
-
-                // program the r×c PTC blocks
-                let mut blocks = Vec::with_capacity(r * c);
-                let mut chunk_phases = vec![0.0f64; rows * cols];
-                for a in 0..r {
-                    let rm = &mask.row[a * k1..(a + 1) * k1];
-                    for b in 0..c {
-                        let cm = &mask.col[b * k2..(b + 1) * k2];
-                        let mut wb = vec![0.0f64; k1 * k2];
-                        for i in 0..k1 {
-                            let src = (a * k1 + i) * cols + b * k2;
-                            wb[i * k2..(i + 1) * k2].copy_from_slice(&wc[src..src + k2]);
-                        }
-                        let fo = ForwardOptions {
-                            thermal: self.opts.thermal && !protected,
-                            // noise is hoisted to the chunk level (below)
-                            pd_noise: false,
-                            phase_noise: self.opts.phase_noise,
-                            col_mask: Some(cm),
-                            row_mask: Some(rm),
-                            col_mode: self.column_mode(),
-                            output_gating: self.cfg.features.output_gating,
-                        };
-                        let prog = self.sim.program(&wb, &fo, &mut self.rng);
-                        // lift |phases| into chunk layout for the power model
-                        for i in 0..k1 {
-                            for j in 0..k2 {
-                                chunk_phases[(a * k1 + i) * cols + b * k2 + j] =
-                                    prog.phase_abs[i * k2 + j];
-                            }
-                        }
-                        blocks.push(prog);
-                    }
-                }
-
-                // per-slot hold power incl. rerouter trees
-                let rerouter_mw = mask_power_mw(&mask.col, k2, &self.rerouter_mzi);
-                let power =
-                    self.power.chunk(&chunk_phases, &mask.col, &mask.row, rerouter_mw);
-                // chunk-level PD noise: c·k2 nodes per row, LR-rescaled
-                let lr_gain = if self.cfg.features.light_redistribution {
-                    let active = mask.col.iter().filter(|&&m| m).count();
-                    active as f64 / mask.col.len() as f64
-                } else {
-                    1.0
-                };
-                let noise_std = if self.opts.pd_noise {
-                    self.sim.lib.pd_noise_std * ((c * k2) as f64).sqrt() * lr_gain
-                } else {
-                    0.0
-                };
-                // compile the sparsity-aware execution plan: active-index
-                // gather tables + gain-folded panels over the realized
-                // weights, clipped to the layer's true dims
-                let row_limit = rows.min(out_dim - pi * rows);
-                let col_limit = cols.min(in_dim - qi * cols);
-                let plan =
-                    ChunkPlan::from_blocks(&blocks, r, c, row_limit, col_limit, noise_std);
-                // attach the runtime drift fingerprints (counter-based:
-                // reprogramming the same layer re-derives them exactly)
-                let drift = self.thermal.as_ref().map(|st| {
-                    let layer_id = layer_stream_id(layer);
-                    let chunk_id = (pi * sched.q + qi) as u64;
-                    let patterns =
-                        st.model.chunk_patterns(layer_id, chunk_id, r * c, k1 * k2);
-                    let n_nodes = (r * c * k1 * k2) as f64;
-                    let sum_sq: f64 = patterns
-                        .iter()
-                        .flat_map(|p| p.iter())
-                        .map(|v| v * v)
-                        .sum();
-                    ChunkDrift {
-                        patterns,
-                        pattern_rms: (sum_sq / n_nodes).sqrt(),
-                        // programming calibrates at the *current*
-                        // environment, not the t = 0 one
-                        applied_env: st.env,
-                        comp_env: st.env,
-                    }
-                });
-                chunks.push(ProgrammedChunk {
-                    blocks,
-                    power,
-                    row_mask: mask.row.clone(),
-                    noise_std,
-                    plan,
-                    row_limit,
-                    col_limit,
-                    drift,
-                });
+                chunks.push(self.program_chunk(
+                    layer, w, out_dim, in_dim, pi, qi, sched.q, &quant, w_max, mask,
+                ));
             }
         }
-        // dedupe the activation gather tables per chunk-column: every
-        // chunk-row whose plan shares a table will read one shared
-        // quantized panel per column block (matmul pass 1) instead of
-        // re-gathering it p times
+        let (panel_groups, group_of) =
+            Self::build_panel_groups(&chunks, sched.p, sched.q);
+        self.programmed.insert(
+            layer.to_string(),
+            ProgrammedLayer {
+                out_dim,
+                in_dim,
+                p: sched.p,
+                q: sched.q,
+                chunks,
+                panel_groups,
+                group_of,
+                w_scale: w_max,
+                n_waves: sched.n_waves(),
+                cycle_factor: if protected { 2 } else { 1 },
+            },
+        );
+        // a full (re)program realizes the current mask set everywhere —
+        // any finer-grained pending work for this layer is subsumed
+        self.pending_reprogram.remove(layer);
+    }
+
+    /// Program one `rows × cols` chunk of `layer` under `mask`: gather +
+    /// normalize + quantize + mask the weights, program the r×c PTC
+    /// blocks, price the hold power, compile the execution plan, and
+    /// attach drift fingerprints. Shared verbatim by the full
+    /// [`Self::program_layer`] pass and the incremental hot-swap path
+    /// ([`Self::apply_mask_update`] → [`Self::flush_mask_update`]), which
+    /// is what makes an incrementally-reprogrammed chunk bit-identical
+    /// to a freshly-programmed one.
+    #[allow(clippy::too_many_arguments)]
+    fn program_chunk(
+        &mut self,
+        layer: &str,
+        w: &[f64],
+        out_dim: usize,
+        in_dim: usize,
+        pi: usize,
+        qi: usize,
+        q: usize,
+        quant: &SymmetricQuant,
+        w_max: f64,
+        mask: ChunkMask,
+    ) -> ProgrammedChunk {
+        let protected = self.protected.contains(layer);
+        let (rows, cols) = self.cfg.chunk_shape();
+        let (k1, k2) = (self.cfg.k1, self.cfg.k2);
+        let (r, c) = (self.cfg.share_r, self.cfg.share_c);
+        assert_eq!(mask.rows, rows, "layer {layer}: mask rows");
+        assert_eq!(mask.cols, cols, "layer {layer}: mask cols");
+
+        // gather + normalize + quantize + mask the chunk
+        let mut wc = vec![0.0f64; rows * cols];
+        for i in 0..rows {
+            let gi = pi * rows + i;
+            if gi >= out_dim {
+                break;
+            }
+            for j in 0..cols {
+                let gj = qi * cols + j;
+                if gj >= in_dim {
+                    break;
+                }
+                let mut v = w[gi * in_dim + gj];
+                if self.opts.quantize {
+                    v = quant.quantize(v);
+                }
+                wc[i * cols + j] = v / w_max;
+            }
+        }
+        mask.apply(&mut wc);
+
+        // program the r×c PTC blocks
+        let mut blocks = Vec::with_capacity(r * c);
+        let mut chunk_phases = vec![0.0f64; rows * cols];
+        for a in 0..r {
+            let rm = &mask.row[a * k1..(a + 1) * k1];
+            for b in 0..c {
+                let cm = &mask.col[b * k2..(b + 1) * k2];
+                let mut wb = vec![0.0f64; k1 * k2];
+                for i in 0..k1 {
+                    let src = (a * k1 + i) * cols + b * k2;
+                    wb[i * k2..(i + 1) * k2].copy_from_slice(&wc[src..src + k2]);
+                }
+                let fo = ForwardOptions {
+                    thermal: self.opts.thermal && !protected,
+                    // noise is hoisted to the chunk level (below)
+                    pd_noise: false,
+                    phase_noise: self.opts.phase_noise,
+                    col_mask: Some(cm),
+                    row_mask: Some(rm),
+                    col_mode: self.column_mode(),
+                    output_gating: self.cfg.features.output_gating,
+                };
+                let mut prog = self.sim.program(&wb, &fo, &mut self.rng);
+                prog.mask_gen = self.mask_generation;
+                // lift |phases| into chunk layout for the power model
+                for i in 0..k1 {
+                    for j in 0..k2 {
+                        chunk_phases[(a * k1 + i) * cols + b * k2 + j] =
+                            prog.phase_abs[i * k2 + j];
+                    }
+                }
+                blocks.push(prog);
+            }
+        }
+
+        // per-slot hold power incl. rerouter trees
+        let rerouter_mw = mask_power_mw(&mask.col, k2, &self.rerouter_mzi);
+        let power = self.power.chunk(&chunk_phases, &mask.col, &mask.row, rerouter_mw);
+        // chunk-level PD noise: c·k2 nodes per row, LR-rescaled
+        let lr_gain = if self.cfg.features.light_redistribution {
+            let active = mask.col.iter().filter(|&&m| m).count();
+            active as f64 / mask.col.len() as f64
+        } else {
+            1.0
+        };
+        let noise_std = if self.opts.pd_noise {
+            self.sim.lib.pd_noise_std * ((c * k2) as f64).sqrt() * lr_gain
+        } else {
+            0.0
+        };
+        // compile the sparsity-aware execution plan: active-index
+        // gather tables + gain-folded panels over the realized
+        // weights, clipped to the layer's true dims
+        let row_limit = rows.min(out_dim - pi * rows);
+        let col_limit = cols.min(in_dim - qi * cols);
+        let mut plan = ChunkPlan::from_blocks(&blocks, r, c, row_limit, col_limit, noise_std);
+        plan.mask_gen = self.mask_generation;
+        // attach the runtime drift fingerprints (counter-based:
+        // reprogramming the same layer re-derives them exactly)
+        let drift = self.thermal.as_ref().map(|st| {
+            let layer_id = layer_stream_id(layer);
+            let chunk_id = (pi * q + qi) as u64;
+            let patterns = st.model.chunk_patterns(layer_id, chunk_id, r * c, k1 * k2);
+            let n_nodes = (r * c * k1 * k2) as f64;
+            let sum_sq: f64 = patterns
+                .iter()
+                .flat_map(|p| p.iter())
+                .map(|v| v * v)
+                .sum();
+            ChunkDrift {
+                patterns,
+                pattern_rms: (sum_sq / n_nodes).sqrt(),
+                // programming calibrates at the *current*
+                // environment, not the t = 0 one
+                applied_env: st.env,
+                comp_env: st.env,
+            }
+        });
+        ProgrammedChunk {
+            blocks,
+            power,
+            row_mask: mask.row.clone(),
+            noise_std,
+            plan,
+            row_limit,
+            col_limit,
+            drift,
+        }
+    }
+
+    /// Dedupe the activation gather tables per chunk-column: every
+    /// chunk-row whose plan shares a table will read one shared
+    /// quantized panel per column block (matmul pass 1) instead of
+    /// re-gathering it p times.
+    fn build_panel_groups(
+        chunks: &[ProgrammedChunk],
+        p: usize,
+        q: usize,
+    ) -> (Vec<PanelGroup>, Vec<usize>) {
         let mut panel_groups: Vec<PanelGroup> = Vec::new();
         let mut group_of = vec![0usize; chunks.len()];
-        for qi in 0..sched.q {
+        for qi in 0..q {
             let mut local: Vec<usize> = Vec::new(); // this column's groups
-            for pi in 0..sched.p {
-                let idx = pi * sched.q + qi;
+            for pi in 0..p {
+                let idx = pi * q + qi;
                 let cols_tbl = &chunks[idx].plan.cols;
                 let g = match local
                     .iter()
@@ -690,21 +833,38 @@ impl PhotonicEngine {
                 group_of[idx] = g;
             }
         }
-        self.programmed.insert(
-            layer.to_string(),
-            ProgrammedLayer {
-                out_dim,
-                in_dim,
-                p: sched.p,
-                q: sched.q,
-                chunks,
-                panel_groups,
-                group_of,
-                w_scale: w_max,
-                n_waves: sched.n_waves(),
-                cycle_factor: if protected { 2 } else { 1 },
-            },
-        );
+        (panel_groups, group_of)
+    }
+
+    /// Flush a pending incremental mask update for `layer`: reprogram
+    /// exactly the chunks [`Self::apply_mask_update`] diffed as changed
+    /// (running the same per-chunk recipe as [`Self::program_layer`])
+    /// and rebuild the layer's shared panel groups, which is the only
+    /// [`PanelCache`] invalidation needed — the cache re-derives its
+    /// slab layout from the groups on every call. Unchanged chunks keep
+    /// their programmed blocks and thermal calibration state.
+    fn flush_mask_update(&mut self, layer: &str, w: &[f64]) {
+        let Some(dirty) = self.pending_reprogram.remove(layer) else { return };
+        let Some(mut pl) = self.programmed.remove(layer) else { return };
+        let quant = SymmetricQuant::calibrate(self.cfg.b_w, w);
+        let w_max = w.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
+        let (rows, cols) = self.cfg.chunk_shape();
+        let layer_mask = self.masks.get(layer).cloned();
+        let dense_chunk = ChunkMask::dense(rows, cols);
+        for idx in dirty {
+            let (pi, qi) = (idx / pl.q, idx % pl.q);
+            let mask = layer_mask
+                .as_ref()
+                .map(|lm| lm.chunk(pi, qi).clone())
+                .unwrap_or_else(|| dense_chunk.clone());
+            pl.chunks[idx] = self.program_chunk(
+                layer, w, pl.out_dim, pl.in_dim, pi, qi, pl.q, &quant, w_max, mask,
+            );
+        }
+        let (panel_groups, group_of) = Self::build_panel_groups(&pl.chunks, pl.p, pl.q);
+        pl.panel_groups = panel_groups;
+        pl.group_of = group_of;
+        self.programmed.insert(layer.to_string(), pl);
     }
 
     /// Per-call activation normalization scan, shared by all execution
@@ -801,6 +961,10 @@ impl PhotonicEngine {
         };
         if stale {
             self.program_layer(layer, w, out_dim, in_dim);
+        } else {
+            // a hot-swap may have queued dirty chunks for this layer —
+            // reprogram exactly those before executing
+            self.flush_mask_update(layer, w);
         }
 
         let x_max = Self::activation_max(x);
@@ -900,6 +1064,10 @@ impl PhotonicEngine {
         };
         if stale {
             self.program_layer(layer, w, out_dim, in_dim);
+        } else {
+            // a hot-swap may have queued dirty chunks for this layer —
+            // reprogram exactly those before executing
+            self.flush_mask_update(layer, w);
         }
 
         // per-call context, copied out before borrowing the plan
@@ -1105,6 +1273,10 @@ impl MatmulEngine for PhotonicEngine {
         };
         if stale {
             self.program_layer(layer, w, out_dim, in_dim);
+        } else {
+            // a hot-swap may have queued dirty chunks for this layer —
+            // reprogram exactly those before executing
+            self.flush_mask_update(layer, w);
         }
 
         // per-call context, copied out before borrowing the plan
@@ -1419,6 +1591,110 @@ mod tests {
             last.recal_chunks,
             last.recal_events
         );
+    }
+
+    /// A (old, new) mask pair over the 2×2 chunk grid of a 128×128
+    /// layer where exactly chunk (0, 1) differs (one column swapped
+    /// on ↔ off), so the incremental swap has one dirty chunk.
+    fn swap_masks() -> (crate::sparsity::LayerMask, crate::sparsity::LayerMask) {
+        let gamma = GammaModel::paper();
+        let mzi = Mzi::new(MziSpec::low_power(), 9.0, &gamma);
+        let (old, _, _) = crate::sparsity::init_layer_mask(2, 2, 64, 64, 16, 0.5, &mzi);
+        let mut new = old.clone();
+        let c = new.chunk_mut(0, 1);
+        let j_on = c.col.iter().position(|&m| m).expect("an active column");
+        let j_off = c.col.iter().position(|&m| !m).expect("a pruned column");
+        c.col[j_on] = false;
+        c.col[j_off] = true;
+        (old, new)
+    }
+
+    fn one_layer(mask: &crate::sparsity::LayerMask) -> BTreeMap<String, LayerMask> {
+        let mut m = BTreeMap::new();
+        m.insert("l".to_string(), mask.clone());
+        m
+    }
+
+    #[test]
+    fn incremental_mask_swap_matches_fresh_program_bit_for_bit() {
+        let cfg = small_cfg(crate::config::SparsitySupport::FULL);
+        let (w, x) = problem(128, 128, 4, 31);
+        let (old, new) = swap_masks();
+
+        let mut eng = PhotonicEngine::new(cfg.clone(), drift_opts());
+        eng.set_masks(one_layer(&old));
+        let y_old = eng.matmul("l", &w, &x, 128, 128, 4);
+        assert_eq!(eng.mask_generation(), 0);
+
+        let dirty = eng.apply_mask_update(one_layer(&new), 7);
+        assert_eq!(dirty, 1, "exactly the edited chunk is dirty");
+        assert_eq!(eng.mask_generation(), 7);
+        let y_inc = eng.matmul("l", &w, &x, 128, 128, 4);
+        assert_ne!(y_old, y_inc, "the mask change must show in the output");
+
+        // only the reprogrammed chunk carries the new generation tag
+        let pl = eng.programmed.get("l").expect("programmed");
+        for (idx, chunk) in pl.chunks.iter().enumerate() {
+            let expect = if idx == 1 { 7 } else { 0 };
+            assert_eq!(chunk.plan.mask_gen, expect, "plan tag of chunk {idx}");
+            assert!(
+                chunk.blocks.iter().all(|b| b.mask_gen == expect),
+                "block tags of chunk {idx}"
+            );
+        }
+
+        // bit-identical to a fresh engine programmed under the new masks
+        let mut fresh = PhotonicEngine::new(cfg, drift_opts());
+        fresh.set_masks(one_layer(&new));
+        let y_fresh = fresh.matmul("l", &w, &x, 128, 128, 4);
+        assert_eq!(y_inc, y_fresh, "incremental reprogram == fresh program");
+    }
+
+    #[test]
+    fn mask_swap_preserves_unchanged_chunk_calibration() {
+        let cfg = small_cfg(crate::config::SparsitySupport::FULL);
+        let (w, x) = problem(128, 128, 2, 32);
+        let (old, new) = swap_masks();
+        let mut eng = PhotonicEngine::new(cfg, drift_opts());
+        eng.set_thermal(heat_only_drift(), ThermalPolicy::Off);
+        eng.set_masks(one_layer(&old));
+        let _ = eng.matmul("l", &w, &x, 128, 128, 2);
+        let s = eng.thermal_tick(0.0, 50).expect("runtime enabled");
+        assert!(s.env_rad > 0.1);
+
+        assert_eq!(eng.apply_mask_update(one_layer(&new), 1), 1);
+        let _ = eng.matmul("l", &w, &x, 128, 128, 2); // flushes the swap
+        let pl = eng.programmed.get("l").expect("programmed");
+        let d = pl.chunks[1].drift.as_ref().expect("drift state");
+        assert_eq!(
+            d.comp_env, s.env_rad,
+            "the reprogrammed chunk calibrates at the current envelope"
+        );
+        let d0 = pl.chunks[0].drift.as_ref().expect("drift state");
+        assert_eq!(d0.comp_env, 0.0, "unchanged chunks keep their calibration");
+
+        // ...so a forced recalibration only touches the 3 unchanged chunks
+        assert_eq!(eng.recalibrate_thermal(), 3);
+    }
+
+    #[test]
+    fn mask_update_before_programming_defers_to_first_program() {
+        let cfg = small_cfg(crate::config::SparsitySupport::FULL);
+        let (w, x) = problem(128, 128, 2, 33);
+        let (_, new) = swap_masks();
+        let mut eng = PhotonicEngine::new(cfg.clone(), drift_opts());
+        assert_eq!(
+            eng.apply_mask_update(one_layer(&new), 3),
+            0,
+            "nothing programmed yet, so nothing is dirty"
+        );
+        let y = eng.matmul("l", &w, &x, 128, 128, 2);
+        let pl = eng.programmed.get("l").expect("programmed");
+        assert!(pl.chunks.iter().all(|c| c.plan.mask_gen == 3), "first program stamps");
+
+        let mut fresh = PhotonicEngine::new(cfg, drift_opts());
+        fresh.set_masks(one_layer(&new));
+        assert_eq!(y, fresh.matmul("l", &w, &x, 128, 128, 2));
     }
 
     #[test]

@@ -163,6 +163,17 @@ pub struct ServerMetrics {
     /// Per-replica shard queue depth (enqueued + executing),
     /// overwritten by the dispatcher each supervision pass.
     replica_queue_depth: Vec<AtomicU64>,
+    /// Per-replica active mask generation (`scatter_mask_generation`);
+    /// 0 is the deployment baseline, hot-swapped artifacts carry the
+    /// monotone ids stamped by the DST loop.
+    mask_generation: Vec<AtomicU64>,
+    /// Mask artifacts promoted by the hot-swap canary, across replicas.
+    mask_swaps: AtomicU64,
+    /// Mask artifacts rejected by the canary and rolled back.
+    mask_rollbacks: AtomicU64,
+    /// Rerouter hold-power estimate (mW) of the newest promoted
+    /// artifact; the deployment baseline reports 0 (unknown).
+    mask_power_mw: Mutex<f64>,
 }
 
 /// Upper bounds of the batch-occupancy histogram buckets (requests per
@@ -223,6 +234,10 @@ impl ServerMetrics {
             steals: AtomicU64::new(0),
             replica_heat_milli: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
             replica_queue_depth: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            mask_generation: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            mask_swaps: AtomicU64::new(0),
+            mask_rollbacks: AtomicU64::new(0),
+            mask_power_mw: Mutex::new(0.0),
         }
     }
 
@@ -315,6 +330,28 @@ impl ServerMetrics {
         }
     }
 
+    /// One mask artifact promoted by the hot-swap canary.
+    pub fn note_mask_swap(&self) {
+        self.mask_swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One mask artifact rejected by the canary and rolled back.
+    pub fn note_mask_rollback(&self) {
+        self.mask_rollbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Overwrite replica `widx`'s active mask generation gauge.
+    pub fn set_mask_generation(&self, widx: usize, generation: u64) {
+        if let Some(slot) = self.mask_generation.get(widx) {
+            slot.store(generation, Ordering::Relaxed);
+        }
+    }
+
+    /// Overwrite the promoted-artifact rerouter-power gauge (mW).
+    pub fn set_mask_power_mw(&self, mw: f64) {
+        *self.mask_power_mw.lock().unwrap() = mw;
+    }
+
     /// Overwrite worker `widx`'s cumulative energy ledger snapshot.
     pub fn set_worker_energy(&self, widx: usize, energy_mj: f64, busy_ms: f64) {
         if let Some(slot) = self.energy.get(widx) {
@@ -396,6 +433,14 @@ impl ServerMetrics {
                 .iter()
                 .map(|s| s.load(Ordering::Relaxed))
                 .collect(),
+            mask_generation: self
+                .mask_generation
+                .iter()
+                .map(|s| s.load(Ordering::Relaxed))
+                .collect(),
+            mask_swaps: self.mask_swaps.load(Ordering::Relaxed),
+            mask_rollbacks: self.mask_rollbacks.load(Ordering::Relaxed),
+            mask_power_mw: *self.mask_power_mw.lock().unwrap(),
             requests,
             batches,
             mean_batch_occupancy: if occupancy_count > 0 {
@@ -448,6 +493,14 @@ pub struct MetricsSnapshot {
     pub replica_heat_milli: Vec<u64>,
     /// Per-replica shard queue depth at the last supervision pass.
     pub replica_queue_depth: Vec<u64>,
+    /// Per-replica active mask generation (0 = deployment baseline).
+    pub mask_generation: Vec<u64>,
+    /// Mask artifacts promoted by the hot-swap canary.
+    pub mask_swaps: u64,
+    /// Mask artifacts rejected by the canary and rolled back.
+    pub mask_rollbacks: u64,
+    /// Rerouter power estimate (mW) of the newest promoted artifact.
+    pub mask_power_mw: f64,
     pub requests: usize,
     pub batches: usize,
     /// Per-bin batch-occupancy counts (bounds [`OCCUPANCY_BUCKETS`] plus
@@ -670,6 +723,27 @@ mod tests {
         assert_eq!(s.steals, 1);
         assert_eq!(s.replica_heat_milli, vec![0, 7, 0]);
         assert_eq!(s.replica_queue_depth, vec![0, 0, 5]);
+    }
+
+    #[test]
+    fn mask_swap_counters_and_generation_gauges() {
+        let m = ServerMetrics::new(2);
+        let s = m.snapshot();
+        assert_eq!(s.mask_generation, vec![0, 0], "deployment baseline is generation 0");
+        assert_eq!((s.mask_swaps, s.mask_rollbacks), (0, 0));
+        assert_eq!(s.mask_power_mw, 0.0);
+        m.note_mask_swap();
+        m.set_mask_generation(0, 3);
+        m.set_mask_power_mw(18.5);
+        m.note_mask_rollback();
+        m.set_mask_generation(1, 3);
+        m.set_mask_generation(1, 2); // rollback overwrites, not max
+        m.set_mask_generation(9, 7); // out-of-range slots are ignored
+        let s = m.snapshot();
+        assert_eq!(s.mask_generation, vec![3, 2]);
+        assert_eq!(s.mask_swaps, 1);
+        assert_eq!(s.mask_rollbacks, 1);
+        assert!((s.mask_power_mw - 18.5).abs() < 1e-12);
     }
 
     #[test]

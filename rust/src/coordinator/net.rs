@@ -776,6 +776,23 @@ fn render_prometheus(inference: &InferenceServer, stats: &HttpStats) -> String {
     }
     let _ = writeln!(
         o,
+        "# HELP scatter_mask_generation Active mask artifact generation per replica (0 = deployment baseline)."
+    );
+    let _ = writeln!(o, "# TYPE scatter_mask_generation gauge");
+    for (widx, g) in snap.mask_generation.iter().enumerate() {
+        let _ = writeln!(o, "scatter_mask_generation{{worker=\"{widx}\"}} {g}");
+    }
+    let _ = writeln!(o, "# HELP scatter_mask_swaps_total Mask generations promoted after a passing canary.");
+    let _ = writeln!(o, "# TYPE scatter_mask_swaps_total counter");
+    let _ = writeln!(o, "scatter_mask_swaps_total {}", snap.mask_swaps);
+    let _ = writeln!(o, "# HELP scatter_mask_rollbacks_total Mask candidates rolled back by a failing canary.");
+    let _ = writeln!(o, "# TYPE scatter_mask_rollbacks_total counter");
+    let _ = writeln!(o, "scatter_mask_rollbacks_total {}", snap.mask_rollbacks);
+    let _ = writeln!(o, "# HELP scatter_mask_power_mw Estimated rerouter power of the active mask artifact.");
+    let _ = writeln!(o, "# TYPE scatter_mask_power_mw gauge");
+    let _ = writeln!(o, "scatter_mask_power_mw {}", snap.mask_power_mw);
+    let _ = writeln!(
+        o,
         "# HELP scatter_brownout_active Workers currently over their phase-error budget."
     );
     let _ = writeln!(o, "# TYPE scatter_brownout_active gauge");

@@ -72,6 +72,26 @@
 //! load drifts toward thermally settled hardware *before* anyone trips
 //! a brownout.
 //!
+//! ## In-serving DST + mask hot-swap (the co-design loop)
+//!
+//! With `ServerConfig::dst` enabled, the dispatcher steps a resumable
+//! [`DstJob`] on its idle headroom — paced by `dst.period` and gated on
+//! at least one idle, non-browned-out replica — feeding it the weight
+//! column statistics (fixed: serving never retrains) and the average
+//! power from the live energy ledger. Every candidate the job emits
+//! becomes a versioned [`MaskArtifact`] (monotone generation id,
+//! content-hashed, optionally persisted atomically) published to the
+//! workers. Each worker canaries the artifact at its next **shard
+//! boundary**: requests in flight finished on the old generation, the
+//! next shard has not started, so the cutover is atomic from the
+//! client's point of view. The canary forwards a fixed probe batch on
+//! the old and the new generation and promotes only if the argmax
+//! agreement clears `dst.canary_threshold`; a failing candidate is
+//! rolled back (the engine reprograms exactly the affected chunks back)
+//! and vetoed for every peer. No request is ever dropped, delayed past
+//! one probe pass, or served by a half-programmed engine on either
+//! path.
+//!
 //! Overload behavior (the part an open-loop deployment lives or dies
 //! by):
 //!
@@ -103,11 +123,15 @@ use crate::coordinator::engine::{EngineOptions, PhotonicEngine};
 use crate::coordinator::faults::{FaultAction, FaultPlan};
 use crate::coordinator::metrics::{MetricsSnapshot, ServerMetrics, ThermalGauges};
 use crate::coordinator::scheduler::{plan_shards, ClusterConfig, ReplicaState};
+use crate::devices::{Mzi, MziSpec};
 use crate::nn::{Model, Tensor};
-use crate::thermal::{DriftConfig, ThermalPolicy};
-use crate::util::Json;
+use crate::runtime::MaskArtifact;
+use crate::sparsity::{chunked_col_norms, DstJob};
+use crate::thermal::{DriftConfig, GammaModel, ThermalPolicy};
+use crate::util::{Json, XorShiftRng};
 use crate::AcceleratorConfig;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -141,6 +165,9 @@ pub struct ServerConfig {
     pub(crate) faults: FaultPlan,
     /// Cluster-scheduler knobs (work stealing).
     pub(crate) cluster: ClusterConfig,
+    /// In-serving DST + mask hot-swap (the co-design loop). Disabled by
+    /// default: the deployed masks serve untouched.
+    pub(crate) dst: DstServerConfig,
 }
 
 /// Thermal-drift runtime knobs for the serving stack. Each engine
@@ -161,6 +188,47 @@ pub struct ThermalServerConfig {
     /// A test/bench hook: force exactly one replica hot and watch the
     /// router steer load off it.
     pub drift_only_worker: Option<usize>,
+}
+
+/// In-serving DST knobs — the serving half of the co-design loop. When
+/// enabled, the dispatcher steps a power-optimizing [`DstJob`] on its
+/// idle headroom, publishes each candidate as a versioned
+/// [`MaskArtifact`], and workers canary + hot-swap it at their next
+/// shard boundary.
+#[derive(Debug, Clone)]
+pub struct DstServerConfig {
+    /// `true` runs the DST loop; `false` (default) serves the deployed
+    /// masks untouched.
+    pub enabled: bool,
+    /// Minimum spacing between DST rounds.
+    pub period: Duration,
+    /// Prune/grow rounds before the cosine schedule ends the job.
+    pub rounds: usize,
+    /// Canary gate: the fraction of probe images whose argmax must
+    /// agree between the old and the new generation for a candidate to
+    /// promote. 0 disables the gate; 1 demands exact agreement.
+    pub canary_threshold: f64,
+    /// Fault-injection hook (`scatter bench swap` / CI): force every
+    /// candidate's canary verdict to *fail*, so the rollback path runs
+    /// deterministically. The mechanical swap — apply, probe, roll
+    /// back, veto — still executes for real.
+    pub inject_bad_canary: bool,
+    /// `Some(dir)` persists every emitted generation atomically as
+    /// `mask_gen_NNNNNN.json` (provenance; never serving-critical).
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl Default for DstServerConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            period: Duration::from_millis(20),
+            rounds: 40,
+            canary_threshold: 0.5,
+            inject_bad_canary: false,
+            artifact_dir: None,
+        }
+    }
 }
 
 /// Supervision policy: how failures are detected and how hard the
@@ -204,6 +272,7 @@ impl Default for ServerConfig {
             supervisor: SupervisorConfig::default(),
             faults: FaultPlan::none(),
             cluster: ClusterConfig::default(),
+            dst: DstServerConfig::default(),
         }
     }
 }
@@ -257,6 +326,10 @@ impl ServerConfig {
         &self.faults
     }
 
+    pub fn dst(&self) -> &DstServerConfig {
+        &self.dst
+    }
+
     /// Serialize for `--config` files. Durations are milliseconds;
     /// `max_restarts`/`deadline_ms` use `null` for "unbounded"/"none";
     /// the fault plan round-trips through its spec grammar. Lossy only
@@ -290,6 +363,7 @@ impl ServerConfig {
                 },
             ),
             ("thermal", thermal_to_json(&self.thermal)),
+            ("dst", dst_to_json(&self.dst)),
         ];
         if !self.faults.is_empty() {
             pairs.push(("faults", Json::Str(self.faults.describe().join(","))));
@@ -337,6 +411,7 @@ impl ServerConfig {
                     })
                 }
                 "thermal" => b = b.thermal(thermal_from_json(val)?),
+                "dst" => b = b.dst(dst_from_json(val)?),
                 "faults" => {
                     let spec = val.as_str().ok_or_else(|| {
                         crate::Error::Config(
@@ -445,6 +520,58 @@ fn thermal_from_json(v: &Json) -> crate::Result<ThermalServerConfig> {
         }
     };
     Ok(t)
+}
+
+fn dst_to_json(d: &DstServerConfig) -> Json {
+    let mut pairs = vec![
+        ("enabled", Json::Bool(d.enabled)),
+        ("period_ms", Json::Num(d.period.as_millis() as f64)),
+        ("rounds", Json::Num(d.rounds as f64)),
+        ("canary_threshold", Json::Num(d.canary_threshold)),
+    ];
+    if d.inject_bad_canary {
+        pairs.push(("inject_bad_canary", Json::Bool(true)));
+    }
+    if let Some(dir) = &d.artifact_dir {
+        pairs.push(("artifact_dir", Json::Str(dir.display().to_string())));
+    }
+    Json::obj(pairs)
+}
+
+fn dst_from_json(v: &Json) -> crate::Result<DstServerConfig> {
+    let Json::Obj(map) = v else {
+        return Err(crate::Error::Config(
+            "server config key \"dst\" must be an object".into(),
+        ));
+    };
+    let mut d = DstServerConfig::default();
+    for (key, val) in map {
+        match key.as_str() {
+            "enabled" => d.enabled = cfg_bool(val, "dst.enabled")?,
+            "period_ms" => {
+                d.period = Duration::from_millis(cfg_u64(val, "dst.period_ms")?)
+            }
+            "rounds" => d.rounds = cfg_usize(val, "dst.rounds")?,
+            "canary_threshold" => {
+                d.canary_threshold = cfg_f64(val, "dst.canary_threshold")?
+            }
+            "inject_bad_canary" => {
+                d.inject_bad_canary = cfg_bool(val, "dst.inject_bad_canary")?
+            }
+            "artifact_dir" => {
+                let s = val.as_str().ok_or_else(|| {
+                    crate::Error::Config("dst.artifact_dir must be a string".into())
+                })?;
+                d.artifact_dir = Some(PathBuf::from(s));
+            }
+            other => {
+                return Err(crate::Error::Config(format!(
+                    "unknown dst config key {other:?}"
+                )))
+            }
+        }
+    }
+    Ok(d)
 }
 
 fn cfg_f64(v: &Json, key: &str) -> crate::Result<f64> {
@@ -561,6 +688,12 @@ impl ServerConfigBuilder {
         self
     }
 
+    /// In-serving DST + mask hot-swap knobs.
+    pub fn dst(mut self, d: DstServerConfig) -> Self {
+        self.cfg.dst = d;
+        self
+    }
+
     /// Enable work stealing between replica queues.
     pub fn steal(mut self, on: bool) -> Self {
         self.cfg.cluster.steal = on;
@@ -590,6 +723,17 @@ impl ServerConfigBuilder {
                 cfg.supervisor.watchdog.as_millis(),
                 cfg.batch_timeout.as_millis()
             )));
+        }
+        if cfg.dst.enabled {
+            if !(0.0..=1.0).contains(&cfg.dst.canary_threshold) {
+                return Err(crate::Error::Config(format!(
+                    "dst.canary_threshold ({}) must be within [0, 1]",
+                    cfg.dst.canary_threshold
+                )));
+            }
+            if cfg.dst.rounds == 0 {
+                return Err(crate::Error::Config("dst.rounds must be >= 1".into()));
+            }
         }
         Ok(cfg)
     }
@@ -709,6 +853,14 @@ pub struct ServerReport {
     pub steals: u64,
     /// Shards routed to each replica slot by the cluster scheduler.
     pub routed: Vec<u64>,
+    /// Mask artifacts promoted by the hot-swap canary.
+    pub mask_swaps: u64,
+    /// Mask artifacts rejected by the canary and rolled back.
+    pub mask_rollbacks: u64,
+    /// Per-replica active mask generation at shutdown (0 = baseline).
+    pub mask_generation: Vec<u64>,
+    /// Rerouter power estimate (mW) of the newest promoted artifact.
+    pub mask_power_mw: f64,
 }
 
 /// A shard of a dynamic batch, tagged with the full batch size (clients
@@ -737,6 +889,10 @@ const SUPERVISE_TICK: Duration = Duration::from_millis(10);
 /// Bounded so steal attempts, generation checks, and shutdown stay
 /// live even if a notify is missed.
 const WORKER_POLL: Duration = Duration::from_millis(10);
+
+/// Initial death rate of the in-serving DST job (the cosine schedule
+/// anneals it to 0 over `DstServerConfig::rounds`).
+const DST_ALPHA0: f64 = 0.3;
 
 /// One replica slot's persistent shard queue. Outlives worker
 /// generations: a respawned worker resumes the backlog its predecessor
@@ -862,6 +1018,18 @@ impl WorkerHealth {
     }
 }
 
+/// One DST candidate in flight through the hot-swap protocol. The
+/// dispatcher publishes it; every worker reads it at its next shard
+/// boundary. `rejected` fans one replica's canary failure out to the
+/// pool, so a bad generation is tested once, not once per replica.
+struct PendingSwap {
+    artifact: MaskArtifact,
+    /// Force the canary verdict to fail (rollback fault injection).
+    bad_canary: bool,
+    /// Set by the first worker whose canary rejects this generation.
+    rejected: AtomicBool,
+}
+
 /// Everything needed to (re)build an engine worker — retained by the
 /// dispatcher so the supervisor can respawn with a fresh engine.
 struct WorkerContext {
@@ -879,6 +1047,10 @@ struct WorkerContext {
     queues: Vec<Arc<ReplicaQueue>>,
     /// Idle replicas steal from the deepest peer queue.
     steal: bool,
+    /// In-serving DST knobs (the co-design loop's serving half).
+    dst: DstServerConfig,
+    /// Newest mask artifact awaiting per-replica canary + cutover.
+    swap: Mutex<Option<Arc<PendingSwap>>>,
 }
 
 /// One live worker generation.
@@ -1007,9 +1179,18 @@ fn run_engine_worker(
             );
         }
     }
+    // canary probe: identical on every replica (fixed seed), so a
+    // candidate generation is judged on the same inputs everywhere
+    let probe = if ctx.dst.enabled { probe_batch(&ctx.model) } else { Vec::new() };
     let started = Instant::now();
     let mut served: u64 = 0;
     while let Some(shard) = next_shard(&ctx, widx, my_gen) {
+        // shard boundary: everything in flight finished on the old
+        // generation and the popped shard has not started — the one
+        // point where a mask cutover is atomic for clients
+        if ctx.dst.enabled {
+            maybe_swap_masks(&ctx, widx, &mut engine, &probe);
+        }
         let seq = shard.seq;
         let batch_size = shard.batch_size;
         let home = shard.home;
@@ -1127,6 +1308,62 @@ fn run_engine_worker(
                 ctx.metrics.set_worker_thermal(widx, ThermalGauges::from(s));
             }
         }
+    }
+}
+
+/// Probe images for the swap canary, with no distribution assumptions
+/// beyond the model's input shape. Every replica derives the same batch
+/// from the same seed, so a candidate generation gets one verdict, not
+/// one per replica's traffic mix.
+const PROBE_BATCH: usize = 4;
+
+fn probe_batch(model: &Model) -> Vec<Tensor> {
+    let shape = model.input_shape.clone();
+    let n: usize = shape.iter().product();
+    let mut rng = XorShiftRng::new(0x5CA7_7E12);
+    (0..PROBE_BATCH)
+        .map(|_| Tensor::from_vec(&shape, (0..n).map(|_| rng.uniform()).collect()))
+        .collect()
+}
+
+/// Per-shard-boundary hot-swap: if a newer generation is pending,
+/// canary it on this replica's engine between shards. The probe runs
+/// once on the old generation and once on the new (the second pass also
+/// flushes the incremental reprogram, so the next shard pays nothing);
+/// the candidate promotes only if the argmax agreement clears the
+/// configured threshold, otherwise the engine reprograms the affected
+/// chunks back and the generation is vetoed for every peer.
+fn maybe_swap_masks(
+    ctx: &WorkerContext,
+    widx: usize,
+    engine: &mut PhotonicEngine,
+    probe: &[Tensor],
+) {
+    let Some(pending) = lock_clean(&ctx.swap).clone() else { return };
+    if pending.rejected.load(Ordering::Acquire)
+        || pending.artifact.generation <= engine.mask_generation()
+    {
+        return;
+    }
+    let before = ctx.model.forward_batch(probe.to_vec(), engine);
+    let old_masks = engine.masks().clone();
+    let old_gen = engine.mask_generation();
+    engine.apply_mask_update(pending.artifact.masks.clone(), pending.artifact.generation);
+    let after = ctx.model.forward_batch(probe.to_vec(), engine);
+    let agree = before.iter().zip(&after).filter(|(b, a)| a.argmax() == b.argmax()).count();
+    let promote = !pending.bad_canary
+        && agree as f64 >= ctx.dst.canary_threshold * probe.len() as f64;
+    if promote {
+        ctx.metrics.note_mask_swap();
+        ctx.metrics.set_mask_generation(widx, pending.artifact.generation);
+        ctx.metrics.set_mask_power_mw(pending.artifact.power_mw);
+    } else {
+        // roll back to the generation that was serving; the veto stops
+        // peers from re-testing a known-bad candidate
+        engine.apply_mask_update(old_masks, old_gen);
+        pending.rejected.store(true, Ordering::Release);
+        ctx.metrics.note_mask_rollback();
+        ctx.metrics.set_mask_generation(widx, old_gen);
     }
 }
 
@@ -1442,6 +1679,30 @@ fn run_dispatcher(
 ) -> ServerReport {
     let n_workers = server_cfg.workers.max(1);
     let sup = server_cfg.supervisor.clone();
+    // co-design loop setup. Weight-column statistics are fixed for the
+    // whole run (serving never retrains), so compute them once while
+    // the model is still ours to borrow mutably; the DST job wraps the
+    // deployed masks and re-selects columns for minimum power at the
+    // same density.
+    let dst_cfg = server_cfg.dst.clone();
+    let mut model = model;
+    let mut col_stats: BTreeMap<String, Vec<Vec<f64>>> = BTreeMap::new();
+    if dst_cfg.enabled {
+        let (rows, cols) = cfg.chunk_shape();
+        let dims: BTreeMap<String, (usize, usize)> =
+            model.matmul_layers().into_iter().map(|(n, o, i)| (n, (o, i))).collect();
+        model.visit_weights_mut(|name, w, _| {
+            if let Some(&(o, i)) = dims.get(name) {
+                col_stats.insert(name.to_string(), chunked_col_norms(w, o, i, rows, cols));
+            }
+        });
+    }
+    let mut dst_job: Option<DstJob> = (dst_cfg.enabled && !masks.is_empty()).then(|| {
+        let mzi = Mzi::new(MziSpec::low_power(), cfg.l_s, &GammaModel::paper());
+        DstJob::new(masks.clone(), DST_ALPHA0, dst_cfg.rounds, cfg.k2, mzi)
+    });
+    let mut next_generation: u64 = 1;
+    let mut last_dst_round = Instant::now();
     let queues: Vec<Arc<ReplicaQueue>> =
         (0..n_workers).map(|_| Arc::new(ReplicaQueue::new())).collect();
     let ctx = Arc::new(WorkerContext {
@@ -1456,6 +1717,8 @@ fn run_dispatcher(
         epoch: Instant::now(),
         queues,
         steal: server_cfg.cluster.steal,
+        dst: server_cfg.dst.clone(),
+        swap: Mutex::new(None),
     });
     let mut slots: Vec<WorkerSlot> = (0..n_workers)
         .map(|widx| WorkerSlot {
@@ -1471,6 +1734,46 @@ fn run_dispatcher(
     let mut inbox_open = true;
     loop {
         supervise(&mut slots, &ctx, &sup, &mut retry_q);
+        // co-design loop: step the DST job on the dispatcher's idle
+        // headroom — paced by the period and gated on an idle,
+        // non-browned-out replica, so background mask optimization
+        // never displaces traffic or leans on a drifted board
+        if let Some(job) = dst_job.as_mut() {
+            let idle_cool = || {
+                slots.iter().any(|s| {
+                    s.gen.as_ref().is_some_and(|g| {
+                        !g.health.brownout.load(Ordering::Acquire)
+                            && ctx.queues[s.widx].in_flight() == 0
+                    })
+                })
+            };
+            if !job.is_done()
+                && last_dst_round.elapsed() >= dst_cfg.period
+                && idle_cool()
+            {
+                last_dst_round = Instant::now();
+                let p_avg_w = metrics.snapshot().p_avg_w;
+                if let Some(cand) = job.step(&col_stats, p_avg_w) {
+                    let artifact = MaskArtifact::new(
+                        next_generation,
+                        cand.masks,
+                        cand.power_mw,
+                        cand.observed_power_w,
+                    );
+                    if let Some(dir) = &dst_cfg.artifact_dir {
+                        // provenance only: a full disk must never take
+                        // serving down with it
+                        let _ = artifact.save_atomic(dir);
+                    }
+                    next_generation += 1;
+                    *lock_clean(&ctx.swap) = Some(Arc::new(PendingSwap {
+                        artifact,
+                        bad_canary: dst_cfg.inject_bad_canary,
+                        rejected: AtomicBool::new(false),
+                    }));
+                }
+            }
+        }
         // due retries seed the batch ahead of fresh arrivals
         let mut batch: Vec<Request> = Vec::new();
         let now = Instant::now();
@@ -1582,6 +1885,10 @@ fn run_dispatcher(
         recal_chunks: snap.recal_chunks,
         steals: snap.steals,
         routed: snap.routed,
+        mask_swaps: snap.mask_swaps,
+        mask_rollbacks: snap.mask_rollbacks,
+        mask_generation: snap.mask_generation,
+        mask_power_mw: snap.mask_power_mw,
     }
 }
 
@@ -1627,6 +1934,22 @@ mod tests {
                     .watchdog(Duration::from_millis(100)),
                 "watchdog",
             ),
+            (
+                ServerConfig::builder().dst(DstServerConfig {
+                    enabled: true,
+                    canary_threshold: 1.5,
+                    ..Default::default()
+                }),
+                "canary_threshold",
+            ),
+            (
+                ServerConfig::builder().dst(DstServerConfig {
+                    enabled: true,
+                    rounds: 0,
+                    ..Default::default()
+                }),
+                "rounds",
+            ),
         ];
         for (builder, needle) in cases {
             match builder.build() {
@@ -1657,6 +1980,14 @@ mod tests {
                 drift_only_worker: Some(1),
             })
             .faults(FaultPlan::parse("panic@w0:s2", 4).expect("spec"))
+            .dst(DstServerConfig {
+                enabled: true,
+                period: Duration::from_millis(7),
+                rounds: 12,
+                canary_threshold: 0.75,
+                inject_bad_canary: true,
+                artifact_dir: Some(PathBuf::from("/tmp/masks")),
+            })
             .build()
             .expect("valid config");
         let text = cfg.to_json().to_string();
@@ -1677,8 +2008,18 @@ mod tests {
         assert_eq!(back.thermal.brownout_budget_rad, Some(0.02));
         assert_eq!(back.thermal.drift_only_worker, Some(1));
         assert_eq!(back.faults.describe(), cfg.faults.describe());
+        assert!(back.dst.enabled);
+        assert_eq!(back.dst.period, Duration::from_millis(7));
+        assert_eq!(back.dst.rounds, 12);
+        assert!((back.dst.canary_threshold - 0.75).abs() < 1e-12);
+        assert!(back.dst.inject_bad_canary);
+        assert_eq!(back.dst.artifact_dir, Some(PathBuf::from("/tmp/masks")));
         // typos must not silently fall back to defaults
         assert!(ServerConfig::from_json("{\"max_batcch\": 4}").is_err());
+        assert!(
+            ServerConfig::from_json("{\"dst\": {\"perod_ms\": 5}}").is_err(),
+            "unknown dst keys must not be dropped silently"
+        );
         // file configs pass the same validation as the builder
         assert!(ServerConfig::from_json("{\"workers\": 0}").is_err());
     }
@@ -2140,5 +2481,186 @@ mod tests {
             report.recalibrations >= 1,
             "policy is Off, so any recalibration is brownout-forced: {report:?}"
         );
+    }
+
+    /// Offline twin of a serving replica at one mask generation: same
+    /// config, same protected readout, same masks.
+    fn offline_at(
+        model: &Model,
+        cfg: &AcceleratorConfig,
+        masks: BTreeMap<String, crate::sparsity::LayerMask>,
+    ) -> PhotonicEngine {
+        let mut e = PhotonicEngine::new(cfg.clone(), EngineOptions::IDEAL);
+        e.set_masks(masks);
+        if let Some((last, _, _)) = model.matmul_layers().last() {
+            e.set_protected([last.clone()].into_iter().collect());
+        }
+        e
+    }
+
+    /// Tentpole: the co-design loop promotes candidate masks while
+    /// traffic flows — at least two generations cut over at shard
+    /// boundaries, reply conservation holds (nothing shed, expired, or
+    /// lost to the swap), and every reply is bit-identical to an
+    /// offline forward of whichever persisted generation was active.
+    #[test]
+    fn dst_promotes_masks_under_load_with_bit_exact_replies() {
+        let model = crate::nn::models::cnn3();
+        let cfg = test_cfg();
+        let masks = crate::bench::common::build_masks(&model, &cfg, 0.6);
+        assert!(!masks.is_empty(), "cnn3 must expose a maskable middle layer");
+        let dir = std::env::temp_dir()
+            .join(format!("scatter_swap_promote_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let server = InferenceServer::spawn(
+            model.clone(),
+            cfg.clone(),
+            EngineOptions::IDEAL,
+            masks.clone(),
+            ServerConfig::builder()
+                .max_batch(2)
+                .batch_timeout(Duration::from_millis(1))
+                .dst(DstServerConfig {
+                    enabled: true,
+                    period: Duration::from_millis(1),
+                    rounds: 30,
+                    // the canary gate itself is exercised by the
+                    // rollback test below; 0 makes promotion
+                    // deterministic here (argmax agreement of an
+                    // untrained net under a real mask delta is not
+                    // predictable)
+                    canary_threshold: 0.0,
+                    inject_bad_canary: false,
+                    artifact_dir: Some(dir.clone()),
+                })
+                .build()
+                .expect("config"),
+        );
+        // waves of traffic with idle gaps: the dispatcher only steps
+        // DST on an idle, cool replica, and the worker only cuts over
+        // at a shard boundary
+        let mut replies: Vec<(Tensor, Vec<f64>)> = Vec::new();
+        let mut waves = 0usize;
+        while server.snapshot().mask_swaps < 2 && waves < 400 {
+            let imgs: Vec<Tensor> =
+                (0..2).map(|i| sample_img(waves % 10, i)).collect();
+            let rxs: Vec<_> = imgs
+                .iter()
+                .map(|img| server.submit(img.clone()).expect("admitted"))
+                .collect();
+            for (img, rx) in imgs.into_iter().zip(rxs) {
+                let reply = rx
+                    .recv_timeout(Duration::from_secs(120))
+                    .expect("reply")
+                    .expect("served across swaps");
+                replies.push((img, reply.logits));
+            }
+            waves += 1;
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let report = server.shutdown().expect("report");
+        assert!(
+            report.mask_swaps >= 2,
+            "at least two generations promoted: {report:?}"
+        );
+        assert_eq!(report.mask_rollbacks, 0, "every canary passed");
+        assert!(report.mask_generation[0] >= 2, "gauge tracks the cutovers");
+        assert!(report.mask_power_mw > 0.0, "promoted artifact carries power");
+        assert_eq!(report.requests as usize, replies.len());
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.expired, 0);
+        assert_eq!(report.worker_lost, 0, "no drops attributable to swaps");
+        // bit-exactness: one offline engine per deployed generation
+        // (baseline + every persisted artifact, in generation order);
+        // the active generation only moves forward, so a monotone
+        // cursor over that list must explain every reply
+        let mut engines = vec![offline_at(&model, &cfg, masks)];
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .expect("artifact dir")
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        paths.sort();
+        for p in &paths {
+            let a = MaskArtifact::load(p).expect("persisted artifact verifies");
+            engines.push(offline_at(&model, &cfg, a.masks));
+        }
+        assert!(engines.len() >= 3, "baseline + >=2 persisted generations");
+        let mut cur = 0usize;
+        'replies: for (img, logits) in replies {
+            for idx in cur..engines.len() {
+                if model.forward(img.clone(), &mut engines[idx]).data == logits {
+                    cur = idx;
+                    continue 'replies;
+                }
+            }
+            panic!("reply matches no deployed generation (cursor {cur})");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Tentpole: an injected failing canary rolls the candidate back at
+    /// the shard boundary — no promotion, the generation gauge stays at
+    /// the deployment baseline, no traffic is dropped, and every reply
+    /// is still bit-identical to the baseline offline forward.
+    #[test]
+    fn bad_canary_rolls_back_without_dropping_traffic() {
+        let model = crate::nn::models::cnn3();
+        let cfg = test_cfg();
+        let masks = crate::bench::common::build_masks(&model, &cfg, 0.6);
+        let server = InferenceServer::spawn(
+            model.clone(),
+            cfg.clone(),
+            EngineOptions::IDEAL,
+            masks.clone(),
+            ServerConfig::builder()
+                .max_batch(2)
+                .batch_timeout(Duration::from_millis(1))
+                .dst(DstServerConfig {
+                    enabled: true,
+                    period: Duration::from_millis(1),
+                    rounds: 20,
+                    canary_threshold: 0.5,
+                    inject_bad_canary: true,
+                    artifact_dir: None,
+                })
+                .build()
+                .expect("config"),
+        );
+        let mut offline = offline_at(&model, &cfg, masks);
+        let mut waves = 0usize;
+        let mut served = 0u64;
+        while server.snapshot().mask_rollbacks < 1 && waves < 400 {
+            let imgs: Vec<Tensor> =
+                (0..2).map(|i| sample_img(waves % 10, i)).collect();
+            let rxs: Vec<_> = imgs
+                .iter()
+                .map(|img| server.submit(img.clone()).expect("admitted"))
+                .collect();
+            for (img, rx) in imgs.into_iter().zip(rxs) {
+                let want = model.forward(img, &mut offline);
+                let reply = rx
+                    .recv_timeout(Duration::from_secs(120))
+                    .expect("reply")
+                    .expect("served across the rollback");
+                assert_eq!(
+                    reply.logits, want.data,
+                    "rollback must restore the baseline bit-for-bit"
+                );
+                served += 1;
+            }
+            waves += 1;
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let report = server.shutdown().expect("report");
+        assert!(report.mask_rollbacks >= 1, "canary veto must fire: {report:?}");
+        assert_eq!(report.mask_swaps, 0, "a vetoed candidate never promotes");
+        assert_eq!(report.mask_generation, vec![0], "gauge stays at baseline");
+        assert_eq!(report.requests, served);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.expired, 0);
+        assert_eq!(report.worker_lost, 0, "rollback drops nothing");
+        assert_eq!(report.worker_restarts, 0, "rollback is not a crash path");
     }
 }

@@ -64,6 +64,12 @@ pub struct ChunkPlan {
     any_bias: bool,
     /// Per-row PD-noise std for this chunk (0 when noise is off).
     pub noise_std: f64,
+    /// Mask generation this plan was compiled from (0 = baseline
+    /// deployment masks). Stamped by the engine at `program_layer` /
+    /// incremental-reprogram time and preserved across thermal rebakes,
+    /// so a hot-swapped chunk is attributable to the artifact that
+    /// produced it.
+    pub mask_gen: u64,
 }
 
 impl ChunkPlan {
@@ -143,7 +149,7 @@ impl ChunkPlan {
         }
 
         let panel = PackedPanel::pack(&w, rows.len(), cols.len());
-        Self { rows, cols, w, panel, bias, any_bias, noise_std }
+        Self { rows, cols, w, panel, bias, any_bias, noise_std, mask_gen: 0 }
     }
 
     /// Active input columns (the gather count per streamed column block).

@@ -5,8 +5,8 @@
 //!         [--engine-threads N] [--max-batch N] [--max-in-flight N]
 //!         [--deadline-ms N] [--density D] [--steal]
 //!         [--thermal off|threshold[:RAD]|periodic[:N]] [--brownout RAD]
-//!         [--faults SPEC] [--watchdog-ms N]
-//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|chaos|all>
+//!         [--faults SPEC] [--watchdog-ms N] [--dst on[:PERIOD_MS]|off]
+//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|chaos|swap|all>
 //!         [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8] [--stages]
 //!         [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]
 //!         [--workers N] [--max-batch 1,8] [--replicas 1,4] [--steal] [--seed N]
@@ -34,7 +34,9 @@
 //! `BENCH_server.json`; `bench drift` measures accuracy/recalibration
 //! under the thermal-drift schedule and writes `BENCH_drift.json`;
 //! `bench chaos` kills every worker once (seeded `FaultPlan`) under
-//! concurrent load, measures recovery, and writes `BENCH_chaos.json`.
+//! concurrent load, measures recovery, and writes `BENCH_chaos.json`;
+//! `bench swap` runs in-serving DST mask hot-swap (promote + injected
+//! bad-canary rollback) under load and writes `BENCH_swap.json`.
 //!
 //! `--faults` takes the grammar accepted by `FaultPlan::parse`
 //! (e.g. `panic@w0:s3,stall@w1:s5:200ms` or `kill-each:42`).
@@ -42,8 +44,8 @@
 use scatter::bench::{self, BenchCtx};
 use scatter::config::AcceleratorConfig;
 use scatter::coordinator::{
-    EngineOptions, FaultPlan, HttpServer, InferenceServer, NetConfig, ServerConfig,
-    ThermalServerConfig,
+    DstServerConfig, EngineOptions, FaultPlan, HttpServer, InferenceServer, NetConfig,
+    ServerConfig, ThermalServerConfig,
 };
 use scatter::thermal::{DriftConfig, ThermalPolicy};
 use scatter::util::{FlagTable, ParsedArgs};
@@ -138,6 +140,7 @@ fn serve_flags() -> FlagTable {
     .flag("--thermal", "SPEC", "off | threshold[:RAD] | periodic[:N] drift policy")
     .flag("--brownout", "RAD", "phase-error budget that triggers replica brownout")
     .flag("--faults", "SPEC", "fault injection plan (FaultPlan grammar, e.g. kill-each:42)")
+    .flag("--dst", "SPEC", "in-serving DST mask hot-swap: on[:PERIOD_MS] | off")
     .switch("--steal", "idle replicas steal queued shards from the deepest backlog")
 }
 
@@ -204,6 +207,9 @@ fn cmd_serve(args: &[String]) {
             std::process::exit(2);
         }));
     }
+    if let Some(spec) = p.value("--dst") {
+        b = b.dst(parse_dst(spec));
+    }
     let server_cfg = b.build().unwrap_or_else(|e| {
         eprintln!("invalid server config: {e}");
         std::process::exit(2);
@@ -246,10 +252,13 @@ fn cmd_serve(args: &[String]) {
         Ok(r) => eprintln!(
             "served {} requests in {} batches (mean occupancy {:.2}, {:.1} req/s, \
              p50 {} us, p99 {} us, {:.3} mJ, shed {}, expired {}, recal {}x/{} chunks, \
-             workers {} live, {} respawns, {} retries, {} brownouts, {} steals)",
+             workers {} live, {} respawns, {} retries, {} brownouts, {} steals, \
+             mask swaps {}/{} rollbacks, top generation {})",
             r.requests, r.batches, r.mean_batch_occupancy, r.throughput_rps, r.p50_us,
             r.p99_us, r.energy_mj, r.shed, r.expired, r.recalibrations, r.recal_chunks,
-            r.workers_live, r.worker_restarts, r.request_retries, r.brownouts, r.steals
+            r.workers_live, r.worker_restarts, r.request_retries, r.brownouts, r.steals,
+            r.mask_swaps, r.mask_rollbacks,
+            r.mask_generation.iter().copied().max().unwrap_or(0)
         ),
         Err(e) => eprintln!("shutdown error: {e}"),
     }
@@ -285,6 +294,35 @@ fn parse_thermal(spec: &str) -> ThermalServerConfig {
     ThermalServerConfig { drift: Some(DriftConfig::default()), policy, ..Default::default() }
 }
 
+/// `--dst on[:PERIOD_MS] | off` → in-serving DST + mask hot-swap
+/// config. Everything beyond the stepping period (rounds, canary
+/// threshold, artifact directory) stays a `--config FILE` concern.
+fn parse_dst(spec: &str) -> DstServerConfig {
+    if spec == "off" {
+        return DstServerConfig::default();
+    }
+    let Some(rest) = spec.strip_prefix("on") else {
+        eprintln!("unknown --dst '{spec}' (on[:PERIOD_MS]|off)");
+        std::process::exit(2);
+    };
+    let period_ms: u64 = match rest.strip_prefix(':') {
+        None if rest.is_empty() => 20,
+        Some(v) => v.parse().unwrap_or_else(|_| {
+            eprintln!("bad --dst value '{spec}': cannot parse '{v}'");
+            std::process::exit(2);
+        }),
+        _ => {
+            eprintln!("unknown --dst '{spec}' (on[:PERIOD_MS]|off)");
+            std::process::exit(2);
+        }
+    };
+    DstServerConfig {
+        enabled: true,
+        period: Duration::from_millis(period_ms),
+        ..Default::default()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // bench
 // ---------------------------------------------------------------------------
@@ -293,17 +331,17 @@ fn bench_flags() -> FlagTable {
     FlagTable::new(
         "scatter bench <target> [options]",
         "Run paper reproductions and perf benches. Targets: table1 table2 table3\n\
-         fig4 fig5 fig6 fig8 fig9 fig10 engine serve drift chaos all.",
+         fig4 fig5 fig6 fig8 fig9 fig10 engine serve drift chaos swap all.",
     )
     .flag("--samples", "N", "evaluation samples (engine: time budget = N*10 ms/cell)")
     .flag("--models", "A,B", "table3 workloads (cnn3,vgg8,resnet18)")
     .flag("--threads", "A,B", "engine bench thread sweep (default 1,2,4,8)")
     .switch("--stages", "engine bench: per-stage latency breakdown")
     .flag("--rps", "R", "bench serve: open-loop arrival rate (0 = closed loop)")
-    .flag("--duration", "S", "bench serve/chaos: seconds per measurement")
-    .flag("--concurrency", "C", "bench serve/chaos: concurrent client connections")
+    .flag("--duration", "S", "bench serve/chaos/swap: seconds per measurement")
+    .flag("--concurrency", "C", "bench serve/chaos/swap: concurrent client connections")
     .flag("--addr", "HOST:PORT", "bench serve: drive an external server (skips sweeps)")
-    .flag("--workers", "N", "bench serve/chaos: engine-worker replicas for the main run")
+    .flag("--workers", "N", "bench serve/chaos/swap: engine-worker replicas for the main run")
     .flag("--max-batch", "A,B", "bench serve: batched-compute sweep points (0 disables)")
     .flag("--replicas", "A,B", "bench serve: replica-scaling sweep points (0 disables)")
     .switch("--steal", "bench serve: enable work stealing on in-process servers")
@@ -382,6 +420,17 @@ fn cmd_bench(args: &[String]) {
             };
             println!("{}", bench::chaos::run(&cfg));
         }
+        "swap" => {
+            let cfg = bench::swap::SwapBenchConfig {
+                duration: Duration::from_secs_f64(
+                    get_or_exit::<f64>(&p, "--duration").unwrap_or(4.0),
+                ),
+                concurrency: get_or_exit::<usize>(&p, "--concurrency").unwrap_or(4),
+                workers: get_or_exit::<usize>(&p, "--workers").unwrap_or(2),
+                ..Default::default()
+            };
+            println!("{}", bench::swap::run(&cfg));
+        }
         "all" => bench::run_all(&ctx),
         other => {
             eprintln!("unknown bench target '{other}'");
@@ -394,13 +443,17 @@ fn cmd_bench(args: &[String]) {
 // config / gamma / info
 // ---------------------------------------------------------------------------
 
-fn cmd_config(args: &[String]) {
-    let table = FlagTable::new(
+fn config_flags() -> FlagTable {
+    FlagTable::new(
         "scatter config [options]",
         "Print (or write) an AcceleratorConfig preset as JSON.",
     )
     .flag("--preset", "NAME", "default | dense | foundry")
-    .flag("--out", "FILE", "write to FILE instead of stdout");
+    .flag("--out", "FILE", "write to FILE instead of stdout")
+}
+
+fn cmd_config(args: &[String]) {
+    let table = config_flags();
     let p = parse_or_exit(&table, args);
     let cfg = match p.value("--preset").unwrap_or("default") {
         "dense" => AcceleratorConfig::dense_optimal(),
@@ -417,13 +470,17 @@ fn cmd_config(args: &[String]) {
     }
 }
 
-fn cmd_gamma(args: &[String]) {
-    use scatter::thermal::GammaModel;
-    let table = FlagTable::new(
+fn gamma_flags() -> FlagTable {
+    FlagTable::new(
         "scatter gamma [options]",
         "Print the thermal crosstalk model gamma(d).",
     )
-    .switch("--heatsim", "characterize gamma from the finite-difference heat solver");
+    .switch("--heatsim", "characterize gamma from the finite-difference heat solver")
+}
+
+fn cmd_gamma(args: &[String]) {
+    use scatter::thermal::GammaModel;
+    let table = gamma_flags();
     let p = parse_or_exit(&table, args);
     if p.has("--heatsim") {
         let (samples, model) = scatter::thermal::heatsim::characterize(
@@ -456,5 +513,64 @@ fn cmd_info() {
     match scatter::runtime::ArtifactRuntime::new("artifacts") {
         Ok(rt) => println!("  PJRT platform : {}", rt.platform()),
         Err(e) => println!("  PJRT platform : unavailable ({e})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every subcommand's declared flag table, plus one flag known to
+    /// be in it and whether that flag takes a value (for the
+    /// duplicate-spelling probes).
+    fn all_tables() -> Vec<(&'static str, FlagTable, &'static str, bool)> {
+        vec![
+            ("serve", serve_flags(), "--workers", true),
+            ("bench", bench_flags(), "--samples", true),
+            ("config", config_flags(), "--preset", true),
+            ("gamma", gamma_flags(), "--heatsim", false),
+        ]
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Satellite: no subcommand silently swallows a flag it never
+    /// declared — the error names the offending flag.
+    #[test]
+    fn every_subcommand_table_rejects_unknown_flags() {
+        for (cmd, table, _, _) in all_tables() {
+            let err = table
+                .parse(&args(&["--no-such-flag"]))
+                .expect_err("unknown flag must fail");
+            assert!(
+                err.contains("--no-such-flag"),
+                "{cmd}: error must name the flag: {err}"
+            );
+            let err = table
+                .parse(&args(&["--no-such-flag=7"]))
+                .expect_err("unknown inline flag must fail");
+            assert!(err.contains("--no-such-flag"), "{cmd}: {err}");
+        }
+    }
+
+    /// Satellite: a repeated flag is rejected on every subcommand — the
+    /// second spelling must not silently win.
+    #[test]
+    fn every_subcommand_table_rejects_duplicate_flags() {
+        for (cmd, table, flag, takes_value) in all_tables() {
+            // value flags get a dummy value; switches repeat bare
+            let argv: Vec<&str> = if takes_value {
+                vec![flag, "1", flag, "2"]
+            } else {
+                vec![flag, flag]
+            };
+            let err = table.parse(&args(&argv)).expect_err("duplicate must fail");
+            assert!(
+                err.contains("duplicate") && err.contains(flag),
+                "{cmd}: duplicate error must name {flag}: {err}"
+            );
+        }
     }
 }

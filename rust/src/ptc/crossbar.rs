@@ -279,6 +279,7 @@ impl PtcSimulator {
             k2,
             w_real,
             phase_abs,
+            mask_gen: 0,
             phases: programmed_phases,
             row_mask,
             u_gain,
@@ -306,6 +307,11 @@ pub struct ProgrammedPtc {
     /// intentionally stays at programming-time power (drift is bounded
     /// by the recalibration budget; EXPERIMENTS.md §Thermal-drift).
     pub phase_abs: Vec<f64>,
+    /// Mask generation whose row/column masks this block was programmed
+    /// under (0 = baseline). The simulator always programs at 0; the
+    /// engine stamps the real generation when it (re)programs a chunk,
+    /// so hot-swapped blocks are attributable to their mask artifact.
+    pub mask_gen: u64,
     /// Signed programmed phases (crosstalk-perturbed, node layout
     /// j·k1+i) — the calibration reference [`Self::realize_drifted`]
     /// re-realizes against when runtime thermal drift moves the array.

@@ -198,3 +198,330 @@ mod imp {
 }
 
 pub use imp::{ArtifactRuntime, CompiledArtifact};
+
+use crate::sparsity::LayerMask;
+use crate::util::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// FNV-1a 64-bit over a byte string — the artifact content hash. A
+/// dependency-free stand-in for a cryptographic digest: it detects the
+/// corruption classes the loader must catch (truncation, bit rot,
+/// hand-edits), not adversaries.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A versioned sparsity artifact: one generation of the co-design loop.
+///
+/// The serving side treats this as the unit of hot-swap — a monotone
+/// `generation` id, the full per-layer mask set the DST job emitted, the
+/// job's rerouter-power estimate, and the serving power observed when
+/// the job ran (its input signal, kept for provenance). The JSON form
+/// carries a content hash over the canonical payload so a truncated or
+/// hand-edited file can never load as a silently-wrong mask set.
+#[derive(Debug, Clone)]
+pub struct MaskArtifact {
+    /// Monotone generation id; the swap protocol refuses to move
+    /// backwards or sideways.
+    pub generation: u64,
+    /// Per-layer masks (same keying as `PhotonicEngine::set_masks`).
+    pub masks: BTreeMap<String, LayerMask>,
+    /// Estimated rerouter power of this mask set (mW), from
+    /// `sparsity::mask_power_mw` over every chunk.
+    pub power_mw: f64,
+    /// Average serving power (W) observed on the energy ledger when the
+    /// DST job produced this candidate; 0 when unknown.
+    pub observed_power_w: f64,
+}
+
+impl MaskArtifact {
+    pub fn new(
+        generation: u64,
+        masks: BTreeMap<String, LayerMask>,
+        power_mw: f64,
+        observed_power_w: f64,
+    ) -> Self {
+        Self { generation, masks, power_mw, observed_power_w }
+    }
+
+    /// Canonical payload JSON (everything except the hash). The hash is
+    /// computed over this exact rendering, so payload and digest can
+    /// never drift apart across save/load.
+    fn payload_json(&self) -> Json {
+        Json::obj(vec![
+            ("generation", Json::Num(self.generation as f64)),
+            (
+                "masks",
+                Json::Obj(
+                    self.masks
+                        .iter()
+                        .map(|(name, lm)| (name.clone(), lm.to_json()))
+                        .collect(),
+                ),
+            ),
+            ("power_mw", Json::Num(self.power_mw)),
+            ("observed_power_w", Json::Num(self.observed_power_w)),
+        ])
+    }
+
+    /// Content hash over the canonical payload rendering.
+    pub fn content_hash(&self) -> u64 {
+        fnv1a64(self.payload_json().to_string().as_bytes())
+    }
+
+    /// Full JSON document: payload fields plus the content hash (hex —
+    /// a JSON number is an f64 and cannot carry 64 bits exactly).
+    pub fn to_json(&self) -> Json {
+        let hash = self.content_hash();
+        let Json::Obj(mut fields) = self.payload_json() else { unreachable!() };
+        fields.insert("hash".into(), Json::Str(format!("{hash:016x}")));
+        Json::Obj(fields)
+    }
+
+    /// Parse and verify a JSON document produced by [`Self::to_json`].
+    /// A missing or mismatched hash is a typed [`Error::Serde`] — never
+    /// a silent load of corrupted masks.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let generation = v
+            .get("generation")
+            .and_then(Json::as_f64)
+            .filter(|g| *g >= 0.0)
+            .map(|g| g as u64)
+            .ok_or_else(|| Error::Serde("mask artifact missing 'generation'".into()))?;
+        let masks_obj = v
+            .get("masks")
+            .ok_or_else(|| Error::Serde("mask artifact missing 'masks'".into()))?;
+        let Json::Obj(entries) = masks_obj else {
+            return Err(Error::Serde("mask artifact 'masks' is not an object".into()));
+        };
+        let mut masks = BTreeMap::new();
+        for (name, lm) in entries {
+            masks.insert(name.clone(), LayerMask::from_json(lm)?);
+        }
+        let power_mw = v.get("power_mw").and_then(Json::as_f64).unwrap_or(0.0);
+        let observed_power_w =
+            v.get("observed_power_w").and_then(Json::as_f64).unwrap_or(0.0);
+        let artifact = Self { generation, masks, power_mw, observed_power_w };
+        let stored = v
+            .get("hash")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Serde("mask artifact missing 'hash'".into()))?;
+        let expect = format!("{:016x}", artifact.content_hash());
+        if stored != expect {
+            return Err(Error::Serde(format!(
+                "mask artifact generation {generation}: content hash {stored} does \
+                 not match payload ({expect}) — corrupted or hand-edited artifact"
+            )));
+        }
+        Ok(artifact)
+    }
+
+    /// On-disk name for this generation.
+    pub fn file_name(&self) -> String {
+        format!("mask_gen_{:06}.json", self.generation)
+    }
+
+    /// Atomic persistence: write `<name>.tmp`, then rename into place.
+    /// A crash mid-write leaves the previous generation intact and at
+    /// worst a stale `.tmp`; readers can never observe a half-written
+    /// artifact. Returns the final path.
+    pub fn save_atomic(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| Error::Runtime(format!("create {}: {e}", dir.display())))?;
+        let final_path = dir.join(self.file_name());
+        let tmp = dir.join(format!("{}.tmp", self.file_name()));
+        std::fs::write(&tmp, self.to_json().to_string())
+            .map_err(|e| Error::Runtime(format!("write {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, &final_path)
+            .map_err(|e| Error::Runtime(format!("rename {}: {e}", tmp.display())))?;
+        Ok(final_path)
+    }
+
+    /// Load and verify one artifact file. Unreadable files are
+    /// [`Error::Runtime`]; unparseable or hash-mismatched content is
+    /// [`Error::Serde`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+        let v = Json::parse(&text).map_err(|e| {
+            Error::Serde(format!("parse {}: {e} (truncated artifact?)", path.display()))
+        })?;
+        Self::from_json(&v)
+    }
+
+    /// Load with the monotone-generation invariant enforced: the file's
+    /// generation must be strictly greater than `prior_gen`, otherwise a
+    /// stale artifact could roll a replica backwards unnoticed.
+    pub fn load_monotone(path: &Path, prior_gen: u64) -> Result<Self> {
+        let artifact = Self::load(path)?;
+        if artifact.generation <= prior_gen {
+            return Err(Error::Runtime(format!(
+                "non-monotone mask artifact {}: generation {} <= prior {} — \
+                 refusing a stale or replayed artifact",
+                path.display(),
+                artifact.generation,
+                prior_gen
+            )));
+        }
+        Ok(artifact)
+    }
+}
+
+#[cfg(test)]
+mod mask_artifact_tests {
+    use super::*;
+
+    fn sample(generation: u64) -> MaskArtifact {
+        let mut masks = BTreeMap::new();
+        let mut lm = LayerMask::dense(1, 2, 4, 8);
+        lm.chunk_mut(0, 1).col = vec![true, false, true, false, true, false, true, false];
+        masks.insert("conv2".to_string(), lm);
+        masks.insert("conv3".to_string(), LayerMask::dense(2, 1, 4, 8));
+        MaskArtifact::new(generation, masks, 12.5, 3.25)
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("scatter_artifact_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let a = sample(7);
+        let text = a.to_json().to_string();
+        let back = MaskArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.generation, 7);
+        assert_eq!(back.power_mw, 12.5);
+        assert_eq!(back.observed_power_w, 3.25);
+        assert_eq!(back.masks.len(), 2);
+        assert_eq!(
+            back.masks["conv2"].chunk(0, 1),
+            a.masks["conv2"].chunk(0, 1),
+            "mask bits survive the round-trip"
+        );
+        assert_eq!(back.content_hash(), a.content_hash());
+    }
+
+    #[test]
+    fn save_atomic_then_load_and_no_tmp_left() {
+        let dir = tmp_dir("atomic");
+        let a = sample(3);
+        let path = a.save_atomic(&dir).expect("save");
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "mask_gen_000003.json");
+        let back = MaskArtifact::load(&path).expect("load");
+        assert_eq!(back.generation, 3);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "write-then-rename leaves no tmp file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_file_is_typed_serde_error() {
+        let dir = tmp_dir("trunc");
+        let a = sample(5);
+        let path = a.save_atomic(&dir).expect("save");
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        match MaskArtifact::load(&path) {
+            Err(Error::Serde(msg)) => assert!(
+                msg.contains("truncated") || msg.contains("parse"),
+                "message should point at the parse failure: {msg}"
+            ),
+            other => panic!("truncated artifact must be Serde error, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampered_content_fails_the_hash_check() {
+        let dir = tmp_dir("hash");
+        let a = sample(9);
+        let path = a.save_atomic(&dir).expect("save");
+        // flip one mask bit without touching the stored hash
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replacen("false", "true", 1);
+        assert_ne!(text, tampered, "sample must contain a pruned bit to flip");
+        std::fs::write(&path, tampered).unwrap();
+        match MaskArtifact::load(&path) {
+            Err(Error::Serde(msg)) => {
+                assert!(msg.contains("hash"), "error must name the hash check: {msg}")
+            }
+            other => panic!("tampered artifact must fail the hash check, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_stored_hash_field_fails() {
+        let a = sample(2);
+        let text = a.to_json().to_string();
+        let expect = format!("{:016x}", a.content_hash());
+        let bad = text.replace(&expect, "deadbeefdeadbeef");
+        match MaskArtifact::from_json(&Json::parse(&bad).unwrap()) {
+            Err(Error::Serde(msg)) => assert!(msg.contains("hash"), "{msg}"),
+            other => panic!("bad hash field must error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_monotone_generation_is_typed_error() {
+        let dir = tmp_dir("mono");
+        let path = sample(4).save_atomic(&dir).expect("save");
+        assert_eq!(
+            MaskArtifact::load_monotone(&path, 3).expect("4 > 3 loads").generation,
+            4
+        );
+        for prior in [4u64, 10] {
+            match MaskArtifact::load_monotone(&path, prior) {
+                Err(Error::Runtime(msg)) => assert!(
+                    msg.contains("non-monotone") && msg.contains("generation 4"),
+                    "error must name the stale generation: {msg}"
+                ),
+                other => panic!("gen 4 vs prior {prior} must error, got {other:?}"),
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_fields_are_typed_errors() {
+        for (doc, needle) in [
+            ("{}", "generation"),
+            ("{\"generation\": 1}", "masks"),
+            ("{\"generation\": 1, \"masks\": {}}", "hash"),
+        ] {
+            match MaskArtifact::from_json(&Json::parse(doc).unwrap()) {
+                Err(Error::Serde(msg)) => {
+                    assert!(msg.contains(needle), "want {needle:?} in {msg:?}")
+                }
+                other => panic!("doc {doc} must be Serde error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_mask_corruption_inside_artifact_surfaces() {
+        // a structurally-valid document whose mask payload is broken must
+        // surface the LayerMask error, not a stale/partial artifact
+        let doc = "{\"generation\": 1, \"masks\": {\"conv2\": {\"p\": 1, \"q\": 1, \
+                   \"chunks\": [{\"row\": [true]}]}}, \"power_mw\": 0, \
+                   \"observed_power_w\": 0, \"hash\": \"0000000000000000\"}";
+        match MaskArtifact::from_json(&Json::parse(doc).unwrap()) {
+            Err(Error::Serde(msg)) => assert!(msg.contains("col"), "{msg}"),
+            other => panic!("broken chunk mask must error, got {other:?}"),
+        }
+    }
+}

@@ -5,7 +5,12 @@
 //! Interchange format is **HLO text**, not serialized protos — jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! [`MaskArtifact`] is the feature-independent half: the versioned,
+//! content-hashed sparsity artifact the in-serving DST loop emits and
+//! the hot-swap protocol consumes (atomic write-then-rename persistence,
+//! monotone generation ids).
 
 pub mod artifact;
 
-pub use artifact::{ArtifactRuntime, CompiledArtifact};
+pub use artifact::{ArtifactRuntime, CompiledArtifact, MaskArtifact};

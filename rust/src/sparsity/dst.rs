@@ -12,8 +12,9 @@
 //!    gradient norm, again minimum-power combination.
 
 use super::mask::LayerMask;
-use super::power_opt::select_min_power_combination;
+use super::power_opt::{mask_power_mw, select_min_power_combination};
 use crate::devices::Mzi;
+use std::collections::BTreeMap;
 
 /// Cosine-decayed death rate (Alg. 1 line 8).
 pub fn cosine_death_rate(alpha0: f64, t: usize, t_end: usize) -> f64 {
@@ -146,6 +147,173 @@ impl DstState {
     }
 }
 
+/// Column ℓ2 norms of a row-major `out_dim × in_dim` weight matrix on
+/// the `rows × cols` chunk grid: `result[pi·q + qi][j]` is the norm of
+/// chunk (pi, qi)'s column `j`. Padding columns/rows beyond the matrix
+/// edge contribute zero, matching the scheduler's zero-padded chunking.
+pub fn chunked_col_norms(
+    w: &[f64],
+    out_dim: usize,
+    in_dim: usize,
+    rows: usize,
+    cols: usize,
+) -> Vec<Vec<f64>> {
+    assert_eq!(w.len(), out_dim * in_dim, "row-major weight matrix");
+    let p = out_dim.div_ceil(rows);
+    let q = in_dim.div_ceil(cols);
+    let mut out = vec![vec![0.0; cols]; p * q];
+    for pi in 0..p {
+        for qi in 0..q {
+            let norms = &mut out[pi * q + qi];
+            for (j, norm) in norms.iter_mut().enumerate() {
+                let gj = qi * cols + j;
+                if gj >= in_dim {
+                    continue;
+                }
+                let mut acc = 0.0;
+                for i in 0..rows {
+                    let gi = pi * rows + i;
+                    if gi >= out_dim {
+                        break;
+                    }
+                    let v = w[gi * in_dim + gj];
+                    acc += v * v;
+                }
+                *norm = acc.sqrt();
+            }
+        }
+    }
+    out
+}
+
+/// One mask candidate emitted by a [`DstJob`] round: the full per-layer
+/// mask set plus the power accounting that justifies it.
+#[derive(Debug, Clone)]
+pub struct DstCandidate {
+    pub masks: BTreeMap<String, LayerMask>,
+    /// Estimated rerouter hold power of the candidate mask set (mW).
+    pub power_mw: f64,
+    /// Serving power observed on the energy ledger when this round ran
+    /// (W) — the co-design loop's input signal, kept for provenance.
+    pub observed_power_w: f64,
+}
+
+/// A resumable in-serving DST job: the algorithm half of the co-design
+/// loop (ROADMAP item 5), wrapping one [`DstState`] per masked layer.
+///
+/// Offline DST consumes gradients; a serving replica has none, so both
+/// the prune criterion and the growth criterion use the weight-column
+/// ℓ2 norms (the standard magnitude proxy) while the *selection among
+/// candidates* stays the paper's min-power combination search. The
+/// server feeds each round the average power from its per-request
+/// energy ledger; the job folds it into an EWMA, stamps it on every
+/// emitted [`DstCandidate`], and the dispatcher uses the same ledger to
+/// pace rounds (no traffic served → no power signal → no step).
+///
+/// The job is resumable by construction: all state is `t` plus the
+/// per-layer masks, so a step can run whenever a replica is idle and
+/// cool, days apart if need be.
+#[derive(Debug, Clone)]
+pub struct DstJob {
+    states: BTreeMap<String, DstState>,
+    mzi: Mzi,
+    k2: usize,
+    t: usize,
+    t_end: usize,
+    /// EWMA of the observed serving power (W); 0 until the first signal.
+    observed_power_w: f64,
+}
+
+impl DstJob {
+    /// Wrap the currently-deployed masks. Each layer's target density is
+    /// its deployed density — in-serving DST re-selects *which* columns
+    /// carry light for minimum power, it does not change model capacity
+    /// (the accuracy canary guards the swap, not a retrain).
+    pub fn new(
+        masks: BTreeMap<String, LayerMask>,
+        alpha0: f64,
+        t_end: usize,
+        k2: usize,
+        mzi: Mzi,
+    ) -> Self {
+        let states = masks
+            .into_iter()
+            .map(|(name, mask)| {
+                let density = mask.density();
+                (name, DstState::new(mask, density, alpha0, t_end.max(1), k2))
+            })
+            .collect();
+        Self { states, mzi, k2, t: 0, t_end: t_end.max(1), observed_power_w: 0.0 }
+    }
+
+    /// The cosine schedule ran out: every further round is a no-op.
+    pub fn is_done(&self) -> bool {
+        self.t >= self.t_end
+    }
+
+    /// Steps taken so far.
+    pub fn step_count(&self) -> usize {
+        self.t
+    }
+
+    /// Current per-layer masks (the last candidate, or the initial set).
+    pub fn masks(&self) -> BTreeMap<String, LayerMask> {
+        self.states.iter().map(|(n, s)| (n.clone(), s.mask.clone())).collect()
+    }
+
+    /// Estimated rerouter hold power of the current mask set (mW).
+    pub fn power_estimate_mw(&self) -> f64 {
+        self.states
+            .values()
+            .flat_map(|s| s.mask.chunks.iter())
+            .map(|c| mask_power_mw(&c.col, self.k2, &self.mzi))
+            .sum()
+    }
+
+    /// One prune+grow round over every layer. `col_stats[layer]` are
+    /// the chunked weight-column norms (see [`chunked_col_norms`]);
+    /// layers without stats are skipped. `observed_power_w` is the
+    /// serving power from the energy ledger. Returns a candidate only
+    /// when some mask bit actually changed — an unchanged round (α
+    /// annealed to ~0, or the min-power selection kept the status quo)
+    /// emits nothing, so the server never swaps for a no-op.
+    pub fn step(
+        &mut self,
+        col_stats: &BTreeMap<String, Vec<Vec<f64>>>,
+        observed_power_w: f64,
+    ) -> Option<DstCandidate> {
+        if self.is_done() {
+            return None;
+        }
+        if observed_power_w > 0.0 {
+            self.observed_power_w = if self.observed_power_w == 0.0 {
+                observed_power_w
+            } else {
+                0.8 * self.observed_power_w + 0.2 * observed_power_w
+            };
+        }
+        let mut changed = false;
+        for (name, st) in &mut self.states {
+            let Some(stats) = col_stats.get(name) else { continue };
+            if stats.len() != st.mask.chunks.len() {
+                continue; // stale stats for a reshaped layer: skip, not panic
+            }
+            let before: Vec<Vec<bool>> =
+                st.mask.chunks.iter().map(|c| c.col.clone()).collect();
+            st.update(stats, stats, self.t, &self.mzi);
+            if st.mask.chunks.iter().map(|c| &c.col).ne(before.iter()) {
+                changed = true;
+            }
+        }
+        self.t += 1;
+        changed.then(|| DstCandidate {
+            masks: self.masks(),
+            power_mw: self.power_estimate_mw(),
+            observed_power_w: self.observed_power_w,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,6 +409,119 @@ mod tests {
         );
         // density moved toward the target
         assert!(st.mask.density() < 0.9);
+    }
+
+    #[test]
+    fn chunked_col_norms_match_direct_computation() {
+        // 3×5 matrix on a 2×2 grid → p=2, q=3 with padding on both edges
+        let w: Vec<f64> = (0..15).map(|i| i as f64).collect();
+        let norms = chunked_col_norms(&w, 3, 5, 2, 2);
+        assert_eq!(norms.len(), 6);
+        // chunk (0,0) col 0 covers w[0][0], w[1][0] = 0, 5
+        assert!((norms[0][0] - (25.0f64).sqrt()).abs() < 1e-12);
+        // chunk (1,2) col 0 covers w[2][4] = 14 only (row 3 is padding)
+        assert!((norms[5][0] - 14.0).abs() < 1e-12);
+        // chunk (1,2) col 1 is pure padding (in_dim 5, gj = 5)
+        assert_eq!(norms[5][1], 0.0);
+    }
+
+    fn job_masks() -> std::collections::BTreeMap<String, LayerMask> {
+        let mut masks = std::collections::BTreeMap::new();
+        for name in ["conv2", "conv3"] {
+            let (m, _, _) = init_layer_mask(2, 2, 16, 32, 16, 0.4, &mzi());
+            masks.insert(name.to_string(), m);
+        }
+        masks
+    }
+
+    fn job_stats(
+        job: &DstJob,
+        seed: u64,
+    ) -> std::collections::BTreeMap<String, Vec<Vec<f64>>> {
+        let mut rng = XorShiftRng::new(seed);
+        job.masks()
+            .iter()
+            .map(|(n, lm)| {
+                let stats = lm
+                    .chunks
+                    .iter()
+                    .map(|c| (0..c.cols).map(|_| rng.uniform()).collect())
+                    .collect();
+                (n.clone(), stats)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dst_job_emits_candidates_and_preserves_density_and_rows() {
+        let masks = job_masks();
+        let d0: std::collections::BTreeMap<String, f64> =
+            masks.iter().map(|(n, m)| (n.clone(), m.density())).collect();
+        let rows0: Vec<Vec<bool>> =
+            masks["conv2"].chunks.iter().map(|c| c.row.clone()).collect();
+        let mut job = DstJob::new(masks, 0.5, 50, 16, mzi());
+        assert!(job.power_estimate_mw() > 0.0, "active columns hold rerouter power");
+        let mut emitted = 0;
+        for t in 0..50 {
+            if let Some(cand) = job.step(&job_stats(&job, t), 2.5) {
+                emitted += 1;
+                assert!(cand.power_mw > 0.0);
+                assert!(
+                    (cand.observed_power_w - 2.5).abs() < 1e-9,
+                    "ledger signal stamped on the candidate"
+                );
+                for (n, m) in &cand.masks {
+                    assert!(
+                        (m.density() - d0[n]).abs() < 0.15,
+                        "in-serving DST keeps capacity: {n} {} vs {}",
+                        m.density(),
+                        d0[n]
+                    );
+                }
+            }
+        }
+        assert!(emitted >= 1, "a 50-round job must emit at least one candidate");
+        assert!(job.is_done());
+        assert_eq!(job.step_count(), 50);
+        assert!(job.step(&job_stats(&job, 99), 2.5).is_none(), "done job is a no-op");
+        let rows_after: Vec<Vec<bool>> =
+            job.masks()["conv2"].chunks.iter().map(|c| c.row.clone()).collect();
+        assert_eq!(rows_after, rows0, "Alg. 1 fixes row masks after init");
+    }
+
+    #[test]
+    fn dst_job_skips_layers_with_stale_stats() {
+        let mut job = DstJob::new(job_masks(), 0.5, 10, 16, mzi());
+        let before = job.masks();
+        // wrong chunk count: the layer must be skipped, not panic
+        let stats: std::collections::BTreeMap<String, Vec<Vec<f64>>> =
+            [("conv2".to_string(), vec![vec![1.0; 16]])].into_iter().collect();
+        let cand = job.step(&stats, 0.0);
+        assert!(cand.is_none(), "no well-formed stats, no candidate");
+        assert_eq!(
+            job.masks()["conv2"].chunks[0].col, before["conv2"].chunks[0].col,
+            "skipped layer unchanged"
+        );
+        assert_eq!(job.step_count(), 1, "the round still advances the schedule");
+    }
+
+    #[test]
+    fn dst_job_power_signal_folds_as_ewma() {
+        let mut job = DstJob::new(job_masks(), 0.5, 100, 16, mzi());
+        let stats = job_stats(&job, 7);
+        let _ = job.step(&stats, 4.0);
+        let _ = job.step(&stats, 0.0); // no traffic: signal held, not zeroed
+        let cand = loop {
+            if let Some(c) = job.step(&job_stats(&job, job.step_count() as u64), 2.0) {
+                break c;
+            }
+            assert!(!job.is_done(), "schedule exhausted without a candidate");
+        };
+        assert!(
+            cand.observed_power_w > 2.0 && cand.observed_power_w < 4.0,
+            "EWMA between the two observed signals: {}",
+            cand.observed_power_w
+        );
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod init;
 pub mod mask;
 pub mod power_opt;
 
-pub use dst::{cosine_death_rate, DstState};
+pub use dst::{chunked_col_norms, cosine_death_rate, DstCandidate, DstJob, DstState};
 pub use init::{init_layer_mask, interleaved_row_mask};
 pub use mask::{ChunkMask, LayerMask};
 pub use power_opt::{best_segment_mask, mask_power_mw, select_min_power_combination};

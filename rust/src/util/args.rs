@@ -83,8 +83,11 @@ impl FlagTable {
         out
     }
 
-    /// Parse `args`; unknown flags and missing values are errors that
-    /// name the offending flag (the caller prints the help screen).
+    /// Parse `args`; unknown flags, missing values, and duplicate
+    /// occurrences are errors that name the offending flag (the caller
+    /// prints the help screen). Duplicates used to be silently
+    /// last-wins, which hid typos like `--workers 4 ... --workers 2` in
+    /// long command lines.
     pub fn parse(&self, args: &[String]) -> Result<ParsedArgs, String> {
         let mut out = ParsedArgs::default();
         let mut it = args.iter().peekable();
@@ -102,6 +105,9 @@ impl FlagTable {
                 else {
                     return Err(format!("unknown flag --{name}"));
                 };
+                if out.values.iter().any(|(n, _)| *n == spec.name) {
+                    return Err(format!("duplicate flag {}", spec.name));
+                }
                 match spec.value {
                     Some(_) => {
                         let value = match inline {
@@ -134,13 +140,10 @@ impl ParsedArgs {
         self.help
     }
 
-    /// Last value given for a flag (`--x a --x b` yields `b`).
+    /// Value given for a flag (each flag appears at most once — the
+    /// parser rejects duplicates).
     pub fn value(&self, name: &str) -> Option<&str> {
-        self.values
-            .iter()
-            .rev()
-            .find(|(n, _)| *n == name)
-            .and_then(|(_, v)| v.as_deref())
+        self.values.iter().find(|(n, _)| *n == name).and_then(|(_, v)| v.as_deref())
     }
 
     /// The flag or switch appeared at all.
@@ -219,6 +222,27 @@ mod tests {
         assert!(err.contains("expects a value"), "{err}");
         let err = table().parse(&args(&["--steal=yes"])).unwrap_err();
         assert!(err.contains("takes no value"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_flags_and_switches_naming_them() {
+        let err =
+            table().parse(&args(&["--workers", "4", "--workers", "2"])).unwrap_err();
+        assert!(
+            err.contains("duplicate") && err.contains("--workers"),
+            "duplicate value flag must be named: {err}"
+        );
+        let err = table().parse(&args(&["--steal", "--steal"])).unwrap_err();
+        assert!(
+            err.contains("duplicate") && err.contains("--steal"),
+            "duplicate switch must be named: {err}"
+        );
+        // inline and spaced spellings of the same flag still collide
+        let err =
+            table().parse(&args(&["--max-batch=8", "--max-batch", "4"])).unwrap_err();
+        assert!(err.contains("duplicate") && err.contains("--max-batch"), "{err}");
+        // repeated --help stays fine (it is not a table flag)
+        assert!(table().parse(&args(&["--help", "--help"])).unwrap().wants_help());
     }
 
     #[test]

@@ -168,6 +168,12 @@ fn http_end_to_end_concurrent_load() {
     assert!(metric_value(&m.body, "scatter_p_avg_watts") > 0.0);
     assert_eq!(metric_value(&m.body, "scatter_queue_depth"), 0.0, "idle after load");
 
+    // mask hot-swap series are always exported; with DST off they sit
+    // at the deployment baseline
+    assert_eq!(metric_value(&m.body, "scatter_mask_generation{worker=\"0\"}"), 0.0);
+    assert_eq!(metric_value(&m.body, "scatter_mask_swaps_total"), 0.0);
+    assert_eq!(metric_value(&m.body, "scatter_mask_rollbacks_total"), 0.0);
+
     // batch-occupancy histogram: every dispatched batch is observed,
     // buckets are cumulative, and the mean is derivable from sum/count
     let occ_count = metric_value(&m.body, "scatter_batch_occupancy_count");
