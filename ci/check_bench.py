@@ -24,7 +24,14 @@ drain, and post-fault throughput at or above
 promote phase plus an injected-bad-canary rollback phase) gates the
 co-design loop: at least ``swap.min_swaps`` promoted generations, zero
 lost replies in both phases, the rollback path exercised at least once,
-and no candidate promoted past a failing canary.
+and no candidate promoted past a failing canary. ``BENCH_repair.json``
+(written by ``scatter bench repair``: mid-life photonic device faults
+under load plus an offline clean/faulty/repaired accuracy triple)
+gates the self-repair loop: at least one sentinel detection and one
+promoted quarantine repair, no unrepairable verdicts or degraded
+replicas from a repairable fault, zero lost replies, a measured
+detection latency, and accuracy recovery at or above
+``repair.min_recovery``.
 
 The engine gate is **armed two ways**:
 
@@ -457,6 +464,74 @@ def check_swap(swap_path, baseline_path, failures):
     )
 
 
+def check_repair(repair_path, baseline_path, failures):
+    """Self-repair gate over ``BENCH_repair.json``. The lifecycle counts
+    (injected → detected → repaired, zero unrepairable/degraded/lost)
+    are exact invariants of the sentinel + quarantine protocol; the
+    accuracy-recovery ratio compares three evaluations of the same
+    deployment on the same runner with the same seed, so every floor is
+    machine-independent."""
+    doc = load(repair_path)
+    base = (load(baseline_path).get("repair") or {})
+    min_recovery = float(base.get("min_recovery", 0.9))
+
+    if float(doc.get("requests_ok", 0)) <= 0:
+        failures.append(f"{repair_path}: serving phase served nothing")
+    lost = float(doc.get("lost", -1))
+    if lost != 0:
+        failures.append(
+            f"{repair_path}: lost={lost:.0f} replies — a quarantine repair "
+            f"must never eat a reply"
+        )
+    if float(doc.get("faults_injected", 0)) < 1:
+        failures.append(
+            f"{repair_path}: no device faults injected — the mid-life "
+            f"fault plan never armed"
+        )
+    detections = float(doc.get("detections", 0))
+    if detections < 1:
+        failures.append(
+            f"{repair_path}: detections={detections:.0f} — the sentinel "
+            f"never flagged the faulted fabric"
+        )
+    repairs = float(doc.get("repairs", 0))
+    if repairs < 1:
+        failures.append(
+            f"{repair_path}: repairs={repairs:.0f} — no quarantine was "
+            f"promoted past its canary"
+        )
+    unrepairable = float(doc.get("unrepairable", -1))
+    if unrepairable != 0:
+        failures.append(
+            f"{repair_path}: unrepairable={unrepairable:.0f} — a maskable "
+            f"dead branch must be repairable, not a degradation"
+        )
+    degraded = float(doc.get("degraded", -1))
+    if degraded != 0:
+        failures.append(
+            f"{repair_path}: degraded={degraded:.0f} replicas after a "
+            f"repairable fault"
+        )
+    detection_ms = float(doc.get("detection_ms", 0.0))
+    if not detection_ms > 0.0:
+        failures.append(
+            f"{repair_path}: detection_ms={detection_ms} — injection→detection "
+            f"latency was never measured"
+        )
+    recovery = float(doc.get("recovery", 0.0))
+    if recovery < min_recovery:
+        failures.append(
+            f"{repair_path}: accuracy recovery {recovery:.3f} < {min_recovery} "
+            f"(clean {doc.get('acc_clean')}, faulty {doc.get('acc_faulty')}, "
+            f"repaired {doc.get('acc_repaired')})"
+        )
+    print(
+        f"repair gate: {repair_path} {detections:.0f} detections "
+        f"({detection_ms:.1f} ms), {repairs:.0f} repairs, "
+        f"recovery {recovery:.2f}, 0 lost replies"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--engine", default="BENCH_engine.json")
@@ -464,6 +539,7 @@ def main():
     ap.add_argument("--drift", default=None, help="BENCH_drift.json (optional)")
     ap.add_argument("--chaos", default=None, help="BENCH_chaos.json (optional)")
     ap.add_argument("--swap", default=None, help="BENCH_swap.json (optional)")
+    ap.add_argument("--repair", default=None, help="BENCH_repair.json (optional)")
     ap.add_argument("--baseline", default="ci/bench_baseline.json")
     args = ap.parse_args()
 
@@ -492,6 +568,11 @@ def main():
             check_swap(args.swap, args.baseline, failures)
         except (OSError, ValueError, KeyError) as e:
             failures.append(f"swap check unreadable: {e!r}")
+    if args.repair:
+        try:
+            check_repair(args.repair, args.baseline, failures)
+        except (OSError, ValueError, KeyError) as e:
+            failures.append(f"repair check unreadable: {e!r}")
 
     if failures:
         print("\nPERF GATE FAILED:", file=sys.stderr)

@@ -10,6 +10,7 @@ pub mod chaos;
 pub mod common;
 pub mod drift;
 pub mod engine;
+pub mod repair;
 pub mod serve;
 pub mod swap;
 pub mod timing;

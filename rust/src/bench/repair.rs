@@ -1,0 +1,424 @@
+//! Device-fault repair bench: sentinel detection + mask-quarantine
+//! self-repair (`scatter bench repair`, EXPERIMENTS.md §Device faults).
+//!
+//! Two measurements against the same CNN-3 deployment:
+//!
+//! * **serving** — a mid-life dead-rerouter-branch fault strikes a
+//!   replica under closed-loop HTTP load; the sentinel localizes it and
+//!   the quarantine repair hot-swaps around the dead device while
+//!   traffic flows. Headlines: detection latency (fault pin-in → first
+//!   sentinel finding), at least one promoted repair, zero replicas
+//!   degraded, and reply conservation (`lost == 0` — the repair path
+//!   never eats a reply).
+//! * **accuracy recovery** — offline on the photonic twin: the same
+//!   deployment is evaluated clean, then with stuck-MZI defects pinned
+//!   across every chunk of the masked backbone layer (each stuck cell
+//!   realizes a *wrong* weight, not a zero), then again after the
+//!   sentinel→quarantine repair gates the faulted columns dark.
+//!   Headline: `recovery = (acc_repaired − acc_faulty) /
+//!   (acc_clean − acc_faulty)`, the fraction of the fault-induced
+//!   accuracy drop the repair wins back.
+//!
+//! `ci/check_bench.py --repair` gates: at least one detection and one
+//! promoted repair, zero unrepairable verdicts, zero lost replies, and
+//! recovery at or above the baseline floor.
+
+use crate::bench::common::{repo_root_file, BenchCtx, Workload};
+use crate::config::AcceleratorConfig;
+use crate::coordinator::net::{http_request, HttpClient, HttpServer, NetConfig};
+use crate::coordinator::{
+    EngineOptions, InferenceServer, PhotonicEngine, RepairServerConfig, ServerConfig,
+};
+use crate::ptc::DeviceFaultPlan;
+use crate::sparsity::LayerMask;
+use crate::util::{Json, Table};
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+/// `scatter bench repair` configuration.
+#[derive(Debug, Clone)]
+pub struct RepairBenchConfig {
+    /// Serving-phase load duration.
+    pub duration: Duration,
+    /// Concurrent keep-alive client connections.
+    pub concurrency: usize,
+    /// Engine-worker pool size.
+    pub workers: usize,
+    /// Shards each replica serves before the fault pins in.
+    pub inject_after_shards: u64,
+    /// Sentinel probe pacing.
+    pub probe_period: Duration,
+}
+
+impl Default for RepairBenchConfig {
+    fn default() -> Self {
+        Self {
+            duration: Duration::from_secs(4),
+            concurrency: 4,
+            workers: 2,
+            inject_after_shards: 3,
+            probe_period: Duration::from_millis(1),
+        }
+    }
+}
+
+/// One request outcome, classed the same way `bench swap` classes them.
+#[derive(Debug, Clone, Copy, Default)]
+struct Tally {
+    ok: u64,
+    shed: u64,
+    expired: u64,
+    lost: u64,
+}
+
+/// Closed-loop send loop over a keep-alive connection; reconnects once
+/// per failure so a mid-repair disconnect is counted, not fatal.
+fn drive_client(
+    addr: SocketAddr,
+    bodies: &[String],
+    deadline: Instant,
+    seed: usize,
+) -> Tally {
+    let mut t = Tally::default();
+    let mut client = match HttpClient::connect(&addr) {
+        Ok(c) => c,
+        Err(_) => return t,
+    };
+    let mut i = seed;
+    while Instant::now() < deadline {
+        let body = &bodies[i % bodies.len()];
+        i += 1;
+        match client.request("POST", "/v1/predict", Some(body)) {
+            Ok(resp) => match resp.status {
+                200 => t.ok += 1,
+                503 => t.shed += 1,
+                504 => t.expired += 1,
+                _ => t.lost += 1,
+            },
+            Err(_) => {
+                t.lost += 1;
+                match HttpClient::connect(&addr) {
+                    Ok(c) => client = c,
+                    Err(_) => return t,
+                }
+            }
+        }
+    }
+    t
+}
+
+/// First masked layer plus the first active column of its chunk 0 —
+/// the dead-branch target for the serving phase (an *active* column,
+/// so the dark branch deviates from its golden and the quarantine has
+/// a live cell to gate).
+fn serving_fault_spec(masks: &BTreeMap<String, LayerMask>) -> Option<String> {
+    let (layer, lm) = masks.iter().next()?;
+    let j = lm.chunk(0, 0).col.iter().position(|&a| a)?;
+    Some(format!("dead-branch@{layer}:c0:i{j}"))
+}
+
+/// Stuck-MZI plan for the accuracy phase: in every chunk of every
+/// masked layer, pin up to `per_chunk` active columns to a large wrong
+/// phase (weight ≈ −sin 1.5, nowhere near the intended value). Stuck
+/// cells — unlike dead ones — keep *emitting* wrong products, so the
+/// faulted fabric loses real accuracy and the repair has something to
+/// win back.
+fn stuck_fault_spec(masks: &BTreeMap<String, LayerMask>, per_chunk: usize) -> String {
+    let mut specs = Vec::new();
+    for (layer, lm) in masks {
+        for pi in 0..lm.p {
+            for qi in 0..lm.q {
+                let cm = lm.chunk(pi, qi);
+                let Some(r) = cm.row.iter().position(|&a| a) else { continue };
+                let ci = pi * lm.q + qi;
+                let active = cm.col.iter().enumerate().filter_map(|(j, &a)| a.then_some(j));
+                for j in active.take(per_chunk) {
+                    specs.push(format!("stuck@{layer}:c{ci}:r{r}:i{j}:p1.5"));
+                }
+            }
+        }
+    }
+    specs.join(",")
+}
+
+struct ServePhase {
+    tally: Tally,
+    injected: u64,
+    detections: u64,
+    repairs: u64,
+    unrepairable: u64,
+    degraded: usize,
+    detection_ms: f64,
+    quarantined_cells: u64,
+    wall_s: f64,
+}
+
+/// Serving run: mid-life dead branch + sentinel + quarantine repair
+/// under closed-loop load.
+fn run_serve_phase(cfg: &RepairBenchConfig) -> ServePhase {
+    let workers = cfg.workers.max(1);
+    let ctx = BenchCtx::new(50);
+    let acc = AcceleratorConfig::default();
+    let (model, _ds, masks) = ctx.deployment(Workload::Cnn3, &acc, 0.3);
+    let plan = serving_fault_spec(&masks)
+        .and_then(|s| DeviceFaultPlan::parse(&s).ok())
+        .unwrap_or_else(DeviceFaultPlan::none);
+    let server = InferenceServer::spawn(
+        model,
+        acc,
+        EngineOptions::NOISY,
+        masks,
+        ServerConfig::builder()
+            .max_batch(4)
+            .batch_timeout(Duration::from_millis(2))
+            .workers(workers)
+            // the canary gate is opened fully: the phase measures the
+            // detect→quarantine→swap machinery and its conservation,
+            // not argmax agreement of a synthetic-fitted model
+            .repair(RepairServerConfig {
+                device_faults: plan,
+                inject_after_shards: cfg.inject_after_shards,
+                sentinel: true,
+                probe_period: cfg.probe_period,
+                canary_threshold: 0.0,
+            })
+            .build()
+            .expect("repair bench config validates"),
+    );
+    let http = HttpServer::bind(server, NetConfig::default()).expect("bind ephemeral");
+    let addr = http.local_addr();
+
+    let ds = crate::data::SyntheticDataset::new(crate::data::DatasetSpec::fmnist_like());
+    let bodies: Vec<String> = (0..16)
+        .map(|i| {
+            let (img, _) = ds.sample(0x51A9, i);
+            Json::obj(vec![("image", Json::arr_f64(&img.data))]).to_string()
+        })
+        .collect();
+
+    let started = Instant::now();
+    let deadline = started + cfg.duration;
+    let tallies: Vec<Tally> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.concurrency.max(1))
+            .map(|c| {
+                let bodies = &bodies;
+                s.spawn(move || drive_client(addr, bodies, deadline, c * 7919))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall_s = started.elapsed().as_secs_f64().max(1e-9);
+
+    // the quarantine gauge is per-replica labeled; sum it while the
+    // server is still up
+    let scraped = http_request(&addr, "GET", "/metrics", None)
+        .map(|r| r.body)
+        .unwrap_or_default();
+    let quarantined_cells = scraped
+        .lines()
+        .filter(|l| l.starts_with("scatter_quarantined_cells{"))
+        .filter_map(|l| l.rsplit(' ').next()?.parse::<f64>().ok())
+        .sum::<f64>() as u64;
+
+    let report = http.shutdown().expect("drain repair server");
+
+    let mut tally = Tally::default();
+    for t in &tallies {
+        tally.ok += t.ok;
+        tally.shed += t.shed;
+        tally.expired += t.expired;
+        tally.lost += t.lost;
+    }
+    ServePhase {
+        tally,
+        injected: report.faults_injected,
+        detections: report.fault_detections,
+        repairs: report.fault_repairs,
+        unrepairable: report.fault_unrepairable,
+        degraded: report.degraded.iter().filter(|&&d| d).count(),
+        detection_ms: report.fault_detection_latency_us as f64 / 1000.0,
+        quarantined_cells,
+        wall_s,
+    }
+}
+
+struct AccuracyPhase {
+    acc_clean: f64,
+    acc_faulty: f64,
+    acc_repaired: f64,
+    recovery: f64,
+    stuck_cells: usize,
+    findings: usize,
+    quarantined_cells: usize,
+}
+
+/// Offline triple on the twin: clean → stuck-faulted → repaired, same
+/// evaluation seed and sample set throughout.
+fn run_accuracy_phase(n_eval: usize) -> AccuracyPhase {
+    let ctx = BenchCtx::new(n_eval);
+    let acc = AcceleratorConfig::default();
+    let (model, ds, masks) = ctx.deployment(Workload::Cnn3, &acc, 0.3);
+    let (acc_clean, _) =
+        ctx.accuracy(&model, &ds, &acc, EngineOptions::NOISY, masks.clone(), n_eval);
+
+    let spec = stuck_fault_spec(&masks, 4);
+    let plan = DeviceFaultPlan::parse(&spec).expect("generated stuck spec parses");
+    let stuck_cells = plan.len();
+
+    // one engine carries faulty → repaired so the repair is measured
+    // against the exact fabric it ran on
+    let mut engine = PhotonicEngine::new(acc.clone(), EngineOptions::NOISY);
+    engine.set_masks(masks.clone());
+    if let Some((last, _, _)) = model.matmul_layers().last() {
+        engine.set_protected([last.clone()].into_iter().collect());
+    }
+    engine.set_device_faults(plan);
+    let acc_faulty = crate::data::evaluate_accuracy(&model, &mut engine, &ds, 0xE7A1, n_eval);
+
+    let findings = engine.sentinel_probe_all();
+    let mut quarantined_cells = 0usize;
+    if let Some((repaired, cells)) = engine.quarantine_masks(&findings) {
+        let gen = engine.mask_generation();
+        engine.apply_mask_update(repaired, gen + 1);
+        engine.record_quarantine(&findings);
+        quarantined_cells = cells;
+    }
+    let acc_repaired =
+        crate::data::evaluate_accuracy(&model, &mut engine, &ds, 0xE7A1, n_eval);
+
+    // fraction of the fault-induced drop the repair wins back; a fault
+    // too weak to move accuracy leaves nothing to recover
+    let drop = acc_clean - acc_faulty;
+    let recovery = if drop < 0.02 {
+        1.0
+    } else {
+        ((acc_repaired - acc_faulty) / drop).clamp(0.0, 1.0)
+    };
+    AccuracyPhase {
+        acc_clean,
+        acc_faulty,
+        acc_repaired,
+        recovery,
+        stuck_cells,
+        findings: findings.len(),
+        quarantined_cells,
+    }
+}
+
+/// Run the repair bench, print the summary table, write
+/// `BENCH_repair.json`, and return the rendered table.
+pub fn run(cfg: &RepairBenchConfig) -> String {
+    let serve = run_serve_phase(cfg);
+    let acc = run_accuracy_phase(100);
+
+    let mut table = Table::new("device-fault repair bench (sentinel + quarantine)")
+        .header(&["metric", "value"]);
+    table.row(vec!["serving duration".into(), format!("{:.2} s", serve.wall_s)]);
+    table.row(vec![
+        "ok / shed / expired / lost".into(),
+        format!(
+            "{} / {} / {} / {}",
+            serve.tally.ok, serve.tally.shed, serve.tally.expired, serve.tally.lost
+        ),
+    ]);
+    table.row(vec![
+        "faults injected / detections".into(),
+        format!("{} / {}", serve.injected, serve.detections),
+    ]);
+    table.row(vec![
+        "repairs / unrepairable / degraded".into(),
+        format!("{} / {} / {}", serve.repairs, serve.unrepairable, serve.degraded),
+    ]);
+    table.row(vec![
+        "detection latency".into(),
+        format!("{:.3} ms", serve.detection_ms),
+    ]);
+    table.row(vec![
+        "quarantined cells (serving)".into(),
+        format!("{}", serve.quarantined_cells),
+    ]);
+    table.row(vec![
+        "stuck cells / findings / cells gated (offline)".into(),
+        format!("{} / {} / {}", acc.stuck_cells, acc.findings, acc.quarantined_cells),
+    ]);
+    table.row(vec![
+        "accuracy clean → faulty → repaired".into(),
+        format!(
+            "{:.3} → {:.3} → {:.3}",
+            acc.acc_clean, acc.acc_faulty, acc.acc_repaired
+        ),
+    ]);
+    table.row(vec!["recovery".into(), format!("{:.3}", acc.recovery)]);
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("repair".into())),
+        ("concurrency", Json::Num(cfg.concurrency.max(1) as f64)),
+        ("workers", Json::Num(cfg.workers.max(1) as f64)),
+        ("duration_s", Json::Num(serve.wall_s)),
+        ("requests_ok", Json::Num(serve.tally.ok as f64)),
+        ("shed", Json::Num(serve.tally.shed as f64)),
+        ("expired", Json::Num(serve.tally.expired as f64)),
+        ("lost", Json::Num(serve.tally.lost as f64)),
+        ("faults_injected", Json::Num(serve.injected as f64)),
+        ("detections", Json::Num(serve.detections as f64)),
+        ("repairs", Json::Num(serve.repairs as f64)),
+        ("unrepairable", Json::Num(serve.unrepairable as f64)),
+        ("degraded", Json::Num(serve.degraded as f64)),
+        ("detection_ms", Json::Num(serve.detection_ms)),
+        ("quarantined_cells_serving", Json::Num(serve.quarantined_cells as f64)),
+        ("stuck_cells", Json::Num(acc.stuck_cells as f64)),
+        ("offline_findings", Json::Num(acc.findings as f64)),
+        ("quarantined_cells_offline", Json::Num(acc.quarantined_cells as f64)),
+        ("acc_clean", Json::Num(acc.acc_clean)),
+        ("acc_faulty", Json::Num(acc.acc_faulty)),
+        ("acc_repaired", Json::Num(acc.acc_repaired)),
+        ("recovery", Json::Num(acc.recovery)),
+    ]);
+    let path = repo_root_file("BENCH_repair.json");
+    match std::fs::write(&path, json.to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    table.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The generated stuck-fault spec round-trips through the plan
+    /// grammar and lands only on active cells of masked layers.
+    #[test]
+    fn stuck_spec_parses_and_covers_every_chunk() {
+        let ctx = BenchCtx::new(10);
+        let acc = AcceleratorConfig::default();
+        let (_model, _ds, masks) = ctx.deployment(Workload::Cnn3, &acc, 0.3);
+        let spec = stuck_fault_spec(&masks, 2);
+        let plan = DeviceFaultPlan::parse(&spec).expect("spec parses");
+        assert!(!plan.is_empty(), "masked deployment must yield stuck cells");
+        let chunks: usize = masks.values().map(|lm| lm.p * lm.q).sum();
+        assert!(
+            plan.len() <= chunks * 2,
+            "at most per_chunk faults per chunk: {} > {}",
+            plan.len(),
+            chunks * 2
+        );
+    }
+
+    /// The serving fault targets an active column (a masked-off column
+    /// would neither deviate from its golden nor be quarantinable).
+    #[test]
+    fn serving_fault_spec_hits_an_active_column() {
+        let ctx = BenchCtx::new(10);
+        let acc = AcceleratorConfig::default();
+        let (_model, _ds, masks) = ctx.deployment(Workload::Cnn3, &acc, 0.3);
+        let spec = serving_fault_spec(&masks).expect("masked deployment");
+        let plan = DeviceFaultPlan::parse(&spec).expect("spec parses");
+        assert_eq!(plan.len(), 1);
+        let (layer, lm) = masks.iter().next().expect("non-empty");
+        assert!(spec.starts_with(&format!("dead-branch@{layer}")));
+        let j: usize = spec.rsplit(":i").next().unwrap().parse().expect("col index");
+        assert!(lm.chunk(0, 0).col[j], "target column must be active");
+    }
+}

@@ -28,6 +28,7 @@ use crate::exec::{
 use crate::nn::MatmulEngine;
 use crate::power::{EnergyAccumulator, EnergyReport, PowerModel};
 use crate::ptc::crossbar::{ColumnMode, ForwardOptions, ProgrammedPtc, PtcSimulator};
+use crate::ptc::faults::{BlockFault, DeviceFaultPlan};
 use crate::quant::{SymmetricQuant, UnsignedQuant};
 use crate::sparsity::{mask_power_mw, ChunkMask, LayerMask};
 use crate::thermal::drift::layer_stream_id;
@@ -74,6 +75,10 @@ struct ProgrammedChunk {
     /// after a drift re-realization without re-deriving the schedule).
     row_limit: usize,
     col_limit: usize,
+    /// Program-time sentinel digest of the *fault-free* realization,
+    /// captured before device faults pin in — the reference
+    /// [`PhotonicEngine::sentinel_probe_all`] compares against.
+    golden: SentinelGolden,
     /// Runtime thermal-drift state; `None` when the drift runtime is off.
     drift: Option<ChunkDrift>,
 }
@@ -124,6 +129,38 @@ impl ProgrammedChunk {
         // is executing — keep the hot-swap attribution
         self.plan.mask_gen = mask_gen;
     }
+}
+
+/// Program-time sentinel reference for one chunk: the fixed-seed probe
+/// response plus the gain-folded weight surface of the *fault-free*
+/// realization. Captured in `program_chunk` before device faults pin
+/// in, so a faulted chunk deviates from its own golden immediately.
+#[derive(Default)]
+struct SentinelGolden {
+    /// `plan.sentinel_response(probe)` of the clean plan.
+    response: Vec<f64>,
+    /// Clean `plan.w` (same gather tables as the live plan — faults
+    /// never touch port gains), used to localize a flagged chunk to
+    /// specific rows/columns.
+    w: Vec<f64>,
+}
+
+/// One sentinel detection: a chunk whose live execution plan deviates
+/// from its program-time golden digest, localized to the chunk-local
+/// row/column coordinates to quarantine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SentinelFinding {
+    pub layer: String,
+    /// Chunk index `pi·q + qi` within the layer's grid.
+    pub chunk: usize,
+    /// Chunk-local rows to quarantine (dead-PD signature: a whole row
+    /// deviates).
+    pub rows: Vec<usize>,
+    /// Chunk-local columns to quarantine (stuck-MZI / dead-branch
+    /// signature).
+    pub cols: Vec<usize>,
+    /// Largest per-weight deviation observed (diagnostic).
+    pub worst_dev: f64,
 }
 
 /// One distinct activation gather table within a chunk-column `qi`.
@@ -266,6 +303,14 @@ pub struct PhotonicEngine {
     /// reprogramming — flushed lazily at the layer's next matmul call,
     /// where the weight matrix is in hand.
     pending_reprogram: BTreeMap<String, Vec<usize>>,
+    /// Hardware-defect plan lowered onto every chunk at programming time
+    /// (and re-lowered on every reprogram — broken devices stay broken).
+    device_faults: DeviceFaultPlan,
+    /// Promoted quarantines: layer → (chunk, rows, cols) cells that must
+    /// stay masked off in every future mask generation. Intersected into
+    /// incoming [`Self::apply_mask_update`] sets so a DST step can never
+    /// resurrect a column that was quarantined around a dead device.
+    quarantined: BTreeMap<String, Vec<(usize, Vec<usize>, Vec<usize>)>>,
     energy: EnergyAccumulator,
     rng: crate::util::XorShiftRng,
     /// Worker threads for the compiled execution path (1 = inline).
@@ -310,6 +355,8 @@ impl PhotonicEngine {
             thermal: None,
             mask_generation: 0,
             pending_reprogram: BTreeMap::new(),
+            device_faults: DeviceFaultPlan::none(),
+            quarantined: BTreeMap::new(),
             energy: EnergyAccumulator::new(),
             rng,
             threads: 1,
@@ -385,9 +432,13 @@ impl PhotonicEngine {
     /// scheduled for reprogramming across all programmed layers.
     pub fn apply_mask_update(
         &mut self,
-        masks: BTreeMap<String, LayerMask>,
+        mut masks: BTreeMap<String, LayerMask>,
         generation: u64,
     ) -> usize {
+        // promoted quarantines outlive any one generation: a DST step
+        // re-activating a column that sits over a dead device would
+        // re-expose the fault, so intersect them into every update
+        self.intersect_quarantine(&mut masks);
         let (rows, cols) = self.cfg.chunk_shape();
         let dense = ChunkMask::dense(rows, cols);
         let mut dirty_total = 0usize;
@@ -427,6 +478,255 @@ impl PhotonicEngine {
         self.masks = masks;
         self.mask_generation = generation;
         dirty_total
+    }
+
+    /// Intersect every promoted quarantine into `masks` (cells out of
+    /// range for a layer's current grid are skipped — a reshaped layer
+    /// gets a fresh fault lifecycle).
+    fn intersect_quarantine(&self, masks: &mut BTreeMap<String, LayerMask>) {
+        for (layer, entries) in &self.quarantined {
+            let Some(lm) = masks.get_mut(layer) else { continue };
+            if lm.q == 0 {
+                continue;
+            }
+            for (chunk, rows, cols) in entries {
+                let (pi, qi) = (chunk / lm.q, chunk % lm.q);
+                if pi >= lm.p {
+                    continue;
+                }
+                let cm = lm.chunk_mut(pi, qi);
+                for &r in rows {
+                    if r < cm.row.len() {
+                        cm.row[r] = false;
+                    }
+                }
+                for &c in cols {
+                    if c < cm.col.len() {
+                        cm.col[c] = false;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Install a device-fault plan **before** programming (the
+    /// `scatter serve --device-faults` startup path). Clears the
+    /// programming cache so every chunk re-programs with its faults
+    /// pinned — and with a clean golden digest captured first, so the
+    /// sentinel detects the defects at its very first probe.
+    pub fn set_device_faults(&mut self, plan: DeviceFaultPlan) {
+        self.device_faults = plan;
+        self.programmed.clear();
+        self.pending_reprogram.clear();
+    }
+
+    pub fn device_faults(&self) -> &DeviceFaultPlan {
+        &self.device_faults
+    }
+
+    /// Break devices **mid-life**: lower `plan` onto every programmed
+    /// chunk in place (recompiling only the affected plans, like a
+    /// thermal rebake) and merge it into the stored fault plan so later
+    /// reprograms re-acquire the damage. Golden digests are deliberately
+    /// NOT refreshed — that is the whole point: the sentinel compares
+    /// the now-faulted fabric against its pre-fault reference. Returns
+    /// the number of programmed chunks hit.
+    pub fn inject_device_faults(&mut self, plan: &DeviceFaultPlan) -> usize {
+        self.device_faults.extend(plan);
+        let (k1, k2) = (self.cfg.k1, self.cfg.k2);
+        let (r, c) = (self.cfg.share_r, self.cfg.share_c);
+        let mut hit = 0usize;
+        for (layer, pl) in &mut self.programmed {
+            for (idx, chunk) in pl.chunks.iter_mut().enumerate() {
+                let lowered = plan.block_faults(layer, idx, k1, k2, r, c);
+                if lowered.is_empty() {
+                    continue;
+                }
+                let mut per_block: Vec<Vec<BlockFault>> =
+                    vec![Vec::new(); chunk.blocks.len()];
+                for (b, f) in lowered {
+                    per_block[b].push(f);
+                }
+                for (b, fs) in per_block.into_iter().enumerate() {
+                    if fs.is_empty() {
+                        continue;
+                    }
+                    let mut all = chunk.blocks[b].faults().to_vec();
+                    all.extend(fs);
+                    chunk.blocks[b].set_faults(all);
+                }
+                let mask_gen = chunk.plan.mask_gen;
+                chunk.plan = ChunkPlan::from_blocks(
+                    &chunk.blocks,
+                    r,
+                    c,
+                    chunk.row_limit,
+                    chunk.col_limit,
+                    chunk.noise_std,
+                );
+                chunk.plan.mask_gen = mask_gen;
+                hit += 1;
+            }
+        }
+        hit
+    }
+
+    /// Sentinel probe: replay the fixed-seed probe vector through every
+    /// programmed chunk's live execution plan and compare against the
+    /// program-time golden digest, localizing deviations to chunk-local
+    /// rows/columns. O(active rows) per healthy chunk (response compare
+    /// only); the O(rows·cols) weight-surface diff runs only for flagged
+    /// chunks. Runs entirely on the twin's compiled plans — live traffic
+    /// is never touched.
+    ///
+    /// The tolerance absorbs residual thermal drift: recalibration
+    /// restores programming-time weights exactly, so golden-vs-live
+    /// deviation from drift is bounded by the residual phase error, not
+    /// the total excursion.
+    pub fn sentinel_probe_all(&self) -> Vec<SentinelFinding> {
+        let tol = 1e-9 + 4.0 * self.thermal_phase_error_rad();
+        let mut findings = Vec::new();
+        for (layer, pl) in &self.programmed {
+            for (idx, chunk) in pl.chunks.iter().enumerate() {
+                let plan = &chunk.plan;
+                let g = &chunk.golden;
+                let nc = plan.n_active_cols();
+                let nr = plan.rows.len();
+                if nr == 0 || g.response.len() != nr || g.w.len() != nr * nc {
+                    continue;
+                }
+                let probe = ChunkPlan::sentinel_probe(nc);
+                let resp = plan.sentinel_response(&probe);
+                // deviations can add coherently across a row's columns
+                let resp_tol = tol * (nc as f64).max(1.0);
+                let flagged =
+                    resp.iter().zip(&g.response).any(|(a, b)| (a - b).abs() > resp_tol);
+                if !flagged {
+                    continue;
+                }
+                // localization: diff the gain-folded weight surfaces
+                let mut worst = 0.0f64;
+                let mut row_hits = vec![0usize; nr];
+                let mut row_nz = vec![0usize; nr];
+                let mut col_hits = vec![0usize; nc];
+                for ri in 0..nr {
+                    for ci in 0..nc {
+                        if g.w[ri * nc + ci].abs() > tol {
+                            row_nz[ri] += 1;
+                        }
+                        let dev = (plan.w[ri * nc + ci] - g.w[ri * nc + ci]).abs();
+                        if dev > tol {
+                            row_hits[ri] += 1;
+                            col_hits[ci] += 1;
+                            worst = worst.max(dev);
+                        }
+                    }
+                }
+                // a row deviating across most of its live cells is a
+                // dead output (PD row); isolated deviations implicate
+                // their columns (stuck MZI / dead rerouter branch)
+                let dead_row: Vec<bool> = (0..nr)
+                    .map(|ri| row_hits[ri] >= 2 && 2 * row_hits[ri] > row_nz[ri])
+                    .collect();
+                let rows_q: Vec<usize> = (0..nr)
+                    .filter(|&ri| dead_row[ri])
+                    .map(|ri| plan.rows[ri] as usize)
+                    .collect();
+                let mut cols_q: Vec<usize> = Vec::new();
+                for ci in 0..nc {
+                    if col_hits[ci] == 0 {
+                        continue;
+                    }
+                    let outside = (0..nr).any(|ri| {
+                        !dead_row[ri]
+                            && (plan.w[ri * nc + ci] - g.w[ri * nc + ci]).abs() > tol
+                    });
+                    if outside {
+                        cols_q.push(plan.cols[ci] as usize);
+                    }
+                }
+                findings.push(SentinelFinding {
+                    layer: layer.clone(),
+                    chunk: idx,
+                    rows: rows_q,
+                    cols: cols_q,
+                    worst_dev: worst,
+                });
+            }
+        }
+        findings
+    }
+
+    /// Build the repair-mask candidate for `findings`: the current mask
+    /// set with every localized row/column quarantined (set inactive).
+    /// Returns the new masks plus the number of newly-quarantined cells,
+    /// or `None` when the fabric is **unrepairable** — a faulted layer
+    /// carries no mask (deployed dense: no rerouter tree to steer light
+    /// away with), its grid no longer matches, or the findings localize
+    /// no cells at all (nothing a mask swap could route around).
+    ///
+    /// This is a pure computation: nothing is recorded until the swap
+    /// survives its canary and the caller promotes it with
+    /// [`Self::record_quarantine`] — a rolled-back repair leaves no
+    /// trace, exactly like a rolled-back DST step.
+    pub fn quarantine_masks(
+        &self,
+        findings: &[SentinelFinding],
+    ) -> Option<(BTreeMap<String, LayerMask>, usize)> {
+        let mut masks = self.masks.clone();
+        let mut cells = 0usize;
+        for f in findings {
+            let lm = masks.get_mut(&f.layer)?;
+            let pl = self.programmed.get(&f.layer)?;
+            if lm.p != pl.p || lm.q != pl.q || pl.q == 0 {
+                return None;
+            }
+            let (pi, qi) = (f.chunk / pl.q, f.chunk % pl.q);
+            if pi >= pl.p {
+                return None;
+            }
+            let cm = lm.chunk_mut(pi, qi);
+            for &r in &f.rows {
+                if r < cm.row.len() && cm.row[r] {
+                    cm.row[r] = false;
+                    cells += 1;
+                }
+            }
+            for &c in &f.cols {
+                if c < cm.col.len() && cm.col[c] {
+                    cm.col[c] = false;
+                    cells += 1;
+                }
+            }
+        }
+        if cells == 0 {
+            return None;
+        }
+        Some((masks, cells))
+    }
+
+    /// Promote `findings` into the persistent quarantine record (called
+    /// after the repair swap survives its canary): every future
+    /// [`Self::apply_mask_update`] — DST steps included — re-intersects
+    /// these cells, so the fabric never routes light back over a dead
+    /// device.
+    pub fn record_quarantine(&mut self, findings: &[SentinelFinding]) {
+        for f in findings {
+            self.quarantined.entry(f.layer.clone()).or_default().push((
+                f.chunk,
+                f.rows.clone(),
+                f.cols.clone(),
+            ));
+        }
+    }
+
+    /// Total (row + column) cells in the promoted quarantine record.
+    pub fn quarantined_cell_count(&self) -> usize {
+        self.quarantined
+            .values()
+            .flat_map(|v| v.iter())
+            .map(|(_, rows, cols)| rows.len() + cols.len())
+            .sum()
     }
 
     /// Mark layers for non-adjacent-column deployment (§4.1: "we protect
@@ -769,6 +1069,30 @@ impl PhotonicEngine {
         let col_limit = cols.min(in_dim - qi * cols);
         let mut plan = ChunkPlan::from_blocks(&blocks, r, c, row_limit, col_limit, noise_std);
         plan.mask_gen = self.mask_generation;
+        // sentinel golden: digest the *fault-free* realization before
+        // any device defect pins in, so a faulted chunk deviates from
+        // its own golden at the very first probe
+        let probe = ChunkPlan::sentinel_probe(plan.n_active_cols());
+        let golden =
+            SentinelGolden { response: plan.sentinel_response(&probe), w: plan.w.clone() };
+        // pin hardware defects and recompile. Faults mutate realized
+        // weights only — never port gains — so the faulted plan keeps
+        // the exact gather tables the golden was captured with.
+        let lowered = self.device_faults.block_faults(layer, pi * q + qi, k1, k2, r, c);
+        if !lowered.is_empty() {
+            let mut per_block: Vec<Vec<BlockFault>> = vec![Vec::new(); blocks.len()];
+            for (b, f) in lowered {
+                per_block[b].push(f);
+            }
+            for (b, fs) in per_block.into_iter().enumerate() {
+                if !fs.is_empty() {
+                    blocks[b].set_faults(fs);
+                }
+            }
+            let mask_gen = plan.mask_gen;
+            plan = ChunkPlan::from_blocks(&blocks, r, c, row_limit, col_limit, noise_std);
+            plan.mask_gen = mask_gen;
+        }
         // attach the runtime drift fingerprints (counter-based:
         // reprogramming the same layer re-derives them exactly)
         let drift = self.thermal.as_ref().map(|st| {
@@ -798,6 +1122,7 @@ impl PhotonicEngine {
             plan,
             row_limit,
             col_limit,
+            golden,
             drift,
         }
     }
@@ -1716,6 +2041,119 @@ mod tests {
         assert_eq!(s.recal_events, 1, "cadence counts from the last recal");
         let s = eng.thermal_tick(0.0, 20).expect("on");
         assert_eq!(s.recal_events, 2);
+    }
+
+    #[test]
+    fn sentinel_detects_and_localizes_injected_faults() {
+        let cfg = small_cfg(crate::config::SparsitySupport::FULL);
+        let (w, x) = problem(128, 128, 4, 41);
+        let (mask, _) = swap_masks();
+        let mut eng = PhotonicEngine::new(cfg, drift_opts());
+        eng.set_masks(one_layer(&mask));
+        let y0 = eng.matmul("l", &w, &x, 128, 128, 4);
+        assert!(eng.sentinel_probe_all().is_empty(), "clean fabric: no findings");
+
+        // break an active rerouter branch in chunk (0,1) and an active
+        // PD row in chunk (1,0)
+        let j = mask.chunk(0, 1).col.iter().position(|&m| m).expect("active col");
+        let ri = mask.chunk(1, 0).row.iter().position(|&m| m).expect("active row");
+        let plan = crate::ptc::DeviceFaultPlan::parse(&format!(
+            "dead-branch@l:c1:i{j},dead-pd@l:c2:r{ri}"
+        ))
+        .expect("valid spec");
+        assert_eq!(eng.inject_device_faults(&plan), 2, "two chunks hit");
+        let y1 = eng.matmul("l", &w, &x, 128, 128, 4);
+        assert_ne!(y0, y1, "dead devices must corrupt the output");
+
+        let findings = eng.sentinel_probe_all();
+        assert_eq!(findings.len(), 2, "both faulted chunks flagged: {findings:?}");
+        let branch = &findings[0];
+        assert_eq!((branch.layer.as_str(), branch.chunk), ("l", 1));
+        assert_eq!(branch.cols, vec![j], "dead branch localizes to its column");
+        assert!(branch.rows.is_empty(), "no dead row in chunk 1: {branch:?}");
+        let pd = &findings[1];
+        assert_eq!((pd.layer.as_str(), pd.chunk), ("l", 2));
+        assert_eq!(pd.rows, vec![ri], "dead PD localizes to its row");
+        assert!(pd.cols.is_empty(), "no dead column in chunk 2: {pd:?}");
+        assert!(pd.worst_dev > 1e-6, "dead weights deviate visibly");
+    }
+
+    #[test]
+    fn repair_restores_untouched_rows_bit_for_bit() {
+        let cfg = small_cfg(crate::config::SparsitySupport::FULL);
+        let (w, x) = problem(128, 128, 4, 42);
+        let (mask, _) = swap_masks();
+        let mut eng = PhotonicEngine::new(cfg.clone(), drift_opts());
+        eng.set_masks(one_layer(&mask));
+        let y_clean = eng.matmul("l", &w, &x, 128, 128, 4);
+
+        // fault confined to chunk (0,1) → output rows 64.. (the pi = 1
+        // band) are served by untouched chunks throughout
+        let j = mask.chunk(0, 1).col.iter().position(|&m| m).expect("active col");
+        let plan =
+            crate::ptc::DeviceFaultPlan::parse(&format!("dead-branch@l:c1:i{j}")).unwrap();
+        assert_eq!(eng.inject_device_faults(&plan), 1);
+        let y_fault = eng.matmul("l", &w, &x, 128, 128, 4);
+        assert_ne!(y_clean[..64 * 4], y_fault[..64 * 4], "faulted band corrupts");
+        assert_eq!(y_clean[64 * 4..], y_fault[64 * 4..], "other band untouched");
+
+        // detect → quarantine → hot-swap repair
+        let findings = eng.sentinel_probe_all();
+        assert_eq!(findings.len(), 1);
+        let (repaired, cells) =
+            eng.quarantine_masks(&findings).expect("masked layer is repairable");
+        assert_eq!(cells, 1, "exactly the dead column is quarantined");
+        assert_eq!(eng.apply_mask_update(repaired.clone(), 1), 1, "one dirty chunk");
+        let y_rep = eng.matmul("l", &w, &x, 128, 128, 4);
+        assert_eq!(
+            y_clean[64 * 4..],
+            y_rep[64 * 4..],
+            "rows outside the quarantined chunk are bit-identical to pre-fault"
+        );
+        // the reprogram re-baselined the golden around the (now masked)
+        // dead branch: the sentinel is quiet again
+        assert!(eng.sentinel_probe_all().is_empty(), "repaired fabric probes clean");
+
+        // repaired state == fresh deployment with the same quarantine
+        // masks on equally-broken hardware, bit for bit
+        let mut fresh = PhotonicEngine::new(cfg, drift_opts());
+        fresh.set_device_faults(plan.clone());
+        fresh.set_masks(repaired);
+        let y_fresh = fresh.matmul("l", &w, &x, 128, 128, 4);
+        assert_eq!(y_rep, y_fresh, "repair swap == fresh program, bit for bit");
+
+        // promote the quarantine: a later DST step proposing the
+        // original mask must not resurrect the dead column
+        eng.record_quarantine(&findings);
+        assert_eq!(eng.quarantined_cell_count(), 1);
+        assert_eq!(
+            eng.apply_mask_update(one_layer(&mask), 2),
+            0,
+            "the resurrection intersects away to the installed masks"
+        );
+        assert!(
+            !eng.masks().get("l").expect("layer").chunk(0, 1).col[j],
+            "quarantined column stays off across generations"
+        );
+    }
+
+    #[test]
+    fn unmasked_layer_faults_are_unrepairable() {
+        let cfg = small_cfg(crate::config::SparsitySupport::FULL);
+        let (w, x) = problem(64, 64, 2, 43);
+        let mut eng = PhotonicEngine::new(cfg, drift_opts());
+        // startup-path faults: installed before programming, detected at
+        // the first probe
+        eng.set_device_faults(
+            crate::ptc::DeviceFaultPlan::parse("stuck@l:c0:r3:i4:p1.2").unwrap(),
+        );
+        let _ = eng.matmul("l", &w, &x, 64, 64, 2);
+        let findings = eng.sentinel_probe_all();
+        assert_eq!(findings.len(), 1, "startup fault visible at first probe");
+        assert_eq!(findings[0].cols, vec![4], "stuck MZI implicates its column");
+        // ...but the layer was deployed dense (no mask): there is no
+        // rerouter tree to steer light away with — unrepairable
+        assert!(eng.quarantine_masks(&findings).is_none());
     }
 
     #[test]

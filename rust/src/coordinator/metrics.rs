@@ -10,8 +10,16 @@
 //! [`ServerReport`]: crate::coordinator::ServerReport
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Poison-tolerant lock: a metrics mutex is only ever held across a few
+/// stores, so state behind a poisoned one is still consistent — and a
+/// metrics read must never amplify an engine-worker panic into a
+/// front-end panic.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// Records request latencies and computes percentiles.
 ///
@@ -174,6 +182,29 @@ pub struct ServerMetrics {
     /// Rerouter hold-power estimate (mW) of the newest promoted
     /// artifact; the deployment baseline reports 0 (unknown).
     mask_power_mw: Mutex<f64>,
+    /// Server start instant: `scatter_uptime_seconds`, and the epoch the
+    /// fault injection/detection stamps below are measured from.
+    started: Instant,
+    /// Device-fault injections applied to engine fabrics.
+    faults_injected: AtomicU64,
+    /// µs after `started` of the first fault injection (0 = none yet).
+    fault_injected_at_us: AtomicU64,
+    /// Faulted chunks flagged by the sentinel probe.
+    fault_detections: AtomicU64,
+    /// µs after `started` of the first sentinel detection (0 = none yet).
+    fault_detected_at_us: AtomicU64,
+    /// Quarantine repairs promoted by the repair canary.
+    fault_repairs: AtomicU64,
+    /// Sentinel findings that could not be quarantined; each permanently
+    /// degrades its replica.
+    fault_unrepairable: AtomicU64,
+    /// Per-replica degraded flag (unrepairable device fault).
+    worker_degraded: Vec<AtomicBool>,
+    /// Per-replica quarantined weight-cell gauge.
+    quarantined_cells: Vec<AtomicU64>,
+    /// Mask artifacts skipped by the startup artifact-dir scan
+    /// (truncated, corrupt, or foreign files).
+    artifacts_skipped: AtomicU64,
 }
 
 /// Upper bounds of the batch-occupancy histogram buckets (requests per
@@ -238,13 +269,77 @@ impl ServerMetrics {
             mask_swaps: AtomicU64::new(0),
             mask_rollbacks: AtomicU64::new(0),
             mask_power_mw: Mutex::new(0.0),
+            started: Instant::now(),
+            faults_injected: AtomicU64::new(0),
+            fault_injected_at_us: AtomicU64::new(0),
+            fault_detections: AtomicU64::new(0),
+            fault_detected_at_us: AtomicU64::new(0),
+            fault_repairs: AtomicU64::new(0),
+            fault_unrepairable: AtomicU64::new(0),
+            worker_degraded: (0..workers.max(1)).map(|_| AtomicBool::new(false)).collect(),
+            quarantined_cells: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            artifacts_skipped: AtomicU64::new(0),
         }
+    }
+
+    /// Stamp `slot` with "now" (µs after server start, min 1 so 0 keeps
+    /// meaning "never") unless it was already stamped.
+    fn stamp_first(&self, slot: &AtomicU64) {
+        let now = (self.started.elapsed().as_micros() as u64).max(1);
+        let _ = slot.compare_exchange(0, now, Ordering::AcqRel, Ordering::Acquire);
+    }
+
+    /// `n` device-fault injections applied to an engine fabric.
+    pub fn note_faults_injected(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.faults_injected.fetch_add(n, Ordering::Relaxed);
+        self.stamp_first(&self.fault_injected_at_us);
+    }
+
+    /// `n` faulted chunks flagged by a sentinel probe.
+    pub fn note_fault_detections(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.fault_detections.fetch_add(n, Ordering::Relaxed);
+        self.stamp_first(&self.fault_detected_at_us);
+    }
+
+    /// One quarantine repair promoted by the repair canary.
+    pub fn note_fault_repair(&self) {
+        self.fault_repairs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One sentinel finding that could not be quarantined.
+    pub fn note_fault_unrepairable(&self) {
+        self.fault_unrepairable.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Set/clear replica `widx`'s degraded (unrepairable-fault) flag.
+    pub fn set_worker_degraded(&self, widx: usize, on: bool) {
+        if let Some(flag) = self.worker_degraded.get(widx) {
+            flag.store(on, Ordering::Release);
+        }
+    }
+
+    /// Overwrite replica `widx`'s quarantined weight-cell gauge.
+    pub fn set_worker_quarantined_cells(&self, widx: usize, cells: u64) {
+        if let Some(slot) = self.quarantined_cells.get(widx) {
+            slot.store(cells, Ordering::Relaxed);
+        }
+    }
+
+    /// `n` mask artifacts skipped by the startup artifact-dir scan.
+    pub fn note_artifacts_skipped(&self, n: u64) {
+        self.artifacts_skipped.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Record one successfully served request.
     pub fn record_served(&self, latency: Duration) {
         let us = latency.as_micros() as u64;
-        self.latencies.lock().unwrap().push(us);
+        lock_clean(&self.latencies).push(us);
         self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
         self.lat_max_us.fetch_max(us, Ordering::Relaxed);
         self.served.fetch_add(1, Ordering::Relaxed);
@@ -349,20 +444,20 @@ impl ServerMetrics {
 
     /// Overwrite the promoted-artifact rerouter-power gauge (mW).
     pub fn set_mask_power_mw(&self, mw: f64) {
-        *self.mask_power_mw.lock().unwrap() = mw;
+        *lock_clean(&self.mask_power_mw) = mw;
     }
 
     /// Overwrite worker `widx`'s cumulative energy ledger snapshot.
     pub fn set_worker_energy(&self, widx: usize, energy_mj: f64, busy_ms: f64) {
         if let Some(slot) = self.energy.get(widx) {
-            *slot.lock().unwrap() = (energy_mj, busy_ms);
+            *lock_clean(slot) = (energy_mj, busy_ms);
         }
     }
 
     /// Overwrite worker `widx`'s thermal-drift gauges after a tick.
     pub fn set_worker_thermal(&self, widx: usize, g: ThermalGauges) {
         if let Some(slot) = self.thermal.get(widx) {
-            *slot.lock().unwrap() = g;
+            *lock_clean(slot) = g;
         }
     }
 
@@ -371,19 +466,19 @@ impl ServerMetrics {
     /// Percentiles cover the sliding [`LATENCY_WINDOW`]; count, mean,
     /// and max are exact over the whole run.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut window = self.latencies.lock().unwrap().samples_us.clone();
+        let mut window = lock_clean(&self.latencies).samples_us.clone();
         window.sort_unstable();
         let (energy_mj, busy_ms) = self
             .energy
             .iter()
-            .map(|s| *s.lock().unwrap())
+            .map(|s| *lock_clean(s))
             .fold((0.0, 0.0), |(e, b), (de, db)| (e + de, b + db));
         // thermal: worst-case drift/error across workers, summed counters
         let mut thermal_drift_rad = 0.0f64;
         let mut thermal_phase_error_rad = 0.0f64;
         let (mut recalibrations, mut recal_chunks, mut thermal_chunks) = (0u64, 0u64, 0u64);
         for slot in &self.thermal {
-            let g = *slot.lock().unwrap();
+            let g = *lock_clean(slot);
             if g.drift_rad.abs() > thermal_drift_rad.abs() {
                 thermal_drift_rad = g.drift_rad;
             }
@@ -413,7 +508,31 @@ impl ServerMetrics {
             .iter()
             .filter(|f| f.load(Ordering::Acquire))
             .count();
+        let worker_degraded: Vec<bool> =
+            self.worker_degraded.iter().map(|f| f.load(Ordering::Acquire)).collect();
+        let degraded_active = worker_degraded.iter().filter(|&&d| d).count();
+        let injected_at = self.fault_injected_at_us.load(Ordering::Acquire);
+        let detected_at = self.fault_detected_at_us.load(Ordering::Acquire);
+        let fault_detection_latency_us = if injected_at > 0 && detected_at > 0 {
+            detected_at.saturating_sub(injected_at)
+        } else {
+            0
+        };
         MetricsSnapshot {
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            faults_injected: self.faults_injected.load(Ordering::Relaxed),
+            fault_detections: self.fault_detections.load(Ordering::Relaxed),
+            fault_repairs: self.fault_repairs.load(Ordering::Relaxed),
+            fault_unrepairable: self.fault_unrepairable.load(Ordering::Relaxed),
+            fault_detection_latency_us,
+            worker_degraded,
+            degraded_active,
+            quarantined_cells: self
+                .quarantined_cells
+                .iter()
+                .map(|s| s.load(Ordering::Relaxed))
+                .collect(),
+            artifacts_skipped: self.artifacts_skipped.load(Ordering::Relaxed),
             workers_configured: worker_up.len(),
             workers_live,
             worker_up,
@@ -471,6 +590,27 @@ impl ServerMetrics {
 /// Point-in-time view of [`ServerMetrics`].
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Seconds since the metrics registry (≈ the server) came up.
+    pub uptime_s: f64,
+    /// Device-fault injections applied to engine fabrics.
+    pub faults_injected: u64,
+    /// Faulted chunks flagged by the sentinel probe.
+    pub fault_detections: u64,
+    /// Quarantine repairs promoted by the repair canary.
+    pub fault_repairs: u64,
+    /// Sentinel findings that could not be quarantined.
+    pub fault_unrepairable: u64,
+    /// µs between the first fault injection and the first sentinel
+    /// detection (0 until both have happened).
+    pub fault_detection_latency_us: u64,
+    /// Per-replica degraded flag (unrepairable device fault).
+    pub worker_degraded: Vec<bool>,
+    /// Replicas currently degraded.
+    pub degraded_active: usize,
+    /// Per-replica quarantined weight-cell gauge.
+    pub quarantined_cells: Vec<u64>,
+    /// Mask artifacts skipped by the startup artifact-dir scan.
+    pub artifacts_skipped: u64,
     /// Worker slots the server was configured with.
     pub workers_configured: usize,
     /// Worker slots currently live (respawned as needed).
@@ -744,6 +884,43 @@ mod tests {
         assert_eq!(s.mask_swaps, 1);
         assert_eq!(s.mask_rollbacks, 1);
         assert!((s.mask_power_mw - 18.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_lifecycle_counters_and_detection_latency() {
+        let m = ServerMetrics::new(2);
+        let s = m.snapshot();
+        assert_eq!(
+            (s.faults_injected, s.fault_detections, s.fault_repairs, s.fault_unrepairable),
+            (0, 0, 0, 0)
+        );
+        assert_eq!(s.fault_detection_latency_us, 0, "no stamps yet");
+        assert_eq!(s.worker_degraded, vec![false, false]);
+        assert!(s.uptime_s >= 0.0);
+
+        m.note_fault_detections(0); // a clean probe must not stamp
+        assert_eq!(m.snapshot().fault_detection_latency_us, 0);
+
+        m.note_faults_injected(2);
+        std::thread::sleep(Duration::from_millis(2));
+        m.note_fault_detections(2);
+        m.note_fault_detections(1); // later detections keep the first stamp
+        m.note_fault_repair();
+        m.note_fault_unrepairable();
+        m.set_worker_degraded(1, true);
+        m.set_worker_quarantined_cells(0, 3);
+        m.set_worker_degraded(9, true); // out-of-range slots are ignored
+        m.note_artifacts_skipped(4);
+        let s = m.snapshot();
+        assert_eq!(s.faults_injected, 2);
+        assert_eq!(s.fault_detections, 3);
+        assert_eq!(s.fault_repairs, 1);
+        assert_eq!(s.fault_unrepairable, 1);
+        assert!(s.fault_detection_latency_us >= 1_000, "detected after the injection");
+        assert_eq!(s.worker_degraded, vec![false, true]);
+        assert_eq!(s.degraded_active, 1);
+        assert_eq!(s.quarantined_cells, vec![3, 0]);
+        assert_eq!(s.artifacts_skipped, 4);
     }
 
     #[test]

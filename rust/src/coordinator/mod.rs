@@ -39,6 +39,6 @@ pub use metrics::{LatencyRecorder, MetricsSnapshot, ServerMetrics, ThermalGauges
 pub use net::{HttpServer, NetConfig};
 pub use scheduler::{ChunkAssignment, ClusterConfig, LayerSchedule, ReplicaState, Scheduler};
 pub use server::{
-    DstServerConfig, InferenceServer, Reply, ReplyResult, ServeError, ServerConfig,
-    ServerConfigBuilder, ServerReport, SupervisorConfig, ThermalServerConfig,
+    DstServerConfig, InferenceServer, RepairServerConfig, Reply, ReplyResult, ServeError,
+    ServerConfig, ServerConfigBuilder, ServerReport, SupervisorConfig, ThermalServerConfig,
 };

@@ -21,12 +21,20 @@
 //!   "deadline_ms":n?}`; replies `{"class":k, "logits":[...],
 //!   "latency_us":n, "batch_size":b, "energy_mj":e}` (`energy_mj` is the
 //!   request's column share of its batched engine pass).
-//! * `GET /healthz` — liveness + current queue depth.
+//! * `GET /healthz` — liveness: 200 while any worker serves (status
+//!   `degraded` plus a `reason` when below full strength — a slot down,
+//!   browned out, or carrying an unrepairable device fault), 503 only
+//!   when zero workers are live.
+//! * `GET /readyz` — readiness: 503 while draining, with zero live
+//!   workers, or with every replica degraded; load balancers route away
+//!   on `/readyz` long before `/healthz` would restart the process.
 //! * `GET /metrics` — Prometheus text format: request/shed/expired
 //!   counters, the `scatter_batch_occupancy` histogram, p50/p99
 //!   latency, queue depth, energy and average power from the engine
-//!   ledgers, and the cluster-routing series (per-replica routed
-//!   shards, steals, heat, queue depth).
+//!   ledgers, the cluster-routing series (per-replica routed shards,
+//!   steals, heat, queue depth), the device-fault repair series
+//!   (injections, sentinel detections, repairs, quarantined cells,
+//!   degraded replicas), uptime, and build info.
 //!
 //! ## Error envelope
 //!
@@ -339,7 +347,7 @@ fn process_conn(
                     }
                     continue;
                 }
-                match route(&req, inference, cfg, stats) {
+                match route(&req, inference, cfg, stats, draining) {
                     Routed::Done(resp) => {
                         conn.queue_response(&resp, keep_alive, stats);
                         if !keep_alive {
@@ -608,17 +616,29 @@ fn route(
     inference: &InferenceServer,
     cfg: &NetConfig,
     stats: &HttpStats,
+    draining: bool,
 ) -> Routed {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let adm = inference.admission();
             let snap = inference.snapshot();
             // degraded = still serving but below full strength (a worker
-            // slot down or browned out); down = zero live workers, which
-            // is a 503 so load balancers eject the instance
+            // slot down, browned out, or carrying an unrepairable device
+            // fault); down = zero live workers, which is a 503 so load
+            // balancers eject the instance
+            let mut reasons: Vec<&str> = Vec::new();
+            if snap.workers_live < snap.workers_configured {
+                reasons.push("worker_down");
+            }
+            if snap.brownout_active > 0 {
+                reasons.push("brownout");
+            }
+            if snap.degraded_active > 0 {
+                reasons.push("device_fault");
+            }
             let status = if snap.workers_live == 0 {
                 "down"
-            } else if snap.workers_live < snap.workers_configured || snap.brownout_active > 0 {
+            } else if !reasons.is_empty() {
                 "degraded"
             } else {
                 "ok"
@@ -628,12 +648,36 @@ fn route(
                 code,
                 Json::obj(vec![
                     ("status", Json::Str(status.into())),
+                    ("reason", Json::Str(reasons.join("+"))),
                     ("in_flight", Json::Num(adm.in_flight() as f64)),
                     ("workers_live", Json::Num(snap.workers_live as f64)),
                     ("workers_configured", Json::Num(snap.workers_configured as f64)),
                     ("brownout_active", Json::Num(snap.brownout_active as f64)),
+                    ("degraded_replicas", Json::Num(snap.degraded_active as f64)),
                 ]),
             ))
+        }
+        ("GET", "/readyz") => {
+            let snap = inference.snapshot();
+            let all_degraded = snap.workers_configured > 0
+                && snap.degraded_active >= snap.workers_configured;
+            let reason = if draining {
+                "draining"
+            } else if snap.workers_live == 0 {
+                "no_live_workers"
+            } else if all_degraded {
+                "all_replicas_degraded"
+            } else {
+                ""
+            };
+            let body = Json::obj(vec![
+                ("ready", Json::Bool(reason.is_empty())),
+                ("reason", Json::Str(reason.into())),
+                ("workers_live", Json::Num(snap.workers_live as f64)),
+                ("degraded_replicas", Json::Num(snap.degraded_active as f64)),
+            ]);
+            let code = if reason.is_empty() { 200 } else { 503 };
+            Routed::Done(Response::json(code, body))
         }
         ("GET", "/metrics") => Routed::Done(Response {
             status: 200,
@@ -673,7 +717,10 @@ fn handle_predict(req: &HttpRequest, inference: &InferenceServer, cfg: &NetConfi
         .and_then(Json::as_arr)
         .map(|a| a.iter().filter_map(Json::as_usize).collect())
         .unwrap_or_else(|| cfg.input_shape.clone());
-    if shape.is_empty() || shape.iter().product::<usize>() != image.len() {
+    // checked product: an adversarial shape like [2, usize::MAX] must
+    // answer 400, not overflow
+    let volume = shape.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d));
+    if shape.is_empty() || volume != Some(image.len()) {
         return Routed::Done(Response::error(
             400,
             "bad_request",
@@ -846,6 +893,48 @@ fn render_prometheus(inference: &InferenceServer, stats: &HttpStats) -> String {
     );
     let _ = writeln!(o, "# TYPE scatter_thermal_recalibrated_chunks_total counter");
     let _ = writeln!(o, "scatter_thermal_recalibrated_chunks_total {}", snap.recal_chunks);
+    let _ = writeln!(o, "# HELP scatter_device_faults_injected_total Device faults injected into engine fabrics.");
+    let _ = writeln!(o, "# TYPE scatter_device_faults_injected_total counter");
+    let _ = writeln!(o, "scatter_device_faults_injected_total {}", snap.faults_injected);
+    let _ = writeln!(o, "# HELP scatter_sentinel_detections_total Faulted chunks flagged by the sentinel probe.");
+    let _ = writeln!(o, "# TYPE scatter_sentinel_detections_total counter");
+    let _ = writeln!(o, "scatter_sentinel_detections_total {}", snap.fault_detections);
+    let _ = writeln!(o, "# HELP scatter_fault_repairs_total Quarantine repairs promoted by the repair canary.");
+    let _ = writeln!(o, "# TYPE scatter_fault_repairs_total counter");
+    let _ = writeln!(o, "scatter_fault_repairs_total {}", snap.fault_repairs);
+    let _ = writeln!(o, "# HELP scatter_fault_unrepairable_total Sentinel findings that could not be quarantined.");
+    let _ = writeln!(o, "# TYPE scatter_fault_unrepairable_total counter");
+    let _ = writeln!(o, "scatter_fault_unrepairable_total {}", snap.fault_unrepairable);
+    let _ = writeln!(o, "# HELP scatter_fault_detection_latency_seconds First-injection to first-detection latency.");
+    let _ = writeln!(o, "# TYPE scatter_fault_detection_latency_seconds gauge");
+    let _ = writeln!(
+        o,
+        "scatter_fault_detection_latency_seconds {}",
+        snap.fault_detection_latency_us as f64 / 1e6
+    );
+    let _ = writeln!(o, "# HELP scatter_worker_degraded Replicas carrying an unrepairable device fault.");
+    let _ = writeln!(o, "# TYPE scatter_worker_degraded gauge");
+    for (widx, d) in snap.worker_degraded.iter().enumerate() {
+        let _ = writeln!(o, "scatter_worker_degraded{{worker=\"{widx}\"}} {}", u8::from(*d));
+    }
+    let _ = writeln!(o, "# HELP scatter_quarantined_cells Weight cells quarantined by the repair loop, per replica.");
+    let _ = writeln!(o, "# TYPE scatter_quarantined_cells gauge");
+    for (widx, c) in snap.quarantined_cells.iter().enumerate() {
+        let _ = writeln!(o, "scatter_quarantined_cells{{worker=\"{widx}\"}} {c}");
+    }
+    let _ = writeln!(o, "# HELP scatter_artifacts_skipped_total Mask artifacts skipped by the startup scan.");
+    let _ = writeln!(o, "# TYPE scatter_artifacts_skipped_total counter");
+    let _ = writeln!(o, "scatter_artifacts_skipped_total {}", snap.artifacts_skipped);
+    let _ = writeln!(o, "# HELP scatter_uptime_seconds Seconds since the server came up.");
+    let _ = writeln!(o, "# TYPE scatter_uptime_seconds gauge");
+    let _ = writeln!(o, "scatter_uptime_seconds {}", snap.uptime_s);
+    let _ = writeln!(o, "# HELP scatter_build_info Build metadata as labels, value is always 1.");
+    let _ = writeln!(o, "# TYPE scatter_build_info gauge");
+    let _ = writeln!(
+        o,
+        "scatter_build_info{{version=\"{}\"}} 1",
+        env!("CARGO_PKG_VERSION")
+    );
     let _ = writeln!(o, "# TYPE scatter_http_requests_total counter");
     let _ = writeln!(o, "scatter_http_requests_total {}", stats.requests.load(Ordering::Relaxed));
     let _ = writeln!(

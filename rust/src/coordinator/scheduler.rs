@@ -132,6 +132,11 @@ pub struct ReplicaState {
     pub queue_depth: u64,
     /// EWMA shard service time in microseconds (0 = no sample yet).
     pub ewma_us: u64,
+    /// Device-health score: 0 = healthy fabric, higher = degraded (an
+    /// unrepairable device fault the sentinel could not quarantine).
+    /// Ranked right after load, so a degraded replica only serves when
+    /// its queue is strictly shallower than every healthy peer's.
+    pub health: u64,
     /// Continuous thermal score in milliradians of accumulated phase
     /// error; the router minimizes this among cool replicas.
     pub heat_milli: u64,
@@ -141,17 +146,17 @@ pub struct ReplicaState {
 }
 
 impl ReplicaState {
-    /// An idle, cold replica — the state every slot starts in.
+    /// An idle, cold, healthy replica — the state every slot starts in.
     pub fn idle(idx: usize) -> Self {
-        Self { idx, queue_depth: 0, ewma_us: 0, heat_milli: 0, hot: false }
+        Self { idx, queue_depth: 0, health: 0, ewma_us: 0, heat_milli: 0, hot: false }
     }
 }
 
-/// Rank key: load first (queue depth, then expected service time via
-/// the heat-then-EWMA tie-break), index last so ties break
-/// deterministically toward lower slot numbers.
-fn rank(r: &ReplicaState) -> (u64, u64, u64, usize) {
-    (r.queue_depth, r.heat_milli, r.ewma_us, r.idx)
+/// Rank key: load first (queue depth, then device health, then expected
+/// service time via the heat-then-EWMA tie-break), index last so ties
+/// break deterministically toward lower slot numbers.
+fn rank(r: &ReplicaState) -> (u64, u64, u64, u64, usize) {
+    (r.queue_depth, r.health, r.heat_milli, r.ewma_us, r.idx)
 }
 
 /// Split a batch of `n` requests into per-replica shards.
@@ -312,6 +317,30 @@ mod tests {
         pool[0].ewma_us = 900;
         pool[1].ewma_us = 200;
         assert_eq!(plan_shards(1, &pool, 8), vec![(1, 0..1)]);
+    }
+
+    #[test]
+    fn degraded_health_down_ranks_next_to_heat() {
+        // equal load: the healthy replica wins even when it is hotter
+        let mut pool: Vec<ReplicaState> = (0..2).map(ReplicaState::idle).collect();
+        pool[0].health = 1;
+        pool[1].heat_milli = 80;
+        assert_eq!(plan_shards(1, &pool, 8), vec![(1, 0..1)]);
+
+        // but health ranks below load: a degraded idle replica still
+        // beats a healthy one with a deep queue (it serves, just last)
+        let mut pool: Vec<ReplicaState> = (0..2).map(ReplicaState::idle).collect();
+        pool[0].health = 1;
+        pool[1].queue_depth = 2;
+        assert_eq!(plan_shards(1, &pool, 8), vec![(0, 0..1)]);
+
+        // an all-degraded pool keeps serving (graceful degradation)
+        let mut pool: Vec<ReplicaState> = (0..2).map(ReplicaState::idle).collect();
+        for r in &mut pool {
+            r.health = 1;
+        }
+        let covered: usize = plan_shards(4, &pool, 8).iter().map(|(_, r)| r.len()).sum();
+        assert_eq!(covered, 4);
     }
 
     #[test]

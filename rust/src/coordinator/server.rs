@@ -92,6 +92,27 @@
 //! one probe pass, or served by a half-programmed engine on either
 //! path.
 //!
+//! ## Device-fault repair (sentinel + quarantine)
+//!
+//! With `ServerConfig::repair` configured, each worker's fabric can be
+//! seeded with deterministic *device* faults ([`DeviceFaultPlan`]:
+//! stuck MZI phases, dead rerouter branches, dead photodetector rows) —
+//! at boot (infant mortality) or after `inject_after_shards` served
+//! shards (mid-life failure). With `repair.sentinel` on, the worker
+//! spends idle headroom (paced by `repair.probe_period`, always at a
+//! shard boundary) forwarding fixed sentinel probes per programmed
+//! chunk and comparing against golden digests captured at programming
+//! time; a deviation localizes the fault to (chunk, rows, cols). The
+//! repair path quarantines the faulted cells by diffing a pruned mask
+//! through the *same* [`PhotonicEngine::apply_mask_update`] + canary +
+//! rollback machinery the DST hot-swap uses, so traffic outside the
+//! quarantined region is untouched. A finding no mask can cover (dense
+//! layer, exhausted region) marks the replica **degraded**: the cluster
+//! scheduler down-ranks it right after load (it still serves — graceful
+//! degradation, not eviction), `/healthz` reports `degraded` with
+//! reason `device_fault`, and `/readyz` flips 503 only when *every*
+//! replica is degraded.
+//!
 //! Overload behavior (the part an open-loop deployment lives or dies
 //! by):
 //!
@@ -125,6 +146,7 @@ use crate::coordinator::metrics::{MetricsSnapshot, ServerMetrics, ThermalGauges}
 use crate::coordinator::scheduler::{plan_shards, ClusterConfig, ReplicaState};
 use crate::devices::{Mzi, MziSpec};
 use crate::nn::{Model, Tensor};
+use crate::ptc::faults::DeviceFaultPlan;
 use crate::runtime::MaskArtifact;
 use crate::sparsity::{chunked_col_norms, DstJob};
 use crate::thermal::{DriftConfig, GammaModel, ThermalPolicy};
@@ -168,6 +190,9 @@ pub struct ServerConfig {
     /// In-serving DST + mask hot-swap (the co-design loop). Disabled by
     /// default: the deployed masks serve untouched.
     pub(crate) dst: DstServerConfig,
+    /// Device-fault injection + sentinel detection + quarantine repair.
+    /// Disabled by default: no defects, no probing.
+    pub(crate) repair: RepairServerConfig,
 }
 
 /// Thermal-drift runtime knobs for the serving stack. Each engine
@@ -231,6 +256,44 @@ impl Default for DstServerConfig {
     }
 }
 
+/// Device-fault lifecycle knobs (`repair` section of the JSON config):
+/// which hardware defects to inject (`--device-faults`), when they
+/// strike, and whether the sentinel probe + quarantine-repair loop runs
+/// against them.
+#[derive(Debug, Clone)]
+pub struct RepairServerConfig {
+    /// Hardware defects injected into every engine replica's fabric
+    /// (spec grammar in [`DeviceFaultPlan`]). Empty = healthy devices.
+    pub device_faults: DeviceFaultPlan,
+    /// Shards a replica serves before the faults pin in. 0 = defective
+    /// from programming time (infant mortality); >0 models a device
+    /// failing mid-flight under live load.
+    pub inject_after_shards: u64,
+    /// `true` runs the sentinel probe on idle shard boundaries and
+    /// quarantines what it localizes through the mask hot-swap path.
+    pub sentinel: bool,
+    /// Minimum spacing between sentinel probes per replica.
+    pub probe_period: Duration,
+    /// Repair canary: the fraction of probe images whose argmax must
+    /// match the pre-fault reference for a quarantine to promote. Only
+    /// enforced when a pre-fault reference exists (delayed injection);
+    /// faults present from boot have no clean reference to hold
+    /// repairs against, so those promote unconditionally.
+    pub canary_threshold: f64,
+}
+
+impl Default for RepairServerConfig {
+    fn default() -> Self {
+        Self {
+            device_faults: DeviceFaultPlan::none(),
+            inject_after_shards: 0,
+            sentinel: false,
+            probe_period: Duration::from_millis(20),
+            canary_threshold: 0.5,
+        }
+    }
+}
+
 /// Supervision policy: how failures are detected and how hard the
 /// dispatcher tries to heal before giving up.
 #[derive(Debug, Clone)]
@@ -273,6 +336,7 @@ impl Default for ServerConfig {
             faults: FaultPlan::none(),
             cluster: ClusterConfig::default(),
             dst: DstServerConfig::default(),
+            repair: RepairServerConfig::default(),
         }
     }
 }
@@ -330,6 +394,10 @@ impl ServerConfig {
         &self.dst
     }
 
+    pub fn repair(&self) -> &RepairServerConfig {
+        &self.repair
+    }
+
     /// Serialize for `--config` files. Durations are milliseconds;
     /// `max_restarts`/`deadline_ms` use `null` for "unbounded"/"none";
     /// the fault plan round-trips through its spec grammar. Lossy only
@@ -364,6 +432,7 @@ impl ServerConfig {
             ),
             ("thermal", thermal_to_json(&self.thermal)),
             ("dst", dst_to_json(&self.dst)),
+            ("repair", repair_to_json(&self.repair)),
         ];
         if !self.faults.is_empty() {
             pairs.push(("faults", Json::Str(self.faults.describe().join(","))));
@@ -412,6 +481,7 @@ impl ServerConfig {
                 }
                 "thermal" => b = b.thermal(thermal_from_json(val)?),
                 "dst" => b = b.dst(dst_from_json(val)?),
+                "repair" => b = b.repair(repair_from_json(val)?),
                 "faults" => {
                     let spec = val.as_str().ok_or_else(|| {
                         crate::Error::Config(
@@ -574,6 +644,56 @@ fn dst_from_json(v: &Json) -> crate::Result<DstServerConfig> {
     Ok(d)
 }
 
+fn repair_to_json(r: &RepairServerConfig) -> Json {
+    let mut pairs = Vec::new();
+    if !r.device_faults.is_empty() {
+        pairs.push(("device_faults", Json::Str(r.device_faults.describe().join(","))));
+    }
+    pairs.push(("inject_after_shards", Json::Num(r.inject_after_shards as f64)));
+    pairs.push(("sentinel", Json::Bool(r.sentinel)));
+    pairs.push(("probe_period_ms", Json::Num(r.probe_period.as_millis() as f64)));
+    pairs.push(("canary_threshold", Json::Num(r.canary_threshold)));
+    Json::obj(pairs)
+}
+
+fn repair_from_json(v: &Json) -> crate::Result<RepairServerConfig> {
+    let Json::Obj(map) = v else {
+        return Err(crate::Error::Config(
+            "server config key \"repair\" must be an object".into(),
+        ));
+    };
+    let mut r = RepairServerConfig::default();
+    for (key, val) in map {
+        match key.as_str() {
+            "device_faults" => {
+                let spec = val.as_str().ok_or_else(|| {
+                    crate::Error::Config(
+                        "repair.device_faults must be a spec string".into(),
+                    )
+                })?;
+                r.device_faults = DeviceFaultPlan::parse(spec)
+                    .map_err(|e| crate::Error::Config(format!("repair.device_faults: {e}")))?;
+            }
+            "inject_after_shards" => {
+                r.inject_after_shards = cfg_u64(val, "repair.inject_after_shards")?
+            }
+            "sentinel" => r.sentinel = cfg_bool(val, "repair.sentinel")?,
+            "probe_period_ms" => {
+                r.probe_period = Duration::from_millis(cfg_u64(val, "repair.probe_period_ms")?)
+            }
+            "canary_threshold" => {
+                r.canary_threshold = cfg_f64(val, "repair.canary_threshold")?
+            }
+            other => {
+                return Err(crate::Error::Config(format!(
+                    "unknown repair config key {other:?}"
+                )))
+            }
+        }
+    }
+    Ok(r)
+}
+
 fn cfg_f64(v: &Json, key: &str) -> crate::Result<f64> {
     v.as_f64().ok_or_else(|| {
         crate::Error::Config(format!("server config key {key:?} must be a number"))
@@ -694,6 +814,25 @@ impl ServerConfigBuilder {
         self
     }
 
+    /// Device-fault injection + sentinel-repair knobs.
+    pub fn repair(mut self, r: RepairServerConfig) -> Self {
+        self.cfg.repair = r;
+        self
+    }
+
+    /// Shortcut: inject this device-fault plan (`--device-faults`).
+    pub fn device_faults(mut self, plan: DeviceFaultPlan) -> Self {
+        self.cfg.repair.device_faults = plan;
+        self
+    }
+
+    /// Shortcut: arm the sentinel probe + quarantine repair loop
+    /// (`--sentinel`), keeping the other repair knobs.
+    pub fn sentinel(mut self, on: bool) -> Self {
+        self.cfg.repair.sentinel = on;
+        self
+    }
+
     /// Enable work stealing between replica queues.
     pub fn steal(mut self, on: bool) -> Self {
         self.cfg.cluster.steal = on;
@@ -734,6 +873,12 @@ impl ServerConfigBuilder {
             if cfg.dst.rounds == 0 {
                 return Err(crate::Error::Config("dst.rounds must be >= 1".into()));
             }
+        }
+        if cfg.repair.sentinel && !(0.0..=1.0).contains(&cfg.repair.canary_threshold) {
+            return Err(crate::Error::Config(format!(
+                "repair.canary_threshold ({}) must be within [0, 1]",
+                cfg.repair.canary_threshold
+            )));
         }
         Ok(cfg)
     }
@@ -861,6 +1006,19 @@ pub struct ServerReport {
     pub mask_generation: Vec<u64>,
     /// Rerouter power estimate (mW) of the newest promoted artifact.
     pub mask_power_mw: f64,
+    /// Device-fault events injected into worker fabrics (plan entries at
+    /// boot, faulted chunks for mid-life injection).
+    pub faults_injected: u64,
+    /// Sentinel findings (fault localizations) across workers.
+    pub fault_detections: u64,
+    /// Quarantine repairs promoted by the repair canary.
+    pub fault_repairs: u64,
+    /// Findings no repair mask could cover (replica degraded instead).
+    pub fault_unrepairable: u64,
+    /// First-injection → first-detection latency (µs; 0 until both).
+    pub fault_detection_latency_us: u64,
+    /// Per-replica degraded flag at shutdown.
+    pub degraded: Vec<bool>,
 }
 
 /// A shard of a dynamic batch, tagged with the full batch size (clients
@@ -980,6 +1138,11 @@ struct WorkerHealth {
     busy_since_ms: AtomicU64,
     /// Post-tick phase-error estimate exceeded the brownout budget.
     brownout: AtomicBool,
+    /// Unrepairable device fault: the sentinel localized a defect the
+    /// quarantine path cannot mask off. The router down-ranks this
+    /// replica permanently (for this generation); a respawn re-programs
+    /// from scratch and re-evaluates.
+    degraded: AtomicBool,
     /// Continuous thermal score (phase error in milliradians) for the
     /// router's heat-aware ranking; 0 until the first thermal tick.
     heat_milli: AtomicU64,
@@ -994,6 +1157,7 @@ impl WorkerHealth {
         Self {
             busy_since_ms: AtomicU64::new(u64::MAX),
             brownout: AtomicBool::new(false),
+            degraded: AtomicBool::new(false),
             heat_milli: AtomicU64::new(0),
             checkpoint: Mutex::new(None),
         }
@@ -1049,6 +1213,8 @@ struct WorkerContext {
     steal: bool,
     /// In-serving DST knobs (the co-design loop's serving half).
     dst: DstServerConfig,
+    /// Device-fault injection + sentinel-repair knobs.
+    repair: RepairServerConfig,
     /// Newest mask artifact awaiting per-replica canary + cutover.
     swap: Mutex<Option<Arc<PendingSwap>>>,
 }
@@ -1074,6 +1240,9 @@ struct WorkerSlot {
 fn spawn_engine_worker(ctx: &Arc<WorkerContext>, widx: usize) -> WorkerGen {
     let health = Arc::new(WorkerHealth::new());
     ctx.metrics.set_worker_up(widx, true);
+    // a respawned worker reprograms from scratch: its degraded verdict
+    // is re-evaluated by the sentinel, so the gauge starts clean
+    ctx.metrics.set_worker_degraded(widx, false);
     // bind to the queue's current generation: if the supervisor later
     // bumps it, this worker knows to stand down
     let my_gen = lock_clean(&ctx.queues[widx].inner).gen;
@@ -1179,11 +1348,37 @@ fn run_engine_worker(
             );
         }
     }
+    // device faults present from programming time (infant mortality):
+    // the engine pins them into every chunk it realizes, while the
+    // sentinel goldens stay fault-free — a probe flags them immediately
+    let inject_now = !ctx.repair.device_faults.is_empty();
+    if inject_now && ctx.repair.inject_after_shards == 0 {
+        engine.set_device_faults(ctx.repair.device_faults.clone());
+        ctx.metrics.note_faults_injected(ctx.repair.device_faults.len() as u64);
+    }
     // canary probe: identical on every replica (fixed seed), so a
     // candidate generation is judged on the same inputs everywhere
-    let probe = if ctx.dst.enabled { probe_batch(&ctx.model) } else { Vec::new() };
+    let probe = if ctx.dst.enabled || ctx.repair.sentinel {
+        probe_batch(&ctx.model)
+    } else {
+        Vec::new()
+    };
+    // repair canary reference: the probe argmaxes of the *clean* fabric.
+    // Only exists when injection is delayed — a fabric faulted from boot
+    // has no clean state to reference, so its repairs promote ungated.
+    let repair_ref: Option<Vec<usize>> =
+        (ctx.repair.sentinel && ctx.repair.inject_after_shards > 0).then(|| {
+            ctx.model
+                .forward_batch(probe.clone(), &mut engine)
+                .iter()
+                .map(Tensor::argmax)
+                .collect()
+        });
     let started = Instant::now();
     let mut served: u64 = 0;
+    let mut shards_seen: u64 = 0;
+    let mut midlife_injected = false;
+    let mut last_sentinel = Instant::now();
     while let Some(shard) = next_shard(&ctx, widx, my_gen) {
         // shard boundary: everything in flight finished on the old
         // generation and the popped shard has not started — the one
@@ -1191,6 +1386,24 @@ fn run_engine_worker(
         if ctx.dst.enabled {
             maybe_swap_masks(&ctx, widx, &mut engine, &probe);
         }
+        // mid-life device failure: once the configured shard count has
+        // been served, pin the faults into the live programmed state
+        // (goldens are NOT refreshed — that asymmetry is what the
+        // sentinel detects)
+        if inject_now
+            && !midlife_injected
+            && ctx.repair.inject_after_shards > 0
+            && shards_seen >= ctx.repair.inject_after_shards
+        {
+            midlife_injected = true;
+            let chunks = engine.inject_device_faults(&ctx.repair.device_faults);
+            ctx.metrics.note_faults_injected(chunks.max(1) as u64);
+        }
+        if ctx.repair.sentinel && last_sentinel.elapsed() >= ctx.repair.probe_period {
+            last_sentinel = Instant::now();
+            maybe_repair(&ctx, widx, &mut engine, &probe, repair_ref.as_deref(), &health);
+        }
+        shards_seen += 1;
         let seq = shard.seq;
         let batch_size = shard.batch_size;
         let home = shard.home;
@@ -1364,6 +1577,76 @@ fn maybe_swap_masks(
         pending.rejected.store(true, Ordering::Release);
         ctx.metrics.note_mask_rollback();
         ctx.metrics.set_mask_generation(widx, old_gen);
+    }
+}
+
+/// Per-shard-boundary sentinel + quarantine repair. The sentinel probe
+/// sweeps every programmed chunk against its fault-free golden digest
+/// (O(chunks) dot products — no live traffic touched); anything it
+/// localizes is quarantined by diffing a repair mask through the same
+/// [`PhotonicEngine::apply_mask_update`] + canary + rollback path the
+/// DST hot-swap uses. Unrepairable findings (no masks installed for the
+/// layer, or the defect sits outside every maskable cell) permanently
+/// degrade the replica: the router down-ranks it and `/healthz` reports
+/// `degraded` with reason `device_fault`.
+fn maybe_repair(
+    ctx: &WorkerContext,
+    widx: usize,
+    engine: &mut PhotonicEngine,
+    probe: &[Tensor],
+    repair_ref: Option<&[usize]>,
+    health: &WorkerHealth,
+) {
+    if health.degraded.load(Ordering::Acquire) {
+        // verdict already in: re-probing a degraded fabric every period
+        // would only burn idle headroom re-discovering the same defect
+        return;
+    }
+    let findings = engine.sentinel_probe_all();
+    if findings.is_empty() {
+        return;
+    }
+    ctx.metrics.note_fault_detections(findings.len() as u64);
+    let degrade = |reason: &str| {
+        health.degraded.store(true, Ordering::Release);
+        ctx.metrics.note_fault_unrepairable();
+        ctx.metrics.set_worker_degraded(widx, true);
+        eprintln!("[scatter] worker {widx}: unrepairable device fault ({reason}); degraded");
+    };
+    let Some((repaired, cells)) = engine.quarantine_masks(&findings) else {
+        degrade("no maskable cells cover the finding");
+        return;
+    };
+    let old_masks = engine.masks().clone();
+    let old_gen = engine.mask_generation();
+    // the repair bumps this replica's local generation so the swap gate
+    // (`artifact.generation <= engine generation`) stays monotone
+    engine.apply_mask_update(repaired, old_gen + 1);
+    // probe pass doubles as the canary and flushes the incremental
+    // reprogram, which also re-baselines the repaired chunks' goldens
+    let after = ctx.model.forward_batch(probe.to_vec(), engine);
+    let promote = match repair_ref {
+        Some(want) => {
+            let agree =
+                after.iter().zip(want).filter(|(a, &w)| a.argmax() == w).count();
+            agree as f64 >= ctx.repair.canary_threshold * want.len().max(1) as f64
+        }
+        // no clean reference (faults predate the first probe): masking
+        // off a defective region cannot be worse than serving it
+        None => true,
+    };
+    if promote {
+        engine.record_quarantine(&findings);
+        ctx.metrics.note_fault_repair();
+        ctx.metrics
+            .set_worker_quarantined_cells(widx, engine.quarantined_cell_count() as u64);
+        eprintln!(
+            "[scatter] worker {widx}: quarantined {cells} cell(s) across {} finding(s)",
+            findings.len()
+        );
+    } else {
+        engine.apply_mask_update(old_masks, old_gen);
+        degrade("repair canary failed against the pre-fault reference");
     }
 }
 
@@ -1636,6 +1919,7 @@ fn dispatch_batch(
                     idx: s.widx,
                     queue_depth: depth,
                     ewma_us: q.ewma_us.load(Ordering::Acquire),
+                    health: g.health.degraded.load(Ordering::Acquire) as u64,
                     heat_milli: g.health.heat_milli.load(Ordering::Acquire),
                     hot: g.health.brownout.load(Ordering::Acquire),
                 })
@@ -1702,6 +1986,17 @@ fn run_dispatcher(
         DstJob::new(masks.clone(), DST_ALPHA0, dst_cfg.rounds, cfg.k2, mzi)
     });
     let mut next_generation: u64 = 1;
+    if let Some(dir) = dst_cfg.enabled.then_some(dst_cfg.artifact_dir.as_ref()).flatten() {
+        // resume the generation counter past any persisted history,
+        // skipping (and counting) whatever did not survive on disk —
+        // a damaged artifact directory must not stop the service or
+        // replay a stale generation number
+        let (prior, skipped) = MaskArtifact::scan_dir(dir);
+        if let Some(last) = prior.last() {
+            next_generation = last.generation + 1;
+        }
+        metrics.note_artifacts_skipped(skipped as u64);
+    }
     let mut last_dst_round = Instant::now();
     let queues: Vec<Arc<ReplicaQueue>> =
         (0..n_workers).map(|_| Arc::new(ReplicaQueue::new())).collect();
@@ -1718,6 +2013,7 @@ fn run_dispatcher(
         queues,
         steal: server_cfg.cluster.steal,
         dst: server_cfg.dst.clone(),
+        repair: server_cfg.repair.clone(),
         swap: Mutex::new(None),
     });
     let mut slots: Vec<WorkerSlot> = (0..n_workers)
@@ -1889,6 +2185,12 @@ fn run_dispatcher(
         mask_rollbacks: snap.mask_rollbacks,
         mask_generation: snap.mask_generation,
         mask_power_mw: snap.mask_power_mw,
+        faults_injected: snap.faults_injected,
+        fault_detections: snap.fault_detections,
+        fault_repairs: snap.fault_repairs,
+        fault_unrepairable: snap.fault_unrepairable,
+        fault_detection_latency_us: snap.fault_detection_latency_us,
+        degraded: snap.worker_degraded,
     }
 }
 
@@ -1950,6 +2252,14 @@ mod tests {
                 }),
                 "rounds",
             ),
+            (
+                ServerConfig::builder().repair(RepairServerConfig {
+                    sentinel: true,
+                    canary_threshold: 1.5,
+                    ..Default::default()
+                }),
+                "repair.canary_threshold",
+            ),
         ];
         for (builder, needle) in cases {
             match builder.build() {
@@ -1988,6 +2298,13 @@ mod tests {
                 inject_bad_canary: true,
                 artifact_dir: Some(PathBuf::from("/tmp/masks")),
             })
+            .repair(RepairServerConfig {
+                device_faults: DeviceFaultPlan::parse("dead-pd@fc1:c0:r3").expect("spec"),
+                inject_after_shards: 9,
+                sentinel: true,
+                probe_period: Duration::from_millis(4),
+                canary_threshold: 0.25,
+            })
             .build()
             .expect("valid config");
         let text = cfg.to_json().to_string();
@@ -2014,11 +2331,27 @@ mod tests {
         assert!((back.dst.canary_threshold - 0.75).abs() < 1e-12);
         assert!(back.dst.inject_bad_canary);
         assert_eq!(back.dst.artifact_dir, Some(PathBuf::from("/tmp/masks")));
+        assert_eq!(
+            back.repair.device_faults.describe(),
+            cfg.repair.device_faults.describe()
+        );
+        assert_eq!(back.repair.inject_after_shards, 9);
+        assert!(back.repair.sentinel);
+        assert_eq!(back.repair.probe_period, Duration::from_millis(4));
+        assert!((back.repair.canary_threshold - 0.25).abs() < 1e-12);
         // typos must not silently fall back to defaults
         assert!(ServerConfig::from_json("{\"max_batcch\": 4}").is_err());
         assert!(
             ServerConfig::from_json("{\"dst\": {\"perod_ms\": 5}}").is_err(),
             "unknown dst keys must not be dropped silently"
+        );
+        assert!(
+            ServerConfig::from_json("{\"repair\": {\"probe_perod_ms\": 5}}").is_err(),
+            "unknown repair keys must not be dropped silently"
+        );
+        assert!(
+            ServerConfig::from_json("{\"repair\": {\"device_faults\": \"melt@x\"}}").is_err(),
+            "malformed fault specs must fail at load time"
         );
         // file configs pass the same validation as the builder
         assert!(ServerConfig::from_json("{\"workers\": 0}").is_err());
@@ -2662,5 +2995,198 @@ mod tests {
         assert_eq!(report.expired, 0);
         assert_eq!(report.worker_lost, 0, "rollback drops nothing");
         assert_eq!(report.worker_restarts, 0, "rollback is not a crash path");
+    }
+
+    /// Satellite: a server restarting over a damaged artifact directory
+    /// comes up on what survives — the skip count is published, and the
+    /// generation counter resumes past the persisted history instead of
+    /// replaying generation numbers.
+    #[test]
+    fn startup_scan_skips_damage_and_resumes_generations() {
+        let model = crate::nn::models::cnn3();
+        let cfg = test_cfg();
+        let masks = crate::bench::common::build_masks(&model, &cfg, 0.6);
+        let dir = std::env::temp_dir()
+            .join(format!("scatter_swap_resume_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        MaskArtifact::new(3, masks.clone(), 1.0, 0.0)
+            .save_atomic(&dir)
+            .expect("persist prior generation");
+        std::fs::write(dir.join("mask_gen_000004.json"), "{\"gener").expect("garbage");
+        let server = InferenceServer::spawn(
+            model,
+            cfg,
+            EngineOptions::IDEAL,
+            masks,
+            ServerConfig::builder()
+                .max_batch(2)
+                .batch_timeout(Duration::from_millis(1))
+                .dst(DstServerConfig {
+                    enabled: true,
+                    period: Duration::from_millis(1),
+                    rounds: 10,
+                    canary_threshold: 0.0,
+                    inject_bad_canary: false,
+                    artifact_dir: Some(dir.clone()),
+                })
+                .build()
+                .expect("config"),
+        );
+        let mut waves = 0usize;
+        while server.snapshot().mask_swaps < 1 && waves < 400 {
+            let rx = server.submit(sample_img(waves % 10, 0)).expect("admitted");
+            assert!(rx.recv_timeout(Duration::from_secs(120)).expect("reply").is_ok());
+            waves += 1;
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let snap = server.snapshot();
+        assert_eq!(snap.artifacts_skipped, 1, "the corrupt file is counted, not fatal");
+        let report = server.shutdown().expect("report");
+        assert!(report.mask_swaps >= 1, "serving resumed over the damage: {report:?}");
+        assert!(
+            report.mask_generation[0] >= 4,
+            "generation counter resumed past the persisted gen 3: {report:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Tentpole: a rerouter branch dies mid-serving; the sentinel
+    /// localizes it from idle-headroom probes, the repair canary
+    /// promotes a quarantine mask, and not one request is shed, expired,
+    /// or lost along the way. The replica stays healthy (a covered
+    /// fault is repaired, not degraded).
+    #[test]
+    fn sentinel_repairs_midlife_fault_with_reply_conservation() {
+        let model = crate::nn::models::cnn3();
+        let cfg = test_cfg();
+        let masks = crate::bench::common::build_masks(&model, &cfg, 0.6);
+        // break an *active* branch of the masked middle layer — the
+        // rerouter tree over that chunk is exactly the hardware the
+        // quarantine repair steers light away with
+        let (layer, lm) = masks.iter().next().expect("cnn3 has a masked layer");
+        let j = lm.chunk(0, 0).col.iter().position(|&a| a).expect("active col");
+        let plan = DeviceFaultPlan::parse(&format!("dead-branch@{layer}:c0:i{j}"))
+            .expect("valid spec");
+        let server = InferenceServer::spawn(
+            model,
+            cfg,
+            EngineOptions::IDEAL,
+            masks.clone(),
+            ServerConfig::builder()
+                .max_batch(2)
+                .batch_timeout(Duration::from_millis(1))
+                .repair(RepairServerConfig {
+                    device_faults: plan,
+                    inject_after_shards: 3,
+                    sentinel: true,
+                    probe_period: Duration::from_millis(1),
+                    // agreement of an untrained net across a real mask
+                    // delta is not predictable; the gate itself is
+                    // exercised by the degraded-replica test below
+                    canary_threshold: 0.0,
+                })
+                .build()
+                .expect("config"),
+        );
+        let mut served = 0u64;
+        let mut waves = 0usize;
+        while server.snapshot().fault_repairs < 1 && waves < 400 {
+            let rxs: Vec<_> = (0..2)
+                .map(|i| server.submit(sample_img(waves % 10, i)).expect("admitted"))
+                .collect();
+            for rx in rxs {
+                let reply = rx
+                    .recv_timeout(Duration::from_secs(120))
+                    .expect("reply")
+                    .expect("served across fault + repair");
+                assert_eq!(reply.logits.len(), 10);
+                served += 1;
+            }
+            waves += 1;
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let report = server.shutdown().expect("report");
+        assert!(report.faults_injected >= 1, "mid-life injection fired: {report:?}");
+        assert!(report.fault_detections >= 1, "sentinel localized the fault");
+        assert!(report.fault_repairs >= 1, "quarantine repair promoted: {report:?}");
+        assert_eq!(report.fault_unrepairable, 0, "covered fault must not degrade");
+        assert_eq!(report.degraded, vec![false], "replica stays in full health");
+        assert!(
+            report.fault_detection_latency_us > 0,
+            "injection->detection latency measured: {report:?}"
+        );
+        // reply conservation across the whole inject/detect/repair arc
+        assert_eq!(report.requests, served);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.expired, 0);
+        assert_eq!(report.worker_lost, 0, "repair drops nothing");
+        assert_eq!(report.worker_restarts, 0, "repair is not a crash path");
+    }
+
+    /// Tentpole: a stuck MZI in the dense-deployed readout layer has no
+    /// rerouter tree to quarantine around — the replica is marked
+    /// degraded (visible in the report and down-ranked by the cluster
+    /// scheduler) but keeps serving traffic: graceful degradation, not
+    /// eviction.
+    #[test]
+    fn unrepairable_fault_degrades_replica_but_keeps_serving() {
+        let model = crate::nn::models::cnn3();
+        let (last, _, _) = model.matmul_layers().last().expect("readout").clone();
+        let plan = DeviceFaultPlan::parse(&format!("stuck@{last}:c0:r0:i0:p1.2"))
+            .expect("valid spec");
+        let server = InferenceServer::spawn(
+            model,
+            test_cfg(),
+            EngineOptions::IDEAL,
+            Default::default(),
+            ServerConfig::builder()
+                .max_batch(2)
+                .batch_timeout(Duration::from_millis(1))
+                .repair(RepairServerConfig {
+                    device_faults: plan,
+                    inject_after_shards: 0, // broken from boot
+                    sentinel: true,
+                    probe_period: Duration::from_millis(1),
+                    canary_threshold: 0.5,
+                })
+                .build()
+                .expect("config"),
+        );
+        let mut served = 0u64;
+        let mut waves = 0usize;
+        while server.snapshot().fault_unrepairable < 1 && waves < 400 {
+            let rxs: Vec<_> = (0..2)
+                .map(|i| server.submit(sample_img(waves % 10, i)).expect("admitted"))
+                .collect();
+            for rx in rxs {
+                let reply = rx
+                    .recv_timeout(Duration::from_secs(120))
+                    .expect("reply")
+                    .expect("a degraded replica still serves");
+                assert_eq!(reply.logits.len(), 10);
+                served += 1;
+            }
+            waves += 1;
+        }
+        // degraded replicas keep serving — drive a few more waves to
+        // prove the pool did not silently stop accepting work
+        for i in 0..4 {
+            let rx = server.submit(sample_img(i, i)).expect("admitted while degraded");
+            assert!(
+                rx.recv_timeout(Duration::from_secs(120)).expect("reply").is_ok(),
+                "degraded replica must answer"
+            );
+            served += 1;
+        }
+        let report = server.shutdown().expect("report");
+        assert!(report.faults_injected >= 1, "boot injection registered");
+        assert!(report.fault_detections >= 1, "sentinel flagged the dense layer");
+        assert!(report.fault_unrepairable >= 1, "no mask covers the readout fault");
+        assert_eq!(report.fault_repairs, 0, "nothing to promote");
+        assert_eq!(report.degraded, vec![true], "replica marked degraded");
+        assert_eq!(report.requests, served, "conservation holds while degraded");
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.expired, 0);
+        assert_eq!(report.worker_lost, 0);
     }
 }

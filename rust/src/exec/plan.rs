@@ -157,6 +157,36 @@ impl ChunkPlan {
         self.cols.len()
     }
 
+    /// Fixed-seed sentinel probe over `n` active columns. Every entry is
+    /// bounded away from zero (0.25..1.0) so a dead or stuck device
+    /// always moves the response, and the same `n` always yields the
+    /// same vector — a golden response captured at program time stays
+    /// index-aligned with a live one because device faults mutate only
+    /// realized weights, never the gather tables.
+    pub fn sentinel_probe(n: usize) -> Vec<f64> {
+        let mut rng = crate::util::XorShiftRng::from_stream(0x5E17_11E1, &[n as u64]);
+        (0..n).map(|_| rng.uniform_in(0.25, 1.0)).collect()
+    }
+
+    /// Noise-free response of this plan to a probe over its active
+    /// columns: `bias[ri] + Σ_ci w[ri·nc+ci] · probe[ci]` in ascending
+    /// column order, so two plans with bit-identical weights produce
+    /// bit-identical responses — the sentinel's comparison primitive.
+    pub fn sentinel_response(&self, probe: &[f64]) -> Vec<f64> {
+        let nc = self.cols.len();
+        assert_eq!(probe.len(), nc, "probe must cover the active columns");
+        (0..self.rows.len())
+            .map(|ri| {
+                let wrow = &self.w[ri * nc..(ri + 1) * nc];
+                let mut acc = self.bias[ri];
+                for (ci, &wv) in wrow.iter().enumerate() {
+                    acc += wv * probe[ci];
+                }
+                acc
+            })
+            .collect()
+    }
+
     /// Accumulate this chunk's contribution for a block of `bcols`
     /// activation columns into `buf` (chunk-local rows × `bcols`,
     /// row-major, stride `bcols`).
@@ -398,6 +428,41 @@ mod tests {
             plan.accumulate(&xq, bcols, &mut a);
             plan.accumulate_scalar(&xq, bcols, &mut b);
             assert_eq!(a, b, "bcols {bcols}");
+        }
+    }
+
+    /// The sentinel primitive: a deterministic, strictly-positive probe
+    /// whose plan response equals the scalar sweep's single-column
+    /// output on every active row.
+    #[test]
+    fn sentinel_response_matches_single_column_sweep() {
+        let (r, c) = (2, 2);
+        let s = sim(8);
+        let (rows, cols) = (r * s.k1, c * s.k2);
+        let mut rng = XorShiftRng::new(23);
+        let mut w = vec![0.0; rows * cols];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let row_mask: Vec<bool> = (0..rows).map(|i| i % 5 != 3).collect();
+        let col_mask: Vec<bool> = (0..cols).map(|j| j % 2 == 0).collect();
+        let blocks = program_chunk(
+            &s, r, c, &w, &row_mask, &col_mask, ColumnMode::InputGatingLr, true, 7,
+        );
+        let plan = ChunkPlan::from_blocks(&blocks, r, c, rows, cols, 0.0);
+
+        let probe = ChunkPlan::sentinel_probe(plan.n_active_cols());
+        assert!(probe.iter().all(|&v| (0.25..1.0).contains(&v)), "bounded away from zero");
+        assert_eq!(
+            probe,
+            ChunkPlan::sentinel_probe(plan.n_active_cols()),
+            "probe is a pure function of the column count"
+        );
+
+        let resp = plan.sentinel_response(&probe);
+        assert_eq!(resp.len(), plan.rows.len());
+        let mut buf = vec![0.0f64; rows];
+        plan.accumulate_scalar(&probe, 1, &mut buf);
+        for (ri, &row) in plan.rows.iter().enumerate() {
+            assert_eq!(resp[ri], buf[row as usize], "active row {row}");
         }
     }
 

@@ -6,7 +6,8 @@
 //!         [--deadline-ms N] [--density D] [--steal]
 //!         [--thermal off|threshold[:RAD]|periodic[:N]] [--brownout RAD]
 //!         [--faults SPEC] [--watchdog-ms N] [--dst on[:PERIOD_MS]|off]
-//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|chaos|swap|all>
+//!         [--device-faults SPEC] [--sentinel]
+//! scatter bench <table1|table2|table3|fig4|fig5|fig6|fig8|fig9|fig10|engine|serve|drift|chaos|swap|repair|all>
 //!         [--samples N] [--models cnn3,vgg8,resnet18] [--threads 1,2,4,8] [--stages]
 //!         [--rps R] [--duration S] [--concurrency C] [--addr HOST:PORT]
 //!         [--workers N] [--max-batch 1,8] [--replicas 1,4] [--steal] [--seed N]
@@ -36,10 +37,17 @@
 //! `bench chaos` kills every worker once (seeded `FaultPlan`) under
 //! concurrent load, measures recovery, and writes `BENCH_chaos.json`;
 //! `bench swap` runs in-serving DST mask hot-swap (promote + injected
-//! bad-canary rollback) under load and writes `BENCH_swap.json`.
+//! bad-canary rollback) under load and writes `BENCH_swap.json`;
+//! `bench repair` breaks photonic devices mid-serve, measures sentinel
+//! detection latency + quarantine accuracy recovery, and writes
+//! `BENCH_repair.json`.
 //!
 //! `--faults` takes the grammar accepted by `FaultPlan::parse`
-//! (e.g. `panic@w0:s3,stall@w1:s5:200ms` or `kill-each:42`).
+//! (e.g. `panic@w0:s3,stall@w1:s5:200ms` or `kill-each:42`);
+//! `--device-faults` takes the hardware-defect grammar of
+//! `DeviceFaultPlan::parse` (e.g. `stuck@conv2:c0:r1:i3:p0.9` or
+//! `rand:s7:n4`), and `--sentinel` arms the probe + quarantine-repair
+//! loop against whatever breaks.
 
 use scatter::bench::{self, BenchCtx};
 use scatter::config::AcceleratorConfig;
@@ -47,6 +55,7 @@ use scatter::coordinator::{
     DstServerConfig, EngineOptions, FaultPlan, HttpServer, InferenceServer, NetConfig,
     ServerConfig, ThermalServerConfig,
 };
+use scatter::ptc::DeviceFaultPlan;
 use scatter::thermal::{DriftConfig, ThermalPolicy};
 use scatter::util::{FlagTable, ParsedArgs};
 use std::time::Duration;
@@ -141,6 +150,12 @@ fn serve_flags() -> FlagTable {
     .flag("--brownout", "RAD", "phase-error budget that triggers replica brownout")
     .flag("--faults", "SPEC", "fault injection plan (FaultPlan grammar, e.g. kill-each:42)")
     .flag("--dst", "SPEC", "in-serving DST mask hot-swap: on[:PERIOD_MS] | off")
+    .flag(
+        "--device-faults",
+        "SPEC",
+        "hardware defects (DeviceFaultPlan grammar, e.g. stuck@conv2:c0:r1:i3:p0.9)",
+    )
+    .switch("--sentinel", "arm the sentinel probe + mask-quarantine repair loop")
     .switch("--steal", "idle replicas steal queued shards from the deepest backlog")
 }
 
@@ -210,6 +225,15 @@ fn cmd_serve(args: &[String]) {
     if let Some(spec) = p.value("--dst") {
         b = b.dst(parse_dst(spec));
     }
+    if let Some(spec) = p.value("--device-faults") {
+        b = b.device_faults(DeviceFaultPlan::parse(spec).unwrap_or_else(|e| {
+            eprintln!("bad --device-faults '{spec}': {e}");
+            std::process::exit(2);
+        }));
+    }
+    if p.has("--sentinel") {
+        b = b.sentinel(true);
+    }
     let server_cfg = b.build().unwrap_or_else(|e| {
         eprintln!("invalid server config: {e}");
         std::process::exit(2);
@@ -217,6 +241,11 @@ fn cmd_serve(args: &[String]) {
     if !server_cfg.faults().is_empty() {
         for line in server_cfg.faults().describe() {
             eprintln!("fault injection armed: {line}");
+        }
+    }
+    if !server_cfg.repair().device_faults.is_empty() {
+        for line in server_cfg.repair().device_faults.describe() {
+            eprintln!("device defect armed: {line}");
         }
     }
 
@@ -249,17 +278,30 @@ fn cmd_serve(args: &[String]) {
     }
     eprintln!("draining ...");
     match http.shutdown() {
-        Ok(r) => eprintln!(
-            "served {} requests in {} batches (mean occupancy {:.2}, {:.1} req/s, \
-             p50 {} us, p99 {} us, {:.3} mJ, shed {}, expired {}, recal {}x/{} chunks, \
-             workers {} live, {} respawns, {} retries, {} brownouts, {} steals, \
-             mask swaps {}/{} rollbacks, top generation {})",
-            r.requests, r.batches, r.mean_batch_occupancy, r.throughput_rps, r.p50_us,
-            r.p99_us, r.energy_mj, r.shed, r.expired, r.recalibrations, r.recal_chunks,
-            r.workers_live, r.worker_restarts, r.request_retries, r.brownouts, r.steals,
-            r.mask_swaps, r.mask_rollbacks,
-            r.mask_generation.iter().copied().max().unwrap_or(0)
-        ),
+        Ok(r) => {
+            if r.faults_injected > 0 {
+                eprintln!(
+                    "device faults: {} injected, {} detected, {} repaired, \
+                     {} unrepairable, {} replica(s) degraded",
+                    r.faults_injected,
+                    r.fault_detections,
+                    r.fault_repairs,
+                    r.fault_unrepairable,
+                    r.degraded.iter().filter(|&&d| d).count()
+                );
+            }
+            eprintln!(
+                "served {} requests in {} batches (mean occupancy {:.2}, {:.1} req/s, \
+                 p50 {} us, p99 {} us, {:.3} mJ, shed {}, expired {}, recal {}x/{} chunks, \
+                 workers {} live, {} respawns, {} retries, {} brownouts, {} steals, \
+                 mask swaps {}/{} rollbacks, top generation {})",
+                r.requests, r.batches, r.mean_batch_occupancy, r.throughput_rps, r.p50_us,
+                r.p99_us, r.energy_mj, r.shed, r.expired, r.recalibrations, r.recal_chunks,
+                r.workers_live, r.worker_restarts, r.request_retries, r.brownouts, r.steals,
+                r.mask_swaps, r.mask_rollbacks,
+                r.mask_generation.iter().copied().max().unwrap_or(0)
+            );
+        }
         Err(e) => eprintln!("shutdown error: {e}"),
     }
 }
@@ -331,17 +373,17 @@ fn bench_flags() -> FlagTable {
     FlagTable::new(
         "scatter bench <target> [options]",
         "Run paper reproductions and perf benches. Targets: table1 table2 table3\n\
-         fig4 fig5 fig6 fig8 fig9 fig10 engine serve drift chaos swap all.",
+         fig4 fig5 fig6 fig8 fig9 fig10 engine serve drift chaos swap repair all.",
     )
     .flag("--samples", "N", "evaluation samples (engine: time budget = N*10 ms/cell)")
     .flag("--models", "A,B", "table3 workloads (cnn3,vgg8,resnet18)")
     .flag("--threads", "A,B", "engine bench thread sweep (default 1,2,4,8)")
     .switch("--stages", "engine bench: per-stage latency breakdown")
     .flag("--rps", "R", "bench serve: open-loop arrival rate (0 = closed loop)")
-    .flag("--duration", "S", "bench serve/chaos/swap: seconds per measurement")
-    .flag("--concurrency", "C", "bench serve/chaos/swap: concurrent client connections")
+    .flag("--duration", "S", "bench serve/chaos/swap/repair: seconds per measurement")
+    .flag("--concurrency", "C", "bench serve/chaos/swap/repair: concurrent client connections")
     .flag("--addr", "HOST:PORT", "bench serve: drive an external server (skips sweeps)")
-    .flag("--workers", "N", "bench serve/chaos/swap: engine-worker replicas for the main run")
+    .flag("--workers", "N", "bench serve/chaos/swap/repair: engine-worker replicas for the main run")
     .flag("--max-batch", "A,B", "bench serve: batched-compute sweep points (0 disables)")
     .flag("--replicas", "A,B", "bench serve: replica-scaling sweep points (0 disables)")
     .switch("--steal", "bench serve: enable work stealing on in-process servers")
@@ -430,6 +472,17 @@ fn cmd_bench(args: &[String]) {
                 ..Default::default()
             };
             println!("{}", bench::swap::run(&cfg));
+        }
+        "repair" => {
+            let cfg = bench::repair::RepairBenchConfig {
+                duration: Duration::from_secs_f64(
+                    get_or_exit::<f64>(&p, "--duration").unwrap_or(4.0),
+                ),
+                concurrency: get_or_exit::<usize>(&p, "--concurrency").unwrap_or(4),
+                workers: get_or_exit::<usize>(&p, "--workers").unwrap_or(2),
+                ..Default::default()
+            };
+            println!("{}", bench::repair::run(&cfg));
         }
         "all" => bench::run_all(&ctx),
         other => {
@@ -553,6 +606,18 @@ mod tests {
                 .expect_err("unknown inline flag must fail");
             assert!(err.contains("--no-such-flag"), "{cmd}: {err}");
         }
+    }
+
+    /// The self-repair CLI surface: `--device-faults SPEC` and the
+    /// `--sentinel` switch parse on `serve`, and the fault spec is
+    /// recoverable verbatim.
+    #[test]
+    fn serve_table_accepts_device_fault_flags() {
+        let p = serve_flags()
+            .parse(&args(&["--device-faults", "dead-pd@conv2:c0:r1", "--sentinel"]))
+            .expect("device-fault flags parse");
+        assert_eq!(p.value("--device-faults"), Some("dead-pd@conv2:c0:r1"));
+        assert!(p.has("--sentinel"));
     }
 
     /// Satellite: a repeated flag is rejected on every subcommand — the

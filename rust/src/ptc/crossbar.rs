@@ -11,6 +11,7 @@
 //! photocurrents accumulate along each physical column (output i).
 
 use crate::devices::DeviceLibrary;
+use crate::ptc::faults::BlockFault;
 use crate::thermal::{coupling::ArrayGeometry, CouplingModel, GammaModel};
 use crate::util::XorShiftRng;
 
@@ -286,6 +287,7 @@ impl PtcSimulator {
             u_floor,
             lr_gain,
             output_gating: opts.output_gating,
+            faults: Vec::new(),
             pd_noise: opts.pd_noise,
             pd_noise_std: self.lib.pd_noise_std,
             scratch: vec![0.0; k2],
@@ -323,6 +325,11 @@ pub struct ProgrammedPtc {
     pub(crate) u_floor: Vec<f64>,
     pub(crate) lr_gain: f64,
     pub(crate) output_gating: bool,
+    /// Hardware defects pinned onto this block ([`BlockFault`]). Applied
+    /// after every (re-)realization — programming or drifting the phases
+    /// cannot heal broken devices, so faulted chunks stay exactly as
+    /// bit-reproducible as healthy ones.
+    faults: Vec<BlockFault>,
     pd_noise: bool,
     pd_noise_std: f64,
     scratch: Vec<f64>,
@@ -374,7 +381,9 @@ impl ProgrammedPtc {
     /// evaluation as [`PtcSimulator::program`] — which is what makes a
     /// recalibrated chunk indistinguishable from a freshly programmed
     /// one without re-running masks, quantization, or the crosstalk
-    /// model.
+    /// model. Device faults re-pin afterwards: a stuck or dead node is
+    /// stuck through drift *and* through restoration, so faulted blocks
+    /// keep the same bit-exactness contract on their healthy nodes.
     pub fn realize_drifted(&mut self, scale: f64, pattern: &[f64]) {
         let (k1, k2) = (self.k1, self.k2);
         assert_eq!(pattern.len(), k1 * k2, "drift pattern must cover the array");
@@ -390,6 +399,47 @@ impl ProgrammedPtc {
                 };
                 self.w_real[i * k2 + j] = crate::devices::Mzi::weight_from_phase(phi);
                 self.phase_abs[i * k2 + j] = phi.abs();
+            }
+        }
+        self.apply_faults();
+    }
+
+    /// Pin hardware defects onto this block (block-local coordinates,
+    /// from [`crate::ptc::DeviceFaultPlan::block_faults`]). Takes effect
+    /// immediately and re-applies after every future realization.
+    pub fn set_faults(&mut self, faults: Vec<BlockFault>) {
+        self.faults = faults;
+        self.apply_faults();
+    }
+
+    pub fn faults(&self) -> &[BlockFault] {
+        &self.faults
+    }
+
+    /// Overwrite realized weights at faulted devices. Stuck MZIs realize
+    /// their stuck phase through Eq. 1 (and burn its hold power); dead
+    /// PD rows and dead rerouter branches read exactly zero (no light,
+    /// no current — their phase-power entries are left untouched since
+    /// the heater may still be driven).
+    fn apply_faults(&mut self) {
+        let (k1, k2) = (self.k1, self.k2);
+        for fi in 0..self.faults.len() {
+            let f = self.faults[fi];
+            match f {
+                BlockFault::StuckPhase { out, inp, phase } => {
+                    self.w_real[out * k2 + inp] = crate::devices::Mzi::weight_from_phase(phase);
+                    self.phase_abs[out * k2 + inp] = phase.abs();
+                }
+                BlockFault::DeadOutput { out } => {
+                    for j in 0..k2 {
+                        self.w_real[out * k2 + j] = 0.0;
+                    }
+                }
+                BlockFault::DeadInput { inp } => {
+                    for i in 0..k1 {
+                        self.w_real[i * k2 + inp] = 0.0;
+                    }
+                }
             }
         }
     }
@@ -449,6 +499,49 @@ mod programmed_tests {
         prog.realize_drifted(0.0, &pattern);
         assert_eq!(prog.w_real, w0, "recalibration restores weights bit-for-bit");
         assert_eq!(prog.phase_abs, p0, "and the power-model phases");
+    }
+
+    #[test]
+    fn device_faults_pin_weights_through_drift_and_restore() {
+        let s = sim();
+        let mut rng = XorShiftRng::new(5);
+        let mut w = vec![0.0; 256];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let opts = ForwardOptions { thermal: true, ..Default::default() };
+        let mut prog = s.program(&w, &opts, &mut XorShiftRng::new(0));
+        let clean = prog.w_real.clone();
+
+        prog.set_faults(vec![
+            BlockFault::StuckPhase { out: 2, inp: 3, phase: 0.9 },
+            BlockFault::DeadOutput { out: 5 },
+            BlockFault::DeadInput { inp: 7 },
+        ]);
+        let stuck_w = crate::devices::Mzi::weight_from_phase(0.9);
+        assert_eq!(prog.w_real[2 * 16 + 3], stuck_w, "stuck MZI pinned");
+        assert!((0..16).all(|j| prog.w_real[5 * 16 + j] == 0.0), "dead PD row dark");
+        assert!((0..16).all(|i| prog.w_real[i * 16 + 7] == 0.0), "dead branch dark");
+        let faulted = prog.w_real.clone();
+
+        let pattern: Vec<f64> = (0..256).map(|m| 0.4 + (m % 5) as f64 * 0.1).collect();
+        prog.realize_drifted(0.2, &pattern);
+        assert_eq!(prog.w_real[2 * 16 + 3], stuck_w, "stuck cell ignores drift");
+        assert!((0..16).all(|j| prog.w_real[5 * 16 + j] == 0.0), "dead row stays dark");
+        assert_ne!(prog.w_real, faulted, "healthy cells still drift");
+
+        prog.realize_drifted(0.0, &pattern);
+        assert_eq!(prog.w_real, faulted, "restore is bit-exact, faults included");
+        for i in 0..16 {
+            for j in 0..16 {
+                if i == 5 || j == 7 || (i == 2 && j == 3) {
+                    continue;
+                }
+                assert_eq!(
+                    prog.w_real[i * 16 + j],
+                    clean[i * 16 + j],
+                    "healthy node ({i},{j}) matches the fault-free program bit-for-bit"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,445 @@
+//! Deterministic device-fault injection for the photonic tensor core.
+//!
+//! [`DeviceFaultPlan`] expresses *hardware* defects — a stuck MZI phase
+//! shifter, a dead photodetector row, a dead rerouter tree branch — as
+//! data, the same way [`crate::coordinator::FaultPlan`] expresses
+//! process-level faults (worker panics, stalls). A plan is parsed once
+//! from a CLI spec (`scatter serve --device-faults SPEC`), carried on
+//! the engine, and lowered to per-block [`BlockFault`]s at realize time
+//! in [`crate::ptc::crossbar`], right next to `realize_drifted`, so a
+//! faulted chunk is exactly as bit-reproducible as a drifted one.
+//!
+//! Grammar (comma-separated entries):
+//!
+//! ```text
+//! stuck@<layer|*>:c<chunk|*>:r<row>:i<col>:p<phase>   stuck-at MZI phase (rad)
+//! dead-pd@<layer|*>:c<chunk|*>:r<row>                 dead photodetector (output row)
+//! dead-branch@<layer|*>:c<chunk|*>:i<col>             dead rerouter tree branch (input col)
+//! rand:s<seed>:n<count>                               macro: <count> seeded stuck cells
+//! ```
+//!
+//! The spec is dimension-free on purpose: `r<row>` / `i<col>` are chunk
+//! coordinates reduced modulo the chunk's realized dimensions at
+//! lowering time, so a plan parses (and a `ServerConfig` round-trips)
+//! without knowing the model, and an out-of-range index can never
+//! panic — it just lands on a real device.
+
+use crate::util::XorShiftRng;
+
+/// Raw row/col values emitted by the `rand:` macro before the modulo at
+/// lowering time. Any bound larger than every realistic chunk dimension
+/// works; this one keeps `describe()` output readable.
+const RAND_COORD_SPAN: u64 = 1024;
+
+/// A fault lowered onto one `k1 x k2` crossbar block, in block-local
+/// coordinates. Applied by `ProgrammedPtc::set_faults` at realize time,
+/// after drift, so the defect survives every drift/restore/reprogram
+/// cycle — broken hardware does not heal when software rewrites phases.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BlockFault {
+    /// The MZI at `(out, inp)` is stuck at `phase` rad: its realized
+    /// weight is pinned to `-sin(phase)` (Eq. 1) regardless of what the
+    /// DAC programs.
+    StuckPhase { out: usize, inp: usize, phase: f64 },
+    /// The photodetector for output row `out` is dead: the whole row
+    /// reads zero current.
+    DeadOutput { out: usize },
+    /// The rerouter branch feeding input column `inp` is dead: no light
+    /// reaches the column, so every weight in it reads zero.
+    DeadInput { inp: usize },
+}
+
+/// One device fault in chunk coordinates: rows span `0..r*k1` (chunk
+/// output rows, each backed by a photodetector), cols span `0..c*k2`
+/// (chunk input columns, each fed by a rerouter tree branch).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DeviceFault {
+    /// Single MZI stuck at a fixed phase.
+    StuckMzi { row: usize, col: usize, phase: f64 },
+    /// Dead photodetector: chunk output `row` is zero across every
+    /// block column (the paper's PD bank sits at the end of the row, so
+    /// one dead PD kills the full accumulated output).
+    DeadPd { row: usize },
+    /// Dead rerouter tree branch: chunk input `col` receives no light
+    /// in any block row (the tree fans one branch out to every row).
+    DeadBranch { col: usize },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+struct FaultEntry {
+    /// Layer name, or `None` to hit every layer.
+    layer: Option<String>,
+    /// Chunk id within the layer, or `None` to hit every chunk.
+    chunk: Option<usize>,
+    fault: DeviceFault,
+}
+
+/// A deterministic schedule of hardware defects, parsed from
+/// `--device-faults`. Ordering is the spec order; lowering is pure, so
+/// the same plan against the same model faults the same devices on
+/// every run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeviceFaultPlan {
+    entries: Vec<FaultEntry>,
+}
+
+impl DeviceFaultPlan {
+    /// The empty plan: no hardware defects.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Number of fault entries in the plan.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Merge another plan's entries into this one (mid-life injection:
+    /// the engine keeps the union so later reprograms re-acquire every
+    /// defect ever injected).
+    pub fn extend(&mut self, other: &Self) {
+        self.entries.extend(other.entries.iter().cloned());
+    }
+
+    /// Parse a comma-separated fault spec (see module docs for the
+    /// grammar). The `rand:` macro expands inline, at parse time, into
+    /// concrete wildcard `StuckMzi` entries so `describe()` shows
+    /// exactly what will be injected.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut entries = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(rest) = part.strip_prefix("rand:") {
+                Self::expand_rand(rest, part, &mut entries)?;
+            } else {
+                entries.push(Self::parse_entry(part)?);
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    /// `rand:s<seed>:n<count>` — `count` stuck cells with seeded
+    /// coordinates and phases, wildcard layer/chunk.
+    fn expand_rand(rest: &str, part: &str, entries: &mut Vec<FaultEntry>) -> Result<(), String> {
+        let fields: Vec<&str> = rest.split(':').collect();
+        let (seed_field, count_field) = match fields[..] {
+            [s, n] => (s, n),
+            _ => return Err(format!("device fault '{part}': rand takes s<seed>:n<count>")),
+        };
+        let seed = seed_field
+            .strip_prefix('s')
+            .and_then(|v| v.parse::<u64>().ok())
+            .ok_or_else(|| format!("device fault '{part}': expected s<seed>, got '{seed_field}'"))?;
+        let count = parse_index(count_field, 'n', part)?;
+        for k in 0..count {
+            let mut rng = XorShiftRng::from_stream(seed, &[k as u64]);
+            entries.push(FaultEntry {
+                layer: None,
+                chunk: None,
+                fault: DeviceFault::StuckMzi {
+                    row: (rng.next_u64() % RAND_COORD_SPAN) as usize,
+                    col: (rng.next_u64() % RAND_COORD_SPAN) as usize,
+                    // Most of the ±π/2 weight range: a stuck phase far
+                    // from the programmed one, so the defect is visible.
+                    phase: rng.uniform_in(-1.4, 1.4),
+                },
+            });
+        }
+        Ok(())
+    }
+
+    fn parse_entry(entry: &str) -> Result<FaultEntry, String> {
+        let (kind, rest) = entry.split_once('@').ok_or_else(|| {
+            format!("device fault '{entry}': expected <kind>@<layer>:c<chunk>:... or rand:s<seed>:n<count>")
+        })?;
+        let fields: Vec<&str> = rest.split(':').collect();
+        if fields.len() < 2 {
+            return Err(format!("device fault '{entry}': expected <layer|*>:c<chunk|*> after '@'"));
+        }
+        let layer = match fields[0] {
+            "" => return Err(format!("device fault '{entry}': empty layer name (use '*' for any)")),
+            "*" => None,
+            name => Some(name.to_string()),
+        };
+        let chunk = parse_wild_index(fields[1], 'c', entry)?;
+        let fault = match (kind, &fields[2..]) {
+            ("stuck", [row, col, phase]) => DeviceFault::StuckMzi {
+                row: parse_index(row, 'r', entry)?,
+                col: parse_index(col, 'i', entry)?,
+                phase: parse_phase(phase, entry)?,
+            },
+            ("dead-pd", [row]) => DeviceFault::DeadPd { row: parse_index(row, 'r', entry)? },
+            ("dead-branch", [col]) => {
+                DeviceFault::DeadBranch { col: parse_index(col, 'i', entry)? }
+            }
+            ("stuck", _) => {
+                return Err(format!("device fault '{entry}': stuck takes :r<row>:i<col>:p<phase>"))
+            }
+            ("dead-pd", _) => return Err(format!("device fault '{entry}': dead-pd takes :r<row>")),
+            ("dead-branch", _) => {
+                return Err(format!("device fault '{entry}': dead-branch takes :i<col>"))
+            }
+            _ => {
+                return Err(format!(
+                    "device fault '{entry}': unknown kind '{kind}' (stuck | dead-pd | dead-branch)"
+                ))
+            }
+        };
+        Ok(FaultEntry { layer, chunk, fault })
+    }
+
+    /// Human-readable plan, one line per entry, in the spec grammar —
+    /// `describe().join(",")` re-parses to an equal plan.
+    pub fn describe(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .map(|e| {
+                let layer = e.layer.as_deref().unwrap_or("*");
+                let chunk = match e.chunk {
+                    Some(c) => format!("c{c}"),
+                    None => "c*".to_string(),
+                };
+                match e.fault {
+                    DeviceFault::StuckMzi { row, col, phase } => {
+                        format!("stuck@{layer}:{chunk}:r{row}:i{col}:p{phase}")
+                    }
+                    DeviceFault::DeadPd { row } => format!("dead-pd@{layer}:{chunk}:r{row}"),
+                    DeviceFault::DeadBranch { col } => {
+                        format!("dead-branch@{layer}:{chunk}:i{col}")
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// Lower every entry matching `(layer, chunk)` onto the chunk's
+    /// `r x c` grid of `k1 x k2` blocks. Returns `(block_index, fault)`
+    /// pairs with `block_index = block_row * c + block_col`, the layout
+    /// `program_chunk` uses. Chunk coordinates reduce modulo the chunk
+    /// dimensions here, so any spec lands on real devices.
+    pub fn block_faults(
+        &self,
+        layer: &str,
+        chunk: usize,
+        k1: usize,
+        k2: usize,
+        r: usize,
+        c: usize,
+    ) -> Vec<(usize, BlockFault)> {
+        let (rows, cols) = (r * k1, c * k2);
+        let mut lowered = Vec::new();
+        if rows == 0 || cols == 0 {
+            return lowered;
+        }
+        for e in &self.entries {
+            if let Some(l) = &e.layer {
+                if l != layer {
+                    continue;
+                }
+            }
+            if let Some(cid) = e.chunk {
+                if cid != chunk {
+                    continue;
+                }
+            }
+            match e.fault {
+                DeviceFault::StuckMzi { row, col, phase } => {
+                    let (row, col) = (row % rows, col % cols);
+                    lowered.push((
+                        (row / k1) * c + col / k2,
+                        BlockFault::StuckPhase { out: row % k1, inp: col % k2, phase },
+                    ));
+                }
+                DeviceFault::DeadPd { row } => {
+                    // The PD accumulates the row across every block
+                    // column, so one dead PD zeroes the row in all of
+                    // them.
+                    let row = row % rows;
+                    for b in 0..c {
+                        lowered
+                            .push(((row / k1) * c + b, BlockFault::DeadOutput { out: row % k1 }));
+                    }
+                }
+                DeviceFault::DeadBranch { col } => {
+                    // The rerouter tree fans one branch out to every
+                    // block row, so a dead branch starves the column in
+                    // all of them.
+                    let col = col % cols;
+                    for a in 0..r {
+                        lowered.push((a * c + col / k2, BlockFault::DeadInput { inp: col % k2 }));
+                    }
+                }
+            }
+        }
+        lowered
+    }
+}
+
+fn parse_index(field: &str, tag: char, entry: &str) -> Result<usize, String> {
+    field
+        .strip_prefix(tag)
+        .and_then(|v| v.parse::<usize>().ok())
+        .ok_or_else(|| format!("device fault '{entry}': expected {tag}<index>, got '{field}'"))
+}
+
+fn parse_wild_index(field: &str, tag: char, entry: &str) -> Result<Option<usize>, String> {
+    if field.len() == 2 && field.starts_with(tag) && field.ends_with('*') {
+        return Ok(None);
+    }
+    parse_index(field, tag, entry).map(Some)
+}
+
+fn parse_phase(field: &str, entry: &str) -> Result<f64, String> {
+    field
+        .strip_prefix('p')
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|p| p.is_finite())
+        .ok_or_else(|| format!("device fault '{entry}': expected p<phase-rad>, got '{field}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        let plan = DeviceFaultPlan::parse(
+            "stuck@fc1:c3:r5:i2:p0.75, dead-pd@*:c0:r7, dead-branch@conv2:c*:i11",
+        )
+        .expect("valid spec");
+        assert_eq!(plan.entries.len(), 3);
+        assert_eq!(
+            plan.entries[0],
+            FaultEntry {
+                layer: Some("fc1".into()),
+                chunk: Some(3),
+                fault: DeviceFault::StuckMzi { row: 5, col: 2, phase: 0.75 },
+            }
+        );
+        assert_eq!(
+            plan.entries[1],
+            FaultEntry { layer: None, chunk: Some(0), fault: DeviceFault::DeadPd { row: 7 } }
+        );
+        assert_eq!(
+            plan.entries[2],
+            FaultEntry {
+                layer: Some("conv2".into()),
+                chunk: None,
+                fault: DeviceFault::DeadBranch { col: 11 },
+            }
+        );
+        // Negative stuck phases parse too.
+        let neg = DeviceFaultPlan::parse("stuck@*:c*:r0:i0:p-1.25").expect("negative phase");
+        assert_eq!(
+            neg.entries[0].fault,
+            DeviceFault::StuckMzi { row: 0, col: 0, phase: -1.25 }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for spec in [
+            "stuck",                          // no '@', not the rand macro
+            "melt@fc1:c0:r1",                 // unknown kind
+            "stuck@fc1:c0:r5:i2",             // missing phase
+            "stuck@fc1:c0:r5:i2:p0.1:x9",     // too many fields
+            "stuck@fc1:c0:r5:i2:pNaN",        // non-finite phase
+            "stuck@:c0:r5:i2:p0.1",           // empty layer
+            "stuck@fc1:q0:r5:i2:p0.1",        // bad chunk tag
+            "stuck@fc1:c0:rX:i2:p0.1",        // non-numeric row
+            "stuck@fc1:c0:r5:i-2:p0.1",       // negative col
+            "dead-pd@fc1:c0",                 // missing row
+            "dead-pd@fc1:c0:r1:r2",           // too many fields
+            "dead-branch@fc1:c0:r1",          // wrong tag for col
+            "rand:s1",                        // missing count
+            "rand:s1:n2:x3",                  // too many fields
+            "rand:sx:n2",                     // bad seed
+        ] {
+            let err = DeviceFaultPlan::parse(spec).expect_err(spec);
+            assert!(err.contains("device fault"), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn rand_is_seed_deterministic() {
+        let a = DeviceFaultPlan::parse("rand:s7:n5").expect("macro");
+        let b = DeviceFaultPlan::parse("rand:s7:n5").expect("macro");
+        assert_eq!(a, b, "same seed, same plan");
+        assert_eq!(a.entries.len(), 5);
+        for e in &a.entries {
+            assert_eq!((e.layer.clone(), e.chunk), (None, None), "rand entries are wildcards");
+            match e.fault {
+                DeviceFault::StuckMzi { phase, .. } => {
+                    assert!(phase.abs() <= 1.4, "phase in range: {phase}")
+                }
+                other => panic!("rand expands to StuckMzi only, got {other:?}"),
+            }
+        }
+        let c = DeviceFaultPlan::parse("rand:s8:n5").expect("macro");
+        assert_ne!(a, c, "different seed, different plan");
+    }
+
+    #[test]
+    fn describe_round_trips_through_parse() {
+        let plan = DeviceFaultPlan::parse(
+            "stuck@fc1:c3:r5:i2:p-0.75, dead-pd@*:c1:r7, dead-branch@conv2:c*:i11, rand:s42:n3",
+        )
+        .expect("valid spec");
+        let described = plan.describe();
+        assert_eq!(described.len(), 6, "rand expands inline");
+        let reparsed = DeviceFaultPlan::parse(&described.join(",")).expect("describe re-parses");
+        assert_eq!(plan, reparsed);
+    }
+
+    #[test]
+    fn empty_plans_lower_to_nothing() {
+        assert!(DeviceFaultPlan::none().is_empty());
+        assert!(DeviceFaultPlan::parse("").expect("empty").is_empty());
+        assert!(DeviceFaultPlan::parse(" , ,").expect("blanks").is_empty());
+        assert!(DeviceFaultPlan::none().block_faults("fc1", 0, 4, 4, 2, 3).is_empty());
+    }
+
+    #[test]
+    fn lowering_maps_chunk_coordinates_onto_blocks() {
+        // Chunk grid: r=2 x c=3 blocks of k1=4 x k2=4 -> 8 rows, 12 cols.
+        let (k1, k2, r, c) = (4, 4, 2, 3);
+        let plan = DeviceFaultPlan::parse("stuck@fc1:c2:r5:i9:p0.3").expect("spec");
+        // row 5 -> block row 1, local out 1; col 9 -> block col 2, local inp 1.
+        assert_eq!(
+            plan.block_faults("fc1", 2, k1, k2, r, c),
+            vec![(c + 2, BlockFault::StuckPhase { out: 1, inp: 1, phase: 0.3 })]
+        );
+        // Layer and chunk filters apply.
+        assert!(plan.block_faults("fc2", 2, k1, k2, r, c).is_empty());
+        assert!(plan.block_faults("fc1", 0, k1, k2, r, c).is_empty());
+
+        // Dead PD at row 6 kills output 2 of every block in block-row 1.
+        let pd = DeviceFaultPlan::parse("dead-pd@*:c*:r6").expect("spec");
+        assert_eq!(
+            pd.block_faults("any", 9, k1, k2, r, c),
+            vec![
+                (3, BlockFault::DeadOutput { out: 2 }),
+                (4, BlockFault::DeadOutput { out: 2 }),
+                (5, BlockFault::DeadOutput { out: 2 }),
+            ]
+        );
+
+        // Dead branch at col 10 starves input 2 of block-col 2 in every row.
+        let br = DeviceFaultPlan::parse("dead-branch@*:c*:i10").expect("spec");
+        assert_eq!(
+            br.block_faults("any", 0, k1, k2, r, c),
+            vec![(2, BlockFault::DeadInput { inp: 2 }), (5, BlockFault::DeadInput { inp: 2 })]
+        );
+
+        // Out-of-range coordinates wrap instead of panicking:
+        // 1005 % 8 == 5, 1029 % 12 == 9, so this is the first entry again.
+        let wrapped = DeviceFaultPlan::parse("stuck@*:c*:r1005:i1029:p0.3").expect("spec");
+        assert_eq!(
+            wrapped.block_faults("fc1", 0, k1, k2, r, c),
+            plan.block_faults("fc1", 2, k1, k2, r, c)
+        );
+    }
+}

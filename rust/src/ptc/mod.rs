@@ -7,9 +7,14 @@
 //! * [`sim`] — chunk-level execution: an `rk1 × ck2` weight chunk mapped
 //!   across r·c PTCs with analog partial-product accumulation across the
 //!   c cores of a tile (§3.3.3).
+//! * [`faults`] — deterministic device-defect injection (stuck MZI
+//!   phases, dead PD rows, dead rerouter branches), lowered onto blocks
+//!   at realize time so faulted chunks stay bit-reproducible.
 
 pub mod crossbar;
+pub mod faults;
 pub mod sim;
 
 pub use crossbar::{ColumnMode, ForwardOptions, PtcSimulator};
+pub use faults::{BlockFault, DeviceFault, DeviceFaultPlan};
 pub use sim::ChunkSimulator;

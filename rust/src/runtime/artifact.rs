@@ -356,6 +356,34 @@ impl MaskArtifact {
         Self::from_json(&v)
     }
 
+    /// Startup scan of an artifact directory: load and verify every
+    /// file, keep what checks out (sorted by ascending generation), and
+    /// **skip-and-count** everything else — truncated writes, bit rot
+    /// caught by the content hash, stale `.tmp` leftovers, foreign
+    /// files someone dropped in the directory. A serving process
+    /// resuming over a damaged directory must come up on the artifacts
+    /// that survive, not crash on the ones that did not; the skip count
+    /// feeds `scatter_artifacts_skipped_total` so the damage is visible
+    /// instead of silent. A missing or unreadable directory is simply
+    /// empty (fresh deployments have no artifact history).
+    pub fn scan_dir(dir: &Path) -> (Vec<Self>, usize) {
+        let Ok(entries) = std::fs::read_dir(dir) else { return (Vec::new(), 0) };
+        let mut artifacts = Vec::new();
+        let mut skipped = 0usize;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.is_dir() {
+                continue;
+            }
+            match Self::load(&path) {
+                Ok(a) => artifacts.push(a),
+                Err(_) => skipped += 1,
+            }
+        }
+        artifacts.sort_by_key(|a| a.generation);
+        (artifacts, skipped)
+    }
+
     /// Load with the monotone-generation invariant enforced: the file's
     /// generation must be strictly greater than `prior_gen`, otherwise a
     /// stale artifact could roll a replica backwards unnoticed.
@@ -510,6 +538,56 @@ mod mask_artifact_tests {
                 other => panic!("doc {doc} must be Serde error, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn scan_dir_skips_and_counts_damage() {
+        let dir = tmp_dir("scan");
+        sample(2).save_atomic(&dir).expect("save");
+        sample(7).save_atomic(&dir).expect("save");
+        let victim = sample(4).save_atomic(&dir).expect("save");
+        // truncate one artifact mid-payload
+        let full = std::fs::read_to_string(&victim).unwrap();
+        std::fs::write(&victim, &full[..full.len() / 3]).unwrap();
+        // bit-flip another without updating its hash
+        let flipped = sample(5).save_atomic(&dir).expect("save");
+        let text = std::fs::read_to_string(&flipped).unwrap();
+        std::fs::write(&flipped, text.replacen("false", "true", 1)).unwrap();
+        // foreign files: a note someone left, and a crashed write's .tmp
+        std::fs::write(dir.join("README.txt"), "masks live here").unwrap();
+        std::fs::write(dir.join("mask_gen_000009.json.tmp"), "{\"gener").unwrap();
+        // a subdirectory is ignored entirely (neither kept nor counted)
+        std::fs::create_dir_all(dir.join("archive")).unwrap();
+
+        let (arts, skipped) = MaskArtifact::scan_dir(&dir);
+        assert_eq!(
+            arts.iter().map(|a| a.generation).collect::<Vec<_>>(),
+            vec![2, 7],
+            "only verified artifacts load, in generation order"
+        );
+        assert_eq!(skipped, 4, "truncated + bit-flipped + 2 foreign files");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_dir_of_missing_directory_is_empty() {
+        let dir = tmp_dir("scan_missing"); // created lazily — never written
+        let (arts, skipped) = MaskArtifact::scan_dir(&dir);
+        assert!(arts.is_empty());
+        assert_eq!(skipped, 0, "a fresh deployment has nothing to skip");
+    }
+
+    #[test]
+    fn scan_dir_survives_all_garbage_directory() {
+        let dir = tmp_dir("scan_garbage");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.json"), "not json at all").unwrap();
+        std::fs::write(dir.join("b.json"), "{\"generation\": 1}").unwrap();
+        std::fs::write(dir.join("c.bin"), [0u8, 159, 146, 150]).unwrap();
+        let (arts, skipped) = MaskArtifact::scan_dir(&dir);
+        assert!(arts.is_empty(), "nothing verifiable in the rubble");
+        assert_eq!(skipped, 3, "every damaged file is counted");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

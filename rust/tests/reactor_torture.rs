@@ -223,6 +223,122 @@ fn keep_alive_storm_holds_on_one_thread() {
     http.shutdown().expect("drain");
 }
 
+/// The same request split at EVERY byte boundary — including between
+/// the `\r` and `\n` of each CRLF, the classic parser-state bug — must
+/// parse identically: the reactor's head accumulator cannot care where
+/// the kernel happened to cut the stream.
+#[test]
+fn headers_split_at_every_byte_boundary_still_parse() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let http = spawn_http(NetConfig::default());
+    let addr: SocketAddr = http.local_addr();
+
+    let request = b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n";
+    for cut in 1..request.len() {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.write_all(&request[..cut]).unwrap_or_else(|e| panic!("cut {cut}: {e}"));
+        stream.flush().expect("flush");
+        // let the reactor consume the fragment on its own tick first
+        std::thread::sleep(Duration::from_millis(2));
+        stream.write_all(&request[cut..]).unwrap_or_else(|e| panic!("cut {cut}: {e}"));
+        let resp = read_to_eof(&mut stream);
+        assert!(
+            resp.starts_with("HTTP/1.1 200"),
+            "split at byte {cut} must not confuse the parser: {resp}"
+        );
+    }
+
+    http.shutdown().expect("drain");
+}
+
+/// Two requests pipelined into one write get two responses on the same
+/// keep-alive connection: the reactor must not discard the second
+/// request's bytes after parsing the first.
+#[test]
+fn pipelined_requests_in_one_write_both_answered() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let http = spawn_http(NetConfig::default());
+    let addr: SocketAddr = http.local_addr();
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .write_all(
+            b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n\
+              GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        )
+        .expect("pipelined pair");
+    let resp = read_to_eof(&mut stream);
+    assert_eq!(
+        resp.matches("HTTP/1.1 200").count(),
+        2,
+        "both pipelined requests answered: {resp}"
+    );
+
+    http.shutdown().expect("drain");
+}
+
+/// A zero-length POST body reaches the handler immediately (no waiting
+/// for bytes that will never come) and gets the 400 envelope — not a
+/// hang, not a connection drop.
+#[test]
+fn zero_length_post_body_gets_prompt_400() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let http = spawn_http(NetConfig::default());
+    let addr: SocketAddr = http.local_addr();
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .write_all(
+            b"POST /v1/predict HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\
+              Connection: close\r\n\r\n",
+        )
+        .expect("empty post");
+    let started = Instant::now();
+    let resp = read_to_eof(&mut stream);
+    assert!(resp.starts_with("HTTP/1.1 400"), "empty body rejected: {resp}");
+    assert!(resp.contains("\"code\":\"bad_request\""), "{resp}");
+    assert!(
+        started.elapsed() < Duration::from_secs(10),
+        "zero-length body must not wait on a read timeout"
+    );
+
+    http.shutdown().expect("drain");
+}
+
+/// A garbage byte stream — not HTTP at all — gets the structured 400
+/// envelope and a close, and the reactor survives to serve the next
+/// client (the request path is panic-proof against arbitrary input).
+#[test]
+fn garbage_byte_stream_gets_400_envelope_and_server_survives() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let http = spawn_http(NetConfig::default());
+    let addr: SocketAddr = http.local_addr();
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut garbage = vec![0u8, 0xff, 0x13, 0x37];
+    garbage.extend_from_slice("\u{1F4A3} not http \u{0000}".as_bytes());
+    garbage.extend_from_slice(b"\r\n\r\n");
+    stream.write_all(&garbage).expect("garbage");
+    let resp = read_to_eof(&mut stream);
+    assert!(resp.starts_with("HTTP/1.1 400"), "garbage rejected cleanly: {resp}");
+    assert!(resp.contains("\"code\":\"bad_request\""), "{resp}");
+
+    // an adversarial shape that would overflow usize answers 400 too
+    let evil = format!(
+        "{{\"image\": [1.0, 2.0], \"shape\": [2, {}]}}",
+        usize::MAX
+    );
+    let resp = http_request(&addr, "POST", "/v1/predict", Some(&evil)).expect("alive");
+    assert_eq!(resp.status, 400, "overflowing shape is a 400, not a panic: {resp:?}");
+    assert!(resp.body.contains("bad_request"), "{resp:?}");
+
+    // and an honest client is still served
+    let health = http_request(&addr, "GET", "/healthz", None).expect("alive");
+    assert_eq!(health.status, 200);
+
+    http.shutdown().expect("drain");
+}
+
 /// Connections beyond `max_connections` get one `overloaded` 503
 /// envelope and are closed — and those rejected sockets are reclaimed
 /// too.

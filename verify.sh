@@ -29,9 +29,12 @@ echo "== bench smoke: chaos (seeded kill-each-worker-once + recovery gate) =="
 echo "== bench smoke: swap (in-serving DST hot-swap + injected bad-canary rollback) =="
 ./rust/target/release/scatter bench swap --duration 4 --concurrency 4 --workers 2
 
+echo "== bench smoke: repair (mid-life device fault -> sentinel -> quarantine + accuracy recovery) =="
+./rust/target/release/scatter bench repair --duration 4 --concurrency 4 --workers 2
+
 echo "== perf gate: ci/check_bench.py =="
 python3 ci/check_bench.py --engine BENCH_engine.json --server BENCH_server.json \
   --drift BENCH_drift.json --chaos BENCH_chaos.json --swap BENCH_swap.json \
-  --baseline ci/bench_baseline.json
+  --repair BENCH_repair.json --baseline ci/bench_baseline.json
 
 echo "verify OK"
