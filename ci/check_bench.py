@@ -44,6 +44,10 @@ The engine gate is **armed two ways**:
   the fresh run) because absolute numbers are machine-specific; commit
   the printed block after the first trusted CI run, and re-record after
   intentional perf changes.
+* ``engine.simd_speedup`` — the integer-quantized kernel's
+  simd-vs-scalar kernel-stage ratio (``speedup_simd_vs_scalar`` from
+  ``--stages``) must clear ``min``; hosts without a vector unit stamp
+  ``simd_sweep_skipped`` and gate cleanly.
 
 Stdlib-only on purpose: CI and the offline dev container both run it
 with a bare python3.
@@ -98,6 +102,7 @@ def check_engine(fresh_path, baseline_path, failures):
     if ratios:
         print(f"engine gate: checked {len(ratios)} speedup-ratio floors")
 
+    check_simd_speedup(fresh_path, fresh_doc, engine_base, failures)
     check_engine_stages(fresh_path, fresh_doc, engine_base, failures)
 
     cells = engine_base.get("cells")
@@ -129,6 +134,62 @@ def check_engine(fresh_path, baseline_path, failures):
         f"engine gate: compared {compared} cells against {baseline_path} "
         f"(tolerance {tolerance:.0%})"
     )
+
+
+def check_simd_speedup(engine_path, doc, engine_base, failures):
+    """Machine-independent SIMD-kernel floor: ``scatter bench engine
+    --stages`` times the integer-quantized kernel stage twice on the
+    tall shape in the same invocation — runtime-detected vector level
+    vs the forced-scalar oracle — and writes the ratio as
+    ``speedup_simd_vs_scalar``, which must clear
+    ``engine.simd_speedup.min``. Both points come from one run on one
+    runner, so a drop is a code regression, not runner noise. A
+    ``null`` spec is record-only (the gate prints the fresh ratio and
+    the ready-to-arm block). Deliberate skips gate cleanly: the bench
+    stamps ``simd_sweep_skipped`` on hosts without AVX2 (non-x86
+    runners, or SCATTER_FORCE_SCALAR set) and when ``--stages`` is off
+    — noted, not failed. Only an armed floor with *no* sweep evidence
+    (neither ratio nor stamp) fails."""
+    if "simd_speedup" not in engine_base:
+        return
+    spec = engine_base["simd_speedup"]
+    ratio = doc.get("speedup_simd_vs_scalar")
+    if spec is None:
+        if ratio is not None:
+            print(
+                f"engine gate: simd-vs-scalar kernel speedup = {float(ratio):.2f} "
+                f"(record-only; baseline simd_speedup is null)"
+            )
+            print("To arm the SIMD-kernel floor, replace \"simd_speedup\": null with:")
+            print(json.dumps({"simd_speedup": {"min": 2.0}}, indent=2))
+        else:
+            skipped = doc.get("simd_sweep_skipped")
+            note = f" ({skipped})" if skipped else ""
+            print(f"engine gate: simd sweep absent{note} — record-only, nothing to record")
+        return
+    floor = float(spec.get("min", 2.0))
+    if ratio is None:
+        skipped = doc.get("simd_sweep_skipped")
+        if skipped:
+            print(f"engine gate: simd sweep skipped ({skipped}) — floor not evaluated")
+            return
+        failures.append(
+            f"{engine_path}: missing speedup_simd_vs_scalar and no "
+            f"simd_sweep_skipped stamp — run 'scatter bench engine' with --stages"
+        )
+        return
+    ratio = float(ratio)
+    if ratio < floor:
+        failures.append(
+            f"simd-vs-scalar kernel speedup = {ratio:.3f} < floor {floor:.2f} "
+            f"(the vectorized quantized sweep stopped paying over its scalar oracle)"
+        )
+    else:
+        variant = (doc.get("simd") or {}).get("variant", "?")
+        print(
+            f"engine gate: simd-vs-scalar kernel speedup = {ratio:.2f} "
+            f"(floor {floor:.2f}, variant {variant})"
+        )
 
 
 def check_engine_stages(fresh_path, fresh_doc, engine_base, failures):

@@ -1,0 +1,250 @@
+"""Stdlib-only mirror of the rust integer-quantized kernel algebra.
+
+Mirrors ``rust/src/exec/kernel.rs``'s ``QuantPanel`` — per-row weight
+quantization (codes in [-127, 127], fused fold ``(max|w|/127)/1023``),
+lane-width row-panel packing with nonzero-column run compression plus
+the stride-1 run-compressed tail, and the exact ``i32`` accumulate with
+one f64 fold per (row, streamed column) — and cross-validates:
+
+* the packed sweep equals the naive integer reference **bit-for-bit**
+  (run compression never drops a nonzero contribution, for any lane
+  width, ragged shape, streamed width, or zero pattern);
+* the dequantized product tracks the f64 product within the analytic
+  quantization-error bound the rust tests assert;
+* the ``i32`` accumulator headroom bound from the kernel's module doc.
+
+No jax/numpy on purpose: this file runs on a bare python3, the same
+way ``ci/check_bench.py`` does.  Run directly (``python3
+python/tests/test_quant_kernel.py``) or under pytest.
+"""
+
+import math
+import random
+
+ACT_LEVELS = 1023.0
+W_LEVELS = 127.0
+
+
+def rust_round(x):
+    """f64::round(): half away from zero (python's round() is banker's)."""
+    return math.floor(x + 0.5) if x >= 0 else math.ceil(x - 0.5)
+
+
+def quantize(w, nrows, ncols):
+    """Per-row weight codes + fused fold factors, as QuantPanel::pack."""
+    codes = [0] * (nrows * ncols)
+    row_scale = []
+    for ri in range(nrows):
+        row = w[ri * ncols:(ri + 1) * ncols]
+        wmax = max((abs(v) for v in row), default=0.0)
+        if wmax == 0.0:
+            row_scale.append(0.0)
+            continue
+        sw = wmax / W_LEVELS
+        for ci, wv in enumerate(row):
+            codes[ri * ncols + ci] = int(rust_round(wv / sw))
+        row_scale.append(sw / ACT_LEVELS)
+    return codes, row_scale
+
+
+def pack(w, nrows, ncols, lanes):
+    """Mirror of QuantPanel::pack: lane panels of column runs (weight
+    stride ``lanes``) plus stride-1 run-compressed tail rows."""
+    assert lanes in (8, 16)
+    codes, row_scale = quantize(w, nrows, ncols)
+    npanels = nrows // lanes
+    panels, runs, wq, tail_rows = [], [], [], []
+    for pi in range(npanels):
+        base = pi * lanes
+        run0 = len(runs)
+        live = lambda ci: any(codes[(base + k) * ncols + ci] for k in range(lanes))
+        ci = 0
+        while ci < ncols:
+            if not live(ci):
+                ci += 1
+                continue
+            col0, w_off = ci, len(wq)
+            while ci < ncols and live(ci):
+                for k in range(lanes):
+                    wq.append(codes[(base + k) * ncols + ci])
+                ci += 1
+            runs.append((col0, ci - col0, w_off))
+        panels.append((run0, len(runs) - run0))
+    for ri in range(npanels * lanes, nrows):
+        run0 = len(runs)
+        crow = codes[ri * ncols:(ri + 1) * ncols]
+        ci = 0
+        while ci < ncols:
+            if crow[ci] == 0:
+                ci += 1
+                continue
+            col0, w_off = ci, len(wq)
+            while ci < ncols and crow[ci] != 0:
+                wq.append(crow[ci])
+                ci += 1
+            runs.append((col0, ci - col0, w_off))
+        tail_rows.append((run0, len(runs) - run0))
+    return {
+        "nrows": nrows, "ncols": ncols, "lanes": lanes, "panels": panels,
+        "runs": runs, "tail_rows": tail_rows, "wq": wq,
+        "row_scale": row_scale, "codes": codes,
+    }
+
+
+def packed_cols(p):
+    return sum(length for (_c0, length, _w) in p["runs"])
+
+
+def accumulate(p, xq, bcols, buf):
+    """Mirror of the scalar integer sweep: exact integer sums per
+    (row, streamed column), one f64 fold each, zero rows skipped.
+    Python ints are exact, matching rust's i32 (headroom asserted)."""
+    lanes, ncols = p["lanes"], p["ncols"]
+    for pi, (run0, nruns) in enumerate(p["panels"]):
+        prs = p["runs"][run0:run0 + nruns]
+        for r in range(lanes):
+            ri = pi * lanes + r
+            fr = p["row_scale"][ri]
+            if fr == 0.0:
+                continue
+            for t in range(bcols):
+                acc = 0
+                for (col0, length, w_off) in prs:
+                    for j in range(length):
+                        wv = p["wq"][w_off + j * lanes + r]
+                        if wv:
+                            acc += wv * xq[(col0 + j) * bcols + t]
+                buf[ri * bcols + t] += float(acc) * fr
+    base = len(p["panels"]) * lanes
+    for k, (run0, nruns) in enumerate(p["tail_rows"]):
+        ri = base + k
+        fr = p["row_scale"][ri]
+        if fr == 0.0:
+            continue
+        for t in range(bcols):
+            acc = 0
+            for (col0, length, w_off) in p["runs"][run0:run0 + nruns]:
+                for j in range(length):
+                    acc += p["wq"][w_off + j] * xq[(col0 + j) * bcols + t]
+            buf[ri * bcols + t] += float(acc) * fr
+
+
+def naive_quant(p, xq, bcols):
+    """Integer reference straight off the dense code matrix."""
+    nrows, ncols = p["nrows"], p["ncols"]
+    out = [0.0] * (nrows * bcols)
+    for ri in range(nrows):
+        fr = p["row_scale"][ri]
+        if fr == 0.0:
+            continue
+        for t in range(bcols):
+            acc = sum(p["codes"][ri * ncols + ci] * xq[ci * bcols + t]
+                      for ci in range(ncols))
+            out[ri * bcols + t] = float(acc) * fr
+    return out
+
+
+def random_problem(rng, nrows, ncols, bcols, zero_frac=0.0):
+    w = [0.0 if rng.random() < zero_frac else rng.uniform(-1.0, 1.0)
+         for _ in range(nrows * ncols)]
+    x = [rng.uniform(0.0, 1.0) for _ in range(ncols * bcols)]
+    xq = [int(rust_round(v * ACT_LEVELS)) for v in x]
+    return w, x, xq
+
+
+SHAPES = [(1, 1), (1, 16), (2, 9), (3, 7), (5, 16), (7, 33), (8, 16),
+          (9, 5), (16, 16), (17, 40), (24, 12), (33, 65)]
+
+
+def test_packed_sweep_matches_naive_integer_reference():
+    rng = random.Random(0xC0DE)
+    for lanes in (8, 16):
+        for (nrows, ncols) in SHAPES:
+            for bcols in (1, 3, 8, 17, 64, 65):
+                for zf in (0.0, 0.5, 0.95):
+                    w, _x, xq = random_problem(rng, nrows, ncols, bcols, zf)
+                    p = pack(w, nrows, ncols, lanes)
+                    buf = [0.0] * (nrows * bcols)
+                    accumulate(p, xq, bcols, buf)
+                    want = naive_quant(p, xq, bcols)
+                    assert buf == want, (lanes, nrows, ncols, bcols, zf)
+
+
+def test_dequantized_product_tracks_f64_within_bound():
+    rng = random.Random(7)
+    for (nrows, ncols) in SHAPES:
+        for bcols in (1, 8, 17):
+            w, x, xq = random_problem(rng, nrows, ncols, bcols)
+            p = pack(w, nrows, ncols, 8)
+            buf = [0.0] * (nrows * bcols)
+            accumulate(p, xq, bcols, buf)
+            for ri in range(nrows):
+                row = w[ri * ncols:(ri + 1) * ncols]
+                wmax = max(abs(v) for v in row)
+                # per-term error <= |w - what|*|x| + |what|*|x - xhat|
+                # <= wmax/254 + wmax*(1 + 1/254)/2046 per column
+                tol = wmax * ncols * (1 / 254 + 1 / 2046) * 1.05 + 1e-9
+                for t in range(bcols):
+                    exact = sum(row[ci] * x[ci * bcols + t] for ci in range(ncols))
+                    got = buf[ri * bcols + t]
+                    assert abs(got - exact) <= tol, (nrows, ncols, ri, t,
+                                                     got, exact, tol)
+
+
+def test_zero_and_quantized_to_zero_columns_are_compiled_out():
+    # 8x16 panel: cols 4..12 exactly zero, col 0 so small it quantizes
+    # to zero on every row -> neither may appear in any run
+    nrows, ncols = 8, 16
+    w = [0.0] * (nrows * ncols)
+    rng = random.Random(3)
+    for ri in range(nrows):
+        w[ri * ncols] = 1e-4          # quantizes to code 0 (wmax ~ 1)
+        w[ri * ncols + 1] = 1.0       # pins wmax
+        for ci in range(12, ncols):
+            w[ri * ncols + ci] = rng.uniform(-1.0, 1.0)
+    p = pack(w, nrows, ncols, 8)
+    assert all(p["codes"][ri * ncols] == 0 for ri in range(nrows))
+    covered = set()
+    for (col0, length, _w) in p["runs"]:
+        covered.update(range(col0, col0 + length))
+    assert 0 not in covered and not covered & set(range(4, 12))
+    assert packed_cols(p) == 5  # col 1 + cols 12..16
+
+
+def test_tail_rows_are_run_compressed():
+    for nrows in (1, 2, 3, 5, 7, 9, 17):
+        ncols = 16
+        rng = random.Random(nrows)
+        w = [rng.uniform(-1.0, 1.0) for _ in range(nrows * ncols)]
+        for ri in range(nrows):  # zero a middle span in every row
+            for ci in range(4, 12):
+                w[ri * ncols + ci] = 0.0
+        p = pack(w, nrows, ncols, 8)
+        assert len(p["tail_rows"]) == nrows % 8
+        for (run0, nruns) in p["tail_rows"]:
+            assert nruns == 2  # [0,4) and [12,16)
+            spans = sorted((c, c + n) for (c, n, _w) in p["runs"][run0:run0 + nruns])
+            assert spans == [(0, 4), (12, 16)]
+
+
+def test_all_zero_rows_fold_to_exact_zero():
+    p = pack([0.0] * 24, 3, 8, 8)
+    assert p["runs"] == [] and p["row_scale"] == [0.0, 0.0, 0.0]
+    buf = [0.25] * 3
+    accumulate(p, [1023] * 8, 1, buf)
+    assert buf == [0.25] * 3  # zero rows skipped, no -0.0 fold
+
+
+def test_i32_accumulator_headroom():
+    # worst case |acc| = ncols * 127 * 1023 must clear i32 at the
+    # kernel's debug-asserted ncols ceiling (engine blocks cap at 64)
+    assert 16_000 * 127 * 1023 < 2**31 - 1
+    assert 64 * 127 * 1023 * 250 < 2**31 - 1  # >250x engine margin
+
+
+if __name__ == "__main__":
+    fns = [v for k, v in sorted(globals().items()) if k.startswith("test_")]
+    for fn in fns:
+        fn()
+        print(f"{fn.__name__}: ok")
+    print(f"{len(fns)} mirror checks passed")

@@ -20,7 +20,7 @@
 //! above the baseline floor. Everything is seed-deterministic on the
 //! fault side; only timing varies run to run.
 
-use crate::bench::common::{repo_root_file, BenchCtx, Workload};
+use crate::bench::common::{host_info, repo_root_file, BenchCtx, Workload};
 use crate::config::AcceleratorConfig;
 use crate::coordinator::net::{http_request, metric_value, HttpClient, HttpServer, NetConfig};
 use crate::coordinator::{EngineOptions, FaultPlan, InferenceServer, ServerConfig};
@@ -224,6 +224,7 @@ pub fn run(cfg: &ChaosBenchConfig) -> String {
 
     let json = Json::obj(vec![
         ("bench", Json::Str("chaos".into())),
+        ("host", host_info()),
         ("seed", Json::Num(cfg.seed as f64)),
         ("faults", Json::Str(fault_desc.clone())),
         ("duration_s", Json::Num(wall_s)),

@@ -8,6 +8,7 @@ use crate::devices::{Mzi, MziSpec};
 use crate::nn::{fit_prototype_readout, Model};
 use crate::sparsity::{init_layer_mask, LayerMask};
 use crate::thermal::GammaModel;
+use crate::util::Json;
 use std::collections::BTreeMap;
 
 /// Which benchmark workload.
@@ -217,6 +218,28 @@ pub fn repo_root_file(name: &str) -> std::path::PathBuf {
     }
 }
 
+/// Host CPU-feature + kernel-variant block recorded in every
+/// BENCH_*.json artifact (`"host"`), so perf floors and trajectories
+/// are interpretable per runner: a ratio measured on an AVX-512 box is
+/// not comparable to one from a scalar ARM runner.
+pub fn host_info() -> Json {
+    let f = crate::exec::cpu_features();
+    let simd = crate::exec::detected_simd();
+    Json::obj(vec![
+        ("arch", Json::Str(std::env::consts::ARCH.into())),
+        (
+            "cpu",
+            Json::obj(vec![
+                ("avx2", Json::Bool(f.avx2)),
+                ("avx512f", Json::Bool(f.avx512f)),
+                ("fma", Json::Bool(f.fma)),
+            ]),
+        ),
+        ("kernel_variant", Json::Str(simd.as_str().into())),
+        ("kernel_lanes", Json::Num(simd.lanes() as f64)),
+    ])
+}
+
 fn short_name(wl: Workload) -> &'static str {
     match wl {
         Workload::Cnn3 => "cnn3",
@@ -311,6 +334,16 @@ mod tests {
         assert!(masks.contains_key("conv2"));
         let lm = &masks["conv2"];
         assert!((lm.density() - 0.3).abs() < 0.1, "density {}", lm.density());
+    }
+
+    #[test]
+    fn host_info_reports_kernel_variant() {
+        let h = host_info();
+        let variant = h.get("kernel_variant").and_then(Json::as_str).expect("variant");
+        assert!(["scalar", "avx2", "avx512"].contains(&variant));
+        let lanes = h.get("kernel_lanes").and_then(Json::as_f64).expect("lanes");
+        assert!(lanes == 8.0 || lanes == 16.0);
+        assert!(h.get("cpu").and_then(|c| c.get("avx2")).is_some());
     }
 
     #[test]

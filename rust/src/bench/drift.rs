@@ -20,7 +20,7 @@
 //! while recompiling fewer chunks than naive full re-programs
 //! (EXPERIMENTS.md §Thermal-drift).
 
-use crate::bench::common::{repo_root_file, BenchCtx, Workload};
+use crate::bench::common::{host_info, repo_root_file, BenchCtx, Workload};
 use crate::config::AcceleratorConfig;
 use crate::coordinator::net::{http_request, metric_value, HttpServer, NetConfig};
 use crate::coordinator::{
@@ -235,6 +235,7 @@ pub fn run(ctx: &BenchCtx) -> String {
 
     let json = Json::obj(vec![
         ("bench", Json::Str("thermal_drift".into())),
+        ("host", host_info()),
         (
             "schedule",
             Json::obj(vec![

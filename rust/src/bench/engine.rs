@@ -8,13 +8,17 @@
 //! grows with p. Emits `BENCH_engine.json` at the repo root so the perf
 //! trajectory is tracked across PRs (EXPERIMENTS.md §Perf); with
 //! `--stages` it also reports the gather/kernel/scatter wall-time
-//! breakdown of both paths.
+//! breakdown of both paths plus the integer-quantized kernel's
+//! simd-vs-scalar kernel-stage speedup (`speedup_simd_vs_scalar`,
+//! floored by ci/check_bench.py; a `simd_sweep_skipped` stamp marks
+//! hosts without a vector unit). Every artifact carries a `host` block
+//! (CPU features + active kernel variant).
 
-use crate::bench::common::repo_root_file;
+use crate::bench::common::{host_info, repo_root_file};
 use crate::bench::timing::bench;
 use crate::config::AcceleratorConfig;
 use crate::coordinator::{EngineOptions, PhotonicEngine};
-use crate::exec::StageBreakdown;
+use crate::exec::{detected_simd, KernelPrecision, SimdLevel, StageBreakdown};
 use crate::nn::MatmulEngine;
 use crate::sparsity::{ChunkMask, LayerMask};
 use crate::util::{Json, Table, XorShiftRng};
@@ -140,6 +144,24 @@ fn measure_stages(path: Path, iters: usize) -> StageBreakdown {
             Path::Uncached => eng.matmul_uncached("bench", &w, &x, out, inp, n_cols),
             _ => eng.matmul("bench", &w, &x, out, inp, n_cols),
         };
+        std::hint::black_box(y);
+    }
+    eng.take_stage_breakdown()
+}
+
+/// Kernel-stage breakdown of the *quantized* cached path on the tall
+/// shape at a pinned SIMD level (`None` = runtime detection). The
+/// simd-vs-scalar headline divides the kernel-stage times of two such
+/// runs — the gather/scatter stages are identical work in both, so the
+/// whole-call ratio would dilute the kernel speedup.
+fn measure_quant_stages(level: Option<SimdLevel>, iters: usize) -> StageBreakdown {
+    let (out, inp, n_cols) = TALL;
+    let (mut eng, w, x) = setup(TALL, TALL_SPARSITY, TALL_THREADS);
+    eng.set_precision(KernelPrecision::Quantized);
+    eng.set_simd_override(level);
+    eng.set_stage_timing(true);
+    for _ in 0..iters {
+        let y = eng.matmul("bench", &w, &x, out, inp, n_cols);
         std::hint::black_box(y);
     }
     eng.take_stage_breakdown()
@@ -280,6 +302,7 @@ pub fn run(threads: &[usize], budget: Duration, stages: bool) -> String {
 
     let mut pairs = vec![
         ("bench", Json::Str("engine_layer_matmul".into())),
+        ("host", host_info()),
         (
             "shape",
             Json::obj(vec![
@@ -328,6 +351,53 @@ pub fn run(threads: &[usize], budget: Duration, stages: bool) -> String {
         }
         out.push('\n');
         out.push_str(&st.render());
+
+        // simd-vs-scalar cell: the integer-quantized kernel's vectorized
+        // sweep against its own forced-scalar oracle on the same tall
+        // shape, isolated to the kernel stage (ci/check_bench.py floors
+        // this at >=2.0x when the baseline arms it)
+        let simd = detected_simd();
+        if simd == SimdLevel::Scalar {
+            let reason = if std::env::var("SCATTER_FORCE_SCALAR").is_ok() {
+                "SCATTER_FORCE_SCALAR set (vector path disabled)"
+            } else {
+                "no AVX2 on this host (scalar quantized kernel only)"
+            };
+            pairs.push(("simd_sweep_skipped", Json::Str(reason.into())));
+            out.push_str(&format!("\nsimd-vs-scalar sweep skipped: {reason}\n"));
+        } else {
+            let vec_b = measure_quant_stages(None, iters);
+            let sc_b = measure_quant_stages(Some(SimdLevel::Scalar), iters);
+            let ratio = sc_b.kernel_ns as f64 / vec_b.kernel_ns.max(1) as f64;
+            pairs.push(("speedup_simd_vs_scalar", Json::Num(ratio)));
+            pairs.push((
+                "simd",
+                Json::obj(vec![
+                    ("variant", Json::Str(simd.as_str().into())),
+                    ("lanes", Json::Num(simd.lanes() as f64)),
+                    ("kernel_ns_simd", Json::Num(vec_b.kernel_ns as f64)),
+                    ("kernel_ns_scalar", Json::Num(sc_b.kernel_ns as f64)),
+                ]),
+            ));
+            out.push_str(&format!(
+                "\nquantized kernel, tall shape @ {TALL_THREADS}t: {} variant, \
+                 {}-row lanes — kernel-stage simd-vs-scalar speedup {ratio:.2}x\n",
+                simd.as_str(),
+                simd.lanes(),
+            ));
+        }
+    } else if detected_simd() == SimdLevel::Scalar {
+        // no --stages and no vector unit: stamp the skip so the armed CI
+        // floor reads as deliberately not evaluated, not as missing data
+        pairs.push((
+            "simd_sweep_skipped",
+            Json::Str("no AVX2 on this host (scalar quantized kernel only)".into()),
+        ));
+    } else {
+        pairs.push((
+            "simd_sweep_skipped",
+            Json::Str("stage breakdown disabled (run with --stages)".into()),
+        ));
     }
 
     let json = Json::obj(pairs);
@@ -352,6 +422,14 @@ mod tests {
         }
         let dense = column_mask(1, 1, 64, 64, 16, 0.0);
         assert_eq!(dense.chunks[0].active_cols(), 64);
+    }
+
+    #[test]
+    fn quant_stage_breakdown_measures_kernel_at_any_level() {
+        for level in [Some(SimdLevel::Scalar), None] {
+            let b = measure_quant_stages(level, 1);
+            assert!(b.kernel_ns > 0, "quantized kernel stage untimed at {level:?}");
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! promoted repair, zero unrepairable verdicts, zero lost replies, and
 //! recovery at or above the baseline floor.
 
-use crate::bench::common::{repo_root_file, BenchCtx, Workload};
+use crate::bench::common::{host_info, repo_root_file, BenchCtx, Workload};
 use crate::config::AcceleratorConfig;
 use crate::coordinator::net::{http_request, HttpClient, HttpServer, NetConfig};
 use crate::coordinator::{
@@ -353,6 +353,7 @@ pub fn run(cfg: &RepairBenchConfig) -> String {
 
     let json = Json::obj(vec![
         ("bench", Json::Str("repair".into())),
+        ("host", host_info()),
         ("concurrency", Json::Num(cfg.concurrency.max(1) as f64)),
         ("workers", Json::Num(cfg.workers.max(1) as f64)),
         ("duration_s", Json::Num(serve.wall_s)),

@@ -41,7 +41,7 @@
 //! passes on four OS threads concurrently, so the ratio clears 2.0
 //! even on modest CI runners).
 
-use crate::bench::common::{repo_root_file, BenchCtx, Workload};
+use crate::bench::common::{host_info, repo_root_file, BenchCtx, Workload};
 use crate::config::AcceleratorConfig;
 use crate::coordinator::metrics::LatencyRecorder;
 use crate::coordinator::net::{resolve_addr, HttpClient, HttpServer, NetConfig};
@@ -442,6 +442,7 @@ pub fn run(cfg: &ServeBenchConfig) -> String {
 
     let mut pairs = vec![
         ("bench", Json::Str("serve".into())),
+        ("host", host_info()),
         ("mode", Json::Str(mode.into())),
         ("rps_target", Json::Num(cfg.rps)),
         ("duration_s", Json::Num(wall_s)),

@@ -20,7 +20,7 @@
 //! exercised at least once, and no promotion slipping past the bad
 //! canary.
 
-use crate::bench::common::{repo_root_file, BenchCtx, Workload};
+use crate::bench::common::{host_info, repo_root_file, BenchCtx, Workload};
 use crate::config::AcceleratorConfig;
 use crate::coordinator::net::{http_request, metric_value, HttpClient, HttpServer, NetConfig};
 use crate::coordinator::{DstServerConfig, EngineOptions, InferenceServer, ServerConfig};
@@ -301,6 +301,7 @@ pub fn run(cfg: &SwapBenchConfig) -> String {
 
     let json = Json::obj(vec![
         ("bench", Json::Str("swap".into())),
+        ("host", host_info()),
         ("concurrency", Json::Num(cfg.concurrency.max(1) as f64)),
         ("workers", Json::Num(cfg.workers.max(1) as f64)),
         ("dst_rounds", Json::Num(cfg.rounds as f64)),

@@ -22,8 +22,8 @@ use crate::config::AcceleratorConfig;
 use crate::coordinator::scheduler::Scheduler;
 use crate::devices::{DeviceLibrary, Mzi, MziSpec};
 use crate::exec::{
-    parallel_for_with, parallel_map, ChunkPlan, DisjointWriter, PanelCache, StageBreakdown,
-    StageTimes, WorkerArena,
+    detected_simd, parallel_for_with, parallel_map, ChunkPlan, DisjointWriter,
+    KernelPrecision, PanelCache, SimdLevel, StageBreakdown, StageTimes, WorkerArena,
 };
 use crate::nn::MatmulEngine;
 use crate::power::{EnergyAccumulator, EnergyReport, PowerModel};
@@ -331,6 +331,16 @@ pub struct PhotonicEngine {
     /// [`Self::set_stage_timing`]; zero overhead while disabled.
     stage_times: StageTimes,
     stage_timing: bool,
+    /// Kernel numeric mode for [`MatmulEngine::matmul_batch`]: `Exact`
+    /// (default) keeps the bit-identity contract; `Quantized` runs the
+    /// integer SIMD kernel. The reference/uncached oracle paths are
+    /// always exact regardless.
+    precision: KernelPrecision,
+    /// SIMD variant the quantized kernel dispatches to. Resolved from
+    /// runtime detection (+ `SCATTER_FORCE_SCALAR`) at construction;
+    /// [`Self::set_simd_override`] can lower it within a process (the
+    /// bench's simd-vs-scalar cell).
+    simd: SimdLevel,
 }
 
 impl PhotonicEngine {
@@ -366,6 +376,8 @@ impl PhotonicEngine {
             col_norm: (Vec::new(), Vec::new()),
             stage_times: StageTimes::new(),
             stage_timing: false,
+            precision: KernelPrecision::default(),
+            simd: detected_simd(),
         }
     }
 
@@ -392,6 +404,34 @@ impl PhotonicEngine {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Select the kernel numeric mode for the compiled batch path.
+    /// `Exact` (default) preserves bit-identity with the reference and
+    /// uncached oracles; `Quantized` runs the integer SIMD kernel
+    /// (same determinism across thread counts and SIMD levels, its own
+    /// integer rounding).
+    pub fn set_precision(&mut self, precision: KernelPrecision) {
+        self.precision = precision;
+    }
+
+    pub fn precision(&self) -> KernelPrecision {
+        self.precision
+    }
+
+    /// Override the SIMD variant the quantized kernel dispatches to,
+    /// clamped to what the CPU supports (`None` restores detection).
+    /// The `SCATTER_FORCE_SCALAR` env var is read once per process, so
+    /// in-process comparisons — the bench's `simd_vs_scalar` cell, the
+    /// forced-scalar property tests — go through here instead.
+    pub fn set_simd_override(&mut self, level: Option<SimdLevel>) {
+        let detected = detected_simd();
+        self.simd = level.map_or(detected, |l| l.min(detected));
+    }
+
+    /// The SIMD variant currently dispatched under `Quantized`.
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
     }
 
     /// Install per-layer sparsity masks (from `nn::loader` or
@@ -1574,6 +1614,17 @@ impl MatmulEngine for PhotonicEngine {
     /// Also equal to [`Self::matmul_uncached`] output-for-output when
     /// `batch = 1`: quantization is elementwise (pass-invariant) and the
     /// two kernels share per-element MAC term order.
+    ///
+    /// Under [`KernelPrecision::Quantized`] pass 1 instead materializes
+    /// each panel as `i16` activation codes (the DAC-quantized value
+    /// re-gridded onto [`crate::exec::kernel::ACT_LEVELS`]) in the
+    /// cache's aligned code slab, and pass 2 sweeps the integer
+    /// [`QuantPanel`](crate::exec::QuantPanel) kernel at the engine's
+    /// SIMD level. Every determinism invariant above still holds —
+    /// integer sums are order-independent and the noise/scatter stages
+    /// are unchanged — but the result lives on the integer grid, so
+    /// oracle equality is replaced by the argmax-agreement gate
+    /// (`rust/tests/exec_engine.rs`).
     fn matmul_batch(
         &mut self,
         layer: &str,
@@ -1629,6 +1680,8 @@ impl MatmulEngine for PhotonicEngine {
             }
         };
         let grid = NoiseGrid { epoch0, epoch_stride, cols_per_item };
+        let quant_mode = self.precision == KernelPrecision::Quantized;
+        let simd = self.simd;
         let timing = self.stage_timing.then_some(&self.stage_times);
         let mut panels = std::mem::take(&mut self.panels);
         let (mut col_xmax, mut col_scale) = std::mem::take(&mut self.col_norm);
@@ -1651,10 +1704,13 @@ impl MatmulEngine for PhotonicEngine {
         // ---- pass 1: shared quantized-activation panels, one per
         // (gather-table group, column block) ----
         panels.prepare(pl.panel_groups.iter().map(|g| g.cols.len() * n_cols));
-        {
-            let (offsets, slab) = panels.parts_mut();
-            let writer = DisjointWriter::new(slab);
-            let n_pitems = pl.panel_groups.len() * n_cblocks;
+        let n_pitems = pl.panel_groups.len() * n_cblocks;
+        if quant_mode {
+            // quantized pass 1: same gather/normalize/DAC-quantize, then
+            // re-grid onto the i16 code slab the integer kernel streams
+            panels.prepare_quant();
+            let (offsets, qslab) = panels.quant_parts_mut();
+            let writer = DisjointWriter::new(qslab);
             parallel_for_with(threads, n_pitems, || (), |item, _| {
                 let g = item / n_cblocks;
                 let col0 = (item % n_cblocks) * block_cols;
@@ -1665,6 +1721,33 @@ impl MatmulEngine for PhotonicEngine {
                 // SAFETY: group panels are disjoint slab ranges (prefix-
                 // sum offsets) and column blocks partition each panel,
                 // so every item owns its range exclusively
+                let panel = unsafe { writer.slice_mut(offsets[g] + nc * col0, nc * bcols) };
+                let xm = &col_xmax[col0..col0 + bcols];
+                for (ci, &j) in grp.cols.iter().enumerate() {
+                    let gj = grp.qi * cols + j as usize;
+                    let src = &x[gj * n_cols + col0..gj * n_cols + col0 + bcols];
+                    let dst = &mut panel[ci * bcols..(ci + 1) * bcols];
+                    for ((d, &v), &m) in dst.iter_mut().zip(src).zip(xm) {
+                        let v = (v / m).clamp(0.0, 1.0);
+                        let vq = if quantize { aq.quantize(v) } else { v };
+                        *d = (vq * crate::exec::kernel::ACT_LEVELS).round() as i16;
+                    }
+                }
+                if let Some(st) = timing {
+                    st.add_gather(t0.expect("timer started").elapsed());
+                }
+            });
+        } else {
+            let (offsets, slab) = panels.parts_mut();
+            let writer = DisjointWriter::new(slab);
+            parallel_for_with(threads, n_pitems, || (), |item, _| {
+                let g = item / n_cblocks;
+                let col0 = (item % n_cblocks) * block_cols;
+                let bcols = block_cols.min(n_cols - col0);
+                let grp = &pl.panel_groups[g];
+                let nc = grp.cols.len();
+                let t0 = timing.map(|_| std::time::Instant::now());
+                // SAFETY: as in the quantized branch above
                 let panel = unsafe { writer.slice_mut(offsets[g] + nc * col0, nc * bcols) };
                 let xm = &col_xmax[col0..col0 + bcols];
                 for (ci, &j) in grp.cols.iter().enumerate() {
@@ -1684,6 +1767,7 @@ impl MatmulEngine for PhotonicEngine {
 
         // ---- pass 2: accumulate + direct scatter, panels read-only ----
         let (offsets, slab) = panels.parts();
+        let qslab = if quant_mode { panels.quant_parts().1 } else { &[][..] };
         let mut y = vec![0.0f64; out_dim * n_cols];
         let writer = DisjointWriter::new(&mut y);
         let n_items = p * n_cblocks;
@@ -1696,9 +1780,15 @@ impl MatmulEngine for PhotonicEngine {
                 let idx = pi * q + qi;
                 let plan = &pl.chunks[idx].plan;
                 let nc = plan.n_active_cols();
-                let xq = &slab[offsets[pl.group_of[idx]] + nc * col0..][..nc * bcols];
+                let off = offsets[pl.group_of[idx]] + nc * col0;
                 let t0 = timing.map(|_| std::time::Instant::now());
-                plan.accumulate(xq, bcols, buf);
+                if quant_mode {
+                    let xq = &qslab[off..][..nc * bcols];
+                    plan.accumulate_quant(xq, bcols, buf, simd);
+                } else {
+                    let xq = &slab[off..][..nc * bcols];
+                    plan.accumulate(xq, bcols, buf);
+                }
                 if let Some(st) = timing {
                     st.add_kernel(t0.expect("timer started").elapsed());
                 }

@@ -935,6 +935,17 @@ fn render_prometheus(inference: &InferenceServer, stats: &HttpStats) -> String {
         "scatter_build_info{{version=\"{}\"}} 1",
         env!("CARGO_PKG_VERSION")
     );
+    let _ = writeln!(
+        o,
+        "# HELP scatter_kernel_variant Active engine kernel as labels, value is always 1."
+    );
+    let _ = writeln!(o, "# TYPE scatter_kernel_variant gauge");
+    let _ = writeln!(
+        o,
+        "scatter_kernel_variant{{variant=\"{}\",precision=\"{}\"}} 1",
+        crate::exec::detected_simd().as_str(),
+        inference.precision().as_str()
+    );
     let _ = writeln!(o, "# TYPE scatter_http_requests_total counter");
     let _ = writeln!(o, "scatter_http_requests_total {}", stats.requests.load(Ordering::Relaxed));
     let _ = writeln!(

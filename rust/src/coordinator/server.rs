@@ -145,6 +145,7 @@ use crate::coordinator::faults::{FaultAction, FaultPlan};
 use crate::coordinator::metrics::{MetricsSnapshot, ServerMetrics, ThermalGauges};
 use crate::coordinator::scheduler::{plan_shards, ClusterConfig, ReplicaState};
 use crate::devices::{Mzi, MziSpec};
+use crate::exec::KernelPrecision;
 use crate::nn::{Model, Tensor};
 use crate::ptc::faults::DeviceFaultPlan;
 use crate::runtime::MaskArtifact;
@@ -193,6 +194,12 @@ pub struct ServerConfig {
     /// Device-fault injection + sentinel detection + quarantine repair.
     /// Disabled by default: no defects, no probing.
     pub(crate) repair: RepairServerConfig,
+    /// Kernel precision every engine worker runs at
+    /// ([`PhotonicEngine::set_precision`]). `Exact` (the default) keeps
+    /// the bit-exact f64 quad kernel; `Quantized` switches the hot loop
+    /// to the integer SIMD kernel (i16 codes, `i32` accumulation),
+    /// gated by argmax agreement >= 0.99 against `Exact`.
+    pub(crate) precision: KernelPrecision,
 }
 
 /// Thermal-drift runtime knobs for the serving stack. Each engine
@@ -337,6 +344,7 @@ impl Default for ServerConfig {
             cluster: ClusterConfig::default(),
             dst: DstServerConfig::default(),
             repair: RepairServerConfig::default(),
+            precision: KernelPrecision::Exact,
         }
     }
 }
@@ -368,6 +376,10 @@ impl ServerConfig {
 
     pub fn engine_threads(&self) -> usize {
         self.engine_threads
+    }
+
+    pub fn precision(&self) -> KernelPrecision {
+        self.precision
     }
 
     pub fn steal(&self) -> bool {
@@ -409,6 +421,7 @@ impl ServerConfig {
             ("batch_timeout_ms", Json::Num(self.batch_timeout.as_millis() as f64)),
             ("workers", Json::Num(self.workers as f64)),
             ("engine_threads", Json::Num(self.engine_threads as f64)),
+            ("precision", Json::Str(self.precision.as_str().into())),
             ("steal", Json::Bool(self.cluster.steal)),
             ("max_in_flight", Json::Num(self.admission.max_in_flight as f64)),
             (
@@ -459,6 +472,17 @@ impl ServerConfig {
                 }
                 "workers" => b = b.workers(cfg_usize(val, key)?),
                 "engine_threads" => b = b.engine_threads(cfg_usize(val, key)?),
+                "precision" => {
+                    let s = val.as_str().ok_or_else(|| {
+                        crate::Error::Config(
+                            "server config key \"precision\" must be a string".into(),
+                        )
+                    })?;
+                    let p = s
+                        .parse::<KernelPrecision>()
+                        .map_err(|e| crate::Error::Config(format!("precision: {e}")))?;
+                    b = b.precision(p);
+                }
                 "steal" => b = b.steal(cfg_bool(val, key)?),
                 "max_in_flight" => b = b.max_in_flight(cfg_usize(val, key)?),
                 "deadline_ms" => {
@@ -750,6 +774,12 @@ impl ServerConfigBuilder {
 
     pub fn engine_threads(mut self, n: usize) -> Self {
         self.cfg.engine_threads = n;
+        self
+    }
+
+    /// Kernel precision for every engine worker (`--precision`).
+    pub fn precision(mut self, p: KernelPrecision) -> Self {
+        self.cfg.precision = p;
         self
     }
 
@@ -1202,6 +1232,8 @@ struct WorkerContext {
     opts: EngineOptions,
     masks: std::collections::BTreeMap<String, crate::sparsity::LayerMask>,
     engine_threads: usize,
+    /// Kernel precision each (re)spawned engine runs at.
+    precision: KernelPrecision,
     thermal: ThermalServerConfig,
     faults: FaultPlan,
     metrics: Arc<ServerMetrics>,
@@ -1324,6 +1356,7 @@ fn run_engine_worker(
 ) {
     let mut engine = PhotonicEngine::new(ctx.cfg.clone(), ctx.opts);
     engine.set_threads(ctx.engine_threads);
+    engine.set_precision(ctx.precision);
     engine.set_masks(ctx.masks.clone());
     // §4.1: deploy the final linear layer on non-adjacent MZI
     // columns (crosstalk-protected readout)
@@ -1660,6 +1693,9 @@ pub struct InferenceServer {
     admission: Arc<AdmissionController>,
     metrics: Arc<ServerMetrics>,
     dispatcher: Mutex<Option<JoinHandle<ServerReport>>>,
+    /// Kernel precision the engine workers were spawned with — surfaced
+    /// as the `scatter_kernel_variant` info gauge on `/metrics`.
+    precision: KernelPrecision,
 }
 
 impl InferenceServer {
@@ -1677,6 +1713,7 @@ impl InferenceServer {
         // never block on a full channel
         let inbox = server_cfg.admission.max_in_flight.max(1);
         let (tx, rx): (SyncSender<Request>, Receiver<Request>) = mpsc::sync_channel(inbox);
+        let precision = server_cfg.precision;
         let dispatcher = {
             let admission = Arc::clone(&admission);
             let metrics = Arc::clone(&metrics);
@@ -1689,7 +1726,13 @@ impl InferenceServer {
             admission,
             metrics,
             dispatcher: Mutex::new(Some(dispatcher)),
+            precision,
         }
+    }
+
+    /// Kernel precision the engine workers run at.
+    pub fn precision(&self) -> KernelPrecision {
+        self.precision
     }
 
     /// Submit an image with no explicit deadline (the configured
@@ -2006,6 +2049,7 @@ fn run_dispatcher(
         opts,
         masks,
         engine_threads: server_cfg.engine_threads.max(1),
+        precision: server_cfg.precision,
         thermal: server_cfg.thermal.clone(),
         faults: server_cfg.faults.clone(),
         metrics: Arc::clone(&metrics),
@@ -2278,6 +2322,7 @@ mod tests {
             .max_batch(6)
             .batch_timeout(Duration::from_millis(3))
             .workers(4)
+            .precision(KernelPrecision::Quantized)
             .steal(true)
             .max_in_flight(64)
             .default_deadline(Some(Duration::from_millis(250)))
@@ -2312,6 +2357,7 @@ mod tests {
         assert_eq!(back.max_batch, 6);
         assert_eq!(back.batch_timeout, Duration::from_millis(3));
         assert_eq!(back.workers, 4);
+        assert_eq!(back.precision, KernelPrecision::Quantized);
         assert!(back.cluster.steal);
         assert_eq!(back.admission.max_in_flight, 64);
         assert_eq!(back.admission.default_deadline, Some(Duration::from_millis(250)));
@@ -2339,6 +2385,20 @@ mod tests {
         assert!(back.repair.sentinel);
         assert_eq!(back.repair.probe_period, Duration::from_millis(4));
         assert!((back.repair.canary_threshold - 0.25).abs() < 1e-12);
+        // default precision is Exact; bad values must be rejected, not
+        // silently coerced
+        assert_eq!(
+            ServerConfig::from_json("{}").expect("empty config").precision,
+            KernelPrecision::Exact
+        );
+        assert_eq!(
+            ServerConfig::from_json("{\"precision\": \"QUANTIZED\"}")
+                .expect("case-insensitive")
+                .precision,
+            KernelPrecision::Quantized
+        );
+        assert!(ServerConfig::from_json("{\"precision\": \"fast\"}").is_err());
+        assert!(ServerConfig::from_json("{\"precision\": 3}").is_err());
         // typos must not silently fall back to defaults
         assert!(ServerConfig::from_json("{\"max_batcch\": 4}").is_err());
         assert!(

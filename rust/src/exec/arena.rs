@@ -60,11 +60,29 @@ impl WorkerArena {
 /// The slab is owned by the engine and reused across matmul calls
 /// (grow-only); `prepare` never zeroes it because pass 1 overwrites
 /// every region pass 2 reads.
+///
+/// Under [`KernelPrecision::Quantized`](crate::exec::KernelPrecision)
+/// pass 1 instead materializes each panel as `i16` activation codes in a
+/// separate 64-byte-aligned slab (same offsets, same layout) sized by
+/// [`Self::prepare_quant`] — cache-line alignment keeps the SIMD
+/// kernel's streamed loads from straddling lines at panel starts.
 #[derive(Default)]
 pub struct PanelCache {
     slab: Vec<f64>,
+    /// i16 code slab, stored as 64-byte-aligned 32-element lanes so the
+    /// slab base is cache-line aligned (`Vec` alignment follows the
+    /// element type).
+    qslab: Vec<AlignedLane>,
     offsets: Vec<usize>,
+    /// Logical element count of the last `prepare` layout (both slabs
+    /// share it).
+    total: usize,
 }
+
+/// One cache line of `i16` activation codes (32 × 2 bytes).
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct AlignedLane([i16; 32]);
 
 impl PanelCache {
     pub fn new() -> Self {
@@ -84,8 +102,20 @@ impl PanelCache {
             self.offsets.push(total);
             total += len;
         }
+        self.total = total;
         if self.slab.len() < total {
             self.slab.resize(total, 0.0);
+        }
+    }
+
+    /// Size the `i16` code slab for the layout of the last [`Self::prepare`]
+    /// call (grow-only, never zeroed — pass 1 overwrites every region
+    /// pass 2 reads). Call after `prepare` when the engine runs the
+    /// quantized kernel.
+    pub fn prepare_quant(&mut self) {
+        let lanes = self.total.div_ceil(32);
+        if self.qslab.len() < lanes {
+            self.qslab.resize(lanes, AlignedLane([0; 32]));
         }
     }
 
@@ -105,6 +135,33 @@ impl PanelCache {
     /// Per-group offsets + the slab, read-only (pass 2).
     pub fn parts(&self) -> (&[usize], &[f64]) {
         (&self.offsets, &self.slab)
+    }
+
+    /// Per-group offsets + the whole `i16` code slab, mutable
+    /// (quantized pass 1). Requires a prior [`Self::prepare_quant`].
+    pub fn quant_parts_mut(&mut self) -> (&[usize], &mut [i16]) {
+        debug_assert!(self.qslab.len() * 32 >= self.total, "prepare_quant first");
+        // SAFETY: AlignedLane is repr(C) over [i16; 32], so the Vec's
+        // backing memory is `qslab.len() * 32` contiguous, initialized
+        // i16s; we expose the logical prefix.
+        let q = unsafe {
+            std::slice::from_raw_parts_mut(
+                self.qslab.as_mut_ptr() as *mut i16,
+                self.total,
+            )
+        };
+        (&self.offsets, q)
+    }
+
+    /// Per-group offsets + the `i16` code slab, read-only
+    /// (quantized pass 2).
+    pub fn quant_parts(&self) -> (&[usize], &[i16]) {
+        debug_assert!(self.qslab.len() * 32 >= self.total, "prepare_quant first");
+        // SAFETY: as in `quant_parts_mut`.
+        let q = unsafe {
+            std::slice::from_raw_parts(self.qslab.as_ptr() as *const i16, self.total)
+        };
+        (&self.offsets, q)
     }
 }
 
@@ -231,6 +288,33 @@ mod tests {
         c.prepare([nc_a * cols_per_item, nc_b * cols_per_item].into_iter());
         assert_eq!(c.parts().1.len(), grown);
         assert_eq!(c.parts().1.as_ptr(), ptr, "smaller batch reuses the slab");
+    }
+
+    /// The quantized kernel streams 256-bit loads from the i16 slab;
+    /// the slab base must sit on a cache line and track the same
+    /// offsets/total as the f64 layout.
+    #[test]
+    fn quant_slab_is_cache_line_aligned_and_tracks_layout() {
+        let mut c = PanelCache::new();
+        c.prepare([6usize, 10, 33].into_iter());
+        c.prepare_quant();
+        {
+            let (offsets, q) = c.quant_parts_mut();
+            assert_eq!(offsets, &[0, 6, 16]);
+            assert_eq!(q.len(), 49);
+            assert_eq!(q.as_ptr() as usize % 64, 0, "64-byte aligned slab base");
+            for (i, v) in q.iter_mut().enumerate() {
+                *v = i as i16;
+            }
+        }
+        let (_, q) = c.quant_parts();
+        assert!(q.iter().enumerate().all(|(i, &v)| v == i as i16));
+        let cap = c.qslab.len();
+        // grow-only across layouts, like the f64 slab
+        c.prepare([8usize].into_iter());
+        c.prepare_quant();
+        assert_eq!(c.quant_parts().1.len(), 8);
+        assert_eq!(c.qslab.len(), cap, "smaller layout must not shrink");
     }
 
     #[test]

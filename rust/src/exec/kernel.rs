@@ -1,5 +1,6 @@
-//! Register-blocked panel micro-kernel over a row-run-packed weight
-//! panel.
+//! Register-blocked panel micro-kernels over row-run-packed weight
+//! panels: the bit-exact f64 quad kernel ([`PackedPanel`]) and the
+//! integer-quantized SIMD kernel ([`QuantPanel`]).
 //!
 //! [`ChunkPlan::accumulate`](crate::exec::ChunkPlan::accumulate) used to
 //! sweep the gain-folded panel one row at a time with an
@@ -17,9 +18,10 @@
 //!   with their weights packed contiguously (`[w0 w1 w2 w3]` per
 //!   column), so all-zero column spans are compiled out and the inner
 //!   loop is branch-free FMA over contiguous `w` and `xq`;
-//! * **scalar tail** — the `nrows % 4` leftover rows keep the
-//!   one-row-at-a-time sweep (dense, zero-skipping), bounding the
-//!   padding waste at zero.
+//! * **run-compressed tail** — the `nrows % 4` leftover rows get the
+//!   same maximal-nonzero-run treatment per row (weight stride 1), so
+//!   masked-out column spans are compiled out of the tail too instead
+//!   of being stored dense and re-tested per sweep.
 //!
 //! Numerical contract: for every output element the MAC terms are added
 //! in ascending active-column order, exactly like the scalar sweep, so
@@ -27,16 +29,197 @@
 //! (asserted in `rust/tests/exec_engine.rs`). The only difference is
 //! that a quad adds `0.0 · x` terms for columns where *some* of its four
 //! rows are zero — an exact no-op for finite activations.
+//!
+//! # The integer-quantized SIMD kernel
+//!
+//! SCATTER's activations are normalized to `[0, 1]` per column block
+//! before they hit the crossbar, so the host-side sweep can run on
+//! narrow integer lanes. [`QuantPanel`] re-quantizes the gain-folded
+//! weight panel to `i16` codes (per-exec-row symmetric scale,
+//! `|code| <= 127`), and the engine's pass 1 materializes activations as
+//! `i16` codes on a 0..=1023 grid ([`ACT_LEVELS`]). The sweep then
+//! accumulates `w_code * x_code` products in `i32` and rescales to f64
+//! exactly once per (row, streamed column) with the fused per-row factor
+//! `row_scale = (max|w| / 127) / 1023`.
+//!
+//! Overflow headroom: `|acc| <= ncols * 127 * 1023 ≈ ncols * 1.3e5`, so
+//! `i32` is safe for panels up to ~16k active columns; the execution
+//! engine's column blocking caps active columns per chunk at the chunk
+//! width (64 under the default config), leaving >250x margin.
+//!
+//! Rows are grouped into lane-width panels (8 for AVX2, 16 when AVX-512
+//! is detected) and swept with stable `core::arch::x86_64` AVX2
+//! intrinsics — 16-row panels run as two 8-row banks of 256-bit `i32`
+//! accumulators, which halves the run-table bookkeeping without
+//! requiring AVX-512 intrinsics. The scalar integer sweep
+//! (`accumulate` with [`SimdLevel::Scalar`]) computes the *same* `i32`
+//! sums (integer addition is order-independent) followed by the same
+//! single f64 fold, so `simd == scalar` holds **exactly**, making the
+//! scalar path both the portable fallback and the equivalence oracle.
+//!
+//! Variant selection is runtime-detected (`is_x86_feature_detected!`),
+//! cached once per process, and overridable with `SCATTER_FORCE_SCALAR=1`
+//! (see [`detected_simd`]). [`KernelPrecision`] selects between the
+//! bit-exact f64 path (`Exact`, the default — every e2e bit-identity
+//! suite pins it) and the integer path (`Quantized`, gated by an
+//! argmax-agreement property test and measured by the bench sweeps).
 
-/// One maximal nonzero column run of a 4-row quad.
+use std::sync::OnceLock;
+
+/// Activation integer grid for the quantized kernel: codes span
+/// `0..=1023` (10-bit), a superset of the 6-bit DAC grid the exact path
+/// models, so DAC-quantized activations round-trip losslessly.
+pub const ACT_LEVELS: f64 = 1023.0;
+
+/// Weight code range for the quantized kernel: `|code| <= 127`.
+const W_LEVELS: f64 = 127.0;
+
+/// Kernel numeric mode for the execution engine.
+///
+/// `Exact` (default) runs the f64 quad kernel and keeps the bit-identity
+/// guarantees every e2e suite pins (batch, chaos, swap, repair).
+/// `Quantized` runs the integer SIMD kernel: activations and weights are
+/// re-quantized to integer codes and accumulated in `i32`, which changes
+/// rounding — it is gated by an argmax-agreement (>= 0.99 vs `Exact`)
+/// property test and is what the bench sweeps measure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelPrecision {
+    /// Bit-exact f64 quad kernel (default).
+    #[default]
+    Exact,
+    /// Integer-quantized SIMD kernel (i16 codes, i32 accumulation).
+    Quantized,
+}
+
+impl KernelPrecision {
+    /// Canonical lowercase name (`"exact"` / `"quantized"`), as accepted
+    /// by `--precision` and the `ServerConfig` JSON field.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelPrecision::Exact => "exact",
+            KernelPrecision::Quantized => "quantized",
+        }
+    }
+}
+
+impl std::str::FromStr for KernelPrecision {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Ok(KernelPrecision::Exact),
+            "quantized" => Ok(KernelPrecision::Quantized),
+            other => Err(format!(
+                "unknown precision '{other}' (expected 'exact' or 'quantized')"
+            )),
+        }
+    }
+}
+
+/// CPU SIMD features relevant to the quantized kernel, as detected at
+/// runtime (all `false` off x86_64). Recorded in every BENCH_*.json
+/// artifact so CI floors are interpretable per machine.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CpuFeatures {
+    pub avx2: bool,
+    pub avx512f: bool,
+    pub fma: bool,
+}
+
+/// Detect SIMD features on the running CPU. `std` caches the underlying
+/// CPUID queries, so this is cheap to call repeatedly.
+pub fn cpu_features() -> CpuFeatures {
+    #[cfg(target_arch = "x86_64")]
+    {
+        CpuFeatures {
+            avx2: is_x86_feature_detected!("avx2"),
+            avx512f: is_x86_feature_detected!("avx512f"),
+            fma: is_x86_feature_detected!("fma"),
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        CpuFeatures::default()
+    }
+}
+
+/// Active SIMD variant of the quantized kernel. Ordered by capability:
+/// an override can only lower the level below what the CPU supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Portable scalar integer sweep — fallback and equivalence oracle.
+    Scalar,
+    /// AVX2: 8-row panels, 8 streamed columns per 256-bit register.
+    Avx2,
+    /// AVX-512-capable host: 16-row panels swept as two 8-row AVX2
+    /// banks (stable intrinsics only) — halves run-table bookkeeping.
+    Avx512,
+}
+
+impl SimdLevel {
+    /// Variant label recorded in bench artifacts and `/metrics`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+        }
+    }
+
+    /// Row-panel height the variant packs for (the lane width).
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdLevel::Scalar | SimdLevel::Avx2 => 8,
+            SimdLevel::Avx512 => 16,
+        }
+    }
+}
+
+/// Pure variant-resolution policy: scalar when forced or when the CPU
+/// lacks AVX2; widest otherwise. Split from [`detected_simd`] so the
+/// policy is unit-testable without mutating process env.
+pub fn resolve_simd(force_scalar: bool, f: CpuFeatures) -> SimdLevel {
+    if force_scalar || !f.avx2 {
+        SimdLevel::Scalar
+    } else if f.avx512f {
+        SimdLevel::Avx512
+    } else {
+        SimdLevel::Avx2
+    }
+}
+
+/// `SCATTER_FORCE_SCALAR` parse: `1` or `true` (any case) forces the
+/// scalar kernel.
+fn env_forces_scalar(v: Option<&str>) -> bool {
+    matches!(v, Some(s) if s == "1" || s.eq_ignore_ascii_case("true"))
+}
+
+/// The process-wide SIMD variant: runtime feature detection combined
+/// with the `SCATTER_FORCE_SCALAR` env override, resolved once and
+/// cached (the env var is read a single time per process — use the
+/// engine's programmatic override to switch variants within a process,
+/// e.g. for the `simd_vs_scalar` bench cell).
+pub fn detected_simd() -> SimdLevel {
+    static CACHE: OnceLock<SimdLevel> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        let force = std::env::var("SCATTER_FORCE_SCALAR")
+            .ok()
+            .map(|v| env_forces_scalar(Some(v.as_str())))
+            .unwrap_or(false);
+        resolve_simd(force, cpu_features())
+    })
+}
+
+/// One maximal nonzero column run of a row group (quad, lane panel, or
+/// single tail row — the weight stride per column is the group height).
 #[derive(Debug, Clone)]
 struct Run {
     /// First panel column of the run.
     col0: u32,
     /// Number of consecutive columns.
     len: u32,
-    /// Offset of the run's packed weights in `w_packed`
-    /// (`len × 4` values, column-major: `[ci][row_in_quad]`).
+    /// Offset of the run's packed weights (`len × group_height` values,
+    /// column-major: `[ci][row_in_group]`).
     w_off: u32,
 }
 
@@ -50,10 +233,12 @@ pub struct PackedPanel {
     /// Per full quad: `(offset, count)` into `runs`.
     quads: Vec<(u32, u32)>,
     runs: Vec<Run>,
-    /// Packed quad weights, run-major; within a run, `[ci][0..4]`.
+    /// Packed weights, run-major; quad runs store `[ci][0..4]`, tail
+    /// runs store one weight per column.
     w_packed: Vec<f64>,
-    /// Dense scalar-tail rows (`nrows % 4` of them), row-major `ncols`.
-    tail: Vec<f64>,
+    /// Per tail row (`nrows % 4` of them): `(offset, count)` into
+    /// `runs`, weight stride 1.
+    tail_rows: Vec<(u32, u32)>,
 }
 
 impl PackedPanel {
@@ -88,8 +273,29 @@ impl PackedPanel {
             }
             quads.push((run0, runs.len() as u32 - run0));
         }
-        let tail = w[nquads * 4 * ncols..].to_vec();
-        Self { nrows, ncols, quads, runs, w_packed, tail }
+        // run-compress the 0..3 leftover rows too (weight stride 1), so
+        // masked-out spans cost nothing in the tail either
+        let mut tail_rows = Vec::with_capacity(nrows - nquads * 4);
+        for ri in nquads * 4..nrows {
+            let run0 = runs.len() as u32;
+            let wrow = &w[ri * ncols..(ri + 1) * ncols];
+            let mut ci = 0;
+            while ci < ncols {
+                if wrow[ci] == 0.0 {
+                    ci += 1;
+                    continue;
+                }
+                let col0 = ci;
+                let w_off = w_packed.len() as u32;
+                while ci < ncols && wrow[ci] != 0.0 {
+                    w_packed.push(wrow[ci]);
+                    ci += 1;
+                }
+                runs.push(Run { col0: col0 as u32, len: (ci - col0) as u32, w_off });
+            }
+            tail_rows.push((run0, runs.len() as u32 - run0));
+        }
+        Self { nrows, ncols, quads, runs, w_packed, tail_rows }
     }
 
     /// Logical (rows, cols) of the packed panel.
@@ -97,8 +303,9 @@ impl PackedPanel {
         (self.nrows, self.ncols)
     }
 
-    /// Panel columns the quad kernel actually visits (Σ run lengths over
-    /// all quads) — all-zero spans are compiled out of this count.
+    /// Panel columns the kernel actually visits (Σ run lengths over all
+    /// quads and tail rows) — all-zero spans are compiled out of this
+    /// count.
     pub fn packed_cols(&self) -> usize {
         self.runs.iter().map(|r| r.len as usize).sum()
     }
@@ -144,18 +351,19 @@ impl PackedPanel {
                 }
             }
         }
-        // scalar tail: the 0..3 rows a quad cannot cover
-        for ri in nquads * 4..self.nrows {
-            let row = rows[ri] as usize;
+        // run-compressed tail: the 0..3 rows a quad cannot cover
+        for (k, &(run0, nruns)) in self.tail_rows.iter().enumerate() {
+            let row = rows[nquads * 4 + k] as usize;
             let dst = &mut buf[row * bcols..row * bcols + bcols];
-            let wrow = &self.tail[(ri - nquads * 4) * self.ncols..][..self.ncols];
-            for (ci, &wv) in wrow.iter().enumerate() {
-                if wv == 0.0 {
-                    continue;
-                }
-                let xrow = &xq[ci * bcols..(ci + 1) * bcols];
-                for (d, &xv) in dst.iter_mut().zip(xrow) {
-                    *d += wv * xv;
+            for run in &self.runs[run0 as usize..(run0 + nruns) as usize] {
+                let mut wo = run.w_off as usize;
+                for ci in run.col0 as usize..(run.col0 + run.len) as usize {
+                    let wv = self.w_packed[wo];
+                    wo += 1;
+                    let xrow = &xq[ci * bcols..(ci + 1) * bcols];
+                    for (d, &xv) in dst.iter_mut().zip(xrow) {
+                        *d += wv * xv;
+                    }
                 }
             }
         }
@@ -176,6 +384,318 @@ fn four_rows(buf: &mut [f64], bcols: usize, r: [usize; 4]) -> [&mut [f64]; 4] {
         &mut c[..bcols],
         &mut d[..bcols],
     ]
+}
+
+/// Shared read-only context for a quantized sweep: the `i16` activation
+/// panel (`ncols × bcols` row-major), its streamed width, and the
+/// gather table.
+struct SweepCtx<'a> {
+    xq: &'a [i16],
+    bcols: usize,
+    rows: &'a [u32],
+}
+
+/// The gain-folded weight panel re-quantized to `i16` codes and packed
+/// into lane-width row panels for the integer SIMD sweep. Same run
+/// compression as [`PackedPanel`] (liveness judged on the *codes*, so
+/// weights that quantize to zero are compiled out too); leftover rows
+/// (`nrows % lanes`) are run-compressed per row at weight stride 1.
+#[derive(Debug, Clone, Default)]
+pub struct QuantPanel {
+    nrows: usize,
+    ncols: usize,
+    /// Row-panel height (8 for AVX2, 16 for AVX-512 hosts); 0 only in
+    /// the empty `Default` panel.
+    lanes: usize,
+    /// Per full lane panel: `(offset, count)` into `runs`, weight
+    /// stride `lanes`.
+    panels: Vec<(u32, u32)>,
+    runs: Vec<Run>,
+    /// Per tail row: `(offset, count)` into `runs`, weight stride 1.
+    tail_rows: Vec<(u32, u32)>,
+    /// Packed weight codes, run-major; panel runs store
+    /// `[ci][0..lanes]`, tail runs one code per column.
+    wq: Vec<i16>,
+    /// Fused per-exec-row rescale `(max|w| / 127) / 1023` applied once
+    /// per (row, streamed column) after `i32` accumulation; 0.0 for
+    /// all-zero rows (skipped by both sweeps).
+    row_scale: Vec<f64>,
+}
+
+impl QuantPanel {
+    /// Quantize and pack a dense row-major `nrows × ncols` panel for the
+    /// given lane width (8 or 16).
+    pub fn pack(w: &[f64], nrows: usize, ncols: usize, lanes: usize) -> Self {
+        assert!(lanes == 8 || lanes == 16, "lane width must be 8 or 16");
+        assert_eq!(w.len(), nrows * ncols);
+        debug_assert!(ncols <= 16_000, "i32 accumulator headroom (module doc)");
+        let mut row_scale = Vec::with_capacity(nrows);
+        let mut codes: Vec<i16> = vec![0; nrows * ncols];
+        for ri in 0..nrows {
+            let wrow = &w[ri * ncols..(ri + 1) * ncols];
+            let wmax = wrow.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+            if wmax == 0.0 {
+                row_scale.push(0.0);
+                continue;
+            }
+            let sw = wmax / W_LEVELS;
+            for (ci, &wv) in wrow.iter().enumerate() {
+                codes[ri * ncols + ci] = (wv / sw).round() as i16;
+            }
+            row_scale.push(sw / ACT_LEVELS);
+        }
+        let npanels = nrows / lanes;
+        let mut panels = Vec::with_capacity(npanels);
+        let mut runs = Vec::new();
+        let mut wq = Vec::new();
+        for pi in 0..npanels {
+            let base = pi * lanes;
+            let run0 = runs.len() as u32;
+            let mut ci = 0;
+            while ci < ncols {
+                let live =
+                    |ci: usize| (0..lanes).any(|k| codes[(base + k) * ncols + ci] != 0);
+                if !live(ci) {
+                    ci += 1;
+                    continue;
+                }
+                let col0 = ci;
+                let w_off = wq.len() as u32;
+                while ci < ncols && live(ci) {
+                    for k in 0..lanes {
+                        wq.push(codes[(base + k) * ncols + ci]);
+                    }
+                    ci += 1;
+                }
+                runs.push(Run { col0: col0 as u32, len: (ci - col0) as u32, w_off });
+            }
+            panels.push((run0, runs.len() as u32 - run0));
+        }
+        let mut tail_rows = Vec::with_capacity(nrows - npanels * lanes);
+        for ri in npanels * lanes..nrows {
+            let run0 = runs.len() as u32;
+            let crow = &codes[ri * ncols..(ri + 1) * ncols];
+            let mut ci = 0;
+            while ci < ncols {
+                if crow[ci] == 0 {
+                    ci += 1;
+                    continue;
+                }
+                let col0 = ci;
+                let w_off = wq.len() as u32;
+                while ci < ncols && crow[ci] != 0 {
+                    wq.push(crow[ci]);
+                    ci += 1;
+                }
+                runs.push(Run { col0: col0 as u32, len: (ci - col0) as u32, w_off });
+            }
+            tail_rows.push((run0, runs.len() as u32 - run0));
+        }
+        Self { nrows, ncols, lanes, panels, runs, tail_rows, wq, row_scale }
+    }
+
+    /// Logical (rows, cols) of the packed panel.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.nrows, self.ncols)
+    }
+
+    /// Row-panel height the panel was packed for.
+    pub fn lane_width(&self) -> usize {
+        self.lanes
+    }
+
+    /// Panel columns the integer kernel actually visits (Σ run lengths).
+    pub fn packed_cols(&self) -> usize {
+        self.runs.iter().map(|r| r.len as usize).sum()
+    }
+
+    /// Accumulate the dequantized `panel × xq` product into the f64
+    /// `buf`, dispatching on `level` (clamped to what the CPU supports).
+    ///
+    /// `xq` holds activation codes on the [`ACT_LEVELS`] grid,
+    /// `ncols × bcols` row-major; `rows` is the [`ChunkPlan`] gather
+    /// table, exactly as for [`PackedPanel::accumulate`]. Scalar and
+    /// SIMD levels produce bit-identical output: both compute the full
+    /// `i32` dot product per (row, streamed column), then apply the same
+    /// single `acc as f64 * row_scale` fold.
+    ///
+    /// [`ChunkPlan`]: crate::exec::ChunkPlan
+    pub fn accumulate(
+        &self,
+        xq: &[i16],
+        bcols: usize,
+        buf: &mut [f64],
+        rows: &[u32],
+        level: SimdLevel,
+    ) {
+        debug_assert_eq!(rows.len(), self.nrows);
+        debug_assert_eq!(xq.len(), self.ncols * bcols);
+        if self.nrows == 0 || self.ncols == 0 || bcols == 0 {
+            return;
+        }
+        let ctx = SweepCtx { xq, bcols, rows };
+        #[cfg(target_arch = "x86_64")]
+        if level != SimdLevel::Scalar && cpu_features().avx2 {
+            // SAFETY: AVX2 availability is runtime-checked above.
+            unsafe { self.accumulate_avx2(&ctx, buf) };
+            return;
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = level;
+        for pi in 0..self.panels.len() {
+            self.panel_rows_scalar(&ctx, buf, pi, 0, bcols);
+        }
+        self.tail_rows_scalar(&ctx, buf, 0, bcols);
+    }
+
+    /// Scalar integer sweep of one full lane panel over streamed columns
+    /// `[t0, t1)`: exact `i32` sums per (row, column) in 64-column
+    /// tiles, one f64 fold each. Shared by the portable path and the
+    /// SIMD path's streamed-column remainder.
+    fn panel_rows_scalar(
+        &self,
+        ctx: &SweepCtx,
+        buf: &mut [f64],
+        pi: usize,
+        t0: usize,
+        t1: usize,
+    ) {
+        let l = self.lanes;
+        let (run0, nruns) = self.panels[pi];
+        let runs = &self.runs[run0 as usize..(run0 + nruns) as usize];
+        for r in 0..l {
+            let ri = pi * l + r;
+            let fr = self.row_scale[ri];
+            if fr == 0.0 {
+                continue;
+            }
+            let drow = ctx.rows[ri] as usize * ctx.bcols;
+            let mut ta = t0;
+            while ta < t1 {
+                let tw = (t1 - ta).min(64);
+                let mut acc = [0i32; 64];
+                for run in runs {
+                    let mut wo = run.w_off as usize + r;
+                    for ci in run.col0 as usize..(run.col0 + run.len) as usize {
+                        let wv = self.wq[wo] as i32;
+                        wo += l;
+                        if wv == 0 {
+                            continue;
+                        }
+                        let xrow = &ctx.xq[ci * ctx.bcols + ta..][..tw];
+                        for (a, &x) in acc[..tw].iter_mut().zip(xrow) {
+                            *a += wv * x as i32;
+                        }
+                    }
+                }
+                let dst = &mut buf[drow + ta..drow + ta + tw];
+                for (d, &a) in dst.iter_mut().zip(&acc[..tw]) {
+                    *d += a as f64 * fr;
+                }
+                ta += tw;
+            }
+        }
+    }
+
+    /// Scalar integer sweep of the `nrows % lanes` tail rows (weight
+    /// stride 1) over streamed columns `[t0, t1)`.
+    fn tail_rows_scalar(
+        &self,
+        ctx: &SweepCtx,
+        buf: &mut [f64],
+        t0: usize,
+        t1: usize,
+    ) {
+        let base = self.panels.len() * self.lanes;
+        for (k, &(run0, nruns)) in self.tail_rows.iter().enumerate() {
+            let ri = base + k;
+            let fr = self.row_scale[ri];
+            if fr == 0.0 {
+                continue;
+            }
+            let runs = &self.runs[run0 as usize..(run0 + nruns) as usize];
+            let drow = ctx.rows[ri] as usize * ctx.bcols;
+            let mut ta = t0;
+            while ta < t1 {
+                let tw = (t1 - ta).min(64);
+                let mut acc = [0i32; 64];
+                for run in runs {
+                    let mut wo = run.w_off as usize;
+                    for ci in run.col0 as usize..(run.col0 + run.len) as usize {
+                        let wv = self.wq[wo] as i32;
+                        wo += 1;
+                        let xrow = &ctx.xq[ci * ctx.bcols + ta..][..tw];
+                        for (a, &x) in acc[..tw].iter_mut().zip(xrow) {
+                            *a += wv * x as i32;
+                        }
+                    }
+                }
+                let dst = &mut buf[drow + ta..drow + ta + tw];
+                for (d, &a) in dst.iter_mut().zip(&acc[..tw]) {
+                    *d += a as f64 * fr;
+                }
+                ta += tw;
+            }
+        }
+    }
+
+    /// AVX2 sweep: per 8-row bank, 8 streamed columns per 256-bit `i32`
+    /// accumulator register (16-lane panels run two banks). The
+    /// streamed-column remainder (`bcols % 8`) and the tail rows reuse
+    /// the scalar integer sweep — same `i32` sums, same fold.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available on the running CPU.
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn accumulate_avx2(&self, ctx: &SweepCtx, buf: &mut [f64]) {
+        use core::arch::x86_64::*;
+        let l = self.lanes;
+        let bcols = ctx.bcols;
+        let t8 = bcols - bcols % 8;
+        for (pi, &(run0, nruns)) in self.panels.iter().enumerate() {
+            let runs = &self.runs[run0 as usize..(run0 + nruns) as usize];
+            for bank in 0..l / 8 {
+                let base = pi * l + bank * 8;
+                let mut t0 = 0;
+                while t0 < t8 {
+                    let mut acc = [_mm256_setzero_si256(); 8];
+                    for run in runs {
+                        let mut wo = run.w_off as usize + bank * 8;
+                        for ci in run.col0 as usize..(run.col0 + run.len) as usize {
+                            let xv = _mm256_cvtepi16_epi32(_mm_loadu_si128(
+                                ctx.xq.as_ptr().add(ci * bcols + t0) as *const __m128i,
+                            ));
+                            let wcol = &self.wq[wo..wo + 8];
+                            for (a, &wv) in acc.iter_mut().zip(wcol) {
+                                let wb = _mm256_set1_epi32(wv as i32);
+                                *a = _mm256_add_epi32(*a, _mm256_mullo_epi32(wb, xv));
+                            }
+                            wo += l;
+                        }
+                    }
+                    let mut tile = [0i32; 8];
+                    for (r, a) in acc.iter().enumerate() {
+                        let ri = base + r;
+                        let fr = self.row_scale[ri];
+                        if fr == 0.0 {
+                            continue;
+                        }
+                        _mm256_storeu_si256(tile.as_mut_ptr() as *mut __m256i, *a);
+                        let drow = ctx.rows[ri] as usize * bcols + t0;
+                        for (j, &v) in tile.iter().enumerate() {
+                            buf[drow + j] += v as f64 * fr;
+                        }
+                    }
+                    t0 += 8;
+                }
+            }
+            if t8 < bcols {
+                self.panel_rows_scalar(ctx, buf, pi, t8, bcols);
+            }
+        }
+        self.tail_rows_scalar(ctx, buf, 0, bcols);
+    }
 }
 
 #[cfg(test)]
@@ -276,15 +796,54 @@ mod tests {
     }
 
     #[test]
+    fn tail_rows_are_run_compressed() {
+        // nrows in {1, 2, 3, 5, 7}: every shape with a non-multiple-of-4
+        // tail. Columns 4..12 of 16 are zero in every row, so each tail
+        // row must pack 8 columns as two runs — not 16 dense ones.
+        for &nrows in &[1usize, 2, 3, 5, 7] {
+            let ncols = 16;
+            let mut w = vec![1.0; nrows * ncols];
+            for row in 0..nrows {
+                for ci in 4..12 {
+                    w[row * ncols + ci] = 0.0;
+                }
+            }
+            let panel = PackedPanel::pack(&w, nrows, ncols);
+            let tail = nrows % 4;
+            assert_eq!(panel.tail_rows.len(), tail, "nrows={nrows}");
+            assert_eq!(
+                panel.packed_cols(),
+                8 * (nrows / 4) + 8 * tail,
+                "nrows={nrows}: dead span must be compiled out of the tail"
+            );
+            for &(_, nruns) in &panel.tail_rows {
+                assert_eq!(nruns, 2, "nrows={nrows}: two runs around the zero span");
+            }
+            // and the packed result still matches the scalar oracle
+            let rows: Vec<u32> = (0..nrows as u32).collect();
+            let bcols = 3;
+            let xq: Vec<f64> = (0..ncols * bcols).map(|i| i as f64 * 0.01).collect();
+            let mut want = vec![0.0; nrows * bcols];
+            naive(&w, ncols, &xq, bcols, &mut want, &rows);
+            let mut got = vec![0.0; nrows * bcols];
+            panel.accumulate(&xq, bcols, &mut got, &rows);
+            assert_eq!(got, want, "nrows={nrows}");
+        }
+    }
+
+    #[test]
     fn all_zero_panel_has_no_runs() {
-        let w = vec![0.0; 8 * 6];
-        let panel = PackedPanel::pack(&w, 8, 6);
-        assert_eq!(panel.packed_cols(), 0);
-        let xq = vec![1.0; 6 * 3];
-        let rows: Vec<u32> = (0..8).collect();
-        let mut buf = vec![0.0; 8 * 3];
-        panel.accumulate(&xq, 3, &mut buf, &rows);
-        assert!(buf.iter().all(|&v| v == 0.0));
+        // 8×6 (quads only) and 7×6 (tail rows too): nothing packed
+        for &nrows in &[8usize, 7] {
+            let w = vec![0.0; nrows * 6];
+            let panel = PackedPanel::pack(&w, nrows, 6);
+            assert_eq!(panel.packed_cols(), 0);
+            let xq = vec![1.0; 6 * 3];
+            let rows: Vec<u32> = (0..nrows as u32).collect();
+            let mut buf = vec![0.0; nrows * 3];
+            panel.accumulate(&xq, 3, &mut buf, &rows);
+            assert!(buf.iter().all(|&v| v == 0.0));
+        }
     }
 
     #[test]
@@ -293,5 +852,225 @@ mod tests {
         assert_eq!(panel.dims(), (0, 0));
         let mut buf: Vec<f64> = Vec::new();
         panel.accumulate(&[], 1, &mut buf, &[]);
+    }
+
+    #[test]
+    fn precision_parses_and_round_trips() {
+        assert_eq!("exact".parse::<KernelPrecision>(), Ok(KernelPrecision::Exact));
+        assert_eq!(
+            "Quantized".parse::<KernelPrecision>(),
+            Ok(KernelPrecision::Quantized)
+        );
+        assert!("fp8".parse::<KernelPrecision>().is_err());
+        assert_eq!(KernelPrecision::default(), KernelPrecision::Exact);
+        for p in [KernelPrecision::Exact, KernelPrecision::Quantized] {
+            assert_eq!(p.as_str().parse::<KernelPrecision>(), Ok(p));
+        }
+    }
+
+    #[test]
+    fn simd_resolution_policy() {
+        let none = CpuFeatures::default();
+        let avx2 = CpuFeatures { avx2: true, fma: true, ..none };
+        let avx512 = CpuFeatures { avx512f: true, ..avx2 };
+        assert_eq!(resolve_simd(false, none), SimdLevel::Scalar);
+        assert_eq!(resolve_simd(false, avx2), SimdLevel::Avx2);
+        assert_eq!(resolve_simd(false, avx512), SimdLevel::Avx512);
+        // the override always wins
+        assert_eq!(resolve_simd(true, avx512), SimdLevel::Scalar);
+        // avx512f without avx2 (not a real CPU) still falls back
+        let weird = CpuFeatures { avx512f: true, ..none };
+        assert_eq!(resolve_simd(false, weird), SimdLevel::Scalar);
+        // lane widths
+        assert_eq!(SimdLevel::Scalar.lanes(), 8);
+        assert_eq!(SimdLevel::Avx2.lanes(), 8);
+        assert_eq!(SimdLevel::Avx512.lanes(), 16);
+    }
+
+    #[test]
+    fn force_scalar_env_values() {
+        assert!(env_forces_scalar(Some("1")));
+        assert!(env_forces_scalar(Some("true")));
+        assert!(env_forces_scalar(Some("TRUE")));
+        assert!(!env_forces_scalar(Some("0")));
+        assert!(!env_forces_scalar(Some("")));
+        assert!(!env_forces_scalar(None));
+    }
+
+    /// Test-side integer reference: exact i32 dot products from the
+    /// quantized codes, one f64 fold per output — the contract both
+    /// sweeps must match bit-for-bit.
+    fn naive_quant(
+        panel: &QuantPanel,
+        w: &[f64],
+        ncols: usize,
+        xq: &[i16],
+        bcols: usize,
+        buf: &mut [f64],
+        rows: &[u32],
+    ) {
+        for (ri, &row) in rows.iter().enumerate() {
+            let fr = panel.row_scale[ri];
+            if fr == 0.0 {
+                continue;
+            }
+            let wrow = &w[ri * ncols..(ri + 1) * ncols];
+            let wmax = wrow.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+            let sw = wmax / W_LEVELS;
+            for t in 0..bcols {
+                let mut acc: i32 = 0;
+                for (ci, &wv) in wrow.iter().enumerate() {
+                    let code = (wv / sw).round() as i32;
+                    acc += code * xq[ci * bcols + t] as i32;
+                }
+                buf[row as usize * bcols + t] += acc as f64 * fr;
+            }
+        }
+    }
+
+    fn random_codes(n: usize, rng: &mut XorShiftRng) -> Vec<i16> {
+        (0..n).map(|_| (rng.uniform() * ACT_LEVELS).round() as i16).collect()
+    }
+
+    #[test]
+    fn quant_scalar_matches_integer_reference() {
+        let mut rng = XorShiftRng::new(7);
+        for &lanes in &[8usize, 16] {
+            for &(nrows, ncols) in
+                &[(1, 7), (5, 3), (8, 16), (9, 5), (16, 11), (17, 64), (33, 9)]
+            {
+                for &bcols in &[1usize, 3, 8, 17, 64] {
+                    let w = random_panel(nrows, ncols, 0.4, &mut rng);
+                    let rows: Vec<u32> = (0..nrows as u32).map(|i| i * 2).collect();
+                    let buf_rows = nrows * 2 + 1;
+                    let xq = random_codes(ncols * bcols, &mut rng);
+                    let panel = QuantPanel::pack(&w, nrows, ncols, lanes);
+                    assert_eq!(panel.dims(), (nrows, ncols));
+                    assert_eq!(panel.lane_width(), lanes);
+
+                    let mut want = vec![0.0; buf_rows * bcols];
+                    naive_quant(&panel, &w, ncols, &xq, bcols, &mut want, &rows);
+                    let mut got = vec![0.0; buf_rows * bcols];
+                    panel.accumulate(&xq, bcols, &mut got, &rows, SimdLevel::Scalar);
+                    assert_eq!(
+                        got, want,
+                        "lanes={lanes} {nrows}x{ncols} b={bcols}: scalar sweep \
+                         must equal the integer reference bit-for-bit"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_tracks_f64_panel_within_quantization_error() {
+        let mut rng = XorShiftRng::new(11);
+        let (nrows, ncols, bcols) = (16, 24, 8);
+        let w = random_panel(nrows, ncols, 0.3, &mut rng);
+        let rows: Vec<u32> = (0..nrows as u32).collect();
+        // activations on the code grid so only weight quantization and
+        // fold rounding separate the two paths
+        let xq = random_codes(ncols * bcols, &mut rng);
+        let xf: Vec<f64> = xq.iter().map(|&c| c as f64 / ACT_LEVELS).collect();
+
+        let mut want = vec![0.0; nrows * bcols];
+        naive(&w, ncols, &xf, bcols, &mut want, &rows);
+        let panel = QuantPanel::pack(&w, nrows, ncols, 8);
+        let mut got = vec![0.0; nrows * bcols];
+        panel.accumulate(&xq, bcols, &mut got, &rows, SimdLevel::Scalar);
+
+        // per-term weight error <= sw/2 = wmax/254, |x| <= 1
+        let tol = ncols as f64 * (1.0 / 254.0) * 1.05 + 1e-9;
+        for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w_).abs() <= tol,
+                "idx {i}: quantized {g} vs f64 {w_} (tol {tol})"
+            );
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn quant_simd_equals_scalar_bit_for_bit() {
+        if !cpu_features().avx2 {
+            eprintln!("skipping: no AVX2 on this host");
+            return;
+        }
+        let mut rng = XorShiftRng::new(23);
+        for &lanes in &[8usize, 16] {
+            let level = if lanes == 16 { SimdLevel::Avx512 } else { SimdLevel::Avx2 };
+            for &(nrows, ncols) in
+                &[(1, 5), (7, 16), (8, 16), (15, 33), (16, 64), (31, 13), (48, 64)]
+            {
+                for &bcols in &[1usize, 7, 8, 9, 17, 64] {
+                    for &zero_frac in &[0.0, 0.5, 0.95] {
+                        let w = random_panel(nrows, ncols, zero_frac, &mut rng);
+                        let rows: Vec<u32> =
+                            (0..nrows as u32).map(|i| i * 2 + 1).collect();
+                        let buf_rows = nrows * 2 + 2;
+                        let xq = random_codes(ncols * bcols, &mut rng);
+                        let panel = QuantPanel::pack(&w, nrows, ncols, lanes);
+
+                        // bias pre-seeded so the fold order interacts
+                        // with nonzero destinations
+                        let mut scalar = vec![0.25; buf_rows * bcols];
+                        let mut simd = scalar.clone();
+                        panel.accumulate(
+                            &xq,
+                            bcols,
+                            &mut scalar,
+                            &rows,
+                            SimdLevel::Scalar,
+                        );
+                        panel.accumulate(&xq, bcols, &mut simd, &rows, level);
+                        assert_eq!(
+                            simd, scalar,
+                            "lanes={lanes} {nrows}x{ncols} b={bcols} z={zero_frac}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_all_zero_and_empty_panels_are_noops() {
+        let w = vec![0.0; 9 * 6];
+        let panel = QuantPanel::pack(&w, 9, 6, 8);
+        assert_eq!(panel.packed_cols(), 0);
+        let xq = vec![1023i16; 6 * 3];
+        let rows: Vec<u32> = (0..9).collect();
+        let mut buf = vec![0.0; 9 * 3];
+        panel.accumulate(&xq, 3, &mut buf, &rows, SimdLevel::Scalar);
+        assert!(buf.iter().all(|&v| v == 0.0));
+
+        let empty = QuantPanel::pack(&[], 0, 0, 8);
+        assert_eq!(empty.dims(), (0, 0));
+        let mut buf: Vec<f64> = Vec::new();
+        empty.accumulate(&[], 1, &mut buf, &[], SimdLevel::Scalar);
+
+        let default = QuantPanel::default();
+        let mut buf: Vec<f64> = Vec::new();
+        default.accumulate(&[], 1, &mut buf, &[], SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn quant_zero_spans_and_quantized_to_zero_weights_are_compiled_out() {
+        // 8×16, columns 4..12 zero; column 0 is tiny enough to quantize
+        // to code 0 in every row (wmax = 1.0 -> sw = 1/127; |w| < sw/2)
+        let mut w = vec![1.0; 8 * 16];
+        for row in 0..8 {
+            for ci in 4..12 {
+                w[row * 16 + ci] = 0.0;
+            }
+            w[row * 16] = 1.0e-4;
+        }
+        let panel = QuantPanel::pack(&w, 8, 16, 8);
+        assert_eq!(panel.panels.len(), 1);
+        assert_eq!(
+            panel.packed_cols(),
+            7,
+            "cols 1..4 and 12..16 survive; col 0 quantizes to zero"
+        );
     }
 }

@@ -8,17 +8,23 @@
 //!   time: active-index gather tables and gain-folded weight panels, so
 //!   the streamed matvec does zero mask branching and skips pruned work
 //!   entirely;
-//! * [`kernel`] — the register-blocked [`PackedPanel`] micro-kernel the
-//!   panels compile into: 4-row quads × nonzero column runs, branch-free
-//!   FMA over contiguous `w` and `xq`;
+//! * [`kernel`] — the panel micro-kernels the plans compile into: the
+//!   bit-exact f64 [`PackedPanel`] (4-row quads × nonzero column runs,
+//!   branch-free FMA with a run-compressed tail) and the
+//!   integer-quantized [`QuantPanel`] (i16 codes in lane-width row
+//!   panels, `i32` SIMD accumulation with one f64 fold per output),
+//!   selected by [`KernelPrecision`] with runtime [`SimdLevel`]
+//!   detection and a `SCATTER_FORCE_SCALAR=1` override;
 //! * [`arena`] — allocation-free steady state: per-worker scratch
 //!   ([`WorkerArena`]), the shared quantized-activation panel cache
-//!   ([`PanelCache`]) that removes the O(p×) per-chunk-row re-gather
+//!   ([`PanelCache`], f64 slab plus a 64-byte-aligned i16 code slab for
+//!   the quantized path) that removes the O(p×) per-chunk-row re-gather
 //!   redundancy, and the stage-time instrumentation ([`StageTimes`])
 //!   behind `scatter bench engine --stages`;
 //! * [`pool`] — a std-only scoped worker pool: [`parallel_map`]
 //!   (collects results by index) and [`parallel_for_with`] (worker-local
-//!   scratch + direct disjoint-region output via [`DisjointWriter`]).
+//!   scratch + direct disjoint-region output via [`DisjointWriter`],
+//!   generic over the element type so pass 1 can fill either slab).
 //!
 //! Determinism contract: programming is sequential, and all per-cycle
 //! noise is drawn from counter-based per-(chunk, column) RNG streams
@@ -26,7 +32,10 @@
 //! bit-identical for any worker count **and** for any split of the work
 //! into passes — the two-pass shared-panel path and the single-pass
 //! uncached path produce the same bits — asserted in
-//! `rust/tests/exec_engine.rs`.
+//! `rust/tests/exec_engine.rs`. The quantized kernel preserves the same
+//! invariance (integer sums are order-independent and the per-output
+//! fold is unique), just on its own integer grid: `Exact` and
+//! `Quantized` differ in rounding, never in determinism.
 
 pub mod arena;
 pub mod kernel;
@@ -34,6 +43,9 @@ pub mod plan;
 pub mod pool;
 
 pub use arena::{PanelCache, StageBreakdown, StageTimes, WorkerArena};
-pub use kernel::PackedPanel;
+pub use kernel::{
+    cpu_features, detected_simd, resolve_simd, CpuFeatures, KernelPrecision,
+    PackedPanel, QuantPanel, SimdLevel,
+};
 pub use plan::ChunkPlan;
 pub use pool::{parallel_for_with, parallel_map, partition_ranges, DisjointWriter};

@@ -32,7 +32,7 @@
 //! grid-padding columns, which legacy streams as x = 0 but which still
 //! leak their floor).
 
-use crate::exec::kernel::PackedPanel;
+use crate::exec::kernel::{detected_simd, PackedPanel, QuantPanel, SimdLevel};
 use crate::ptc::crossbar::ProgrammedPtc;
 
 /// A compiled execution plan for one `rk1 × ck2` programmed chunk.
@@ -58,6 +58,11 @@ pub struct ChunkPlan {
     /// The same weights packed for the register-blocked micro-kernel
     /// (4-row quads × nonzero column runs; see [`PackedPanel`]).
     pub panel: PackedPanel,
+    /// The same weights re-quantized to `i16` codes and packed into
+    /// lane-width row panels for the integer SIMD kernel
+    /// ([`QuantPanel`]); swept by [`Self::accumulate_quant`] when the
+    /// engine runs `KernelPrecision::Quantized`.
+    pub qpanel: QuantPanel,
     /// Per-exec-row constant leakage term (already LR-rescaled).
     pub bias: Vec<f64>,
     /// True if any bias entry is nonzero (skip the add otherwise).
@@ -149,7 +154,9 @@ impl ChunkPlan {
         }
 
         let panel = PackedPanel::pack(&w, rows.len(), cols.len());
-        Self { rows, cols, w, panel, bias, any_bias, noise_std, mask_gen: 0 }
+        let qpanel =
+            QuantPanel::pack(&w, rows.len(), cols.len(), detected_simd().lanes());
+        Self { rows, cols, w, panel, qpanel, bias, any_bias, noise_std, mask_gen: 0 }
     }
 
     /// Active input columns (the gather count per streamed column block).
@@ -210,6 +217,32 @@ impl ChunkPlan {
             }
         }
         self.panel.accumulate(xq, bcols, buf, &self.rows);
+    }
+
+    /// The integer-quantized counterpart of [`Self::accumulate`]: same
+    /// bias-first contract, but `xq` holds `i16` activation codes on the
+    /// [`ACT_LEVELS`](crate::exec::kernel::ACT_LEVELS) grid and the
+    /// sweep runs the [`QuantPanel`] integer kernel at the given
+    /// [`SimdLevel`]. Scalar and SIMD levels are bit-identical (same
+    /// `i32` sums, same single f64 fold per output element).
+    pub fn accumulate_quant(
+        &self,
+        xq: &[i16],
+        bcols: usize,
+        buf: &mut [f64],
+        level: SimdLevel,
+    ) {
+        debug_assert_eq!(xq.len(), self.cols.len() * bcols);
+        if self.any_bias {
+            for (ri, &row) in self.rows.iter().enumerate() {
+                let dst = &mut buf[row as usize * bcols..row as usize * bcols + bcols];
+                let b = self.bias[ri];
+                for v in dst.iter_mut() {
+                    *v += b;
+                }
+            }
+        }
+        self.qpanel.accumulate(xq, bcols, buf, &self.rows, level);
     }
 
     /// The pre-PR4 scalar sweep: one row at a time over the dense panel
@@ -428,6 +461,47 @@ mod tests {
             plan.accumulate(&xq, bcols, &mut a);
             plan.accumulate_scalar(&xq, bcols, &mut b);
             assert_eq!(a, b, "bcols {bcols}");
+        }
+    }
+
+    /// The quantized plan sweep must track the f64 kernel within weight
+    /// quantization error (bias included), and every SIMD level must be
+    /// bit-identical to the scalar integer level.
+    #[test]
+    fn quant_accumulate_tracks_packed_and_is_level_invariant() {
+        use crate::exec::kernel::ACT_LEVELS;
+        let (r, c) = (2, 2);
+        let s = sim(8);
+        let (rows, cols) = (r * s.k1, c * s.k2);
+        let mut rng = XorShiftRng::new(29);
+        let mut w = vec![0.0; rows * cols];
+        rng.fill_uniform(&mut w, -1.0, 1.0);
+        let row_mask: Vec<bool> = (0..rows).map(|i| i % 4 != 2).collect();
+        let col_mask: Vec<bool> = (0..cols).map(|j| j % 3 != 1).collect();
+        let blocks = program_chunk(
+            &s, r, c, &w, &row_mask, &col_mask, ColumnMode::InputGatingLr, true, 6,
+        );
+        let plan = ChunkPlan::from_blocks(&blocks, r, c, rows - 3, cols - 5, 0.0);
+        let nc = plan.n_active_cols();
+        for bcols in [1usize, 3, 8, 17] {
+            let codes: Vec<i16> = (0..nc * bcols)
+                .map(|_| (rng.uniform() * ACT_LEVELS).round() as i16)
+                .collect();
+            let xf: Vec<f64> = codes.iter().map(|&v| v as f64 / ACT_LEVELS).collect();
+            let mut exact = vec![0.0f64; rows * bcols];
+            plan.accumulate(&xf, bcols, &mut exact);
+            let mut scalar = vec![0.0f64; rows * bcols];
+            plan.accumulate_quant(&codes, bcols, &mut scalar, SimdLevel::Scalar);
+            let tol = nc as f64 / 254.0 * 1.05 + 1e-9;
+            for (i, (q, e)) in scalar.iter().zip(&exact).enumerate() {
+                assert!(
+                    (q - e).abs() <= tol,
+                    "bcols {bcols} idx {i}: quant {q} vs exact {e} (tol {tol})"
+                );
+            }
+            let mut simd = vec![0.0f64; rows * bcols];
+            plan.accumulate_quant(&codes, bcols, &mut simd, detected_simd());
+            assert_eq!(simd, scalar, "bcols {bcols}: level must not change bits");
         }
     }
 

@@ -121,6 +121,12 @@ pub fn parallel_for_with<S, F>(
 /// be checked cheaply at runtime), which is why `slice_mut` is
 /// `unsafe` — the engine's items partition the output by construction
 /// ((chunk-row band × column block) regions never overlap).
+///
+/// Generic over the element type: the engine's pass 1 fills the
+/// [`PanelCache`](crate::exec::PanelCache) f64 slab through an
+/// `f64` writer under `KernelPrecision::Exact` and the 64-byte-aligned
+/// `i16` code slab through an `i16` writer under `Quantized`; pass 2
+/// scatters the f64 output either way.
 pub struct DisjointWriter<'a, T> {
     ptr: *mut T,
     len: usize,

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! scatter serve  [--config FILE] [--addr 127.0.0.1:8080] [--workers N]
-//!         [--engine-threads N] [--max-batch N] [--max-in-flight N]
+//!         [--engine-threads N] [--precision exact|quantized] [--max-batch N] [--max-in-flight N]
 //!         [--deadline-ms N] [--density D] [--steal]
 //!         [--thermal off|threshold[:RAD]|periodic[:N]] [--brownout RAD]
 //!         [--faults SPEC] [--watchdog-ms N] [--dst on[:PERIOD_MS]|off]
@@ -142,6 +142,7 @@ fn serve_flags() -> FlagTable {
     .flag("--density", "D", "backbone density of the CNN-3 deployment (default 0.3)")
     .flag("--workers", "N", "engine-worker replicas (default 2)")
     .flag("--engine-threads", "N", "compute threads per replica (default 1)")
+    .flag("--precision", "MODE", "kernel precision: exact | quantized (default exact)")
     .flag("--max-batch", "N", "max requests fused per engine pass (default 8)")
     .flag("--max-in-flight", "N", "admission cap before shedding 503s (default 256)")
     .flag("--deadline-ms", "N", "per-request deadline (default: none)")
@@ -192,6 +193,13 @@ fn cmd_serve(args: &[String]) {
     let mut b = base.to_builder().workers(workers);
     if let Some(n) = get_or_exit::<usize>(&p, "--engine-threads") {
         b = b.engine_threads(n);
+    }
+    if let Some(s) = p.value("--precision") {
+        let mode = s.parse::<scatter::exec::KernelPrecision>().unwrap_or_else(|e| {
+            eprintln!("error: --precision: {e}");
+            std::process::exit(2);
+        });
+        b = b.precision(mode);
     }
     if let Some(n) = get_or_exit::<usize>(&p, "--max-batch") {
         b = b.max_batch(n);

@@ -13,6 +13,7 @@
 
 use scatter::config::{AcceleratorConfig, SparsitySupport};
 use scatter::coordinator::{EngineOptions, PhotonicEngine};
+use scatter::exec::{detected_simd, KernelPrecision, SimdLevel};
 use scatter::nn::MatmulEngine;
 use scatter::sparsity::{ChunkMask, LayerMask};
 use scatter::util::{nmae, XorShiftRng};
@@ -368,6 +369,146 @@ fn batched_noise_addressing_differs_from_flat_call_after_item_zero() {
         item_cols(&y_bat, 1),
         "later items must re-key noise per item — flat addressing would \
          correlate a batch's noise with its packing order"
+    );
+}
+
+/// The quantized kernel's core property: the SIMD sweep and the scalar
+/// integer oracle see the same i16 inputs and must therefore produce
+/// the same i32 sums — so engine outputs are bit-identical between the
+/// detected SIMD variant and a forced-scalar override, across every
+/// thread count, mask feature set, and ragged shape, full noise stack
+/// on. (On hosts without AVX2 both engines run scalar and the assert
+/// pins that the override plumbing itself moves no bits.)
+#[test]
+fn quantized_simd_equals_forced_scalar_across_threads_masks_shapes() {
+    let mut rng = XorShiftRng::new(41);
+    for (features, kind) in [
+        (SparsitySupport::NONE, 3u8),
+        (SparsitySupport::IG, 3),
+        (SparsitySupport::IG_OG, 3),
+        (SparsitySupport::FULL, 3),
+    ] {
+        for (out, inp, n_cols) in [(70usize, 90usize, 5usize), (33, 50, 65)] {
+            let (w, x) = problem(out, inp, n_cols, 13);
+            let mask = random_mask(2, 2, 64, 64, kind, &mut rng);
+            let mut simd =
+                engine_with_mask(features, Some(mask.clone()), EngineOptions::NOISY);
+            let mut scalar =
+                engine_with_mask(features, Some(mask), EngineOptions::NOISY);
+            simd.set_precision(KernelPrecision::Quantized);
+            scalar.set_precision(KernelPrecision::Quantized);
+            scalar.set_simd_override(Some(SimdLevel::Scalar));
+            assert_eq!(scalar.simd_level(), SimdLevel::Scalar);
+            for threads in [1usize, 2, 4, 8] {
+                simd.set_threads(threads);
+                scalar.set_threads(threads);
+                assert_eq!(
+                    simd.matmul("l", &w, &x, out, inp, n_cols),
+                    scalar.matmul("l", &w, &x, out, inp, n_cols),
+                    "simd != scalar: {features:?} kind {kind} \
+                     {out}x{inp}x{n_cols} threads {threads}"
+                );
+            }
+        }
+    }
+}
+
+/// The forced-scalar override: clamped to detection, restorable, and
+/// the engine defaults to the bit-exact mode.
+#[test]
+fn simd_override_clamps_to_detection_and_default_is_exact() {
+    let mut eng = engine_with_mask(SparsitySupport::FULL, None, EngineOptions::NOISY);
+    assert_eq!(eng.precision(), KernelPrecision::Exact, "Exact is the default");
+    let detected = detected_simd();
+    assert_eq!(eng.simd_level(), detected);
+    // requesting more than the host supports clamps to detection
+    eng.set_simd_override(Some(SimdLevel::Avx512));
+    assert!(eng.simd_level() <= detected);
+    eng.set_simd_override(Some(SimdLevel::Scalar));
+    assert_eq!(eng.simd_level(), SimdLevel::Scalar);
+    eng.set_simd_override(None);
+    assert_eq!(eng.simd_level(), detected);
+}
+
+/// Quantized mode keeps every determinism invariant (thread counts,
+/// repeated-call noise epochs) while changing rounding: outputs are
+/// bit-stable per thread count but differ from Exact.
+#[test]
+fn quantized_outputs_deterministic_and_distinct_from_exact() {
+    let (out, inp, n_cols) = (80, 96, 13);
+    let (w, x) = problem(out, inp, n_cols, 14);
+    let mut rng = XorShiftRng::new(43);
+    let mask = random_mask(2, 2, 64, 64, 3, &mut rng);
+    let run = |threads: usize, precision: KernelPrecision| {
+        let mut eng =
+            engine_with_mask(SparsitySupport::FULL, Some(mask.clone()), EngineOptions::NOISY);
+        eng.set_precision(precision);
+        eng.set_threads(threads);
+        eng.matmul("l", &w, &x, out, inp, n_cols)
+    };
+    let q1 = run(1, KernelPrecision::Quantized);
+    for threads in [2, 4, 8] {
+        assert_eq!(
+            q1,
+            run(threads, KernelPrecision::Quantized),
+            "quantized output moved at {threads} threads"
+        );
+    }
+    let exact = run(1, KernelPrecision::Exact);
+    assert_ne!(q1, exact, "integer accumulation must change rounding");
+    // and stays numerically close to the exact kernel
+    let e = nmae(&q1, &exact);
+    assert!(e < 0.02, "quantized drifted {e} from exact");
+}
+
+/// The ISSUE 10 accuracy gate: on a class-structured eval set (clear
+/// readout margins, like a trained model's), the Quantized engine's
+/// per-column argmax must agree with Exact on >= 99% of columns. Both
+/// engines draw identical counter-based noise (same seed, same epoch
+/// sequence), so any disagreement is purely integer rounding.
+#[test]
+fn quantized_argmax_agreement_with_exact_is_at_least_99_percent() {
+    let (classes, dim, n_eval) = (10usize, 64usize, 300usize);
+    let mut rng = XorShiftRng::new(61);
+    // class prototypes in activation space; readout row c = prototype c
+    let mut protos = vec![0.0f64; classes * dim];
+    rng.fill_uniform(&mut protos, 0.0, 1.0);
+    let w = protos.clone();
+    // eval columns: a prototype blended with noise (margin >> quant error)
+    let mut x = vec![0.0f64; dim * n_eval];
+    let mut labels = Vec::with_capacity(n_eval);
+    for t in 0..n_eval {
+        let c = (rng.uniform() * classes as f64) as usize % classes;
+        labels.push(c);
+        for j in 0..dim {
+            let noise = rng.uniform() * 0.3;
+            x[j * n_eval + t] = 0.7 * protos[c * dim + j] + noise;
+        }
+    }
+    let argmax_cols = |y: &[f64]| -> Vec<usize> {
+        (0..n_eval)
+            .map(|t| {
+                (0..classes)
+                    .map(|o| (o, y[o * n_eval + t]))
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect()
+    };
+    let run = |precision: KernelPrecision| {
+        let mut eng = engine_with_mask(SparsitySupport::FULL, None, EngineOptions::NOISY);
+        eng.set_precision(precision);
+        eng.set_threads(4);
+        eng.matmul("readout", &w, &x, classes, dim, n_eval)
+    };
+    let exact = argmax_cols(&run(KernelPrecision::Exact));
+    let quant = argmax_cols(&run(KernelPrecision::Quantized));
+    let agree = exact.iter().zip(&quant).filter(|(a, b)| a == b).count();
+    let rate = agree as f64 / n_eval as f64;
+    assert!(
+        rate >= 0.99,
+        "argmax agreement {rate} < 0.99 ({agree}/{n_eval} columns)"
     );
 }
 

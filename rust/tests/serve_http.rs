@@ -168,6 +168,18 @@ fn http_end_to_end_concurrent_load() {
     assert!(metric_value(&m.body, "scatter_p_avg_watts") > 0.0);
     assert_eq!(metric_value(&m.body, "scatter_queue_depth"), 0.0, "idle after load");
 
+    // kernel-variant info gauge: default precision is exact, and the
+    // variant label reflects runtime SIMD detection
+    assert_eq!(metric_value(&m.body, "scatter_kernel_variant{"), 1.0);
+    assert!(
+        m.body.contains(&format!(
+            "scatter_kernel_variant{{variant=\"{}\",precision=\"exact\"}} 1",
+            scatter::exec::detected_simd().as_str()
+        )),
+        "kernel gauge must carry variant + precision labels:\n{}",
+        m.body
+    );
+
     // mask hot-swap series are always exported; with DST off they sit
     // at the deployment baseline
     assert_eq!(metric_value(&m.body, "scatter_mask_generation{worker=\"0\"}"), 0.0);
